@@ -1,0 +1,119 @@
+//! Coordinator demo: stream pages from a mixed workload through the
+//! compression service while the background analyzer re-derives the
+//! global base table from sampled traffic (through the AOT JAX/Pallas
+//! k-means artifact when `artifacts/` exists, else the native fallback),
+//! then migrate old pages forward and report the table-version history.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example compression_server
+//! ```
+
+use gbdi::coordinator::{AnalyzerBackend, CompressionService, ServiceConfig};
+use gbdi::report::{fmt_bytes, fmt_ratio};
+use gbdi::runtime::ArtifactRuntime;
+use gbdi::util::prng::Rng;
+use gbdi::workloads;
+use std::sync::Arc;
+
+const PAGES: u64 = 768;
+
+/// Wait (bounded) for the analyzer to publish at least `version`.
+fn wait_for_version(svc: &CompressionService, version: u64) {
+    for _ in 0..600 {
+        if svc.current_version() >= version {
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+}
+
+fn main() {
+    let backend = match ArtifactRuntime::new(ArtifactRuntime::default_dir()) {
+        Ok(rt) if rt.has_artifact("kmeans_k64") => {
+            println!("analyzer backend: AOT JAX/Pallas artifact via PJRT ({})", rt.platform());
+            AnalyzerBackend::Artifact(Arc::new(rt))
+        }
+        _ => {
+            println!("analyzer backend: native Rust k-means (run `make artifacts` for PJRT)");
+            AnalyzerBackend::Native
+        }
+    };
+
+    let svc = CompressionService::start(
+        ServiceConfig { workers: 4, analyze_every: 96, ..Default::default() },
+        backend,
+    )
+    .expect("service start");
+
+    // phase 1: pointer-heavy C workloads
+    let mut rng = Rng::new(42);
+    let phase1 = ["mcf", "perlbench", "omnetpp"];
+    for i in 0..PAGES / 2 {
+        let w = workloads::by_name(phase1[rng.below(3) as usize]).unwrap();
+        svc.submit(i, w.generate(4096, i));
+    }
+    svc.flush();
+    svc.request_analysis();
+    wait_for_version(&svc, 1);
+    let snap = svc.metrics();
+    println!(
+        "phase 1 (C mix):    {:>4} pages  ratio {}  table v{}  analyses {}",
+        snap.pages_in,
+        fmt_ratio(snap.ratio()),
+        svc.current_version(),
+        snap.analyses
+    );
+
+    // phase 2: traffic shifts to JVM workloads — the analyzer should
+    // re-cluster and swap the table
+    let phase2 = ["triangle_count", "svm", "matrix_factorization"];
+    for i in PAGES / 2..PAGES {
+        let w = workloads::by_name(phase2[rng.below(3) as usize]).unwrap();
+        svc.submit(i, w.generate(4096, i));
+    }
+    svc.flush();
+    let v = svc.current_version();
+    svc.request_analysis();
+    wait_for_version(&svc, v + 1);
+
+    // migrate lagging pages to the newest table
+    let mut migrated = 0;
+    loop {
+        let n = svc.recompress_step().expect("recompress");
+        migrated += n;
+        if n == 0 {
+            break;
+        }
+    }
+
+    // verify a sample of pages decompress bit-exactly after all of that
+    let mut checked = 0;
+    for i in (0..PAGES).step_by(37) {
+        let data = svc.read_page(i).expect("read");
+        assert_eq!(data.len(), 4096);
+        checked += 1;
+    }
+
+    let (logical, stored, ratio) = svc.storage_ratio();
+    let snap = svc.shutdown();
+    println!(
+        "phase 2 (JVM mix):  {:>4} pages  ratio {}  analyses {}  swaps {}",
+        snap.pages_in,
+        fmt_ratio(snap.ratio()),
+        snap.analyses,
+        snap.table_swaps
+    );
+    println!(
+        "store: {} logical -> {} stored ({})  migrated {}  spot-checked {} pages OK",
+        fmt_bytes(logical as u64),
+        fmt_bytes(stored as u64),
+        fmt_ratio(ratio),
+        migrated,
+        checked
+    );
+    println!(
+        "throughput: {:.0} MiB/s across workers  ({} reads failed)",
+        snap.compress_mib_s(),
+        snap.read_errors
+    );
+}

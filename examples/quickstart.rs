@@ -1,0 +1,47 @@
+//! Quickstart: the five-line GBDI story — generate a workload image, run
+//! background analysis, compress, decompress, check bit-exactness.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig};
+use gbdi::report::fmt_ratio;
+use gbdi::workloads;
+
+fn main() {
+    // 4 MiB of mcf-like memory content (pointer graph + small ints).
+    let image = workloads::by_name("mcf").unwrap().generate(4 << 20, 7);
+
+    // 1. Background data analysis: sample, cluster (modified k-means),
+    //    pair each global base with a max-delta width class.
+    let config = GbdiConfig::default();
+    let table = analyze::analyze_image(&image, &config);
+    println!("analysis found {} global bases:", table.len());
+    for e in table.entries().iter().take(8) {
+        println!("  base {:#010x}  max-delta class {:>2} bits", e.base, e.width);
+    }
+
+    // 2. Compress.
+    let codec = GbdiCodec::new(table, config);
+    let (compressed, stats) = codec.compress_image_stats(&image);
+    println!(
+        "\ncompressed {} KiB -> {} KiB  ratio {}",
+        image.len() / 1024,
+        compressed.total_len() / 1024,
+        fmt_ratio(compressed.ratio())
+    );
+    println!(
+        "blocks: {} gbdi, {} zero, {} rep, {} raw; outliers {:.2}%",
+        stats.gbdi_blocks,
+        stats.zero_blocks,
+        stats.rep_blocks,
+        stats.raw_blocks,
+        stats.outlier_frac() * 100.0
+    );
+
+    // 3. Decompress and verify (always bit-exact).
+    let restored = gbdi::gbdi::decode::decompress_image(&compressed).expect("decode");
+    assert_eq!(restored, image);
+    println!("\nreconstruction: BIT-EXACT");
+}

@@ -1,0 +1,62 @@
+//! Workload explorer: per-workload memory-structure statistics and the
+//! full codec comparison table (E3) — GBDI vs BDI vs FPC vs LZSS vs
+//! Huffman vs gzip vs zstd.
+//!
+//! ```bash
+//! cargo run --release --example workload_explorer
+//! ```
+
+use gbdi::baselines::{all_codecs, ratio_of};
+use gbdi::report::Table;
+use gbdi::util::stats::byte_entropy;
+use gbdi::value::{words, WordSize};
+use gbdi::workloads;
+use std::collections::BTreeSet;
+
+const IMAGE_BYTES: usize = 2 << 20;
+
+fn main() {
+    // --- structure table -------------------------------------------------
+    let mut t = Table::new(&["workload", "entropy b/B", "zero words %", "distinct hi16 %"]);
+    for w in workloads::all() {
+        let img = w.generate(IMAGE_BYTES, 7);
+        let total = img.len() / 4;
+        let zeros = words(&img, WordSize::W32).filter(|&v| v == 0).count();
+        let his: BTreeSet<u16> = words(&img, WordSize::W32).map(|v| (v >> 16) as u16).collect();
+        t.row(&[
+            w.name().to_string(),
+            format!("{:.2}", byte_entropy(&img)),
+            format!("{:.1}", 100.0 * zeros as f64 / total as f64),
+            format!("{:.2}", 100.0 * his.len() as f64 / total as f64),
+        ]);
+    }
+    println!("memory-structure profile ({} per workload):", IMAGE_BYTES >> 20);
+    print!("{}", t.render());
+
+    // --- codec comparison (E3) -------------------------------------------
+    let codecs = all_codecs();
+    let mut header: Vec<&str> = vec!["workload"];
+    let names: Vec<&'static str> = codecs.iter().map(|c| c.name()).collect();
+    header.extend(names.iter());
+    let mut t = Table::new(&header);
+    let mut sums = vec![0.0; codecs.len()];
+    for w in workloads::all() {
+        let img = w.generate(IMAGE_BYTES, 7);
+        let mut row = vec![w.name().to_string()];
+        for (i, c) in codecs.iter().enumerate() {
+            let r = ratio_of(c.as_ref(), &img);
+            sums[i] += r;
+            row.push(format!("{r:.3}"));
+        }
+        t.row(&row);
+    }
+    let mut mean_row = vec!["MEAN".to_string()];
+    for s in &sums {
+        mean_row.push(format!("{:.3}", s / 9.0));
+    }
+    t.row(&mean_row);
+    println!("\ncompression ratios, all codecs (E3):");
+    print!("{}", t.render());
+    println!("\nnote: gzip/zstd buy ratio with orders-of-magnitude more latency —");
+    println!("see `cargo bench --bench throughput` for the speed column.");
+}

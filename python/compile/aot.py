@@ -1,0 +1,86 @@
+"""AOT lowering: JAX/Pallas analysis graphs → HLO *text* artifacts the
+Rust runtime loads through the PJRT C API.
+
+HLO text — NOT ``lowered.compile()`` or proto ``.serialize()`` — is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids, which the image's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+Emits:
+  kmeans_k16.hlo.txt   kmeans_fit for N=4096, K=16
+  kmeans_k64.hlo.txt   kmeans_fit for N=4096, K=64
+  sizeest_k64.hlo.txt  size_fit  for N=4096, K=64
+  manifest.txt         shapes + seeds for the Rust loader to validate
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+N_SAMPLES = 4096
+KMEANS_KS = (16, 64)
+SIZEEST_KS = (64,)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (0.5.1-parseable)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_kmeans(k: int) -> str:
+    spec_x = jax.ShapeDtypeStruct((N_SAMPLES,), jnp.float32)
+    spec_c = jax.ShapeDtypeStruct((k,), jnp.float32)
+    lowered = jax.jit(lambda x, c: model.kmeans_fit(x, c)).lower(spec_x, spec_c)
+    return to_hlo_text(lowered)
+
+
+def lower_sizeest(k: int) -> str:
+    spec_x = jax.ShapeDtypeStruct((N_SAMPLES,), jnp.float32)
+    spec_k = jax.ShapeDtypeStruct((k,), jnp.float32)
+    lowered = jax.jit(model.size_fit).lower(spec_x, spec_k, spec_k)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = [f"n_samples={N_SAMPLES}", f"iters={model.ITERS}"]
+    for k in KMEANS_KS:
+        path = os.path.join(args.out_dir, f"kmeans_k{k}.hlo.txt")
+        text = lower_kmeans(k)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"kmeans_k{k}.hlo.txt k={k} inputs=x[{N_SAMPLES}]f32,c[{k}]f32 "
+                        f"outputs=centroids[{k}],counts[{k}],inertia[1]")
+        print(f"wrote {path} ({len(text)} chars)")
+    for k in SIZEEST_KS:
+        path = os.path.join(args.out_dir, f"sizeest_k{k}.hlo.txt")
+        text = lower_sizeest(k)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"sizeest_k{k}.hlo.txt k={k} inputs=x[{N_SAMPLES}]f32,b[{k}]f32,w[{k}]f32 "
+                        f"outputs=total[1],per_value[{N_SAMPLES}]")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print("manifest written")
+
+
+if __name__ == "__main__":
+    main()

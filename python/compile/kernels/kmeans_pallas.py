@@ -1,0 +1,134 @@
+"""Layer-1 Pallas kernels for GBDI background analysis.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the HPCA'22 design
+does its data analysis in dedicated hardware next to the memory
+controller; here the same computation is re-thought for a TPU core:
+
+* ``assign`` — the (N, K) delta/cost tile lives in VMEM. The grid walks N
+  in ``TN``-row tiles; K (≤ 64 bases) stays resident, so each grid step
+  streams one sample tile HBM→VMEM and writes one one-hot tile back. The
+  cost function is branch-free f32 select chains (VPU-friendly), not the
+  scalar loop a CPU would use.
+* ``update`` — centroid accumulation is expressed as ``onehot.T @ x``:
+  a (K, N) × (N, 1) matmul that lands on the MXU systolic array instead
+  of scatter-adds (which TPUs do badly). Counts ride along as
+  ``onehot.T @ 1``.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and correctness is what the AOT path needs
+(see /opt/xla-example/README.md). Real-TPU tile-size/VMEM estimates are
+recorded in DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import DEFAULT_CLASSES, OUTLIER_BITS
+
+# Rows of samples processed per grid step (fits (TN, K) f32 in VMEM with
+# room for double-buffering: 512 × 64 × 4 B = 128 KiB per tile).
+TN = 512
+
+
+def _cost_from_delta(delta, classes):
+    """Branch-free encoded-bits cost of a delta tile (f32)."""
+    d = jnp.abs(delta)
+    bits = jnp.floor(jnp.log2(jnp.maximum(d, 0.5))) + 2.0
+    need = jnp.where(d < 0.5, 0.0, bits)
+    cost = jnp.full_like(need, OUTLIER_BITS)
+    for c in reversed(classes):
+        cost = jnp.where(need <= float(c), float(c), cost)
+    return cost
+
+
+def _assign_kernel(x_ref, c_ref, onehot_ref, cost_ref, *, classes):
+    """One grid step: (TN,) samples × (K,) centroids → one-hot + cost."""
+    x = x_ref[...]  # (TN, 1)
+    c = c_ref[...]  # (1, K)
+    delta = x - c  # (TN, K) broadcast in VMEM
+    cost = _cost_from_delta(delta, classes)
+    # two-stage tie-break matching ref.assign_ref: exact comparisons only
+    # (a fused arithmetic key is FMA/fusion-sensitive and flips near-ties)
+    min_cost = jnp.min(cost, axis=1, keepdims=True)
+    key = jnp.where(cost == min_cost, jnp.abs(delta), jnp.inf)
+    best = jnp.argmin(key, axis=1)  # (TN,)
+    k = c.shape[1]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], k), 1) == best[:, None])
+    onehot_ref[...] = onehot.astype(jnp.float32)
+    cost_ref[...] = jnp.min(cost, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("classes",))
+def assign(x, centroids, classes=DEFAULT_CLASSES):
+    """Pallas assignment step.
+
+    Args:
+      x: f32[N] (N must be a multiple of TN).
+      centroids: f32[K].
+    Returns:
+      (onehot f32[N, K], cost f32[N]).
+    """
+    n = x.shape[0]
+    k = centroids.shape[0]
+    assert n % TN == 0, f"N={n} must be a multiple of {TN}"
+    onehot, cost = pl.pallas_call(
+        functools.partial(_assign_kernel, classes=classes),
+        grid=(n // TN,),
+        in_specs=[
+            pl.BlockSpec((TN, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TN, k), lambda i: (i, 0)),
+            pl.BlockSpec((TN, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(x[:, None], centroids[None, :])
+    return onehot, cost[:, 0]
+
+
+def _update_kernel(onehot_ref, x_ref, sums_ref, counts_ref):
+    """Single-block MXU step: sums = onehotᵀ @ x, counts = onehotᵀ @ 1."""
+    onehot = onehot_ref[...]  # (N, K)
+    x = x_ref[...]  # (N, 1)
+    sums_ref[...] = jnp.dot(onehot.T, x, preferred_element_type=jnp.float32)
+    ones = jnp.ones_like(x)
+    counts_ref[...] = jnp.dot(onehot.T, ones, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def update(x, onehot):
+    """Pallas centroid-update step (one MXU-shaped block).
+
+    Args:
+      x: f32[N]; onehot: f32[N, K].
+    Returns:
+      (sums f32[K], counts f32[K]).
+    """
+    n, k = onehot.shape
+    sums, counts = pl.pallas_call(
+        _update_kernel,
+        in_specs=[
+            pl.BlockSpec((n, k), lambda: (0, 0)),
+            pl.BlockSpec((n, 1), lambda: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, 1), lambda: (0, 0)),
+            pl.BlockSpec((k, 1), lambda: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, 1), jnp.float32),
+            jax.ShapeDtypeStruct((k, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(onehot, x[:, None])
+    return sums[:, 0], counts[:, 0]

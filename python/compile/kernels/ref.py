@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for the Pallas kernels (Layer-1 correctness ground
+truth). Everything here is straight-line jax.numpy with no pallas — the
+pytest suite asserts the kernels match these bit-for-bit (same dtype, same
+reduction order up to allclose tolerance).
+
+Value domain: memory words are brought into f32 (the TPU-side analysis
+works on approximate magnitudes; the Rust L3 snaps centroids back to exact
+integers and re-derives exact width classes, so f32 rounding here cannot
+affect codec correctness — see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# The codec's delta width-class menu (must match GbdiConfig::width_classes)
+DEFAULT_CLASSES = (0, 4, 8, 12, 16, 20, 24)
+# Cost charged when no class fits (word bits + escape overhead)
+OUTLIER_BITS = 40.0
+
+
+def needed_bits(delta):
+    """Approximate signed offset-binary width of ``delta`` in f32 math.
+
+    Mirrors rust ``signed_width``: 0 for 0; otherwise ~log2(|d|) + 2
+    (exact for non-powers-of-two; ±1 bit near boundaries is acceptable —
+    the L3 refit uses exact integer widths).
+    """
+    d = jnp.abs(delta)
+    bits = jnp.floor(jnp.log2(jnp.maximum(d, 0.5))) + 2.0
+    return jnp.where(d < 0.5, 0.0, bits)
+
+
+def class_cost(delta, classes=DEFAULT_CLASSES):
+    """Encoded-delta bits: the smallest width class that covers ``delta``,
+    or OUTLIER_BITS when none does (the modified-k-means metric)."""
+    need = needed_bits(delta)
+    cost = jnp.full_like(need, OUTLIER_BITS)
+    for c in reversed(classes):
+        cost = jnp.where(need <= float(c), float(c), cost)
+    return cost
+
+
+def assign_ref(x, centroids, classes=DEFAULT_CLASSES):
+    """Assignment step oracle.
+
+    Args:
+      x: f32[N] sample values.
+      centroids: f32[K].
+    Returns:
+      (onehot f32[N, K], cost f32[N]) — the chosen-base one-hot matrix and
+      the per-sample encoded-bit cost, with ties broken by |delta| then by
+      lower index (matching the kernel).
+    """
+    delta = x[:, None] - centroids[None, :]  # (N, K)
+    cost = class_cost(delta, classes)
+    # two-stage tie-break (cost, then |delta|, then index), kept as separate
+    # exact comparisons: a fused `cost*BIG + |delta|` key rounds differently
+    # under XLA fusion (FMA) and flips argmin on near-ties
+    min_cost = cost.min(axis=1, keepdims=True)
+    key = jnp.where(cost == min_cost, jnp.abs(delta), jnp.inf)
+    best = jnp.argmin(key, axis=1)
+    onehot = (jnp.arange(centroids.shape[0])[None, :] == best[:, None]).astype(jnp.float32)
+    return onehot, jnp.take_along_axis(cost, best[:, None], axis=1)[:, 0]
+
+
+def update_ref(x, onehot):
+    """Centroid update oracle: masked means via the one-hot matrix.
+
+    Returns (sums f32[K], counts f32[K]).
+    """
+    sums = onehot.T @ x
+    counts = onehot.sum(axis=0)
+    return sums, counts
+
+
+def size_estimate_ref(x, bases, widths, ptr_bits=7.0, word_bits=32.0):
+    """Compressed-size estimator oracle.
+
+    Each value pays ``ptr_bits`` plus the width of the cheapest base whose
+    class covers its delta, or ``word_bits`` if none does (outlier).
+
+    Returns (total_bits f32 scalar, per_value_bits f32[N]).
+    """
+    delta = x[:, None] - bases[None, :]
+    need = needed_bits(delta)
+    fits = need <= widths[None, :]
+    delta_bits = jnp.where(fits, widths[None, :], jnp.inf).min(axis=1)
+    per_value = ptr_bits + jnp.where(jnp.isinf(delta_bits), word_bits, delta_bits)
+    return per_value.sum(), per_value
+
+
+def kmeans_ref(x, init_centroids, iters=16, classes=DEFAULT_CLASSES):
+    """Full Lloyd loop oracle (bit-cost metric, mean update).
+
+    Returns (centroids f32[K], counts f32[K], inertia f32 scalar).
+    """
+    c = init_centroids
+    for _ in range(iters):
+        onehot, _ = assign_ref(x, c, classes)
+        sums, counts = update_ref(x, onehot)
+        c = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), c)
+    onehot, cost = assign_ref(x, c, classes)
+    _, counts = update_ref(x, onehot)
+    return c, counts, cost.sum()

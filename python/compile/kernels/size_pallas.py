@@ -1,0 +1,60 @@
+"""Layer-1 Pallas kernel: compressed-size estimation.
+
+Given sampled word values and a candidate global-base table (bases +
+per-base width classes), estimate the encoded bits per value — the
+coordinator uses this (through the AOT artifact) to score a candidate
+table against live traffic before swapping it in.
+
+Same VMEM tiling story as the assignment kernel: (TN, K) delta tile per
+grid step, K resident.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TN = 512
+
+
+def _size_kernel(x_ref, b_ref, w_ref, bits_ref, *, ptr_bits, word_bits):
+    x = x_ref[...]  # (TN, 1)
+    b = b_ref[...]  # (1, K)
+    w = w_ref[...]  # (1, K)
+    delta = jnp.abs(x - b)
+    need = jnp.where(delta < 0.5, 0.0, jnp.floor(jnp.log2(jnp.maximum(delta, 0.5))) + 2.0)
+    fits = need <= w
+    delta_bits = jnp.min(jnp.where(fits, w, jnp.inf), axis=1, keepdims=True)
+    per_value = ptr_bits + jnp.where(jnp.isinf(delta_bits), word_bits, delta_bits)
+    bits_ref[...] = per_value
+
+
+@functools.partial(jax.jit, static_argnames=("ptr_bits", "word_bits"))
+def size_estimate(x, bases, widths, ptr_bits=7.0, word_bits=32.0):
+    """Per-value and total encoded bits under a candidate table.
+
+    Args:
+      x: f32[N] (N multiple of TN); bases: f32[K]; widths: f32[K].
+    Returns:
+      (total_bits f32 scalar, per_value f32[N]).
+    """
+    n = x.shape[0]
+    k = bases.shape[0]
+    assert n % TN == 0, f"N={n} must be a multiple of {TN}"
+    per_value = pl.pallas_call(
+        functools.partial(_size_kernel, ptr_bits=ptr_bits, word_bits=word_bits),
+        grid=(n // TN,),
+        in_specs=[
+            pl.BlockSpec((TN, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TN, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=True,
+    )(x[:, None], bases[None, :], widths[None, :])
+    per_value = per_value[:, 0]
+    return per_value.sum(), per_value

@@ -1,0 +1,50 @@
+"""Layer-2 JAX analysis graphs: the full background-data-analysis loop
+(the paper's §II.B "establishing global base values"), built on the L1
+Pallas kernels and AOT-lowered by ``aot.py``.
+
+Exports two jit-able functions with fixed shapes per artifact:
+
+* ``kmeans_fit(samples f32[N], init f32[K]) -> (centroids f32[K],
+  counts f32[K], inertia f32[1])`` — T iterations of bit-cost Lloyd.
+* ``size_fit(samples f32[N], bases f32[K], widths f32[K]) ->
+  (total_bits f32[1], per_value f32[N])``.
+
+The iteration loop is a ``lax.fori_loop`` whose carry is only the (K,)
+centroid vector — no per-iteration recomputation is kept live, so the
+lowered HLO has a single while-loop with the two kernels fused inside
+(L2 perf requirement from DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import kmeans_pallas, size_pallas
+from .kernels.ref import DEFAULT_CLASSES
+
+ITERS = 16
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def kmeans_fit(samples, init_centroids, iters=ITERS):
+    """T iterations of modified (bit-cost) k-means over the samples."""
+
+    def body(_, c):
+        onehot, _cost = kmeans_pallas.assign(samples, c, DEFAULT_CLASSES)
+        sums, counts = kmeans_pallas.update(samples, onehot)
+        return jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), c)
+
+    c = jax.lax.fori_loop(0, iters, body, init_centroids)
+    onehot, cost = kmeans_pallas.assign(samples, c, DEFAULT_CLASSES)
+    _, counts = kmeans_pallas.update(samples, onehot)
+    return c, counts, cost.sum()[None]
+
+
+@jax.jit
+def size_fit(samples, bases, widths):
+    """Compressed-size estimate of ``samples`` under a candidate table."""
+    total, per_value = size_pallas.size_estimate(samples, bases, widths)
+    return total[None], per_value

@@ -1,0 +1,117 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+The hypothesis sweeps vary shapes, magnitudes, and centroid placement —
+the CORE correctness signal for the analysis plane (DESIGN.md deliverable
+c): if these pass, the AOT artifacts compute what the Rust fallback
+computes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import kmeans_pallas, ref, size_pallas
+
+TN = kmeans_pallas.TN
+
+
+def _values(rng, n, spread):
+    """Memory-word-like f32 values: clustered mixture + uniform noise."""
+    centers = rng.uniform(0, 2**31, size=4)
+    vals = np.where(
+        rng.uniform(size=n) < 0.8,
+        rng.choice(centers, size=n) + rng.uniform(-spread, spread, size=n),
+        rng.uniform(0, 2**32 - 1, size=n),
+    )
+    return jnp.asarray(np.clip(vals, 0, 2**32 - 1), dtype=jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_tiles=st.integers(min_value=1, max_value=4),
+    k=st.sampled_from([4, 8, 16, 64]),
+    spread=st.sampled_from([10.0, 1e4, 1e7]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_assign_matches_ref(n_tiles, k, spread, seed):
+    rng = np.random.RandomState(seed)
+    x = _values(rng, n_tiles * TN, spread)
+    c = jnp.asarray(rng.uniform(0, 2**31, size=k), dtype=jnp.float32)
+    onehot, cost = kmeans_pallas.assign(x, c)
+    onehot_r, cost_r = ref.assign_ref(x, c)
+    np.testing.assert_allclose(onehot, onehot_r)
+    np.testing.assert_allclose(cost, cost_r)
+    # invariants: exactly one base per sample; costs from the class menu
+    np.testing.assert_allclose(np.asarray(onehot).sum(axis=1), 1.0)
+    menu = set(float(c) for c in ref.DEFAULT_CLASSES) | {ref.OUTLIER_BITS}
+    assert set(np.unique(np.asarray(cost))) <= menu
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_tiles=st.integers(min_value=1, max_value=4),
+    k=st.sampled_from([4, 16, 64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_update_matches_ref(n_tiles, k, seed):
+    rng = np.random.RandomState(seed)
+    n = n_tiles * TN
+    x = jnp.asarray(rng.uniform(0, 2**31, size=n), dtype=jnp.float32)
+    best = rng.randint(0, k, size=n)
+    onehot = jnp.asarray(np.eye(k, dtype=np.float32)[best])
+    sums, counts = kmeans_pallas.update(x, onehot)
+    sums_r, counts_r = ref.update_ref(x, onehot)
+    np.testing.assert_allclose(sums, sums_r, rtol=1e-6)
+    np.testing.assert_allclose(counts, counts_r)
+    assert float(jnp.sum(counts)) == n
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_tiles=st.integers(min_value=1, max_value=4),
+    k=st.sampled_from([4, 16, 64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_size_estimate_matches_ref(n_tiles, k, seed):
+    rng = np.random.RandomState(seed)
+    x = _values(rng, n_tiles * TN, 1e5)
+    bases = jnp.asarray(rng.uniform(0, 2**31, size=k), dtype=jnp.float32)
+    widths = jnp.asarray(rng.choice([0, 4, 8, 12, 16, 20, 24], size=k), dtype=jnp.float32)
+    total, per_value = size_pallas.size_estimate(x, bases, widths)
+    total_r, per_value_r = ref.size_estimate_ref(x, bases, widths)
+    np.testing.assert_allclose(per_value, per_value_r)
+    np.testing.assert_allclose(total, total_r, rtol=1e-6)
+
+
+def test_assign_exact_hits_cost_zero():
+    c = jnp.asarray([100.0, 5e8], dtype=jnp.float32)
+    x = jnp.asarray([100.0] * TN, dtype=jnp.float32)
+    onehot, cost = kmeans_pallas.assign(x, c)
+    np.testing.assert_allclose(cost, 0.0)
+    np.testing.assert_allclose(np.asarray(onehot)[:, 0], 1.0)
+
+
+def test_assign_outliers_cost_outlier_bits():
+    c = jnp.asarray([0.0], dtype=jnp.float32)
+    x = jnp.asarray([2**31 * 1.0] * TN, dtype=jnp.float32)
+    _, cost = kmeans_pallas.assign(x, c)
+    np.testing.assert_allclose(cost, ref.OUTLIER_BITS)
+
+
+def test_cost_class_boundaries():
+    """Deltas at width-class edges land in the right class."""
+    c = jnp.asarray([0.0], dtype=jnp.float32)
+    # delta 7 needs 4 bits (class 4); delta 9 needs 5 (class 8);
+    # delta 2047 needs 12; delta 2049 needs 13 -> class 16
+    x = jnp.asarray([7.0, 9.0, 2047.0, 2049.0] * (TN // 4), dtype=jnp.float32)
+    _, cost = kmeans_pallas.assign(x, c)
+    got = np.asarray(cost[:4])
+    np.testing.assert_allclose(got, [4.0, 8.0, 12.0, 16.0])
+
+
+def test_assign_rejects_ragged_n():
+    with pytest.raises(AssertionError):
+        kmeans_pallas.assign(
+            jnp.zeros(TN + 1, jnp.float32), jnp.zeros(4, jnp.float32)
+        )

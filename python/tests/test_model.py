@@ -1,0 +1,85 @@
+"""L2 correctness: the full k-means analysis graph (model.kmeans_fit)
+against the unrolled oracle, plus convergence behaviour on synthetic
+mixtures — what the Rust coordinator relies on when it runs the artifact.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+N = 4096
+
+
+def _mixture(rng, centers, spread, n=N):
+    c = rng.choice(centers, size=n)
+    return jnp.asarray(c + rng.uniform(-spread, spread, size=n), dtype=jnp.float32)
+
+
+def test_kmeans_fit_matches_unrolled_ref():
+    rng = np.random.RandomState(0)
+    x = _mixture(rng, [1e4, 5e7, 3e9], 50.0)
+    init = jnp.asarray(rng.uniform(0, 2**31, size=16), dtype=jnp.float32)
+    c, counts, inertia = model.kmeans_fit(x, init, iters=4)
+    c_r, counts_r, inertia_r = ref.kmeans_ref(x, init, iters=4)
+    np.testing.assert_allclose(c, c_r, rtol=1e-5)
+    np.testing.assert_allclose(counts, counts_r)
+    np.testing.assert_allclose(inertia, inertia_r[None], rtol=1e-5)
+
+
+def test_kmeans_recovers_separated_centers():
+    rng = np.random.RandomState(1)
+    true_centers = np.array([1e5, 8e7, 2.5e9])
+    x = _mixture(rng, true_centers, 30.0)
+    # init from data samples — the contract: the Rust coordinator seeds
+    # centroids (k-means++ over its sample) before invoking the artifact
+    init = jnp.asarray(rng.choice(np.asarray(x), size=16), dtype=jnp.float32)
+    c, counts, _ = model.kmeans_fit(x, init)
+    c = np.asarray(c)
+    counts = np.asarray(counts)
+    for t in true_centers:
+        # some centroid with meaningful mass should sit near each center
+        near = np.abs(c - t) < max(1e-4 * t, 200.0)
+        assert (counts[near] > 100).any(), f"no populated centroid near {t}: {c}"
+
+
+def test_kmeans_inertia_nonincreasing_with_iters():
+    rng = np.random.RandomState(2)
+    x = _mixture(rng, [3e3, 9e8], 1e4)
+    init = jnp.asarray(rng.uniform(0, 2**31, size=16), dtype=jnp.float32)
+    inertias = [float(model.kmeans_fit(x, init, iters=t)[2][0]) for t in (1, 4, 16)]
+    assert inertias[0] >= inertias[1] - 1e-3, inertias
+    assert inertias[1] >= inertias[2] - 1e-3, inertias
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1), k=st.sampled_from([16, 64]))
+def test_kmeans_counts_conserve_samples(seed, k):
+    rng = np.random.RandomState(seed)
+    x = _mixture(rng, rng.uniform(0, 2**31, size=5), 1e5)
+    init = jnp.asarray(rng.uniform(0, 2**31, size=k), dtype=jnp.float32)
+    _, counts, _ = model.kmeans_fit(x, init, iters=3)
+    assert float(jnp.sum(counts)) == N
+
+
+def test_size_fit_matches_ref():
+    rng = np.random.RandomState(3)
+    x = _mixture(rng, [5e6, 1e9], 1e3)
+    bases = jnp.asarray(rng.uniform(0, 2**31, size=64), dtype=jnp.float32)
+    widths = jnp.asarray(rng.choice([0, 4, 8, 16, 24], size=64), dtype=jnp.float32)
+    total, per_value = model.size_fit(x, bases, widths)
+    total_r, per_value_r = ref.size_estimate_ref(x, bases, widths)
+    np.testing.assert_allclose(per_value, per_value_r)
+    np.testing.assert_allclose(total, total_r[None], rtol=1e-6)
+
+
+def test_size_fit_better_table_scores_lower():
+    rng = np.random.RandomState(4)
+    x = _mixture(rng, [7e5], 100.0)
+    good = (jnp.asarray([7e5] + [0.0] * 7, jnp.float32), jnp.asarray([12.0] * 8, jnp.float32))
+    bad = (jnp.asarray(rng.uniform(0, 2**31, size=8), jnp.float32), jnp.asarray([4.0] * 8, jnp.float32))
+    t_good = float(model.size_fit(x, *good)[0][0])
+    t_bad = float(model.size_fit(x, *bad)[0][0])
+    assert t_good < t_bad

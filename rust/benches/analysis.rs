@@ -1,0 +1,66 @@
+//! E8 — background-analysis cost: the PJRT-artifact k-means (AOT
+//! JAX/Pallas) vs the native Rust k-means, across sample budgets. This is
+//! the coordinator's control-plane latency — it bounds how fast the
+//! service can react to traffic phase changes.
+//!
+//! `cargo bench --bench analysis` (artifact rows skip if `make artifacts`
+//! has not run).
+
+use gbdi::cluster::{kmeans, KmeansConfig, Metric};
+use gbdi::gbdi::{analyze, GbdiConfig};
+use gbdi::runtime::{shape_samples, ArtifactRuntime, N_SAMPLES};
+use gbdi::util::bench::Bencher;
+use gbdi::util::prng::Rng;
+use gbdi::workloads;
+use std::sync::Arc;
+
+fn main() {
+    let img = workloads::by_name("triangle_count").unwrap().generate(2 << 20, 7);
+    let cfg = GbdiConfig::default();
+    let mut b = Bencher::new();
+
+    println!("== E8: background-analysis latency ==\n");
+    // native k-means across sample budgets
+    for n in [1024usize, 4096, 16384] {
+        let samples = gbdi::util::stats::stride_sample(
+            &gbdi::value::words(&img, cfg.word_size).collect::<Vec<_>>(),
+            n,
+        );
+        let kcfg = KmeansConfig { k: 63, iters: 16, ..Default::default() };
+        b.bench(&format!("native-kmeans/n={n}"), None, || kmeans(&samples, &kcfg));
+    }
+    // full analysis (sampling + clustering + width fitting)
+    b.bench("native-full-analysis/n=4096", None, || analyze::analyze_image(&img, &cfg));
+
+    // artifact path
+    match ArtifactRuntime::new(ArtifactRuntime::default_dir()) {
+        Ok(rt) if rt.has_artifact("kmeans_k64") => {
+            let rt = Arc::new(rt);
+            let samples: Vec<u64> =
+                gbdi::value::words(&img, cfg.word_size).take(N_SAMPLES * 4).collect();
+            let x = shape_samples(&samples);
+            let mut rng = Rng::new(5);
+            let init64: Vec<f32> =
+                (0..64).map(|_| samples[rng.below(samples.len() as u64) as usize] as f32).collect();
+            let init16: Vec<f32> = init64[..16].to_vec();
+            b.bench("artifact-kmeans/k=16", None, || rt.kmeans(&x, &init16).unwrap());
+            b.bench("artifact-kmeans/k=64", None, || rt.kmeans(&x, &init64).unwrap());
+            let bases = vec![0.0f32; 64];
+            let widths = vec![16.0f32; 64];
+            b.bench("artifact-sizeest/k=64", None, || {
+                rt.size_estimate(&x, &bases, &widths).unwrap()
+            });
+        }
+        _ => println!("(artifact rows skipped: run `make artifacts`)"),
+    }
+
+    // Euclidean-vs-bitcost clustering cost (the modification's price)
+    let samples = analyze::sample_image(&img, &cfg);
+    let bit = KmeansConfig { k: 63, iters: 16, metric: Metric::BitCost, ..Default::default() };
+    let euc = KmeansConfig { k: 63, iters: 16, metric: Metric::Euclidean, ..Default::default() };
+    b.bench("native-kmeans/bitcost-metric", None, || kmeans(&samples, &bit));
+    b.bench("native-kmeans/euclidean-metric", None, || kmeans(&samples, &euc));
+    std::fs::create_dir_all("target").ok();
+    b.write_csv("target/analysis.csv").ok();
+    println!("\ncsv: target/analysis.csv");
+}

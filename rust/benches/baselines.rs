@@ -1,0 +1,68 @@
+//! E3 — GBDI vs the baseline codecs the paper discusses: BDI (the
+//! algorithm it extends), FPC, LZSS ("LZ compression"), Huffman coding,
+//! gzip and zstd. Ratio per workload + speed on a representative image.
+//!
+//! `cargo bench --bench baselines`
+
+use gbdi::baselines::{all_codecs, ratio_of};
+use gbdi::report::Table;
+use gbdi::util::bench::Bencher;
+use gbdi::workloads;
+
+fn main() {
+    let fast = std::env::var("GBDI_BENCH_FAST").is_ok_and(|v| v == "1");
+    let size = if fast { 1 << 19 } else { 2 << 20 };
+    let codecs = all_codecs();
+
+    // --- ratio grid -------------------------------------------------------
+    println!("== E3: compression ratio, all codecs x all workloads ({} KiB) ==\n", size >> 10);
+    let mut header: Vec<&str> = vec!["workload"];
+    let names: Vec<&'static str> = codecs.iter().map(|c| c.name()).collect();
+    header.extend(names.iter());
+    let mut t = Table::new(&header);
+    let mut sums = vec![0.0; codecs.len()];
+    let mut gbdi_wins_vs_bdi = 0;
+    for w in workloads::all() {
+        let img = w.generate(size, 7);
+        let mut row = vec![w.name().to_string()];
+        let mut ratios = Vec::new();
+        for (i, c) in codecs.iter().enumerate() {
+            let r = ratio_of(c.as_ref(), &img);
+            sums[i] += r;
+            ratios.push(r);
+            row.push(format!("{r:.3}"));
+        }
+        if ratios[0] > ratios[1] {
+            gbdi_wins_vs_bdi += 1;
+        }
+        t.row(&row);
+    }
+    let mut mean_row = vec!["MEAN".to_string()];
+    for s in &sums {
+        mean_row.push(format!("{:.3}", s / 9.0));
+    }
+    t.row(&mean_row);
+    print!("{}", t.render());
+    println!(
+        "\nGBDI beats BDI on {gbdi_wins_vs_bdi}/9 workloads; mean {:.3} vs {:.3} (HPCA'22 shape: GBDI > BDI)",
+        sums[0] / 9.0,
+        sums[1] / 9.0
+    );
+
+    // --- speed column -----------------------------------------------------
+    println!("\n== E3b: codec speed on triangle_count ==\n");
+    let img = workloads::by_name("triangle_count").unwrap().generate(size, 7);
+    let mut b = Bencher::new();
+    for codec in &codecs {
+        b.bench(&format!("compress/{}", codec.name()), Some(img.len() as u64), || {
+            codec.compress(&img)
+        });
+        let comp = codec.compress(&img);
+        b.bench(&format!("decompress/{}", codec.name()), Some(img.len() as u64), || {
+            codec.decompress(&comp, img.len()).unwrap()
+        });
+    }
+    std::fs::create_dir_all("target").ok();
+    b.write_csv("target/baselines_speed.csv").ok();
+    println!("\ncsv: target/baselines_speed.csv");
+}

@@ -1,0 +1,83 @@
+//! E1 + E2 — the paper's Figure 1 (per-workload GBDI compression ratio)
+//! and its in-text aggregate claims (1.55× Java / 1.4× C / 1.45× overall,
+//! vs the literature's 1.9× upper bound).
+//!
+//! `cargo bench --bench figure1` — writes `target/figure1.csv`.
+
+use gbdi::baselines::{ratio_of, Codec, GbdiWholeImage};
+use gbdi::report::{bar_chart, fmt_ratio, Table};
+use gbdi::util::bench::Bencher;
+use gbdi::util::prng::Rng;
+use gbdi::workloads;
+
+fn image_bytes() -> usize {
+    if std::env::var("GBDI_BENCH_FAST").is_ok_and(|v| v == "1") {
+        1 << 20
+    } else {
+        8 << 20
+    }
+}
+
+fn main() {
+    let size = image_bytes();
+    let gbdi = GbdiWholeImage::default();
+    let mut bencher = Bencher::new();
+
+    println!("== E1 / Figure 1: GBDI compression ratio, {} MiB per workload ==\n", size >> 20);
+    let mut chart = Vec::new();
+    let mut c_ratios = Vec::new();
+    let mut j_ratios = Vec::new();
+    let mut table = Table::new(&["workload", "group", "ratio"]);
+    for w in workloads::all() {
+        let img = w.generate(size, 7);
+        let r = ratio_of(&gbdi, &img);
+        table.row(&[w.name().into(), w.group().label().into(), format!("{r:.4}")]);
+        chart.push((w.name().to_string(), r));
+        if w.group().is_c_family() {
+            c_ratios.push(r)
+        } else {
+            j_ratios.push(r)
+        }
+    }
+    print!("{}", table.render());
+    println!();
+    println!("{}", bar_chart("Figure 1", &chart, 48));
+
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let all: Vec<f64> = chart.iter().map(|(_, r)| *r).collect();
+    println!("== E2: aggregate claims ==");
+    let mut t = Table::new(&["aggregate", "paper", "measured"]);
+    t.row(&["C-workloads mean".into(), "1.40x".into(), fmt_ratio(mean(&c_ratios))]);
+    t.row(&["Java mean".into(), "1.55x".into(), fmt_ratio(mean(&j_ratios))]);
+    t.row(&["overall mean".into(), "1.45x".into(), fmt_ratio(mean(&all))]);
+    // the literature's 1.9x: an ideally clusterable population (a few tight
+    // value clusters, zero slack) — GBDI's best case
+    let ideal = {
+        let mut rng = Rng::new(3);
+        let mut img = vec![0u8; size.min(4 << 20)];
+        for c in img.chunks_mut(4) {
+            let base = [0x0000_1000u32, 0x4000_0000, 0x8000_0000, 0xC000_0000][rng.below(4) as usize];
+            let v = base + rng.below(128) as u32;
+            let n = c.len();
+            c.copy_from_slice(&v.to_le_bytes()[..n]);
+        }
+        ratio_of(&gbdi, &img)
+    };
+    t.row(&["ideal clusterable (lit. bound)".into(), "1.90x".into(), fmt_ratio(ideal)]);
+    print!("{}", t.render());
+
+    // end-to-end timing of the figure's pipeline on one representative
+    let img = workloads::by_name("mcf").unwrap().generate(size.min(2 << 20), 7);
+    bencher.bench("figure1/compress-mcf", Some(img.len() as u64), || gbdi.compress(&img));
+    let comp = gbdi.compress(&img);
+    bencher.bench("figure1/decompress-mcf", Some(img.len() as u64), || {
+        gbdi.decompress(&comp, img.len()).unwrap()
+    });
+    let mut csv = String::from("workload,ratio\n");
+    for (n, r) in &chart {
+        csv.push_str(&format!("{n},{r:.4}\n"));
+    }
+    std::fs::create_dir_all("target").ok();
+    std::fs::write("target/figure1.csv", csv).ok();
+    println!("\ncsv: target/figure1.csv");
+}

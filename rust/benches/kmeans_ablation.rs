@@ -1,0 +1,88 @@
+//! E4 — the paper's modified-k-means claim (§II.A): GBDI's bit-cost
+//! clustering "achieves higher compression ratios than unmodified
+//! Kmeans". Three arms, everything else fixed:
+//!
+//! * modified — bit-cost assignment metric (the paper's algorithm)
+//! * unmodified — Euclidean assignment metric
+//! * uniform — K bases evenly spaced over the value range (no clustering)
+//!
+//! `cargo bench --bench kmeans_ablation`
+
+use gbdi::cluster::Metric;
+use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig};
+use gbdi::report::Table;
+use gbdi::util::bench::Bencher;
+use gbdi::workloads;
+
+fn ratio_with_table(img: &[u8], table: gbdi::gbdi::GlobalBaseTable, cfg: &GbdiConfig) -> f64 {
+    let codec = GbdiCodec::new(table, cfg.clone());
+    codec.compress_image(img).ratio()
+}
+
+fn main() {
+    let fast = std::env::var("GBDI_BENCH_FAST").is_ok_and(|v| v == "1");
+    let size = if fast { 1 << 19 } else { 2 << 20 };
+    let cfg = GbdiConfig::default();
+
+    println!("== E4: clustering ablation ({} KiB per workload) ==\n", size >> 10);
+    let mut t = Table::new(&["workload", "modified", "unmodified", "uniform bases"]);
+    let mut wins_mod = 0;
+    let mut sums = [0.0f64; 3];
+    for w in workloads::all() {
+        let img = w.generate(size, 7);
+        let samples = analyze::sample_image(&img, &cfg);
+        let modified = ratio_with_table(
+            &img,
+            analyze::analyze_samples_metric(&samples, &cfg, Metric::BitCost),
+            &cfg,
+        );
+        let unmodified = ratio_with_table(
+            &img,
+            analyze::analyze_samples_metric(&samples, &cfg, Metric::Euclidean),
+            &cfg,
+        );
+        let uniform = {
+            let k = cfg.num_bases as u64;
+            let centroids: Vec<u64> = (0..k).map(|i| i * (u32::MAX as u64 / k)).collect();
+            ratio_with_table(
+                &img,
+                analyze::table_from_centroids(&samples, &centroids, &cfg, 0),
+                &cfg,
+            )
+        };
+        if modified >= unmodified {
+            wins_mod += 1;
+        }
+        sums[0] += modified;
+        sums[1] += unmodified;
+        sums[2] += uniform;
+        t.row(&[
+            w.name().into(),
+            format!("{modified:.3}"),
+            format!("{unmodified:.3}"),
+            format!("{uniform:.3}"),
+        ]);
+    }
+    t.row(&[
+        "MEAN".into(),
+        format!("{:.3}", sums[0] / 9.0),
+        format!("{:.3}", sums[1] / 9.0),
+        format!("{:.3}", sums[2] / 9.0),
+    ]);
+    print!("{}", t.render());
+    println!(
+        "\nmodified >= unmodified on {wins_mod}/9 workloads (paper claim: modified wins)"
+    );
+
+    // analysis-time cost of each arm
+    println!();
+    let img = workloads::by_name("mcf").unwrap().generate(size, 7);
+    let samples = analyze::sample_image(&img, &cfg);
+    let mut b = Bencher::new();
+    b.bench("analysis/modified-kmeans", None, || {
+        analyze::analyze_samples_metric(&samples, &cfg, Metric::BitCost)
+    });
+    b.bench("analysis/unmodified-kmeans", None, || {
+        analyze::analyze_samples_metric(&samples, &cfg, Metric::Euclidean)
+    });
+}

@@ -1,0 +1,75 @@
+//! E7 — the bandwidth/performance shape the paper quotes from HPCA'22
+//! (§III: "1.5× higher bandwidth and 1.1× higher performance ... when
+//! medium-high memory [intensity] is required"): replay access traces
+//! against the compressed-memory simulator and report bandwidth
+//! amplification + the memory-bound speedup proxy.
+//!
+//! `cargo bench --bench memsim_bandwidth`
+
+use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig};
+use gbdi::memsim::{replay, trace, CompressedMemory, DramModel, TraceKind};
+use gbdi::report::Table;
+use gbdi::workloads;
+
+fn main() {
+    let fast = std::env::var("GBDI_BENCH_FAST").is_ok_and(|v| v == "1");
+    let size = if fast { 1 << 19 } else { 2 << 20 };
+    let accesses = if fast { 8192 } else { 65536 };
+    let model = DramModel { burst_bytes: 16, meta_miss: 0.05 };
+    let kinds = [
+        TraceKind::Streaming,
+        TraceKind::Uniform,
+        TraceKind::Zipf { exponent_milli: 1000 },
+    ];
+
+    println!(
+        "== E7: bandwidth amplification (16 B bursts, {} accesses, {} KiB images) ==\n",
+        accesses,
+        size >> 10
+    );
+    let mut t = Table::new(&[
+        "workload",
+        "capacity",
+        "streaming amp",
+        "uniform amp",
+        "zipf amp",
+        "speedup@0.6 (stream)",
+    ]);
+    let cfg = GbdiConfig::default();
+    let mut stream_amps = Vec::new();
+    for w in workloads::all() {
+        let img = w.generate(size, 7);
+        let table = analyze::analyze_image(&img, &cfg);
+        let mut mem = CompressedMemory::new(GbdiCodec::new(table, cfg.clone()));
+        mem.store_image(&img);
+        let mut amps = Vec::new();
+        let mut speedup06 = 0.0;
+        for kind in kinds {
+            let tr = trace::generate(kind, mem.total_blocks(), accesses, 0.1, 9);
+            let rep = replay(&mut mem, &tr, &model).unwrap();
+            if kind == TraceKind::Streaming {
+                speedup06 = rep.speedup(0.6);
+                stream_amps.push(rep.amplification);
+            }
+            amps.push(rep.amplification);
+        }
+        t.row(&[
+            w.name().into(),
+            format!("{:.3}", mem.capacity_ratio()),
+            format!("{:.3}", amps[0]),
+            format!("{:.3}", amps[1]),
+            format!("{:.3}", amps[2]),
+            format!("{:.3}x", speedup06),
+        ]);
+    }
+    print!("{}", t.render());
+    let mean = stream_amps.iter().sum::<f64>() / stream_amps.len() as f64;
+    println!(
+        "\nmean streaming amplification {:.3}x (HPCA'22 claim shape: 1.5x bandwidth);",
+        mean
+    );
+    println!(
+        "speedup at 60% memory-bound {:.3}x (claim shape: 1.1x performance)",
+        1.0 / ((1.0 - 0.6) + 0.6 / mean)
+    );
+}

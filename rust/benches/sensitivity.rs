@@ -1,0 +1,103 @@
+//! E6 — design-space sensitivity: the "high degree of freedom over
+//! customizing the algorithm" the paper's abstract motivates. Sweeps the
+//! number of global bases, the block size, and the width-class menu.
+//!
+//! `cargo bench --bench sensitivity`
+
+use gbdi::baselines::ratio_of;
+use gbdi::baselines::GbdiWholeImage;
+use gbdi::gbdi::GbdiConfig;
+use gbdi::report::Table;
+use gbdi::workloads;
+
+fn ratio(img: &[u8], cfg: GbdiConfig) -> f64 {
+    ratio_of(&GbdiWholeImage { config: cfg }, img)
+}
+
+fn main() {
+    let fast = std::env::var("GBDI_BENCH_FAST").is_ok_and(|v| v == "1");
+    let size = if fast { 1 << 19 } else { 2 << 20 };
+    let loads = ["mcf", "triangle_count", "fluidanimate"];
+
+    // --- K sweep ------------------------------------------------------
+    println!("== E6a: number of global bases (K), {} KiB ==\n", size >> 10);
+    let ks = [4usize, 8, 16, 32, 64, 128, 256];
+    let mut header = vec!["workload".to_string()];
+    header.extend(ks.iter().map(|k| format!("K={k}")));
+    let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hrefs);
+    for name in loads {
+        let img = workloads::by_name(name).unwrap().generate(size, 7);
+        let mut row = vec![name.to_string()];
+        for &k in &ks {
+            row.push(format!(
+                "{:.3}",
+                ratio(&img, GbdiConfig { num_bases: k, ..Default::default() })
+            ));
+        }
+        t.row(&row);
+    }
+    print!("{}", t.render());
+
+    // --- block size sweep ----------------------------------------------
+    println!("\n== E6b: block size ==\n");
+    let blocks = [32usize, 64, 128, 256];
+    let mut header = vec!["workload".to_string()];
+    header.extend(blocks.iter().map(|b| format!("{b} B")));
+    let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hrefs);
+    for name in loads {
+        let img = workloads::by_name(name).unwrap().generate(size, 7);
+        let mut row = vec![name.to_string()];
+        for &bb in &blocks {
+            row.push(format!(
+                "{:.3}",
+                ratio(&img, GbdiConfig { block_bytes: bb, ..Default::default() })
+            ));
+        }
+        t.row(&row);
+    }
+    print!("{}", t.render());
+
+    // --- width-class menu sweep -----------------------------------------
+    println!("\n== E6c: width-class menu ==\n");
+    let menus: [(&str, Vec<u32>); 4] = [
+        ("coarse {0,8,16,24}", vec![0, 8, 16, 24]),
+        ("default {0,4,8,12,16,20,24}", vec![0, 4, 8, 12, 16, 20, 24]),
+        ("fine {0,2,4,..,24}", (0..=24).step_by(2).collect()),
+        ("narrow-only {0,4,8}", vec![0, 4, 8]),
+    ];
+    let mut t = Table::new(&["workload", "coarse", "default", "fine", "narrow-only"]);
+    for name in loads {
+        let img = workloads::by_name(name).unwrap().generate(size, 7);
+        let mut row = vec![name.to_string()];
+        for (_, menu) in &menus {
+            row.push(format!(
+                "{:.3}",
+                ratio(&img, GbdiConfig { width_classes: menu.clone(), ..Default::default() })
+            ));
+        }
+        t.row(&row);
+    }
+    print!("{}", t.render());
+
+    // --- analysis sample count ------------------------------------------
+    println!("\n== E6d: analysis sample budget ==\n");
+    let samples = [256usize, 1024, 4096, 16384];
+    let mut header = vec!["workload".to_string()];
+    header.extend(samples.iter().map(|s| format!("{s}")));
+    let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hrefs);
+    for name in loads {
+        let img = workloads::by_name(name).unwrap().generate(size, 7);
+        let mut row = vec![name.to_string()];
+        for &s in &samples {
+            row.push(format!(
+                "{:.3}",
+                ratio(&img, GbdiConfig { analysis_samples: s, ..Default::default() })
+            ));
+        }
+        t.row(&row);
+    }
+    print!("{}", t.render());
+}

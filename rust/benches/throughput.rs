@@ -1,0 +1,52 @@
+//! E5 — the paper's methodology metrics (§V): decompression time and
+//! reconstruction accuracy, plus compression throughput. One row per
+//! workload, GBDI end-to-end, with block-granular decode latency (the
+//! number a memory controller cares about).
+//!
+//! `cargo bench --bench throughput`
+
+use gbdi::gbdi::{analyze, decode, GbdiCodec, GbdiConfig};
+use gbdi::util::bench::Bencher;
+use gbdi::util::bits::BitReader;
+use gbdi::workloads;
+
+fn main() {
+    let fast = std::env::var("GBDI_BENCH_FAST").is_ok_and(|v| v == "1");
+    let size = if fast { 1 << 19 } else { 2 << 20 };
+    println!("== E5: GBDI compress/decompress throughput ({} KiB images) ==\n", size >> 10);
+    let cfg = GbdiConfig::default();
+    let mut b = Bencher::new();
+    for w in workloads::all() {
+        let img = w.generate(size, 7);
+        let table = analyze::analyze_image(&img, &cfg);
+        let codec = GbdiCodec::new(table, cfg.clone());
+        b.bench(&format!("compress/{}", w.name()), Some(img.len() as u64), || {
+            codec.compress_image(&img)
+        });
+        let comp = codec.compress_image(&img);
+        // reconstruction accuracy: always verified inside the run
+        let restored = decode::decompress_image(&comp).expect("decode");
+        assert_eq!(restored, img, "{} reconstruction", w.name());
+        b.bench(&format!("decompress/{}", w.name()), Some(img.len() as u64), || {
+            decode::decompress_image(&comp).unwrap()
+        });
+    }
+
+    // block-granular decode latency (single 64B block, hot path)
+    println!("\n-- single-block decode latency --");
+    let img = workloads::by_name("triangle_count").unwrap().generate(size, 7);
+    let table = analyze::analyze_image(&img, &cfg);
+    let codec = GbdiCodec::new(table.clone(), cfg.clone());
+    let comp = codec.compress_image(&img);
+    // pick the first GBDI-coded block's payload
+    let payload = &comp.payload;
+    let mut out = vec![0u8; cfg.block_bytes];
+    b.bench("decode/single-block", Some(64), || {
+        let mut r = BitReader::new(payload);
+        decode::decompress_block(&mut r, &table, &cfg, &mut out).unwrap();
+        out[0]
+    });
+    std::fs::create_dir_all("target").ok();
+    b.write_csv("target/throughput.csv").ok();
+    println!("\ncsv: target/throughput.csv");
+}

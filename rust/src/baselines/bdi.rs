@@ -1,0 +1,352 @@
+//! Base-Delta-Immediate compression (Pekhimenko et al., PACT'12) — the
+//! per-block baseline GBDI generalizes. Each 64-byte block tries a fixed
+//! menu of (base size Δ delta size) encodings **plus an implicit zero
+//! base** (the "Immediate" part): every word is either `base + small Δ`
+//! or `0 + small Δ`, selected by a per-word mask bit.
+//!
+//! Wire format per block: 4-bit encoding id, then for non-trivial
+//! encodings: the base (k bytes), the per-word zero-base mask, and one
+//! d-byte delta per word. Ragged tail blocks are stored raw.
+
+use super::Codec;
+use crate::util::bits::{BitReader, BitWriter};
+use crate::{Error, Result};
+
+/// The eight BDI encodings plus raw/zero/rep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Enc {
+    Zeros = 0,
+    Rep8 = 1,
+    B8D1 = 2,
+    B8D2 = 3,
+    B8D4 = 4,
+    B4D1 = 5,
+    B4D2 = 6,
+    B2D1 = 7,
+    Raw = 8,
+}
+
+impl Enc {
+    fn from_id(id: u64) -> Option<Enc> {
+        Some(match id {
+            0 => Enc::Zeros,
+            1 => Enc::Rep8,
+            2 => Enc::B8D1,
+            3 => Enc::B8D2,
+            4 => Enc::B8D4,
+            5 => Enc::B4D1,
+            6 => Enc::B4D2,
+            7 => Enc::B2D1,
+            8 => Enc::Raw,
+            _ => return None,
+        })
+    }
+
+    /// (base bytes, delta bytes) for the delta encodings.
+    fn kd(self) -> Option<(usize, usize)> {
+        Some(match self {
+            Enc::B8D1 => (8, 1),
+            Enc::B8D2 => (8, 2),
+            Enc::B8D4 => (8, 4),
+            Enc::B4D1 => (4, 1),
+            Enc::B4D2 => (4, 2),
+            Enc::B2D1 => (2, 1),
+            _ => return None,
+        })
+    }
+}
+
+/// BDI codec over fixed-size blocks.
+pub struct Bdi {
+    /// Block size in bytes (64 in the paper).
+    pub block_bytes: usize,
+}
+
+impl Default for Bdi {
+    fn default() -> Self {
+        Bdi { block_bytes: 64 }
+    }
+}
+
+fn read_le(block: &[u8], i: usize, k: usize) -> u64 {
+    let mut v = 0u64;
+    for b in 0..k {
+        v |= (block[i * k + b] as u64) << (8 * b);
+    }
+    v
+}
+
+fn sign_fits(delta: u64, k: usize, d: usize) -> bool {
+    // delta computed in k-byte wrapping arithmetic; check it sign-fits in d bytes
+    let bits = 8 * d as u32;
+    let kbits = 8 * k as u32;
+    // sign-extend delta from kbits to 64
+    let sd = ((delta << (64 - kbits)) as i64) >> (64 - kbits);
+    let bias = 1i64 << (bits - 1);
+    sd >= -bias && sd < bias
+}
+
+impl Bdi {
+    /// Try encoding `block` with (k, d); return per-word (mask, delta)
+    /// plan if every word fits against the block base or the zero base.
+    fn plan(block: &[u8], k: usize, d: usize) -> Option<(u64, Vec<(bool, u64)>)> {
+        let n = block.len() / k;
+        let kbits = 8 * k as u32;
+        // base = first word that does not fit the zero base
+        let mut base: Option<u64> = None;
+        let mut plan = Vec::with_capacity(n);
+        for i in 0..n {
+            let v = read_le(block, i, k);
+            let zero_delta = v; // v - 0
+            if sign_fits(zero_delta, k, d) {
+                plan.push((true, zero_delta & mask_bits(8 * d as u32)));
+                continue;
+            }
+            let b = match base {
+                Some(b) => b,
+                None => {
+                    base = Some(v);
+                    v
+                }
+            };
+            let delta = v.wrapping_sub(b) & mask_bits(kbits);
+            if sign_fits(delta, k, d) {
+                plan.push((false, delta & mask_bits(8 * d as u32)));
+            } else {
+                return None;
+            }
+        }
+        Some((base.unwrap_or(0), plan))
+    }
+
+    /// Size in bits of a (k, d) encoding for an n-word block: id + base +
+    /// mask + deltas.
+    fn enc_bits(block_len: usize, k: usize, d: usize) -> u64 {
+        let n = (block_len / k) as u64;
+        4 + 8 * k as u64 + n + 8 * d as u64 * n
+    }
+
+    fn compress_block(&self, block: &[u8], w: &mut BitWriter) {
+        // fast paths
+        if block.len() == self.block_bytes {
+            if block.iter().all(|&b| b == 0) {
+                w.put(Enc::Zeros as u64, 4);
+                return;
+            }
+            if block.len() % 8 == 0 {
+                let first = read_le(block, 0, 8);
+                let n = block.len() / 8;
+                if (1..n).all(|i| read_le(block, i, 8) == first) {
+                    w.put(Enc::Rep8 as u64, 4);
+                    w.put(first, 64);
+                    return;
+                }
+            }
+            // pick the smallest fitting delta encoding
+            let mut best: Option<(Enc, u64, u64, Vec<(bool, u64)>)> = None;
+            for enc in [Enc::B8D1, Enc::B4D1, Enc::B8D2, Enc::B2D1, Enc::B4D2, Enc::B8D4] {
+                let (k, d) = enc.kd().unwrap();
+                if block.len() % k != 0 {
+                    continue;
+                }
+                if let Some((base, plan)) = Self::plan(block, k, d) {
+                    let bits = Self::enc_bits(block.len(), k, d);
+                    if best.as_ref().map_or(true, |(_, bb, _, _)| bits < *bb) {
+                        best = Some((enc, bits, base, plan));
+                    }
+                }
+            }
+            if let Some((enc, bits, base, plan)) = best {
+                if bits < 4 + 8 * block.len() as u64 {
+                    let (k, d) = enc.kd().unwrap();
+                    w.put(enc as u64, 4);
+                    w.put(base & mask_bits(8 * k as u32), 8 * k as u32);
+                    for &(zero, _) in &plan {
+                        w.put_bit(zero);
+                    }
+                    for &(_, delta) in &plan {
+                        w.put(delta, 8 * d as u32);
+                    }
+                    return;
+                }
+            }
+        }
+        // raw fallback (also ragged tails)
+        w.put(Enc::Raw as u64, 4);
+        for &b in block {
+            w.put(b as u64, 8);
+        }
+    }
+
+    fn decompress_block(&self, r: &mut BitReader, out: &mut [u8]) -> Result<()> {
+        let corrupt = |m: &str| Error::Corrupt(format!("bdi: {m}"));
+        let id = r.get(4).map_err(|_| corrupt("missing id"))?;
+        let enc = Enc::from_id(id).ok_or_else(|| corrupt("bad encoding id"))?;
+        match enc {
+            Enc::Zeros => out.fill(0),
+            Enc::Rep8 => {
+                let v = r.get(64).map_err(|_| corrupt("truncated rep"))?;
+                if out.len() % 8 != 0 {
+                    return Err(corrupt("rep8 on ragged block"));
+                }
+                for c in out.chunks_mut(8) {
+                    c.copy_from_slice(&v.to_le_bytes());
+                }
+            }
+            Enc::Raw => {
+                for b in out.iter_mut() {
+                    *b = r.get(8).map_err(|_| corrupt("truncated raw"))? as u8;
+                }
+            }
+            _ => {
+                let (k, d) = enc.kd().unwrap();
+                if out.len() % k != 0 {
+                    return Err(corrupt("delta enc on ragged block"));
+                }
+                let n = out.len() / k;
+                let kbits = 8 * k as u32;
+                let dbits = 8 * d as u32;
+                let base = r.get(kbits).map_err(|_| corrupt("truncated base"))?;
+                let mut zero_mask = Vec::with_capacity(n);
+                for _ in 0..n {
+                    zero_mask.push(r.get_bit().map_err(|_| corrupt("truncated mask"))?);
+                }
+                for i in 0..n {
+                    let delta = r.get(dbits).map_err(|_| corrupt("truncated delta"))?;
+                    // sign-extend delta from dbits to kbits
+                    let sd = ((delta << (64 - dbits)) as i64 >> (64 - dbits)) as u64;
+                    let v = if zero_mask[i] { sd } else { base.wrapping_add(sd) } & mask_bits(kbits);
+                    out[i * k..(i + 1) * k].copy_from_slice(&v.to_le_bytes()[..k]);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[inline]
+fn mask_bits(bits: u32) -> u64 {
+    if bits >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << bits) - 1
+    }
+}
+
+impl Codec for Bdi {
+    fn name(&self) -> &'static str {
+        "bdi"
+    }
+
+    fn compress(&self, data: &[u8]) -> Vec<u8> {
+        let mut w = BitWriter::with_capacity(data.len() / 2 + 16);
+        for block in data.chunks(self.block_bytes) {
+            self.compress_block(block, &mut w);
+        }
+        w.finish()
+    }
+
+    fn decompress(&self, comp: &[u8], original_len: usize) -> Result<Vec<u8>> {
+        let mut out = vec![0u8; original_len];
+        let mut r = BitReader::new(comp);
+        for chunk in out.chunks_mut(self.block_bytes) {
+            self.decompress_block(&mut r, chunk)?;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::testsupport::roundtrip_battery;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn battery() {
+        roundtrip_battery(&Bdi::default());
+    }
+
+    #[test]
+    fn zeros_block_is_four_bits() {
+        let bdi = Bdi::default();
+        let comp = bdi.compress(&[0u8; 64]);
+        assert_eq!(comp.len(), 1); // 4 bits padded
+    }
+
+    #[test]
+    fn narrow_values_compress() {
+        // u64 words with small magnitudes -> B8D1: 4 + 64 + 8 + 64 bits = 17.5B vs 64B
+        let mut data = Vec::new();
+        for i in 0..8u64 {
+            data.extend_from_slice(&(1_000_000 + i).to_le_bytes());
+        }
+        let bdi = Bdi::default();
+        let comp = bdi.compress(&data);
+        assert!(comp.len() < 20, "compressed {} bytes", comp.len());
+        assert_eq!(bdi.decompress(&comp, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn pointer_like_blocks_compress() {
+        // realistic: 8 pointers into the same region + small ints mixed
+        let mut rng = Rng::new(4);
+        let mut data = Vec::new();
+        for _ in 0..64 {
+            let heap = 0x7F3A_0000_0000u64;
+            for i in 0..4 {
+                data.extend_from_slice(&(heap + rng.below(4096) * 8 + i).to_le_bytes());
+            }
+            for _ in 0..4 {
+                data.extend_from_slice(&(rng.below(100) as u64).to_le_bytes());
+            }
+        }
+        let bdi = Bdi::default();
+        let r = crate::baselines::ratio_of(&bdi, &data);
+        assert!(r > 2.0, "ratio {r}");
+        let comp = bdi.compress(&data);
+        assert_eq!(bdi.decompress(&comp, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn incompressible_expands_bounded() {
+        let mut rng = Rng::new(5);
+        let mut data = vec![0u8; 4096];
+        rng.fill_bytes(&mut data);
+        let bdi = Bdi::default();
+        let comp = bdi.compress(&data);
+        // at most 4 bits per 64-byte block of overhead
+        assert!(comp.len() <= data.len() + data.len() / 64 + 8);
+        assert_eq!(bdi.decompress(&comp, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let bdi = Bdi::default();
+        let data = vec![9u8; 640];
+        let comp = bdi.compress(&data);
+        assert!(bdi.decompress(&comp[..2], 640).is_err());
+    }
+
+    #[test]
+    fn random_fuzz_roundtrip() {
+        let mut rng = Rng::new(6);
+        let bdi = Bdi::default();
+        for _ in 0..100 {
+            let len = rng.below(2048) as usize;
+            let mut data = vec![0u8; len];
+            // half structured, half random
+            if rng.chance(0.5) {
+                rng.fill_bytes(&mut data);
+            } else {
+                for c in data.chunks_mut(8) {
+                    let v = 0xAA00_0000u64 + rng.below(128);
+                    let n = c.len();
+                    c.copy_from_slice(&v.to_le_bytes()[..n]);
+                }
+            }
+            let comp = bdi.compress(&data);
+            assert_eq!(bdi.decompress(&comp, len).unwrap(), data);
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! General-purpose comparators from the paper's intro: gzip (DEFLATE via
+//! flate2) and zstd. These anchor the E3 table's "heavyweight software
+//! codec" end — higher ratios, far higher latency than the
+//! hardware-amenable block codecs.
+
+use super::Codec;
+use crate::{Error, Result};
+use std::io::{Read, Write};
+
+/// gzip at a configurable level (default 6, the usual tradeoff point).
+pub struct Gzip {
+    /// Compression level 0-9.
+    pub level: u32,
+}
+
+impl Default for Gzip {
+    fn default() -> Self {
+        Gzip { level: 6 }
+    }
+}
+
+impl Codec for Gzip {
+    fn name(&self) -> &'static str {
+        "gzip"
+    }
+
+    fn compress(&self, data: &[u8]) -> Vec<u8> {
+        let mut enc = flate2::write::GzEncoder::new(
+            Vec::with_capacity(data.len() / 2 + 64),
+            flate2::Compression::new(self.level),
+        );
+        enc.write_all(data).expect("in-memory gzip write");
+        enc.finish().expect("in-memory gzip finish")
+    }
+
+    fn decompress(&self, comp: &[u8], original_len: usize) -> Result<Vec<u8>> {
+        let mut dec = flate2::read::GzDecoder::new(comp);
+        let mut out = Vec::with_capacity(original_len);
+        dec.read_to_end(&mut out).map_err(|e| Error::Corrupt(format!("gzip: {e}")))?;
+        if out.len() != original_len {
+            return Err(Error::Corrupt(format!(
+                "gzip: expected {original_len} bytes, got {}",
+                out.len()
+            )));
+        }
+        Ok(out)
+    }
+}
+
+/// zstd at a configurable level (default 3).
+pub struct Zstd {
+    /// Compression level 1-22.
+    pub level: i32,
+}
+
+impl Default for Zstd {
+    fn default() -> Self {
+        Zstd { level: 3 }
+    }
+}
+
+impl Codec for Zstd {
+    fn name(&self) -> &'static str {
+        "zstd"
+    }
+
+    fn compress(&self, data: &[u8]) -> Vec<u8> {
+        zstd::bulk::compress(data, self.level).expect("in-memory zstd")
+    }
+
+    fn decompress(&self, comp: &[u8], original_len: usize) -> Result<Vec<u8>> {
+        let out = zstd::bulk::decompress(comp, original_len)
+            .map_err(|e| Error::Corrupt(format!("zstd: {e}")))?;
+        if out.len() != original_len {
+            return Err(Error::Corrupt(format!(
+                "zstd: expected {original_len} bytes, got {}",
+                out.len()
+            )));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::testsupport::roundtrip_battery;
+
+    #[test]
+    fn gzip_battery() {
+        roundtrip_battery(&Gzip::default());
+    }
+
+    #[test]
+    fn zstd_battery() {
+        roundtrip_battery(&Zstd::default());
+    }
+
+    #[test]
+    fn corrupt_streams_rejected() {
+        let data = vec![5u8; 1000];
+        let comp = Gzip::default().compress(&data);
+        assert!(Gzip::default().decompress(&comp[..comp.len() / 2], 1000).is_err());
+        let comp = Zstd::default().compress(&data);
+        assert!(Zstd::default().decompress(&comp[..comp.len() / 2], 1000).is_err());
+    }
+
+    #[test]
+    fn levels_change_output() {
+        let data: Vec<u8> = (0..10_000u32).flat_map(|i| (i % 256).to_le_bytes()).collect();
+        let fast = Gzip { level: 1 }.compress(&data);
+        let best = Gzip { level: 9 }.compress(&data);
+        assert!(best.len() <= fast.len());
+    }
+}

@@ -1,0 +1,202 @@
+//! Frequent Pattern Compression (Alameldeen & Wood, 2004) — a word-level
+//! significance-based baseline: each 32-bit word gets a 3-bit prefix
+//! selecting one of eight patterns (zero, sign-extended narrow values,
+//! halfword shapes, repeated bytes, or uncompressed).
+
+use super::Codec;
+use crate::util::bits::{BitReader, BitWriter};
+use crate::{Error, Result};
+
+/// FPC over 32-bit words (ragged tails stored raw with a 1-bit marker per
+/// trailing byte group).
+pub struct Fpc;
+
+const P_ZERO: u64 = 0b000;
+const P_S4: u64 = 0b001; // 4-bit sign-extended
+const P_S8: u64 = 0b010; // 8-bit sign-extended
+const P_S16: u64 = 0b011; // 16-bit sign-extended
+const P_HI16: u64 = 0b100; // low half zero, high half 16 bits
+const P_2X8: u64 = 0b101; // two halfwords, each 8-bit sign-extended
+const P_REPB: u64 = 0b110; // four identical bytes
+const P_RAW: u64 = 0b111;
+
+#[inline]
+fn sext_fits(v: u32, bits: u32) -> bool {
+    let s = v as i32;
+    let bias = 1i32 << (bits - 1);
+    s >= -bias && s < bias
+}
+
+impl Fpc {
+    fn encode_word(w: &mut BitWriter, v: u32) {
+        if v == 0 {
+            w.put(P_ZERO, 3);
+        } else if sext_fits(v, 4) {
+            w.put(P_S4, 3);
+            w.put((v & 0xF) as u64, 4);
+        } else if sext_fits(v, 8) {
+            w.put(P_S8, 3);
+            w.put((v & 0xFF) as u64, 8);
+        } else if sext_fits(v, 16) {
+            w.put(P_S16, 3);
+            w.put((v & 0xFFFF) as u64, 16);
+        } else if v & 0xFFFF == 0 {
+            w.put(P_HI16, 3);
+            w.put((v >> 16) as u64, 16);
+        } else if {
+            let lo = v as u16 as i16;
+            let hi = (v >> 16) as u16 as i16;
+            (-128..128).contains(&lo) && (-128..128).contains(&hi)
+        } {
+            w.put(P_2X8, 3);
+            w.put((v & 0xFF) as u64, 8);
+            w.put(((v >> 16) & 0xFF) as u64, 8);
+        } else if v.to_le_bytes().windows(2).all(|p| p[0] == p[1]) {
+            w.put(P_REPB, 3);
+            w.put((v & 0xFF) as u64, 8);
+        } else {
+            w.put(P_RAW, 3);
+            w.put(v as u64, 32);
+        }
+    }
+
+    fn decode_word(r: &mut BitReader) -> Result<u32> {
+        let corrupt = |m: &str| Error::Corrupt(format!("fpc: {m}"));
+        let p = r.get(3).map_err(|_| corrupt("missing prefix"))?;
+        Ok(match p {
+            P_ZERO => 0,
+            P_S4 => {
+                let b = r.get(4).map_err(|_| corrupt("truncated s4"))? as u32;
+                ((b << 28) as i32 >> 28) as u32
+            }
+            P_S8 => {
+                let b = r.get(8).map_err(|_| corrupt("truncated s8"))? as u32;
+                ((b << 24) as i32 >> 24) as u32
+            }
+            P_S16 => {
+                let b = r.get(16).map_err(|_| corrupt("truncated s16"))? as u32;
+                ((b << 16) as i32 >> 16) as u32
+            }
+            P_HI16 => {
+                let b = r.get(16).map_err(|_| corrupt("truncated hi16"))? as u32;
+                b << 16
+            }
+            P_2X8 => {
+                let lo = r.get(8).map_err(|_| corrupt("truncated 2x8"))? as u32;
+                let hi = r.get(8).map_err(|_| corrupt("truncated 2x8"))? as u32;
+                let lo = ((lo << 24) as i32 >> 24) as u32 & 0xFFFF;
+                let hi = ((hi << 24) as i32 >> 24) as u32 & 0xFFFF;
+                lo | (hi << 16)
+            }
+            P_REPB => {
+                let b = r.get(8).map_err(|_| corrupt("truncated repb"))? as u32;
+                b | (b << 8) | (b << 16) | (b << 24)
+            }
+            P_RAW => r.get(32).map_err(|_| corrupt("truncated raw"))? as u32,
+            _ => unreachable!(),
+        })
+    }
+}
+
+impl Codec for Fpc {
+    fn name(&self) -> &'static str {
+        "fpc"
+    }
+
+    fn compress(&self, data: &[u8]) -> Vec<u8> {
+        let mut w = BitWriter::with_capacity(data.len() / 2 + 8);
+        let words = data.len() / 4;
+        for i in 0..words {
+            let v = u32::from_le_bytes(data[i * 4..i * 4 + 4].try_into().unwrap());
+            Self::encode_word(&mut w, v);
+        }
+        for &b in &data[words * 4..] {
+            w.put(b as u64, 8); // ragged tail raw
+        }
+        w.finish()
+    }
+
+    fn decompress(&self, comp: &[u8], original_len: usize) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(original_len);
+        let mut r = BitReader::new(comp);
+        let words = original_len / 4;
+        for _ in 0..words {
+            out.extend_from_slice(&Self::decode_word(&mut r)?.to_le_bytes());
+        }
+        while out.len() < original_len {
+            out.push(r.get(8).map_err(|_| Error::Corrupt("fpc: truncated tail".into()))? as u8);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::testsupport::roundtrip_battery;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn battery() {
+        roundtrip_battery(&Fpc);
+    }
+
+    #[test]
+    fn patterns_roundtrip_exhaustive_edges() {
+        let cases: Vec<u32> = vec![
+            0,
+            1,
+            7,
+            8,
+            0xFFFF_FFFF, // -1
+            0xFFFF_FFF8, // -8
+            127,
+            128,
+            0xFFFF_FF80,
+            32767,
+            32768,
+            0xFFFF_8000,
+            0x7FFF_0000,
+            0x1234_0000,
+            0x0042_0017, // 2x8
+            0xABAB_ABAB, // repeated bytes
+            0xDEAD_BEEF, // raw
+        ];
+        for &v in &cases {
+            let mut w = BitWriter::new();
+            Fpc::encode_word(&mut w, v);
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            assert_eq!(Fpc::decode_word(&mut r).unwrap(), v, "v={v:#x}");
+        }
+    }
+
+    #[test]
+    fn small_values_shrink() {
+        let mut data = Vec::new();
+        for i in 0i32..1024 {
+            data.extend_from_slice(&(i % 5).to_le_bytes());
+        }
+        let r = crate::baselines::ratio_of(&Fpc, &data);
+        assert!(r > 3.0, "ratio {r}");
+    }
+
+    #[test]
+    fn fuzz_roundtrip() {
+        let mut rng = Rng::new(17);
+        for _ in 0..200 {
+            let len = rng.below(1024) as usize;
+            let mut data = vec![0u8; len];
+            rng.fill_bytes(&mut data);
+            let comp = Fpc.compress(&data);
+            assert_eq!(Fpc.decompress(&comp, len).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let data = vec![0xDE; 256];
+        let comp = Fpc.compress(&data);
+        assert!(Fpc.decompress(&comp[..comp.len() / 4], 256).is_err());
+    }
+}

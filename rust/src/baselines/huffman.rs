@@ -1,0 +1,290 @@
+//! Canonical Huffman coding over bytes — the paper's "Huffman coding"
+//! baseline (§1.1). Header is the 256 canonical code lengths; codes are
+//! emitted MSB-first so the canonical first-code decoder walks one bit at
+//! a time.
+
+use super::Codec;
+use crate::util::bits::{BitReader, BitWriter};
+use crate::{Error, Result};
+
+/// Canonical Huffman byte coder.
+pub struct Huffman;
+
+/// Maximum code length we allow; distributions deeper than this get their
+/// counts flattened and the tree rebuilt (bounded iterations).
+const MAX_LEN: u32 = 32;
+
+/// Build Huffman code lengths for `counts` (only symbols with count > 0
+/// get codes). Returns 256 lengths (0 = unused symbol).
+fn code_lengths(counts: &[u64; 256]) -> [u8; 256] {
+    #[derive(Clone)]
+    struct Node {
+        weight: u64,
+        // leaf symbol or internal children indices
+        sym: Option<u8>,
+        kids: Option<(usize, usize)>,
+    }
+    let mut counts = *counts;
+    loop {
+        let mut nodes: Vec<Node> = Vec::new();
+        let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<(u64, usize)>> =
+            std::collections::BinaryHeap::new();
+        for s in 0..256 {
+            if counts[s] > 0 {
+                nodes.push(Node { weight: counts[s], sym: Some(s as u8), kids: None });
+                heap.push(std::cmp::Reverse((counts[s], nodes.len() - 1)));
+            }
+        }
+        let mut lens = [0u8; 256];
+        match heap.len() {
+            0 => return lens,
+            1 => {
+                let std::cmp::Reverse((_, i)) = heap.pop().unwrap();
+                lens[nodes[i].sym.unwrap() as usize] = 1;
+                return lens;
+            }
+            _ => {}
+        }
+        while heap.len() > 1 {
+            let std::cmp::Reverse((wa, a)) = heap.pop().unwrap();
+            let std::cmp::Reverse((wb, b)) = heap.pop().unwrap();
+            nodes.push(Node { weight: wa + wb, sym: None, kids: Some((a, b)) });
+            heap.push(std::cmp::Reverse((wa + wb, nodes.len() - 1)));
+        }
+        // depth-assign
+        let root = heap.pop().unwrap().0 .1;
+        let mut stack = vec![(root, 0u32)];
+        let mut too_deep = false;
+        while let Some((n, depth)) = stack.pop() {
+            match (nodes[n].sym, nodes[n].kids) {
+                (Some(s), _) => {
+                    if depth > MAX_LEN {
+                        too_deep = true;
+                        break;
+                    }
+                    lens[s as usize] = depth.max(1) as u8;
+                }
+                (None, Some((a, b))) => {
+                    stack.push((a, depth + 1));
+                    stack.push((b, depth + 1));
+                }
+                _ => unreachable!(),
+            }
+        }
+        if !too_deep {
+            return lens;
+        }
+        // flatten the distribution and retry (guaranteed to terminate:
+        // weights converge towards uniform, whose depth is 8)
+        for c in counts.iter_mut() {
+            if *c > 0 {
+                *c = *c / 2 + 1;
+            }
+        }
+    }
+}
+
+/// Canonical code assignment from lengths: symbols sorted by (length,
+/// value) get consecutive codes. Returns (code, len) per symbol.
+fn canonical_codes(lens: &[u8; 256]) -> Vec<(u32, u8)> {
+    let mut order: Vec<u8> = (0u16..256).map(|s| s as u8).filter(|&s| lens[s as usize] > 0).collect();
+    order.sort_by_key(|&s| (lens[s as usize], s));
+    let mut codes = vec![(0u32, 0u8); 256];
+    let mut code = 0u32;
+    let mut prev_len = 0u8;
+    for &s in &order {
+        let l = lens[s as usize];
+        code <<= l - prev_len;
+        codes[s as usize] = (code, l);
+        code += 1;
+        prev_len = l;
+    }
+    codes
+}
+
+/// Canonical decoder tables: for each length, the first code and the
+/// symbol-table offset.
+struct Decoder {
+    first_code: [u32; (MAX_LEN + 1) as usize],
+    offset: [u32; (MAX_LEN + 1) as usize],
+    count: [u32; (MAX_LEN + 1) as usize],
+    symbols: Vec<u8>, // sorted by (len, sym)
+}
+
+impl Decoder {
+    fn new(lens: &[u8; 256]) -> Decoder {
+        let mut order: Vec<u8> =
+            (0u16..256).map(|s| s as u8).filter(|&s| lens[s as usize] > 0).collect();
+        order.sort_by_key(|&s| (lens[s as usize], s));
+        let mut count = [0u32; (MAX_LEN + 1) as usize];
+        for &s in &order {
+            count[lens[s as usize] as usize] += 1;
+        }
+        let mut first_code = [0u32; (MAX_LEN + 1) as usize];
+        let mut offset = [0u32; (MAX_LEN + 1) as usize];
+        let mut code = 0u32;
+        let mut off = 0u32;
+        for l in 1..=MAX_LEN as usize {
+            first_code[l] = code;
+            offset[l] = off;
+            code = (code + count[l]) << 1;
+            off += count[l];
+        }
+        Decoder { first_code, offset, count, symbols: order }
+    }
+
+    fn decode(&self, r: &mut BitReader) -> Result<u8> {
+        let mut code = 0u32;
+        for l in 1..=MAX_LEN as usize {
+            code = (code << 1)
+                | r.get_bit().map_err(|_| Error::Corrupt("huffman: truncated code".into()))? as u32;
+            if self.count[l] > 0 && code.wrapping_sub(self.first_code[l]) < self.count[l] {
+                let idx = self.offset[l] + (code - self.first_code[l]);
+                return Ok(self.symbols[idx as usize]);
+            }
+        }
+        Err(Error::Corrupt("huffman: invalid code".into()))
+    }
+}
+
+impl Codec for Huffman {
+    fn name(&self) -> &'static str {
+        "huffman"
+    }
+
+    fn compress(&self, data: &[u8]) -> Vec<u8> {
+        let mut counts = [0u64; 256];
+        for &b in data {
+            counts[b as usize] += 1;
+        }
+        let lens = code_lengths(&counts);
+        let codes = canonical_codes(&lens);
+        let mut out = Vec::with_capacity(256 + data.len() / 2 + 8);
+        out.extend_from_slice(&lens); // 256-byte header
+        let mut w = BitWriter::with_capacity(data.len() / 2);
+        for &b in data {
+            let (code, l) = codes[b as usize];
+            // MSB-first emission so canonical decode walks bit-by-bit
+            for k in (0..l).rev() {
+                w.put_bit((code >> k) & 1 == 1);
+            }
+        }
+        out.extend_from_slice(&w.finish());
+        out
+    }
+
+    fn decompress(&self, comp: &[u8], original_len: usize) -> Result<Vec<u8>> {
+        if original_len == 0 {
+            return Ok(Vec::new());
+        }
+        if comp.len() < 256 {
+            return Err(Error::Corrupt("huffman: missing header".into()));
+        }
+        let mut lens = [0u8; 256];
+        lens.copy_from_slice(&comp[..256]);
+        if lens.iter().any(|&l| l as u32 > MAX_LEN) {
+            return Err(Error::Corrupt("huffman: bad code length".into()));
+        }
+        let dec = Decoder::new(&lens);
+        if dec.symbols.is_empty() {
+            return Err(Error::Corrupt("huffman: empty code table".into()));
+        }
+        let mut r = BitReader::new(&comp[256..]);
+        let mut out = Vec::with_capacity(original_len);
+        for _ in 0..original_len {
+            out.push(dec.decode(&mut r)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::testsupport::roundtrip_battery;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn battery() {
+        roundtrip_battery(&Huffman);
+    }
+
+    #[test]
+    fn skewed_distribution_compresses() {
+        let mut rng = Rng::new(10);
+        let data: Vec<u8> = (0..1 << 16)
+            .map(|_| if rng.chance(0.9) { 0u8 } else { rng.next_u32() as u8 })
+            .collect();
+        let r = crate::baselines::ratio_of(&Huffman, &data);
+        assert!(r > 2.0, "ratio {r}");
+    }
+
+    #[test]
+    fn single_symbol_stream() {
+        let data = vec![42u8; 10_000];
+        let comp = Huffman.compress(&data);
+        // 256 header + 10000 bits
+        assert!(comp.len() < 256 + 1260);
+        assert_eq!(Huffman.decompress(&comp, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn uniform_bytes_near_incompressible() {
+        let mut rng = Rng::new(11);
+        let mut data = vec![0u8; 1 << 15];
+        rng.fill_bytes(&mut data);
+        let comp = Huffman.compress(&data);
+        assert!(comp.len() as f64 > data.len() as f64 * 0.98);
+        assert_eq!(Huffman.decompress(&comp, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn kraft_inequality_holds() {
+        let mut rng = Rng::new(12);
+        for _ in 0..50 {
+            let mut counts = [0u64; 256];
+            let n_syms = 1 + rng.below(256) as usize;
+            for _ in 0..n_syms {
+                counts[rng.below(256) as usize] += rng.pareto(1.0, 0.5) as u64 + 1;
+            }
+            let lens = code_lengths(&counts);
+            let kraft: f64 = lens
+                .iter()
+                .filter(|&&l| l > 0)
+                .map(|&l| 2f64.powi(-(l as i32)))
+                .sum();
+            assert!(kraft <= 1.0 + 1e-9, "kraft {kraft}");
+            // and optimality-ish: no zero-count symbol got a code
+            for s in 0..256 {
+                assert_eq!(counts[s] == 0, lens[s] == 0, "sym {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn canonical_codes_are_prefix_free() {
+        let mut counts = [0u64; 256];
+        for s in 0..10 {
+            counts[s] = (s as u64 + 1) * (s as u64 + 1);
+        }
+        let lens = code_lengths(&counts);
+        let codes = canonical_codes(&lens);
+        let used: Vec<(u32, u8)> =
+            (0..256).filter(|&s| lens[s] > 0).map(|s| codes[s]).collect();
+        for (i, &(ca, la)) in used.iter().enumerate() {
+            for &(cb, lb) in used.iter().skip(i + 1) {
+                let l = la.min(lb);
+                assert_ne!(ca >> (la - l), cb >> (lb - l), "prefix collision");
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_header_rejected() {
+        let data = vec![1u8, 2, 3, 4, 5];
+        let mut comp = Huffman.compress(&data);
+        comp[0] = 255; // invalid length
+        assert!(Huffman.decompress(&comp, data.len()).is_err());
+        assert!(Huffman.decompress(&comp[..100], 5).is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! LZSS — the dictionary ("LZ compression") baseline from the paper's
+//! §1.1. Byte-oriented sliding window with a hash-chain matcher: output is
+//! a bitstream of `0 + literal byte` or `1 + offset + length` tokens.
+
+use super::Codec;
+use crate::util::bits::{BitReader, BitWriter};
+use crate::{Error, Result};
+
+/// LZSS with a 32 KiB window (15-bit offsets) and 4..=258 byte matches.
+pub struct Lzss {
+    /// log2 of the window size (offset bits).
+    pub window_bits: u32,
+}
+
+impl Default for Lzss {
+    fn default() -> Self {
+        Lzss { window_bits: 15 }
+    }
+}
+
+const MIN_MATCH: usize = 4;
+const MAX_MATCH: usize = 258; // len field stores len - MIN_MATCH in 8 bits
+const HASH_BITS: u32 = 15;
+
+#[inline]
+fn hash4(data: &[u8], i: usize) -> usize {
+    let v = u32::from_le_bytes(data[i..i + 4].try_into().unwrap());
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+}
+
+impl Codec for Lzss {
+    fn name(&self) -> &'static str {
+        "lzss"
+    }
+
+    fn compress(&self, data: &[u8]) -> Vec<u8> {
+        let window = 1usize << self.window_bits;
+        let mut w = BitWriter::with_capacity(data.len() + data.len() / 8 + 16);
+        let mut head = vec![usize::MAX; 1 << HASH_BITS];
+        let mut prev = vec![usize::MAX; data.len()];
+        let mut i = 0;
+        while i < data.len() {
+            let mut best_len = 0usize;
+            let mut best_off = 0usize;
+            if i + MIN_MATCH <= data.len() {
+                let mut cand = head[hash4(data, i)];
+                let mut chain = 0;
+                while cand != usize::MAX && i - cand <= window && chain < 64 {
+                    let max = (data.len() - i).min(MAX_MATCH);
+                    let mut l = 0;
+                    while l < max && data[cand + l] == data[i + l] {
+                        l += 1;
+                    }
+                    if l > best_len {
+                        best_len = l;
+                        best_off = i - cand;
+                        if l >= max {
+                            break;
+                        }
+                    }
+                    cand = prev[cand];
+                    chain += 1;
+                }
+            }
+            if best_len >= MIN_MATCH {
+                w.put_bit(true);
+                w.put((best_off - 1) as u64, self.window_bits);
+                w.put((best_len - MIN_MATCH) as u64, 8);
+                // insert hash entries for covered positions
+                let end = i + best_len;
+                while i < end {
+                    if i + MIN_MATCH <= data.len() {
+                        let h = hash4(data, i);
+                        prev[i] = head[h];
+                        head[h] = i;
+                    }
+                    i += 1;
+                }
+            } else {
+                w.put_bit(false);
+                w.put(data[i] as u64, 8);
+                if i + MIN_MATCH <= data.len() {
+                    let h = hash4(data, i);
+                    prev[i] = head[h];
+                    head[h] = i;
+                }
+                i += 1;
+            }
+        }
+        w.finish()
+    }
+
+    fn decompress(&self, comp: &[u8], original_len: usize) -> Result<Vec<u8>> {
+        let corrupt = |m: &str| Error::Corrupt(format!("lzss: {m}"));
+        let mut out: Vec<u8> = Vec::with_capacity(original_len);
+        let mut r = BitReader::new(comp);
+        while out.len() < original_len {
+            let is_match = r.get_bit().map_err(|_| corrupt("truncated token"))?;
+            if is_match {
+                let off = r.get(self.window_bits).map_err(|_| corrupt("truncated offset"))? as usize + 1;
+                let len =
+                    r.get(8).map_err(|_| corrupt("truncated length"))? as usize + MIN_MATCH;
+                if off > out.len() {
+                    return Err(corrupt("offset beyond history"));
+                }
+                if out.len() + len > original_len {
+                    return Err(corrupt("match overruns output"));
+                }
+                let start = out.len() - off;
+                for k in 0..len {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            } else {
+                out.push(r.get(8).map_err(|_| corrupt("truncated literal"))? as u8);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::testsupport::roundtrip_battery;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn battery() {
+        roundtrip_battery(&Lzss::default());
+    }
+
+    #[test]
+    fn repetitive_text_compresses_well() {
+        let data: Vec<u8> = b"the quick brown fox jumps over the lazy dog. "
+            .iter()
+            .cycle()
+            .take(1 << 16)
+            .copied()
+            .collect();
+        let r = crate::baselines::ratio_of(&Lzss::default(), &data);
+        assert!(r > 8.0, "ratio {r}");
+    }
+
+    #[test]
+    fn overlapping_match_roundtrips() {
+        // run-length via self-overlapping match (offset 1, long length)
+        let data = vec![7u8; 1000];
+        let lz = Lzss::default();
+        let comp = lz.compress(&data);
+        assert!(comp.len() < 40, "compressed {}", comp.len());
+        assert_eq!(lz.decompress(&comp, 1000).unwrap(), data);
+    }
+
+    #[test]
+    fn incompressible_expansion_bounded() {
+        let mut rng = Rng::new(8);
+        let mut data = vec![0u8; 1 << 14];
+        rng.fill_bytes(&mut data);
+        let lz = Lzss::default();
+        let comp = lz.compress(&data);
+        assert!((comp.len() as f64) < data.len() as f64 * 1.14);
+        assert_eq!(lz.decompress(&comp, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn fuzz_structured_roundtrip() {
+        let mut rng = Rng::new(9);
+        let lz = Lzss::default();
+        for _ in 0..60 {
+            let len = rng.below(4096) as usize;
+            let mut data = Vec::with_capacity(len);
+            while data.len() < len {
+                if rng.chance(0.3) || data.is_empty() {
+                    data.push(rng.next_u32() as u8);
+                } else {
+                    // copy an earlier slice (creates matches)
+                    let start = rng.below(data.len() as u64) as usize;
+                    let n = (rng.below(40) as usize + 1).min(data.len() - start).min(len - data.len());
+                    let copied: Vec<u8> = data[start..start + n].to_vec();
+                    data.extend(copied);
+                }
+            }
+            let comp = lz.compress(&data);
+            assert_eq!(lz.decompress(&comp, data.len()).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn corrupt_offset_detected() {
+        // handcraft: match token with offset beyond history
+        let mut w = BitWriter::new();
+        w.put_bit(true);
+        w.put(100, 15); // offset 101 with empty history
+        w.put(0, 8);
+        let bytes = w.finish();
+        assert!(Lzss::default().decompress(&bytes, 10).is_err());
+    }
+}

@@ -1,0 +1,202 @@
+//! Baseline compressors the paper discusses (§1.1) and compares against:
+//! BDI (the algorithm GBDI extends), FPC, LZ (LZSS), Huffman coding, and
+//! gzip/zstd as the general-purpose comparators. All are lossless and
+//! roundtrip-tested; all implement [`Codec`] so the benches can sweep them
+//! uniformly.
+
+pub mod bdi;
+pub mod external;
+pub mod fpc;
+pub mod huffman;
+pub mod lzss;
+
+use crate::Result;
+
+/// A whole-image lossless codec.
+pub trait Codec: Send + Sync {
+    /// Short identifier used in reports (e.g. `"bdi"`).
+    fn name(&self) -> &'static str;
+    /// Compress `data` into a self-contained byte stream.
+    fn compress(&self, data: &[u8]) -> Vec<u8>;
+    /// Reconstruct the original `original_len` bytes.
+    fn decompress(&self, comp: &[u8], original_len: usize) -> Result<Vec<u8>>;
+}
+
+/// Compression ratio (original/compressed) of a codec on `data`.
+pub fn ratio_of(codec: &dyn Codec, data: &[u8]) -> f64 {
+    if data.is_empty() {
+        return 1.0;
+    }
+    let comp = codec.compress(data);
+    data.len() as f64 / comp.len().max(1) as f64
+}
+
+/// GBDI wrapped as a self-contained [`Codec`]: runs background analysis on
+/// the image itself, then embeds the serialized table, framing, and payload
+/// in one buffer. This is what the baseline benches sweep so every codec
+/// pays for its own metadata.
+pub struct GbdiWholeImage {
+    /// Codec configuration for analysis + encoding.
+    pub config: crate::gbdi::GbdiConfig,
+}
+
+impl Default for GbdiWholeImage {
+    fn default() -> Self {
+        GbdiWholeImage { config: crate::gbdi::GbdiConfig::default() }
+    }
+}
+
+impl GbdiWholeImage {
+    /// Original length recorded in a compressed container (so the CLI can
+    /// decompress without out-of-band metadata).
+    pub fn container_len(comp: &[u8]) -> Result<usize> {
+        let (_, off) = crate::gbdi::GlobalBaseTable::deserialize(comp)?;
+        if comp.len() < off + 8 {
+            return Err(crate::Error::Corrupt("truncated gbdi container".into()));
+        }
+        Ok(u64::from_le_bytes(comp[off..off + 8].try_into().unwrap()) as usize)
+    }
+}
+
+impl Codec for GbdiWholeImage {
+    fn name(&self) -> &'static str {
+        "gbdi"
+    }
+
+    fn compress(&self, data: &[u8]) -> Vec<u8> {
+        let table = crate::gbdi::analyze::analyze_image(data, &self.config);
+        let codec = crate::gbdi::GbdiCodec::new(table, self.config.clone());
+        let comp = codec.compress_image(data);
+        // container: table | u64 original_len | u32 n_blocks | u16 block_bits... | payload
+        let mut out = comp.table.serialize();
+        out.extend_from_slice(&(comp.original_len as u64).to_le_bytes());
+        out.extend_from_slice(&(comp.block_bits.len() as u32).to_le_bytes());
+        // 16-bit per-block bit lengths: default 64 B blocks are ≤ 514 bits.
+        for &b in &comp.block_bits {
+            out.extend_from_slice(&(b as u16).to_le_bytes());
+        }
+        out.extend_from_slice(&comp.payload);
+        out
+    }
+
+    fn decompress(&self, comp: &[u8], original_len: usize) -> Result<Vec<u8>> {
+        use crate::Error;
+        let (table, mut off) = crate::gbdi::GlobalBaseTable::deserialize(comp)?;
+        let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+            if *off + n > comp.len() {
+                return Err(Error::Corrupt("truncated gbdi container".into()));
+            }
+            let s = &comp[*off..*off + n];
+            *off += n;
+            Ok(s)
+        };
+        let stored_len = u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap()) as usize;
+        if stored_len != original_len {
+            return Err(Error::Corrupt(format!(
+                "length mismatch: container says {stored_len}, caller says {original_len}"
+            )));
+        }
+        let n_blocks = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize;
+        let mut block_bits = Vec::with_capacity(n_blocks);
+        for _ in 0..n_blocks {
+            block_bits.push(u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap()) as u32);
+        }
+        let image = crate::gbdi::CompressedImage {
+            table,
+            original_len,
+            block_bits,
+            payload: comp[off..].to_vec(),
+            chunk_blocks: 0,
+            config: self.config.clone(),
+        };
+        crate::gbdi::decode::decompress_image(&image)
+    }
+}
+
+/// All codecs the E3 baseline table sweeps, in report order.
+pub fn all_codecs() -> Vec<Box<dyn Codec>> {
+    vec![
+        Box::new(GbdiWholeImage::default()),
+        Box::new(bdi::Bdi::default()),
+        Box::new(fpc::Fpc),
+        Box::new(lzss::Lzss::default()),
+        Box::new(huffman::Huffman),
+        Box::new(external::Gzip::default()),
+        Box::new(external::Zstd::default()),
+    ]
+}
+
+#[cfg(test)]
+pub(crate) mod testsupport {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    /// Shared roundtrip battery every codec must pass.
+    pub(crate) fn roundtrip_battery(codec: &dyn Codec) {
+        let mut rng = Rng::new(0xBA77E12);
+        let cases: Vec<Vec<u8>> = vec![
+            vec![],
+            vec![0u8; 1],
+            vec![0u8; 4096],
+            vec![0xAB; 777],
+            (0..=255u8).cycle().take(2048).collect(),
+            {
+                let mut v = vec![0u8; 8192];
+                rng.fill_bytes(&mut v);
+                v
+            },
+            {
+                // clustered words
+                let mut v = Vec::new();
+                for _ in 0..1024 {
+                    let base: u32 = if rng.chance(0.5) { 0x1000_0000 } else { 0x7FFF_0000 };
+                    v.extend_from_slice(&(base + rng.below(256) as u32).to_le_bytes());
+                }
+                v
+            },
+            vec![1, 2, 3], // ragged
+        ];
+        for (i, case) in cases.iter().enumerate() {
+            let comp = codec.compress(case);
+            let back = codec
+                .decompress(&comp, case.len())
+                .unwrap_or_else(|e| panic!("{}: case {i} failed to decompress: {e}", codec.name()));
+            assert_eq!(&back, case, "{}: case {i} roundtrip", codec.name());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testsupport::roundtrip_battery;
+    use super::*;
+
+    #[test]
+    fn gbdi_whole_image_roundtrips() {
+        roundtrip_battery(&GbdiWholeImage::default());
+    }
+
+    #[test]
+    fn gbdi_whole_image_detects_corruption() {
+        let c = GbdiWholeImage::default();
+        let data = vec![7u8; 4096];
+        let comp = c.compress(&data);
+        assert!(c.decompress(&comp[..10], 4096).is_err());
+        assert!(c.decompress(&comp, 4095).is_err());
+    }
+
+    #[test]
+    fn all_codecs_present() {
+        let names: Vec<&str> = all_codecs().iter().map(|c| c.name()).collect();
+        assert_eq!(names, vec!["gbdi", "bdi", "fpc", "lzss", "huffman", "gzip", "zstd"]);
+    }
+
+    #[test]
+    fn ratio_of_compressible_data() {
+        let zeros = vec![0u8; 1 << 16];
+        for codec in all_codecs() {
+            let r = ratio_of(codec.as_ref(), &zeros);
+            assert!(r > 3.0, "{} ratio on zeros = {r}", codec.name());
+        }
+    }
+}

@@ -1,0 +1,345 @@
+//! Declarative command-line parsing (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with defaults, positional arguments, and generated `--help` text.
+//!
+//! ```
+//! use gbdi::cli::{App, Arg};
+//! let app = App::new("demo", "demo tool")
+//!     .arg(Arg::opt("size", "64", "image size in MiB"))
+//!     .arg(Arg::flag("verbose", "chatty output"));
+//! let m = app.parse_from(vec!["--size".into(), "128".into()]).unwrap();
+//! assert_eq!(m.get_u64("size"), 128);
+//! assert!(!m.get_flag("verbose"));
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Argument specification.
+#[derive(Debug, Clone)]
+pub struct Arg {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+    positional: bool,
+    required: bool,
+}
+
+impl Arg {
+    /// `--name <value>` option with a default.
+    pub fn opt(name: &str, default: &str, help: &str) -> Self {
+        Arg {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_flag: false,
+            positional: false,
+            required: false,
+        }
+    }
+
+    /// `--name <value>` option that must be provided.
+    pub fn req(name: &str, help: &str) -> Self {
+        Arg {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: false,
+            positional: false,
+            required: true,
+        }
+    }
+
+    /// Boolean `--name` flag.
+    pub fn flag(name: &str, help: &str) -> Self {
+        Arg {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: true,
+            positional: false,
+            required: false,
+        }
+    }
+
+    /// Required positional argument.
+    pub fn pos(name: &str, help: &str) -> Self {
+        Arg {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: false,
+            positional: true,
+            required: true,
+        }
+    }
+}
+
+/// Parsed matches.
+#[derive(Debug, Default)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+}
+
+impl Matches {
+    /// String value of an option/positional (panics if undeclared).
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("argument '{name}' not declared or missing"))
+    }
+
+    /// Optional string value.
+    pub fn try_get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Value parsed as u64 (accepts `_` separators and `k/m/g` suffixes).
+    pub fn get_u64(&self, name: &str) -> u64 {
+        parse_u64(self.get(name)).unwrap_or_else(|e| panic!("--{name}: {e}"))
+    }
+
+    /// Value parsed as usize.
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get_u64(name) as usize
+    }
+
+    /// Value parsed as f64.
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name}: expected float"))
+    }
+
+    /// Whether a flag was passed.
+    pub fn get_flag(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or(&false)
+    }
+}
+
+/// Parse `123`, `4_096`, `64k`, `16m`, `2g` into a u64.
+pub fn parse_u64(s: &str) -> Result<u64, String> {
+    let s = s.trim().to_ascii_lowercase().replace('_', "");
+    let (num, mult) = match s.chars().last() {
+        Some('k') => (&s[..s.len() - 1], 1u64 << 10),
+        Some('m') => (&s[..s.len() - 1], 1u64 << 20),
+        Some('g') => (&s[..s.len() - 1], 1u64 << 30),
+        _ => (s.as_str(), 1),
+    };
+    num.parse::<u64>().map(|v| v * mult).map_err(|_| format!("'{s}' is not an integer"))
+}
+
+/// A (sub)command: args + help.
+pub struct App {
+    name: String,
+    about: String,
+    args: Vec<Arg>,
+    subcommands: Vec<App>,
+}
+
+/// Result of parsing an [`App`] with subcommands.
+pub struct Parsed {
+    /// Subcommand name (empty if the root matched).
+    pub command: String,
+    /// Matches for the selected (sub)command.
+    pub matches: Matches,
+}
+
+impl App {
+    /// New app/subcommand.
+    pub fn new(name: &str, about: &str) -> Self {
+        App { name: name.into(), about: about.into(), args: Vec::new(), subcommands: Vec::new() }
+    }
+
+    /// Declare an argument.
+    pub fn arg(mut self, a: Arg) -> Self {
+        self.args.push(a);
+        self
+    }
+
+    /// Declare a subcommand.
+    pub fn subcommand(mut self, s: App) -> Self {
+        self.subcommands.push(s);
+        self
+    }
+
+    /// Render help text.
+    pub fn help(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {} ", self.name, self.about, self.name);
+        if !self.subcommands.is_empty() {
+            out.push_str("<COMMAND> ");
+        }
+        for a in &self.args {
+            if a.positional {
+                out.push_str(&format!("<{}> ", a.name));
+            }
+        }
+        out.push_str("[OPTIONS]\n");
+        if !self.subcommands.is_empty() {
+            out.push_str("\nCOMMANDS:\n");
+            for s in &self.subcommands {
+                out.push_str(&format!("  {:<18} {}\n", s.name, s.about));
+            }
+        }
+        if !self.args.is_empty() {
+            out.push_str("\nOPTIONS:\n");
+            for a in &self.args {
+                let lhs = if a.positional {
+                    format!("<{}>", a.name)
+                } else if a.is_flag {
+                    format!("--{}", a.name)
+                } else {
+                    format!("--{} <v>", a.name)
+                };
+                let def = a.default.as_ref().map(|d| format!(" [default: {d}]")).unwrap_or_default();
+                out.push_str(&format!("  {:<22} {}{}\n", lhs, a.help, def));
+            }
+        }
+        out
+    }
+
+    /// Parse raw args (without argv[0]). Returns Err(help/usage message) on
+    /// problems or `--help`.
+    pub fn parse_from(&self, argv: Vec<String>) -> Result<Matches, String> {
+        let mut m = Matches::default();
+        for a in &self.args {
+            if let Some(d) = &a.default {
+                m.values.insert(a.name.clone(), d.clone());
+            }
+            if a.is_flag {
+                m.flags.insert(a.name.clone(), false);
+            }
+        }
+        let mut positionals: Vec<&Arg> = self.args.iter().filter(|a| a.positional).collect();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.help());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .args
+                    .iter()
+                    .find(|a| a.name == key && !a.positional)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.help()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    m.flags.insert(key, true);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("option --{key} needs a value"))?,
+                    };
+                    m.values.insert(key, v);
+                }
+            } else {
+                let spec = if positionals.is_empty() {
+                    return Err(format!("unexpected argument '{tok}'\n\n{}", self.help()));
+                } else {
+                    positionals.remove(0)
+                };
+                m.values.insert(spec.name.clone(), tok);
+            }
+        }
+        for a in &self.args {
+            if a.required && !m.values.contains_key(&a.name) {
+                return Err(format!("missing required argument '{}'\n\n{}", a.name, self.help()));
+            }
+        }
+        Ok(m)
+    }
+
+    /// Parse with subcommand dispatch. First non-flag token selects the
+    /// subcommand; remaining tokens are parsed against it.
+    pub fn parse_subcommands(&self, mut argv: Vec<String>) -> Result<Parsed, String> {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+            return Err(self.help());
+        }
+        let cmd = argv.remove(0);
+        let sub = self
+            .subcommands
+            .iter()
+            .find(|s| s.name == cmd)
+            .ok_or_else(|| format!("unknown command '{cmd}'\n\n{}", self.help()))?;
+        let matches = sub.parse_from(argv)?;
+        Ok(Parsed { command: cmd, matches })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> App {
+        App::new("demo", "test app")
+            .arg(Arg::opt("size", "64", "size"))
+            .arg(Arg::flag("verbose", "chatty"))
+            .arg(Arg::req("out", "output path"))
+            .arg(Arg::pos("input", "input path"))
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let m = demo().parse_from(sv(&["in.bin", "--out", "o.bin"])).unwrap();
+        assert_eq!(m.get_u64("size"), 64);
+        assert_eq!(m.get("input"), "in.bin");
+        assert_eq!(m.get("out"), "o.bin");
+        assert!(!m.get_flag("verbose"));
+        let m = demo()
+            .parse_from(sv(&["--size=128", "--verbose", "in.bin", "--out", "o"]))
+            .unwrap();
+        assert_eq!(m.get_u64("size"), 128);
+        assert!(m.get_flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let e = demo().parse_from(sv(&["in.bin"])).unwrap_err();
+        assert!(e.contains("missing required"), "{e}");
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let e = demo().parse_from(sv(&["--bogus", "1", "in", "--out", "o"])).unwrap_err();
+        assert!(e.contains("unknown option"), "{e}");
+    }
+
+    #[test]
+    fn help_requested() {
+        let e = demo().parse_from(sv(&["--help"])).unwrap_err();
+        assert!(e.contains("USAGE"), "{e}");
+    }
+
+    #[test]
+    fn suffix_parsing() {
+        assert_eq!(parse_u64("64k").unwrap(), 64 << 10);
+        assert_eq!(parse_u64("16M").unwrap(), 16 << 20);
+        assert_eq!(parse_u64("2g").unwrap(), 2 << 30);
+        assert_eq!(parse_u64("4_096").unwrap(), 4096);
+        assert!(parse_u64("abc").is_err());
+    }
+
+    #[test]
+    fn subcommand_dispatch() {
+        let app = App::new("tool", "root")
+            .subcommand(App::new("gen", "generate").arg(Arg::opt("n", "1", "count")))
+            .subcommand(App::new("run", "run"));
+        let p = app.parse_subcommands(sv(&["gen", "--n", "5"])).unwrap();
+        assert_eq!(p.command, "gen");
+        assert_eq!(p.matches.get_u64("n"), 5);
+        assert!(app.parse_subcommands(sv(&["nope"])).is_err());
+        assert!(app.parse_subcommands(vec![]).is_err());
+    }
+}

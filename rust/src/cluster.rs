@@ -1,0 +1,408 @@
+//! K-means clustering over memory word values — GBDI's "background data
+//! analysis" step that establishes the global bases.
+//!
+//! Two assignment metrics are provided:
+//!
+//! * [`Metric::Euclidean`] — textbook Lloyd's k-means (the paper's
+//!   "unmodified Kmeans" ablation arm).
+//! * [`Metric::BitCost`] — GBDI's *modified* k-means: the distance between
+//!   a value and a candidate base is the **encoded size** of their delta
+//!   (the smallest width class that can hold it; outliers cost a full
+//!   word). This directly optimizes what the codec pays per value.
+//!
+//! This module is the pure-Rust reference/fallback; the production path
+//! runs the same algorithm as an AOT-compiled JAX/Pallas artifact through
+//! [`crate::runtime`] (see `python/compile/`), with this implementation as
+//! the correctness oracle and the ablation baseline.
+
+use crate::util::bits::signed_width;
+use crate::util::prng::Rng;
+use crate::value::WordSize;
+
+/// Assignment metric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    /// |v - c| (the paper's unmodified k-means arm).
+    Euclidean,
+    /// Encoded bits of the delta under the codec's width classes
+    /// (the paper's modified k-means).
+    BitCost,
+}
+
+/// Clustering configuration.
+#[derive(Debug, Clone)]
+pub struct KmeansConfig {
+    /// Number of clusters (global bases to find).
+    pub k: usize,
+    /// Maximum Lloyd iterations.
+    pub iters: usize,
+    /// Assignment metric.
+    pub metric: Metric,
+    /// Sorted delta width classes (bits) used by [`Metric::BitCost`];
+    /// must match the codec's [`crate::gbdi::GbdiConfig::width_classes`].
+    pub width_classes: Vec<u32>,
+    /// Word granularity (wrapping-delta semantics).
+    pub word_size: WordSize,
+    /// PRNG seed (k-means++ init).
+    pub seed: u64,
+}
+
+impl Default for KmeansConfig {
+    fn default() -> Self {
+        KmeansConfig {
+            k: 64,
+            iters: 16,
+            metric: Metric::BitCost,
+            width_classes: vec![0, 4, 8, 12, 16, 20, 24],
+            word_size: WordSize::W32,
+            seed: 0x6BD1_5EED,
+        }
+    }
+}
+
+/// Clustering output.
+#[derive(Debug, Clone)]
+pub struct KmeansResult {
+    /// Final centroids (cluster means snapped to word values), sorted
+    /// ascending. Length <= k (duplicate/empty centers are dropped).
+    pub centroids: Vec<u64>,
+    /// Samples assigned to each centroid in the final assignment.
+    pub counts: Vec<u64>,
+    /// Sum of final per-sample costs (metric units: bits for BitCost,
+    /// |delta| for Euclidean).
+    pub inertia: f64,
+    /// Iterations actually run (stops early on convergence).
+    pub iters_run: usize,
+}
+
+/// Wrapping signed delta `v - c` at word granularity: the delta the codec
+/// will store, sign-extended to i64. Reconstruction is exact under
+/// wrapping addition at the same width.
+#[inline]
+pub fn wrapping_delta(v: u64, c: u64, ws: WordSize) -> i64 {
+    match ws {
+        WordSize::W32 => (v as u32).wrapping_sub(c as u32) as i32 as i64,
+        WordSize::W64 => v.wrapping_sub(c) as i64,
+    }
+}
+
+/// Inverse of [`wrapping_delta`]: reconstruct `v` from base and delta.
+#[inline]
+pub fn apply_delta(c: u64, d: i64, ws: WordSize) -> u64 {
+    match ws {
+        WordSize::W32 => (c as u32).wrapping_add(d as u32) as u64,
+        WordSize::W64 => c.wrapping_add(d as u64),
+    }
+}
+
+/// Smallest width class (from sorted `classes`) that can hold signed `d`
+/// in offset-binary, or `None` if `d` needs more bits than the largest
+/// class. Class 0 means exact match (d == 0).
+#[inline]
+pub fn fit_class(classes: &[u32], d: i64) -> Option<u32> {
+    let need = signed_width(d);
+    classes.iter().copied().find(|&c| c >= need)
+}
+
+/// Per-value cost of assigning `v` to base `c` under `metric`:
+/// * Euclidean — |delta| as f64.
+/// * BitCost — encoded delta bits, or `outlier_bits` when no class fits.
+#[inline]
+fn cost(v: u64, c: u64, metric: Metric, classes: &[u32], ws: WordSize, outlier_bits: u32) -> f64 {
+    let d = wrapping_delta(v, c, ws);
+    match metric {
+        Metric::Euclidean => (d as f64).abs(),
+        Metric::BitCost => match fit_class(classes, d) {
+            Some(w) => w as f64,
+            None => outlier_bits as f64,
+        },
+    }
+}
+
+/// k-means++ seeding: first center uniform, subsequent centers sampled
+/// proportionally to the current assignment cost.
+fn seed_centers(samples: &[u64], cfg: &KmeansConfig, rng: &mut Rng, outlier_bits: u32) -> Vec<u64> {
+    let mut centers = Vec::with_capacity(cfg.k);
+    centers.push(samples[rng.below(samples.len() as u64) as usize]);
+    let mut best_cost: Vec<f64> = samples
+        .iter()
+        .map(|&v| cost(v, centers[0], cfg.metric, &cfg.width_classes, cfg.word_size, outlier_bits))
+        .collect();
+    while centers.len() < cfg.k {
+        let total: f64 = best_cost.iter().sum();
+        let next = if total <= 0.0 {
+            // All samples already at zero cost: any extra center is moot;
+            // pick uniformly to keep K stable.
+            samples[rng.below(samples.len() as u64) as usize]
+        } else {
+            let mut x = rng.f64() * total;
+            let mut pick = samples.len() - 1;
+            for (i, &c) in best_cost.iter().enumerate() {
+                x -= c;
+                if x < 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            samples[pick]
+        };
+        centers.push(next);
+        for (bc, &v) in best_cost.iter_mut().zip(samples) {
+            let c = cost(v, next, cfg.metric, &cfg.width_classes, cfg.word_size, outlier_bits);
+            if c < *bc {
+                *bc = c;
+            }
+        }
+    }
+    centers
+}
+
+/// Run k-means over `samples` (word values). Deterministic for a given
+/// config. Empty or tiny inputs yield a degenerate (but valid) result.
+pub fn kmeans(samples: &[u64], cfg: &KmeansConfig) -> KmeansResult {
+    assert!(cfg.k >= 1, "k must be >= 1");
+    assert!(!cfg.width_classes.is_empty());
+    debug_assert!(cfg.width_classes.windows(2).all(|w| w[0] < w[1]), "classes sorted");
+    if samples.is_empty() {
+        return KmeansResult { centroids: vec![0], counts: vec![0], inertia: 0.0, iters_run: 0 };
+    }
+    let outlier_bits = cfg.word_size.bits() + 8;
+    let mut rng = Rng::new(cfg.seed);
+    let mut centers = seed_centers(samples, cfg, &mut rng, outlier_bits);
+    let mut assign = vec![0u32; samples.len()];
+    let mut iters_run = 0;
+    let mut inertia = 0.0;
+
+    for _iter in 0..cfg.iters {
+        iters_run += 1;
+        // --- assignment step ---
+        inertia = 0.0;
+        let mut changed = false;
+        for (i, &v) in samples.iter().enumerate() {
+            let mut best = 0u32;
+            let mut best_cost = f64::INFINITY;
+            let mut best_abs = i64::MAX;
+            for (j, &c) in centers.iter().enumerate() {
+                let cst = cost(v, c, cfg.metric, &cfg.width_classes, cfg.word_size, outlier_bits);
+                let abs = wrapping_delta(v, c, cfg.word_size).unsigned_abs() as i64;
+                if cst < best_cost || (cst == best_cost && abs < best_abs) {
+                    best_cost = cst;
+                    best_abs = abs;
+                    best = j as u32;
+                }
+            }
+            inertia += best_cost;
+            if assign[i] != best {
+                assign[i] = best;
+                changed = true;
+            }
+        }
+        if !changed && _iter > 0 {
+            break;
+        }
+        // --- update step: mean of assigned values ---
+        let mut sums = vec![0u128; centers.len()];
+        let mut counts = vec![0u64; centers.len()];
+        for (&v, &a) in samples.iter().zip(&assign) {
+            sums[a as usize] += v as u128;
+            counts[a as usize] += 1;
+        }
+        for j in 0..centers.len() {
+            if counts[j] > 0 {
+                centers[j] = (sums[j] / counts[j] as u128) as u64;
+            } else {
+                // Re-seed empty clusters on the sample with the worst cost.
+                let (worst, _) = samples
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &v)| {
+                        (i, cost(v, centers[assign[i] as usize], cfg.metric, &cfg.width_classes, cfg.word_size, outlier_bits))
+                    })
+                    .fold((0, f64::MIN), |acc, (i, c)| if c > acc.1 { (i, c) } else { acc });
+                centers[j] = samples[worst];
+            }
+        }
+    }
+
+    // Final pass: recount with the last centers, dedup, sort.
+    let mut counts = vec![0u64; centers.len()];
+    for &v in samples {
+        let mut best = 0usize;
+        let mut best_cost = f64::INFINITY;
+        for (j, &c) in centers.iter().enumerate() {
+            let cst = cost(v, c, cfg.metric, &cfg.width_classes, cfg.word_size, outlier_bits);
+            if cst < best_cost {
+                best_cost = cst;
+                best = j;
+            }
+        }
+        counts[best] += 1;
+    }
+    let mut pairs: Vec<(u64, u64)> = centers.into_iter().zip(counts).collect();
+    pairs.sort_unstable();
+    pairs.dedup_by(|a, b| {
+        if a.0 == b.0 {
+            b.1 += a.1; // merge duplicate centers' counts
+            true
+        } else {
+            false
+        }
+    });
+    let (centroids, counts): (Vec<u64>, Vec<u64>) = pairs.into_iter().unzip();
+    KmeansResult { centroids, counts, inertia, iters_run }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(k: usize, metric: Metric) -> KmeansConfig {
+        KmeansConfig { k, iters: 20, metric, seed: 42, ..Default::default() }
+    }
+
+    fn mixture(centers: &[u64], per: usize, spread: i64, seed: u64) -> Vec<u64> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::new();
+        for &c in centers {
+            for _ in 0..per {
+                out.push(apply_delta(c, rng.range_i64(-spread, spread), WordSize::W32));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn wrapping_delta_roundtrip_w32() {
+        let mut rng = Rng::new(1);
+        for _ in 0..5000 {
+            let v = rng.next_u32() as u64;
+            let c = rng.next_u32() as u64;
+            let d = wrapping_delta(v, c, WordSize::W32);
+            assert_eq!(apply_delta(c, d, WordSize::W32), v);
+            assert!(d.abs() <= 1 << 31);
+        }
+    }
+
+    #[test]
+    fn wrapping_delta_roundtrip_w64() {
+        let mut rng = Rng::new(2);
+        for _ in 0..5000 {
+            let v = rng.next_u64();
+            let c = rng.next_u64();
+            let d = wrapping_delta(v, c, WordSize::W64);
+            assert_eq!(apply_delta(c, d, WordSize::W64), v);
+        }
+    }
+
+    #[test]
+    fn fit_class_picks_smallest() {
+        let classes = [0u32, 4, 8, 16];
+        assert_eq!(fit_class(&classes, 0), Some(0));
+        assert_eq!(fit_class(&classes, 1), Some(4)); // needs 2 bits
+        assert_eq!(fit_class(&classes, 7), Some(4));
+        assert_eq!(fit_class(&classes, 8), Some(8));
+        assert_eq!(fit_class(&classes, -8), Some(4));
+        assert_eq!(fit_class(&classes, 127), Some(8));
+        assert_eq!(fit_class(&classes, 128), Some(16));
+        assert_eq!(fit_class(&classes, 40_000), None);
+    }
+
+    #[test]
+    fn recovers_well_separated_clusters() {
+        let true_centers = [10_000u64, 5_000_000, 3_000_000_000];
+        let samples = mixture(&true_centers, 500, 50, 3);
+        let r = kmeans(&samples, &cfg(3, Metric::Euclidean));
+        assert_eq!(r.centroids.len(), 3);
+        for (&found, &truth) in r.centroids.iter().zip(&true_centers) {
+            assert!(
+                (found as i64 - truth as i64).abs() < 100,
+                "found {found} vs true {truth}"
+            );
+        }
+        assert_eq!(r.counts.iter().sum::<u64>(), samples.len() as u64);
+    }
+
+    #[test]
+    fn bitcost_beats_euclidean_on_encoded_size() {
+        // Two tight clusters plus one broad cloud: BitCost should place
+        // bases to minimize delta bits, yielding lower bit inertia.
+        let mut samples = mixture(&[1 << 20, 1 << 28], 800, 100, 5);
+        let mut rng = Rng::new(6);
+        for _ in 0..200 {
+            samples.push(rng.next_u32() as u64);
+        }
+        let bit = kmeans(&samples, &cfg(8, Metric::BitCost));
+        // Evaluate Euclidean result under the bit-cost metric.
+        let euc = kmeans(&samples, &cfg(8, Metric::Euclidean));
+        let classes = [0u32, 4, 8, 16, 24];
+        let eval = |centers: &[u64]| -> f64 {
+            samples
+                .iter()
+                .map(|&v| {
+                    centers
+                        .iter()
+                        .map(|&c| match fit_class(&classes, wrapping_delta(v, c, WordSize::W32)) {
+                            Some(w) => w as f64,
+                            None => 40.0,
+                        })
+                        .fold(f64::INFINITY, f64::min)
+                })
+                .sum()
+        };
+        let bit_bits = eval(&bit.centroids);
+        let euc_bits = eval(&euc.centroids);
+        assert!(
+            bit_bits <= euc_bits * 1.05,
+            "bit-cost clustering should not lose on encoded bits: {bit_bits} vs {euc_bits}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let samples = mixture(&[7777, 999_999], 200, 20, 9);
+        let a = kmeans(&samples, &cfg(4, Metric::BitCost));
+        let b = kmeans(&samples, &cfg(4, Metric::BitCost));
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.counts, b.counts);
+    }
+
+    #[test]
+    fn handles_degenerate_inputs() {
+        let r = kmeans(&[], &cfg(4, Metric::BitCost));
+        assert_eq!(r.centroids, vec![0]);
+        let r = kmeans(&[42], &cfg(4, Metric::BitCost));
+        assert!(r.centroids.contains(&42));
+        let same = vec![5u64; 100];
+        let r = kmeans(&same, &cfg(4, Metric::Euclidean));
+        assert!(r.centroids.contains(&5));
+        assert_eq!(r.counts.iter().sum::<u64>(), 100);
+    }
+
+    #[test]
+    fn k_larger_than_distinct_values() {
+        let samples = vec![1u64, 2, 1, 2, 1, 2];
+        let r = kmeans(&samples, &cfg(8, Metric::Euclidean));
+        assert!(r.centroids.len() <= 8);
+        assert!(!r.centroids.is_empty());
+    }
+
+    #[test]
+    fn centroids_sorted_unique() {
+        let samples = mixture(&[100, 1000, 10_000, 100_000], 100, 10, 13);
+        let r = kmeans(&samples, &cfg(16, Metric::BitCost));
+        assert!(r.centroids.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn inertia_decreases_with_more_bases() {
+        let samples = mixture(&[1 << 10, 1 << 16, 1 << 22, 1 << 28], 400, 1000, 21);
+        let small = kmeans(&samples, &cfg(2, Metric::BitCost));
+        let large = kmeans(&samples, &cfg(16, Metric::BitCost));
+        assert!(
+            large.inertia <= small.inertia,
+            "more bases should not increase inertia: {} vs {}",
+            large.inertia,
+            small.inertia
+        );
+    }
+}

@@ -1,0 +1,280 @@
+//! Configuration files for the service and codec (a TOML-subset parser —
+//! serde/toml are unavailable offline, and the deployment story needs a
+//! real config system, not only CLI flags).
+//!
+//! Supported syntax: `[section]` headers, `key = value` pairs with
+//! integers (incl. `0x` hex and `k/m/g` suffixes), floats, booleans,
+//! quoted strings, and `[a, b, c]` integer arrays; `#` comments.
+//!
+//! ```text
+//! # gbdi.toml
+//! [codec]
+//! block_bytes = 64
+//! word_size = 32
+//! num_bases = 64
+//! width_classes = [0, 4, 8, 12, 16, 20, 24]
+//! delta_quantile = 0.95
+//!
+//! [service]
+//! workers = 4
+//! analyze_every = 256
+//! sample_words = 8192
+//! ```
+
+use crate::cli::parse_u64;
+use crate::coordinator::ServiceConfig;
+use crate::gbdi::GbdiConfig;
+use crate::value::WordSize;
+use std::collections::BTreeMap;
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Integer (accepts hex / size suffixes in the source).
+    Int(u64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Quoted string.
+    Str(String),
+    /// Integer array.
+    IntArray(Vec<u64>),
+}
+
+/// Parsed file: section -> key -> value.
+#[derive(Debug, Default, Clone)]
+pub struct ConfigFile {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl ConfigFile {
+    /// Parse config text; returns line-numbered errors.
+    pub fn parse(text: &str) -> Result<ConfigFile, String> {
+        let mut cfg = ConfigFile::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                Some(i) => &raw[..i],
+                None => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected `key = value`", lineno + 1))?;
+            let value = Self::parse_value(value.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    fn parse_value(s: &str) -> Result<Value, String> {
+        if s == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if s == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if let Some(body) = s.strip_prefix('"') {
+            let body = body.strip_suffix('"').ok_or("unterminated string")?;
+            return Ok(Value::Str(body.to_string()));
+        }
+        if let Some(body) = s.strip_prefix('[') {
+            let body = body.strip_suffix(']').ok_or("unterminated array")?;
+            let mut out = Vec::new();
+            for part in body.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                out.push(Self::parse_int(part)?);
+            }
+            return Ok(Value::IntArray(out));
+        }
+        if s.contains('.') || s.contains('e') || s.contains('E') {
+            if let Ok(f) = s.parse::<f64>() {
+                return Ok(Value::Float(f));
+            }
+        }
+        Self::parse_int(s).map(Value::Int)
+    }
+
+    fn parse_int(s: &str) -> Result<u64, String> {
+        if let Some(hex) = s.strip_prefix("0x") {
+            return u64::from_str_radix(&hex.replace('_', ""), 16)
+                .map_err(|_| format!("bad hex '{s}'"));
+        }
+        parse_u64(s)
+    }
+
+    /// Look up `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    fn get_u64(&self, section: &str, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(Value::Int(v)) => Ok(*v),
+            Some(v) => Err(format!("{section}.{key}: expected integer, got {v:?}")),
+        }
+    }
+
+    fn get_f64(&self, section: &str, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(Value::Float(v)) => Ok(*v),
+            Some(Value::Int(v)) => Ok(*v as f64),
+            Some(v) => Err(format!("{section}.{key}: expected float, got {v:?}")),
+        }
+    }
+
+    /// Build a [`GbdiConfig`] from the `[codec]` section (missing keys
+    /// keep their defaults); validates the result.
+    pub fn codec_config(&self) -> Result<GbdiConfig, String> {
+        let d = GbdiConfig::default();
+        let word_size = match self.get_u64("codec", "word_size", d.word_size.bits() as u64)? {
+            32 => WordSize::W32,
+            64 => WordSize::W64,
+            v => return Err(format!("codec.word_size: {v} not 32/64")),
+        };
+        let width_classes = match self.get("codec", "width_classes") {
+            None => d.width_classes.clone(),
+            Some(Value::IntArray(v)) => v.iter().map(|&x| x as u32).collect(),
+            Some(v) => return Err(format!("codec.width_classes: expected array, got {v:?}")),
+        };
+        let cfg = GbdiConfig {
+            block_bytes: self.get_u64("codec", "block_bytes", d.block_bytes as u64)? as usize,
+            word_size,
+            num_bases: self.get_u64("codec", "num_bases", d.num_bases as u64)? as usize,
+            width_classes,
+            analysis_samples: self
+                .get_u64("codec", "analysis_samples", d.analysis_samples as u64)?
+                as usize,
+            analysis_iters: self.get_u64("codec", "analysis_iters", d.analysis_iters as u64)?
+                as usize,
+            delta_quantile: self.get_f64("codec", "delta_quantile", d.delta_quantile)?,
+            seed: self.get_u64("codec", "seed", d.seed)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Build a [`ServiceConfig`] from `[service]` (+ the `[codec]`
+    /// section for the embedded codec config).
+    pub fn service_config(&self) -> Result<ServiceConfig, String> {
+        let d = ServiceConfig::default();
+        Ok(ServiceConfig {
+            codec: self.codec_config()?,
+            workers: self.get_u64("service", "workers", d.workers as u64)? as usize,
+            analyze_every: self.get_u64("service", "analyze_every", d.analyze_every)?,
+            sample_words: self.get_u64("service", "sample_words", d.sample_words as u64)? as usize,
+            recompress_batch: self
+                .get_u64("service", "recompress_batch", d.recompress_batch as u64)?
+                as usize,
+        })
+    }
+
+    /// Load + parse a file.
+    pub fn load(path: &str) -> Result<ConfigFile, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# comment
+[codec]
+block_bytes = 128          # inline comment
+word_size = 32
+num_bases = 32
+width_classes = [0, 8, 16]
+delta_quantile = 0.9
+seed = 0xDEAD_BEEF
+
+[service]
+workers = 8
+analyze_every = 1k
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let cfg = ConfigFile::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.get("codec", "block_bytes"), Some(&Value::Int(128)));
+        assert_eq!(cfg.get("codec", "delta_quantile"), Some(&Value::Float(0.9)));
+        assert_eq!(cfg.get("codec", "seed"), Some(&Value::Int(0xDEAD_BEEF)));
+        assert_eq!(
+            cfg.get("codec", "width_classes"),
+            Some(&Value::IntArray(vec![0, 8, 16]))
+        );
+        assert_eq!(cfg.get("service", "analyze_every"), Some(&Value::Int(1024)));
+        assert_eq!(cfg.get("nope", "x"), None);
+    }
+
+    #[test]
+    fn builds_codec_config() {
+        let cfg = ConfigFile::parse(SAMPLE).unwrap().codec_config().unwrap();
+        assert_eq!(cfg.block_bytes, 128);
+        assert_eq!(cfg.num_bases, 32);
+        assert_eq!(cfg.width_classes, vec![0, 8, 16]);
+        assert!((cfg.delta_quantile - 0.9).abs() < 1e-12);
+        // unspecified keys keep defaults
+        assert_eq!(cfg.analysis_samples, GbdiConfig::default().analysis_samples);
+    }
+
+    #[test]
+    fn builds_service_config() {
+        let cfg = ConfigFile::parse(SAMPLE).unwrap().service_config().unwrap();
+        assert_eq!(cfg.workers, 8);
+        assert_eq!(cfg.analyze_every, 1024);
+        assert_eq!(cfg.codec.block_bytes, 128);
+    }
+
+    #[test]
+    fn empty_file_gives_defaults() {
+        let cfg = ConfigFile::parse("").unwrap();
+        assert_eq!(cfg.codec_config().unwrap(), GbdiConfig::default());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(ConfigFile::parse("[unterminated").is_err());
+        assert!(ConfigFile::parse("keynovalue").is_err());
+        assert!(ConfigFile::parse("[s]\nx = \"open").is_err());
+        assert!(ConfigFile::parse("[s]\nx = [1, 2").is_err());
+        // bad semantic values
+        let c = ConfigFile::parse("[codec]\nword_size = 16").unwrap();
+        assert!(c.codec_config().is_err());
+        let c = ConfigFile::parse("[codec]\nblock_bytes = 30").unwrap();
+        assert!(c.codec_config().is_err(), "validation runs");
+        let c = ConfigFile::parse("[codec]\nnum_bases = 0.5").unwrap();
+        assert!(c.codec_config().is_err());
+    }
+
+    #[test]
+    fn strings_and_bools() {
+        let c = ConfigFile::parse("[x]\na = true\nb = false\nc = \"hi\"").unwrap();
+        assert_eq!(c.get("x", "a"), Some(&Value::Bool(true)));
+        assert_eq!(c.get("x", "b"), Some(&Value::Bool(false)));
+        assert_eq!(c.get("x", "c"), Some(&Value::Str("hi".into())));
+    }
+}

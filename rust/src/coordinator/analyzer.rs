@@ -1,0 +1,245 @@
+//! Background analyzer: turns sampled traffic into candidate global base
+//! tables, scores them against the incumbent, and decides swaps.
+//!
+//! The clustering itself runs on one of two backends:
+//!
+//! * [`AnalyzerBackend::Artifact`] — the AOT-compiled JAX/Pallas k-means
+//!   through PJRT ([`crate::runtime::ArtifactRuntime`]); the production
+//!   configuration.
+//! * [`AnalyzerBackend::Native`] — the pure-Rust `cluster::kmeans`
+//!   (fallback when `artifacts/` is absent, and the ablation arm).
+//!
+//! Either way the back half is shared: centroids → width-class fitting →
+//! [`GlobalBaseTable`] (see `gbdi::analyze::table_from_centroids`), and a
+//! candidate only replaces the incumbent if it shrinks the estimated
+//! encoded size of the current sample by at least `swap_margin`.
+
+use crate::cluster::{kmeans, KmeansConfig, Metric};
+use crate::gbdi::analyze::table_from_centroids;
+use crate::gbdi::table::GlobalBaseTable;
+use crate::gbdi::GbdiConfig;
+use crate::runtime::{shape_samples, ArtifactRuntime, KMEANS_KS, N_SAMPLES};
+use crate::util::prng::Rng;
+use crate::Result;
+use std::sync::Arc;
+
+/// Which engine runs the clustering.
+pub enum AnalyzerBackend {
+    /// AOT JAX/Pallas artifact via PJRT.
+    Artifact(Arc<ArtifactRuntime>),
+    /// Pure-Rust k-means.
+    Native,
+}
+
+impl AnalyzerBackend {
+    /// Human-readable backend name (for logs/metrics).
+    pub fn name(&self) -> &'static str {
+        match self {
+            AnalyzerBackend::Artifact(_) => "artifact(pjrt)",
+            AnalyzerBackend::Native => "native(rust)",
+        }
+    }
+}
+
+/// The analyzer: owns the backend and the scoring policy.
+pub struct Analyzer {
+    backend: AnalyzerBackend,
+    config: GbdiConfig,
+    /// A candidate must beat the incumbent's estimated bits by this
+    /// factor to be swapped in (hysteresis against churn).
+    pub swap_margin: f64,
+    rng: Rng,
+}
+
+impl Analyzer {
+    /// New analyzer. `config.num_bases` selects the artifact K (rounded
+    /// down to an available artifact when using the PJRT backend).
+    pub fn new(backend: AnalyzerBackend, config: GbdiConfig) -> Self {
+        let seed = config.seed;
+        Analyzer { backend, config, swap_margin: 0.98, rng: Rng::new(seed) }
+    }
+
+    /// The codec config this analyzer builds tables for.
+    pub fn config(&self) -> &GbdiConfig {
+        &self.config
+    }
+
+    /// Seed `k` initial centroids from the sample (cheap k-means++-lite:
+    /// random distinct picks plus the zero base's neighbourhood) — the
+    /// contract the kmeans artifact expects.
+    fn seed_init(&mut self, samples: &[u64], k: usize) -> Vec<f32> {
+        let mut init = Vec::with_capacity(k);
+        if samples.is_empty() {
+            return vec![0.0; k];
+        }
+        for _ in 0..k {
+            init.push(samples[self.rng.below(samples.len() as u64) as usize] as f32);
+        }
+        init
+    }
+
+    /// Run one analysis over `samples` (word values), producing a table
+    /// at `version`.
+    pub fn analyze(&mut self, samples: &[u64], version: u64) -> Result<GlobalBaseTable> {
+        let k = self.config.num_bases.saturating_sub(1).max(1);
+        // clone the Arc up front so the backend borrow does not pin `self`
+        let artifact_rt = match &self.backend {
+            AnalyzerBackend::Artifact(rt) => Some(Arc::clone(rt)),
+            AnalyzerBackend::Native => None,
+        };
+        let centroids: Vec<u64> = match artifact_rt {
+            Some(rt) => {
+                // choose the largest available artifact K that fits
+                let ak = *KMEANS_KS
+                    .iter()
+                    .filter(|&&a| a <= k.max(KMEANS_KS[0]))
+                    .max()
+                    .unwrap_or(&KMEANS_KS[0]);
+                let x = shape_samples(samples);
+                debug_assert_eq!(x.len(), N_SAMPLES);
+                let init = self.seed_init(samples, ak);
+                let fit = rt.kmeans(&x, &init)?;
+                fit.centroids
+                    .iter()
+                    .zip(&fit.counts)
+                    .filter(|&(_, &n)| n > 0.0)
+                    .map(|(&c, _)| snap_word(c, &self.config))
+                    .collect()
+            }
+            None => {
+                let kcfg = KmeansConfig {
+                    k,
+                    iters: self.config.analysis_iters,
+                    metric: Metric::BitCost,
+                    width_classes: self.config.width_classes.clone(),
+                    word_size: self.config.word_size,
+                    seed: self.config.seed,
+                };
+                kmeans(samples, &kcfg).centroids
+            }
+        };
+        let centroids = if centroids.is_empty() { vec![0] } else { centroids };
+        Ok(table_from_centroids(samples, &centroids, &self.config, version))
+    }
+
+    /// Estimated encoded bits of `samples` under `table` (exact L3
+    /// arithmetic; the artifact `sizeest` kernel computes the same number
+    /// approximately on-TPU — used here when available as a cross-check).
+    pub fn estimate_bits(&self, samples: &[u64], table: &GlobalBaseTable) -> u64 {
+        let ptr_bits = self.config.base_ptr_bits() as u64;
+        let word_bits = self.config.word_size.bits() as u64;
+        samples
+            .iter()
+            .map(|&v| {
+                ptr_bits
+                    + match table.best_base(v) {
+                        Some((_, _, w)) => w as u64,
+                        None => word_bits,
+                    }
+            })
+            .sum()
+    }
+
+    /// Decide whether `candidate` should replace `incumbent` for traffic
+    /// that looks like `samples`.
+    pub fn should_swap(
+        &self,
+        samples: &[u64],
+        incumbent: &GlobalBaseTable,
+        candidate: &GlobalBaseTable,
+    ) -> bool {
+        if samples.is_empty() {
+            return false;
+        }
+        let old = self.estimate_bits(samples, incumbent);
+        let new = self.estimate_bits(samples, candidate);
+        (new as f64) < (old as f64) * self.swap_margin
+    }
+
+    /// Backend name (diagnostics).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+}
+
+/// Snap an f32 centroid back to an exact word value (clamped to the word
+/// range) — the precision hand-off from the f32 analysis plane to the
+/// exact codec (DESIGN.md §5).
+fn snap_word(c: f32, config: &GbdiConfig) -> u64 {
+    let max = match config.word_size {
+        crate::value::WordSize::W32 => u32::MAX as u64,
+        crate::value::WordSize::W64 => u64::MAX,
+    };
+    let c = c as f64;
+    if c <= 0.0 {
+        0
+    } else if c >= max as f64 {
+        max
+    } else {
+        c.round() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::apply_delta;
+    use crate::value::WordSize;
+
+    fn mixture(seed: u64) -> Vec<u64> {
+        let mut rng = Rng::new(seed);
+        (0..4096)
+            .map(|_| {
+                let c = [50_000u64, 9_000_000, 3_000_000_000][rng.below(3) as usize];
+                apply_delta(c, rng.range_i64(-100, 100), WordSize::W32)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn native_analysis_produces_good_table() {
+        let cfg = GbdiConfig { num_bases: 16, ..Default::default() };
+        let mut a = Analyzer::new(AnalyzerBackend::Native, cfg);
+        let samples = mixture(1);
+        let table = a.analyze(&samples, 3).unwrap();
+        assert_eq!(table.version, 3);
+        // estimated bits should be far below raw (32 bits/word + ptr)
+        let est = a.estimate_bits(&samples, &table);
+        assert!(
+            est < samples.len() as u64 * 20,
+            "est {est} vs raw {}",
+            samples.len() * 32
+        );
+    }
+
+    #[test]
+    fn swap_policy_prefers_better_tables() {
+        let cfg = GbdiConfig { num_bases: 16, ..Default::default() };
+        let mut a = Analyzer::new(AnalyzerBackend::Native, cfg.clone());
+        let samples = mixture(2);
+        let good = a.analyze(&samples, 2).unwrap();
+        let bad = GlobalBaseTable::new(vec![(123, 4)], cfg.word_size, 1);
+        assert!(a.should_swap(&samples, &bad, &good));
+        assert!(!a.should_swap(&samples, &good, &bad));
+        // near-identical candidate loses to hysteresis
+        let again = a.analyze(&samples, 3).unwrap();
+        assert!(!a.should_swap(&samples, &good, &again));
+        assert!(!a.should_swap(&[], &good, &again));
+    }
+
+    #[test]
+    fn snap_word_clamps() {
+        let cfg = GbdiConfig::default();
+        assert_eq!(snap_word(-5.0, &cfg), 0);
+        assert_eq!(snap_word(5e12, &cfg), u32::MAX as u64);
+        assert_eq!(snap_word(1000.4, &cfg), 1000);
+    }
+
+    #[test]
+    fn empty_samples_yield_valid_table() {
+        let cfg = GbdiConfig { num_bases: 8, ..Default::default() };
+        let mut a = Analyzer::new(AnalyzerBackend::Native, cfg);
+        let t = a.analyze(&[], 1).unwrap();
+        assert!(!t.is_empty());
+    }
+}

@@ -1,0 +1,159 @@
+//! Lock-free metrics registry for the coordinator (atomics only — the
+//! hot path must never take a lock to count).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Service-wide counters. All methods are `&self` and wait-free.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pages_in: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+    compress_ns: AtomicU64,
+    analyses: AtomicU64,
+    table_swaps: AtomicU64,
+    table_rejects: AtomicU64,
+    recompressions: AtomicU64,
+    read_errors: AtomicU64,
+}
+
+/// Point-in-time copy of [`Metrics`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Pages compressed.
+    pub pages_in: u64,
+    /// Logical bytes ingested.
+    pub bytes_in: u64,
+    /// Compressed bytes produced.
+    pub bytes_out: u64,
+    /// Nanoseconds spent compressing (across workers).
+    pub compress_ns: u64,
+    /// Background analyses completed.
+    pub analyses: u64,
+    /// Analyses that published a new table version.
+    pub table_swaps: u64,
+    /// Analyses whose candidate lost to the incumbent table.
+    pub table_rejects: u64,
+    /// Pages migrated to a newer table version.
+    pub recompressions: u64,
+    /// Failed page reads.
+    pub read_errors: u64,
+}
+
+impl MetricsSnapshot {
+    /// Aggregate compression ratio so far (1.0 when nothing ingested).
+    pub fn ratio(&self) -> f64 {
+        if self.bytes_out == 0 {
+            1.0
+        } else {
+            self.bytes_in as f64 / self.bytes_out as f64
+        }
+    }
+
+    /// Compression throughput in MiB/s (0 when nothing measured).
+    pub fn compress_mib_s(&self) -> f64 {
+        if self.compress_ns == 0 {
+            0.0
+        } else {
+            self.bytes_in as f64 / (1024.0 * 1024.0) / (self.compress_ns as f64 / 1e9)
+        }
+    }
+}
+
+impl Metrics {
+    /// Fresh zeroed registry.
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    /// Record one compressed page.
+    pub fn page(&self, bytes_in: u64, bytes_out: u64, ns: u64) {
+        self.pages_in.fetch_add(1, Ordering::Relaxed);
+        self.bytes_in.fetch_add(bytes_in, Ordering::Relaxed);
+        self.bytes_out.fetch_add(bytes_out, Ordering::Relaxed);
+        self.compress_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Record an analysis round; `swapped` = published a new table.
+    pub fn analysis(&self, swapped: bool) {
+        self.analyses.fetch_add(1, Ordering::Relaxed);
+        if swapped {
+            self.table_swaps.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.table_rejects.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a page migration.
+    pub fn recompression(&self) {
+        self.recompressions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a failed read.
+    pub fn read_error(&self) {
+        self.read_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot all counters.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            pages_in: self.pages_in.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+            compress_ns: self.compress_ns.load(Ordering::Relaxed),
+            analyses: self.analyses.load(Ordering::Relaxed),
+            table_swaps: self.table_swaps.load(Ordering::Relaxed),
+            table_rejects: self.table_rejects.load(Ordering::Relaxed),
+            recompressions: self.recompressions.load(Ordering::Relaxed),
+            read_errors: self.read_errors.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.page(4096, 2048, 1000);
+        m.page(4096, 1024, 1000);
+        m.analysis(true);
+        m.analysis(false);
+        m.recompression();
+        let s = m.snapshot();
+        assert_eq!(s.pages_in, 2);
+        assert_eq!(s.bytes_in, 8192);
+        assert_eq!(s.bytes_out, 3072);
+        assert_eq!(s.analyses, 2);
+        assert_eq!(s.table_swaps, 1);
+        assert_eq!(s.table_rejects, 1);
+        assert_eq!(s.recompressions, 1);
+        assert!((s.ratio() - 8192.0 / 3072.0).abs() < 1e-12);
+        assert!(s.compress_mib_s() > 0.0);
+    }
+
+    #[test]
+    fn empty_snapshot_sane() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.ratio(), 1.0);
+        assert_eq!(s.compress_mib_s(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        let m = std::sync::Arc::new(Metrics::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let m = std::sync::Arc::clone(&m);
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        m.page(64, 32, 10);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.snapshot().pages_in, 8000);
+    }
+}

@@ -1,0 +1,26 @@
+//! The L3 coordination plane: a compression *service* shaped like the
+//! memory-controller firmware the paper's system implies — pages stream
+//! in, workers compress them against the current global base table, and
+//! a background analyzer continuously re-derives the table from sampled
+//! traffic (running the AOT-compiled JAX/Pallas k-means through
+//! [`crate::runtime`] when artifacts are present, or the native Rust
+//! fallback otherwise).
+//!
+//! Key invariants:
+//!
+//! * **Python never runs here.** The analyzer executes pre-compiled HLO.
+//! * **Table versioning.** Every stored page records the table version
+//!   that encoded it; the [`store::PageStore`] keeps all published
+//!   versions so any page decompresses bit-exactly at any time.
+//! * **Analysis off the hot path.** Workers only read the current codec
+//!   (an `Arc` swap); clustering happens on the analyzer thread.
+
+pub mod analyzer;
+pub mod metrics;
+pub mod service;
+pub mod store;
+
+pub use analyzer::{Analyzer, AnalyzerBackend};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use service::{CompressionService, ServiceConfig};
+pub use store::PageStore;

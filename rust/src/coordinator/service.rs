@@ -1,0 +1,422 @@
+//! The compression service: ingest queue → worker pool → versioned store,
+//! with the analyzer re-deriving the global base table in the background.
+//!
+//! Threading model (all std, no async runtime available offline):
+//!
+//! ```text
+//!  submit()  ──mpsc──►  workers (N threads)
+//!                         │  read current Arc<GbdiCodec> (RwLock swap)
+//!                         │  compress page → PageStore (Mutex)
+//!                         │  feed word samples → Reservoir (Mutex)
+//!                         ▼
+//!  analyzer thread: every `analyze_every` pages, snapshot the
+//!  reservoir, run k-means (PJRT artifact or native), fit widths,
+//!  score vs incumbent, publish new version + swap codec.
+//! ```
+
+use super::analyzer::{Analyzer, AnalyzerBackend};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::store::{PageStore, StoredPage};
+use crate::gbdi::table::GlobalBaseTable;
+use crate::gbdi::{GbdiCodec, GbdiConfig};
+use crate::util::prng::Rng;
+use crate::util::stats::Reservoir;
+use crate::value::words;
+use crate::Result;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Codec configuration (shared by all versions).
+    pub codec: GbdiConfig,
+    /// Compression worker threads.
+    pub workers: usize,
+    /// Run an analysis after this many newly ingested pages.
+    pub analyze_every: u64,
+    /// Reservoir size for traffic sampling (words).
+    pub sample_words: usize,
+    /// Pages migrated to the newest table per maintenance step.
+    pub recompress_batch: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            codec: GbdiConfig::default(),
+            workers: 4,
+            analyze_every: 256,
+            sample_words: 8192,
+            recompress_batch: 64,
+        }
+    }
+}
+
+struct Shared {
+    codec: RwLock<Arc<GbdiCodec>>,
+    store: Mutex<PageStore>,
+    reservoir: Mutex<Reservoir<u64>>,
+    metrics: Metrics,
+    config: ServiceConfig,
+    pages_since_analysis: AtomicU64,
+    next_version: AtomicU64,
+    inflight: AtomicU64,
+    idle: Condvar,
+    idle_lock: Mutex<()>,
+    analyze_now: AtomicBool,
+    shutdown: AtomicBool,
+}
+
+enum Job {
+    Page { page_id: u64, data: Vec<u8> },
+}
+
+/// The running service.
+pub struct CompressionService {
+    shared: Arc<Shared>,
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    analyzer: Option<JoinHandle<()>>,
+}
+
+impl CompressionService {
+    /// Start the service with an initial table derived from nothing (the
+    /// pinned zero base only); the analyzer will improve it as traffic
+    /// arrives. `backend` picks PJRT-artifact vs native clustering.
+    pub fn start(config: ServiceConfig, backend: AnalyzerBackend) -> Result<Self> {
+        config.codec.validate().map_err(crate::Error::Config)?;
+        let initial = GlobalBaseTable::new(vec![(0, 8)], config.codec.word_size, 0);
+        let codec = Arc::new(GbdiCodec::new(initial.clone(), config.codec.clone()));
+        let mut store = PageStore::new();
+        store.publish_table(initial);
+        let shared = Arc::new(Shared {
+            codec: RwLock::new(codec),
+            store: Mutex::new(store),
+            reservoir: Mutex::new(Reservoir::new(config.sample_words)),
+            metrics: Metrics::new(),
+            config: config.clone(),
+            pages_since_analysis: AtomicU64::new(0),
+            next_version: AtomicU64::new(1),
+            inflight: AtomicU64::new(0),
+            idle: Condvar::new(),
+            idle_lock: Mutex::new(()),
+            analyze_now: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+        });
+
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..config.workers.max(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("gbdi-compress-{i}"))
+                    .spawn(move || worker_loop(shared, rx, i as u64))
+                    .expect("spawn worker")
+            })
+            .collect();
+
+        let analyzer_shared = Arc::clone(&shared);
+        let mut analyzer = Analyzer::new(backend, config.codec.clone());
+        let analyzer_handle = std::thread::Builder::new()
+            .name("gbdi-analyzer".into())
+            .spawn(move || analyzer_loop(analyzer_shared, &mut analyzer))
+            .expect("spawn analyzer");
+
+        Ok(CompressionService {
+            shared,
+            tx: Some(tx),
+            workers,
+            analyzer: Some(analyzer_handle),
+        })
+    }
+
+    /// Submit one page for compression (non-blocking).
+    pub fn submit(&self, page_id: u64, data: Vec<u8>) {
+        self.shared.inflight.fetch_add(1, Ordering::AcqRel);
+        self.tx
+            .as_ref()
+            .expect("service running")
+            .send(Job::Page { page_id, data })
+            .expect("workers alive");
+    }
+
+    /// Block until every submitted page has been stored.
+    pub fn flush(&self) {
+        let mut guard = self.shared.idle_lock.lock().unwrap();
+        while self.shared.inflight.load(Ordering::Acquire) > 0 {
+            guard = self.shared.idle.wait(guard).unwrap();
+        }
+    }
+
+    /// Read back a page (bit-exact), whatever table version encoded it.
+    pub fn read_page(&self, page_id: u64) -> Result<Vec<u8>> {
+        let store = self.shared.store.lock().unwrap();
+        let r = store.read(page_id, &self.shared.config.codec);
+        if r.is_err() {
+            self.shared.metrics.read_error();
+        }
+        r
+    }
+
+    /// Force an analysis round at the next opportunity.
+    pub fn request_analysis(&self) {
+        self.shared.analyze_now.store(true, Ordering::Release);
+    }
+
+    /// Current table version in use.
+    pub fn current_version(&self) -> u64 {
+        self.shared.codec.read().unwrap().table().version
+    }
+
+    /// Metrics snapshot.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Stored/logical byte accounting: (logical, stored, ratio).
+    pub fn storage_ratio(&self) -> (usize, usize, f64) {
+        let store = self.shared.store.lock().unwrap();
+        let (l, s) = (store.logical_bytes(), store.stored_bytes());
+        (l, s, if s == 0 { 1.0 } else { l as f64 / s as f64 })
+    }
+
+    /// Migrate up to `config.recompress_batch` pages encoded under old
+    /// table versions to the current one. Returns pages migrated.
+    pub fn recompress_step(&self) -> Result<usize> {
+        let codec = Arc::clone(&self.shared.codec.read().unwrap());
+        let current = codec.table().version;
+        let lagging: Vec<u64> = {
+            let store = self.shared.store.lock().unwrap();
+            store
+                .lagging_pages(current)
+                .into_iter()
+                .take(self.shared.config.recompress_batch)
+                .collect()
+        };
+        let mut moved = 0;
+        for id in lagging {
+            // read under old version, re-encode under current
+            let data = {
+                let store = self.shared.store.lock().unwrap();
+                store.read(id, &self.shared.config.codec)?
+            };
+            let comp = codec.compress_image(&data);
+            let mut store = self.shared.store.lock().unwrap();
+            store.put(
+                id,
+                StoredPage {
+                    table_version: current,
+                    original_len: comp.original_len,
+                    block_bits: comp.block_bits,
+                    payload: comp.payload,
+                },
+            );
+            self.shared.metrics.recompression();
+            moved += 1;
+        }
+        Ok(moved)
+    }
+
+    /// Stop the service, joining all threads. Pending pages are drained
+    /// first (the queue closes, workers finish what is buffered).
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.flush();
+        self.shared.shutdown.store(true, Ordering::Release);
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        if let Some(a) = self.analyzer.take() {
+            let _ = a.join();
+        }
+        self.shared.metrics.snapshot()
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, rx: Arc<Mutex<Receiver<Job>>>, worker_id: u64) {
+    let mut rng = Rng::new(0xC0FFEE ^ worker_id);
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let Job::Page { page_id, data } = match job {
+            Ok(j) => j,
+            Err(_) => break,
+        };
+        let t0 = Instant::now();
+        // sample traffic for the analyzer (cheap stride over the page)
+        {
+            let mut res = shared.reservoir.lock().unwrap();
+            for w in words(&data, shared.config.codec.word_size).step_by(17) {
+                res.offer(w, &mut rng);
+            }
+        }
+        let codec = Arc::clone(&shared.codec.read().unwrap());
+        let comp = codec.compress_image(&data);
+        let stored = StoredPage {
+            table_version: codec.table().version,
+            original_len: comp.original_len,
+            block_bits: comp.block_bits,
+            payload: comp.payload,
+        };
+        let out_len = stored.stored_len() as u64;
+        {
+            let mut store = shared.store.lock().unwrap();
+            store.put(page_id, stored);
+        }
+        shared.metrics.page(data.len() as u64, out_len, t0.elapsed().as_nanos() as u64);
+        shared.pages_since_analysis.fetch_add(1, Ordering::AcqRel);
+        if shared.inflight.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = shared.idle_lock.lock().unwrap();
+            shared.idle.notify_all();
+        }
+    }
+}
+
+fn analyzer_loop(shared: Arc<Shared>, analyzer: &mut Analyzer) {
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        let due = shared.pages_since_analysis.load(Ordering::Acquire)
+            >= shared.config.analyze_every
+            || shared.analyze_now.swap(false, Ordering::AcqRel);
+        if !due {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            continue;
+        }
+        shared.pages_since_analysis.store(0, Ordering::Release);
+        let samples: Vec<u64> = {
+            let res = shared.reservoir.lock().unwrap();
+            res.items().to_vec()
+        };
+        if samples.is_empty() {
+            continue;
+        }
+        let version = shared.next_version.fetch_add(1, Ordering::AcqRel);
+        let candidate = match analyzer.analyze(&samples, version) {
+            Ok(t) => t,
+            Err(_) => continue, // artifact missing/failing: stay on incumbent
+        };
+        let incumbent = Arc::clone(&shared.codec.read().unwrap());
+        let swap = analyzer.should_swap(&samples, incumbent.table(), &candidate);
+        shared.metrics.analysis(swap);
+        if swap {
+            let new_codec =
+                Arc::new(GbdiCodec::new(candidate.clone(), shared.config.codec.clone()));
+            {
+                let mut store = shared.store.lock().unwrap();
+                store.publish_table(candidate);
+            }
+            *shared.codec.write().unwrap() = new_codec;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    fn service(workers: usize) -> CompressionService {
+        let cfg = ServiceConfig {
+            workers,
+            analyze_every: 16,
+            ..Default::default()
+        };
+        CompressionService::start(cfg, AnalyzerBackend::Native).unwrap()
+    }
+
+    #[test]
+    fn pages_roundtrip_through_service() {
+        let svc = service(2);
+        let w = workloads::by_name("mcf").unwrap();
+        let pages: Vec<Vec<u8>> = (0..64).map(|i| w.generate(4096, i)).collect();
+        for (i, p) in pages.iter().enumerate() {
+            svc.submit(i as u64, p.clone());
+        }
+        svc.flush();
+        for (i, p) in pages.iter().enumerate() {
+            assert_eq!(&svc.read_page(i as u64).unwrap(), p, "page {i}");
+        }
+        let m = svc.shutdown();
+        assert_eq!(m.pages_in, 64);
+        assert!(m.ratio() > 1.0, "ratio {}", m.ratio());
+    }
+
+    #[test]
+    fn analyzer_improves_table_over_time() {
+        let svc = service(2);
+        let w = workloads::by_name("triangle_count").unwrap();
+        // first wave: tables start trivial
+        for i in 0..64u64 {
+            svc.submit(i, w.generate(4096, i));
+        }
+        svc.flush();
+        svc.request_analysis();
+        // give the analyzer a moment, then ingest a second wave
+        for _ in 0..200 {
+            if svc.current_version() > 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(svc.current_version() > 0, "analyzer never swapped");
+        for i in 64..128u64 {
+            svc.submit(i, w.generate(4096, i));
+        }
+        svc.flush();
+        // all pages still readable (old + new version coexist)
+        for i in 0..128u64 {
+            assert_eq!(svc.read_page(i).unwrap(), w.generate(4096, i));
+        }
+        let m = svc.shutdown();
+        assert!(m.table_swaps >= 1);
+    }
+
+    #[test]
+    fn recompression_migrates_old_pages() {
+        let svc = service(1);
+        let w = workloads::by_name("svm").unwrap();
+        for i in 0..32u64 {
+            svc.submit(i, w.generate(4096, i));
+        }
+        svc.flush();
+        svc.request_analysis();
+        for _ in 0..200 {
+            if svc.current_version() > 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let mut total = 0;
+        loop {
+            let n = svc.recompress_step().unwrap();
+            total += n;
+            if n == 0 {
+                break;
+            }
+        }
+        assert!(total >= 32, "migrated {total}");
+        for i in 0..32u64 {
+            assert_eq!(svc.read_page(i).unwrap(), w.generate(4096, i));
+        }
+        let m = svc.shutdown();
+        assert!(m.recompressions >= 32);
+    }
+
+    #[test]
+    fn missing_page_read_errors() {
+        let svc = service(1);
+        assert!(svc.read_page(999).is_err());
+        let m = svc.shutdown();
+        assert_eq!(m.read_errors, 1);
+    }
+}

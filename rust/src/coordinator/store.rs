@@ -1,0 +1,231 @@
+//! Versioned compressed-page store: pages encoded under different table
+//! versions coexist; the table ring keeps every published version so any
+//! page stays decodable until migrated.
+
+use crate::gbdi::{decode, table::GlobalBaseTable, CompressedImage, GbdiConfig};
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// One stored page.
+#[derive(Debug, Clone)]
+pub struct StoredPage {
+    /// Table version the payload references.
+    pub table_version: u64,
+    /// Original (logical) length.
+    pub original_len: usize,
+    /// Per-block bit lengths.
+    pub block_bits: Vec<u32>,
+    /// Packed payload.
+    pub payload: Vec<u8>,
+}
+
+impl StoredPage {
+    /// Compressed bytes (payload + framing approximation).
+    pub fn stored_len(&self) -> usize {
+        self.payload.len() + 2 * self.block_bits.len() + 16
+    }
+}
+
+/// The page store + table ring.
+#[derive(Debug, Default)]
+pub struct PageStore {
+    pages: HashMap<u64, StoredPage>,
+    tables: HashMap<u64, GlobalBaseTable>,
+}
+
+impl PageStore {
+    /// Empty store.
+    pub fn new() -> Self {
+        PageStore::default()
+    }
+
+    /// Publish a table version (idempotent; versions are immutable).
+    pub fn publish_table(&mut self, table: GlobalBaseTable) {
+        self.tables.entry(table.version).or_insert(table);
+    }
+
+    /// Look up a published table.
+    pub fn table(&self, version: u64) -> Option<&GlobalBaseTable> {
+        self.tables.get(&version)
+    }
+
+    /// Number of published table versions.
+    pub fn table_count(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Insert/overwrite a page.
+    pub fn put(&mut self, page_id: u64, page: StoredPage) {
+        debug_assert!(
+            self.tables.contains_key(&page.table_version),
+            "page references unpublished table v{}",
+            page.table_version
+        );
+        self.pages.insert(page_id, page);
+    }
+
+    /// Get a stored page.
+    pub fn get(&self, page_id: u64) -> Option<&StoredPage> {
+        self.pages.get(&page_id)
+    }
+
+    /// Remove a page (returns it).
+    pub fn remove(&mut self, page_id: u64) -> Option<StoredPage> {
+        self.pages.remove(&page_id)
+    }
+
+    /// Number of stored pages.
+    pub fn len(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Whether the store is empty.
+    pub fn is_empty(&self) -> bool {
+        self.pages.is_empty()
+    }
+
+    /// Total compressed bytes stored.
+    pub fn stored_bytes(&self) -> usize {
+        self.pages.values().map(|p| p.stored_len()).sum()
+    }
+
+    /// Total logical bytes stored.
+    pub fn logical_bytes(&self) -> usize {
+        self.pages.values().map(|p| p.original_len).sum()
+    }
+
+    /// Ids of pages encoded with a version older than `version`.
+    pub fn lagging_pages(&self, version: u64) -> Vec<u64> {
+        let mut ids: Vec<u64> = self
+            .pages
+            .iter()
+            .filter(|(_, p)| p.table_version < version)
+            .map(|(&id, _)| id)
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Decompress a page using its recorded table version.
+    pub fn read(&self, page_id: u64, config: &GbdiConfig) -> Result<Vec<u8>> {
+        let page = self
+            .pages
+            .get(&page_id)
+            .ok_or_else(|| Error::Corrupt(format!("page {page_id} not found")))?;
+        let table = self.tables.get(&page.table_version).ok_or_else(|| {
+            Error::Corrupt(format!("table v{} not in ring", page.table_version))
+        })?;
+        let image = CompressedImage {
+            table: table.clone(),
+            original_len: page.original_len,
+            block_bits: page.block_bits.clone(),
+            payload: page.payload.clone(),
+            chunk_blocks: 0,
+            config: config.clone(),
+        };
+        decode::decompress_image(&image)
+    }
+
+    /// Drop table versions no page references anymore (except the newest
+    /// `keep` versions). Returns how many were dropped.
+    pub fn gc_tables(&mut self, keep: usize) -> usize {
+        let referenced: std::collections::BTreeSet<u64> =
+            self.pages.values().map(|p| p.table_version).collect();
+        let mut versions: Vec<u64> = self.tables.keys().copied().collect();
+        versions.sort_unstable();
+        let keep_from = versions.len().saturating_sub(keep);
+        let mut dropped = 0;
+        for (i, v) in versions.into_iter().enumerate() {
+            if i < keep_from && !referenced.contains(&v) {
+                self.tables.remove(&v);
+                dropped += 1;
+            }
+        }
+        dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbdi::{analyze, GbdiCodec};
+    use crate::value::WordSize;
+    use crate::workloads;
+
+    fn compress_page(data: &[u8], table: &GlobalBaseTable, cfg: &GbdiConfig) -> StoredPage {
+        let codec = GbdiCodec::new(table.clone(), cfg.clone());
+        let comp = codec.compress_image(data);
+        StoredPage {
+            table_version: table.version,
+            original_len: comp.original_len,
+            block_bits: comp.block_bits,
+            payload: comp.payload,
+        }
+    }
+
+    #[test]
+    fn pages_survive_table_swaps() {
+        let cfg = GbdiConfig::default();
+        let img_a = workloads::by_name("mcf").unwrap().generate(4096, 1);
+        let img_b = workloads::by_name("svm").unwrap().generate(4096, 1);
+        let mut t1 = analyze::analyze_image(&img_a, &cfg);
+        t1.version = 1;
+        let mut t2 = analyze::analyze_image(&img_b, &cfg);
+        t2.version = 2;
+
+        let mut store = PageStore::new();
+        store.publish_table(t1.clone());
+        store.put(10, compress_page(&img_a, &t1, &cfg));
+        store.publish_table(t2.clone());
+        store.put(20, compress_page(&img_b, &t2, &cfg));
+
+        // both decode bit-exactly despite different table versions
+        assert_eq!(store.read(10, &cfg).unwrap(), img_a);
+        assert_eq!(store.read(20, &cfg).unwrap(), img_b);
+        assert_eq!(store.lagging_pages(2), vec![10]);
+        assert_eq!(store.lagging_pages(1), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn missing_page_and_table_error() {
+        let cfg = GbdiConfig::default();
+        let store = PageStore::new();
+        assert!(store.read(99, &cfg).is_err());
+    }
+
+    #[test]
+    fn gc_keeps_referenced_versions() {
+        let cfg = GbdiConfig::default();
+        let img = vec![7u8; 4096];
+        let mut store = PageStore::new();
+        for v in 1..=5 {
+            let mut t = GlobalBaseTable::new(vec![(v * 1000, 8)], WordSize::W32, v);
+            t.version = v;
+            store.publish_table(t.clone());
+            if v == 2 {
+                store.put(1, compress_page(&img, &t, &cfg));
+            }
+        }
+        let dropped = store.gc_tables(1);
+        // v1, v3, v4 droppable; v2 referenced; v5 newest kept
+        assert_eq!(dropped, 3);
+        assert!(store.table(2).is_some());
+        assert!(store.table(5).is_some());
+        assert_eq!(store.read(1, &cfg).unwrap(), img);
+    }
+
+    #[test]
+    fn accounting() {
+        let cfg = GbdiConfig::default();
+        let img = vec![0u8; 8192];
+        let t = analyze::analyze_image(&img, &cfg);
+        let mut store = PageStore::new();
+        store.publish_table(t.clone());
+        store.put(1, compress_page(&img, &t, &cfg));
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.logical_bytes(), 8192);
+        assert!(store.stored_bytes() < 2048, "zeros compress: {}", store.stored_bytes());
+        store.remove(1).unwrap();
+        assert!(store.is_empty());
+    }
+}

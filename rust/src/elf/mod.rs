@@ -1,0 +1,304 @@
+//! Minimal ELF64 core-file reader/writer — the "memory dump files in the
+//! ELF format" substrate from the paper's methodology (§V).
+//!
+//! The paper's dumps came from a course server we do not have; this module
+//! supplies the same *interface*: [`write_core`] emits a valid ELF64
+//! `ET_CORE` file whose `PT_LOAD` segments hold a synthetic workload's
+//! memory image, and [`parse`] extracts loadable segments from any ELF64
+//! file (including real core dumps), which the pipeline then compresses
+//! exactly as the paper did.
+
+use crate::{Error, Result};
+
+/// ELF magic.
+const MAGIC: [u8; 4] = [0x7F, b'E', b'L', b'F'];
+/// 64-bit class, little endian, version 1.
+const EHDR_SIZE: usize = 64;
+const PHDR_SIZE: usize = 56;
+/// Segment type: loadable.
+pub const PT_LOAD: u32 = 1;
+/// Segment type: note (present in real cores; skipped by the pipeline).
+pub const PT_NOTE: u32 = 4;
+/// Object type: core file.
+pub const ET_CORE: u16 = 4;
+
+/// One loadable memory segment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Segment {
+    /// Virtual address the segment maps at.
+    pub vaddr: u64,
+    /// Segment flags (PF_R=4, PF_W=2, PF_X=1).
+    pub flags: u32,
+    /// Segment contents. `mem_size` beyond `data.len()` is implicit zeros
+    /// in the file; [`parse`] materializes them (as the paper's pipeline
+    /// must compress the full mapped range).
+    pub data: Vec<u8>,
+}
+
+/// A parsed memory dump: the loadable segments of an ELF file.
+#[derive(Debug, Clone, Default)]
+pub struct MemoryDump {
+    /// Loadable segments in file order.
+    pub segments: Vec<Segment>,
+}
+
+impl MemoryDump {
+    /// Total loadable bytes.
+    pub fn total_len(&self) -> usize {
+        self.segments.iter().map(|s| s.data.len()).sum()
+    }
+
+    /// Concatenate all segments into one image (the unit the paper
+    /// compresses: the dump's memory content).
+    pub fn flatten(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.total_len());
+        for s in &self.segments {
+            out.extend_from_slice(&s.data);
+        }
+        out
+    }
+}
+
+fn rd_u16(b: &[u8], o: usize) -> u16 {
+    u16::from_le_bytes(b[o..o + 2].try_into().unwrap())
+}
+fn rd_u32(b: &[u8], o: usize) -> u32 {
+    u32::from_le_bytes(b[o..o + 4].try_into().unwrap())
+}
+fn rd_u64(b: &[u8], o: usize) -> u64 {
+    u64::from_le_bytes(b[o..o + 8].try_into().unwrap())
+}
+
+/// Parse an ELF64 little-endian file and extract its loadable segments.
+///
+/// Validation is strict about structure (magic, class, offsets in bounds)
+/// but tolerant about content (any `e_type` is accepted — executables,
+/// shared objects, and cores all carry PT_LOAD).
+pub fn parse(file: &[u8]) -> Result<MemoryDump> {
+    let bad = |m: &str| Error::Elf(m.to_string());
+    if file.len() < EHDR_SIZE {
+        return Err(bad("file shorter than ELF header"));
+    }
+    if file[0..4] != MAGIC {
+        return Err(bad("bad magic"));
+    }
+    if file[4] != 2 {
+        return Err(bad("not ELFCLASS64"));
+    }
+    if file[5] != 1 {
+        return Err(bad("not little-endian"));
+    }
+    if file[6] != 1 {
+        return Err(bad("bad ELF version"));
+    }
+    let e_phoff = rd_u64(file, 0x20) as usize;
+    let e_phentsize = rd_u16(file, 0x36) as usize;
+    let e_phnum = rd_u16(file, 0x38) as usize;
+    if e_phnum == 0 {
+        return Ok(MemoryDump::default());
+    }
+    if e_phentsize < PHDR_SIZE {
+        return Err(bad("phentsize too small"));
+    }
+    let table_end = e_phoff
+        .checked_add(e_phentsize.checked_mul(e_phnum).ok_or_else(|| bad("phdr overflow"))?)
+        .ok_or_else(|| bad("phdr overflow"))?;
+    if table_end > file.len() {
+        return Err(bad("program header table out of bounds"));
+    }
+    let mut segments = Vec::new();
+    for i in 0..e_phnum {
+        let o = e_phoff + i * e_phentsize;
+        let p_type = rd_u32(file, o);
+        if p_type != PT_LOAD {
+            continue;
+        }
+        let p_flags = rd_u32(file, o + 0x04);
+        let p_offset = rd_u64(file, o + 0x08) as usize;
+        let p_vaddr = rd_u64(file, o + 0x10);
+        let p_filesz = rd_u64(file, o + 0x20) as usize;
+        let p_memsz = rd_u64(file, o + 0x28) as usize;
+        let end = p_offset.checked_add(p_filesz).ok_or_else(|| bad("segment overflow"))?;
+        if end > file.len() {
+            return Err(bad("segment data out of bounds"));
+        }
+        if p_memsz < p_filesz {
+            return Err(bad("memsz < filesz"));
+        }
+        // cap implicit zero-fill to something sane (a dump with TB-scale
+        // bss would OOM the pipeline; real cores write pages they hold)
+        if p_memsz > p_filesz && p_memsz - p_filesz > (1 << 31) {
+            return Err(bad("implausible zero-fill size"));
+        }
+        let mut data = file[p_offset..end].to_vec();
+        data.resize(p_memsz, 0);
+        segments.push(Segment { vaddr: p_vaddr, flags: p_flags, data });
+    }
+    Ok(MemoryDump { segments })
+}
+
+/// Write a minimal valid ELF64 `ET_CORE` file containing the given
+/// segments as `PT_LOAD` entries (page-aligned offsets, like real cores).
+pub fn write_core(segments: &[Segment]) -> Vec<u8> {
+    const ALIGN: usize = 4096;
+    let phnum = segments.len();
+    let headers = EHDR_SIZE + phnum * PHDR_SIZE;
+    // layout: headers | pad | seg0 | pad | seg1 ...
+    let mut offsets = Vec::with_capacity(phnum);
+    let mut cursor = (headers + ALIGN - 1) / ALIGN * ALIGN;
+    for s in segments {
+        offsets.push(cursor);
+        cursor += (s.data.len() + ALIGN - 1) / ALIGN * ALIGN;
+    }
+    let mut out = vec![0u8; cursor];
+    // --- ELF header ---
+    out[0..4].copy_from_slice(&MAGIC);
+    out[4] = 2; // ELFCLASS64
+    out[5] = 1; // little endian
+    out[6] = 1; // EV_CURRENT
+    out[7] = 0; // SysV ABI
+    out[0x10..0x12].copy_from_slice(&ET_CORE.to_le_bytes()); // e_type
+    out[0x12..0x14].copy_from_slice(&62u16.to_le_bytes()); // e_machine = x86-64
+    out[0x14..0x18].copy_from_slice(&1u32.to_le_bytes()); // e_version
+    // e_entry = 0, e_shoff = 0
+    out[0x20..0x28].copy_from_slice(&(EHDR_SIZE as u64).to_le_bytes()); // e_phoff
+    out[0x34..0x36].copy_from_slice(&(EHDR_SIZE as u16).to_le_bytes()); // e_ehsize
+    out[0x36..0x38].copy_from_slice(&(PHDR_SIZE as u16).to_le_bytes()); // e_phentsize
+    out[0x38..0x3A].copy_from_slice(&(phnum as u16).to_le_bytes()); // e_phnum
+    // --- program headers ---
+    for (i, s) in segments.iter().enumerate() {
+        let o = EHDR_SIZE + i * PHDR_SIZE;
+        out[o..o + 4].copy_from_slice(&PT_LOAD.to_le_bytes());
+        out[o + 0x04..o + 0x08].copy_from_slice(&s.flags.to_le_bytes());
+        out[o + 0x08..o + 0x10].copy_from_slice(&(offsets[i] as u64).to_le_bytes());
+        out[o + 0x10..o + 0x18].copy_from_slice(&s.vaddr.to_le_bytes()); // p_vaddr
+        out[o + 0x18..o + 0x20].copy_from_slice(&s.vaddr.to_le_bytes()); // p_paddr
+        out[o + 0x20..o + 0x28].copy_from_slice(&(s.data.len() as u64).to_le_bytes()); // filesz
+        out[o + 0x28..o + 0x30].copy_from_slice(&(s.data.len() as u64).to_le_bytes()); // memsz
+        out[o + 0x30..o + 0x38].copy_from_slice(&(ALIGN as u64).to_le_bytes()); // align
+    }
+    // --- segment data ---
+    for (i, s) in segments.iter().enumerate() {
+        out[offsets[i]..offsets[i] + s.data.len()].copy_from_slice(&s.data);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn sample_segments() -> Vec<Segment> {
+        let mut rng = Rng::new(1);
+        let mut a = vec![0u8; 8192];
+        rng.fill_bytes(&mut a);
+        vec![
+            Segment { vaddr: 0x400000, flags: 5, data: a },
+            Segment { vaddr: 0x7F00_0000_0000, flags: 6, data: vec![7u8; 4096] },
+            Segment { vaddr: 0x7FFF_F000_0000, flags: 6, data: vec![1, 2, 3] }, // unaligned size
+        ]
+    }
+
+    #[test]
+    fn write_parse_roundtrip() {
+        let segs = sample_segments();
+        let file = write_core(&segs);
+        let dump = parse(&file).unwrap();
+        assert_eq!(dump.segments.len(), 3);
+        for (a, b) in dump.segments.iter().zip(&segs) {
+            assert_eq!(a.vaddr, b.vaddr);
+            assert_eq!(a.flags, b.flags);
+            assert_eq!(a.data, b.data);
+        }
+        assert_eq!(dump.total_len(), segs.iter().map(|s| s.data.len()).sum::<usize>());
+    }
+
+    #[test]
+    fn flatten_concatenates() {
+        let segs = vec![
+            Segment { vaddr: 0, flags: 6, data: vec![1, 2] },
+            Segment { vaddr: 100, flags: 6, data: vec![3] },
+        ];
+        let file = write_core(&segs);
+        assert_eq!(parse(&file).unwrap().flatten(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn zero_fill_memsz_materialized() {
+        // hand-edit memsz > filesz
+        let segs = vec![Segment { vaddr: 0x1000, flags: 6, data: vec![9u8; 100] }];
+        let mut file = write_core(&segs);
+        let phdr = EHDR_SIZE;
+        file[phdr + 0x28..phdr + 0x30].copy_from_slice(&200u64.to_le_bytes());
+        let dump = parse(&file).unwrap();
+        assert_eq!(dump.segments[0].data.len(), 200);
+        assert_eq!(&dump.segments[0].data[..100], &[9u8; 100][..]);
+        assert_eq!(&dump.segments[0].data[100..], &[0u8; 100][..]);
+    }
+
+    #[test]
+    fn non_load_segments_skipped() {
+        let segs = sample_segments();
+        let mut file = write_core(&segs);
+        // flip first phdr to PT_NOTE
+        let phdr = EHDR_SIZE;
+        file[phdr..phdr + 4].copy_from_slice(&PT_NOTE.to_le_bytes());
+        let dump = parse(&file).unwrap();
+        assert_eq!(dump.segments.len(), 2);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse(&[]).is_err());
+        assert!(parse(&[0u8; 100]).is_err());
+        let file = write_core(&sample_segments());
+        // bad magic
+        let mut f = file.clone();
+        f[0] = 0;
+        assert!(parse(&f).is_err());
+        // 32-bit class
+        let mut f = file.clone();
+        f[4] = 1;
+        assert!(parse(&f).is_err());
+        // big endian
+        let mut f = file.clone();
+        f[5] = 2;
+        assert!(parse(&f).is_err());
+        // phoff out of bounds
+        let mut f = file.clone();
+        f[0x20..0x28].copy_from_slice(&(1u64 << 40).to_le_bytes());
+        assert!(parse(&f).is_err());
+        // segment offset out of bounds
+        let mut f = file.clone();
+        let phdr = EHDR_SIZE;
+        f[phdr + 0x08..phdr + 0x10].copy_from_slice(&(1u64 << 40).to_le_bytes());
+        assert!(parse(&f).is_err());
+        // memsz < filesz
+        let mut f = file;
+        f[phdr + 0x28..phdr + 0x30].copy_from_slice(&1u64.to_le_bytes());
+        assert!(parse(&f).is_err());
+    }
+
+    #[test]
+    fn empty_dump_ok() {
+        let file = write_core(&[]);
+        let dump = parse(&file).unwrap();
+        assert!(dump.segments.is_empty());
+        assert_eq!(dump.total_len(), 0);
+    }
+
+    #[test]
+    fn parse_fuzz_never_panics() {
+        let mut rng = Rng::new(2);
+        let base = write_core(&sample_segments());
+        for _ in 0..500 {
+            let mut f = base.clone();
+            for _ in 0..rng.range(1, 16) {
+                let i = rng.below(f.len() as u64) as usize;
+                f[i] = rng.next_u32() as u8;
+            }
+            let _ = parse(&f); // Ok or Err, never panic
+        }
+    }
+}

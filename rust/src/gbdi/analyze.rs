@@ -1,0 +1,203 @@
+//! Background data analysis (paper §II.B.1-2): sample the target data,
+//! cluster word values to find global bases, and pair each base with a
+//! maximum-delta width class.
+//!
+//! Two entry points produce a [`GlobalBaseTable`]:
+//!
+//! * [`analyze_image`] / [`analyze_samples`] — pure-Rust clustering
+//!   ([`crate::cluster`]).
+//! * [`table_from_centroids`] — width-class fitting around centroids that
+//!   came from elsewhere (the AOT-compiled JAX/Pallas k-means executed by
+//!   [`crate::runtime`], or an ablation arm). This is the shared back half
+//!   of the analysis regardless of who ran the clustering.
+
+use super::table::GlobalBaseTable;
+use super::GbdiConfig;
+use crate::cluster::{kmeans, wrapping_delta, KmeansConfig, Metric};
+use crate::util::bits::signed_width;
+use crate::util::stats::stride_sample;
+use crate::value::words;
+
+/// Sample word values from an image for analysis (deterministic stride
+/// sampling — what a memory controller scanning traffic would do).
+pub fn sample_image(image: &[u8], cfg: &GbdiConfig) -> Vec<u64> {
+    let all: Vec<u64> = words(image, cfg.word_size).collect();
+    stride_sample(&all, cfg.analysis_samples)
+}
+
+/// Full background analysis of an image: sample → cluster → fit widths.
+pub fn analyze_image(image: &[u8], cfg: &GbdiConfig) -> GlobalBaseTable {
+    analyze_samples(&sample_image(image, cfg), cfg)
+}
+
+/// Background analysis over pre-sampled word values, using the paper's
+/// modified (bit-cost) k-means.
+pub fn analyze_samples(samples: &[u64], cfg: &GbdiConfig) -> GlobalBaseTable {
+    analyze_samples_metric(samples, cfg, Metric::BitCost)
+}
+
+/// [`analyze_samples`] with an explicit clustering metric — the ablation
+/// hook for the paper's "modified vs unmodified k-means" claim (E4).
+pub fn analyze_samples_metric(samples: &[u64], cfg: &GbdiConfig, metric: Metric) -> GlobalBaseTable {
+    // Reserve one slot for the pinned zero base.
+    let k = cfg.num_bases.saturating_sub(1).max(1);
+    let kcfg = KmeansConfig {
+        k,
+        iters: cfg.analysis_iters,
+        metric,
+        width_classes: cfg.width_classes.clone(),
+        word_size: cfg.word_size,
+        seed: cfg.seed,
+    };
+    let result = kmeans(samples, &kcfg);
+    table_from_centroids(samples, &result.centroids, cfg, 0)
+}
+
+/// Fit per-base width classes around given centroids and build the table
+/// (the paper's "establishing maximum deltas" step):
+///
+/// 1. assign every sample to its nearest centroid (min |wrapping delta|);
+/// 2. per centroid, take the `delta_quantile` of required delta widths;
+/// 3. snap that up to the smallest configured width class (values beyond
+///    it become outliers at encode time).
+pub fn table_from_centroids(
+    samples: &[u64],
+    centroids: &[u64],
+    cfg: &GbdiConfig,
+    version: u64,
+) -> GlobalBaseTable {
+    assert!(!centroids.is_empty());
+    let mut widths_needed: Vec<Vec<u32>> = vec![Vec::new(); centroids.len()];
+    for &v in samples {
+        let mut best = 0usize;
+        let mut best_abs = u64::MAX;
+        for (j, &c) in centroids.iter().enumerate() {
+            let abs = wrapping_delta(v, c, cfg.word_size).unsigned_abs();
+            if abs < best_abs {
+                best_abs = abs;
+                best = j;
+            }
+        }
+        let d = wrapping_delta(v, centroids[best], cfg.word_size);
+        widths_needed[best].push(signed_width(d));
+    }
+    let max_class = *cfg.width_classes.last().unwrap();
+    let pairs: Vec<(u64, u32)> = centroids
+        .iter()
+        .zip(widths_needed.iter_mut())
+        .map(|(&c, widths)| {
+            if widths.is_empty() {
+                return (c, 0);
+            }
+            widths.sort_unstable();
+            let q_idx = ((cfg.delta_quantile * (widths.len() - 1) as f64).round() as usize)
+                .min(widths.len() - 1);
+            let need = widths[q_idx];
+            let class = cfg
+                .width_classes
+                .iter()
+                .copied()
+                .find(|&w| w >= need)
+                .unwrap_or(max_class);
+            (c, class)
+        })
+        .collect();
+    GlobalBaseTable::new(pairs, cfg.word_size, version)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::apply_delta;
+    use crate::gbdi::{decode, GbdiCodec};
+    use crate::util::prng::Rng;
+    use crate::value::WordSize;
+
+    fn clustered_image(centers: &[u64], blocks: usize, spread: i64, seed: u64) -> Vec<u8> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::with_capacity(blocks * 64);
+        for _ in 0..blocks * 16 {
+            let c = centers[rng.below(centers.len() as u64) as usize];
+            let v = apply_delta(c, rng.range_i64(-spread, spread), WordSize::W32) as u32;
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn analysis_finds_compressive_table() {
+        let image = clustered_image(&[40_000, 9_000_000, 3_100_000_000], 2000, 60, 1);
+        let cfg = GbdiConfig { num_bases: 8, ..Default::default() };
+        let table = analyze_image(&image, &cfg);
+        assert!(table.len() <= 8);
+        let codec = GbdiCodec::new(table, cfg);
+        let comp = codec.compress_image(&image);
+        assert!(comp.ratio() > 2.0, "ratio {}", comp.ratio());
+        assert_eq!(decode::decompress_image(&comp).unwrap(), image);
+    }
+
+    #[test]
+    fn width_classes_track_spread() {
+        // tight cluster -> small class; wide cluster -> big class
+        let mut samples = Vec::new();
+        let mut rng = Rng::new(2);
+        for _ in 0..2000 {
+            samples.push(apply_delta(1_000_000, rng.range_i64(-6, 7), WordSize::W32));
+            samples.push(apply_delta(2_000_000_000, rng.range_i64(-30_000, 30_000), WordSize::W32));
+        }
+        let cfg = GbdiConfig { num_bases: 4, ..Default::default() };
+        let table = analyze_samples(&samples, &cfg);
+        let near = |b: u64, target: u64| (b as i64 - target as i64).abs() < 50_000;
+        let tight = table.entries().iter().find(|e| near(e.base, 1_000_000)).expect("tight base");
+        let wide = table.entries().iter().find(|e| near(e.base, 2_000_000_000)).expect("wide base");
+        assert!(tight.width <= 8, "tight width {}", tight.width);
+        assert!(wide.width >= 16, "wide width {}", wide.width);
+    }
+
+    #[test]
+    fn table_within_budget_even_with_zero_pin() {
+        let mut rng = Rng::new(3);
+        let samples: Vec<u64> = (0..4096).map(|_| rng.next_u32() as u64).collect();
+        for num_bases in [1usize, 2, 8, 64, 128] {
+            let cfg = GbdiConfig { num_bases, ..Default::default() };
+            let t = analyze_samples(&samples, &cfg);
+            assert!(t.len() <= num_bases.max(2), "K={num_bases} -> {}", t.len());
+            // codec construction must not assert
+            let cfg2 = GbdiConfig { num_bases: num_bases.max(2), ..Default::default() };
+            let _ = GbdiCodec::new(t, cfg2);
+        }
+    }
+
+    #[test]
+    fn table_from_external_centroids_matches_analysis_quality() {
+        let image = clustered_image(&[123_456, 890_000_000], 800, 40, 5);
+        let cfg = GbdiConfig { num_bases: 8, ..Default::default() };
+        let samples = sample_image(&image, &cfg);
+        // Pretend the runtime's XLA k-means returned the true centers.
+        let table = table_from_centroids(&samples, &[123_456, 890_000_000], &cfg, 7);
+        assert_eq!(table.version, 7);
+        let codec = GbdiCodec::new(table, cfg);
+        assert!(codec.compress_image(&image).ratio() > 2.0);
+    }
+
+    #[test]
+    fn empty_samples_still_yield_valid_table() {
+        let cfg = GbdiConfig::default();
+        let t = analyze_samples(&[], &cfg);
+        assert!(!t.is_empty());
+        let codec = GbdiCodec::new(t, cfg);
+        let comp = codec.compress_image(&[0u8; 640]);
+        assert_eq!(decode::decompress_image(&comp).unwrap(), vec![0u8; 640]);
+    }
+
+    #[test]
+    fn euclidean_arm_also_roundtrips() {
+        let image = clustered_image(&[777_777, 1_500_000_000], 500, 100, 9);
+        let cfg = GbdiConfig { num_bases: 8, ..Default::default() };
+        let samples = sample_image(&image, &cfg);
+        let t = analyze_samples_metric(&samples, &cfg, Metric::Euclidean);
+        let codec = GbdiCodec::new(t, cfg);
+        let comp = codec.compress_image(&image);
+        assert_eq!(decode::decompress_image(&comp).unwrap(), image);
+    }
+}

@@ -1,0 +1,206 @@
+//! The GBDI decompression engine: format decoding, global table access,
+//! and bit-exact value reconstruction (paper §IV.B).
+
+use super::table::GlobalBaseTable;
+use super::{BlockMode, CompressedImage, GbdiConfig};
+use crate::cluster::apply_delta;
+use crate::util::bits::BitReader;
+use crate::value::write_word;
+use crate::{Error, Result};
+
+/// Decode one block from `r` into `out` (exactly `out.len()` bytes are
+/// reconstructed; pass a short slice for ragged tail blocks).
+pub fn decompress_block(
+    r: &mut BitReader,
+    table: &GlobalBaseTable,
+    config: &GbdiConfig,
+    out: &mut [u8],
+) -> Result<()> {
+    let corrupt = |what: &str| Error::Corrupt(format!("block: {what}"));
+    let tag = r.get(2).map_err(|_| corrupt("missing tag"))?;
+    let ws = config.word_size;
+    match BlockMode::from_tag(tag) {
+        BlockMode::Raw => {
+            for b in out.iter_mut() {
+                *b = r.get(8).map_err(|_| corrupt("truncated raw block"))? as u8;
+            }
+        }
+        BlockMode::Zero => out.fill(0),
+        BlockMode::Rep => {
+            let v = r.get(ws.bits()).map_err(|_| corrupt("truncated rep word"))?;
+            if out.len() % ws.bytes() != 0 {
+                return Err(corrupt("rep block with ragged length"));
+            }
+            for i in 0..out.len() / ws.bytes() {
+                write_word(out, i, ws, v);
+            }
+        }
+        BlockMode::Gbdi => {
+            if out.len() != config.block_bytes {
+                return Err(corrupt("gbdi block with ragged length"));
+            }
+            let ptr_bits = config.base_ptr_bits();
+            let escape = config.outlier_code();
+            for i in 0..config.words_per_block() {
+                let ptr = r.get(ptr_bits).map_err(|_| corrupt("truncated base ptr"))?;
+                let v = if ptr == escape {
+                    r.get(ws.bits()).map_err(|_| corrupt("truncated outlier"))?
+                } else {
+                    if ptr as usize >= table.len() {
+                        return Err(corrupt("base pointer beyond table"));
+                    }
+                    let entry = table.get(ptr as usize);
+                    // Delta width is determined by the *class that was used
+                    // to encode*, which the encoder chose as the smallest
+                    // class fitting the delta but capped by the entry's
+                    // width. The wire does not carry the class; both sides
+                    // derive it identically from the entry: the entry's
+                    // width class IS the field width.
+                    let w = entry.width;
+                    if w == 0 {
+                        entry.base
+                    } else {
+                        let d = r.get_signed(w).map_err(|_| corrupt("truncated delta"))?;
+                        apply_delta(entry.base, d, ws)
+                    }
+                };
+                write_word(out, i, ws, v);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Decompress a full [`CompressedImage`], verifying framing. The returned
+/// buffer is byte-identical to the original image.
+pub fn decompress_image(comp: &CompressedImage) -> Result<Vec<u8>> {
+    let config = &comp.config;
+    config.validate().map_err(Error::Config)?;
+    let mut out = vec![0u8; comp.original_len];
+    let mut r = BitReader::new(&comp.payload);
+    let n_blocks = (comp.original_len + config.block_bytes - 1) / config.block_bytes;
+    if comp.block_bits.len() != n_blocks {
+        return Err(Error::Corrupt(format!(
+            "block count mismatch: framing says {}, image needs {}",
+            comp.block_bits.len(),
+            n_blocks
+        )));
+    }
+    for (i, chunk) in out.chunks_mut(config.block_bytes).enumerate() {
+        // parallel streams: every chunk_blocks-th block starts byte-aligned
+        if comp.chunk_blocks > 0 && i > 0 && i % comp.chunk_blocks == 0 {
+            r.skip_to_byte()
+                .map_err(|_| Error::Corrupt(format!("chunk realign before block {i}")))?;
+        }
+        let before = r.bit_pos();
+        decompress_block(&mut r, &comp.table, config, chunk)?;
+        let used = (r.bit_pos() - before) as u32;
+        if used != comp.block_bits[i] {
+            return Err(Error::Corrupt(format!(
+                "block {i}: consumed {used} bits, framing recorded {}",
+                comp.block_bits[i]
+            )));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbdi::encode::GbdiCodec;
+    use crate::util::prng::Rng;
+
+    fn codec() -> GbdiCodec {
+        let cfg = GbdiConfig::default();
+        let table = GlobalBaseTable::new(
+            vec![(1000, 8), (1 << 20, 16), (3_000_000_000, 8)],
+            cfg.word_size,
+            1,
+        );
+        GbdiCodec::new(table, cfg)
+    }
+
+    fn mixed_image(len_words: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Rng::new(seed);
+        (0..len_words)
+            .flat_map(|_| {
+                let v: u32 = match rng.below(5) {
+                    0 => 1000u32.wrapping_add(rng.range_i64(-127, 127) as u32),
+                    1 => (1u32 << 20).wrapping_add(rng.range_i64(-30_000, 30_000) as u32),
+                    2 => 3_000_000_000u32.wrapping_add(rng.range_i64(-100, 100) as u32),
+                    3 => 0,
+                    _ => rng.next_u32(),
+                };
+                v.to_le_bytes()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_mixed_image() {
+        let image = mixed_image(4096, 11);
+        let c = codec();
+        let comp = c.compress_image(&image);
+        assert_eq!(decompress_image(&comp).unwrap(), image);
+        assert!(comp.ratio() > 1.0, "ratio {}", comp.ratio());
+    }
+
+    #[test]
+    fn roundtrip_ragged_image() {
+        let mut image = mixed_image(100, 12);
+        image.extend_from_slice(&[1, 2, 3]); // ragged tail
+        let c = codec();
+        let comp = c.compress_image(&image);
+        assert_eq!(decompress_image(&comp).unwrap(), image);
+    }
+
+    #[test]
+    fn roundtrip_empty_image() {
+        let c = codec();
+        let comp = c.compress_image(&[]);
+        assert_eq!(decompress_image(&comp).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn truncated_payload_detected() {
+        let image = mixed_image(1024, 13);
+        let c = codec();
+        let mut comp = c.compress_image(&image);
+        comp.payload.truncate(comp.payload.len() / 2);
+        assert!(decompress_image(&comp).is_err());
+    }
+
+    #[test]
+    fn framing_mismatch_detected() {
+        let image = mixed_image(512, 14);
+        let c = codec();
+        let mut comp = c.compress_image(&image);
+        comp.block_bits.pop();
+        assert!(decompress_image(&comp).is_err());
+        let mut comp = c.compress_image(&image);
+        if comp.block_bits[0] > 2 {
+            comp.block_bits[0] -= 1;
+            assert!(decompress_image(&comp).is_err());
+        }
+    }
+
+    #[test]
+    fn corrupted_payload_cannot_panic() {
+        // flip bits through the payload; decode must return Ok(wrong) or
+        // Err, never panic.
+        let image = mixed_image(512, 15);
+        let c = codec();
+        let comp = c.compress_image(&image);
+        let mut rng = Rng::new(16);
+        for _ in 0..200 {
+            let mut bad = comp.clone();
+            if bad.payload.is_empty() {
+                break;
+            }
+            let i = rng.below(bad.payload.len() as u64) as usize;
+            bad.payload[i] ^= 1 << rng.below(8);
+            let _ = decompress_image(&bad);
+        }
+    }
+}

@@ -1,0 +1,467 @@
+//! The GBDI compression engine: block-level encoder + whole-image framing.
+//!
+//! Wire format, per block (bit-packed, LSB-first — see [`crate::util::bits`]):
+//!
+//! ```text
+//! tag:2                       RAW | ZERO | REP | GBDI
+//! RAW  -> block_bytes * 8 raw bits
+//! ZERO -> (nothing)
+//! REP  -> one word
+//! GBDI -> per word: base_ptr:ceil(log2(K+1))
+//!           base_ptr == K (escape) -> word bits raw (outlier)
+//!           else                   -> delta in width(base_ptr) bits
+//!                                     (offset-binary; width 0 = exact hit)
+//! ```
+//!
+//! The encoder never expands pathological data by more than the 2-bit tag
+//! per block: if the GBDI payload would be ≥ the raw block, it emits RAW.
+
+use super::table::GlobalBaseTable;
+use super::{BlockMode, CompressedImage, GbdiConfig};
+use crate::util::bits::BitWriter;
+use crate::value::read_word;
+
+/// Per-image statistics gathered while compressing (for reports and the
+/// coordinator's metrics).
+#[derive(Debug, Clone, Default)]
+pub struct EncodeStats {
+    /// Blocks by mode.
+    pub raw_blocks: u64,
+    /// All-zero blocks.
+    pub zero_blocks: u64,
+    /// Repeated-word blocks.
+    pub rep_blocks: u64,
+    /// GBDI-encoded blocks.
+    pub gbdi_blocks: u64,
+    /// Words encoded as (base, delta) pairs.
+    pub encoded_words: u64,
+    /// Words stored as outliers inside GBDI blocks.
+    pub outlier_words: u64,
+    /// Total delta bits emitted.
+    pub delta_bits: u64,
+}
+
+impl EncodeStats {
+    /// Accumulate another stats block (parallel chunk merge).
+    pub fn merge(&mut self, o: &EncodeStats) {
+        self.raw_blocks += o.raw_blocks;
+        self.zero_blocks += o.zero_blocks;
+        self.rep_blocks += o.rep_blocks;
+        self.gbdi_blocks += o.gbdi_blocks;
+        self.encoded_words += o.encoded_words;
+        self.outlier_words += o.outlier_words;
+        self.delta_bits += o.delta_bits;
+    }
+
+    /// Outlier fraction among words in GBDI blocks.
+    pub fn outlier_frac(&self) -> f64 {
+        let total = self.encoded_words + self.outlier_words;
+        if total == 0 {
+            0.0
+        } else {
+            self.outlier_words as f64 / total as f64
+        }
+    }
+}
+
+/// The GBDI codec: a validated config + the global base table to encode
+/// against. Cheap to clone; the coordinator clones one per worker.
+#[derive(Debug, Clone)]
+pub struct GbdiCodec {
+    table: GlobalBaseTable,
+    config: GbdiConfig,
+}
+
+impl GbdiCodec {
+    /// Build a codec. Panics on invalid config (validate first for a
+    /// recoverable path) or table/config word-size mismatch.
+    pub fn new(table: GlobalBaseTable, config: GbdiConfig) -> Self {
+        config.validate().expect("invalid GbdiConfig");
+        assert_eq!(table.word_size, config.word_size, "table/config word size mismatch");
+        assert!(
+            table.len() <= config.num_bases,
+            "table has {} bases, config allows {}",
+            table.len(),
+            config.num_bases
+        );
+        GbdiCodec { table, config }
+    }
+
+    /// The table this codec encodes against.
+    pub fn table(&self) -> &GlobalBaseTable {
+        &self.table
+    }
+
+    /// The codec configuration.
+    pub fn config(&self) -> &GbdiConfig {
+        &self.config
+    }
+
+    /// Compress one block into `w`. Returns the mode chosen and the payload
+    /// bits written (including the tag).
+    pub fn compress_block(&self, block: &[u8], w: &mut BitWriter, stats: &mut EncodeStats) -> (BlockMode, u32) {
+        let mut plan = Vec::new();
+        self.compress_block_with(block, w, stats, &mut plan)
+    }
+
+    /// [`Self::compress_block`] with a caller-provided plan scratch buffer
+    /// (the image loop reuses one allocation across all blocks).
+    fn compress_block_with(
+        &self,
+        block: &[u8],
+        w: &mut BitWriter,
+        stats: &mut EncodeStats,
+        plan: &mut Vec<(u64, i64, u32)>,
+    ) -> (BlockMode, u32) {
+        let start = w.bit_len();
+        let ws = self.config.word_size;
+        // Ragged tail blocks (image not a multiple of block size): raw.
+        if block.len() != self.config.block_bytes {
+            self.emit_raw(block, w, stats);
+            return (BlockMode::Raw, (w.bit_len() - start) as u32);
+        }
+        let n_words = self.config.words_per_block();
+
+        // Single pass: load the words once (stack buffer for cache-line
+        // sized blocks), detecting ZERO and REP on the way.
+        let mut words_buf = [0u64; 64];
+        let mut words_big: Vec<u64> = Vec::new(); // oversized-block path only
+        let words: &[u64] = if n_words <= 64 {
+            let mut rep = true;
+            let first = read_word(block, 0, ws);
+            for i in 0..n_words {
+                let v = read_word(block, i, ws);
+                words_buf[i] = v;
+                rep &= v == first;
+            }
+            if rep {
+                if first == 0 {
+                    w.put(BlockMode::Zero as u64, 2);
+                    stats.zero_blocks += 1;
+                    return (BlockMode::Zero, (w.bit_len() - start) as u32);
+                }
+                w.put(BlockMode::Rep as u64, 2);
+                self.put_word(w, first);
+                stats.rep_blocks += 1;
+                return (BlockMode::Rep, (w.bit_len() - start) as u32);
+            }
+            &words_buf[..n_words]
+        } else {
+            // oversized blocks: keep the two-pass path (cold config)
+            if block.iter().all(|&b| b == 0) {
+                w.put(BlockMode::Zero as u64, 2);
+                stats.zero_blocks += 1;
+                return (BlockMode::Zero, (w.bit_len() - start) as u32);
+            }
+            let first = read_word(block, 0, ws);
+            if (1..n_words).all(|i| read_word(block, i, ws) == first) {
+                w.put(BlockMode::Rep as u64, 2);
+                self.put_word(w, first);
+                stats.rep_blocks += 1;
+                return (BlockMode::Rep, (w.bit_len() - start) as u32);
+            }
+            words_big.clear();
+            words_big.extend((0..n_words).map(|i| read_word(block, i, ws)));
+            &words_big[..]
+        };
+
+        // GBDI path: plan the block first (cheap), emit only if it wins.
+        let ptr_bits = self.config.base_ptr_bits();
+        let word_bits = ws.bits();
+        plan.clear(); // (ptr, delta, width), or (escape, value, MAX) per word
+        let mut gbdi_bits: u64 = 2;
+        let mut outliers = 0u64;
+        for &v in words {
+            match self.table.best_base(v) {
+                Some((idx, delta, width)) => {
+                    plan.push((idx as u64, delta, width));
+                    gbdi_bits += (ptr_bits + width) as u64;
+                }
+                None => {
+                    plan.push((self.config.outlier_code(), v as i64, u32::MAX));
+                    gbdi_bits += (ptr_bits + word_bits) as u64;
+                    outliers += 1;
+                }
+            }
+        }
+        let raw_bits = 2 + (block.len() as u64) * 8;
+        if gbdi_bits >= raw_bits {
+            self.emit_raw(block, w, stats);
+            return (BlockMode::Raw, (w.bit_len() - start) as u32);
+        }
+        w.put(BlockMode::Gbdi as u64, 2);
+        for &(ptr, delta, width) in plan.iter() {
+            w.put(ptr, ptr_bits);
+            if width == u32::MAX {
+                // outlier: raw word (delta field holds the value)
+                self.put_word(w, delta as u64);
+            } else if width > 0 {
+                w.put_signed(delta, width);
+                stats.delta_bits += width as u64;
+            }
+        }
+        stats.gbdi_blocks += 1;
+        stats.encoded_words += (n_words as u64) - outliers;
+        stats.outlier_words += outliers;
+        (BlockMode::Gbdi, (w.bit_len() - start) as u32)
+    }
+
+    fn emit_raw(&self, block: &[u8], w: &mut BitWriter, stats: &mut EncodeStats) {
+        w.put(BlockMode::Raw as u64, 2);
+        for &b in block {
+            w.put(b as u64, 8);
+        }
+        stats.raw_blocks += 1;
+    }
+
+    #[inline]
+    fn put_word(&self, w: &mut BitWriter, v: u64) {
+        w.put(v, self.config.word_size.bits());
+    }
+
+    /// Compress a whole image into a framed [`CompressedImage`].
+    pub fn compress_image(&self, image: &[u8]) -> CompressedImage {
+        self.compress_image_stats(image).0
+    }
+
+    /// [`Self::compress_image`] also returning encode statistics.
+    pub fn compress_image_stats(&self, image: &[u8]) -> (CompressedImage, EncodeStats) {
+        let mut w = BitWriter::with_capacity(image.len() / 2 + 64);
+        let mut stats = EncodeStats::default();
+        let mut block_bits = Vec::with_capacity(image.len() / self.config.block_bytes + 1);
+        let mut plan = Vec::with_capacity(self.config.words_per_block());
+        for block in image.chunks(self.config.block_bytes) {
+            let (_, bits) = self.compress_block_with(block, &mut w, &mut stats, &mut plan);
+            block_bits.push(bits);
+        }
+        (
+            CompressedImage {
+                table: self.table.clone(),
+                original_len: image.len(),
+                block_bits,
+                payload: w.finish(),
+                chunk_blocks: 0,
+                config: self.config.clone(),
+            },
+            stats,
+        )
+    }
+
+    /// Parallel whole-image compression: blocks are split into chunks of
+    /// `CHUNK_BLOCKS`, each compressed on its own thread into a
+    /// byte-aligned sub-stream, then concatenated. The decoder realigns
+    /// at chunk boundaries (`chunk_blocks` in the frame), so the result
+    /// is bit-exact-decodable like the serial stream (and the ratio is
+    /// identical up to <1 byte of padding per 256 KiB chunk).
+    pub fn compress_image_parallel(&self, image: &[u8], threads: usize) -> (CompressedImage, EncodeStats) {
+        const CHUNK_BLOCKS: usize = 4096;
+        let chunk_bytes = CHUNK_BLOCKS * self.config.block_bytes;
+        if threads <= 1 || image.len() <= chunk_bytes {
+            return self.compress_image_stats(image);
+        }
+        let chunks: Vec<&[u8]> = image.chunks(chunk_bytes).collect();
+        let results = crate::util::pool::parallel_map_chunks(&chunks, threads, |_, piece| {
+            piece
+                .iter()
+                .map(|chunk| {
+                    let mut w = BitWriter::with_capacity(chunk.len() / 2 + 64);
+                    let mut stats = EncodeStats::default();
+                    let mut block_bits = Vec::with_capacity(CHUNK_BLOCKS);
+                    let mut plan = Vec::with_capacity(self.config.words_per_block());
+                    for block in chunk.chunks(self.config.block_bytes) {
+                        let (_, bits) = self.compress_block_with(block, &mut w, &mut stats, &mut plan);
+                        block_bits.push(bits);
+                    }
+                    (w.finish(), block_bits, stats)
+                })
+                .collect::<Vec<_>>()
+        });
+        let mut payload = Vec::with_capacity(image.len() / 2);
+        let mut block_bits = Vec::with_capacity(image.len() / self.config.block_bytes + 1);
+        let mut stats = EncodeStats::default();
+        for (bytes, bits, s) in results {
+            payload.extend_from_slice(&bytes);
+            block_bits.extend_from_slice(&bits);
+            stats.merge(&s);
+        }
+        (
+            CompressedImage {
+                table: self.table.clone(),
+                original_len: image.len(),
+                block_bits,
+                payload,
+                chunk_blocks: CHUNK_BLOCKS,
+                config: self.config.clone(),
+            },
+            stats,
+        )
+    }
+
+    /// Exact compressed bit size of `block` without emitting anything —
+    /// the L3 mirror of the L1 `size_estimate` kernel; used by the
+    /// coordinator to score candidate tables.
+    pub fn estimate_block_bits(&self, block: &[u8]) -> u64 {
+        if block.len() != self.config.block_bytes {
+            return 2 + block.len() as u64 * 8;
+        }
+        let ws = self.config.word_size;
+        if block.iter().all(|&b| b == 0) {
+            return 2;
+        }
+        let n_words = self.config.words_per_block();
+        let first = read_word(block, 0, ws);
+        if (1..n_words).all(|i| read_word(block, i, ws) == first) {
+            return 2 + ws.bits() as u64;
+        }
+        let ptr_bits = self.config.base_ptr_bits() as u64;
+        let mut bits = 2u64;
+        for i in 0..n_words {
+            let v = read_word(block, i, ws);
+            bits += ptr_bits
+                + match self.table.best_base(v) {
+                    Some((_, _, width)) => width as u64,
+                    None => ws.bits() as u64,
+                };
+        }
+        bits.min(2 + block.len() as u64 * 8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbdi::decode;
+    use crate::util::prng::Rng;
+
+    fn codec_with_bases(bases: &[(u64, u32)]) -> GbdiCodec {
+        let cfg = GbdiConfig::default();
+        let table = GlobalBaseTable::new(bases.to_vec(), cfg.word_size, 1);
+        GbdiCodec::new(table, cfg)
+    }
+
+    fn block_of_words(words: &[u32]) -> Vec<u8> {
+        words.iter().flat_map(|w| w.to_le_bytes()).collect()
+    }
+
+    #[test]
+    fn zero_block_is_two_bits() {
+        let codec = codec_with_bases(&[(0, 8)]);
+        let mut w = BitWriter::new();
+        let mut s = EncodeStats::default();
+        let (mode, bits) = codec.compress_block(&[0u8; 64], &mut w, &mut s);
+        assert_eq!(mode, BlockMode::Zero);
+        assert_eq!(bits, 2);
+        assert_eq!(s.zero_blocks, 1);
+    }
+
+    #[test]
+    fn rep_block_is_tag_plus_word() {
+        let codec = codec_with_bases(&[(0, 8)]);
+        let block = block_of_words(&[0xDEADBEEF; 16]);
+        let mut w = BitWriter::new();
+        let mut s = EncodeStats::default();
+        let (mode, bits) = codec.compress_block(&block, &mut w, &mut s);
+        assert_eq!(mode, BlockMode::Rep);
+        assert_eq!(bits, 2 + 32);
+    }
+
+    #[test]
+    fn clustered_block_compresses_gbdi() {
+        let codec = codec_with_bases(&[(1000, 8), (1 << 20, 8)]);
+        let words: Vec<u32> = (0..16)
+            .map(|i| if i % 2 == 0 { 1000 + i } else { (1 << 20) + i })
+            .collect();
+        let block = block_of_words(&words);
+        let mut w = BitWriter::new();
+        let mut s = EncodeStats::default();
+        let (mode, bits) = codec.compress_block(&block, &mut w, &mut s);
+        assert_eq!(mode, BlockMode::Gbdi);
+        assert!(bits < 64 * 8 / 2, "should compress >2x, got {bits} bits");
+        assert_eq!(s.outlier_words, 0);
+        assert_eq!(s.encoded_words, 16);
+    }
+
+    #[test]
+    fn random_block_falls_back_to_raw() {
+        let codec = codec_with_bases(&[(1000, 8)]);
+        let mut rng = Rng::new(3);
+        let mut block = vec![0u8; 64];
+        rng.fill_bytes(&mut block);
+        let mut w = BitWriter::new();
+        let mut s = EncodeStats::default();
+        let (mode, bits) = codec.compress_block(&block, &mut w, &mut s);
+        assert_eq!(mode, BlockMode::Raw);
+        assert_eq!(bits, 2 + 64 * 8);
+    }
+
+    #[test]
+    fn ragged_tail_stored_raw() {
+        let codec = codec_with_bases(&[(0, 8)]);
+        let mut w = BitWriter::new();
+        let mut s = EncodeStats::default();
+        let (mode, bits) = codec.compress_block(&[7u8; 10], &mut w, &mut s);
+        assert_eq!(mode, BlockMode::Raw);
+        assert_eq!(bits, 2 + 80);
+    }
+
+    #[test]
+    fn estimate_matches_actual_bits() {
+        let mut rng = Rng::new(9);
+        let codec = codec_with_bases(&[(1000, 16), (1 << 24, 8), (7_000_000, 24)]);
+        for _ in 0..300 {
+            let words: Vec<u32> = (0..16)
+                .map(|_| match rng.below(4) {
+                    0 => 1000u32.wrapping_add(rng.range_i64(-30000, 30000) as u32),
+                    1 => (1u32 << 24).wrapping_add(rng.range_i64(-100, 100) as u32),
+                    2 => 0,
+                    _ => rng.next_u32(),
+                })
+                .collect();
+            let block = block_of_words(&words);
+            let mut w = BitWriter::new();
+            let mut s = EncodeStats::default();
+            let (_, bits) = codec.compress_block(&block, &mut w, &mut s);
+            assert_eq!(codec.estimate_block_bits(&block), bits as u64);
+        }
+    }
+
+    #[test]
+    fn image_roundtrip_and_ratio() {
+        let mut rng = Rng::new(4);
+        // words near two bases + zeros => highly compressible
+        let words: Vec<u32> = (0..16 * 1024)
+            .map(|_| match rng.below(3) {
+                0 => 5000u32.wrapping_add(rng.range_i64(-100, 100) as u32),
+                1 => (1u32 << 28).wrapping_add(rng.range_i64(-100, 100) as u32),
+                _ => 0,
+            })
+            .collect();
+        let image = block_of_words(&words);
+        let codec = codec_with_bases(&[(5000, 8), (1 << 28, 8)]);
+        let (comp, stats) = codec.compress_image_stats(&image);
+        assert!(comp.ratio() > 2.0, "ratio {}", comp.ratio());
+        assert!(stats.gbdi_blocks + stats.zero_blocks + stats.rep_blocks > 0);
+        let restored = decode::decompress_image(&comp).unwrap();
+        assert_eq!(restored, image);
+    }
+
+    #[test]
+    fn block_bits_sum_matches_payload() {
+        let mut rng = Rng::new(8);
+        let mut image = vec![0u8; 64 * 100];
+        rng.fill_bytes(&mut image[..3000]);
+        let codec = codec_with_bases(&[(0, 16)]);
+        let comp = codec.compress_image(&image);
+        let total_bits: u64 = comp.block_bits.iter().map(|&b| b as u64).sum();
+        assert_eq!(comp.payload.len(), ((total_bits + 7) / 8) as usize);
+        assert_eq!(comp.block_bits.len(), 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "word size mismatch")]
+    fn word_size_mismatch_panics() {
+        let cfg = GbdiConfig::default(); // W32
+        let table = GlobalBaseTable::new(vec![(0, 8)], crate::value::WordSize::W64, 0);
+        GbdiCodec::new(table, cfg);
+    }
+}

@@ -1,0 +1,232 @@
+//! The GBDI codec — Global-Base Delta-Immediate compression (HPCA'22,
+//! reimplemented per the CS.DC'25 paper).
+//!
+//! Pipeline:
+//!
+//! 1. **Background analysis** ([`analyze`]) — sample word values from the
+//!    target data, cluster them (modified k-means, bit-cost metric), and
+//!    derive a [`table::GlobalBaseTable`]: K global bases, each paired
+//!    with a *maximum delta* width class.
+//! 2. **Compression** ([`encode`]) — per 64-byte block, encode each word
+//!    as (base pointer, variable-width delta), with outlier escapes and
+//!    ZERO/REP/RAW fast paths.
+//! 3. **Decompression** ([`decode`]) — format decoding, global table
+//!    access, bit-exact value reconstruction.
+//!
+//! The encodings are bit-exact and lossless; every compressed image
+//! round-trips byte-identically (enforced by the `roundtrip` integration
+//! suite and property tests).
+
+pub mod analyze;
+pub mod decode;
+pub mod encode;
+pub mod table;
+
+pub use analyze::{analyze_image, analyze_samples};
+pub use table::GlobalBaseTable;
+
+use crate::value::WordSize;
+
+/// Per-block encoding mode tag (2 bits on the wire).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockMode {
+    /// Block stored verbatim.
+    Raw = 0,
+    /// All-zero block (payload-free).
+    Zero = 1,
+    /// Single repeated word (one word payload).
+    Rep = 2,
+    /// GBDI base+delta payload.
+    Gbdi = 3,
+}
+
+impl BlockMode {
+    /// Decode a 2-bit tag.
+    pub fn from_tag(tag: u64) -> BlockMode {
+        match tag & 0b11 {
+            0 => BlockMode::Raw,
+            1 => BlockMode::Zero,
+            2 => BlockMode::Rep,
+            _ => BlockMode::Gbdi,
+        }
+    }
+}
+
+/// Codec configuration. Defaults follow the papers: 64-byte blocks of
+/// 32-bit words, 64 global bases, width classes {0,4,8,16,24}.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GbdiConfig {
+    /// Block size in bytes (a cache line in the papers).
+    pub block_bytes: usize,
+    /// Word granularity.
+    pub word_size: WordSize,
+    /// Number of global bases (table capacity). Base pointer width is
+    /// `ceil(log2(num_bases + 1))` — the +1 is the outlier escape code.
+    pub num_bases: usize,
+    /// Sorted, strictly increasing delta width classes (bits). Class 0
+    /// means "exact match with the base".
+    pub width_classes: Vec<u32>,
+    /// Samples fed to background analysis.
+    pub analysis_samples: usize,
+    /// k-means iterations during analysis.
+    pub analysis_iters: usize,
+    /// Quantile of |delta| within a cluster used to pick the cluster's
+    /// max-delta class (values beyond it become outliers).
+    pub delta_quantile: f64,
+    /// Analysis PRNG seed.
+    pub seed: u64,
+}
+
+impl Default for GbdiConfig {
+    fn default() -> Self {
+        GbdiConfig {
+            block_bytes: 64,
+            word_size: WordSize::W32,
+            num_bases: 64,
+            width_classes: vec![0, 4, 8, 12, 16, 20, 24],
+            analysis_samples: 4096,
+            analysis_iters: 16,
+            delta_quantile: 0.95,
+            seed: 0x6BD1_5EED,
+        }
+    }
+}
+
+impl GbdiConfig {
+    /// Validate invariants; returns a human-readable complaint if invalid.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.block_bytes == 0 || self.block_bytes % self.word_size.bytes() != 0 {
+            return Err(format!(
+                "block_bytes {} must be a positive multiple of the word size {}",
+                self.block_bytes,
+                self.word_size.bytes()
+            ));
+        }
+        if self.num_bases < 1 || self.num_bases > 4096 {
+            return Err(format!("num_bases {} out of range [1, 4096]", self.num_bases));
+        }
+        if self.width_classes.is_empty() {
+            return Err("width_classes must be non-empty".into());
+        }
+        if !self.width_classes.windows(2).all(|w| w[0] < w[1]) {
+            return Err("width_classes must be strictly increasing".into());
+        }
+        if *self.width_classes.last().unwrap() > self.word_size.bits() {
+            return Err("largest width class exceeds word width".into());
+        }
+        if !(0.5..=1.0).contains(&self.delta_quantile) {
+            return Err("delta_quantile must be in [0.5, 1.0]".into());
+        }
+        Ok(())
+    }
+
+    /// Words per block.
+    #[inline]
+    pub fn words_per_block(&self) -> usize {
+        self.block_bytes / self.word_size.bytes()
+    }
+
+    /// Bits of the per-word base pointer (including the outlier escape).
+    #[inline]
+    pub fn base_ptr_bits(&self) -> u32 {
+        // num_bases real pointers + 1 escape code
+        64 - (self.num_bases as u64).leading_zeros() // ceil(log2(n+1)) for n>=1
+    }
+
+    /// The escape code marking an outlier (all base-pointer bits set would
+    /// waste codes; we use exactly `num_bases`).
+    #[inline]
+    pub fn outlier_code(&self) -> u64 {
+        self.num_bases as u64
+    }
+}
+
+/// A compressed memory image: framed container written by
+/// [`encode::GbdiCodec::compress_image`].
+#[derive(Debug, Clone)]
+pub struct CompressedImage {
+    /// Serialized global base table the payload references.
+    pub table: table::GlobalBaseTable,
+    /// Original image length in bytes.
+    pub original_len: usize,
+    /// Per-block bit lengths (for the memory-simulator's sector layout);
+    /// one entry per block.
+    pub block_bits: Vec<u32>,
+    /// The packed payload.
+    pub payload: Vec<u8>,
+    /// Parallel-compression chunking: every `chunk_blocks`-th block starts
+    /// byte-aligned (0 = unchunked serial stream).
+    pub chunk_blocks: usize,
+    /// Codec config used (needed to decode).
+    pub config: GbdiConfig,
+}
+
+impl CompressedImage {
+    /// Compressed payload size in bytes (excluding table + framing).
+    pub fn payload_len(&self) -> usize {
+        self.payload.len()
+    }
+
+    /// Total compressed size in bytes including the serialized table and
+    /// per-image framing — the honest numerator for compression ratios.
+    pub fn total_len(&self) -> usize {
+        self.payload.len() + self.table.serialized_len() + 16
+    }
+
+    /// Compression ratio original/compressed (the paper's metric).
+    pub fn ratio(&self) -> f64 {
+        self.original_len as f64 / self.total_len() as f64
+    }
+}
+
+/// Re-export: the codec object.
+pub use encode::GbdiCodec;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_valid() {
+        GbdiConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn base_ptr_bits_counts_escape() {
+        let mut c = GbdiConfig::default();
+        c.num_bases = 64;
+        assert_eq!(c.base_ptr_bits(), 7); // 64 bases + escape needs 7 bits
+        c.num_bases = 63;
+        assert_eq!(c.base_ptr_bits(), 6); // 63 + escape = 64 codes -> 6 bits
+        c.num_bases = 1;
+        assert_eq!(c.base_ptr_bits(), 1);
+        c.num_bases = 127;
+        assert_eq!(c.base_ptr_bits(), 7);
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = GbdiConfig::default();
+        c.block_bytes = 30;
+        assert!(c.validate().is_err());
+        let mut c = GbdiConfig::default();
+        c.width_classes = vec![4, 4];
+        assert!(c.validate().is_err());
+        let mut c = GbdiConfig::default();
+        c.width_classes = vec![0, 40];
+        assert!(c.validate().is_err());
+        let mut c = GbdiConfig::default();
+        c.num_bases = 0;
+        assert!(c.validate().is_err());
+        let mut c = GbdiConfig::default();
+        c.delta_quantile = 0.2;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn block_mode_tags_roundtrip() {
+        for m in [BlockMode::Raw, BlockMode::Zero, BlockMode::Rep, BlockMode::Gbdi] {
+            assert_eq!(BlockMode::from_tag(m as u64), m);
+        }
+    }
+}

@@ -1,0 +1,477 @@
+//! The global base table: GBDI's shared dictionary of (base value,
+//! max-delta width class) pairs, produced by background analysis and
+//! consulted by both the encoder and the decoder.
+//!
+//! The width class of a base *is* the wire width of every delta encoded
+//! against it (GBDI pairs each global base with a maximum delta, so the
+//! decompressor knows each field's width from the base pointer alone —
+//! no per-value width metadata).
+
+use crate::cluster::wrapping_delta;
+use crate::util::bits::signed_width;
+use crate::value::WordSize;
+use crate::{Error, Result};
+
+/// One global base: a word value paired with its maximum-delta class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BaseEntry {
+    /// The base value.
+    pub base: u64,
+    /// Width class (bits) of the delta field for this base. A word with
+    /// `signed_width(v - base) <= width` can use it; the delta is stored
+    /// in exactly `width` bits (0 = exact-match base, no delta field).
+    pub width: u32,
+}
+
+impl BaseEntry {
+    /// Whether signed delta `d` is encodable against this base.
+    #[inline]
+    pub fn fits(&self, d: i64) -> bool {
+        signed_width(d) <= self.width
+    }
+}
+
+/// Bucket granularity for the W32 fast-path index: the 32-bit value space
+/// is split into 4096 buckets of 2^20 values; each bucket lists the table
+/// entries whose coverage interval intersects it, sorted by (width, base)
+/// so the first fitting candidate has minimal wire cost.
+const BUCKET_SHIFT: u32 = 20;
+const NUM_BUCKETS: usize = 1 << (32 - BUCKET_SHIFT);
+
+/// The global base table. Bases are kept **sorted by value**; a
+/// bucket index over the 32-bit value space accelerates the encoder's
+/// per-word base search (the compression hot path). Tables carry a
+/// version id so the coordinator can swap them without ambiguity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GlobalBaseTable {
+    entries: Vec<BaseEntry>,
+    /// Largest width class present (scan radius for the encoder search).
+    max_width: u32,
+    /// W32 fast path, CSR layout: `bucket_off[b]..bucket_off[b+1]` slices
+    /// `bucket_cands` with the candidate entry indices for bucket `b`,
+    /// sorted by (width, base). Deterministic from `entries`, rebuilt on
+    /// deserialize; empty for W64 tables.
+    bucket_off: Vec<u32>,
+    bucket_cands: Vec<u16>,
+    /// Monotonic version assigned by the coordinator (0 = ad-hoc).
+    pub version: u64,
+    /// Word granularity the table was built for.
+    pub word_size: WordSize,
+}
+
+fn build_buckets(entries: &[BaseEntry], word_size: WordSize) -> (Vec<u32>, Vec<u16>) {
+    if word_size != WordSize::W32 || entries.len() > u16::MAX as usize {
+        return (Vec::new(), Vec::new());
+    }
+    let mut buckets: Vec<Vec<u16>> = vec![Vec::new(); NUM_BUCKETS];
+    for (i, e) in entries.iter().enumerate() {
+        // coverage: v in [base - 2^(w-1), base + 2^(w-1) - 1] (wrapping)
+        let span: u32 = if e.width == 0 { 0 } else { 1u32 << (e.width - 1) };
+        let lo = (e.base as u32).wrapping_sub(span);
+        let hi = (e.base as u32).wrapping_add(span.saturating_sub(1));
+        let b0 = lo >> BUCKET_SHIFT;
+        let b1 = hi >> BUCKET_SHIFT;
+        let count = if b1 >= b0 {
+            b1 - b0 + 1
+        } else {
+            NUM_BUCKETS as u32 - b0 + b1 + 1 // wrapped interval
+        };
+        for j in 0..count {
+            buckets[((b0 + j) as usize) & (NUM_BUCKETS - 1)].push(i as u16);
+        }
+    }
+    // flatten to CSR, candidates width-sorted for early exit
+    let mut off = Vec::with_capacity(NUM_BUCKETS + 1);
+    let mut cands = Vec::with_capacity(buckets.iter().map(|b| b.len()).sum());
+    off.push(0u32);
+    for b in &mut buckets {
+        b.sort_by_key(|&i| (entries[i as usize].width, entries[i as usize].base));
+        cands.extend_from_slice(b);
+        off.push(cands.len() as u32);
+    }
+    (off, cands)
+}
+
+impl GlobalBaseTable {
+    /// Build a table from (base, width) pairs. Bases are sorted and
+    /// deduplicated (keeping the widest class per duplicate base). A zero
+    /// base with an 8-bit class is pinned if absent — HPCA'22 reserves
+    /// base 0 so small immediates always encode.
+    pub fn new(mut pairs: Vec<(u64, u32)>, word_size: WordSize, version: u64) -> Self {
+        if !pairs.iter().any(|&(b, _)| b == 0) {
+            pairs.push((0, 8));
+        }
+        pairs.sort_unstable();
+        // dedup keeping max width
+        let mut entries: Vec<BaseEntry> = Vec::with_capacity(pairs.len());
+        for (base, width) in pairs {
+            debug_assert!(width <= word_size.bits());
+            match entries.last_mut() {
+                Some(last) if last.base == base => last.width = last.width.max(width),
+                _ => entries.push(BaseEntry { base, width }),
+            }
+        }
+        let max_width = entries.iter().map(|e| e.width).max().unwrap_or(0);
+        let (bucket_off, bucket_cands) = build_buckets(&entries, word_size);
+        GlobalBaseTable { entries, max_width, bucket_off, bucket_cands, version, word_size }
+    }
+
+    /// Number of bases.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True if the table has no bases (never the case after `new`).
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The entries, sorted ascending by base value.
+    pub fn entries(&self) -> &[BaseEntry] {
+        &self.entries
+    }
+
+    /// Entry by index.
+    #[inline]
+    pub fn get(&self, idx: usize) -> BaseEntry {
+        self.entries[idx]
+    }
+
+    /// Largest width class in the table.
+    pub fn max_width(&self) -> u32 {
+        self.max_width
+    }
+
+    /// Find a cheapest encodable (base index, delta, field width) for
+    /// `v`. The cost of a candidate is **its entry's width** (that is
+    /// what the wire pays); among equal-width fits any candidate yields
+    /// an identical compressed size, so the search stops at the first
+    /// one. Returns `None` when `v` is an outlier for every base.
+    ///
+    /// W32 tables use the bucket index (the compression hot path): the
+    /// candidates for `v`'s bucket are pre-sorted by width, so the scan
+    /// stops at the first width group containing a fit. W64 tables fall
+    /// back to a range-bounded sorted scan. Both are exact (verified
+    /// against [`Self::best_base_exhaustive`] by property tests).
+    #[inline]
+    pub fn best_base(&self, v: u64) -> Option<(usize, i64, u32)> {
+        if !self.bucket_off.is_empty() {
+            return self.best_base_bucketed(v);
+        }
+        self.best_base_scan(v)
+    }
+
+    /// W32 fast path: walk the bucket's width-sorted candidates; the
+    /// first fit is a minimal-width fit.
+    #[inline]
+    fn best_base_bucketed(&self, v: u64) -> Option<(usize, i64, u32)> {
+        let b = (v as u32 >> BUCKET_SHIFT) as usize;
+        let (lo, hi) = (self.bucket_off[b] as usize, self.bucket_off[b + 1] as usize);
+        for &i in &self.bucket_cands[lo..hi] {
+            let e = self.entries[i as usize];
+            let d = wrapping_delta(v, e.base, self.word_size);
+            if e.fits(d) {
+                return Some((i as usize, d, e.width));
+            }
+        }
+        None
+    }
+
+    /// Range-bounded sorted scan (W64 path): binary-search to the
+    /// insertion point, then scan outward in both directions only while
+    /// bases remain within the largest class's delta range (plus
+    /// wrap-around scans from both array ends).
+    ///
+    /// Complete by construction: any base that can encode `v` lies within
+    /// `±2^(max_width-1)` of it (mod the word ring), and all four scans
+    /// stop only once they leave that range.
+    fn best_base_scan(&self, v: u64) -> Option<(usize, i64, u32)> {
+        let max_abs: i64 = if self.max_width == 0 { 0 } else { 1i64 << (self.max_width - 1) };
+        let idx = self.entries.partition_point(|e| e.base <= v);
+        let mut best: Option<(usize, i64, u32)> = None;
+        let consider = |i: usize, best: &mut Option<(usize, i64, u32)>| -> i64 {
+            let e = self.entries[i];
+            let d = wrapping_delta(v, e.base, self.word_size);
+            if e.fits(d) {
+                let better = match *best {
+                    None => true,
+                    Some((_, _, bw)) => e.width < bw,
+                };
+                if better {
+                    *best = Some((i, d, e.width));
+                }
+            }
+            d
+        };
+        // Downward scan (bases <= v): delta grows as we go down; stop once
+        // it exceeds the widest class's range (or wraps negative).
+        let mut i = idx;
+        while i > 0 {
+            i -= 1;
+            let d = consider(i, &mut best);
+            if d > max_abs || d < 0 {
+                break;
+            }
+        }
+        // Upward scan (bases > v): delta is negative and shrinking.
+        let mut i = idx;
+        while i < self.entries.len() {
+            let d = consider(i, &mut best);
+            if d < -max_abs || d > 0 {
+                break;
+            }
+            i += 1;
+        }
+        // Wrap-around: small v reaching the largest bases…
+        let mut i = self.entries.len();
+        while i > idx {
+            i -= 1;
+            let d = consider(i, &mut best);
+            if d.abs() > max_abs {
+                break;
+            }
+        }
+        // …and large v reaching the smallest bases.
+        let mut i = 0;
+        while i < idx {
+            let d = consider(i, &mut best);
+            if d.abs() > max_abs {
+                break;
+            }
+            i += 1;
+        }
+        best
+    }
+
+    /// Exhaustive variant of [`best_base`] (O(K)); used by tests to verify
+    /// the indexed searches never miss a cheaper width, and by callers
+    /// with tiny tables.
+    pub fn best_base_exhaustive(&self, v: u64) -> Option<(usize, i64, u32)> {
+        let mut best: Option<(usize, i64, u32)> = None;
+        for (i, e) in self.entries.iter().enumerate() {
+            let d = wrapping_delta(v, e.base, self.word_size);
+            if e.fits(d) {
+                let better = match best {
+                    None => true,
+                    Some((_, _, bw)) => e.width < bw,
+                };
+                if better {
+                    best = Some((i, d, e.width));
+                }
+            }
+        }
+        best
+    }
+
+    /// Serialized length in bytes (see [`GlobalBaseTable::serialize`]).
+    pub fn serialized_len(&self) -> usize {
+        // magic(4) + version(8) + word_size(1) + count(2) + entries * (word + 1)
+        15 + self.entries.len() * (self.word_size.bytes() + 1)
+    }
+
+    /// Serialize (little-endian framing) for embedding in compressed
+    /// images and for the coordinator's table ring.
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.serialized_len());
+        out.extend_from_slice(b"GBT1");
+        out.extend_from_slice(&self.version.to_le_bytes());
+        out.push(match self.word_size {
+            WordSize::W32 => 4,
+            WordSize::W64 => 8,
+        });
+        out.extend_from_slice(&(self.entries.len() as u16).to_le_bytes());
+        for e in &self.entries {
+            match self.word_size {
+                WordSize::W32 => out.extend_from_slice(&(e.base as u32).to_le_bytes()),
+                WordSize::W64 => out.extend_from_slice(&e.base.to_le_bytes()),
+            }
+            out.push(e.width as u8);
+        }
+        out
+    }
+
+    /// Parse a serialized table; returns the table and bytes consumed.
+    pub fn deserialize(data: &[u8]) -> Result<(GlobalBaseTable, usize)> {
+        if data.len() < 15 || &data[0..4] != b"GBT1" {
+            return Err(Error::Corrupt("bad table magic".into()));
+        }
+        let version = u64::from_le_bytes(data[4..12].try_into().unwrap());
+        let word_size = match data[12] {
+            4 => WordSize::W32,
+            8 => WordSize::W64,
+            b => return Err(Error::Corrupt(format!("bad word size {b}"))),
+        };
+        let count = u16::from_le_bytes(data[13..15].try_into().unwrap()) as usize;
+        let entry_len = word_size.bytes() + 1;
+        let need = 15 + count * entry_len;
+        if data.len() < need {
+            return Err(Error::Corrupt("truncated table".into()));
+        }
+        let mut entries = Vec::with_capacity(count);
+        for i in 0..count {
+            let o = 15 + i * entry_len;
+            let base = match word_size {
+                WordSize::W32 => u32::from_le_bytes(data[o..o + 4].try_into().unwrap()) as u64,
+                WordSize::W64 => u64::from_le_bytes(data[o..o + 8].try_into().unwrap()),
+            };
+            let width = data[o + word_size.bytes()] as u32;
+            if width > word_size.bits() {
+                return Err(Error::Corrupt(format!("width {width} exceeds word")));
+            }
+            entries.push(BaseEntry { base, width });
+        }
+        if !entries.windows(2).all(|w| w[0].base < w[1].base) {
+            return Err(Error::Corrupt("table bases not sorted/unique".into()));
+        }
+        let max_width = entries.iter().map(|e| e.width).max().unwrap_or(0);
+        let (bucket_off, bucket_cands) = build_buckets(&entries, word_size);
+        Ok((GlobalBaseTable { entries, max_width, bucket_off, bucket_cands, version, word_size }, need))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn zero_base_pinned() {
+        let t = GlobalBaseTable::new(vec![(100, 8)], WordSize::W32, 1);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.entries()[0].base, 0);
+    }
+
+    #[test]
+    fn dedup_keeps_widest() {
+        let t = GlobalBaseTable::new(vec![(0, 4), (0, 16), (5, 8), (5, 4)], WordSize::W32, 0);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.entries()[0], BaseEntry { base: 0, width: 16 });
+        assert_eq!(t.entries()[1], BaseEntry { base: 5, width: 8 });
+        assert_eq!(t.max_width(), 16);
+    }
+
+    #[test]
+    fn best_base_prefers_cheapest_field() {
+        // value 1005: fits base 1000 (w=8, cost 8) and base 1004 (w=4, cost 4).
+        let t = GlobalBaseTable::new(vec![(1000, 8), (1004, 4)], WordSize::W32, 0);
+        let (i, d, w) = t.best_base(1005).unwrap();
+        assert_eq!(t.get(i).base, 1004);
+        assert_eq!(d, 1);
+        assert_eq!(w, 4);
+        // exact match on a zero-width base costs 0
+        let t = GlobalBaseTable::new(vec![(7777, 0), (7770, 8)], WordSize::W32, 0);
+        let (i, d, w) = t.best_base(7777).unwrap();
+        assert_eq!(t.get(i).base, 7777);
+        assert_eq!((d, w), (0, 0));
+    }
+
+    #[test]
+    fn outlier_when_nothing_fits() {
+        let t = GlobalBaseTable::new(vec![(1000, 4)], WordSize::W32, 0);
+        assert!(t.best_base(1007).is_some());
+        assert!(t.best_base(1009).is_none()); // needs 5 bits, zero base needs 11
+        assert!(t.best_base(500_000_000).is_none());
+    }
+
+    #[test]
+    fn fits_respects_offset_binary_asymmetry() {
+        let e = BaseEntry { base: 100, width: 4 };
+        assert!(e.fits(7)); // [-8, 7]
+        assert!(e.fits(-8));
+        assert!(!e.fits(8));
+        assert!(!e.fits(-9));
+        let e0 = BaseEntry { base: 5, width: 0 };
+        assert!(e0.fits(0));
+        assert!(!e0.fits(1));
+        assert!(!e0.fits(-1));
+    }
+
+    #[test]
+    fn windowed_search_matches_exhaustive() {
+        let mut rng = Rng::new(77);
+        for trial in 0..30 {
+            let k = 1 + rng.below(96) as usize;
+            let pairs: Vec<(u64, u32)> = (0..k)
+                .map(|_| {
+                    // mix of dense and sparse bases
+                    let base = if rng.chance(0.3) {
+                        rng.below(1 << 16)
+                    } else {
+                        rng.next_u32() as u64
+                    };
+                    (base, [0u32, 4, 8, 16, 24][rng.below(5) as usize])
+                })
+                .collect();
+            let t = GlobalBaseTable::new(pairs, WordSize::W32, 0);
+            for _ in 0..2000 {
+                let v = if rng.chance(0.5) {
+                    let e = t.get(rng.below(t.len() as u64) as usize);
+                    crate::cluster::apply_delta(
+                        e.base,
+                        rng.range_i64(-40_000, 40_000),
+                        WordSize::W32,
+                    )
+                } else {
+                    rng.next_u32() as u64
+                };
+                let fast = t.best_base(v);
+                let slow = t.best_base_exhaustive(v);
+                // same minimal width (any same-width base costs the same
+                // bits); fast result must itself be a valid encoding
+                assert_eq!(fast.map(|(_, _, w)| w), slow.map(|(_, _, w)| w), "trial {trial}, v={v}");
+                if let Some((i, d, w)) = fast {
+                    let e = t.get(i);
+                    assert_eq!(e.width, w);
+                    assert!(e.fits(d));
+                    assert_eq!(crate::cluster::apply_delta(e.base, d, WordSize::W32), v);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wraparound_candidates_work_w32() {
+        // base at u32::MAX - 2 with a 4-bit class: value 1 is delta +4
+        // under wrapping, cheaper (4 bits) than the pinned zero base (8).
+        let t = GlobalBaseTable::new(vec![(u32::MAX as u64 - 2, 4)], WordSize::W32, 0);
+        let (i, d, w) = t.best_base(1).unwrap();
+        assert_eq!(t.get(i).base, u32::MAX as u64 - 2);
+        assert_eq!((d, w), (4, 4));
+        // and the mirror: value near MAX reaching base 0 (pinned, w=8)
+        let t = GlobalBaseTable::new(vec![(1 << 20, 4)], WordSize::W32, 0);
+        let (i, d, _) = t.best_base(u32::MAX as u64 - 6).unwrap();
+        assert_eq!(t.get(i).base, 0);
+        assert_eq!(d, -7);
+    }
+
+    #[test]
+    fn serialize_roundtrip() {
+        let mut rng = Rng::new(5);
+        for ws in [WordSize::W32, WordSize::W64] {
+            let pairs: Vec<(u64, u32)> = (0..37)
+                .map(|_| {
+                    let v = if ws == WordSize::W32 { rng.next_u32() as u64 } else { rng.next_u64() };
+                    (v, rng.below(24) as u32)
+                })
+                .collect();
+            let t = GlobalBaseTable::new(pairs, ws, 99);
+            let bytes = t.serialize();
+            assert_eq!(bytes.len(), t.serialized_len());
+            let (t2, consumed) = GlobalBaseTable::deserialize(&bytes).unwrap();
+            assert_eq!(consumed, bytes.len());
+            assert_eq!(t, t2);
+        }
+    }
+
+    #[test]
+    fn deserialize_rejects_garbage() {
+        assert!(GlobalBaseTable::deserialize(b"nope").is_err());
+        let t = GlobalBaseTable::new(vec![(7, 8)], WordSize::W32, 0);
+        let mut bytes = t.serialize();
+        bytes.truncate(bytes.len() - 1);
+        assert!(GlobalBaseTable::deserialize(&bytes).is_err());
+        let mut bytes = t.serialize();
+        bytes[12] = 3; // bad word size
+        assert!(GlobalBaseTable::deserialize(&bytes).is_err());
+    }
+}

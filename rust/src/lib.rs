@@ -1,0 +1,73 @@
+//! # gbdi — Global-Base Delta-Immediate memory compression
+//!
+//! A production-shaped reproduction of *“Implementation and Evaluation of
+//! GBDI Memory Compression Algorithm Using C/C++ on a Broader Range of
+//! Workloads”* (CS.DC 2025), which itself reimplements GBDI from HPCA'22
+//! (Angerd et al.).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (build-time Python): k-means assignment /
+//!   centroid update / compressed-size estimation, tiled for VMEM + MXU.
+//! * **L2** — JAX analysis graphs (build-time Python): the full background
+//!   data-analysis loop, AOT-lowered to HLO text in `artifacts/`.
+//! * **L3** — this crate: the bit-exact compression/decompression engines,
+//!   global-base-table lifecycle, workload substrate, compressed-memory
+//!   simulator, and a serving-style [`coordinator`] that runs the L2
+//!   artifacts through PJRT ([`runtime`]) off the hot path.
+//!
+//! Quickstart:
+//!
+//! ```
+//! use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig};
+//! use gbdi::workloads;
+//!
+//! // 1 MiB of mcf-like memory content.
+//! let image = workloads::by_name("mcf").unwrap().generate(1 << 20, 7);
+//! // Background analysis -> global base table.
+//! let cfg = GbdiConfig::default();
+//! let table = analyze::analyze_image(&image, &cfg);
+//! let codec = GbdiCodec::new(table, cfg);
+//! let compressed = codec.compress_image(&image);
+//! let restored = gbdi::gbdi::decode::decompress_image(&compressed).unwrap();
+//! assert_eq!(restored, image);
+//! ```
+
+pub mod baselines;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod elf;
+pub mod gbdi;
+pub mod memsim;
+pub mod report;
+pub mod runtime;
+pub mod util;
+pub mod value;
+pub mod workloads;
+
+pub use gbdi::{GbdiCodec, GbdiConfig};
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Compressed stream is malformed (truncated, bad tag, bad table id...).
+    #[error("corrupt compressed stream: {0}")]
+    Corrupt(String),
+    /// ELF parse errors from the dump substrate.
+    #[error("elf: {0}")]
+    Elf(String),
+    /// PJRT / XLA runtime errors.
+    #[error("runtime: {0}")]
+    Runtime(String),
+    /// Configuration errors (bad K, bad width classes, ...).
+    #[error("config: {0}")]
+    Config(String),
+    /// I/O.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

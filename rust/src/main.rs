@@ -1,0 +1,373 @@
+//! `gbdi` — the leader binary: workload/dump generation, analysis,
+//! compression, verification, the Figure-1 experiment, the coordinator
+//! service demo, and the memsim bandwidth experiment.
+//!
+//! Run `gbdi --help` for the command list; every experiment in
+//! EXPERIMENTS.md names the command that regenerates it.
+
+use gbdi::baselines::{self, Codec, GbdiWholeImage};
+use gbdi::cli::{App, Arg};
+use gbdi::coordinator::{AnalyzerBackend, CompressionService, ServiceConfig};
+use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig};
+use gbdi::memsim::{self, trace, CompressedMemory, DramModel};
+use gbdi::report::{bar_chart, fmt_bytes, fmt_ratio, Table};
+use gbdi::runtime::ArtifactRuntime;
+use gbdi::util::prng::Rng;
+use gbdi::{elf, workloads};
+use std::sync::Arc;
+
+fn app() -> App {
+    App::new("gbdi", "GBDI memory compression — paper reproduction toolkit")
+        .subcommand(
+            App::new("gen", "generate a synthetic memory dump (ELF core)")
+                .arg(Arg::opt("workload", "mcf", "workload name (see `list`)"))
+                .arg(Arg::opt("size", "16m", "image bytes (k/m/g suffixes)"))
+                .arg(Arg::opt("seed", "7", "generator seed"))
+                .arg(Arg::req("out", "output ELF path")),
+        )
+        .subcommand(App::new("list", "list the paper's nine workloads"))
+        .subcommand(
+            App::new("analyze", "background analysis: print the global base table")
+                .arg(Arg::pos("input", "ELF dump or raw image"))
+                .arg(Arg::opt("bases", "64", "number of global bases"))
+                .arg(Arg::opt("samples", "4096", "analysis sample words")),
+        )
+        .subcommand(
+            App::new("compress", "compress a dump/file into a .gbdi container")
+                .arg(Arg::pos("input", "ELF dump or raw image"))
+                .arg(Arg::req("out", "output .gbdi path"))
+                .arg(Arg::opt("bases", "64", "number of global bases")),
+        )
+        .subcommand(
+            App::new("decompress", "decompress a .gbdi container")
+                .arg(Arg::pos("input", ".gbdi container"))
+                .arg(Arg::req("out", "output path")),
+        )
+        .subcommand(
+            App::new("verify", "compress + decompress + bit-exactness check")
+                .arg(Arg::pos("input", "ELF dump or raw image")),
+        )
+        .subcommand(
+            App::new("figure1", "reproduce the paper's Figure 1 (per-workload ratios)")
+                .arg(Arg::opt("size", "8m", "image bytes per workload"))
+                .arg(Arg::opt("seed", "7", "generator seed"))
+                .arg(Arg::opt("csv", "", "also write CSV here")),
+        )
+        .subcommand(
+            App::new("serve", "run the coordinator service demo")
+                .arg(Arg::opt("pages", "512", "pages to stream"))
+                .arg(Arg::opt("workers", "4", "compression workers"))
+                .arg(Arg::opt("workload", "mix", "workload or 'mix'"))
+                .arg(Arg::opt("config", "", "TOML config file ([codec] + [service])"))
+                .arg(Arg::flag("native", "force native k-means (skip PJRT artifacts)")),
+        )
+        .subcommand(
+            App::new("memsim", "compressed-memory bandwidth experiment (E7)")
+                .arg(Arg::opt("workload", "triangle_count", "workload name"))
+                .arg(Arg::opt("size", "4m", "image bytes"))
+                .arg(Arg::opt("trace", "streaming", "streaming|uniform|zipf"))
+                .arg(Arg::opt("accesses", "65536", "trace length"))
+                .arg(Arg::opt("burst", "16", "DRAM burst bytes")),
+        )
+        .subcommand(App::new("info", "platform + artifact status"))
+}
+
+fn load_image(path: &str) -> gbdi::Result<Vec<u8>> {
+    let raw = std::fs::read(path)?;
+    // ELF? take the loadable segments; otherwise treat as a raw image
+    if raw.len() >= 4 && raw[0..4] == [0x7F, b'E', b'L', b'F'] {
+        Ok(elf::parse(&raw)?.flatten())
+    } else {
+        Ok(raw)
+    }
+}
+
+fn cmd_gen(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
+    let name = m.get("workload");
+    let w = workloads::by_name(name)
+        .ok_or_else(|| gbdi::Error::Config(format!("unknown workload '{name}'")))?;
+    let image = w.generate(m.get_usize("size"), m.get_u64("seed"));
+    let seg = elf::Segment { vaddr: 0x10000, flags: 6, data: image };
+    let file = elf::write_core(&[seg]);
+    std::fs::write(m.get("out"), &file)?;
+    println!("wrote {} ({}) for workload {}", m.get("out"), fmt_bytes(file.len() as u64), w.name());
+    Ok(())
+}
+
+fn cmd_list() {
+    let mut t = Table::new(&["name", "group", "paper dump", "memory model"]);
+    for w in workloads::all() {
+        t.row(&[
+            w.name().to_string(),
+            w.group().label().to_string(),
+            w.paper_dump().to_string(),
+            w.description().to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+fn cmd_analyze(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
+    let image = load_image(m.get("input"))?;
+    let cfg = GbdiConfig {
+        num_bases: m.get_usize("bases"),
+        analysis_samples: m.get_usize("samples"),
+        ..Default::default()
+    };
+    cfg.validate().map_err(gbdi::Error::Config)?;
+    let table = analyze::analyze_image(&image, &cfg);
+    println!("image: {} ({})", m.get("input"), fmt_bytes(image.len() as u64));
+    println!("global bases: {} (budget {})", table.len(), cfg.num_bases);
+    let mut t = Table::new(&["base (hex)", "width class"]);
+    for e in table.entries().iter().take(32) {
+        t.row(&[format!("{:#010x}", e.base), format!("{} bits", e.width)]);
+    }
+    print!("{}", t.render());
+    if table.len() > 32 {
+        println!("... and {} more", table.len() - 32);
+    }
+    let codec = GbdiCodec::new(table, cfg);
+    let (comp, stats) = codec.compress_image_stats(&image);
+    println!(
+        "ratio {}  blocks: {} gbdi / {} zero / {} rep / {} raw  outliers {:.2}%",
+        fmt_ratio(comp.ratio()),
+        stats.gbdi_blocks,
+        stats.zero_blocks,
+        stats.rep_blocks,
+        stats.raw_blocks,
+        stats.outlier_frac() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_compress(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
+    let image = load_image(m.get("input"))?;
+    let codec = GbdiWholeImage {
+        config: GbdiConfig { num_bases: m.get_usize("bases"), ..Default::default() },
+    };
+    let comp = codec.compress(&image);
+    std::fs::write(m.get("out"), &comp)?;
+    println!(
+        "{} -> {}: {} -> {} ({})",
+        m.get("input"),
+        m.get("out"),
+        fmt_bytes(image.len() as u64),
+        fmt_bytes(comp.len() as u64),
+        fmt_ratio(image.len() as f64 / comp.len() as f64)
+    );
+    Ok(())
+}
+
+fn cmd_decompress(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
+    let comp = std::fs::read(m.get("input"))?;
+    let len = GbdiWholeImage::container_len(&comp)?;
+    let out = GbdiWholeImage::default().decompress(&comp, len)?;
+    std::fs::write(m.get("out"), &out)?;
+    println!("{} -> {} ({})", m.get("input"), m.get("out"), fmt_bytes(out.len() as u64));
+    Ok(())
+}
+
+fn cmd_verify(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
+    let image = load_image(m.get("input"))?;
+    let codec = GbdiWholeImage::default();
+    let t0 = std::time::Instant::now();
+    let comp = codec.compress(&image);
+    let t_c = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let back = codec.decompress(&comp, image.len())?;
+    let t_d = t0.elapsed();
+    let ok = back == image;
+    println!(
+        "reconstruction: {}  ratio {}  compress {:.1} MiB/s  decompress {:.1} MiB/s",
+        if ok { "BIT-EXACT" } else { "MISMATCH" },
+        fmt_ratio(image.len() as f64 / comp.len() as f64),
+        image.len() as f64 / (1 << 20) as f64 / t_c.as_secs_f64(),
+        image.len() as f64 / (1 << 20) as f64 / t_d.as_secs_f64(),
+    );
+    if !ok {
+        return Err(gbdi::Error::Corrupt("roundtrip mismatch".into()));
+    }
+    Ok(())
+}
+
+fn cmd_figure1(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
+    let size = m.get_usize("size");
+    let seed = m.get_u64("seed");
+    let codec = GbdiWholeImage::default();
+    let mut items = Vec::new();
+    let mut c_ratios = Vec::new();
+    let mut j_ratios = Vec::new();
+    for w in workloads::all() {
+        let img = w.generate(size, seed);
+        let r = baselines::ratio_of(&codec, &img);
+        items.push((w.name().to_string(), r));
+        if w.group().is_c_family() {
+            c_ratios.push(r);
+        } else {
+            j_ratios.push(r);
+        }
+    }
+    println!("{}", bar_chart("Figure 1 — GBDI compression ratio per workload", &items, 48));
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let all: Vec<f64> = items.iter().map(|(_, r)| *r).collect();
+    println!(
+        "C-workloads mean {} (paper: 1.4x) | Java mean {} (paper: 1.55x) | overall {} (paper: 1.45x)",
+        fmt_ratio(mean(&c_ratios)),
+        fmt_ratio(mean(&j_ratios)),
+        fmt_ratio(mean(&all)),
+    );
+    let csv_path = m.get("csv");
+    if !csv_path.is_empty() {
+        let mut t = Table::new(&["workload", "ratio"]);
+        for (n, r) in &items {
+            t.row(&[n.clone(), format!("{r:.4}")]);
+        }
+        std::fs::write(csv_path, t.csv())?;
+        println!("csv written to {csv_path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
+    let pages = m.get_u64("pages");
+    let backend = if m.get_flag("native") {
+        AnalyzerBackend::Native
+    } else {
+        match ArtifactRuntime::new(ArtifactRuntime::default_dir()) {
+            Ok(rt) if rt.has_artifact("kmeans_k64") => {
+                println!("analyzer backend: PJRT artifacts ({})", rt.platform());
+                AnalyzerBackend::Artifact(Arc::new(rt))
+            }
+            _ => {
+                println!("analyzer backend: native (artifacts not found)");
+                AnalyzerBackend::Native
+            }
+        }
+    };
+    let mut cfg = match m.get("config") {
+        "" => ServiceConfig { analyze_every: 64, ..Default::default() },
+        path => gbdi::config::ConfigFile::load(path)
+            .and_then(|f| f.service_config())
+            .map_err(gbdi::Error::Config)?,
+    };
+    cfg.workers = m.get_usize("workers");
+    let svc = CompressionService::start(cfg, backend)?;
+    let names: Vec<&str> = match m.get("workload") {
+        "mix" => vec!["mcf", "perlbench", "fluidanimate", "triangle_count", "svm"],
+        w => vec![w],
+    };
+    let mut rng = Rng::new(1);
+    for i in 0..pages {
+        let w = workloads::by_name(names[rng.below(names.len() as u64) as usize])
+            .ok_or_else(|| gbdi::Error::Config("unknown workload".into()))?;
+        svc.submit(i, w.generate(4096, i));
+        if i % 128 == 127 {
+            svc.flush();
+            let snap = svc.metrics();
+            println!(
+                "pages {:>6}  ratio {}  {:.0} MiB/s  analyses {} swaps {} (table v{})",
+                snap.pages_in,
+                fmt_ratio(snap.ratio()),
+                snap.compress_mib_s(),
+                snap.analyses,
+                snap.table_swaps,
+                svc.current_version()
+            );
+        }
+    }
+    svc.flush();
+    let migrated = svc.recompress_step()?;
+    let (logical, stored, ratio) = svc.storage_ratio();
+    let snap = svc.shutdown();
+    println!(
+        "final: {} pages, {} -> {} stored ({}), {} migrated, {} swaps",
+        snap.pages_in,
+        fmt_bytes(logical as u64),
+        fmt_bytes(stored as u64),
+        fmt_ratio(ratio),
+        migrated,
+        snap.table_swaps
+    );
+    Ok(())
+}
+
+fn cmd_memsim(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
+    let w = workloads::by_name(m.get("workload"))
+        .ok_or_else(|| gbdi::Error::Config("unknown workload".into()))?;
+    let image = w.generate(m.get_usize("size"), 7);
+    let cfg = GbdiConfig::default();
+    let table = analyze::analyze_image(&image, &cfg);
+    let mut mem = CompressedMemory::new(GbdiCodec::new(table, cfg));
+    mem.store_image(&image);
+    let kind = trace::TraceKind::parse(m.get("trace"))
+        .ok_or_else(|| gbdi::Error::Config("bad trace kind".into()))?;
+    let tr = trace::generate(kind, mem.total_blocks(), m.get_usize("accesses"), 0.1, 9);
+    let model = DramModel { burst_bytes: m.get_u64("burst"), meta_miss: 0.05 };
+    let rep = memsim::replay(&mut mem, &tr, &model)?;
+    println!(
+        "workload {} trace {}: capacity {}  bandwidth amplification {:.3}x",
+        w.name(),
+        kind.label(),
+        fmt_ratio(mem.capacity_ratio()),
+        rep.amplification
+    );
+    let mut t = Table::new(&["memory-bound fraction", "speedup"]);
+    for (f, s) in &rep.speedup_at {
+        t.row(&[format!("{f:.1}"), format!("{s:.3}x")]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_info() {
+    println!("gbdi {} — three-layer GBDI reproduction", env!("CARGO_PKG_VERSION"));
+    let dir = ArtifactRuntime::default_dir();
+    println!("artifact dir: {}", dir.display());
+    match ArtifactRuntime::new(&dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            for stem in ["kmeans_k16", "kmeans_k64", "sizeest_k64"] {
+                println!(
+                    "  {stem}: {}",
+                    if rt.has_artifact(stem) { "present" } else { "MISSING (run `make artifacts`)" }
+                );
+            }
+        }
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match app().parse_subcommands(argv) {
+        Ok(p) => p,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let m = &parsed.matches;
+    let result = match parsed.command.as_str() {
+        "gen" => cmd_gen(m),
+        "list" => {
+            cmd_list();
+            Ok(())
+        }
+        "analyze" => cmd_analyze(m),
+        "compress" => cmd_compress(m),
+        "decompress" => cmd_decompress(m),
+        "verify" => cmd_verify(m),
+        "figure1" => cmd_figure1(m),
+        "serve" => cmd_serve(m),
+        "memsim" => cmd_memsim(m),
+        "info" => {
+            cmd_info();
+            Ok(())
+        }
+        _ => unreachable!("parse_subcommands validated"),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

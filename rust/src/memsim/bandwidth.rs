@@ -1,0 +1,178 @@
+//! DRAM transfer model + trace replay: turns compressed block sizes into
+//! the bandwidth-amplification and speedup numbers of experiment E7.
+//!
+//! Model: the channel moves data in `burst_bytes` beats (64 B = one raw
+//! block). A compressed read moves `ceil(compressed_bytes / burst)`
+//! bursts, plus a metadata burst with probability `meta_miss` (the side
+//! table is cached in the controller; HPCA'22 reports high hit rates).
+//! Writes move the newly compressed size. Bandwidth amplification =
+//! raw bytes the trace *logically* touches / bytes actually moved.
+//!
+//! The speedup proxy follows the classic memory-bound scaling argument:
+//! a workload spending fraction `f_mem` of its time memory-stalled speeds
+//! up by `1 / (1 - f_mem + f_mem / amp)` when effective bandwidth grows
+//! by `amp` — the regime the paper's "medium-high memory intensity"
+//! phrase refers to.
+
+use super::mem::CompressedMemory;
+use super::trace::Access;
+use crate::Result;
+
+/// Channel / controller parameters.
+#[derive(Debug, Clone)]
+pub struct DramModel {
+    /// Bytes per burst (matches the raw block size).
+    pub burst_bytes: u64,
+    /// Probability a block's metadata lookup misses the controller cache
+    /// and costs one extra burst.
+    pub meta_miss: f64,
+}
+
+impl Default for DramModel {
+    fn default() -> Self {
+        DramModel { burst_bytes: 64, meta_miss: 0.05 }
+    }
+}
+
+/// Replay outcome.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    /// Accesses replayed.
+    pub accesses: u64,
+    /// Logical bytes touched (accesses × block size).
+    pub logical_bytes: u64,
+    /// Bytes moved by the compressed memory (incl. metadata bursts).
+    pub compressed_bytes: u64,
+    /// Bandwidth amplification (logical / compressed).
+    pub amplification: f64,
+    /// Speedup proxy at the given memory-bound fraction.
+    pub speedup_at: Vec<(f64, f64)>,
+}
+
+impl ReplayReport {
+    /// Speedup for a memory-stall fraction `f_mem` given this
+    /// amplification.
+    pub fn speedup(&self, f_mem: f64) -> f64 {
+        let amp = self.amplification.max(1e-9);
+        1.0 / ((1.0 - f_mem) + f_mem / amp)
+    }
+}
+
+/// Replay a trace against compressed memory under the DRAM model.
+///
+/// `meta_miss` is charged deterministically as an expected value (no
+/// extra randomness: replay is reproducible).
+pub fn replay(mem: &mut CompressedMemory, trace: &[Access], model: &DramModel) -> Result<ReplayReport> {
+    let block_bytes = mem.block_bytes() as u64;
+    let mut moved_bursts_x1000: u64 = 0; // fixed-point: bursts * 1000
+    for a in trace {
+        let bits = mem.block_bits(a.block % mem.total_blocks())?;
+        let bytes = (bits as u64 + 7) / 8;
+        let bursts = (bytes + model.burst_bytes - 1) / model.burst_bytes;
+        moved_bursts_x1000 += bursts * 1000 + (model.meta_miss * 1000.0) as u64;
+        if a.is_write {
+            // write path: read-modify-write moves the same compressed size
+            moved_bursts_x1000 += bursts * 1000;
+        }
+    }
+    let logical: u64 = trace
+        .iter()
+        .map(|a| if a.is_write { 2 * block_bytes } else { block_bytes })
+        .sum();
+    let compressed = moved_bursts_x1000 * model.burst_bytes / 1000;
+    let amplification = logical as f64 / compressed.max(1) as f64;
+    let mut report = ReplayReport {
+        accesses: trace.len() as u64,
+        logical_bytes: logical,
+        compressed_bytes: compressed,
+        amplification,
+        speedup_at: Vec::new(),
+    };
+    report.speedup_at =
+        [0.2, 0.4, 0.6, 0.8].iter().map(|&f| (f, report.speedup(f))).collect();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbdi::{analyze, GbdiCodec, GbdiConfig};
+    use crate::memsim::trace::{generate, TraceKind};
+    use crate::workloads;
+
+    fn setup(image: &[u8]) -> CompressedMemory {
+        let cfg = GbdiConfig::default();
+        let table = analyze::analyze_image(image, &cfg);
+        let mut mem = CompressedMemory::new(GbdiCodec::new(table, cfg));
+        mem.store_image(image);
+        mem
+    }
+
+    #[test]
+    fn zeros_amplify_hugely() {
+        let mut mem = setup(&vec![0u8; 1 << 16]);
+        let trace = generate(TraceKind::Streaming, mem.total_blocks(), 4096, 0.0, 1);
+        let rep = replay(&mut mem, &trace, &DramModel::default()).unwrap();
+        // zero blocks still cost one burst + metadata, so amp ≈ 1/(1+0.05)... no:
+        // one burst minimum per access -> amp ≈ 64 / (64*1.05) ≈ 0.95? No -
+        // zero block = 2 bits -> 1 burst. raw = 1 burst. metadata 0.05.
+        // Amplification comes from multi-burst raw blocks vs 1-burst
+        // compressed; with burst == block size both cost 1 burst and amp ~ 0.95.
+        // This documents the model honestly: block-granular DRAM cannot gain
+        // on single-block reads; gains need burst_bytes < block or prefetch.
+        assert!(rep.amplification > 0.9 && rep.amplification < 1.05, "amp {}", rep.amplification);
+    }
+
+    #[test]
+    fn fine_bursts_show_compression_gains() {
+        // 16-byte bursts (HBM-like small beats): compressed blocks move fewer
+        let image = workloads::by_name("triangle_count").unwrap().generate(1 << 18, 5);
+        let mut mem = setup(&image);
+        let model = DramModel { burst_bytes: 16, meta_miss: 0.05 };
+        let trace = generate(TraceKind::Streaming, mem.total_blocks(), 8192, 0.0, 2);
+        let rep = replay(&mut mem, &trace, &model).unwrap();
+        assert!(rep.amplification > 1.15, "amp {}", rep.amplification);
+        // speedup proxy is monotone in f_mem
+        assert!(rep.speedup(0.8) > rep.speedup(0.2));
+        assert!(rep.speedup(0.0) == 1.0);
+    }
+
+    #[test]
+    fn incompressible_never_amplifies_above_one() {
+        let mut rng = crate::util::prng::Rng::new(3);
+        let mut noise = vec![0u8; 1 << 16];
+        rng.fill_bytes(&mut noise);
+        let mut mem = setup(&noise);
+        let model = DramModel { burst_bytes: 16, meta_miss: 0.05 };
+        let trace = generate(TraceKind::Uniform, mem.total_blocks(), 4096, 0.2, 3);
+        let rep = replay(&mut mem, &trace, &model).unwrap();
+        assert!(rep.amplification <= 1.02, "amp {}", rep.amplification);
+        // raw fallback costs the 2-bit tag, which rounds a 64-byte block up
+        // to a 5th 16-byte burst: the model honestly charges ~0.8×
+        assert!(rep.amplification > 0.75, "bounded penalty {}", rep.amplification);
+    }
+
+    #[test]
+    fn writes_count_double() {
+        let image = vec![0u8; 1 << 14];
+        let mut mem = setup(&image);
+        let reads = generate(TraceKind::Streaming, mem.total_blocks(), 1000, 0.0, 4);
+        let writes = generate(TraceKind::Streaming, mem.total_blocks(), 1000, 1.0, 4);
+        let m = DramModel::default();
+        let rr = replay(&mut mem, &reads, &m).unwrap();
+        let rw = replay(&mut mem, &writes, &m).unwrap();
+        assert!(rw.logical_bytes == 2 * rr.logical_bytes);
+    }
+
+    #[test]
+    fn report_fields_consistent() {
+        let image = workloads::by_name("mcf").unwrap().generate(1 << 16, 9);
+        let mut mem = setup(&image);
+        let trace = generate(TraceKind::Zipf { exponent_milli: 1000 }, mem.total_blocks(), 2000, 0.1, 5);
+        let rep = replay(&mut mem, &trace, &DramModel { burst_bytes: 16, meta_miss: 0.0 }).unwrap();
+        assert_eq!(rep.accesses, 2000);
+        assert_eq!(rep.speedup_at.len(), 4);
+        let recomputed = rep.logical_bytes as f64 / rep.compressed_bytes as f64;
+        assert!((recomputed - rep.amplification).abs() < 1e-9);
+    }
+}

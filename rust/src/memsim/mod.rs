@@ -1,0 +1,23 @@
+//! Compressed main-memory simulator — the substrate behind experiment E7
+//! (the HPCA'22 claims the paper quotes in §III: "1.5× higher bandwidth,
+//! 1.1× higher performance").
+//!
+//! Three pieces:
+//!
+//! * [`mem`] — a compressed memory: pages stored as GBDI-compressed
+//!   blocks in fixed sectors with a metadata table (per-block sector
+//!   count), capacity accounting, and transparent block read/write with
+//!   recompression.
+//! * [`trace`] — synthetic access traces (streaming, uniform, Zipf
+//!   hot-set) over a workload image.
+//! * [`bandwidth`] — a DRAM transfer model that replays a trace against
+//!   raw vs compressed memory and reports bandwidth amplification plus a
+//!   memory-bound speedup proxy.
+
+pub mod bandwidth;
+pub mod mem;
+pub mod trace;
+
+pub use bandwidth::{replay, DramModel, ReplayReport};
+pub use mem::CompressedMemory;
+pub use trace::{Access, TraceKind};

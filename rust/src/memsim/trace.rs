@@ -1,0 +1,130 @@
+//! Synthetic memory access traces: the workload side of the bandwidth
+//! experiment (E7). Real controllers see a mix of streaming scans,
+//! uniform pointer chasing, and hot-set (Zipf) reuse; the three kinds
+//! here bracket that space.
+
+use crate::util::prng::Rng;
+
+/// One block-granular access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Access {
+    /// Logical block address.
+    pub block: u64,
+    /// Write (true) or read (false).
+    pub is_write: bool,
+}
+
+/// Trace shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Sequential sweep over the whole region (memcpy/scan-like).
+    Streaming,
+    /// Uniform random blocks (pointer chasing, hash probing).
+    Uniform,
+    /// Zipf-distributed hot set (cache-filtered traffic).
+    Zipf {
+        /// Skew exponent (≈1.0 for typical hot sets).
+        exponent_milli: u32,
+    },
+}
+
+impl TraceKind {
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Option<TraceKind> {
+        match s {
+            "streaming" | "stream" => Some(TraceKind::Streaming),
+            "uniform" | "random" => Some(TraceKind::Uniform),
+            "zipf" => Some(TraceKind::Zipf { exponent_milli: 1000 }),
+            _ => None,
+        }
+    }
+
+    /// Display name.
+    pub fn label(&self) -> String {
+        match self {
+            TraceKind::Streaming => "streaming".into(),
+            TraceKind::Uniform => "uniform".into(),
+            TraceKind::Zipf { exponent_milli } => {
+                format!("zipf(s={:.2})", *exponent_milli as f64 / 1000.0)
+            }
+        }
+    }
+}
+
+/// Generate `n` accesses over `total_blocks` with the given write
+/// fraction. Deterministic in `seed`.
+pub fn generate(
+    kind: TraceKind,
+    total_blocks: u64,
+    n: usize,
+    write_frac: f64,
+    seed: u64,
+) -> Vec<Access> {
+    assert!(total_blocks > 0);
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let block = match kind {
+                TraceKind::Streaming => (i as u64) % total_blocks,
+                TraceKind::Uniform => rng.below(total_blocks),
+                TraceKind::Zipf { exponent_milli } => {
+                    rng.zipf(total_blocks, exponent_milli as f64 / 1000.0)
+                }
+            };
+            Access { block, is_write: rng.chance(write_frac) }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streaming_is_sequential_modulo() {
+        let t = generate(TraceKind::Streaming, 10, 25, 0.0, 1);
+        assert_eq!(t.len(), 25);
+        for (i, a) in t.iter().enumerate() {
+            assert_eq!(a.block, (i as u64) % 10);
+            assert!(!a.is_write);
+        }
+    }
+
+    #[test]
+    fn uniform_covers_range() {
+        let t = generate(TraceKind::Uniform, 64, 10_000, 0.5, 2);
+        let mut seen = vec![false; 64];
+        let mut writes = 0;
+        for a in &t {
+            assert!(a.block < 64);
+            seen[a.block as usize] = true;
+            writes += a.is_write as u32;
+        }
+        assert!(seen.iter().all(|&s| s));
+        let frac = writes as f64 / t.len() as f64;
+        assert!((frac - 0.5).abs() < 0.03, "write frac {frac}");
+    }
+
+    #[test]
+    fn zipf_is_hot_headed() {
+        let t = generate(TraceKind::Zipf { exponent_milli: 1100 }, 1000, 20_000, 0.0, 3);
+        let head = t.iter().filter(|a| a.block < 10).count();
+        assert!(head > t.len() / 5, "head hits {head}");
+    }
+
+    #[test]
+    fn parse_and_label() {
+        assert_eq!(TraceKind::parse("streaming"), Some(TraceKind::Streaming));
+        assert_eq!(TraceKind::parse("random"), Some(TraceKind::Uniform));
+        assert!(matches!(TraceKind::parse("zipf"), Some(TraceKind::Zipf { .. })));
+        assert_eq!(TraceKind::parse("bogus"), None);
+        assert!(TraceKind::Zipf { exponent_milli: 1200 }.label().contains("1.20"));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(TraceKind::Uniform, 100, 1000, 0.3, 7);
+        let b = generate(TraceKind::Uniform, 100, 1000, 0.3, 7);
+        assert_eq!(a, b);
+    }
+}

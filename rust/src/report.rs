@@ -1,0 +1,155 @@
+//! Result presentation: aligned tables, ASCII bar charts (for the paper's
+//! Figure 1), and CSV emission for the experiment logs.
+
+use std::fmt::Write as _;
+
+/// An aligned text table.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Table with the given column headers.
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (must match header arity).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with column alignment (first column left, rest right).
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for c in 0..ncol {
+            width[c] = self.header[c].chars().count();
+            for r in &self.rows {
+                width[c] = width[c].max(r[c].chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| {
+            let mut line = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                if c == 0 {
+                    let _ = write!(line, "{:<w$}", cell, w = width[c]);
+                } else {
+                    let _ = write!(line, "  {:>w$}", cell, w = width[c]);
+                }
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &width));
+        out.push('\n');
+        let total: usize = width.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &width));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV.
+    pub fn csv(&self) -> String {
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Horizontal ASCII bar chart — the shape of the paper's Figure 1.
+///
+/// Bars are scaled to `max_width` characters; each row shows the label,
+/// the bar, and the numeric value.
+pub fn bar_chart(title: &str, items: &[(String, f64)], max_width: usize) -> String {
+    let mut out = format!("{title}\n");
+    if items.is_empty() {
+        return out;
+    }
+    let vmax = items.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max).max(1e-12);
+    let lw = items.iter().map(|(l, _)| l.chars().count()).max().unwrap_or(0);
+    for (label, v) in items {
+        let n = ((v / vmax) * max_width as f64).round().max(0.0) as usize;
+        let _ = writeln!(out, "{label:<lw$}  {:<max_width$}  {v:.3}", "#".repeat(n));
+    }
+    out
+}
+
+/// Format a byte count human-readably.
+pub fn fmt_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a ratio as `1.45x`.
+pub fn fmt_ratio(r: f64) -> String {
+    format!("{r:.3}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment_and_csv() {
+        let mut t = Table::new(&["workload", "ratio"]);
+        t.row(&["mcf".into(), "1.40".into()]);
+        t.row(&["matrixfactor".into(), "1.62".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[0].starts_with("workload"));
+        assert!(lines[1].starts_with("---"));
+        assert_eq!(lines.len(), 4);
+        // all rows same width
+        assert_eq!(lines[2].len(), lines[3].len());
+        let csv = t.csv();
+        assert!(csv.starts_with("workload,ratio\n"));
+        assert!(csv.contains("mcf,1.40"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only".into()]);
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let items = vec![("a".to_string(), 1.0), ("bb".to_string(), 2.0)];
+        let s = bar_chart("T", &items, 10);
+        assert!(s.contains("##########"), "{s}"); // max bar full width
+        assert!(s.contains("#####"), "{s}");
+        assert!(s.starts_with("T\n"));
+        assert!(bar_chart("E", &[], 10) == "E\n");
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 << 20), "3.00 MiB");
+        assert_eq!(fmt_ratio(1.4499), "1.450x");
+    }
+}

@@ -1,0 +1,209 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas analysis artifacts
+//! (HLO text in `artifacts/`) and executes them on the CPU PJRT client —
+//! the bridge that keeps Python entirely off the request path.
+//!
+//! Artifacts (see `python/compile/aot.py`):
+//!
+//! * `kmeans_k{16,64}.hlo.txt` — `(x f32[4096], init f32[K]) ->
+//!   (centroids f32[K], counts f32[K], inertia f32[1])`
+//! * `sizeest_k64.hlo.txt` — `(x f32[4096], bases f32[64], widths
+//!   f32[64]) -> (total f32[1], per_value f32[4096])`
+//!
+//! All are compiled once at startup and cached; executions are
+//! synchronous (the coordinator calls them from its background analyzer
+//! thread, never from compression workers).
+
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Sample count the artifacts were lowered for.
+pub const N_SAMPLES: usize = 4096;
+/// K variants available as k-means artifacts.
+pub const KMEANS_KS: [usize; 2] = [16, 64];
+
+/// Output of an artifact k-means run.
+#[derive(Debug, Clone)]
+pub struct KmeansFit {
+    /// Final centroids (f32, caller snaps to words).
+    pub centroids: Vec<f32>,
+    /// Samples per centroid at the final assignment.
+    pub counts: Vec<f32>,
+    /// Final total bit-cost (inertia).
+    pub inertia: f32,
+}
+
+struct Inner {
+    client: xla::PjRtClient,
+    /// Compiled executables by artifact stem (e.g. "kmeans_k64").
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// The artifact runtime: PJRT client + compiled executables.
+pub struct ArtifactRuntime {
+    inner: Mutex<Inner>,
+    dir: PathBuf,
+}
+
+// SAFETY: the xla wrapper types hold `Rc`-counted opaque pointers into the
+// PJRT C API (which is itself thread-compatible). Every touch of the
+// client, the executables, and their transient buffers happens inside
+// `self.inner`'s Mutex, so the non-atomic Rc counts are never mutated
+// concurrently, and no Rc clone escapes the guarded scope (only plain
+// `Literal` host data is returned).
+unsafe impl Send for ArtifactRuntime {}
+unsafe impl Sync for ArtifactRuntime {}
+
+impl ArtifactRuntime {
+    /// Create a runtime over the artifact directory. Fails if the PJRT
+    /// client cannot start; individual artifacts are loaded lazily so a
+    /// missing file only fails the call that needs it.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        Ok(ArtifactRuntime {
+            inner: Mutex::new(Inner { client, executables: HashMap::new() }),
+            dir: dir.as_ref().to_path_buf(),
+        })
+    }
+
+    /// Default artifact directory: `$GBDI_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("GBDI_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Whether the artifact file for a given stem exists.
+    pub fn has_artifact(&self, stem: &str) -> bool {
+        self.dir.join(format!("{stem}.hlo.txt")).exists()
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.inner.lock().unwrap().client.platform_name()
+    }
+
+    fn execute(&self, stem: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.executables.contains_key(stem) {
+            let path = self.dir.join(format!("{stem}.hlo.txt"));
+            if !path.exists() {
+                return Err(Error::Runtime(format!(
+                    "artifact {} not found (run `make artifacts`)",
+                    path.display()
+                )));
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+            )
+            .map_err(wrap)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner.client.compile(&comp).map_err(wrap)?;
+            inner.executables.insert(stem.to_string(), exe);
+        }
+        let exe = inner.executables.get(stem).expect("compiled above");
+        let result = exe.execute::<xla::Literal>(inputs).map_err(wrap)?;
+        let out = result[0][0].to_literal_sync().map_err(wrap)?;
+        // lowered with return_tuple=True: unpack the tuple
+        out.to_tuple().map_err(wrap)
+    }
+
+    /// Run the k-means artifact for `k` (must be in [`KMEANS_KS`]).
+    ///
+    /// `samples` are word values as f32 (exactly [`N_SAMPLES`] of them —
+    /// pad by repeating when the caller has fewer); `init` has `k`
+    /// centroids (the coordinator seeds them from its sample).
+    pub fn kmeans(&self, samples: &[f32], init: &[f32]) -> Result<KmeansFit> {
+        let k = init.len();
+        if !KMEANS_KS.contains(&k) {
+            return Err(Error::Runtime(format!(
+                "no kmeans artifact for K={k} (available: {KMEANS_KS:?})"
+            )));
+        }
+        if samples.len() != N_SAMPLES {
+            return Err(Error::Runtime(format!(
+                "kmeans artifact expects {N_SAMPLES} samples, got {}",
+                samples.len()
+            )));
+        }
+        let x = xla::Literal::vec1(samples);
+        let c = xla::Literal::vec1(init);
+        let outs = self.execute(&format!("kmeans_k{k}"), &[x, c])?;
+        if outs.len() != 3 {
+            return Err(Error::Runtime(format!("kmeans returned {} outputs", outs.len())));
+        }
+        let centroids = outs[0].to_vec::<f32>().map_err(wrap)?;
+        let counts = outs[1].to_vec::<f32>().map_err(wrap)?;
+        let inertia = outs[2].to_vec::<f32>().map_err(wrap)?[0];
+        Ok(KmeansFit { centroids, counts, inertia })
+    }
+
+    /// Run the size-estimation artifact (K = 64): total + per-value bits
+    /// of encoding `samples` under a (bases, widths) table.
+    pub fn size_estimate(&self, samples: &[f32], bases: &[f32], widths: &[f32]) -> Result<f32> {
+        if bases.len() != 64 || widths.len() != 64 {
+            return Err(Error::Runtime("sizeest artifact expects K=64".into()));
+        }
+        if samples.len() != N_SAMPLES {
+            return Err(Error::Runtime(format!(
+                "sizeest artifact expects {N_SAMPLES} samples, got {}",
+                samples.len()
+            )));
+        }
+        let outs = self.execute(
+            "sizeest_k64",
+            &[
+                xla::Literal::vec1(samples),
+                xla::Literal::vec1(bases),
+                xla::Literal::vec1(widths),
+            ],
+        )?;
+        Ok(outs[0].to_vec::<f32>().map_err(wrap)?[0])
+    }
+}
+
+fn wrap(e: xla::Error) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+/// Pad or stride-reduce word samples to exactly [`N_SAMPLES`] f32 values —
+/// the shim between arbitrary sample counts and the fixed artifact shape.
+pub fn shape_samples(words: &[u64]) -> Vec<f32> {
+    if words.is_empty() {
+        return vec![0.0; N_SAMPLES];
+    }
+    let mut out = Vec::with_capacity(N_SAMPLES);
+    if words.len() >= N_SAMPLES {
+        let stride = words.len() as f64 / N_SAMPLES as f64;
+        for i in 0..N_SAMPLES {
+            out.push(words[(i as f64 * stride) as usize] as f32);
+        }
+    } else {
+        for i in 0..N_SAMPLES {
+            out.push(words[i % words.len()] as f32);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_samples_pads_and_strides() {
+        assert_eq!(shape_samples(&[]).len(), N_SAMPLES);
+        let few = shape_samples(&[1, 2, 3]);
+        assert_eq!(few.len(), N_SAMPLES);
+        assert_eq!(&few[..4], &[1.0, 2.0, 3.0, 1.0]);
+        let many: Vec<u64> = (0..100_000).collect();
+        let s = shape_samples(&many);
+        assert_eq!(s.len(), N_SAMPLES);
+        assert_eq!(s[0], 0.0);
+        assert!(s[N_SAMPLES - 1] > 90_000.0);
+    }
+
+    // Artifact-dependent tests live in rust/tests/runtime_artifacts.rs and
+    // skip gracefully when artifacts/ has not been built.
+}

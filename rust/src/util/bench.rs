@@ -1,0 +1,231 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! [`Bencher::bench`] calibrates an iteration count to a target measurement
+//! window, runs warmup + measured batches, and reports mean / p50 / p99 and
+//! optional throughput. Benches print criterion-style lines and can also
+//! emit CSV for the experiment logs.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark id, e.g. `compress/gbdi/mcf`.
+    pub name: String,
+    /// Mean wall time per iteration.
+    pub mean: Duration,
+    /// Median per-batch time (per iteration).
+    pub p50: Duration,
+    /// 99th percentile per-batch time (per iteration).
+    pub p99: Duration,
+    /// Iterations measured in total.
+    pub iters: u64,
+    /// Optional bytes processed per iteration (enables MB/s reporting).
+    pub bytes_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    /// Throughput in MiB/s if `bytes_per_iter` was set.
+    pub fn mib_per_s(&self) -> Option<f64> {
+        self.bytes_per_iter.map(|b| {
+            let secs = self.mean.as_secs_f64();
+            b as f64 / (1024.0 * 1024.0) / secs
+        })
+    }
+
+    /// One human-readable line.
+    pub fn line(&self) -> String {
+        let tp = match self.mib_per_s() {
+            Some(t) => format!("  {t:>9.1} MiB/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} mean {:>12}  p50 {:>12}  p99 {:>12}{}",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p99),
+            tp
+        )
+    }
+
+    /// CSV row: name,mean_ns,p50_ns,p99_ns,iters,bytes,mibs.
+    pub fn csv(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{}",
+            self.name,
+            self.mean.as_nanos(),
+            self.p50.as_nanos(),
+            self.p99.as_nanos(),
+            self.iters,
+            self.bytes_per_iter.unwrap_or(0),
+            self.mib_per_s().map(|t| format!("{t:.2}")).unwrap_or_default()
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2} s", ns as f64 / 1e9)
+    }
+}
+
+/// Harness configuration + result sink.
+pub struct Bencher {
+    /// Warmup window before measuring.
+    pub warmup: Duration,
+    /// Target total measurement window.
+    pub measure: Duration,
+    /// Number of batches the window is split into (for percentiles).
+    pub batches: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            batches: 20,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    /// Harness with default windows; honours `GBDI_BENCH_FAST=1` for CI
+    /// (shrinks windows ~10x).
+    pub fn new() -> Self {
+        let mut b = Bencher::default();
+        if std::env::var("GBDI_BENCH_FAST").is_ok_and(|v| v == "1") {
+            b.warmup = Duration::from_millis(20);
+            b.measure = Duration::from_millis(80);
+            b.batches = 8;
+        }
+        b
+    }
+
+    /// Measure `f`, which performs exactly one logical iteration per call.
+    /// Returns (and records) the result.
+    pub fn bench<R>(&mut self, name: &str, bytes_per_iter: Option<u64>, mut f: impl FnMut() -> R) -> &BenchResult {
+        // Warmup + calibration: how many iters fit in one batch window?
+        let warm_end = Instant::now() + self.warmup;
+        let mut warm_iters: u64 = 0;
+        let warm_start = Instant::now();
+        while Instant::now() < warm_end {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+        let batch_window = self.measure.as_secs_f64() / self.batches as f64;
+        let iters_per_batch = ((batch_window / per_iter.max(1e-9)) as u64).clamp(1, 1 << 24);
+
+        let mut batch_times: Vec<f64> = Vec::with_capacity(self.batches);
+        let mut total_iters = 0u64;
+        for _ in 0..self.batches {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_batch {
+                std::hint::black_box(f());
+            }
+            batch_times.push(t0.elapsed().as_secs_f64() / iters_per_batch as f64);
+            total_iters += iters_per_batch;
+        }
+        batch_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = batch_times.iter().sum::<f64>() / batch_times.len() as f64;
+        let p50 = batch_times[batch_times.len() / 2];
+        let p99 = batch_times[(batch_times.len() * 99 / 100).min(batch_times.len() - 1)];
+        let res = BenchResult {
+            name: name.to_string(),
+            mean: Duration::from_secs_f64(mean),
+            p50: Duration::from_secs_f64(p50),
+            p99: Duration::from_secs_f64(p99),
+            iters: total_iters,
+            bytes_per_iter,
+        };
+        println!("{}", res.line());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// All recorded results.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write all results as CSV to `path` (with header).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "name,mean_ns,p50_ns,p99_ns,iters,bytes_per_iter,mib_per_s")?;
+        for r in &self.results {
+            writeln!(f, "{}", r.csv())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> Bencher {
+        Bencher {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            batches: 4,
+            results: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = fast();
+        let r = b.bench("noop-ish", Some(1024), || std::hint::black_box(1 + 1));
+        assert!(r.iters > 0);
+        assert!(r.p99 >= r.p50);
+        assert!(r.mib_per_s().unwrap() > 0.0 || r.mean.as_nanos() == 0);
+    }
+
+    #[test]
+    fn ordering_sane_for_slower_work() {
+        // LCG chain: serial dependency LLVM cannot close-form or vectorize
+        fn churn(n: u64) -> u64 {
+            let mut x = std::hint::black_box(1u64);
+            for i in 0..std::hint::black_box(n) {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(i);
+            }
+            x
+        }
+        let mut b = fast();
+        let fast_r = b.bench("fast", None, || churn(10)).mean;
+        let slow_r = b.bench("slow", None, || churn(100_000)).mean;
+        assert!(slow_r > fast_r, "slow {slow_r:?} <= fast {fast_r:?}");
+    }
+
+    #[test]
+    fn csv_emission() {
+        let mut b = fast();
+        b.bench("a/b", Some(4096), || 7u32);
+        let tmp = std::env::temp_dir().join("gbdi_bench_test.csv");
+        b.write_csv(tmp.to_str().unwrap()).unwrap();
+        let body = std::fs::read_to_string(&tmp).unwrap();
+        assert!(body.starts_with("name,"));
+        assert!(body.contains("a/b,"));
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(Duration::from_nanos(10)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(10)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(10)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(10)).contains(" s"));
+    }
+}

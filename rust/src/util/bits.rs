@@ -1,0 +1,409 @@
+//! Bit-level packed stream I/O — the substrate under every codec in this
+//! repo (GBDI, BDI, FPC, Huffman).
+//!
+//! The stream is **LSB-first within a little-endian u64 accumulator**: the
+//! first bit written is the lowest bit of the first byte. Fields up to 57
+//! bits are written/read in a single shift-or; wider fields are split. This
+//! layout lets the hot decoder refill with one unaligned 8-byte load.
+
+/// Append-only bit writer over a growable byte buffer.
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Bit accumulator; low `fill` bits are valid and not yet flushed.
+    acc: u64,
+    fill: u32,
+}
+
+impl BitWriter {
+    /// New empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// New writer with reserved capacity (bytes).
+    pub fn with_capacity(bytes: usize) -> Self {
+        BitWriter { buf: Vec::with_capacity(bytes), acc: 0, fill: 0 }
+    }
+
+    /// Number of bits written so far.
+    #[inline]
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.fill as usize
+    }
+
+    /// Write the low `n` bits of `v` (0 <= n <= 64). Bits above `n` in `v`
+    /// must be zero (debug-asserted) — callers mask.
+    #[inline]
+    pub fn put(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 64);
+        debug_assert!(n == 64 || v < (1u64 << n), "value {v} does not fit {n} bits");
+        if n == 0 {
+            return;
+        }
+        if n <= 57 || self.fill + n <= 64 {
+            self.acc |= v << self.fill;
+            self.fill += n;
+            while self.fill >= 8 {
+                self.buf.push(self.acc as u8);
+                self.acc >>= 8;
+                self.fill -= 8;
+            }
+        } else {
+            // Split wide writes.
+            let lo_n = 32;
+            self.put(v & 0xFFFF_FFFF, lo_n);
+            self.put(v >> lo_n, n - lo_n);
+        }
+    }
+
+    /// Write a single bit.
+    #[inline]
+    pub fn put_bit(&mut self, b: bool) {
+        self.put(b as u64, 1);
+    }
+
+    /// Write `n` bits of a signed value in offset-binary (excess-2^(n-1)):
+    /// representable range is `[-2^(n-1), 2^(n-1) - 1]`.
+    #[inline]
+    pub fn put_signed(&mut self, v: i64, n: u32) {
+        debug_assert!(n >= 1 && n <= 63);
+        let bias = 1i64 << (n - 1);
+        debug_assert!(v >= -bias && v < bias, "signed {v} does not fit {n} bits");
+        self.put((v + bias) as u64, n);
+    }
+
+    /// Finish the stream, zero-padding to a byte boundary, and return the
+    /// packed bytes.
+    pub fn finish(mut self) -> Vec<u8> {
+        while self.fill > 0 {
+            self.buf.push(self.acc as u8);
+            self.acc >>= 8;
+            self.fill = self.fill.saturating_sub(8);
+        }
+        self.buf
+    }
+
+    /// Current byte length if finished now.
+    pub fn byte_len(&self) -> usize {
+        (self.bit_len() + 7) / 8
+    }
+}
+
+/// Zig-zag encode a signed integer to an unsigned one (small magnitudes →
+/// small codes); inverse of [`zigzag_decode`].
+#[inline]
+pub fn zigzag_encode(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag_encode`].
+#[inline]
+pub fn zigzag_decode(u: u64) -> i64 {
+    ((u >> 1) as i64) ^ -((u & 1) as i64)
+}
+
+/// Minimum number of bits needed to store `v` in offset-binary signed form
+/// (i.e. smallest n with `-2^(n-1) <= v < 2^(n-1)`); 0 for v == 0.
+#[inline]
+pub fn signed_width(v: i64) -> u32 {
+    if v == 0 {
+        0
+    } else if v > 0 {
+        64 - (v as u64).leading_zeros() + 1
+    } else {
+        64 - ((-(v + 1)) as u64).leading_zeros() + 1
+    }
+}
+
+/// Error from [`BitReader`] when the stream runs out.
+#[derive(Debug, PartialEq, Eq)]
+pub struct OutOfBits;
+
+/// Sequential bit reader over a byte slice (same layout as [`BitWriter`]).
+#[derive(Debug, Clone)]
+pub struct BitReader<'a> {
+    data: &'a [u8],
+    /// Next unread byte index.
+    pos: usize,
+    acc: u64,
+    fill: u32,
+}
+
+impl<'a> BitReader<'a> {
+    /// Reader over `data` starting at bit 0.
+    pub fn new(data: &'a [u8]) -> Self {
+        BitReader { data, pos: 0, acc: 0, fill: 0 }
+    }
+
+    /// Bits consumed so far.
+    #[inline]
+    pub fn bit_pos(&self) -> usize {
+        self.pos * 8 - self.fill as usize
+    }
+
+    /// Bits remaining.
+    #[inline]
+    pub fn remaining(&self) -> usize {
+        self.data.len() * 8 - self.bit_pos()
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        // Fast path: bulk 8-byte unaligned load.
+        if self.pos + 8 <= self.data.len() {
+            let w = u64::from_le_bytes(self.data[self.pos..self.pos + 8].try_into().unwrap());
+            let take = ((64 - self.fill) / 8) as usize; // whole bytes that fit
+            let new_fill = self.fill + take as u32 * 8;
+            let mask = if new_fill >= 64 { u64::MAX } else { (1u64 << new_fill) - 1 };
+            self.acc |= w.wrapping_shl(self.fill) & mask;
+            self.pos += take;
+            self.fill = new_fill;
+        } else {
+            while self.fill <= 56 && self.pos < self.data.len() {
+                self.acc |= (self.data[self.pos] as u64) << self.fill;
+                self.pos += 1;
+                self.fill += 8;
+            }
+        }
+    }
+
+    /// Read `n` bits (0 <= n <= 64).
+    #[inline]
+    pub fn get(&mut self, n: u32) -> Result<u64, OutOfBits> {
+        debug_assert!(n <= 64);
+        if n == 0 {
+            return Ok(0);
+        }
+        if n <= 57 {
+            if self.fill < n {
+                self.refill();
+                if self.fill < n {
+                    return Err(OutOfBits);
+                }
+            }
+            let v = self.acc & ((1u64 << n) - 1);
+            self.acc >>= n;
+            self.fill -= n;
+            Ok(v)
+        } else {
+            let lo = self.get(32)?;
+            let hi = self.get(n - 32)?;
+            Ok(lo | (hi << 32))
+        }
+    }
+
+    /// Read one bit.
+    #[inline]
+    pub fn get_bit(&mut self) -> Result<bool, OutOfBits> {
+        Ok(self.get(1)? != 0)
+    }
+
+    /// Read an `n`-bit offset-binary signed value (see `put_signed`).
+    #[inline]
+    pub fn get_signed(&mut self, n: u32) -> Result<i64, OutOfBits> {
+        debug_assert!(n >= 1 && n <= 63);
+        let bias = 1i64 << (n - 1);
+        Ok(self.get(n)? as i64 - bias)
+    }
+
+    /// Peek `n` bits (n <= 57) without consuming. Bits past the end read as
+    /// zero (for Huffman-style table lookups near stream end).
+    #[inline]
+    pub fn peek(&mut self, n: u32) -> u64 {
+        debug_assert!(n <= 57);
+        if self.fill < n {
+            self.refill();
+        }
+        self.acc & ((1u64 << n) - 1)
+    }
+
+    /// Discard bits up to the next byte boundary (chunk realignment in
+    /// parallel-compressed streams). No-op when already aligned.
+    #[inline]
+    pub fn skip_to_byte(&mut self) -> Result<(), OutOfBits> {
+        let rem = (self.bit_pos() % 8) as u32;
+        if rem != 0 {
+            self.get(8 - rem)?;
+        }
+        Ok(())
+    }
+
+    /// Consume `n` bits previously peeked. `n` must be <= current fill.
+    #[inline]
+    pub fn consume(&mut self, n: u32) -> Result<(), OutOfBits> {
+        if self.fill < n {
+            self.refill();
+            if self.fill < n {
+                return Err(OutOfBits);
+            }
+        }
+        self.acc >>= n;
+        self.fill -= n;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn roundtrip_fixed_fields() {
+        let mut w = BitWriter::new();
+        w.put(0b101, 3);
+        w.put(0xFFFF, 16);
+        w.put(0, 0);
+        w.put(1, 1);
+        w.put(0x1234_5678_9ABC, 48);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(3).unwrap(), 0b101);
+        assert_eq!(r.get(16).unwrap(), 0xFFFF);
+        assert_eq!(r.get(0).unwrap(), 0);
+        assert_eq!(r.get(1).unwrap(), 1);
+        assert_eq!(r.get(48).unwrap(), 0x1234_5678_9ABC);
+    }
+
+    #[test]
+    fn roundtrip_64bit_fields() {
+        let mut w = BitWriter::new();
+        w.put(u64::MAX, 64);
+        w.put(0xDEAD_BEEF_CAFE_F00D, 64);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(64).unwrap(), u64::MAX);
+        assert_eq!(r.get(64).unwrap(), 0xDEAD_BEEF_CAFE_F00D);
+    }
+
+    #[test]
+    fn roundtrip_random_mixed_widths() {
+        let mut rng = Rng::new(99);
+        for _ in 0..200 {
+            let fields: Vec<(u64, u32)> = (0..rng.range(1, 100))
+                .map(|_| {
+                    let n = rng.range(1, 65) as u32;
+                    let v = if n == 64 { rng.next_u64() } else { rng.next_u64() & ((1u64 << n) - 1) };
+                    (v, n)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &(v, n) in &fields {
+                w.put(v, n);
+            }
+            let total_bits: usize = fields.iter().map(|&(_, n)| n as usize).sum();
+            assert_eq!(w.bit_len(), total_bits);
+            let bytes = w.finish();
+            assert_eq!(bytes.len(), (total_bits + 7) / 8);
+            let mut r = BitReader::new(&bytes);
+            for &(v, n) in &fields {
+                assert_eq!(r.get(n).unwrap(), v, "width {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn signed_roundtrip() {
+        let mut w = BitWriter::new();
+        let cases = [(-8i64, 4u32), (7, 4), (0, 1), (-1, 1), (-(1 << 30), 31), ((1 << 30) - 1, 31)];
+        for &(v, n) in &cases {
+            w.put_signed(v, n);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &(v, n) in &cases {
+            assert_eq!(r.get_signed(n).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn out_of_bits_detected() {
+        let bytes = BitWriter::new().finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(1), Err(OutOfBits));
+        let mut w = BitWriter::new();
+        w.put(3, 2);
+        let bytes = w.finish(); // 1 byte, 6 bits padding
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(8).unwrap(), 3); // padding readable as zeros
+        assert_eq!(r.get(1), Err(OutOfBits));
+    }
+
+    #[test]
+    fn peek_consume_matches_get() {
+        let mut rng = Rng::new(3);
+        let vals: Vec<u64> = (0..64).map(|_| rng.next_u64() & 0x1FFF).collect();
+        let mut w = BitWriter::new();
+        for &v in &vals {
+            w.put(v, 13);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &v in &vals {
+            assert_eq!(r.peek(13), v);
+            r.consume(13).unwrap();
+        }
+    }
+
+    #[test]
+    fn zigzag_roundtrip() {
+        for v in [-5i64, 0, 1, -1, i64::MAX, i64::MIN, 123456, -987654] {
+            assert_eq!(zigzag_decode(zigzag_encode(v)), v);
+        }
+        assert_eq!(zigzag_encode(0), 0);
+        assert_eq!(zigzag_encode(-1), 1);
+        assert_eq!(zigzag_encode(1), 2);
+    }
+
+    #[test]
+    fn signed_width_edges() {
+        assert_eq!(signed_width(0), 0);
+        assert_eq!(signed_width(1), 2); // needs [-2,1]
+        assert_eq!(signed_width(-1), 1); // fits [-1,0]
+        assert_eq!(signed_width(-2), 2);
+        assert_eq!(signed_width(7), 4);
+        assert_eq!(signed_width(8), 5);
+        assert_eq!(signed_width(-8), 4);
+        assert_eq!(signed_width(-9), 5);
+        assert_eq!(signed_width(127), 8);
+        assert_eq!(signed_width(-128), 8);
+        assert_eq!(signed_width(128), 9);
+    }
+
+    #[test]
+    fn signed_width_is_sufficient_and_tight() {
+        let mut rng = Rng::new(17);
+        for _ in 0..2000 {
+            let v = rng.next_u64() as i64 >> rng.range(0, 60);
+            let n = signed_width(v).max(1);
+            if n > 63 {
+                continue; // put_signed caps at 63-bit fields
+            }
+            let mut w = BitWriter::new();
+            w.put_signed(v, n.min(63));
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            assert_eq!(r.get_signed(n.min(63)).unwrap(), v);
+            // tightness: one bit fewer must not fit (except v==0/-1 edge)
+            if n >= 2 && v != -(1i64 << (n - 2)) {
+                let bias = 1i64 << (n - 2);
+                assert!(v < -bias || v >= bias, "width {n} not tight for {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn bit_pos_tracks() {
+        let mut w = BitWriter::new();
+        w.put(1, 5);
+        w.put(2, 9);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.bit_pos(), 0);
+        r.get(5).unwrap();
+        assert_eq!(r.bit_pos(), 5);
+        r.get(9).unwrap();
+        assert_eq!(r.bit_pos(), 14);
+    }
+}

@@ -1,0 +1,10 @@
+//! Infrastructure substrates built from scratch for the offline environment:
+//! deterministic PRNG, bit-level I/O, sampling/statistics, a thread pool,
+//! a property-testing kit, and a micro-benchmark harness.
+
+pub mod bench;
+pub mod bits;
+pub mod pool;
+pub mod prng;
+pub mod stats;
+pub mod testkit;

@@ -1,0 +1,179 @@
+//! A small fixed-size thread pool built on `std::thread` + channels (tokio
+//! is unavailable offline). The coordinator uses it for compression
+//! workers; benches use [`parallel_map_chunks`] for data-parallel sweeps.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool with a shared MPMC job queue (single `Receiver`
+/// behind a mutex — contention is negligible at our job granularity).
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `n` worker threads (min 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let queued = Arc::clone(&queued);
+                std::thread::Builder::new()
+                    .name(format!("gbdi-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                queued.fetch_sub(1, Ordering::Release);
+                            }
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, queued }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Jobs submitted but not yet finished.
+    pub fn pending(&self) -> usize {
+        self.queued.load(Ordering::Acquire)
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.queued.fetch_add(1, Ordering::AcqRel);
+        self.tx
+            .as_ref()
+            .expect("pool not shut down")
+            .send(Box::new(f))
+            .expect("workers alive");
+    }
+
+    /// Busy-wait (with yields) until all submitted jobs finished.
+    pub fn wait_idle(&self) {
+        while self.pending() > 0 {
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the queue
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Data-parallel map over chunks of `items`: splits into `threads` nearly
+/// equal contiguous chunks, applies `f` to each chunk on its own scoped
+/// thread, and concatenates results in order. `f` receives
+/// `(chunk_index, &[T])`.
+pub fn parallel_map_chunks<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &[T]) -> Vec<R> + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads == 1 {
+        return f(0, items);
+    }
+    let chunk = (items.len() + threads - 1) / threads;
+    let mut out: Vec<Option<Vec<R>>> = (0..threads).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut pending = Vec::new();
+        for (i, (slot, piece)) in out.iter_mut().zip(items.chunks(chunk)).enumerate() {
+            let f = &f;
+            pending.push(scope.spawn(move || {
+                *slot = Some(f(i, piece));
+            }));
+        }
+        for h in pending {
+            h.join().expect("chunk worker panicked");
+        }
+    });
+    out.into_iter().flat_map(|o| o.expect("all chunks ran")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn pool_shutdown_joins() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        } // drop waits for all jobs
+        assert_eq!(counter.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let doubled = parallel_map_chunks(&items, 7, |_, chunk| {
+            chunk.iter().map(|x| x * 2).collect()
+        });
+        assert_eq!(doubled, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_single_thread_and_empty() {
+        let items = [1u32, 2, 3];
+        let r = parallel_map_chunks(&items, 1, |_, c| c.to_vec());
+        assert_eq!(r, items);
+        let empty: Vec<u32> = vec![];
+        let r = parallel_map_chunks(&empty, 4, |_, c| c.to_vec());
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn pool_min_one_thread() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+    }
+}

@@ -1,0 +1,332 @@
+//! Sampling and descriptive statistics used by the background-analysis
+//! plane (reservoir/stride samplers feeding k-means) and by the report
+//! layer (histograms, percentiles, entropy).
+
+use crate::util::prng::Rng;
+
+/// Reservoir sampler: uniform sample of `k` items from a stream of unknown
+/// length (Vitter's algorithm R). Deterministic given the `Rng`.
+#[derive(Debug, Clone)]
+pub struct Reservoir<T> {
+    k: usize,
+    seen: u64,
+    items: Vec<T>,
+}
+
+impl<T: Copy> Reservoir<T> {
+    /// Sampler keeping at most `k` items.
+    pub fn new(k: usize) -> Self {
+        Reservoir { k, seen: 0, items: Vec::with_capacity(k) }
+    }
+
+    /// Offer one stream item.
+    #[inline]
+    pub fn offer(&mut self, x: T, rng: &mut Rng) {
+        self.seen += 1;
+        if self.items.len() < self.k {
+            self.items.push(x);
+        } else {
+            let j = rng.below(self.seen);
+            if (j as usize) < self.k {
+                self.items[j as usize] = x;
+            }
+        }
+    }
+
+    /// Total items offered.
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// The current sample.
+    pub fn items(&self) -> &[T] {
+        &self.items
+    }
+
+    /// Consume into the sample vector.
+    pub fn into_items(self) -> Vec<T> {
+        self.items
+    }
+}
+
+/// Deterministic strided sample: every `ceil(n/k)`-th element, up to `k`
+/// items. Cheaper than a reservoir when the data is already materialized,
+/// and what a memory controller would realistically implement.
+pub fn stride_sample<T: Copy>(data: &[T], k: usize) -> Vec<T> {
+    if data.is_empty() || k == 0 {
+        return Vec::new();
+    }
+    if data.len() <= k {
+        return data.to_vec();
+    }
+    let stride = data.len() / k;
+    data.iter().step_by(stride.max(1)).take(k).copied().collect()
+}
+
+/// Mean of an f64 slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Geometric mean of positive values (0 if any non-positive / empty).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() || xs.iter().any(|&x| x <= 0.0) {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// `q`-quantile (0..=1) by linear interpolation over a *sorted* slice.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// `q`-quantile of unsorted u64 magnitudes via select-by-sort (n log n; the
+/// analysis plane calls this on ≤64Ki samples, so simplicity wins).
+pub fn quantile_u64(xs: &[u64], q: f64) -> u64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_unstable();
+    let pos = (q.clamp(0.0, 1.0) * (v.len() - 1) as f64).round() as usize;
+    v[pos]
+}
+
+/// Shannon entropy (bits/byte) of a byte slice — used to characterize
+/// workload images in reports.
+pub fn byte_entropy(data: &[u8]) -> f64 {
+    if data.is_empty() {
+        return 0.0;
+    }
+    let mut counts = [0u64; 256];
+    for &b in data {
+        counts[b as usize] += 1;
+    }
+    let n = data.len() as f64;
+    counts
+        .iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / n;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+/// Fixed-bin histogram over u64 values.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Inclusive lower edge of bin 0.
+    pub lo: u64,
+    /// Bin width.
+    pub width: u64,
+    /// Counts per bin; the last bin also catches overflow.
+    pub bins: Vec<u64>,
+    /// Count of values below `lo`.
+    pub underflow: u64,
+    total: u64,
+}
+
+impl Histogram {
+    /// Histogram with `n` bins of `width` starting at `lo`.
+    pub fn new(lo: u64, width: u64, n: usize) -> Self {
+        assert!(width > 0 && n > 0);
+        Histogram { lo, width, bins: vec![0; n], underflow: 0, total: 0 }
+    }
+
+    /// Add one observation.
+    #[inline]
+    pub fn add(&mut self, x: u64) {
+        self.total += 1;
+        if x < self.lo {
+            self.underflow += 1;
+            return;
+        }
+        let idx = ((x - self.lo) / self.width) as usize;
+        let last = self.bins.len() - 1;
+        self.bins[idx.min(last)] += 1;
+    }
+
+    /// Total observations.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Fraction of observations in bin `i`.
+    pub fn frac(&self, i: usize) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.bins[i] as f64 / self.total as f64
+        }
+    }
+}
+
+/// Online mean/min/max/count accumulator (for metrics counters).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Summary {
+    /// Number of observations.
+    pub n: u64,
+    /// Sum of observations.
+    pub sum: f64,
+    /// Minimum (f64::INFINITY when empty).
+    pub min: f64,
+    /// Maximum (f64::NEG_INFINITY when empty).
+    pub max: f64,
+}
+
+impl Summary {
+    /// Empty summary.
+    pub fn new() -> Self {
+        Summary { n: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    /// Add one observation.
+    #[inline]
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Merge another summary into this one.
+    pub fn merge(&mut self, other: &Summary) {
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reservoir_keeps_k_and_is_roughly_uniform() {
+        let mut rng = Rng::new(5);
+        let mut res = Reservoir::new(100);
+        for i in 0..10_000u64 {
+            res.offer(i, &mut rng);
+        }
+        assert_eq!(res.items().len(), 100);
+        assert_eq!(res.seen(), 10_000);
+        let m = mean(&res.items().iter().map(|&x| x as f64).collect::<Vec<_>>());
+        assert!((m - 5000.0).abs() < 900.0, "mean {m}");
+    }
+
+    #[test]
+    fn reservoir_small_stream() {
+        let mut rng = Rng::new(5);
+        let mut res = Reservoir::new(10);
+        for i in 0..3u64 {
+            res.offer(i, &mut rng);
+        }
+        assert_eq!(res.items(), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn stride_sample_bounds() {
+        let data: Vec<u32> = (0..1000).collect();
+        let s = stride_sample(&data, 64);
+        assert_eq!(s.len(), 64);
+        assert_eq!(s[0], 0);
+        let s2 = stride_sample(&data, 5000);
+        assert_eq!(s2.len(), 1000);
+        assert!(stride_sample(&data, 0).is_empty());
+        assert!(stride_sample::<u32>(&[], 8).is_empty());
+    }
+
+    #[test]
+    fn quantiles() {
+        let sorted: Vec<f64> = (0..=100).map(|x| x as f64).collect();
+        assert_eq!(quantile_sorted(&sorted, 0.0), 0.0);
+        assert_eq!(quantile_sorted(&sorted, 1.0), 100.0);
+        assert_eq!(quantile_sorted(&sorted, 0.5), 50.0);
+        assert!((quantile_sorted(&sorted, 0.95) - 95.0).abs() < 1e-9);
+        assert_eq!(quantile_u64(&[5, 1, 9, 3, 7], 0.5), 5);
+    }
+
+    #[test]
+    fn entropy_extremes() {
+        assert_eq!(byte_entropy(&[]), 0.0);
+        assert_eq!(byte_entropy(&[7u8; 4096]), 0.0);
+        let all: Vec<u8> = (0..=255).collect();
+        assert!((byte_entropy(&all) - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_binning() {
+        let mut h = Histogram::new(10, 5, 4); // bins [10,15) [15,20) [20,25) [25,inf)
+        for x in [3, 10, 14, 15, 24, 25, 1000] {
+            h.add(x);
+        }
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.bins, vec![2, 1, 1, 2]);
+        assert_eq!(h.total(), 7);
+        assert!((h.frac(0) - 2.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_and_merge() {
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        for x in [1.0, 2.0, 3.0] {
+            a.add(x);
+        }
+        for x in [10.0, 20.0] {
+            b.add(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.n, 5);
+        assert_eq!(a.min, 1.0);
+        assert_eq!(a.max, 20.0);
+        assert!((a.mean() - 7.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+        assert_eq!(geomean(&[1.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn stddev_basic() {
+        assert_eq!(stddev(&[5.0]), 0.0);
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((stddev(&xs) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,251 @@
+//! A tiny property-based testing kit (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `cases` generated inputs from a
+//! deterministic seed; on failure it performs greedy shrinking (via the
+//! generator's [`Gen::shrink`]) and panics with the minimal failing input
+//! and the seed needed to replay it.
+
+use crate::util::prng::Rng;
+use std::fmt::Debug;
+
+/// A value generator with optional shrinking.
+pub trait Gen {
+    /// The generated type.
+    type Item: Clone + Debug;
+    /// Produce one random value.
+    fn gen(&self, rng: &mut Rng) -> Self::Item;
+    /// Candidate smaller versions of `v` (tried in order during shrinking).
+    fn shrink(&self, _v: &Self::Item) -> Vec<Self::Item> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` on `cases` inputs drawn from `gen` (seed fixed per call site
+/// via `seed`). Panics with a replayable report on the first failure after
+/// shrinking.
+pub fn check<G: Gen>(seed: u64, cases: usize, gen: &G, prop: impl Fn(&G::Item) -> bool) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen.gen(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_loop(gen, input, &prop);
+            panic!(
+                "property failed (seed={seed}, case={case})\nminimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<G: Gen>(gen: &G, mut failing: G::Item, prop: &impl Fn(&G::Item) -> bool) -> G::Item {
+    // Greedy descent: keep taking the first shrink candidate that still fails.
+    let mut budget = 200;
+    'outer: while budget > 0 {
+        budget -= 1;
+        for candidate in gen.shrink(&failing) {
+            if !prop(&candidate) {
+                failing = candidate;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+/// Generator: `Vec<u8>` with length in `[0, max_len]`, byte values biased
+/// towards compressible structure half the time (runs / small values) so
+/// codec properties see both regimes.
+pub struct BytesGen {
+    /// Maximum length of generated vectors.
+    pub max_len: usize,
+}
+
+impl Gen for BytesGen {
+    type Item = Vec<u8>;
+
+    fn gen(&self, rng: &mut Rng) -> Vec<u8> {
+        let len = rng.below(self.max_len as u64 + 1) as usize;
+        let mode = rng.below(4);
+        let mut v = vec![0u8; len];
+        match mode {
+            0 => rng.fill_bytes(&mut v), // incompressible
+            1 => {
+                // runs
+                let mut i = 0;
+                while i < len {
+                    let run = (rng.below(32) + 1) as usize;
+                    let b = rng.next_u32() as u8;
+                    for j in i..(i + run).min(len) {
+                        v[j] = b;
+                    }
+                    i += run;
+                }
+            }
+            2 => {
+                // small values
+                for b in v.iter_mut() {
+                    *b = rng.below(4) as u8;
+                }
+            }
+            _ => {
+                // periodic pattern
+                let period = (rng.below(8) + 1) as usize;
+                let pat: Vec<u8> = (0..period).map(|_| rng.next_u32() as u8).collect();
+                for (i, b) in v.iter_mut().enumerate() {
+                    *b = pat[i % period];
+                }
+            }
+        }
+        v
+    }
+
+    fn shrink(&self, v: &Vec<u8>) -> Vec<Vec<u8>> {
+        let mut out = Vec::new();
+        if v.is_empty() {
+            return out;
+        }
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[v.len() / 2..].to_vec());
+        out.push(v[..v.len() - 1].to_vec());
+        // zero out a byte
+        if let Some(pos) = v.iter().position(|&b| b != 0) {
+            let mut w = v.clone();
+            w[pos] = 0;
+            out.push(w);
+        }
+        out
+    }
+}
+
+/// Generator: `Vec<u32>` word values drawn from a clustered mixture (a few
+/// dense centers + uniform noise) — the value population GBDI targets.
+pub struct WordsGen {
+    /// Maximum number of words.
+    pub max_words: usize,
+    /// Number of mixture centers.
+    pub centers: usize,
+}
+
+impl Gen for WordsGen {
+    type Item = Vec<u32>;
+
+    fn gen(&self, rng: &mut Rng) -> Vec<u32> {
+        let n = rng.below(self.max_words as u64 + 1) as usize;
+        let centers: Vec<u32> = (0..self.centers.max(1)).map(|_| rng.next_u32()).collect();
+        (0..n)
+            .map(|_| {
+                if rng.chance(0.85) {
+                    let c = centers[rng.below(centers.len() as u64) as usize];
+                    let spread = 1i64 << rng.below(16);
+                    (c as i64).wrapping_add(rng.range_i64(-spread, spread)) as u32
+                } else {
+                    rng.next_u32()
+                }
+            })
+            .collect()
+    }
+
+    fn shrink(&self, v: &Vec<u32>) -> Vec<Vec<u32>> {
+        let mut out = Vec::new();
+        if v.is_empty() {
+            return out;
+        }
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[v.len() / 2..].to_vec());
+        out.push(v[..v.len() - 1].to_vec());
+        out
+    }
+}
+
+/// Generator: pairs of independently generated values.
+pub struct PairGen<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Item = (A::Item, B::Item);
+
+    fn gen(&self, rng: &mut Rng) -> Self::Item {
+        (self.0.gen(rng), self.1.gen(rng))
+    }
+
+    fn shrink(&self, v: &Self::Item) -> Vec<Self::Item> {
+        let mut out: Vec<Self::Item> =
+            self.0.shrink(&v.0).into_iter().map(|a| (a, v.1.clone())).collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Generator for a u64 in `[lo, hi)`.
+pub struct RangeGen {
+    /// Inclusive lower bound.
+    pub lo: u64,
+    /// Exclusive upper bound.
+    pub hi: u64,
+}
+
+impl Gen for RangeGen {
+    type Item = u64;
+
+    fn gen(&self, rng: &mut Rng) -> u64 {
+        rng.range(self.lo, self.hi)
+    }
+
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (v - self.lo) / 2);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, 200, &BytesGen { max_len: 256 }, |v| v.len() <= 256);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_report() {
+        check(2, 200, &BytesGen { max_len: 64 }, |v| v.len() < 10);
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        let gen = BytesGen { max_len: 512 };
+        let result = std::panic::catch_unwind(|| {
+            check(3, 100, &gen, |v| v.len() < 40);
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // minimal counterexample should be close to the boundary (len 40..80)
+        let len = msg.matches(", ").count(); // crude but stable: count elements
+        assert!(len <= 90, "shrunk below initial sizes: {msg:.80}");
+    }
+
+    #[test]
+    fn words_gen_respects_bounds() {
+        let gen = WordsGen { max_words: 128, centers: 4 };
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            assert!(gen.gen(&mut rng).len() <= 128);
+        }
+    }
+
+    #[test]
+    fn pair_and_range_gens() {
+        let gen = PairGen(RangeGen { lo: 2, hi: 10 }, BytesGen { max_len: 8 });
+        let mut rng = Rng::new(9);
+        for _ in 0..100 {
+            let (a, b) = gen.gen(&mut rng);
+            assert!((2..10).contains(&a));
+            assert!(b.len() <= 8);
+        }
+        let shr = gen.shrink(&(9, vec![1, 2, 3, 4]));
+        assert!(!shr.is_empty());
+    }
+}

@@ -1,0 +1,139 @@
+//! Typed word views over raw memory images.
+//!
+//! GBDI (like BDI) operates on fixed-width words inside fixed-size blocks.
+//! The paper's dumps are little-endian x86-64/JVM memory, so words are
+//! little-endian; both 32-bit (default, as in HPCA'22) and 64-bit word
+//! granularities are supported.
+
+/// Word granularity the codec operates at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WordSize {
+    /// 32-bit words (GBDI default).
+    W32,
+    /// 64-bit words (pointer-heavy data).
+    W64,
+}
+
+impl WordSize {
+    /// Bytes per word.
+    #[inline]
+    pub fn bytes(self) -> usize {
+        match self {
+            WordSize::W32 => 4,
+            WordSize::W64 => 8,
+        }
+    }
+
+    /// Bits per word.
+    #[inline]
+    pub fn bits(self) -> u32 {
+        self.bytes() as u32 * 8
+    }
+
+    /// Parse from a CLI string ("32"/"64").
+    pub fn parse(s: &str) -> Option<WordSize> {
+        match s {
+            "32" | "w32" | "u32" => Some(WordSize::W32),
+            "64" | "w64" | "u64" => Some(WordSize::W64),
+            _ => None,
+        }
+    }
+}
+
+/// Read the `i`-th little-endian word of `block` as u64 (zero-extended for
+/// W32). `block` must hold at least `(i+1) * ws.bytes()` bytes.
+#[inline]
+pub fn read_word(block: &[u8], i: usize, ws: WordSize) -> u64 {
+    match ws {
+        WordSize::W32 => {
+            let o = i * 4;
+            u32::from_le_bytes(block[o..o + 4].try_into().unwrap()) as u64
+        }
+        WordSize::W64 => {
+            let o = i * 8;
+            u64::from_le_bytes(block[o..o + 8].try_into().unwrap())
+        }
+    }
+}
+
+/// Write the `i`-th little-endian word of `block`.
+#[inline]
+pub fn write_word(block: &mut [u8], i: usize, ws: WordSize, v: u64) {
+    match ws {
+        WordSize::W32 => {
+            let o = i * 4;
+            block[o..o + 4].copy_from_slice(&(v as u32).to_le_bytes());
+        }
+        WordSize::W64 => {
+            let o = i * 8;
+            block[o..o + 8].copy_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Iterate all words of an image (ignoring a ragged tail shorter than one
+/// word) — the sampling path of background analysis.
+pub fn words<'a>(image: &'a [u8], ws: WordSize) -> impl Iterator<Item = u64> + 'a {
+    let n = image.len() / ws.bytes();
+    (0..n).map(move |i| read_word(image, i, ws))
+}
+
+/// Number of whole words in `len` bytes.
+#[inline]
+pub fn word_count(len: usize, ws: WordSize) -> usize {
+    len / ws.bytes()
+}
+
+/// Iterator over fixed-size blocks of an image; the final block may be
+/// short (the codec stores short tails raw).
+pub fn blocks(image: &[u8], block_bytes: usize) -> impl Iterator<Item = &[u8]> {
+    image.chunks(block_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_roundtrip_w32() {
+        let mut b = vec![0u8; 16];
+        write_word(&mut b, 0, WordSize::W32, 0xDEAD_BEEF);
+        write_word(&mut b, 3, WordSize::W32, 0x1234_5678);
+        assert_eq!(read_word(&b, 0, WordSize::W32), 0xDEAD_BEEF);
+        assert_eq!(read_word(&b, 3, WordSize::W32), 0x1234_5678);
+        assert_eq!(read_word(&b, 1, WordSize::W32), 0);
+    }
+
+    #[test]
+    fn word_roundtrip_w64() {
+        let mut b = vec![0u8; 16];
+        write_word(&mut b, 1, WordSize::W64, u64::MAX - 7);
+        assert_eq!(read_word(&b, 1, WordSize::W64), u64::MAX - 7);
+    }
+
+    #[test]
+    fn words_iterator_ignores_ragged_tail() {
+        let image = [1u8, 0, 0, 0, 2, 0, 0, 0, 99, 99]; // 2 words + 2 tail bytes
+        let ws: Vec<u64> = words(&image, WordSize::W32).collect();
+        assert_eq!(ws, vec![1, 2]);
+        assert_eq!(word_count(image.len(), WordSize::W32), 2);
+    }
+
+    #[test]
+    fn blocks_chunking() {
+        let image = vec![7u8; 130];
+        let bs: Vec<&[u8]> = blocks(&image, 64).collect();
+        assert_eq!(bs.len(), 3);
+        assert_eq!(bs[0].len(), 64);
+        assert_eq!(bs[2].len(), 2);
+    }
+
+    #[test]
+    fn wordsize_parse() {
+        assert_eq!(WordSize::parse("32"), Some(WordSize::W32));
+        assert_eq!(WordSize::parse("u64"), Some(WordSize::W64));
+        assert_eq!(WordSize::parse("16"), None);
+        assert_eq!(WordSize::W32.bits(), 32);
+        assert_eq!(WordSize::W64.bytes(), 8);
+    }
+}

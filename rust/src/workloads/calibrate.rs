@@ -1,0 +1,37 @@
+//! Calibration harness: prints per-workload ratios for GBDI + baselines.
+//! Run with `cargo test --release -p gbdi calibrate_print -- --ignored --nocapture`.
+
+#[cfg(test)]
+mod tests {
+    use crate::baselines::{ratio_of, Codec, GbdiWholeImage};
+    use crate::workloads;
+
+    #[test]
+    #[ignore = "calibration tool, not a correctness test"]
+    fn calibrate_print() {
+        let size = 1 << 21; // 2 MiB per workload: fast but representative
+        let gbdi = GbdiWholeImage::default();
+        let bdi = crate::baselines::bdi::Bdi::default();
+        println!("\n{:<22} {:>7} {:>7}", "workload", "gbdi", "bdi");
+        let mut c_ratios = Vec::new();
+        let mut j_ratios = Vec::new();
+        for w in workloads::all() {
+            let img = w.generate(size, 7);
+            let rg = ratio_of(&gbdi, &img);
+            let rb = ratio_of(&bdi as &dyn Codec, &img);
+            println!("{:<22} {:>7.3} {:>7.3}", w.name(), rg, rb);
+            if w.group().is_c_family() {
+                c_ratios.push(rg);
+            } else {
+                j_ratios.push(rg);
+            }
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        println!(
+            "C mean {:.3} (paper 1.4) | Java mean {:.3} (paper 1.55) | overall {:.3} (paper 1.45)",
+            mean(&c_ratios),
+            mean(&j_ratios),
+            mean(&[c_ratios.clone(), j_ratios.clone()].concat())
+        );
+    }
+}

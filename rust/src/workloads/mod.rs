@@ -1,0 +1,170 @@
+//! The paper's nine evaluation workloads as synthetic memory-image
+//! generators (substitution documented in DESIGN.md §2: we model each
+//! application's characteristic in-memory value population; GBDI's ratio
+//! depends on that population, not on which binary produced the bytes).
+//!
+//! * SPEC CPU 2017: `mcf`, `perlbench`, `omnetpp`, `deepsjeng`
+//! * PARSEC: `fluidanimate`, `freqmine`
+//! * Java: `triangle_count`, `svm`, `matrix_factorization`
+
+pub mod java;
+pub mod parsec;
+pub mod regions;
+pub mod spec;
+
+use crate::util::prng::Rng;
+
+/// Workload family, for the paper's per-group aggregate claims
+/// (1.55× Java vs 1.4× C-workloads).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Group {
+    /// SPEC CPU 2017 (C/C++).
+    SpecCpu,
+    /// PARSEC (C/C++).
+    Parsec,
+    /// Java / JVM workloads.
+    Java,
+}
+
+impl Group {
+    /// Display label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Group::SpecCpu => "SPEC CPU 2017",
+            Group::Parsec => "PARSEC",
+            Group::Java => "Java",
+        }
+    }
+
+    /// Whether the paper counts this group under "C-Workloads".
+    pub fn is_c_family(self) -> bool {
+        matches!(self, Group::SpecCpu | Group::Parsec)
+    }
+}
+
+/// A synthetic workload: generates memory images with the application's
+/// characteristic value structure.
+pub trait Workload: Send + Sync {
+    /// Short name used on the CLI and in reports (e.g. `"mcf"`).
+    fn name(&self) -> &'static str;
+    /// Benchmark family.
+    fn group(&self) -> Group;
+    /// The dump file the paper used, for the report mapping.
+    fn paper_dump(&self) -> &'static str;
+    /// One-line description of the modelled memory content.
+    fn description(&self) -> &'static str;
+    /// Generate `bytes` of memory image, deterministic in `seed`.
+    fn generate(&self, bytes: usize, seed: u64) -> Vec<u8>;
+}
+
+/// All nine workloads in the paper's presentation order.
+pub fn all() -> Vec<Box<dyn Workload>> {
+    vec![
+        Box::new(spec::Mcf),
+        Box::new(spec::Perlbench),
+        Box::new(spec::Omnetpp),
+        Box::new(spec::Deepsjeng),
+        Box::new(parsec::Fluidanimate),
+        Box::new(parsec::Freqmine),
+        Box::new(java::TriangleCount),
+        Box::new(java::Svm),
+        Box::new(java::MatrixFactorization),
+    ]
+}
+
+/// Look up a workload by name (case-insensitive).
+pub fn by_name(name: &str) -> Option<Box<dyn Workload>> {
+    let lower = name.to_ascii_lowercase();
+    all().into_iter().find(|w| w.name() == lower)
+}
+
+/// Derive a per-workload RNG from a user seed (stable across runs and
+/// independent across workloads).
+pub(crate) fn workload_rng(name: &str, seed: u64) -> Rng {
+    let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a over the name
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    Rng::new(h ^ seed.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::byte_entropy;
+
+    #[test]
+    fn registry_complete_and_ordered() {
+        let names: Vec<&str> = all().iter().map(|w| w.name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "mcf",
+                "perlbench",
+                "omnetpp",
+                "deepsjeng",
+                "fluidanimate",
+                "freqmine",
+                "triangle_count",
+                "svm",
+                "matrix_factorization"
+            ]
+        );
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("mcf").is_some());
+        assert!(by_name("MCF").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn groups_match_paper() {
+        for w in all() {
+            let expected = match w.name() {
+                "mcf" | "perlbench" | "omnetpp" | "deepsjeng" => Group::SpecCpu,
+                "fluidanimate" | "freqmine" => Group::Parsec,
+                _ => Group::Java,
+            };
+            assert_eq!(w.group(), expected, "{}", w.name());
+        }
+        assert!(Group::SpecCpu.is_c_family());
+        assert!(Group::Parsec.is_c_family());
+        assert!(!Group::Java.is_c_family());
+    }
+
+    #[test]
+    fn generation_deterministic_and_sized() {
+        for w in all() {
+            let a = w.generate(1 << 16, 42);
+            let b = w.generate(1 << 16, 42);
+            let c = w.generate(1 << 16, 43);
+            assert_eq!(a.len(), 1 << 16, "{}", w.name());
+            assert_eq!(a, b, "{} deterministic", w.name());
+            assert_ne!(a, c, "{} seed-sensitive", w.name());
+        }
+    }
+
+    #[test]
+    fn images_are_neither_trivial_nor_random() {
+        // every workload image must have structure (entropy well below 8)
+        // but not be degenerate (entropy above 1)
+        for w in all() {
+            let img = w.generate(1 << 18, 7);
+            let e = byte_entropy(&img);
+            assert!(e > 0.5, "{} entropy {e} too low", w.name());
+            assert!(e < 7.9, "{} entropy {e} too high", w.name());
+        }
+    }
+
+    #[test]
+    fn paper_dump_names_present() {
+        for w in all() {
+            assert!(w.paper_dump().contains("dump"), "{}", w.name());
+            assert!(!w.description().is_empty());
+        }
+    }
+}
+mod calibrate;

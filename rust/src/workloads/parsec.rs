@@ -1,0 +1,120 @@
+//! PARSEC workload models: `fluidanimate` (SPH fluid simulation) and
+//! `freqmine` (FP-growth frequent itemset mining).
+
+use super::regions::*;
+use super::{workload_rng, Group, Workload};
+
+/// `fluidanimate`: smoothed-particle hydrodynamics. Memory is dominated
+//  by SoA float arrays (positions, velocities, densities) whose values
+/// share sign/exponent bits, plus cell-grid index arrays.
+pub struct Fluidanimate;
+
+impl Workload for Fluidanimate {
+    fn name(&self) -> &'static str {
+        "fluidanimate"
+    }
+    fn group(&self) -> Group {
+        Group::Parsec
+    }
+    fn paper_dump(&self) -> &'static str {
+        "parsec_fluidanimate5dump"
+    }
+    fn description(&self) -> &'static str {
+        "SPH fluid sim: f32 position/velocity/density SoA + cell indices"
+    }
+    fn generate(&self, bytes: usize, seed: u64) -> Vec<u8> {
+        let mut rng = workload_rng(self.name(), seed);
+        Composer::new()
+            // positions in a [0, 0.3m] box
+            .part(2.0, |p, r| fill_f32(p, 0.15, 0.08, r))
+            // velocities near zero
+            .part(1.5, |p, r| fill_f32(p, 0.0, 0.02, r))
+            // densities around rest density 1000
+            .part(1.0, |p, r| fill_f32(p, 1000.0, 30.0, r))
+            // rest-density / boundary constants and freshly-initialized
+            // fields: one repeated f32 per page (REP blocks)
+            .part(1.2, |p, r| {
+                let v = [1000.0f32, 0.0, 0.1, 9.8][r.below(4) as usize];
+                fill_f32_const(p, v)
+            })
+            // cell grid: particle indices (bounded ints)
+            .part(1.5, |p, r| fill_small_ints(p, 500_000, 0.15, r))
+            .part(1.3, |p, _| p.fill(0))
+            .part(0.3, |p, r| r.fill_bytes(p))
+            .generate(bytes, &mut rng)
+    }
+}
+
+/// `freqmine`: FP-growth. Memory is an FP-tree of nodes (item id, count,
+/// parent/child/sibling pointers) plus header tables and transaction
+/// buffers.
+pub struct Freqmine;
+
+impl Workload for Freqmine {
+    fn name(&self) -> &'static str {
+        "freqmine"
+    }
+    fn group(&self) -> Group {
+        Group::Parsec
+    }
+    fn paper_dump(&self) -> &'static str {
+        "parsec_freqmine5dump"
+    }
+    fn description(&self) -> &'static str {
+        "FP-growth tree: item/count nodes with parent/child pointers"
+    }
+    fn generate(&self, bytes: usize, seed: u64) -> Vec<u8> {
+        let mut rng = workload_rng(self.name(), seed);
+        let tree = PointerArena { base: 0x7FBB_0000_0000, span: 1 << 27, align: 48 };
+        Composer::new()
+            // FP-tree nodes: 48 bytes = item(4) count(4) + 3 pointers + pad
+            .part(4.0, move |p, r| {
+                for node in p.chunks_mut(48) {
+                    if node.len() < 48 {
+                        fill_small_ints(node, 1000, 0.2, r);
+                        continue;
+                    }
+                    let item = r.zipf(10_000, 1.1) as u32; // zipf item ids
+                    let count = (1 + r.zipf(100_000, 1.3)) as u32;
+                    node[0..4].copy_from_slice(&item.to_le_bytes());
+                    node[4..8].copy_from_slice(&count.to_le_bytes());
+                    node[8..16].copy_from_slice(&tree.ptr(r).to_le_bytes());
+                    node[16..24].copy_from_slice(&tree.ptr(r).to_le_bytes());
+                    node[24..32].copy_from_slice(&tree.ptr(r).to_le_bytes());
+                    node[32..48].fill(0); // padding/alignment slack
+                }
+            })
+            // header table: item -> node-list head pointers
+            .part(1.5, move |p, r| fill_hash_table(p, 0.6, &tree, r))
+            // transaction scratch: small item ids
+            .part(1.5, |p, r| fill_small_ints(p, 10_000, 0.1, r))
+            .part(1.0, |p, _| p.fill(0))
+            .generate(bytes, &mut rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{ratio_of, GbdiWholeImage};
+
+    #[test]
+    fn fluidanimate_float_pages_cluster() {
+        let img = Fluidanimate.generate(1 << 20, 1);
+        let r = ratio_of(&GbdiWholeImage::default(), &img);
+        assert!(r > 1.1, "fluidanimate ratio {r}");
+    }
+
+    #[test]
+    fn freqmine_compresses_above_one() {
+        let img = Freqmine.generate(1 << 20, 1);
+        let r = ratio_of(&GbdiWholeImage::default(), &img);
+        assert!(r > 1.2, "freqmine ratio {r}");
+    }
+
+    #[test]
+    fn images_sized_correctly() {
+        assert_eq!(Fluidanimate.generate(12345, 5).len(), 12345);
+        assert_eq!(Freqmine.generate(12345, 5).len(), 12345);
+    }
+}

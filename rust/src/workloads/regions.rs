@@ -1,0 +1,337 @@
+//! Memory-region synthesizers: the building blocks the nine workload
+//! models compose. Each region kind reproduces a value population seen in
+//! real process memory (pointer arenas, small-integer fields, FP arrays,
+//! text, hash tables, zero pages), because GBDI's compression ratio is a
+//! function of exactly that population.
+
+use crate::util::prng::Rng;
+
+/// A distribution of 64-bit pointers into a contiguous arena: high bits
+/// shared, low bits spread over `span` with `align` granularity. Written
+/// little-endian, so the *upper* 32-bit word of every pointer clusters
+/// tightly — the effect GBDI's global bases exploit across blocks.
+#[derive(Debug, Clone, Copy)]
+pub struct PointerArena {
+    /// Arena base address (e.g. a mmap'd heap at 0x7f3a_0000_0000).
+    pub base: u64,
+    /// Arena extent in bytes.
+    pub span: u64,
+    /// Pointer alignment (8 or 16 typically).
+    pub align: u64,
+}
+
+impl PointerArena {
+    /// One pointer into the arena (Zipf-hot: allocation sites cluster).
+    pub fn ptr(&self, rng: &mut Rng) -> u64 {
+        let slots = (self.span / self.align).max(1);
+        let slot = rng.zipf(slots, 0.8);
+        self.base + slot * self.align
+    }
+}
+
+/// Fill `out` with little-endian u64 pointers from the arena.
+pub fn fill_pointers(out: &mut [u8], arena: &PointerArena, rng: &mut Rng) {
+    for c in out.chunks_mut(8) {
+        let p = arena.ptr(rng);
+        let b = p.to_le_bytes();
+        let n = c.len();
+        c.copy_from_slice(&b[..n]);
+    }
+}
+
+/// Fill with i32 values that are mostly small (|v| < `mag`), a fraction
+/// exactly zero — typical counters/flags/enum fields.
+pub fn fill_small_ints(out: &mut [u8], mag: i64, zero_frac: f64, rng: &mut Rng) {
+    for c in out.chunks_mut(4) {
+        let v: i32 = if rng.chance(zero_frac) { 0 } else { rng.range_i64(-mag, mag) as i32 };
+        let b = v.to_le_bytes();
+        let n = c.len();
+        c.copy_from_slice(&b[..n]);
+    }
+}
+
+/// Fill with f32 values from a normal distribution — simulation state
+/// (positions/velocities) whose sign+exponent bits cluster tightly.
+pub fn fill_f32(out: &mut [u8], mean: f64, sd: f64, rng: &mut Rng) {
+    for c in out.chunks_mut(4) {
+        let v = rng.normal_ms(mean, sd) as f32;
+        let b = v.to_le_bytes();
+        let n = c.len();
+        c.copy_from_slice(&b[..n]);
+    }
+}
+
+/// Fill with f64 values (doubles dominate JVM numeric workloads).
+pub fn fill_f64(out: &mut [u8], mean: f64, sd: f64, rng: &mut Rng) {
+    for c in out.chunks_mut(8) {
+        let v = rng.normal_ms(mean, sd);
+        let b = v.to_le_bytes();
+        let n = c.len();
+        c.copy_from_slice(&b[..n]);
+    }
+}
+
+/// Fill with f64 values drawn from a small quantized set (`levels` evenly
+/// spaced values in `[0, scale]`) — one-hot/tf-idf features, star ratings,
+/// normalized categorical data. Real ML datasets are full of these, and
+/// their bit patterns cluster into a handful of exact values.
+pub fn fill_f64_quantized(out: &mut [u8], levels: u64, scale: f64, rng: &mut Rng) {
+    for c in out.chunks_mut(8) {
+        let k = rng.zipf(levels, 0.9);
+        let v = scale * (k as f64) / (levels.max(2) - 1) as f64;
+        let b = v.to_le_bytes();
+        let n = c.len();
+        c.copy_from_slice(&b[..n]);
+    }
+}
+
+/// Fill with a sparse f64 vector: `density` fraction non-zero (normal),
+/// the rest exactly +0.0 — SVM alpha vectors, sparse gradients.
+pub fn fill_sparse_f64(out: &mut [u8], density: f64, mean: f64, sd: f64, rng: &mut Rng) {
+    for c in out.chunks_mut(8) {
+        let v = if rng.chance(density) { rng.normal_ms(mean, sd) } else { 0.0 };
+        let b = v.to_le_bytes();
+        let n = c.len();
+        c.copy_from_slice(&b[..n]);
+    }
+}
+
+/// Fill with one repeated f32 constant (rest densities, boundary
+/// conditions, initialized-but-unwritten simulation fields).
+pub fn fill_f32_const(out: &mut [u8], value: f32) {
+    let b = value.to_le_bytes();
+    for (i, byte) in out.iter_mut().enumerate() {
+        *byte = b[i % 4];
+    }
+}
+
+/// Fill with ASCII text drawn from a Zipf vocabulary — interpreter/string
+/// heavy regions (perlbench).
+pub fn fill_text(out: &mut [u8], rng: &mut Rng) {
+    const WORDS: [&str; 24] = [
+        "the", "of", "and", "sub", "my", "return", "if", "else", "print", "regex", "hash",
+        "array", "scalar", "push", "shift", "local", "foreach", "while", "string", "value",
+        "key", "defined", "undef", "chomp",
+    ];
+    let mut i = 0;
+    while i < out.len() {
+        let word = WORDS[rng.zipf(WORDS.len() as u64, 1.2) as usize].as_bytes();
+        let take = word.len().min(out.len() - i);
+        out[i..i + take].copy_from_slice(&word[..take]);
+        i += take;
+        if i < out.len() {
+            out[i] = b' ';
+            i += 1;
+        }
+    }
+}
+
+/// Fill as an open-addressing hash table: `fill` fraction of fixed-size
+/// entries occupied (key hash + pointer + small value), the rest zero —
+/// the dominant layout in deepsjeng's transposition tables and freqmine's
+/// hash trees.
+pub fn fill_hash_table(out: &mut [u8], fill: f64, arena: &PointerArena, rng: &mut Rng) {
+    const ENTRY: usize = 16; // 8B key/hash + 8B payload pointer
+    for e in out.chunks_mut(ENTRY) {
+        if !rng.chance(fill) {
+            e.fill(0);
+            continue;
+        }
+        let key = rng.next_u64();
+        let ptr = arena.ptr(rng);
+        let kb = key.to_le_bytes();
+        let pb = ptr.to_le_bytes();
+        let n = e.len().min(8);
+        e[..n].copy_from_slice(&kb[..n]);
+        if e.len() > 8 {
+            let m = e.len() - 8;
+            e[8..].copy_from_slice(&pb[..m]);
+        }
+    }
+}
+
+/// Fill with 64-bit bitboards / dense random words with occasional
+/// repeated patterns (deepsjeng search state). Mostly incompressible by
+/// design — chess engines keep high-entropy hashes.
+pub fn fill_bitboards(out: &mut [u8], rng: &mut Rng) {
+    let patterns: Vec<u64> = (0..8).map(|_| rng.next_u64()).collect();
+    for c in out.chunks_mut(8) {
+        let v = if rng.chance(0.25) {
+            patterns[rng.below(8) as usize] // repeated board masks
+        } else {
+            rng.next_u64()
+        };
+        let b = v.to_le_bytes();
+        let n = c.len();
+        c.copy_from_slice(&b[..n]);
+    }
+}
+
+/// Fill with monotone counters stepped with jitter (ids, sequence
+/// numbers, simulation timestamps) — omnetpp event queues.
+pub fn fill_counters(out: &mut [u8], start: u64, step: u64, rng: &mut Rng) {
+    let mut v = start;
+    for c in out.chunks_mut(8) {
+        let b = v.to_le_bytes();
+        let n = c.len();
+        c.copy_from_slice(&b[..n]);
+        v = v.wrapping_add(step + rng.below(step.max(1)));
+    }
+}
+
+/// A weighted mixture of region fills applied page-by-page: the composer
+/// walks the image in `page` chunks and dispatches each page to one
+/// region kind, giving the inter-block locality GBDI targets (whole pages
+/// share a population, different pages differ).
+pub struct Composer<'a> {
+    /// Page granularity (4096 matches real dumps).
+    pub page: usize,
+    /// (weight, fill function) pairs.
+    pub parts: Vec<(f64, Box<dyn FnMut(&mut [u8], &mut Rng) + 'a>)>,
+}
+
+impl<'a> Composer<'a> {
+    /// New composer with 4 KiB pages.
+    pub fn new() -> Self {
+        Composer { page: 4096, parts: Vec::new() }
+    }
+
+    /// Add a region kind with the given mixture weight.
+    pub fn part(mut self, weight: f64, f: impl FnMut(&mut [u8], &mut Rng) + 'a) -> Self {
+        self.parts.push((weight, Box::new(f)));
+        self
+    }
+
+    /// Generate `bytes` of memory image.
+    pub fn generate(mut self, bytes: usize, rng: &mut Rng) -> Vec<u8> {
+        let weights: Vec<f64> = self.parts.iter().map(|(w, _)| *w).collect();
+        let mut out = vec![0u8; bytes];
+        for page in out.chunks_mut(self.page) {
+            let k = rng.weighted(&weights);
+            (self.parts[k].1)(page, rng);
+        }
+        out
+    }
+}
+
+impl<'a> Default for Composer<'a> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::byte_entropy;
+
+    #[test]
+    fn pointer_arena_stays_in_bounds() {
+        let mut rng = Rng::new(1);
+        let a = PointerArena { base: 0x7F00_0000_0000, span: 1 << 20, align: 16 };
+        for _ in 0..10_000 {
+            let p = a.ptr(&mut rng);
+            assert!(p >= a.base && p < a.base + a.span);
+            assert_eq!(p % 16, 0);
+        }
+    }
+
+    #[test]
+    fn pointer_pages_have_clustered_high_words() {
+        let mut rng = Rng::new(2);
+        let a = PointerArena { base: 0x7F00_0000_0000, span: 1 << 24, align: 8 };
+        let mut page = vec![0u8; 4096];
+        fill_pointers(&mut page, &a, &mut rng);
+        // every odd 32-bit word (pointer high half) should be identical
+        let mut highs = std::collections::BTreeSet::new();
+        for i in 0..page.len() / 8 {
+            highs.insert(u32::from_le_bytes(page[i * 8 + 4..i * 8 + 8].try_into().unwrap()));
+        }
+        assert!(highs.len() <= 2, "high words {highs:?}");
+    }
+
+    #[test]
+    fn small_ints_mostly_small() {
+        let mut rng = Rng::new(3);
+        let mut page = vec![0u8; 4096];
+        fill_small_ints(&mut page, 100, 0.3, &mut rng);
+        let mut zeros = 0;
+        for i in 0..1024 {
+            let v = i32::from_le_bytes(page[i * 4..i * 4 + 4].try_into().unwrap());
+            assert!(v.abs() <= 100);
+            if v == 0 {
+                zeros += 1;
+            }
+        }
+        assert!(zeros > 200, "zeros {zeros}");
+    }
+
+    #[test]
+    fn f32_exponents_cluster() {
+        let mut rng = Rng::new(4);
+        let mut page = vec![0u8; 4096];
+        fill_f32(&mut page, 1.0, 0.1, &mut rng);
+        let mut exps = std::collections::BTreeSet::new();
+        for i in 0..1024 {
+            let bits = u32::from_le_bytes(page[i * 4..i * 4 + 4].try_into().unwrap());
+            exps.insert((bits >> 23) & 0xFF);
+        }
+        assert!(exps.len() <= 6, "exponents {exps:?}");
+    }
+
+    #[test]
+    fn text_is_ascii() {
+        let mut rng = Rng::new(5);
+        let mut page = vec![0u8; 1024];
+        fill_text(&mut page, &mut rng);
+        assert!(page.iter().all(|&b| b.is_ascii_lowercase() || b == b' '));
+        let e = byte_entropy(&page);
+        assert!(e < 5.0, "text entropy {e}");
+    }
+
+    #[test]
+    fn hash_table_fill_fraction_respected() {
+        let mut rng = Rng::new(6);
+        let a = PointerArena { base: 0x1000_0000, span: 1 << 20, align: 8 };
+        let mut page = vec![0u8; 1 << 16];
+        fill_hash_table(&mut page, 0.3, &a, &mut rng);
+        let empty = page.chunks(16).filter(|e| e.iter().all(|&b| b == 0)).count();
+        let frac = empty as f64 / (page.len() / 16) as f64;
+        assert!((frac - 0.7).abs() < 0.05, "empty frac {frac}");
+    }
+
+    #[test]
+    fn bitboards_high_entropy() {
+        let mut rng = Rng::new(7);
+        let mut page = vec![0u8; 1 << 14];
+        fill_bitboards(&mut page, &mut rng);
+        assert!(byte_entropy(&page) > 7.0);
+    }
+
+    #[test]
+    fn counters_monotone() {
+        let mut rng = Rng::new(8);
+        let mut page = vec![0u8; 4096];
+        fill_counters(&mut page, 1000, 10, &mut rng);
+        let mut prev = 0u64;
+        for i in 0..page.len() / 8 {
+            let v = u64::from_le_bytes(page[i * 8..i * 8 + 8].try_into().unwrap());
+            assert!(v > prev);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn composer_mixes_deterministically() {
+        let build = |seed| {
+            let mut rng = Rng::new(seed);
+            Composer::new()
+                .part(1.0, |p, r| fill_small_ints(p, 50, 0.2, r))
+                .part(1.0, |p, _| p.fill(0))
+                .generate(1 << 16, &mut rng)
+        };
+        assert_eq!(build(9), build(9));
+        assert_ne!(build(9), build(10));
+        assert_eq!(build(9).len(), 1 << 16);
+    }
+}

@@ -1,0 +1,231 @@
+//! SPEC CPU 2017 workload models: `605.mcf_s`, `600.perlbench_s`,
+//! `620.omnetpp_s`, `631.deepsjeng_s` — the paper's C-workload set.
+//!
+//! Region mixtures follow the applications' published memory behaviour:
+//! mcf is a network-simplex solver over a pointer-linked arc/node graph;
+//! perlbench is an interpreter dominated by string/SV structures; omnetpp
+//! is a discrete-event simulator (event objects, timestamps, queues);
+//! deepsjeng is a chess engine (bitboards + a huge transposition table).
+
+use super::regions::*;
+use super::{workload_rng, Group, Workload};
+
+/// `605.mcf_s`: network simplex. Memory is arrays of arc/node structs:
+/// 64-bit pointers into two arenas, 32-bit costs/flows (small magnitudes),
+/// and flag words. Highly base-clusterable (few arenas, narrow deltas).
+pub struct Mcf;
+
+impl Workload for Mcf {
+    fn name(&self) -> &'static str {
+        "mcf"
+    }
+    fn group(&self) -> Group {
+        Group::SpecCpu
+    }
+    fn paper_dump(&self) -> &'static str {
+        "605.mcf_s_5.dump"
+    }
+    fn description(&self) -> &'static str {
+        "network-simplex arc/node graph: pointer arenas + small int costs"
+    }
+    fn generate(&self, bytes: usize, seed: u64) -> Vec<u8> {
+        let mut rng = workload_rng(self.name(), seed);
+        // arenas sized to real mcf_s resident sets: allocation locality
+        // keeps the hot node/arc arrays within a few MiB
+        let nodes = PointerArena { base: 0x7F3A_4000_0000, span: 1 << 20, align: 64 };
+        // distinct mmap region, > 2^31 away from the node arena
+        let arcs = PointerArena { base: 0x7FC2_2000_0000, span: 1 << 21, align: 32 };
+        Composer::new()
+            // arc structs (64 B): pointers into TWO arenas + scalar fields
+            // in the same cache block — the exact intra-block population
+            // mix per-block-base BDI cannot capture but global bases can
+            .part(4.0, move |p, r| {
+                for arc in p.chunks_mut(64) {
+                    if arc.len() < 64 {
+                        fill_small_ints(arc, 10_000, 0.25, r);
+                        continue;
+                    }
+                    arc[0..8].copy_from_slice(&nodes.ptr(r).to_le_bytes()); // tail
+                    arc[8..16].copy_from_slice(&nodes.ptr(r).to_le_bytes()); // head
+                    arc[16..24].copy_from_slice(&arcs.ptr(r).to_le_bytes()); // nextout
+                    arc[24..32].copy_from_slice(&arcs.ptr(r).to_le_bytes()); // nextin
+                    fill_small_ints(&mut arc[32..48], 10_000, 0.25, r); // cost/flow
+                    fill_small_ints(&mut arc[48..64], 100, 0.5, r); // ident/flags
+                }
+            })
+            // cost / flow / potential arrays
+            .part(2.0, |p, r| fill_small_ints(p, 10_000, 0.25, r))
+            // untouched allocator slack
+            .part(2.0, |p, _| p.fill(0))
+            // misc state
+            .part(0.4, |p, r| r.fill_bytes(p))
+            .generate(bytes, &mut rng)
+    }
+}
+
+/// `600.perlbench_s`: the perl interpreter. String buffers, SV/HV
+/// structures (pointer + small-flag pairs), op-tree pointers.
+pub struct Perlbench;
+
+impl Workload for Perlbench {
+    fn name(&self) -> &'static str {
+        "perlbench"
+    }
+    fn group(&self) -> Group {
+        Group::SpecCpu
+    }
+    fn paper_dump(&self) -> &'static str {
+        "600.perlbench_s_5.dump"
+    }
+    fn description(&self) -> &'static str {
+        "interpreter heap: SV structs, string buffers, op-tree pointers"
+    }
+    fn generate(&self, bytes: usize, seed: u64) -> Vec<u8> {
+        let mut rng = workload_rng(self.name(), seed);
+        let sv_arena = PointerArena { base: 0x5555_6000_0000, span: 1 << 21, align: 16 };
+        let str_arena = PointerArena { base: 0x7F88_4000_0000, span: 1 << 21, align: 8 };
+        Composer::new()
+            // string/pad buffers
+            .part(2.5, |p, r| fill_text(p, r))
+            // SV bodies: pointer + refcount/flags interleave
+            .part(2.5, move |p, r| {
+                for s in p.chunks_mut(16) {
+                    let ptr = sv_arena.ptr(r).to_le_bytes();
+                    let n = s.len().min(8);
+                    s[..n].copy_from_slice(&ptr[..n]);
+                    if s.len() >= 16 {
+                        let refcnt = (1 + r.zipf(64, 1.3)) as u32;
+                        let flags = [0x0400u32, 0x2804, 0x0801, 0x1000][r.below(4) as usize];
+                        s[8..12].copy_from_slice(&refcnt.to_le_bytes());
+                        s[12..16].copy_from_slice(&flags.to_le_bytes());
+                    }
+                }
+            })
+            // op-tree / hash buckets
+            .part(1.5, move |p, r| fill_pointers(p, &str_arena, r))
+            .part(1.5, |p, _| p.fill(0))
+            .part(0.4, |p, r| r.fill_bytes(p))
+            .generate(bytes, &mut rng)
+    }
+}
+
+/// `620.omnetpp_s`: discrete-event network simulation. Event objects with
+/// vtable pointers, monotone timestamps, message queues.
+pub struct Omnetpp;
+
+impl Workload for Omnetpp {
+    fn name(&self) -> &'static str {
+        "omnetpp"
+    }
+    fn group(&self) -> Group {
+        Group::SpecCpu
+    }
+    fn paper_dump(&self) -> &'static str {
+        "620.omnetpp_s_5.dump"
+    }
+    fn description(&self) -> &'static str {
+        "discrete-event sim: vtable ptrs, timestamps, message queues"
+    }
+    fn generate(&self, bytes: usize, seed: u64) -> Vec<u8> {
+        let mut rng = workload_rng(self.name(), seed);
+        let vtables = PointerArena { base: 0x5555_5560_0000, span: 1 << 14, align: 8 };
+        let heap = PointerArena { base: 0x7F10_0000_0000, span: 1 << 21, align: 32 };
+        let t0 = rng.below(1 << 40);
+        Composer::new()
+            // event objects: vptr + heap links + small fields
+            .part(3.0, move |p, r| {
+                for obj in p.chunks_mut(64) {
+                    let n = obj.len();
+                    if n < 64 {
+                        fill_small_ints(obj, 100, 0.3, r);
+                        continue;
+                    }
+                    obj[0..8].copy_from_slice(&vtables.ptr(r).to_le_bytes());
+                    obj[8..16].copy_from_slice(&heap.ptr(r).to_le_bytes());
+                    obj[16..24].copy_from_slice(&heap.ptr(r).to_le_bytes());
+                    fill_small_ints(&mut obj[24..40], 1000, 0.4, r);
+                    // simtime (ns-scale fixed point, clustered magnitudes)
+                    let t = t0 + r.below(1 << 18);
+                    obj[40..48].copy_from_slice(&t.to_le_bytes());
+                    fill_small_ints(&mut obj[48..64], 64, 0.5, r);
+                }
+            })
+            // future-event-set timestamps
+            .part(1.5, move |p, r| fill_counters(p, t0, 64, r))
+            .part(1.2, |p, _| p.fill(0))
+            .part(0.6, |p, r| r.fill_bytes(p))
+            .generate(bytes, &mut rng)
+    }
+}
+
+/// `631.deepsjeng_s`: chess engine. Transposition table (mostly-empty
+/// hash entries), bitboards, killer/history heuristic arrays. The least
+/// compressible of the paper's set.
+pub struct Deepsjeng;
+
+impl Workload for Deepsjeng {
+    fn name(&self) -> &'static str {
+        "deepsjeng"
+    }
+    fn group(&self) -> Group {
+        Group::SpecCpu
+    }
+    fn paper_dump(&self) -> &'static str {
+        "631.deepsjeng_s_5.dump"
+    }
+    fn description(&self) -> &'static str {
+        "chess engine: transposition table, bitboards, history arrays"
+    }
+    fn generate(&self, bytes: usize, seed: u64) -> Vec<u8> {
+        let mut rng = workload_rng(self.name(), seed);
+        let heap = PointerArena { base: 0x7F77_0000_0000, span: 1 << 26, align: 16 };
+        Composer::new()
+            // transposition table dominates the footprint; sjeng keeps it
+            // hot (high fill), and keys/payloads are high-entropy hashes
+            .part(5.0, move |p, r| fill_hash_table(p, 0.8, &heap, r))
+            .part(2.5, |p, r| fill_bitboards(p, r))
+            // history / killer tables: small bounded counters
+            .part(1.2, |p, r| fill_small_ints(p, 512, 0.35, r))
+            .part(0.5, |p, _| p.fill(0))
+            .generate(bytes, &mut rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{ratio_of, GbdiWholeImage};
+
+    #[test]
+    fn mcf_is_gbdi_friendly() {
+        let img = Mcf.generate(1 << 20, 1);
+        let r = ratio_of(&GbdiWholeImage::default(), &img);
+        assert!(r > 1.2, "mcf gbdi ratio {r}");
+    }
+
+    #[test]
+    fn deepsjeng_is_least_compressible_spec() {
+        let g = GbdiWholeImage::default();
+        let r_deep = ratio_of(&g, &Deepsjeng.generate(1 << 20, 1));
+        let r_mcf = ratio_of(&g, &Mcf.generate(1 << 20, 1));
+        assert!(r_deep < r_mcf, "deepsjeng {r_deep} vs mcf {r_mcf}");
+        assert!(r_deep > 1.0, "still above 1.0: {r_deep}");
+    }
+
+    #[test]
+    fn perlbench_text_regions_visible() {
+        let img = Perlbench.generate(1 << 18, 2);
+        // some pages should be pure ASCII text
+        let ascii_pages = img
+            .chunks(4096)
+            .filter(|p| p.iter().all(|&b| b.is_ascii_lowercase() || b == b' '))
+            .count();
+        assert!(ascii_pages > 5, "ascii pages {ascii_pages}");
+    }
+
+    #[test]
+    fn omnetpp_timestamps_monotone_within_counter_pages() {
+        let img = Omnetpp.generate(1 << 18, 3);
+        assert_eq!(img.len(), 1 << 18);
+    }
+}

@@ -1,0 +1,150 @@
+//! Integration: the full coordinator service under concurrent load, table
+//! churn across traffic phase changes, and (when artifacts exist) the
+//! PJRT-artifact analyzer end-to-end.
+
+use gbdi::coordinator::{AnalyzerBackend, CompressionService, ServiceConfig};
+use gbdi::runtime::ArtifactRuntime;
+use gbdi::util::prng::Rng;
+use gbdi::workloads;
+use std::sync::Arc;
+
+fn native_service(workers: usize, analyze_every: u64) -> CompressionService {
+    CompressionService::start(
+        ServiceConfig { workers, analyze_every, ..Default::default() },
+        AnalyzerBackend::Native,
+    )
+    .unwrap()
+}
+
+#[test]
+fn heavy_mixed_load_stays_bit_exact() {
+    let svc = native_service(4, 64);
+    let names = ["mcf", "perlbench", "fluidanimate", "svm", "deepsjeng"];
+    let mut rng = Rng::new(5);
+    let mut expected = Vec::new();
+    for i in 0..400u64 {
+        let w = workloads::by_name(names[rng.below(5) as usize]).unwrap();
+        let page = w.generate(4096, i);
+        expected.push(page.clone());
+        svc.submit(i, page);
+    }
+    svc.flush();
+    for (i, page) in expected.iter().enumerate() {
+        assert_eq!(&svc.read_page(i as u64).unwrap(), page, "page {i}");
+    }
+    let m = svc.shutdown();
+    assert_eq!(m.pages_in, 400);
+    assert!(m.analyses >= 1, "analyzer ran");
+    assert!(m.ratio() > 1.0);
+}
+
+#[test]
+fn phase_change_triggers_reclustering() {
+    let svc = native_service(2, 48);
+    // phase 1: zero-heavy
+    for i in 0..96u64 {
+        svc.submit(i, vec![0u8; 4096]);
+    }
+    svc.flush();
+    svc.request_analysis();
+    for _ in 0..400 {
+        if svc.current_version() > 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let v1 = svc.current_version();
+    // phase 2: pointer-heavy traffic — table should move again
+    let w = workloads::by_name("mcf").unwrap();
+    for i in 96..256u64 {
+        svc.submit(i, w.generate(4096, i));
+    }
+    svc.flush();
+    svc.request_analysis();
+    for _ in 0..400 {
+        if svc.current_version() > v1 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let m = svc.metrics();
+    assert!(m.analyses >= 2, "analyses {}", m.analyses);
+    // all pages from both phases still decode
+    assert_eq!(svc.read_page(0).unwrap(), vec![0u8; 4096]);
+    assert_eq!(svc.read_page(200).unwrap(), w.generate(4096, 200));
+    svc.shutdown();
+}
+
+#[test]
+fn flush_is_a_complete_barrier() {
+    let svc = native_service(4, 1_000_000);
+    for round in 0..10u64 {
+        for i in 0..50u64 {
+            svc.submit(round * 50 + i, vec![round as u8; 4096]);
+        }
+        svc.flush();
+        // every page of this round must be readable immediately
+        for i in 0..50u64 {
+            assert_eq!(svc.read_page(round * 50 + i).unwrap(), vec![round as u8; 4096]);
+        }
+    }
+    let m = svc.shutdown();
+    assert_eq!(m.pages_in, 500);
+}
+
+#[test]
+fn artifact_backend_end_to_end_if_built() {
+    let Ok(rt) = ArtifactRuntime::new(ArtifactRuntime::default_dir()) else { return };
+    if !rt.has_artifact("kmeans_k64") {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let svc = CompressionService::start(
+        ServiceConfig { workers: 2, analyze_every: 32, ..Default::default() },
+        AnalyzerBackend::Artifact(Arc::new(rt)),
+    )
+    .unwrap();
+    let w = workloads::by_name("triangle_count").unwrap();
+    for i in 0..96u64 {
+        svc.submit(i, w.generate(4096, i));
+    }
+    svc.flush();
+    svc.request_analysis();
+    for _ in 0..600 {
+        if svc.current_version() > 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert!(svc.current_version() > 0, "PJRT analyzer never published a table");
+    for i in 0..96u64 {
+        assert_eq!(svc.read_page(i).unwrap(), w.generate(4096, i));
+    }
+    let m = svc.shutdown();
+    assert!(m.table_swaps >= 1);
+}
+
+#[test]
+fn shutdown_drains_pending_pages() {
+    let svc = native_service(2, 1_000_000);
+    for i in 0..100u64 {
+        svc.submit(i, vec![i as u8; 4096]);
+    }
+    // no flush: shutdown must drain everything itself
+    let m = svc.shutdown();
+    assert_eq!(m.pages_in, 100);
+}
+
+#[test]
+fn storage_ratio_accounts_logical_and_stored() {
+    let svc = native_service(2, 64);
+    for i in 0..64u64 {
+        svc.submit(i, vec![0u8; 4096]); // zeros: tiny stored size
+    }
+    svc.flush();
+    let (logical, stored, ratio) = svc.storage_ratio();
+    assert_eq!(logical, 64 * 4096);
+    assert!(stored < logical / 10, "zeros stored {stored}");
+    assert!(ratio > 10.0);
+    svc.shutdown();
+}

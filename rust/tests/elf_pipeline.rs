@@ -1,0 +1,62 @@
+//! Integration: the paper's full dump pipeline — generate ELF cores,
+//! parse, compress, decompress, verify — including multi-segment dumps
+//! and the CLI's container format.
+
+use gbdi::baselines::{Codec, GbdiWholeImage};
+use gbdi::elf;
+use gbdi::workloads;
+
+#[test]
+fn elf_dump_pipeline_end_to_end() {
+    for name in ["mcf", "svm"] {
+        let w = workloads::by_name(name).unwrap();
+        let image = w.generate(1 << 18, 21);
+        let file = elf::write_core(&[elf::Segment { vaddr: 0x10000, flags: 6, data: image.clone() }]);
+        let dump = elf::parse(&file).unwrap();
+        assert_eq!(dump.flatten(), image);
+        let codec = GbdiWholeImage::default();
+        let comp = codec.compress(&dump.flatten());
+        assert_eq!(codec.decompress(&comp, image.len()).unwrap(), image);
+    }
+}
+
+#[test]
+fn multi_segment_dump_flattens_and_compresses() {
+    let text = workloads::by_name("perlbench").unwrap().generate(1 << 16, 1);
+    let heap = workloads::by_name("triangle_count").unwrap().generate(1 << 17, 2);
+    let stack = vec![0u8; 1 << 14];
+    let file = elf::write_core(&[
+        elf::Segment { vaddr: 0x400000, flags: 5, data: text.clone() },
+        elf::Segment { vaddr: 0x7F00_0000_0000, flags: 6, data: heap.clone() },
+        elf::Segment { vaddr: 0x7FFF_FF00_0000, flags: 6, data: stack.clone() },
+    ]);
+    let dump = elf::parse(&file).unwrap();
+    assert_eq!(dump.segments.len(), 3);
+    let image = dump.flatten();
+    assert_eq!(image.len(), text.len() + heap.len() + stack.len());
+    let codec = GbdiWholeImage::default();
+    let comp = codec.compress(&image);
+    assert_eq!(codec.decompress(&comp, image.len()).unwrap(), image);
+}
+
+#[test]
+fn container_records_length() {
+    let image = workloads::by_name("fluidanimate").unwrap().generate(100_000, 3);
+    let codec = GbdiWholeImage::default();
+    let comp = codec.compress(&image);
+    assert_eq!(GbdiWholeImage::container_len(&comp).unwrap(), 100_000);
+}
+
+#[test]
+fn container_roundtrips_through_files() {
+    let dir = std::env::temp_dir().join("gbdi_elf_pipeline_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let image = workloads::by_name("deepsjeng").unwrap().generate(1 << 16, 4);
+    let codec = GbdiWholeImage::default();
+    let comp_path = dir.join("x.gbdi");
+    std::fs::write(&comp_path, codec.compress(&image)).unwrap();
+    let comp = std::fs::read(&comp_path).unwrap();
+    let len = GbdiWholeImage::container_len(&comp).unwrap();
+    assert_eq!(codec.decompress(&comp, len).unwrap(), image);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,223 @@
+//! Property-based integration tests (self-built testkit; proptest is
+//! unavailable offline): codec roundtrips over adversarial generated
+//! inputs, bitstream invariants, and coordinator-facing table invariants.
+
+use gbdi::baselines::{all_codecs, Codec};
+use gbdi::cluster::{apply_delta, wrapping_delta};
+use gbdi::gbdi::table::GlobalBaseTable;
+use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig};
+use gbdi::util::bits::{signed_width, BitReader, BitWriter};
+use gbdi::util::testkit::{check, BytesGen, Gen, PairGen, RangeGen, WordsGen};
+use gbdi::value::WordSize;
+
+#[test]
+fn prop_gbdi_roundtrips_arbitrary_bytes() {
+    let gen = BytesGen { max_len: 4096 };
+    check(0xA11CE, 60, &gen, |data| {
+        let cfg = GbdiConfig::default();
+        let table = analyze::analyze_image(data, &cfg);
+        let codec = GbdiCodec::new(table, cfg);
+        let comp = codec.compress_image(data);
+        gbdi::gbdi::decode::decompress_image(&comp).map(|d| d == *data).unwrap_or(false)
+    });
+}
+
+#[test]
+fn prop_gbdi_never_expands_much() {
+    // bounded expansion: tag bits + table + framing only
+    let gen = BytesGen { max_len: 8192 };
+    check(0xB0B, 60, &gen, |data| {
+        let cfg = GbdiConfig::default();
+        let table = analyze::analyze_image(data, &cfg);
+        let codec = GbdiCodec::new(table, cfg);
+        let comp = codec.compress_image(data);
+        comp.total_len() <= data.len() + data.len() / 32 + 600
+    });
+}
+
+#[test]
+fn prop_all_baselines_roundtrip() {
+    let gen = BytesGen { max_len: 2048 };
+    for codec in all_codecs() {
+        check(0xC0DEC ^ codec.name().len() as u64, 30, &gen, |data| {
+            let comp = codec.compress(data);
+            codec.decompress(&comp, data.len()).map(|d| d == *data).unwrap_or(false)
+        });
+    }
+}
+
+#[test]
+fn prop_gbdi_roundtrips_clustered_words() {
+    let gen = WordsGen { max_words: 2048, centers: 5 };
+    check(0x60D, 60, &gen, |words| {
+        let data: Vec<u8> = words.iter().flat_map(|w| w.to_le_bytes()).collect();
+        let cfg = GbdiConfig::default();
+        let table = analyze::analyze_image(&data, &cfg);
+        let codec = GbdiCodec::new(table, cfg);
+        let comp = codec.compress_image(&data);
+        gbdi::gbdi::decode::decompress_image(&comp).map(|d| d == data).unwrap_or(false)
+    });
+}
+
+#[test]
+fn prop_bitstream_roundtrips_any_field_sequence() {
+    struct FieldsGen;
+    impl Gen for FieldsGen {
+        type Item = Vec<(u64, u32)>;
+        fn gen(&self, rng: &mut gbdi::util::prng::Rng) -> Self::Item {
+            (0..rng.below(200))
+                .map(|_| {
+                    let n = rng.range(1, 65) as u32;
+                    let v = if n == 64 { rng.next_u64() } else { rng.next_u64() & ((1 << n) - 1) };
+                    (v, n)
+                })
+                .collect()
+        }
+        fn shrink(&self, v: &Self::Item) -> Vec<Self::Item> {
+            if v.is_empty() {
+                vec![]
+            } else {
+                vec![v[..v.len() / 2].to_vec(), v[1..].to_vec()]
+            }
+        }
+    }
+    check(0xB175, 200, &FieldsGen, |fields| {
+        let mut w = BitWriter::new();
+        for &(v, n) in fields {
+            w.put(v, n);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        fields.iter().all(|&(v, n)| r.get(n) == Ok(v))
+    });
+}
+
+#[test]
+fn prop_wrapping_delta_inverts() {
+    let gen = PairGen(RangeGen { lo: 0, hi: u32::MAX as u64 + 1 }, RangeGen { lo: 0, hi: u32::MAX as u64 + 1 });
+    check(0xDE17A, 500, &gen, |&(v, c)| {
+        let d = wrapping_delta(v, c, WordSize::W32);
+        apply_delta(c, d, WordSize::W32) == v && signed_width(d) <= 33
+    });
+}
+
+#[test]
+fn prop_table_serialization_roundtrips() {
+    struct TableGen;
+    impl Gen for TableGen {
+        type Item = Vec<(u64, u32)>;
+        fn gen(&self, rng: &mut gbdi::util::prng::Rng) -> Self::Item {
+            (0..rng.range(1, 100))
+                .map(|_| (rng.next_u32() as u64, rng.below(25) as u32))
+                .collect()
+        }
+    }
+    check(0x7AB1E, 200, &TableGen, |pairs| {
+        let t = GlobalBaseTable::new(pairs.clone(), WordSize::W32, 9);
+        let bytes = t.serialize();
+        match GlobalBaseTable::deserialize(&bytes) {
+            Ok((t2, n)) => t2 == t && n == bytes.len(),
+            Err(_) => false,
+        }
+    });
+}
+
+#[test]
+fn prop_best_base_result_is_always_encodable() {
+    struct QueryGen;
+    impl Gen for QueryGen {
+        type Item = (Vec<(u64, u32)>, Vec<u64>);
+        fn gen(&self, rng: &mut gbdi::util::prng::Rng) -> Self::Item {
+            let pairs: Vec<(u64, u32)> = (0..rng.range(1, 64))
+                .map(|_| (rng.next_u32() as u64, [0u32, 4, 8, 12, 16, 20, 24][rng.below(7) as usize]))
+                .collect();
+            let queries: Vec<u64> = (0..64).map(|_| rng.next_u32() as u64).collect();
+            (pairs, queries)
+        }
+    }
+    check(0xBE57, 200, &QueryGen, |(pairs, queries)| {
+        let t = GlobalBaseTable::new(pairs.clone(), WordSize::W32, 0);
+        queries.iter().all(|&v| match t.best_base(v) {
+            Some((idx, d, w)) => {
+                let e = t.get(idx);
+                // the contract the encoder depends on: delta fits the
+                // entry's class, the width is the entry's class, and the
+                // decoder's reconstruction inverts exactly
+                e.width == w && e.fits(d) && apply_delta(e.base, d, WordSize::W32) == v
+            }
+            None => t.best_base_exhaustive(v).is_none(),
+        })
+    });
+}
+
+#[test]
+fn prop_w64_scan_matches_exhaustive() {
+    struct W64TableGen;
+    impl Gen for W64TableGen {
+        type Item = (Vec<(u64, u32)>, Vec<u64>);
+        fn gen(&self, rng: &mut gbdi::util::prng::Rng) -> Self::Item {
+            let pairs: Vec<(u64, u32)> = (0..rng.range(1, 48))
+                .map(|_| (rng.next_u64(), [0u32, 4, 8, 16, 24, 32][rng.below(6) as usize]))
+                .collect();
+            let mut queries: Vec<u64> = (0..32).map(|_| rng.next_u64()).collect();
+            // bias half the queries near bases so fits actually occur
+            for i in 0..16.min(pairs.len()) {
+                queries[i] = pairs[i].0.wrapping_add(rng.range_i64(-1000, 1000) as u64);
+            }
+            (pairs, queries)
+        }
+    }
+    check(0x64B17, 150, &W64TableGen, |(pairs, queries)| {
+        let t = GlobalBaseTable::new(pairs.clone(), WordSize::W64, 0);
+        queries.iter().all(|&v| {
+            let fast = t.best_base(v);
+            let slow = t.best_base_exhaustive(v);
+            match (fast, slow) {
+                (None, None) => true,
+                (Some((i, d, w)), Some((_, _, sw))) => {
+                    let e = t.get(i);
+                    w == sw && e.width == w && e.fits(d)
+                        && apply_delta(e.base, d, WordSize::W64) == v
+                }
+                _ => false,
+            }
+        })
+    });
+}
+
+#[test]
+fn prop_parallel_stream_decodes_after_corruption_attempts() {
+    // chunked (parallel) streams must be as corruption-safe as serial ones
+    let gen = WordsGen { max_words: 8192, centers: 4 };
+    check(0xC4A9, 10, &gen, |words| {
+        // tile up past one 256 KiB chunk so the chunked path actually runs
+        let one: Vec<u8> = words.iter().flat_map(|w| w.to_le_bytes()).collect();
+        if one.len() < 1024 {
+            return true; // too small to exercise chunking
+        }
+        let mut data = Vec::new();
+        while data.len() <= 4096 * 64 {
+            data.extend_from_slice(&one);
+            data.push(data.len() as u8); // avoid degenerate all-identical tiles
+        }
+        let cfg = GbdiConfig::default();
+        let table = analyze::analyze_image(&data, &cfg);
+        let codec = GbdiCodec::new(table, cfg);
+        let (comp, _) = codec.compress_image_parallel(&data, 4);
+        // exact decode
+        if gbdi::gbdi::decode::decompress_image(&comp).map(|d| d == data).unwrap_or(false) {
+            // and corrupting the frame must never panic
+            let mut bad = comp.clone();
+            if !bad.payload.is_empty() {
+                bad.payload[0] ^= 0xFF;
+                let _ = gbdi::gbdi::decode::decompress_image(&bad);
+            }
+            let mut bad = comp;
+            bad.chunk_blocks = 7; // wrong chunking
+            let _ = gbdi::gbdi::decode::decompress_image(&bad);
+            true
+        } else {
+            false
+        }
+    });
+}

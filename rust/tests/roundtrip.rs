@@ -1,0 +1,104 @@
+//! Integration: GBDI lossless roundtrip across every workload, config
+//! sweep, and word size — the paper's "reconstruction accuracy" metric
+//! (§V) must be exact everywhere.
+
+use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig};
+use gbdi::value::WordSize;
+use gbdi::workloads;
+
+#[test]
+fn all_workloads_roundtrip_bit_exact() {
+    for w in workloads::all() {
+        let image = w.generate(1 << 19, 11);
+        let cfg = GbdiConfig::default();
+        let table = analyze::analyze_image(&image, &cfg);
+        let codec = GbdiCodec::new(table, cfg);
+        let comp = codec.compress_image(&image);
+        let restored = gbdi::gbdi::decode::decompress_image(&comp).unwrap();
+        assert_eq!(restored, image, "{} not bit-exact", w.name());
+        assert!(comp.ratio() > 1.0, "{} ratio {}", w.name(), comp.ratio());
+    }
+}
+
+#[test]
+fn config_sweep_roundtrips() {
+    let image = workloads::by_name("freqmine").unwrap().generate(1 << 18, 3);
+    for num_bases in [2usize, 8, 16, 64, 128, 256] {
+        for block_bytes in [32usize, 64, 128] {
+            let cfg = GbdiConfig { num_bases, block_bytes, ..Default::default() };
+            let table = analyze::analyze_image(&image, &cfg);
+            let codec = GbdiCodec::new(table, cfg);
+            let comp = codec.compress_image(&image);
+            let restored = gbdi::gbdi::decode::decompress_image(&comp).unwrap();
+            assert_eq!(restored, image, "K={num_bases} block={block_bytes}");
+        }
+    }
+}
+
+#[test]
+fn w64_mode_roundtrips() {
+    let image = workloads::by_name("omnetpp").unwrap().generate(1 << 18, 5);
+    let cfg = GbdiConfig {
+        word_size: WordSize::W64,
+        width_classes: vec![0, 4, 8, 16, 24, 32],
+        ..Default::default()
+    };
+    let table = analyze::analyze_image(&image, &cfg);
+    let codec = GbdiCodec::new(table, cfg);
+    let comp = codec.compress_image(&image);
+    assert_eq!(gbdi::gbdi::decode::decompress_image(&comp).unwrap(), image);
+}
+
+#[test]
+fn narrow_width_class_menus_roundtrip() {
+    let image = workloads::by_name("svm").unwrap().generate(1 << 17, 9);
+    for classes in [vec![0u32], vec![8], vec![0, 16], vec![4, 8, 12, 16, 20, 24]] {
+        let cfg = GbdiConfig { width_classes: classes.clone(), ..Default::default() };
+        let table = analyze::analyze_image(&image, &cfg);
+        let codec = GbdiCodec::new(table, cfg);
+        let comp = codec.compress_image(&image);
+        let restored = gbdi::gbdi::decode::decompress_image(&comp).unwrap();
+        assert_eq!(restored, image, "classes {classes:?}");
+    }
+}
+
+#[test]
+fn pathological_images_roundtrip() {
+    let cfg = GbdiConfig::default();
+    let mut rng = gbdi::util::prng::Rng::new(1);
+    let mut noise = vec![0u8; 1 << 16];
+    rng.fill_bytes(&mut noise);
+    let cases: Vec<Vec<u8>> = vec![
+        vec![],
+        vec![0u8; 63],           // less than one block
+        vec![0u8; 64],           // exactly one block
+        vec![0u8; 65],           // one block + ragged tail
+        vec![0xFF; 1 << 16],     // repeated
+        noise,                   // incompressible
+        (0..=255u8).cycle().take(12345).collect(),
+    ];
+    for (i, image) in cases.iter().enumerate() {
+        let table = analyze::analyze_image(image, &cfg);
+        let codec = GbdiCodec::new(table, cfg.clone());
+        let comp = codec.compress_image(image);
+        assert_eq!(&gbdi::gbdi::decode::decompress_image(&comp).unwrap(), image, "case {i}");
+    }
+}
+
+#[test]
+fn parallel_compression_matches_serial() {
+    let image = workloads::by_name("triangle_count").unwrap().generate(2 << 20, 17);
+    let cfg = GbdiConfig::default();
+    let table = analyze::analyze_image(&image, &cfg);
+    let codec = GbdiCodec::new(table, cfg);
+    let serial = codec.compress_image(&image);
+    for threads in [2usize, 4, 8] {
+        let (par, stats) = codec.compress_image_parallel(&image, threads);
+        assert_eq!(par.block_bits, serial.block_bits, "{threads} threads: same per-block sizes");
+        // padding cost: < 1 byte per 4096-block chunk
+        let chunks = (serial.payload.len() / (4096 * 64)).max(1);
+        assert!(par.payload.len() <= serial.payload.len() + chunks + 1);
+        assert_eq!(gbdi::gbdi::decode::decompress_image(&par).unwrap(), image);
+        assert!(stats.gbdi_blocks > 0);
+    }
+}

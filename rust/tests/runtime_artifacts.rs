@@ -1,0 +1,121 @@
+//! Integration: the PJRT runtime executing the AOT JAX/Pallas artifacts,
+//! cross-checked against the native Rust clustering. Skips (with a loud
+//! message) when `artifacts/` has not been built — run `make artifacts`.
+
+use gbdi::cluster::apply_delta;
+use gbdi::coordinator::{Analyzer, AnalyzerBackend};
+use gbdi::gbdi::GbdiConfig;
+use gbdi::runtime::{shape_samples, ArtifactRuntime, N_SAMPLES};
+use gbdi::util::prng::Rng;
+use gbdi::value::WordSize;
+use std::sync::Arc;
+
+fn runtime() -> Option<Arc<ArtifactRuntime>> {
+    // tests run from the crate root, so ./artifacts is right; also honour
+    // GBDI_ARTIFACTS
+    let rt = ArtifactRuntime::new(ArtifactRuntime::default_dir()).ok()?;
+    if !rt.has_artifact("kmeans_k64") {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Arc::new(rt))
+}
+
+fn mixture(seed: u64, n: usize) -> Vec<u64> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let c = [60_000u64, 12_000_000, 2_800_000_000][rng.below(3) as usize];
+            apply_delta(c, rng.range_i64(-200, 200), WordSize::W32)
+        })
+        .collect()
+}
+
+#[test]
+fn artifact_kmeans_recovers_centers() {
+    let Some(rt) = runtime() else { return };
+    let samples = mixture(1, N_SAMPLES);
+    let x = shape_samples(&samples);
+    let mut rng = Rng::new(2);
+    let init: Vec<f32> =
+        (0..64).map(|_| samples[rng.below(samples.len() as u64) as usize] as f32).collect();
+    let fit = rt.kmeans(&x, &init).expect("artifact kmeans");
+    assert_eq!(fit.centroids.len(), 64);
+    assert_eq!(fit.counts.len(), 64);
+    let total: f32 = fit.counts.iter().sum();
+    assert_eq!(total as usize, N_SAMPLES, "counts conserve samples");
+    // the sample mass must concentrate around the true centers (with
+    // K=64, each cluster's mass spreads over ~20 nearby centroids)
+    for target in [60_000.0f32, 12_000_000.0, 2_800_000_000.0] {
+        let mass: f32 = fit
+            .centroids
+            .iter()
+            .zip(&fit.counts)
+            .filter(|&(&c, _)| (c - target).abs() / target.max(1.0) < 0.01)
+            .map(|(_, &n)| n)
+            .sum();
+        assert!(mass > 500.0, "only {mass} samples near {target}: {:?}", fit.centroids);
+    }
+    assert!(fit.inertia >= 0.0);
+}
+
+#[test]
+fn artifact_analyzer_builds_compressive_table() {
+    let Some(rt) = runtime() else { return };
+    let cfg = GbdiConfig::default();
+    let mut artifact = Analyzer::new(AnalyzerBackend::Artifact(rt), cfg.clone());
+    let mut native = Analyzer::new(AnalyzerBackend::Native, cfg);
+    let samples = mixture(3, N_SAMPLES);
+    let t_a = artifact.analyze(&samples, 1).expect("artifact analyze");
+    let t_n = native.analyze(&samples, 1).expect("native analyze");
+    let bits_a = artifact.estimate_bits(&samples, &t_a);
+    let bits_n = native.estimate_bits(&samples, &t_n);
+    let raw = samples.len() as u64 * 32;
+    // f32 ulp at 2.8e9 is 256, so snapped bases sit a few hundred off the
+    // integer centroids and deltas need a wider class than the native
+    // (exact-integer) path — still far below raw
+    assert!(bits_a < raw * 2 / 3, "artifact table compresses: {bits_a} vs raw {raw}");
+    // the two backends should land in the same quality ballpark
+    let ratio = bits_a as f64 / bits_n as f64;
+    assert!((0.6..1.6).contains(&ratio), "artifact {bits_a} vs native {bits_n}");
+}
+
+#[test]
+fn artifact_size_estimate_tracks_table_quality() {
+    let Some(rt) = runtime() else { return };
+    let samples = mixture(5, N_SAMPLES);
+    let x = shape_samples(&samples);
+    let good_bases: Vec<f32> = {
+        let mut b = vec![0.0f32; 64];
+        b[0] = 60_000.0;
+        b[1] = 12_000_000.0;
+        b[2] = 2_800_000_000.0;
+        b
+    };
+    let good_widths = vec![12.0f32; 64];
+    let bad_bases: Vec<f32> = (0..64).map(|i| i as f32 * 1000.0).collect();
+    let bad_widths = vec![4.0f32; 64];
+    let good = rt.size_estimate(&x, &good_bases, &good_widths).expect("sizeest");
+    let bad = rt.size_estimate(&x, &bad_bases, &bad_widths).expect("sizeest");
+    assert!(good < bad, "good table {good} should score below bad {bad}");
+}
+
+#[test]
+fn artifact_rejects_bad_shapes() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.kmeans(&[0.0; 10], &[0.0; 64]).is_err());
+    assert!(rt.kmeans(&vec![0.0; N_SAMPLES], &[0.0; 13]).is_err());
+    assert!(rt.size_estimate(&vec![0.0; N_SAMPLES], &[0.0; 10], &[0.0; 10]).is_err());
+}
+
+#[test]
+fn artifact_execution_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let samples = mixture(7, N_SAMPLES);
+    let x = shape_samples(&samples);
+    let init: Vec<f32> = (0..16).map(|i| (i * 1000) as f32).collect();
+    let a = rt.kmeans(&x, &init).unwrap();
+    let b = rt.kmeans(&x, &init).unwrap();
+    assert_eq!(a.centroids, b.centroids);
+    assert_eq!(a.counts, b.counts);
+}
