@@ -126,7 +126,7 @@ impl Bdi {
         4 + 8 * k as u64 + n + 8 * d as u64 * n
     }
 
-    fn compress_block(&self, block: &[u8], w: &mut BitWriter) {
+    fn encode_block(&self, block: &[u8], w: &mut BitWriter) {
         // fast paths
         if block.len() == self.block_bytes {
             if block.iter().all(|&b| b == 0) {
@@ -178,7 +178,7 @@ impl Bdi {
         }
     }
 
-    fn decompress_block(&self, r: &mut BitReader, out: &mut [u8]) -> Result<()> {
+    fn decode_block(&self, r: &mut BitReader, out: &mut [u8]) -> Result<()> {
         let corrupt = |m: &str| Error::Corrupt(format!("bdi: {m}"));
         let id = r.get(4).map_err(|_| corrupt("missing id"))?;
         let enc = Enc::from_id(id).ok_or_else(|| corrupt("bad encoding id"))?;
@@ -233,6 +233,34 @@ fn mask_bits(bits: u32) -> u64 {
     }
 }
 
+impl crate::codec::BlockCodec for Bdi {
+    fn name(&self) -> &'static str {
+        "bdi"
+    }
+
+    fn codec_id(&self) -> crate::codec::CodecId {
+        crate::codec::CodecId::Bdi
+    }
+
+    fn block_bytes(&self) -> usize {
+        self.block_bytes
+    }
+
+    fn compress_block(&self, block: &[u8], w: &mut BitWriter) -> u32 {
+        let start = w.bit_len();
+        self.encode_block(block, w);
+        (w.bit_len() - start) as u32
+    }
+
+    fn decompress_block(&self, r: &mut BitReader<'_>, out: &mut [u8]) -> Result<()> {
+        self.decode_block(r, out)
+    }
+
+    fn config_bytes(&self) -> Vec<u8> {
+        crate::codec::block_bytes_config(self.block_bytes)
+    }
+}
+
 impl Codec for Bdi {
     fn name(&self) -> &'static str {
         "bdi"
@@ -241,7 +269,7 @@ impl Codec for Bdi {
     fn compress(&self, data: &[u8]) -> Vec<u8> {
         let mut w = BitWriter::with_capacity(data.len() / 2 + 16);
         for block in data.chunks(self.block_bytes) {
-            self.compress_block(block, &mut w);
+            self.encode_block(block, &mut w);
         }
         w.finish()
     }
@@ -250,7 +278,7 @@ impl Codec for Bdi {
         let mut out = vec![0u8; original_len];
         let mut r = BitReader::new(comp);
         for chunk in out.chunks_mut(self.block_bytes) {
-            self.decompress_block(&mut r, chunk)?;
+            self.decode_block(&mut r, chunk)?;
         }
         Ok(out)
     }

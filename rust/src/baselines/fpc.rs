@@ -98,6 +98,63 @@ impl Fpc {
     }
 }
 
+/// FPC as a block-granular codec for the unified [`BlockCodec`] layer:
+/// the same word-level patterns, framed per block so the simulator, the
+/// coordinator, and the container's parallel pipeline can drive it.
+pub struct FpcBlock {
+    /// Block size in bytes (a cache line).
+    pub block_bytes: usize,
+}
+
+impl Default for FpcBlock {
+    fn default() -> Self {
+        FpcBlock { block_bytes: 64 }
+    }
+}
+
+impl crate::codec::BlockCodec for FpcBlock {
+    fn name(&self) -> &'static str {
+        "fpc"
+    }
+
+    fn codec_id(&self) -> crate::codec::CodecId {
+        crate::codec::CodecId::Fpc
+    }
+
+    fn block_bytes(&self) -> usize {
+        self.block_bytes
+    }
+
+    fn compress_block(&self, block: &[u8], w: &mut BitWriter) -> u32 {
+        let start = w.bit_len();
+        let words = block.len() / 4;
+        for i in 0..words {
+            let v = u32::from_le_bytes(block[i * 4..i * 4 + 4].try_into().unwrap());
+            Fpc::encode_word(w, v);
+        }
+        for &b in &block[words * 4..] {
+            w.put(b as u64, 8); // ragged tail raw
+        }
+        (w.bit_len() - start) as u32
+    }
+
+    fn decompress_block(&self, r: &mut BitReader<'_>, out: &mut [u8]) -> Result<()> {
+        let words = out.len() / 4;
+        for i in 0..words {
+            let v = Fpc::decode_word(r)?;
+            out[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        for b in out[words * 4..].iter_mut() {
+            *b = r.get(8).map_err(|_| Error::Corrupt("fpc: truncated tail".into()))? as u8;
+        }
+        Ok(())
+    }
+
+    fn config_bytes(&self) -> Vec<u8> {
+        crate::codec::block_bytes_config(self.block_bytes)
+    }
+}
+
 impl Codec for Fpc {
     fn name(&self) -> &'static str {
         "fpc"

@@ -1,8 +1,11 @@
 //! Baseline compressors the paper discusses (§1.1) and compares against:
 //! BDI (the algorithm GBDI extends), FPC, LZ (LZSS), Huffman coding, and
 //! gzip/zstd as the general-purpose comparators. All are lossless and
-//! roundtrip-tested; all implement [`Codec`] so the benches can sweep them
-//! uniformly.
+//! roundtrip-tested; all implement the whole-image [`Codec`] trait so the
+//! benches can sweep them uniformly, and the block-granular ones (BDI,
+//! FPC) additionally implement [`crate::codec::BlockCodec`] so the memory
+//! simulator, the coordinator, and the container's parallel pipeline can
+//! drive them interchangeably with GBDI.
 
 pub mod bdi;
 pub mod external;
@@ -48,13 +51,10 @@ impl Default for GbdiWholeImage {
 
 impl GbdiWholeImage {
     /// Original length recorded in a compressed container (so the CLI can
-    /// decompress without out-of-band metadata).
+    /// decompress without out-of-band metadata). Header-only: does not
+    /// parse the block index or copy the payload.
     pub fn container_len(comp: &[u8]) -> Result<usize> {
-        let (_, off) = crate::gbdi::GlobalBaseTable::deserialize(comp)?;
-        if comp.len() < off + 8 {
-            return Err(crate::Error::Corrupt("truncated gbdi container".into()));
-        }
-        Ok(u64::from_le_bytes(comp[off..off + 8].try_into().unwrap()) as usize)
+        crate::container::Container::original_len_of(comp)
     }
 }
 
@@ -66,50 +66,20 @@ impl Codec for GbdiWholeImage {
     fn compress(&self, data: &[u8]) -> Vec<u8> {
         let table = crate::gbdi::analyze::analyze_image(data, &self.config);
         let codec = crate::gbdi::GbdiCodec::new(table, self.config.clone());
-        let comp = codec.compress_image(data);
-        // container: table | u64 original_len | u32 n_blocks | u16 block_bits... | payload
-        let mut out = comp.table.serialize();
-        out.extend_from_slice(&(comp.original_len as u64).to_le_bytes());
-        out.extend_from_slice(&(comp.block_bits.len() as u32).to_le_bytes());
-        // 16-bit per-block bit lengths: default 64 B blocks are ≤ 514 bits.
-        for &b in &comp.block_bits {
-            out.extend_from_slice(&(b as u16).to_le_bytes());
-        }
-        out.extend_from_slice(&comp.payload);
-        out
+        // One unified frame for every block codec (u32-varint per-block bit
+        // lengths — the old ad-hoc u16 framing truncated oversized blocks).
+        crate::container::compress(&codec, data).to_bytes()
     }
 
     fn decompress(&self, comp: &[u8], original_len: usize) -> Result<Vec<u8>> {
-        use crate::Error;
-        let (table, mut off) = crate::gbdi::GlobalBaseTable::deserialize(comp)?;
-        let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
-            if *off + n > comp.len() {
-                return Err(Error::Corrupt("truncated gbdi container".into()));
-            }
-            let s = &comp[*off..*off + n];
-            *off += n;
-            Ok(s)
-        };
-        let stored_len = u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap()) as usize;
-        if stored_len != original_len {
-            return Err(Error::Corrupt(format!(
-                "length mismatch: container says {stored_len}, caller says {original_len}"
+        let c = crate::container::Container::from_bytes(comp)?;
+        if c.original_len != original_len {
+            return Err(crate::Error::Corrupt(format!(
+                "length mismatch: container says {}, caller says {original_len}",
+                c.original_len
             )));
         }
-        let n_blocks = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize;
-        let mut block_bits = Vec::with_capacity(n_blocks);
-        for _ in 0..n_blocks {
-            block_bits.push(u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap()) as u32);
-        }
-        let image = crate::gbdi::CompressedImage {
-            table,
-            original_len,
-            block_bits,
-            payload: comp[off..].to_vec(),
-            chunk_blocks: 0,
-            config: self.config.clone(),
-        };
-        crate::gbdi::decode::decompress_image(&image)
+        c.decompress()
     }
 }
 

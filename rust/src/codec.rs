@@ -1,0 +1,252 @@
+//! The unified block-codec layer: one trait every cache-line-granular
+//! compressor in this repo implements, so the memory simulator, the
+//! coordinator service, the CLI, and the benches sweep GBDI and the
+//! baselines through a single seam.
+//!
+//! A [`BlockCodec`] compresses and decompresses fixed-size blocks over the
+//! shared bit-packed stream ([`crate::util::bits`]). Whole-image framing —
+//! per-block bit lengths, chunked parallel compression, serialization —
+//! lives one layer up in [`crate::container`] and is codec-agnostic.
+//!
+//! Registered codecs:
+//!
+//! | id | name | notes |
+//! |----|------|-------|
+//! | 1  | gbdi | global-base delta-immediate; carries a [`GlobalBaseTable`] |
+//! | 2  | bdi  | per-block base-delta-immediate (PACT'12) |
+//! | 3  | fpc  | frequent-pattern compression (word significance) |
+
+use crate::gbdi::table::GlobalBaseTable;
+use crate::gbdi::GbdiConfig;
+use crate::util::bits::{BitReader, BitWriter};
+use crate::{Error, Result};
+
+/// Stable on-wire codec identifier (one byte in the container header).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CodecId {
+    /// Global-Base Delta-Immediate.
+    Gbdi = 1,
+    /// Base-Delta-Immediate.
+    Bdi = 2,
+    /// Frequent Pattern Compression.
+    Fpc = 3,
+}
+
+impl CodecId {
+    /// Decode the container-header byte.
+    pub fn from_u8(b: u8) -> Option<CodecId> {
+        match b {
+            1 => Some(CodecId::Gbdi),
+            2 => Some(CodecId::Bdi),
+            3 => Some(CodecId::Fpc),
+            _ => None,
+        }
+    }
+
+    /// Short name used in reports and `--codec` values.
+    pub fn name(self) -> &'static str {
+        match self {
+            CodecId::Gbdi => "gbdi",
+            CodecId::Bdi => "bdi",
+            CodecId::Fpc => "fpc",
+        }
+    }
+}
+
+/// A block-granular lossless codec: the one interface the simulator, the
+/// coordinator, the container layer, and the CLI sweep all consume.
+///
+/// Contract:
+///
+/// * [`compress_block`](Self::compress_block) writes one block to the bit
+///   stream and returns exactly the bits it appended; feeding those bits
+///   back through [`decompress_block`](Self::decompress_block) must
+///   reconstruct the block byte-identically and consume exactly the same
+///   bit count (the container layer verifies this per block).
+/// * Blocks shorter than [`block_bytes`](Self::block_bytes) (the image's
+///   ragged tail) must roundtrip too.
+/// * Implementations are immutable and thread-safe: the container layer
+///   compresses chunks of blocks on multiple threads against one `&self`.
+pub trait BlockCodec: Send + Sync {
+    /// Short identifier used in reports (e.g. `"bdi"`).
+    fn name(&self) -> &'static str;
+
+    /// Wire id recorded in container headers.
+    fn codec_id(&self) -> CodecId;
+
+    /// Block granularity in bytes (a cache line in the papers).
+    fn block_bytes(&self) -> usize;
+
+    /// Compress one block into `w`; returns the bits written.
+    fn compress_block(&self, block: &[u8], w: &mut BitWriter) -> u32;
+
+    /// Decode one block from `r` into `out` (exactly `out.len()` bytes;
+    /// pass a short slice for ragged tail blocks).
+    fn decompress_block(&self, r: &mut BitReader<'_>, out: &mut [u8]) -> Result<()>;
+
+    /// Compressed bit size of `block` without emitting anything. The
+    /// default encodes into a scratch writer (exact but allocating);
+    /// codecs with a cheap closed form override it.
+    fn estimate_block_bits(&self, block: &[u8]) -> u64 {
+        let mut w = BitWriter::with_capacity(block.len() + 8);
+        self.compress_block(block, &mut w) as u64
+    }
+
+    /// Codec-specific configuration blob embedded in containers, parsed
+    /// back by [`build_codec`]. Must be enough to reconstruct a decoder
+    /// (together with [`global_table`](Self::global_table)).
+    fn config_bytes(&self) -> Vec<u8>;
+
+    /// The shared dictionary this codec decodes against, if any (GBDI's
+    /// global base table). Charged to the compressed size by the
+    /// container and the simulator's capacity accounting.
+    fn global_table(&self) -> Option<&GlobalBaseTable> {
+        None
+    }
+
+    /// Version of the codec's shared state (GBDI table version). The
+    /// coordinator keys its codec ring on this; stateless codecs are 0.
+    fn version(&self) -> u64 {
+        0
+    }
+}
+
+/// Reconstruct a decoder from container metadata: codec id, config blob,
+/// and the optional global table.
+pub fn build_codec(
+    id: CodecId,
+    config: &[u8],
+    table: Option<GlobalBaseTable>,
+) -> Result<Box<dyn BlockCodec>> {
+    match id {
+        CodecId::Gbdi => {
+            let cfg = GbdiConfig::from_bytes(config)?;
+            let table = table
+                .ok_or_else(|| Error::Corrupt("gbdi container without a global table".into()))?;
+            Ok(Box::new(crate::gbdi::GbdiCodec::try_new(table, cfg)?))
+        }
+        CodecId::Bdi => {
+            let bb = read_block_bytes(config)?;
+            Ok(Box::new(crate::baselines::bdi::Bdi { block_bytes: bb }))
+        }
+        CodecId::Fpc => {
+            let bb = read_block_bytes(config)?;
+            Ok(Box::new(crate::baselines::fpc::FpcBlock { block_bytes: bb }))
+        }
+    }
+}
+
+/// Shared config-blob shape for the stateless codecs: `u32 block_bytes`.
+pub(crate) fn block_bytes_config(block_bytes: usize) -> Vec<u8> {
+    (block_bytes as u32).to_le_bytes().to_vec()
+}
+
+fn read_block_bytes(config: &[u8]) -> Result<usize> {
+    if config.len() < 4 {
+        return Err(Error::Corrupt("truncated codec config".into()));
+    }
+    let bb = u32::from_le_bytes(config[0..4].try_into().unwrap()) as usize;
+    if bb == 0 {
+        return Err(Error::Corrupt("codec config with zero block size".into()));
+    }
+    Ok(bb)
+}
+
+/// A registered codec family the CLI and sweeps can instantiate by name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CodecKind {
+    /// GBDI (runs background analysis over the target image).
+    Gbdi,
+    /// BDI baseline.
+    Bdi,
+    /// FPC baseline.
+    Fpc,
+}
+
+impl CodecKind {
+    /// All registered kinds, in report order.
+    pub fn all() -> &'static [CodecKind] {
+        &[CodecKind::Gbdi, CodecKind::Bdi, CodecKind::Fpc]
+    }
+
+    /// Parse a `--codec` value (case-insensitive, by registered name).
+    pub fn parse(s: &str) -> Option<CodecKind> {
+        let s = s.to_ascii_lowercase();
+        CodecKind::all().iter().copied().find(|k| k.name() == s)
+    }
+
+    /// The wire id this kind builds codecs for — the single source of
+    /// truth tying the CLI registry to the container format.
+    pub fn id(self) -> CodecId {
+        match self {
+            CodecKind::Gbdi => CodecId::Gbdi,
+            CodecKind::Bdi => CodecId::Bdi,
+            CodecKind::Fpc => CodecId::Fpc,
+        }
+    }
+
+    /// The kind's name (matches [`BlockCodec::name`]).
+    pub fn name(self) -> &'static str {
+        self.id().name()
+    }
+
+    /// Build a codec for `image`. GBDI runs background analysis on the
+    /// image itself; the stateless baselines only take the block size
+    /// from `cfg`.
+    pub fn build_for_image(self, image: &[u8], cfg: &GbdiConfig) -> Box<dyn BlockCodec> {
+        match self {
+            CodecKind::Gbdi => {
+                let table = crate::gbdi::analyze::analyze_image(image, cfg);
+                Box::new(crate::gbdi::GbdiCodec::new(table, cfg.clone()))
+            }
+            CodecKind::Bdi => Box::new(crate::baselines::bdi::Bdi { block_bytes: cfg.block_bytes }),
+            CodecKind::Fpc => {
+                Box::new(crate::baselines::fpc::FpcBlock { block_bytes: cfg.block_bytes })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codec_ids_roundtrip() {
+        for id in [CodecId::Gbdi, CodecId::Bdi, CodecId::Fpc] {
+            assert_eq!(CodecId::from_u8(id as u8), Some(id));
+        }
+        assert_eq!(CodecId::from_u8(0), None);
+        assert_eq!(CodecId::from_u8(99), None);
+    }
+
+    #[test]
+    fn kind_parse_matches_names() {
+        for &k in CodecKind::all() {
+            assert_eq!(CodecKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(CodecKind::parse("GBDI"), Some(CodecKind::Gbdi));
+        assert_eq!(CodecKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn build_for_image_honors_names_and_block_size() {
+        let cfg = GbdiConfig { block_bytes: 128, ..Default::default() };
+        let img = vec![0u8; 4096];
+        for &k in CodecKind::all() {
+            let c = k.build_for_image(&img, &cfg);
+            assert_eq!(c.name(), k.name());
+            assert_eq!(c.codec_id(), k.id(), "registry/wire id must agree");
+            assert_eq!(c.block_bytes(), 128);
+        }
+    }
+
+    #[test]
+    fn build_codec_rejects_bad_config() {
+        assert!(build_codec(CodecId::Bdi, &[], None).is_err());
+        assert!(build_codec(CodecId::Fpc, &0u32.to_le_bytes(), None).is_err());
+        // gbdi without a table is corrupt
+        let cfg = GbdiConfig::default();
+        assert!(build_codec(CodecId::Gbdi, &cfg.to_bytes(), None).is_err());
+    }
+}

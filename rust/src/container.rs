@@ -1,0 +1,567 @@
+//! The single framed container every block codec shares — replacing the
+//! three divergent formats the seed carried (GBDI's ad-hoc
+//! `CompressedImage`, `GbdiWholeImage`'s u16-truncating byte container,
+//! and the memory simulator's private page layout).
+//!
+//! A [`Container`] records:
+//!
+//! * the codec id + its config blob (enough to rebuild a decoder),
+//! * the optional global table (GBDI's shared dictionary),
+//! * per-block bit lengths (exact, for the simulator's sector layout and
+//!   for framing verification) — serialized as **u32 varints**, so blocks
+//!   larger than 64 B can exceed 65535 bits without truncation,
+//! * chunking metadata: every `chunk_blocks`-th block starts byte-aligned
+//!   (0 = unchunked serial stream), which is what makes *parallel*
+//!   compression produce a stream any decoder can walk,
+//! * the packed payload.
+//!
+//! Compression is codec-agnostic: [`compress`] walks blocks serially;
+//! [`compress_parallel`] splits the image into chunks of
+//! [`CHUNK_BLOCKS`] blocks, compresses each on its own thread into a
+//! byte-aligned sub-stream, and concatenates — for **any**
+//! [`BlockCodec`], not just GBDI. Decompression realigns at chunk
+//! boundaries, so parallel output decodes bit-exactly like the serial
+//! stream (ratio identical up to <1 byte padding per chunk).
+
+use crate::codec::{build_codec, BlockCodec, CodecId};
+use crate::gbdi::table::GlobalBaseTable;
+use crate::util::bits::{BitReader, BitWriter};
+use crate::{Error, Result};
+
+/// Blocks per parallel-compression chunk (256 KiB of logical data at the
+/// default 64-byte block).
+pub const CHUNK_BLOCKS: usize = 4096;
+
+const MAGIC: &[u8; 4] = b"GBC1";
+const FLAG_TABLE: u8 = 1;
+
+/// A compressed image: codec identity + framing + payload. This is the
+/// one in-memory and on-disk compressed form for every block codec.
+#[derive(Debug, Clone)]
+pub struct Container {
+    /// Which codec encoded the payload.
+    pub codec_id: CodecId,
+    /// Codec config blob (see [`BlockCodec::config_bytes`]).
+    pub config: Vec<u8>,
+    /// The shared dictionary the payload references (GBDI only).
+    pub table: Option<GlobalBaseTable>,
+    /// Original image length in bytes.
+    pub original_len: usize,
+    /// Block granularity the payload was encoded at.
+    pub block_bytes: usize,
+    /// Parallel-compression chunking: every `chunk_blocks`-th block starts
+    /// byte-aligned (0 = unchunked serial stream).
+    pub chunk_blocks: usize,
+    /// Per-block bit lengths; one entry per block.
+    pub block_bits: Vec<u32>,
+    /// The packed payload.
+    pub payload: Vec<u8>,
+}
+
+impl Container {
+    /// Compressed payload size in bytes (excluding table + framing).
+    pub fn payload_len(&self) -> usize {
+        self.payload.len()
+    }
+
+    /// Serialized framing overhead in bytes: header, config blob, table,
+    /// and the varint block-length index — everything except the payload.
+    pub fn header_len(&self) -> usize {
+        4 + 1 + 1 + 2
+            + self.config.len()
+            + self.table.as_ref().map_or(0, |t| t.serialized_len())
+            + 8
+            + 4
+            + 4
+            + 4
+            + self.block_bits.iter().map(|&b| varint_len(b)).sum::<usize>()
+    }
+
+    /// Total compressed size in bytes including the table and framing —
+    /// the honest numerator for compression ratios.
+    pub fn total_len(&self) -> usize {
+        self.header_len() + self.payload.len()
+    }
+
+    /// Compression ratio original/compressed (the paper's metric).
+    pub fn ratio(&self) -> f64 {
+        self.original_len as f64 / self.total_len() as f64
+    }
+
+    /// Decompress self-contained: rebuilds the codec from the recorded
+    /// id, config, and table. The result is byte-identical to the
+    /// original image.
+    pub fn decompress(&self) -> Result<Vec<u8>> {
+        decompress(self)
+    }
+
+    /// Serialize to the on-disk `.gbc` format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.total_len());
+        out.extend_from_slice(MAGIC);
+        out.push(self.codec_id as u8);
+        out.push(if self.table.is_some() { FLAG_TABLE } else { 0 });
+        debug_assert!(self.config.len() <= u16::MAX as usize);
+        out.extend_from_slice(&(self.config.len() as u16).to_le_bytes());
+        out.extend_from_slice(&self.config);
+        if let Some(t) = &self.table {
+            out.extend_from_slice(&t.serialize());
+        }
+        out.extend_from_slice(&(self.original_len as u64).to_le_bytes());
+        out.extend_from_slice(&(self.block_bytes as u32).to_le_bytes());
+        out.extend_from_slice(&(self.chunk_blocks as u32).to_le_bytes());
+        out.extend_from_slice(&(self.block_bits.len() as u32).to_le_bytes());
+        for &b in &self.block_bits {
+            put_varint(&mut out, b);
+        }
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Parse the on-disk format (inverse of [`Self::to_bytes`]).
+    pub fn from_bytes(data: &[u8]) -> Result<Container> {
+        let corrupt = |m: &str| Error::Corrupt(format!("container: {m}"));
+        let mut off = 0usize;
+        let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+            if *off + n > data.len() {
+                return Err(Error::Corrupt("container: truncated header".into()));
+            }
+            let s = &data[*off..*off + n];
+            *off += n;
+            Ok(s)
+        };
+        if take(&mut off, 4)? != MAGIC {
+            return Err(corrupt("bad magic"));
+        }
+        let id = take(&mut off, 1)?[0];
+        let codec_id = CodecId::from_u8(id)
+            .ok_or_else(|| corrupt(&format!("unknown codec id {id}")))?;
+        let flags = take(&mut off, 1)?[0];
+        let config_len = u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap()) as usize;
+        let config = take(&mut off, config_len)?.to_vec();
+        let table = if flags & FLAG_TABLE != 0 {
+            let (t, used) = GlobalBaseTable::deserialize(&data[off..])?;
+            off += used;
+            Some(t)
+        } else {
+            None
+        };
+        let original_len = u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap()) as usize;
+        let block_bytes = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize;
+        let chunk_blocks = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize;
+        let n_blocks = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize;
+        if block_bytes == 0 {
+            return Err(corrupt("zero block size"));
+        }
+        // n_blocks must match the image geometry, and — since both counts
+        // come from the same untrusted header — be plausible against the
+        // bytes actually present (each varint is >= 1 byte), before we
+        // trust it as an allocation size.
+        let expect = original_len.div_ceil(block_bytes);
+        if n_blocks != expect {
+            return Err(corrupt(&format!(
+                "block count {n_blocks} does not match image ({expect} expected)"
+            )));
+        }
+        if n_blocks > data.len() - off {
+            return Err(corrupt(&format!(
+                "block count {n_blocks} exceeds remaining {} bytes",
+                data.len() - off
+            )));
+        }
+        let mut block_bits = Vec::with_capacity(n_blocks);
+        for _ in 0..n_blocks {
+            block_bits.push(read_varint(data, &mut off)?);
+        }
+        Ok(Container {
+            codec_id,
+            config,
+            table,
+            original_len,
+            block_bytes,
+            chunk_blocks,
+            block_bits,
+            payload: data[off..].to_vec(),
+        })
+    }
+
+    /// Read only the `original_len` field from a serialized container —
+    /// O(header + table), without materializing the block-length index or
+    /// copying the payload (a full [`Self::from_bytes`] would).
+    pub fn original_len_of(data: &[u8]) -> Result<usize> {
+        let corrupt = |m: &str| Error::Corrupt(format!("container: {m}"));
+        if data.len() < 8 || &data[0..4] != MAGIC {
+            return Err(corrupt("bad magic"));
+        }
+        CodecId::from_u8(data[4]).ok_or_else(|| corrupt("unknown codec id"))?;
+        let flags = data[5];
+        let config_len = u16::from_le_bytes(data[6..8].try_into().unwrap()) as usize;
+        let mut off = 8 + config_len;
+        if flags & FLAG_TABLE != 0 {
+            if off > data.len() {
+                return Err(corrupt("truncated header"));
+            }
+            let (_, used) = GlobalBaseTable::deserialize(&data[off..])?;
+            off += used;
+        }
+        if off + 8 > data.len() {
+            return Err(corrupt("truncated header"));
+        }
+        Ok(u64::from_le_bytes(data[off..off + 8].try_into().unwrap()) as usize)
+    }
+}
+
+/// LEB128-encode a u32 (1–5 bytes; 1 byte for values < 128).
+fn put_varint(out: &mut Vec<u8>, mut v: u32) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn varint_len(v: u32) -> usize {
+    match v {
+        0..=0x7F => 1,
+        0x80..=0x3FFF => 2,
+        0x4000..=0x1F_FFFF => 3,
+        0x20_0000..=0xFFF_FFFF => 4,
+        _ => 5,
+    }
+}
+
+fn read_varint(data: &[u8], off: &mut usize) -> Result<u32> {
+    let mut v: u32 = 0;
+    for shift in 0..5u32 {
+        let b = *data
+            .get(*off)
+            .ok_or_else(|| Error::Corrupt("container: truncated varint".into()))?;
+        *off += 1;
+        v |= ((b & 0x7F) as u32) << (7 * shift);
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+    }
+    Err(Error::Corrupt("container: varint too long".into()))
+}
+
+/// Compress every block of `image` serially into a packed payload plus
+/// per-block bit lengths — the shared inner loop of [`compress`], the
+/// parallel chunk workers, and the coordinator's page path.
+pub fn compress_blocks(codec: &dyn BlockCodec, image: &[u8]) -> (Vec<u8>, Vec<u32>) {
+    let bb = codec.block_bytes();
+    let mut w = BitWriter::with_capacity(image.len() / 2 + 64);
+    let mut block_bits = Vec::with_capacity(image.len() / bb + 1);
+    for block in image.chunks(bb) {
+        block_bits.push(codec.compress_block(block, &mut w));
+    }
+    (w.finish(), block_bits)
+}
+
+/// Assemble a [`Container`] from compressed parts, stamping the codec's
+/// identity, config, and table.
+pub fn assemble(
+    codec: &dyn BlockCodec,
+    original_len: usize,
+    chunk_blocks: usize,
+    payload: Vec<u8>,
+    block_bits: Vec<u32>,
+) -> Container {
+    Container {
+        codec_id: codec.codec_id(),
+        config: codec.config_bytes(),
+        table: codec.global_table().cloned(),
+        original_len,
+        block_bytes: codec.block_bytes(),
+        chunk_blocks,
+        block_bits,
+        payload,
+    }
+}
+
+/// Serial whole-image compression with any block codec.
+pub fn compress(codec: &dyn BlockCodec, image: &[u8]) -> Container {
+    let (payload, block_bits) = compress_blocks(codec, image);
+    assemble(codec, image.len(), 0, payload, block_bits)
+}
+
+/// Chunked-parallel compression plumbing, generic over the per-chunk
+/// worker so codec-specific statistics can ride along (GBDI's
+/// `EncodeStats`). Returns `(payload, block_bits, per-chunk extras,
+/// chunk_blocks)`; `chunk_blocks` is 0 when the image was small enough
+/// (or `threads <= 1`) to compress serially in one piece.
+pub fn compress_chunked<S, F>(
+    image: &[u8],
+    block_bytes: usize,
+    threads: usize,
+    per_chunk: F,
+) -> (Vec<u8>, Vec<u32>, Vec<S>, usize)
+where
+    S: Send,
+    F: Fn(&[u8]) -> (Vec<u8>, Vec<u32>, S) + Sync,
+{
+    let chunk_bytes = CHUNK_BLOCKS * block_bytes;
+    if threads <= 1 || image.len() <= chunk_bytes {
+        let (payload, bits, extra) = per_chunk(image);
+        return (payload, bits, vec![extra], 0);
+    }
+    let chunks: Vec<&[u8]> = image.chunks(chunk_bytes).collect();
+    let results = crate::util::pool::parallel_map_chunks(&chunks, threads, |_, piece| {
+        piece.iter().map(|chunk| per_chunk(chunk)).collect::<Vec<_>>()
+    });
+    let mut payload = Vec::with_capacity(image.len() / 2);
+    let mut block_bits = Vec::with_capacity(image.len() / block_bytes + 1);
+    let mut extras = Vec::with_capacity(results.len());
+    for (bytes, bits, extra) in results {
+        payload.extend_from_slice(&bytes);
+        block_bits.extend_from_slice(&bits);
+        extras.push(extra);
+    }
+    (payload, block_bits, extras, CHUNK_BLOCKS)
+}
+
+/// Parallel whole-image compression with any block codec: chunks of
+/// [`CHUNK_BLOCKS`] blocks are compressed on separate threads into
+/// byte-aligned sub-streams and concatenated. Decompression output is
+/// bit-identical to the serial path's.
+pub fn compress_parallel(codec: &dyn BlockCodec, image: &[u8], threads: usize) -> Container {
+    let (payload, block_bits, _, chunk_blocks) =
+        compress_chunked(image, codec.block_bytes(), threads, |chunk| {
+            let (p, b) = compress_blocks(codec, chunk);
+            (p, b, ())
+        });
+    assemble(codec, image.len(), chunk_blocks, payload, block_bits)
+}
+
+/// Decode a payload back into `original_len` bytes with a caller-provided
+/// codec, verifying per-block framing and chunk alignment. The low-level
+/// engine under [`decompress`] and the coordinator's page store.
+pub fn decompress_parts(
+    codec: &dyn BlockCodec,
+    payload: &[u8],
+    block_bits: &[u32],
+    original_len: usize,
+    chunk_blocks: usize,
+) -> Result<Vec<u8>> {
+    let bb = codec.block_bytes();
+    if bb == 0 {
+        return Err(Error::Config("block size must be positive".into()));
+    }
+    let n_blocks = original_len.div_ceil(bb);
+    if block_bits.len() != n_blocks {
+        return Err(Error::Corrupt(format!(
+            "block count mismatch: framing says {}, image needs {n_blocks}",
+            block_bits.len()
+        )));
+    }
+    let mut out = vec![0u8; original_len];
+    let mut r = BitReader::new(payload);
+    for (i, chunk) in out.chunks_mut(bb).enumerate() {
+        // parallel streams: every chunk_blocks-th block starts byte-aligned
+        if chunk_blocks > 0 && i > 0 && i % chunk_blocks == 0 {
+            r.skip_to_byte()
+                .map_err(|_| Error::Corrupt(format!("chunk realign before block {i}")))?;
+        }
+        let before = r.bit_pos();
+        codec.decompress_block(&mut r, chunk)?;
+        let used = (r.bit_pos() - before) as u32;
+        if used != block_bits[i] {
+            return Err(Error::Corrupt(format!(
+                "block {i}: consumed {used} bits, framing recorded {}",
+                block_bits[i]
+            )));
+        }
+    }
+    Ok(out)
+}
+
+/// Decompress with a caller-provided codec (must match the container's
+/// codec id and block size — the fast path when the codec is already
+/// built, e.g. the coordinator's codec ring).
+pub fn decompress_with(c: &Container, codec: &dyn BlockCodec) -> Result<Vec<u8>> {
+    if codec.codec_id() != c.codec_id {
+        return Err(Error::Corrupt(format!(
+            "codec mismatch: container is {}, decoder is {}",
+            c.codec_id.name(),
+            codec.name()
+        )));
+    }
+    if codec.block_bytes() != c.block_bytes {
+        return Err(Error::Corrupt(format!(
+            "block size mismatch: container {}, decoder {}",
+            c.block_bytes,
+            codec.block_bytes()
+        )));
+    }
+    decompress_parts(codec, &c.payload, &c.block_bits, c.original_len, c.chunk_blocks)
+}
+
+/// Self-contained decompression: rebuild the codec from the container's
+/// recorded identity, then decode.
+pub fn decompress(c: &Container) -> Result<Vec<u8>> {
+    let codec = build_codec(c.codec_id, &c.config, c.table.clone())?;
+    decompress_with(c, codec.as_ref())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::CodecKind;
+    use crate::gbdi::GbdiConfig;
+    use crate::util::prng::Rng;
+
+    fn clustered_image(len_words: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Rng::new(seed);
+        (0..len_words)
+            .flat_map(|_| {
+                let v: u32 = match rng.below(4) {
+                    0 => 7000u32.wrapping_add(rng.range_i64(-100, 100) as u32),
+                    1 => (1u32 << 22).wrapping_add(rng.range_i64(-500, 500) as u32),
+                    2 => 0,
+                    _ => rng.next_u32(),
+                };
+                v.to_le_bytes()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn varints_roundtrip() {
+        let mut out = Vec::new();
+        let vals = [0u32, 1, 127, 128, 16383, 16384, 65535, 65536, 131074, u32::MAX];
+        for &v in &vals {
+            out.clear();
+            put_varint(&mut out, v);
+            assert_eq!(out.len(), varint_len(v), "len for {v}");
+            let mut off = 0;
+            assert_eq!(read_varint(&out, &mut off).unwrap(), v);
+            assert_eq!(off, out.len());
+        }
+        let mut off = 0;
+        assert!(read_varint(&[0x80, 0x80], &mut off).is_err()); // truncated
+    }
+
+    #[test]
+    fn every_kind_roundtrips_serial_parallel_and_bytes() {
+        // 384 KiB: past one 256 KiB chunk, so the parallel path really
+        // chunks instead of falling back to serial
+        let image = clustered_image(96 * 1024, 3);
+        let cfg = GbdiConfig::default();
+        for &kind in CodecKind::all() {
+            let codec = kind.build_for_image(&image, &cfg);
+            let serial = compress(codec.as_ref(), &image);
+            assert_eq!(serial.decompress().unwrap(), image, "{} serial", kind.name());
+            let par = compress_parallel(codec.as_ref(), &image, 4);
+            assert_eq!(par.chunk_blocks, CHUNK_BLOCKS, "{} must actually chunk", kind.name());
+            assert_eq!(par.block_bits, serial.block_bits, "{} framing", kind.name());
+            assert_eq!(par.decompress().unwrap(), image, "{} parallel", kind.name());
+            // serialized form survives and still self-decodes
+            let bytes = serial.to_bytes();
+            assert_eq!(bytes.len(), serial.total_len(), "{} total_len", kind.name());
+            let back = Container::from_bytes(&bytes).unwrap();
+            assert_eq!(back.decompress().unwrap(), image, "{} bytes", kind.name());
+        }
+    }
+
+    #[test]
+    fn empty_and_ragged_images_roundtrip() {
+        let cfg = GbdiConfig::default();
+        for image in [vec![], vec![9u8; 3], vec![7u8; 64 + 5]] {
+            for &kind in CodecKind::all() {
+                let codec = kind.build_for_image(&image, &cfg);
+                let c = compress(codec.as_ref(), &image);
+                assert_eq!(c.decompress().unwrap(), image, "{}", kind.name());
+                let back = Container::from_bytes(&c.to_bytes()).unwrap();
+                assert_eq!(back.decompress().unwrap(), image);
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_blocks_exceed_u16_bits_and_survive() {
+        // Regression for the old GbdiWholeImage container, which wrote
+        // per-block bit lengths as u16: a 16 KiB raw block is 131074 bits,
+        // far past 65535, and used to truncate silently.
+        let mut rng = Rng::new(11);
+        let mut image = vec![0u8; 1 << 16];
+        rng.fill_bytes(&mut image);
+        let cfg = GbdiConfig { block_bytes: 16384, ..Default::default() };
+        let codec = CodecKind::Gbdi.build_for_image(&image, &cfg);
+        let c = compress(codec.as_ref(), &image);
+        let max_bits = *c.block_bits.iter().max().unwrap();
+        assert!(max_bits > u16::MAX as u32, "block bits {max_bits} should overflow u16");
+        let back = Container::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(back.block_bits, c.block_bits);
+        assert_eq!(back.decompress().unwrap(), image);
+    }
+
+    #[test]
+    fn corrupt_containers_rejected_not_panicking() {
+        let image = clustered_image(4096, 5);
+        let cfg = GbdiConfig::default();
+        let codec = CodecKind::Bdi.build_for_image(&image, &cfg);
+        let bytes = compress(codec.as_ref(), &image).to_bytes();
+        assert!(Container::from_bytes(&bytes[..3]).is_err());
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(Container::from_bytes(&bad).is_err());
+        let mut bad = bytes.clone();
+        bad[4] = 200; // unknown codec id
+        assert!(Container::from_bytes(&bad).is_err());
+        // truncating the payload must surface as Err from decompress
+        let c = Container::from_bytes(&bytes).unwrap();
+        let mut bad = c.clone();
+        bad.payload.truncate(bad.payload.len() / 2);
+        assert!(bad.decompress().is_err());
+        // wrong chunking never panics
+        let mut bad = c;
+        bad.chunk_blocks = 3;
+        let _ = bad.decompress();
+    }
+
+    #[test]
+    fn huge_declared_block_count_rejected_without_allocating() {
+        // a ~60-byte file claiming a multi-GB image must fail cleanly
+        // instead of aborting on a giant Vec::with_capacity
+        let image = vec![0u8; 4096];
+        let cfg = GbdiConfig::default();
+        let codec = CodecKind::Bdi.build_for_image(&image, &cfg);
+        let mut bytes = compress(codec.as_ref(), &image).to_bytes();
+        // header layout: magic(4) id(1) flags(1) cfg_len(2) cfg(4) —
+        // original_len u64 at 12, block_bytes u32 at 20, chunk_blocks u32
+        // at 24, n_blocks u32 at 28
+        let huge: u64 = 1 << 37;
+        bytes[12..20].copy_from_slice(&huge.to_le_bytes());
+        bytes[28..32].copy_from_slice(&((huge.div_ceil(64)) as u32).to_le_bytes());
+        assert!(Container::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn original_len_of_reads_header_only() {
+        let image = clustered_image(4096, 9);
+        let cfg = GbdiConfig::default();
+        for &kind in CodecKind::all() {
+            let codec = kind.build_for_image(&image, &cfg);
+            let bytes = compress(codec.as_ref(), &image).to_bytes();
+            assert_eq!(Container::original_len_of(&bytes).unwrap(), image.len());
+        }
+        assert!(Container::original_len_of(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn decompress_with_checks_identity() {
+        let image = clustered_image(2048, 7);
+        let cfg = GbdiConfig::default();
+        let bdi = CodecKind::Bdi.build_for_image(&image, &cfg);
+        let fpc = CodecKind::Fpc.build_for_image(&image, &cfg);
+        let c = compress(bdi.as_ref(), &image);
+        assert!(decompress_with(&c, fpc.as_ref()).is_err());
+        let wide = crate::baselines::bdi::Bdi { block_bytes: 128 };
+        assert!(decompress_with(&c, &wide).is_err());
+        assert_eq!(decompress_with(&c, bdi.as_ref()).unwrap(), image);
+    }
+}

@@ -9,9 +9,14 @@
 //! Key invariants:
 //!
 //! * **Python never runs here.** The analyzer executes pre-compiled HLO.
-//! * **Table versioning.** Every stored page records the table version
+//! * **Codec versioning.** Every stored page records the codec version
 //!   that encoded it; the [`store::PageStore`] keeps all published
-//!   versions so any page decompresses bit-exactly at any time.
+//!   versions (as `Arc<dyn BlockCodec>`) so any page decompresses
+//!   bit-exactly at any time.
+//! * **One codec seam.** The service is generic over
+//!   [`crate::codec::BlockCodec`]: the adaptive path swaps GBDI table
+//!   versions; [`service::CompressionService::start_static`] serves any
+//!   baseline (BDI, FPC) through the identical pipeline.
 //! * **Analysis off the hot path.** Workers only read the current codec
 //!   (an `Arc` swap); clustering happens on the analyzer thread.
 

@@ -1,22 +1,31 @@
 //! The compression service: ingest queue → worker pool → versioned store,
-//! with the analyzer re-deriving the global base table in the background.
+//! generic over the unified [`BlockCodec`] seam. Two modes:
+//!
+//! * **Adaptive GBDI** ([`CompressionService::start`]) — workers compress
+//!   against the current global base table while a background analyzer
+//!   re-derives it from sampled traffic and swaps in better versions.
+//! * **Static codec** ([`CompressionService::start_static`]) — any
+//!   [`BlockCodec`] (BDI, FPC, or a pinned GBDI table) with no analyzer
+//!   thread; the baseline-serving arm of the E3 comparison.
 //!
 //! Threading model (all std, no async runtime available offline):
 //!
 //! ```text
 //!  submit()  ──mpsc──►  workers (N threads)
-//!                         │  read current Arc<GbdiCodec> (RwLock swap)
+//!                         │  read current Arc<dyn BlockCodec> (RwLock swap)
 //!                         │  compress page → PageStore (Mutex)
 //!                         │  feed word samples → Reservoir (Mutex)
 //!                         ▼
-//!  analyzer thread: every `analyze_every` pages, snapshot the
-//!  reservoir, run k-means (PJRT artifact or native), fit widths,
-//!  score vs incumbent, publish new version + swap codec.
+//!  analyzer thread (adaptive mode only): every `analyze_every` pages,
+//!  snapshot the reservoir, run k-means (PJRT artifact or native), fit
+//!  widths, score vs incumbent, publish new version + swap codec.
 //! ```
 
 use super::analyzer::{Analyzer, AnalyzerBackend};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::store::{PageStore, StoredPage};
+use crate::codec::BlockCodec;
+use crate::container;
 use crate::gbdi::table::GlobalBaseTable;
 use crate::gbdi::{GbdiCodec, GbdiConfig};
 use crate::util::prng::Rng;
@@ -32,7 +41,8 @@ use std::time::Instant;
 /// Service configuration.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
-    /// Codec configuration (shared by all versions).
+    /// Codec configuration (shared by all GBDI versions; supplies the
+    /// sampling word size in static mode too).
     pub codec: GbdiConfig,
     /// Compression worker threads.
     pub workers: usize,
@@ -40,7 +50,7 @@ pub struct ServiceConfig {
     pub analyze_every: u64,
     /// Reservoir size for traffic sampling (words).
     pub sample_words: usize,
-    /// Pages migrated to the newest table per maintenance step.
+    /// Pages migrated to the newest codec per maintenance step.
     pub recompress_batch: usize,
 }
 
@@ -57,7 +67,7 @@ impl Default for ServiceConfig {
 }
 
 struct Shared {
-    codec: RwLock<Arc<GbdiCodec>>,
+    codec: RwLock<Arc<dyn BlockCodec>>,
     store: Mutex<PageStore>,
     reservoir: Mutex<Reservoir<u64>>,
     metrics: Metrics,
@@ -84,15 +94,36 @@ pub struct CompressionService {
 }
 
 impl CompressionService {
-    /// Start the service with an initial table derived from nothing (the
-    /// pinned zero base only); the analyzer will improve it as traffic
-    /// arrives. `backend` picks PJRT-artifact vs native clustering.
+    /// Start the adaptive GBDI service with an initial table derived from
+    /// nothing (the pinned zero base only); the analyzer will improve it
+    /// as traffic arrives. `backend` picks PJRT-artifact vs native
+    /// clustering.
     pub fn start(config: ServiceConfig, backend: AnalyzerBackend) -> Result<Self> {
         config.codec.validate().map_err(crate::Error::Config)?;
         let initial = GlobalBaseTable::new(vec![(0, 8)], config.codec.word_size, 0);
-        let codec = Arc::new(GbdiCodec::new(initial.clone(), config.codec.clone()));
+        let codec: Arc<dyn BlockCodec> =
+            Arc::new(GbdiCodec::new(initial, config.codec.clone()));
+        let analyzer = Analyzer::new(backend, config.codec.clone());
+        Self::start_inner(config, codec, Some(analyzer))
+    }
+
+    /// Start the service over a fixed codec — any [`BlockCodec`] — with
+    /// no background analyzer. Pages are compressed and versioned exactly
+    /// like the adaptive path, so reads, accounting, and recompression
+    /// behave identically.
+    pub fn start_static(config: ServiceConfig, codec: Arc<dyn BlockCodec>) -> Result<Self> {
+        config.codec.validate().map_err(crate::Error::Config)?;
+        Self::start_inner(config, codec, None)
+    }
+
+    fn start_inner(
+        config: ServiceConfig,
+        codec: Arc<dyn BlockCodec>,
+        analyzer: Option<Analyzer>,
+    ) -> Result<Self> {
+        let first_version = codec.version();
         let mut store = PageStore::new();
-        store.publish_table(initial);
+        store.publish_codec(Arc::clone(&codec));
         let shared = Arc::new(Shared {
             codec: RwLock::new(codec),
             store: Mutex::new(store),
@@ -100,7 +131,7 @@ impl CompressionService {
             metrics: Metrics::new(),
             config: config.clone(),
             pages_since_analysis: AtomicU64::new(0),
-            next_version: AtomicU64::new(1),
+            next_version: AtomicU64::new(first_version + 1),
             inflight: AtomicU64::new(0),
             idle: Condvar::new(),
             idle_lock: Mutex::new(()),
@@ -121,18 +152,19 @@ impl CompressionService {
             })
             .collect();
 
-        let analyzer_shared = Arc::clone(&shared);
-        let mut analyzer = Analyzer::new(backend, config.codec.clone());
-        let analyzer_handle = std::thread::Builder::new()
-            .name("gbdi-analyzer".into())
-            .spawn(move || analyzer_loop(analyzer_shared, &mut analyzer))
-            .expect("spawn analyzer");
+        let analyzer_handle = analyzer.map(|mut analyzer| {
+            let analyzer_shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("gbdi-analyzer".into())
+                .spawn(move || analyzer_loop(analyzer_shared, &mut analyzer))
+                .expect("spawn analyzer")
+        });
 
         Ok(CompressionService {
             shared,
             tx: Some(tx),
             workers,
-            analyzer: Some(analyzer_handle),
+            analyzer: analyzer_handle,
         })
     }
 
@@ -154,24 +186,30 @@ impl CompressionService {
         }
     }
 
-    /// Read back a page (bit-exact), whatever table version encoded it.
+    /// Read back a page (bit-exact), whatever codec version encoded it.
     pub fn read_page(&self, page_id: u64) -> Result<Vec<u8>> {
         let store = self.shared.store.lock().unwrap();
-        let r = store.read(page_id, &self.shared.config.codec);
+        let r = store.read(page_id);
         if r.is_err() {
             self.shared.metrics.read_error();
         }
         r
     }
 
-    /// Force an analysis round at the next opportunity.
+    /// Force an analysis round at the next opportunity (no-op in static
+    /// mode).
     pub fn request_analysis(&self) {
         self.shared.analyze_now.store(true, Ordering::Release);
     }
 
-    /// Current table version in use.
+    /// Current codec version in use (GBDI: table version).
     pub fn current_version(&self) -> u64 {
-        self.shared.codec.read().unwrap().table().version
+        self.shared.codec.read().unwrap().version()
+    }
+
+    /// Name of the codec currently serving compressions.
+    pub fn codec_name(&self) -> &'static str {
+        self.shared.codec.read().unwrap().name()
     }
 
     /// Metrics snapshot.
@@ -187,10 +225,10 @@ impl CompressionService {
     }
 
     /// Migrate up to `config.recompress_batch` pages encoded under old
-    /// table versions to the current one. Returns pages migrated.
+    /// codec versions to the current one. Returns pages migrated.
     pub fn recompress_step(&self) -> Result<usize> {
         let codec = Arc::clone(&self.shared.codec.read().unwrap());
-        let current = codec.table().version;
+        let current = codec.version();
         let lagging: Vec<u64> = {
             let store = self.shared.store.lock().unwrap();
             store
@@ -204,17 +242,17 @@ impl CompressionService {
             // read under old version, re-encode under current
             let data = {
                 let store = self.shared.store.lock().unwrap();
-                store.read(id, &self.shared.config.codec)?
+                store.read(id)?
             };
-            let comp = codec.compress_image(&data);
+            let (payload, block_bits) = container::compress_blocks(codec.as_ref(), &data);
             let mut store = self.shared.store.lock().unwrap();
             store.put(
                 id,
                 StoredPage {
-                    table_version: current,
-                    original_len: comp.original_len,
-                    block_bits: comp.block_bits,
-                    payload: comp.payload,
+                    codec_version: current,
+                    original_len: data.len(),
+                    block_bits,
+                    payload,
                 },
             );
             self.shared.metrics.recompression();
@@ -259,12 +297,12 @@ fn worker_loop(shared: Arc<Shared>, rx: Arc<Mutex<Receiver<Job>>>, worker_id: u6
             }
         }
         let codec = Arc::clone(&shared.codec.read().unwrap());
-        let comp = codec.compress_image(&data);
+        let (payload, block_bits) = container::compress_blocks(codec.as_ref(), &data);
         let stored = StoredPage {
-            table_version: codec.table().version,
-            original_len: comp.original_len,
-            block_bits: comp.block_bits,
-            payload: comp.payload,
+            codec_version: codec.version(),
+            original_len: data.len(),
+            block_bits,
+            payload,
         };
         let out_len = stored.stored_len() as u64;
         {
@@ -306,14 +344,19 @@ fn analyzer_loop(shared: Arc<Shared>, analyzer: &mut Analyzer) {
             Err(_) => continue, // artifact missing/failing: stay on incumbent
         };
         let incumbent = Arc::clone(&shared.codec.read().unwrap());
-        let swap = analyzer.should_swap(&samples, incumbent.table(), &candidate);
+        // the adaptive loop only ever swaps GBDI tables; a static codec
+        // never reaches this thread
+        let swap = match incumbent.global_table() {
+            Some(table) => analyzer.should_swap(&samples, table, &candidate),
+            None => false,
+        };
         shared.metrics.analysis(swap);
         if swap {
-            let new_codec =
-                Arc::new(GbdiCodec::new(candidate.clone(), shared.config.codec.clone()));
+            let new_codec: Arc<dyn BlockCodec> =
+                Arc::new(GbdiCodec::new(candidate, shared.config.codec.clone()));
             {
                 let mut store = shared.store.lock().unwrap();
-                store.publish_table(candidate);
+                store.publish_codec(Arc::clone(&new_codec));
             }
             *shared.codec.write().unwrap() = new_codec;
         }
@@ -349,6 +392,38 @@ mod tests {
         let m = svc.shutdown();
         assert_eq!(m.pages_in, 64);
         assert!(m.ratio() > 1.0, "ratio {}", m.ratio());
+    }
+
+    #[test]
+    fn static_codec_services_roundtrip() {
+        // the same service machinery runs any BlockCodec
+        let w = workloads::by_name("perlbench").unwrap();
+        let codecs: Vec<Arc<dyn BlockCodec>> = vec![
+            Arc::new(crate::baselines::bdi::Bdi::default()),
+            Arc::new(crate::baselines::fpc::FpcBlock::default()),
+        ];
+        for codec in codecs {
+            let name = codec.name();
+            let svc = CompressionService::start_static(
+                ServiceConfig { workers: 2, ..Default::default() },
+                codec,
+            )
+            .unwrap();
+            assert_eq!(svc.codec_name(), name);
+            for i in 0..32u64 {
+                svc.submit(i, w.generate(4096, i));
+            }
+            svc.flush();
+            for i in 0..32u64 {
+                assert_eq!(svc.read_page(i).unwrap(), w.generate(4096, i), "{name} page {i}");
+            }
+            // no analyzer: version stays pinned, analysis requests are no-ops
+            svc.request_analysis();
+            assert_eq!(svc.current_version(), 0);
+            let m = svc.shutdown();
+            assert_eq!(m.pages_in, 32);
+            assert_eq!(m.table_swaps, 0);
+        }
     }
 
     #[test]

@@ -1,16 +1,20 @@
-//! Versioned compressed-page store: pages encoded under different table
-//! versions coexist; the table ring keeps every published version so any
-//! page stays decodable until migrated.
+//! Versioned compressed-page store: pages encoded under different codec
+//! versions coexist; the codec ring keeps every published version so any
+//! page stays decodable until migrated. Codec-agnostic: the ring holds
+//! `Arc<dyn BlockCodec>` — GBDI tables are just one kind of versioned
+//! codec state.
 
-use crate::gbdi::{decode, table::GlobalBaseTable, CompressedImage, GbdiConfig};
+use crate::codec::BlockCodec;
+use crate::container;
 use crate::{Error, Result};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// One stored page.
 #[derive(Debug, Clone)]
 pub struct StoredPage {
-    /// Table version the payload references.
-    pub table_version: u64,
+    /// Codec version the payload references (GBDI: table version).
+    pub codec_version: u64,
     /// Original (logical) length.
     pub original_len: usize,
     /// Per-block bit lengths.
@@ -20,17 +24,18 @@ pub struct StoredPage {
 }
 
 impl StoredPage {
-    /// Compressed bytes (payload + framing approximation).
+    /// Compressed bytes (payload + framing approximation: ~2 bytes per
+    /// block-length varint + fixed header).
     pub fn stored_len(&self) -> usize {
         self.payload.len() + 2 * self.block_bits.len() + 16
     }
 }
 
-/// The page store + table ring.
-#[derive(Debug, Default)]
+/// The page store + codec ring.
+#[derive(Default)]
 pub struct PageStore {
     pages: HashMap<u64, StoredPage>,
-    tables: HashMap<u64, GlobalBaseTable>,
+    codecs: HashMap<u64, Arc<dyn BlockCodec>>,
 }
 
 impl PageStore {
@@ -39,27 +44,27 @@ impl PageStore {
         PageStore::default()
     }
 
-    /// Publish a table version (idempotent; versions are immutable).
-    pub fn publish_table(&mut self, table: GlobalBaseTable) {
-        self.tables.entry(table.version).or_insert(table);
+    /// Publish a codec version (idempotent; versions are immutable).
+    pub fn publish_codec(&mut self, codec: Arc<dyn BlockCodec>) {
+        self.codecs.entry(codec.version()).or_insert(codec);
     }
 
-    /// Look up a published table.
-    pub fn table(&self, version: u64) -> Option<&GlobalBaseTable> {
-        self.tables.get(&version)
+    /// Look up a published codec version.
+    pub fn codec(&self, version: u64) -> Option<&Arc<dyn BlockCodec>> {
+        self.codecs.get(&version)
     }
 
-    /// Number of published table versions.
-    pub fn table_count(&self) -> usize {
-        self.tables.len()
+    /// Number of published codec versions.
+    pub fn codec_count(&self) -> usize {
+        self.codecs.len()
     }
 
     /// Insert/overwrite a page.
     pub fn put(&mut self, page_id: u64, page: StoredPage) {
         debug_assert!(
-            self.tables.contains_key(&page.table_version),
-            "page references unpublished table v{}",
-            page.table_version
+            self.codecs.contains_key(&page.codec_version),
+            "page references unpublished codec v{}",
+            page.codec_version
         );
         self.pages.insert(page_id, page);
     }
@@ -99,45 +104,43 @@ impl PageStore {
         let mut ids: Vec<u64> = self
             .pages
             .iter()
-            .filter(|(_, p)| p.table_version < version)
+            .filter(|(_, p)| p.codec_version < version)
             .map(|(&id, _)| id)
             .collect();
         ids.sort_unstable();
         ids
     }
 
-    /// Decompress a page using its recorded table version.
-    pub fn read(&self, page_id: u64, config: &GbdiConfig) -> Result<Vec<u8>> {
+    /// Decompress a page using its recorded codec version.
+    pub fn read(&self, page_id: u64) -> Result<Vec<u8>> {
         let page = self
             .pages
             .get(&page_id)
             .ok_or_else(|| Error::Corrupt(format!("page {page_id} not found")))?;
-        let table = self.tables.get(&page.table_version).ok_or_else(|| {
-            Error::Corrupt(format!("table v{} not in ring", page.table_version))
+        let codec = self.codecs.get(&page.codec_version).ok_or_else(|| {
+            Error::Corrupt(format!("codec v{} not in ring", page.codec_version))
         })?;
-        let image = CompressedImage {
-            table: table.clone(),
-            original_len: page.original_len,
-            block_bits: page.block_bits.clone(),
-            payload: page.payload.clone(),
-            chunk_blocks: 0,
-            config: config.clone(),
-        };
-        decode::decompress_image(&image)
+        container::decompress_parts(
+            codec.as_ref(),
+            &page.payload,
+            &page.block_bits,
+            page.original_len,
+            0,
+        )
     }
 
-    /// Drop table versions no page references anymore (except the newest
+    /// Drop codec versions no page references anymore (except the newest
     /// `keep` versions). Returns how many were dropped.
-    pub fn gc_tables(&mut self, keep: usize) -> usize {
+    pub fn gc_codecs(&mut self, keep: usize) -> usize {
         let referenced: std::collections::BTreeSet<u64> =
-            self.pages.values().map(|p| p.table_version).collect();
-        let mut versions: Vec<u64> = self.tables.keys().copied().collect();
+            self.pages.values().map(|p| p.codec_version).collect();
+        let mut versions: Vec<u64> = self.codecs.keys().copied().collect();
         versions.sort_unstable();
         let keep_from = versions.len().saturating_sub(keep);
         let mut dropped = 0;
         for (i, v) in versions.into_iter().enumerate() {
             if i < keep_from && !referenced.contains(&v) {
-                self.tables.remove(&v);
+                self.codecs.remove(&v);
                 dropped += 1;
             }
         }
@@ -148,23 +151,22 @@ impl PageStore {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gbdi::{analyze, GbdiCodec};
+    use crate::gbdi::{analyze, table::GlobalBaseTable, GbdiCodec, GbdiConfig};
     use crate::value::WordSize;
     use crate::workloads;
 
-    fn compress_page(data: &[u8], table: &GlobalBaseTable, cfg: &GbdiConfig) -> StoredPage {
-        let codec = GbdiCodec::new(table.clone(), cfg.clone());
-        let comp = codec.compress_image(data);
+    fn compress_page(data: &[u8], codec: &dyn BlockCodec) -> StoredPage {
+        let (payload, block_bits) = container::compress_blocks(codec, data);
         StoredPage {
-            table_version: table.version,
-            original_len: comp.original_len,
-            block_bits: comp.block_bits,
-            payload: comp.payload,
+            codec_version: codec.version(),
+            original_len: data.len(),
+            block_bits,
+            payload,
         }
     }
 
     #[test]
-    fn pages_survive_table_swaps() {
+    fn pages_survive_codec_swaps() {
         let cfg = GbdiConfig::default();
         let img_a = workloads::by_name("mcf").unwrap().generate(4096, 1);
         let img_b = workloads::by_name("svm").unwrap().generate(4096, 1);
@@ -172,25 +174,48 @@ mod tests {
         t1.version = 1;
         let mut t2 = analyze::analyze_image(&img_b, &cfg);
         t2.version = 2;
+        let c1: Arc<dyn BlockCodec> = Arc::new(GbdiCodec::new(t1, cfg.clone()));
+        let c2: Arc<dyn BlockCodec> = Arc::new(GbdiCodec::new(t2, cfg.clone()));
 
         let mut store = PageStore::new();
-        store.publish_table(t1.clone());
-        store.put(10, compress_page(&img_a, &t1, &cfg));
-        store.publish_table(t2.clone());
-        store.put(20, compress_page(&img_b, &t2, &cfg));
+        store.publish_codec(Arc::clone(&c1));
+        store.put(10, compress_page(&img_a, c1.as_ref()));
+        store.publish_codec(Arc::clone(&c2));
+        store.put(20, compress_page(&img_b, c2.as_ref()));
 
-        // both decode bit-exactly despite different table versions
-        assert_eq!(store.read(10, &cfg).unwrap(), img_a);
-        assert_eq!(store.read(20, &cfg).unwrap(), img_b);
+        // both decode bit-exactly despite different codec versions
+        assert_eq!(store.read(10).unwrap(), img_a);
+        assert_eq!(store.read(20).unwrap(), img_b);
         assert_eq!(store.lagging_pages(2), vec![10]);
         assert_eq!(store.lagging_pages(1), Vec::<u64>::new());
     }
 
     #[test]
-    fn missing_page_and_table_error() {
+    fn heterogeneous_codecs_coexist() {
+        // the ring is codec-agnostic: a BDI page (version 0) and a GBDI
+        // page (version 3) live side by side
         let cfg = GbdiConfig::default();
+        let img = workloads::by_name("fluidanimate").unwrap().generate(4096, 2);
+        let bdi: Arc<dyn BlockCodec> =
+            Arc::new(crate::baselines::bdi::Bdi { block_bytes: cfg.block_bytes });
+        let mut t = analyze::analyze_image(&img, &cfg);
+        t.version = 3;
+        let gbdi: Arc<dyn BlockCodec> = Arc::new(GbdiCodec::new(t, cfg));
+
+        let mut store = PageStore::new();
+        store.publish_codec(Arc::clone(&bdi));
+        store.put(1, compress_page(&img, bdi.as_ref()));
+        store.publish_codec(Arc::clone(&gbdi));
+        store.put(2, compress_page(&img, gbdi.as_ref()));
+        assert_eq!(store.read(1).unwrap(), img);
+        assert_eq!(store.read(2).unwrap(), img);
+        assert_eq!(store.codec_count(), 2);
+    }
+
+    #[test]
+    fn missing_page_and_codec_error() {
         let store = PageStore::new();
-        assert!(store.read(99, &cfg).is_err());
+        assert!(store.read(99).is_err());
     }
 
     #[test]
@@ -199,19 +224,19 @@ mod tests {
         let img = vec![7u8; 4096];
         let mut store = PageStore::new();
         for v in 1..=5 {
-            let mut t = GlobalBaseTable::new(vec![(v * 1000, 8)], WordSize::W32, v);
-            t.version = v;
-            store.publish_table(t.clone());
+            let t = GlobalBaseTable::new(vec![(v * 1000, 8)], WordSize::W32, v);
+            let codec: Arc<dyn BlockCodec> = Arc::new(GbdiCodec::new(t, cfg.clone()));
+            store.publish_codec(Arc::clone(&codec));
             if v == 2 {
-                store.put(1, compress_page(&img, &t, &cfg));
+                store.put(1, compress_page(&img, codec.as_ref()));
             }
         }
-        let dropped = store.gc_tables(1);
+        let dropped = store.gc_codecs(1);
         // v1, v3, v4 droppable; v2 referenced; v5 newest kept
         assert_eq!(dropped, 3);
-        assert!(store.table(2).is_some());
-        assert!(store.table(5).is_some());
-        assert_eq!(store.read(1, &cfg).unwrap(), img);
+        assert!(store.codec(2).is_some());
+        assert!(store.codec(5).is_some());
+        assert_eq!(store.read(1).unwrap(), img);
     }
 
     #[test]
@@ -219,9 +244,10 @@ mod tests {
         let cfg = GbdiConfig::default();
         let img = vec![0u8; 8192];
         let t = analyze::analyze_image(&img, &cfg);
+        let codec: Arc<dyn BlockCodec> = Arc::new(GbdiCodec::new(t, cfg));
         let mut store = PageStore::new();
-        store.publish_table(t.clone());
-        store.put(1, compress_page(&img, &t, &cfg));
+        store.publish_codec(Arc::clone(&codec));
+        store.put(1, compress_page(&img, codec.as_ref()));
         assert_eq!(store.len(), 1);
         assert_eq!(store.logical_bytes(), 8192);
         assert!(store.stored_bytes() < 2048, "zeros compress: {}", store.stored_bytes());

@@ -2,8 +2,9 @@
 //! and bit-exact value reconstruction (paper §IV.B).
 
 use super::table::GlobalBaseTable;
-use super::{BlockMode, CompressedImage, GbdiConfig};
+use super::{BlockMode, GbdiConfig};
 use crate::cluster::apply_delta;
+use crate::container::Container;
 use crate::util::bits::BitReader;
 use crate::value::write_word;
 use crate::{Error, Result};
@@ -71,38 +72,18 @@ pub fn decompress_block(
     Ok(())
 }
 
-/// Decompress a full [`CompressedImage`], verifying framing. The returned
-/// buffer is byte-identical to the original image.
-pub fn decompress_image(comp: &CompressedImage) -> Result<Vec<u8>> {
-    let config = &comp.config;
-    config.validate().map_err(Error::Config)?;
-    let mut out = vec![0u8; comp.original_len];
-    let mut r = BitReader::new(&comp.payload);
-    let n_blocks = (comp.original_len + config.block_bytes - 1) / config.block_bytes;
-    if comp.block_bits.len() != n_blocks {
+/// Decompress a full GBDI [`Container`], verifying framing. The returned
+/// buffer is byte-identical to the original image. Thin wrapper over the
+/// codec-agnostic [`crate::container::decompress`], kept for the quickstart
+/// API surface; it additionally insists the container really is GBDI.
+pub fn decompress_image(comp: &Container) -> Result<Vec<u8>> {
+    if comp.codec_id != crate::codec::CodecId::Gbdi {
         return Err(Error::Corrupt(format!(
-            "block count mismatch: framing says {}, image needs {}",
-            comp.block_bits.len(),
-            n_blocks
+            "not a gbdi container (codec {})",
+            comp.codec_id.name()
         )));
     }
-    for (i, chunk) in out.chunks_mut(config.block_bytes).enumerate() {
-        // parallel streams: every chunk_blocks-th block starts byte-aligned
-        if comp.chunk_blocks > 0 && i > 0 && i % comp.chunk_blocks == 0 {
-            r.skip_to_byte()
-                .map_err(|_| Error::Corrupt(format!("chunk realign before block {i}")))?;
-        }
-        let before = r.bit_pos();
-        decompress_block(&mut r, &comp.table, config, chunk)?;
-        let used = (r.bit_pos() - before) as u32;
-        if used != comp.block_bits[i] {
-            return Err(Error::Corrupt(format!(
-                "block {i}: consumed {used} bits, framing recorded {}",
-                comp.block_bits[i]
-            )));
-        }
-    }
-    Ok(out)
+    crate::container::decompress(comp)
 }
 
 #[cfg(test)]

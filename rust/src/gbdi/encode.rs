@@ -17,8 +17,10 @@
 //! per block: if the GBDI payload would be ≥ the raw block, it emits RAW.
 
 use super::table::GlobalBaseTable;
-use super::{BlockMode, CompressedImage, GbdiConfig};
-use crate::util::bits::BitWriter;
+use super::{BlockMode, GbdiConfig};
+use crate::codec::{BlockCodec, CodecId};
+use crate::container::{self, Container};
+use crate::util::bits::{BitReader, BitWriter};
 use crate::value::read_word;
 
 /// Per-image statistics gathered while compressing (for reports and the
@@ -73,18 +75,31 @@ pub struct GbdiCodec {
 }
 
 impl GbdiCodec {
-    /// Build a codec. Panics on invalid config (validate first for a
-    /// recoverable path) or table/config word-size mismatch.
+    /// Build a codec. Panics on invalid config (use [`Self::try_new`] for
+    /// a recoverable path) or table/config word-size mismatch.
     pub fn new(table: GlobalBaseTable, config: GbdiConfig) -> Self {
-        config.validate().expect("invalid GbdiConfig");
         assert_eq!(table.word_size, config.word_size, "table/config word size mismatch");
-        assert!(
-            table.len() <= config.num_bases,
-            "table has {} bases, config allows {}",
-            table.len(),
-            config.num_bases
-        );
-        GbdiCodec { table, config }
+        Self::try_new(table, config).expect("invalid GbdiConfig")
+    }
+
+    /// Fallible [`Self::new`]: rejects invalid configs and table/config
+    /// mismatches instead of panicking (the container layer builds codecs
+    /// from untrusted headers through this).
+    pub fn try_new(table: GlobalBaseTable, config: GbdiConfig) -> crate::Result<Self> {
+        config.validate().map_err(crate::Error::Config)?;
+        if table.word_size != config.word_size {
+            return Err(crate::Error::Config("table/config word size mismatch".into()));
+        }
+        if table.len() > config.num_bases {
+            // Strict: index `num_bases` is the outlier escape code, so a
+            // table that large would alias real bases onto the escape.
+            return Err(crate::Error::Config(format!(
+                "table has {} bases, config allows {}",
+                table.len(),
+                config.num_bases
+            )));
+        }
+        Ok(GbdiCodec { table, config })
     }
 
     /// The table this codec encodes against.
@@ -97,15 +112,21 @@ impl GbdiCodec {
         &self.config
     }
 
-    /// Compress one block into `w`. Returns the mode chosen and the payload
-    /// bits written (including the tag).
-    pub fn compress_block(&self, block: &[u8], w: &mut BitWriter, stats: &mut EncodeStats) -> (BlockMode, u32) {
-        let mut plan = Vec::new();
+    /// Compress one block into `w`, accumulating [`EncodeStats`]. Returns
+    /// the mode chosen and the payload bits written (including the tag).
+    /// The stats-less [`BlockCodec::compress_block`] impl wraps this.
+    pub fn compress_block_stats(
+        &self,
+        block: &[u8],
+        w: &mut BitWriter,
+        stats: &mut EncodeStats,
+    ) -> (BlockMode, u32) {
+        let mut plan = Vec::with_capacity(self.config.words_per_block());
         self.compress_block_with(block, w, stats, &mut plan)
     }
 
-    /// [`Self::compress_block`] with a caller-provided plan scratch buffer
-    /// (the image loop reuses one allocation across all blocks).
+    /// [`Self::compress_block_stats`] with a caller-provided plan scratch
+    /// buffer (the image loop reuses one allocation across all blocks).
     fn compress_block_with(
         &self,
         block: &[u8],
@@ -219,13 +240,13 @@ impl GbdiCodec {
         w.put(v, self.config.word_size.bits());
     }
 
-    /// Compress a whole image into a framed [`CompressedImage`].
-    pub fn compress_image(&self, image: &[u8]) -> CompressedImage {
+    /// Compress a whole image into a framed [`Container`].
+    pub fn compress_image(&self, image: &[u8]) -> Container {
         self.compress_image_stats(image).0
     }
 
     /// [`Self::compress_image`] also returning encode statistics.
-    pub fn compress_image_stats(&self, image: &[u8]) -> (CompressedImage, EncodeStats) {
+    pub fn compress_image_stats(&self, image: &[u8]) -> (Container, EncodeStats) {
         let mut w = BitWriter::with_capacity(image.len() / 2 + 64);
         let mut stats = EncodeStats::default();
         let mut block_bits = Vec::with_capacity(image.len() / self.config.block_bytes + 1);
@@ -234,73 +255,62 @@ impl GbdiCodec {
             let (_, bits) = self.compress_block_with(block, &mut w, &mut stats, &mut plan);
             block_bits.push(bits);
         }
-        (
-            CompressedImage {
-                table: self.table.clone(),
-                original_len: image.len(),
-                block_bits,
-                payload: w.finish(),
-                chunk_blocks: 0,
-                config: self.config.clone(),
-            },
-            stats,
-        )
+        (container::assemble(self, image.len(), 0, w.finish(), block_bits), stats)
     }
 
-    /// Parallel whole-image compression: blocks are split into chunks of
-    /// `CHUNK_BLOCKS`, each compressed on its own thread into a
-    /// byte-aligned sub-stream, then concatenated. The decoder realigns
-    /// at chunk boundaries (`chunk_blocks` in the frame), so the result
-    /// is bit-exact-decodable like the serial stream (and the ratio is
-    /// identical up to <1 byte of padding per 256 KiB chunk).
-    pub fn compress_image_parallel(&self, image: &[u8], threads: usize) -> (CompressedImage, EncodeStats) {
-        const CHUNK_BLOCKS: usize = 4096;
-        let chunk_bytes = CHUNK_BLOCKS * self.config.block_bytes;
-        if threads <= 1 || image.len() <= chunk_bytes {
-            return self.compress_image_stats(image);
-        }
-        let chunks: Vec<&[u8]> = image.chunks(chunk_bytes).collect();
-        let results = crate::util::pool::parallel_map_chunks(&chunks, threads, |_, piece| {
-            piece
-                .iter()
-                .map(|chunk| {
-                    let mut w = BitWriter::with_capacity(chunk.len() / 2 + 64);
-                    let mut stats = EncodeStats::default();
-                    let mut block_bits = Vec::with_capacity(CHUNK_BLOCKS);
-                    let mut plan = Vec::with_capacity(self.config.words_per_block());
-                    for block in chunk.chunks(self.config.block_bytes) {
-                        let (_, bits) = self.compress_block_with(block, &mut w, &mut stats, &mut plan);
-                        block_bits.push(bits);
-                    }
-                    (w.finish(), block_bits, stats)
-                })
-                .collect::<Vec<_>>()
-        });
-        let mut payload = Vec::with_capacity(image.len() / 2);
-        let mut block_bits = Vec::with_capacity(image.len() / self.config.block_bytes + 1);
+    /// Parallel whole-image compression with statistics. The chunk
+    /// orchestration (byte-aligned sub-streams, realign-on-decode) lives
+    /// in the codec-agnostic [`container`] layer; this wrapper only adds
+    /// GBDI's per-chunk [`EncodeStats`] merge. Output decodes bit-exactly
+    /// like the serial stream (ratio identical up to <1 byte padding per
+    /// chunk).
+    pub fn compress_image_parallel(&self, image: &[u8], threads: usize) -> (Container, EncodeStats) {
+        let (payload, block_bits, chunk_stats, chunk_blocks) =
+            container::compress_chunked(image, self.config.block_bytes, threads, |chunk| {
+                let mut w = BitWriter::with_capacity(chunk.len() / 2 + 64);
+                let mut stats = EncodeStats::default();
+                let mut block_bits = Vec::with_capacity(chunk.len() / self.config.block_bytes + 1);
+                let mut plan = Vec::with_capacity(self.config.words_per_block());
+                for block in chunk.chunks(self.config.block_bytes) {
+                    let (_, bits) = self.compress_block_with(block, &mut w, &mut stats, &mut plan);
+                    block_bits.push(bits);
+                }
+                (w.finish(), block_bits, stats)
+            });
         let mut stats = EncodeStats::default();
-        for (bytes, bits, s) in results {
-            payload.extend_from_slice(&bytes);
-            block_bits.extend_from_slice(&bits);
-            stats.merge(&s);
+        for s in &chunk_stats {
+            stats.merge(s);
         }
-        (
-            CompressedImage {
-                table: self.table.clone(),
-                original_len: image.len(),
-                block_bits,
-                payload,
-                chunk_blocks: CHUNK_BLOCKS,
-                config: self.config.clone(),
-            },
-            stats,
-        )
+        (container::assemble(self, image.len(), chunk_blocks, payload, block_bits), stats)
+    }
+}
+
+impl BlockCodec for GbdiCodec {
+    fn name(&self) -> &'static str {
+        "gbdi"
+    }
+
+    fn codec_id(&self) -> CodecId {
+        CodecId::Gbdi
+    }
+
+    fn block_bytes(&self) -> usize {
+        self.config.block_bytes
+    }
+
+    fn compress_block(&self, block: &[u8], w: &mut BitWriter) -> u32 {
+        let mut stats = EncodeStats::default();
+        self.compress_block_stats(block, w, &mut stats).1
+    }
+
+    fn decompress_block(&self, r: &mut BitReader<'_>, out: &mut [u8]) -> crate::Result<()> {
+        super::decode::decompress_block(r, &self.table, &self.config, out)
     }
 
     /// Exact compressed bit size of `block` without emitting anything —
     /// the L3 mirror of the L1 `size_estimate` kernel; used by the
     /// coordinator to score candidate tables.
-    pub fn estimate_block_bits(&self, block: &[u8]) -> u64 {
+    fn estimate_block_bits(&self, block: &[u8]) -> u64 {
         if block.len() != self.config.block_bytes {
             return 2 + block.len() as u64 * 8;
         }
@@ -325,6 +335,18 @@ impl GbdiCodec {
         }
         bits.min(2 + block.len() as u64 * 8)
     }
+
+    fn config_bytes(&self) -> Vec<u8> {
+        self.config.to_bytes()
+    }
+
+    fn global_table(&self) -> Option<&GlobalBaseTable> {
+        Some(&self.table)
+    }
+
+    fn version(&self) -> u64 {
+        self.table.version
+    }
 }
 
 #[cfg(test)]
@@ -348,7 +370,7 @@ mod tests {
         let codec = codec_with_bases(&[(0, 8)]);
         let mut w = BitWriter::new();
         let mut s = EncodeStats::default();
-        let (mode, bits) = codec.compress_block(&[0u8; 64], &mut w, &mut s);
+        let (mode, bits) = codec.compress_block_stats(&[0u8; 64], &mut w, &mut s);
         assert_eq!(mode, BlockMode::Zero);
         assert_eq!(bits, 2);
         assert_eq!(s.zero_blocks, 1);
@@ -360,7 +382,7 @@ mod tests {
         let block = block_of_words(&[0xDEADBEEF; 16]);
         let mut w = BitWriter::new();
         let mut s = EncodeStats::default();
-        let (mode, bits) = codec.compress_block(&block, &mut w, &mut s);
+        let (mode, bits) = codec.compress_block_stats(&block, &mut w, &mut s);
         assert_eq!(mode, BlockMode::Rep);
         assert_eq!(bits, 2 + 32);
     }
@@ -374,7 +396,7 @@ mod tests {
         let block = block_of_words(&words);
         let mut w = BitWriter::new();
         let mut s = EncodeStats::default();
-        let (mode, bits) = codec.compress_block(&block, &mut w, &mut s);
+        let (mode, bits) = codec.compress_block_stats(&block, &mut w, &mut s);
         assert_eq!(mode, BlockMode::Gbdi);
         assert!(bits < 64 * 8 / 2, "should compress >2x, got {bits} bits");
         assert_eq!(s.outlier_words, 0);
@@ -389,7 +411,7 @@ mod tests {
         rng.fill_bytes(&mut block);
         let mut w = BitWriter::new();
         let mut s = EncodeStats::default();
-        let (mode, bits) = codec.compress_block(&block, &mut w, &mut s);
+        let (mode, bits) = codec.compress_block_stats(&block, &mut w, &mut s);
         assert_eq!(mode, BlockMode::Raw);
         assert_eq!(bits, 2 + 64 * 8);
     }
@@ -399,7 +421,7 @@ mod tests {
         let codec = codec_with_bases(&[(0, 8)]);
         let mut w = BitWriter::new();
         let mut s = EncodeStats::default();
-        let (mode, bits) = codec.compress_block(&[7u8; 10], &mut w, &mut s);
+        let (mode, bits) = codec.compress_block_stats(&[7u8; 10], &mut w, &mut s);
         assert_eq!(mode, BlockMode::Raw);
         assert_eq!(bits, 2 + 80);
     }
@@ -420,7 +442,7 @@ mod tests {
             let block = block_of_words(&words);
             let mut w = BitWriter::new();
             let mut s = EncodeStats::default();
-            let (_, bits) = codec.compress_block(&block, &mut w, &mut s);
+            let (_, bits) = codec.compress_block_stats(&block, &mut w, &mut s);
             assert_eq!(codec.estimate_block_bits(&block), bits as u64);
         }
     }
@@ -439,7 +461,9 @@ mod tests {
         let image = block_of_words(&words);
         let codec = codec_with_bases(&[(5000, 8), (1 << 28, 8)]);
         let (comp, stats) = codec.compress_image_stats(&image);
-        assert!(comp.ratio() > 2.0, "ratio {}", comp.ratio());
+        // ~15 bits/word payload; the container's per-block bit-length
+        // index (honestly counted in total_len) costs ~2 B/block here
+        assert!(comp.ratio() > 1.9, "ratio {}", comp.ratio());
         assert!(stats.gbdi_blocks + stats.zero_blocks + stats.rep_blocks > 0);
         let restored = decode::decompress_image(&comp).unwrap();
         assert_eq!(restored, image);

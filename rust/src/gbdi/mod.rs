@@ -139,43 +139,52 @@ impl GbdiConfig {
     pub fn outlier_code(&self) -> u64 {
         self.num_bases as u64
     }
-}
 
-/// A compressed memory image: framed container written by
-/// [`encode::GbdiCodec::compress_image`].
-#[derive(Debug, Clone)]
-pub struct CompressedImage {
-    /// Serialized global base table the payload references.
-    pub table: table::GlobalBaseTable,
-    /// Original image length in bytes.
-    pub original_len: usize,
-    /// Per-block bit lengths (for the memory-simulator's sector layout);
-    /// one entry per block.
-    pub block_bits: Vec<u32>,
-    /// The packed payload.
-    pub payload: Vec<u8>,
-    /// Parallel-compression chunking: every `chunk_blocks`-th block starts
-    /// byte-aligned (0 = unchunked serial stream).
-    pub chunk_blocks: usize,
-    /// Codec config used (needed to decode).
-    pub config: GbdiConfig,
-}
-
-impl CompressedImage {
-    /// Compressed payload size in bytes (excluding table + framing).
-    pub fn payload_len(&self) -> usize {
-        self.payload.len()
+    /// Serialize the wire-relevant config fields for embedding in a
+    /// [`crate::container::Container`]: block size, word size, base
+    /// budget, and the width-class menu. Analysis-only knobs (sample
+    /// count, iterations, quantile, seed) are not needed to decode and
+    /// come back as defaults from [`Self::from_bytes`].
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(10 + self.width_classes.len());
+        out.extend_from_slice(&(self.block_bytes as u32).to_le_bytes());
+        out.push(self.word_size.bytes() as u8);
+        out.extend_from_slice(&(self.num_bases as u16).to_le_bytes());
+        out.push(self.width_classes.len() as u8);
+        for &w in &self.width_classes {
+            out.push(w as u8);
+        }
+        out
     }
 
-    /// Total compressed size in bytes including the serialized table and
-    /// per-image framing — the honest numerator for compression ratios.
-    pub fn total_len(&self) -> usize {
-        self.payload.len() + self.table.serialized_len() + 16
-    }
-
-    /// Compression ratio original/compressed (the paper's metric).
-    pub fn ratio(&self) -> f64 {
-        self.original_len as f64 / self.total_len() as f64
+    /// Parse a config blob written by [`Self::to_bytes`]. The result is
+    /// validated.
+    pub fn from_bytes(data: &[u8]) -> crate::Result<GbdiConfig> {
+        let corrupt = |m: &str| crate::Error::Corrupt(format!("gbdi config: {m}"));
+        if data.len() < 8 {
+            return Err(corrupt("truncated"));
+        }
+        let block_bytes = u32::from_le_bytes(data[0..4].try_into().unwrap()) as usize;
+        let word_size = match data[4] {
+            4 => WordSize::W32,
+            8 => WordSize::W64,
+            b => return Err(corrupt(&format!("bad word size {b}"))),
+        };
+        let num_bases = u16::from_le_bytes(data[5..7].try_into().unwrap()) as usize;
+        let n_classes = data[7] as usize;
+        if data.len() < 8 + n_classes {
+            return Err(corrupt("truncated width classes"));
+        }
+        let width_classes: Vec<u32> = data[8..8 + n_classes].iter().map(|&b| b as u32).collect();
+        let cfg = GbdiConfig {
+            block_bytes,
+            word_size,
+            num_bases,
+            width_classes,
+            ..Default::default()
+        };
+        cfg.validate().map_err(|e| corrupt(&e))?;
+        Ok(cfg)
     }
 }
 
@@ -228,5 +237,25 @@ mod tests {
         for m in [BlockMode::Raw, BlockMode::Zero, BlockMode::Rep, BlockMode::Gbdi] {
             assert_eq!(BlockMode::from_tag(m as u64), m);
         }
+    }
+
+    #[test]
+    fn config_wire_roundtrip() {
+        let cfg = GbdiConfig {
+            block_bytes: 128,
+            word_size: WordSize::W64,
+            num_bases: 100,
+            width_classes: vec![0, 4, 8, 16, 24, 32],
+            ..Default::default()
+        };
+        let back = GbdiConfig::from_bytes(&cfg.to_bytes()).unwrap();
+        assert_eq!(back.block_bytes, 128);
+        assert_eq!(back.word_size, WordSize::W64);
+        assert_eq!(back.num_bases, 100);
+        assert_eq!(back.width_classes, cfg.width_classes);
+        assert!(GbdiConfig::from_bytes(&[1, 2]).is_err());
+        let mut bad = cfg.to_bytes();
+        bad[4] = 3; // bad word size
+        assert!(GbdiConfig::from_bytes(&bad).is_err());
     }
 }

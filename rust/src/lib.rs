@@ -5,7 +5,7 @@
 //! Workloads”* (CS.DC 2025), which itself reimplements GBDI from HPCA'22
 //! (Angerd et al.).
 //!
-//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//! ## The three-layer stack
 //!
 //! * **L1** — Pallas kernels (build-time Python): k-means assignment /
 //!   centroid update / compressed-size estimation, tiled for VMEM + MXU.
@@ -16,11 +16,35 @@
 //!   simulator, and a serving-style [`coordinator`] that runs the L2
 //!   artifacts through PJRT ([`runtime`]) off the hot path.
 //!
-//! Quickstart:
+//! ## The codec/container layering (L3 internals)
+//!
+//! Everything that compresses cache-line-sized blocks sits behind one
+//! seam:
+//!
+//! * [`codec::BlockCodec`] — the crate-wide trait: per-block
+//!   `compress_block` / `decompress_block` / `estimate_block_bits` over
+//!   the shared bit stream ([`util::bits`]). Implemented by
+//!   [`GbdiCodec`], [`baselines::bdi::Bdi`], and
+//!   [`baselines::fpc::FpcBlock`]; new codecs plug in here.
+//! * [`container`] — the single framed format for whole images: codec id
+//!   + config + optional global table + per-block bit lengths (u32
+//!   varints) + chunked payload. Serial ([`container::compress`]) and
+//!   parallel ([`container::compress_parallel`]) pipelines work for
+//!   *every* codec; parallel output decodes bit-exactly like serial.
+//! * Consumers — the memory simulator ([`memsim::CompressedMemory`]),
+//!   the serving coordinator ([`coordinator::CompressionService`]), the
+//!   CLI (`gbdi compress|verify|memsim|sweep --codec gbdi|bdi|fpc`), and
+//!   the benches all accept any `dyn BlockCodec`.
+//!
+//! Whole-image software comparators (LZSS, Huffman, gzip, zstd) stay
+//! behind the coarser [`baselines::Codec`] trait — they have no block
+//! granularity for the simulator to exploit.
+//!
+//! ## Quickstart
 //!
 //! ```
 //! use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig};
-//! use gbdi::workloads;
+//! use gbdi::{container, workloads};
 //!
 //! // 1 MiB of mcf-like memory content.
 //! let image = workloads::by_name("mcf").unwrap().generate(1 << 20, 7);
@@ -28,15 +52,19 @@
 //! let cfg = GbdiConfig::default();
 //! let table = analyze::analyze_image(&image, &cfg);
 //! let codec = GbdiCodec::new(table, cfg);
-//! let compressed = codec.compress_image(&image);
-//! let restored = gbdi::gbdi::decode::decompress_image(&compressed).unwrap();
-//! assert_eq!(restored, image);
+//! // Any BlockCodec compresses through the shared container layer
+//! // (compress_parallel chunks across threads with identical output).
+//! let compressed = container::compress(&codec, &image);
+//! assert!(compressed.ratio() > 1.0);
+//! assert_eq!(compressed.decompress().unwrap(), image);
 //! ```
 
 pub mod baselines;
 pub mod cli;
 pub mod cluster;
+pub mod codec;
 pub mod config;
+pub mod container;
 pub mod coordinator;
 pub mod elf;
 pub mod gbdi;
@@ -47,6 +75,8 @@ pub mod util;
 pub mod value;
 pub mod workloads;
 
+pub use codec::{BlockCodec, CodecId, CodecKind};
+pub use container::Container;
 pub use gbdi::{GbdiCodec, GbdiConfig};
 
 /// Crate-wide error type.

@@ -5,8 +5,10 @@
 //! Run `gbdi --help` for the command list; every experiment in
 //! EXPERIMENTS.md names the command that regenerates it.
 
-use gbdi::baselines::{self, Codec, GbdiWholeImage};
+use gbdi::baselines::{self, GbdiWholeImage};
 use gbdi::cli::{App, Arg};
+use gbdi::codec::{BlockCodec, CodecKind};
+use gbdi::container::{self, Container};
 use gbdi::coordinator::{AnalyzerBackend, CompressionService, ServiceConfig};
 use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig};
 use gbdi::memsim::{self, trace, CompressedMemory, DramModel};
@@ -33,19 +35,30 @@ fn app() -> App {
                 .arg(Arg::opt("samples", "4096", "analysis sample words")),
         )
         .subcommand(
-            App::new("compress", "compress a dump/file into a .gbdi container")
+            App::new("compress", "compress a dump/file into a framed container")
                 .arg(Arg::pos("input", "ELF dump or raw image"))
-                .arg(Arg::req("out", "output .gbdi path"))
-                .arg(Arg::opt("bases", "64", "number of global bases")),
+                .arg(Arg::req("out", "output container path"))
+                .arg(Arg::opt("codec", "gbdi", "block codec: gbdi|bdi|fpc"))
+                .arg(Arg::opt("threads", "0", "compression threads (0 = all cores)"))
+                .arg(Arg::opt("bases", "64", "number of global bases (gbdi)")),
         )
         .subcommand(
-            App::new("decompress", "decompress a .gbdi container")
-                .arg(Arg::pos("input", ".gbdi container"))
+            App::new("decompress", "decompress a framed container (codec auto-detected)")
+                .arg(Arg::pos("input", "compressed container"))
                 .arg(Arg::req("out", "output path")),
         )
         .subcommand(
             App::new("verify", "compress + decompress + bit-exactness check")
-                .arg(Arg::pos("input", "ELF dump or raw image")),
+                .arg(Arg::pos("input", "ELF dump or raw image"))
+                .arg(Arg::opt("codec", "gbdi", "block codec: gbdi|bdi|fpc"))
+                .arg(Arg::opt("threads", "0", "parallel-path threads (0 = all cores)")),
+        )
+        .subcommand(
+            App::new("sweep", "compression-ratio sweep: every block codec x every workload")
+                .arg(Arg::opt("size", "1m", "image bytes per workload"))
+                .arg(Arg::opt("seed", "7", "generator seed"))
+                .arg(Arg::opt("threads", "0", "compression threads (0 = all cores)"))
+                .arg(Arg::opt("csv", "", "also write CSV here")),
         )
         .subcommand(
             App::new("figure1", "reproduce the paper's Figure 1 (per-workload ratios)")
@@ -58,12 +71,14 @@ fn app() -> App {
                 .arg(Arg::opt("pages", "512", "pages to stream"))
                 .arg(Arg::opt("workers", "4", "compression workers"))
                 .arg(Arg::opt("workload", "mix", "workload or 'mix'"))
+                .arg(Arg::opt("codec", "gbdi", "gbdi (adaptive analyzer) or bdi|fpc (static)"))
                 .arg(Arg::opt("config", "", "TOML config file ([codec] + [service])"))
                 .arg(Arg::flag("native", "force native k-means (skip PJRT artifacts)")),
         )
         .subcommand(
             App::new("memsim", "compressed-memory bandwidth experiment (E7)")
                 .arg(Arg::opt("workload", "triangle_count", "workload name"))
+                .arg(Arg::opt("codec", "gbdi", "block codec: gbdi|bdi|fpc"))
                 .arg(Arg::opt("size", "4m", "image bytes"))
                 .arg(Arg::opt("trace", "streaming", "streaming|uniform|zipf"))
                 .arg(Arg::opt("accesses", "65536", "trace length"))
@@ -79,6 +94,19 @@ fn load_image(path: &str) -> gbdi::Result<Vec<u8>> {
         Ok(elf::parse(&raw)?.flatten())
     } else {
         Ok(raw)
+    }
+}
+
+fn parse_codec(m: &gbdi::cli::Matches) -> gbdi::Result<CodecKind> {
+    let name = m.get("codec");
+    CodecKind::parse(name)
+        .ok_or_else(|| gbdi::Error::Config(format!("unknown codec '{name}' (gbdi|bdi|fpc)")))
+}
+
+fn parse_threads(m: &gbdi::cli::Matches) -> usize {
+    match m.get_usize("threads") {
+        0 => std::thread::available_parallelism().map_or(1, |n| n.get()),
+        n => n,
     }
 }
 
@@ -142,50 +170,107 @@ fn cmd_analyze(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
 
 fn cmd_compress(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
     let image = load_image(m.get("input"))?;
-    let codec = GbdiWholeImage {
-        config: GbdiConfig { num_bases: m.get_usize("bases"), ..Default::default() },
-    };
-    let comp = codec.compress(&image);
-    std::fs::write(m.get("out"), &comp)?;
+    let kind = parse_codec(m)?;
+    let cfg = GbdiConfig { num_bases: m.get_usize("bases"), ..Default::default() };
+    cfg.validate().map_err(gbdi::Error::Config)?;
+    let codec = kind.build_for_image(&image, &cfg);
+    let comp = container::compress_parallel(codec.as_ref(), &image, parse_threads(m));
+    let bytes = comp.to_bytes();
+    std::fs::write(m.get("out"), &bytes)?;
     println!(
-        "{} -> {}: {} -> {} ({})",
+        "{} -> {} [{}]: {} -> {} ({})",
         m.get("input"),
         m.get("out"),
+        kind.name(),
         fmt_bytes(image.len() as u64),
-        fmt_bytes(comp.len() as u64),
-        fmt_ratio(image.len() as f64 / comp.len() as f64)
+        fmt_bytes(bytes.len() as u64),
+        fmt_ratio(image.len() as f64 / bytes.len() as f64)
     );
     Ok(())
 }
 
 fn cmd_decompress(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
-    let comp = std::fs::read(m.get("input"))?;
-    let len = GbdiWholeImage::container_len(&comp)?;
-    let out = GbdiWholeImage::default().decompress(&comp, len)?;
+    let comp = Container::from_bytes(&std::fs::read(m.get("input"))?)?;
+    let out = comp.decompress()?;
     std::fs::write(m.get("out"), &out)?;
-    println!("{} -> {} ({})", m.get("input"), m.get("out"), fmt_bytes(out.len() as u64));
+    println!(
+        "{} -> {} [{}] ({})",
+        m.get("input"),
+        m.get("out"),
+        comp.codec_id.name(),
+        fmt_bytes(out.len() as u64)
+    );
     Ok(())
 }
 
 fn cmd_verify(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
     let image = load_image(m.get("input"))?;
-    let codec = GbdiWholeImage::default();
+    let kind = parse_codec(m)?;
+    let threads = parse_threads(m);
+    let codec = kind.build_for_image(&image, &GbdiConfig::default());
     let t0 = std::time::Instant::now();
-    let comp = codec.compress(&image);
+    let comp = container::compress(codec.as_ref(), &image);
     let t_c = t0.elapsed();
     let t0 = std::time::Instant::now();
-    let back = codec.decompress(&comp, image.len())?;
+    let back = comp.decompress()?;
     let t_d = t0.elapsed();
     let ok = back == image;
+    // the parallel pipeline must reproduce the serial framing bit-for-bit
+    let par = container::compress_parallel(codec.as_ref(), &image, threads);
+    let par_ok = par.block_bits == comp.block_bits && par.decompress()? == image;
     println!(
-        "reconstruction: {}  ratio {}  compress {:.1} MiB/s  decompress {:.1} MiB/s",
+        "codec {}  reconstruction: {}  parallel({threads}t): {}  ratio {}  compress {:.1} MiB/s  decompress {:.1} MiB/s",
+        kind.name(),
         if ok { "BIT-EXACT" } else { "MISMATCH" },
-        fmt_ratio(image.len() as f64 / comp.len() as f64),
+        if par_ok { "BIT-EXACT" } else { "MISMATCH" },
+        fmt_ratio(comp.ratio()),
         image.len() as f64 / (1 << 20) as f64 / t_c.as_secs_f64(),
         image.len() as f64 / (1 << 20) as f64 / t_d.as_secs_f64(),
     );
-    if !ok {
+    if !ok || !par_ok {
         return Err(gbdi::Error::Corrupt("roundtrip mismatch".into()));
+    }
+    Ok(())
+}
+
+fn cmd_sweep(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
+    let size = m.get_usize("size");
+    let seed = m.get_u64("seed");
+    let threads = parse_threads(m);
+    let kinds = CodecKind::all();
+    let mut header: Vec<String> = vec!["workload".into()];
+    header.extend(kinds.iter().map(|k| k.name().to_string()));
+    let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hrefs);
+    let mut sums = vec![0.0f64; kinds.len()];
+    let mut n = 0usize;
+    for w in workloads::all() {
+        let img = w.generate(size, seed);
+        let mut row = vec![w.name().to_string()];
+        for (i, kind) in kinds.iter().enumerate() {
+            let codec = kind.build_for_image(&img, &GbdiConfig::default());
+            let comp = container::compress_parallel(codec.as_ref(), &img, threads);
+            let r = comp.ratio();
+            sums[i] += r;
+            row.push(format!("{r:.3}"));
+        }
+        t.row(&row);
+        n += 1;
+    }
+    let mut mean_row = vec!["MEAN".to_string()];
+    for s in &sums {
+        mean_row.push(format!("{:.3}", s / n as f64));
+    }
+    t.row(&mean_row);
+    println!(
+        "== block-codec sweep: {} per workload, {threads} threads ==\n",
+        fmt_bytes(size as u64)
+    );
+    print!("{}", t.render());
+    let csv_path = m.get("csv");
+    if !csv_path.is_empty() {
+        std::fs::write(csv_path, t.csv())?;
+        println!("csv written to {csv_path}");
     }
     Ok(())
 }
@@ -230,20 +315,7 @@ fn cmd_figure1(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
 
 fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
     let pages = m.get_u64("pages");
-    let backend = if m.get_flag("native") {
-        AnalyzerBackend::Native
-    } else {
-        match ArtifactRuntime::new(ArtifactRuntime::default_dir()) {
-            Ok(rt) if rt.has_artifact("kmeans_k64") => {
-                println!("analyzer backend: PJRT artifacts ({})", rt.platform());
-                AnalyzerBackend::Artifact(Arc::new(rt))
-            }
-            _ => {
-                println!("analyzer backend: native (artifacts not found)");
-                AnalyzerBackend::Native
-            }
-        }
-    };
+    let kind = parse_codec(m)?;
     let mut cfg = match m.get("config") {
         "" => ServiceConfig { analyze_every: 64, ..Default::default() },
         path => gbdi::config::ConfigFile::load(path)
@@ -251,7 +323,27 @@ fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
             .map_err(gbdi::Error::Config)?,
     };
     cfg.workers = m.get_usize("workers");
-    let svc = CompressionService::start(cfg, backend)?;
+    let svc = if kind == CodecKind::Gbdi {
+        let backend = if m.get_flag("native") {
+            AnalyzerBackend::Native
+        } else {
+            match ArtifactRuntime::new(ArtifactRuntime::default_dir()) {
+                Ok(rt) if rt.has_artifact("kmeans_k64") => {
+                    println!("analyzer backend: PJRT artifacts ({})", rt.platform());
+                    AnalyzerBackend::Artifact(Arc::new(rt))
+                }
+                _ => {
+                    println!("analyzer backend: native (artifacts not found)");
+                    AnalyzerBackend::Native
+                }
+            }
+        };
+        CompressionService::start(cfg, backend)?
+    } else {
+        println!("static codec: {} (no background analyzer)", kind.name());
+        let codec: Arc<dyn BlockCodec> = Arc::from(kind.build_for_image(&[], &cfg.codec));
+        CompressionService::start_static(cfg, codec)?
+    };
     let names: Vec<&str> = match m.get("workload") {
         "mix" => vec!["mcf", "perlbench", "fluidanimate", "triangle_count", "svm"],
         w => vec![w],
@@ -295,9 +387,9 @@ fn cmd_memsim(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
     let w = workloads::by_name(m.get("workload"))
         .ok_or_else(|| gbdi::Error::Config("unknown workload".into()))?;
     let image = w.generate(m.get_usize("size"), 7);
-    let cfg = GbdiConfig::default();
-    let table = analyze::analyze_image(&image, &cfg);
-    let mut mem = CompressedMemory::new(GbdiCodec::new(table, cfg));
+    let codec_kind = parse_codec(m)?;
+    let mut mem =
+        CompressedMemory::new_dyn(codec_kind.build_for_image(&image, &GbdiConfig::default()));
     mem.store_image(&image);
     let kind = trace::TraceKind::parse(m.get("trace"))
         .ok_or_else(|| gbdi::Error::Config("bad trace kind".into()))?;
@@ -305,8 +397,9 @@ fn cmd_memsim(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
     let model = DramModel { burst_bytes: m.get_u64("burst"), meta_miss: 0.05 };
     let rep = memsim::replay(&mut mem, &tr, &model)?;
     println!(
-        "workload {} trace {}: capacity {}  bandwidth amplification {:.3}x",
+        "workload {} codec {} trace {}: capacity {}  bandwidth amplification {:.3}x",
         w.name(),
+        codec_kind.name(),
         kind.label(),
         fmt_ratio(mem.capacity_ratio()),
         rep.amplification
@@ -357,6 +450,7 @@ fn main() {
         "compress" => cmd_compress(m),
         "decompress" => cmd_decompress(m),
         "verify" => cmd_verify(m),
+        "sweep" => cmd_sweep(m),
         "figure1" => cmd_figure1(m),
         "serve" => cmd_serve(m),
         "memsim" => cmd_memsim(m),

@@ -1,6 +1,8 @@
-//! A compressed main memory: cache-block-granular GBDI storage with
+//! A compressed main memory: cache-block-granular compressed storage with
 //! sectored allocation and a metadata table, modelling what sits behind
-//! the memory controller in the HPCA'22 design.
+//! the memory controller in the HPCA'22 design. Generic over any
+//! [`BlockCodec`], so the bandwidth experiments sweep GBDI against BDI
+//! and FPC through the same machinery.
 //!
 //! Layout model: each logical 64-byte block compresses to `n` **sectors**
 //! of `sector_bytes` (8 by default). The metadata table holds the sector
@@ -10,8 +12,7 @@
 //! its page's slack triggers a page re-layout (counted, as these are the
 //! expensive events a real controller must amortize).
 
-use crate::gbdi::encode::EncodeStats;
-use crate::gbdi::{decode, GbdiCodec};
+use crate::codec::BlockCodec;
 use crate::util::bits::{BitReader, BitWriter};
 use crate::{Error, Result};
 
@@ -38,9 +39,9 @@ struct Page {
     bits: Vec<u32>,
 }
 
-/// Compressed memory built over a [`GbdiCodec`].
+/// Compressed memory built over any [`BlockCodec`].
 pub struct CompressedMemory {
-    codec: GbdiCodec,
+    codec: Box<dyn BlockCodec>,
     page_bytes: usize,
     sector_bytes: usize,
     pages: Vec<Page>,
@@ -49,13 +50,24 @@ pub struct CompressedMemory {
 
 impl CompressedMemory {
     /// New memory with 4 KiB pages and 8-byte sectors.
-    pub fn new(codec: GbdiCodec) -> Self {
+    pub fn new<C: BlockCodec + 'static>(codec: C) -> Self {
+        Self::new_dyn(Box::new(codec))
+    }
+
+    /// [`Self::new`] from an already-boxed codec (the CLI's `--codec`
+    /// path hands over a `Box<dyn BlockCodec>`).
+    pub fn new_dyn(codec: Box<dyn BlockCodec>) -> Self {
         CompressedMemory { codec, page_bytes: 4096, sector_bytes: 8, pages: Vec::new(), stats: MemStats::default() }
     }
 
-    /// Block size (from the codec config).
+    /// The codec this memory compresses with.
+    pub fn codec(&self) -> &dyn BlockCodec {
+        self.codec.as_ref()
+    }
+
+    /// Block size (from the codec).
     pub fn block_bytes(&self) -> usize {
-        self.codec.config().block_bytes
+        self.codec.block_bytes()
     }
 
     /// Blocks per page.
@@ -89,8 +101,7 @@ impl CompressedMemory {
 
     fn compress_block(&self, block: &[u8]) -> (Vec<u8>, u32) {
         let mut w = BitWriter::with_capacity(self.block_bytes() + 8);
-        let mut stats = EncodeStats::default();
-        let (_, bits) = self.codec.compress_block(block, &mut w, &mut stats);
+        let bits = self.codec.compress_block(block, &mut w);
         (w.finish(), bits)
     }
 
@@ -116,7 +127,7 @@ impl CompressedMemory {
         let p = &self.pages[page];
         let mut out = vec![0u8; self.block_bytes()];
         let mut r = BitReader::new(&p.blocks[idx]);
-        decode::decompress_block(&mut r, self.codec.table(), self.codec.config(), &mut out)?;
+        self.codec.decompress_block(&mut r, &mut out)?;
         Ok(out)
     }
 
@@ -167,12 +178,13 @@ impl CompressedMemory {
     }
 
     /// Physical bytes in use: payload sectors + metadata table (one byte
-    /// per block: sector count) + the global base table.
+    /// per block: sector count) + the codec's shared dictionary (GBDI's
+    /// global base table; stateless codecs charge nothing).
     pub fn physical_bytes(&self) -> u64 {
         let blocks = (self.pages.len() * self.blocks_per_page()) as u64;
         self.stats.used_sectors * self.sector_bytes as u64
             + blocks
-            + self.codec.table().serialized_len() as u64
+            + self.codec.global_table().map_or(0, |t| t.serialized_len()) as u64
     }
 
     /// Effective capacity ratio: logical / physical — the capacity-side
@@ -193,13 +205,33 @@ impl CompressedMemory {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gbdi::{analyze, GbdiConfig};
+    use crate::gbdi::{analyze, GbdiCodec, GbdiConfig};
     use crate::workloads;
 
     fn memory_with(image: &[u8]) -> CompressedMemory {
         let cfg = GbdiConfig::default();
         let table = analyze::analyze_image(image, &cfg);
         CompressedMemory::new(GbdiCodec::new(table, cfg))
+    }
+
+    #[test]
+    fn every_block_codec_drives_the_memory() {
+        let image = workloads::by_name("mcf").unwrap().generate(1 << 15, 4);
+        let cfg = GbdiConfig::default();
+        for &kind in crate::codec::CodecKind::all() {
+            let mut mem = CompressedMemory::new_dyn(kind.build_for_image(&image, &cfg));
+            let base = mem.store_image(&image);
+            assert_eq!(
+                mem.read_image(base, image.len()).unwrap(),
+                image,
+                "{} roundtrip through memory",
+                kind.name()
+            );
+            // write path: overwrite a block and read it back
+            let block = vec![0xA5u8; mem.block_bytes()];
+            mem.write_block(base, &block).unwrap();
+            assert_eq!(mem.read_block(base).unwrap(), block, "{}", kind.name());
+        }
     }
 
     #[test]

@@ -4,10 +4,10 @@
 //!
 //! Three pieces:
 //!
-//! * [`mem`] — a compressed memory: pages stored as GBDI-compressed
-//!   blocks in fixed sectors with a metadata table (per-block sector
-//!   count), capacity accounting, and transparent block read/write with
-//!   recompression.
+//! * [`mem`] — a compressed memory: pages stored as compressed blocks
+//!   (any [`crate::codec::BlockCodec`] — GBDI, BDI, FPC) in fixed sectors
+//!   with a metadata table (per-block sector count), capacity accounting,
+//!   and transparent block read/write with recompression.
 //! * [`trace`] — synthetic access traces (streaming, uniform, Zipf
 //!   hot-set) over a workload image.
 //! * [`bandwidth`] — a DRAM transfer model that replays a trace against

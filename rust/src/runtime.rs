@@ -12,10 +12,18 @@
 //! All are compiled once at startup and cached; executions are
 //! synchronous (the coordinator calls them from its background analyzer
 //! thread, never from compression workers).
+//!
+//! The PJRT bindings (the `xla` crate) are optional: build with
+//! `--features pjrt` to enable them. Without the feature,
+//! [`ArtifactRuntime::new`] returns a descriptive error and every caller
+//! falls back to the native Rust analysis path — no native XLA toolchain
+//! is required for the default build.
 
 use crate::{Error, Result};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
 /// Sample count the artifacts were lowered for.
@@ -34,6 +42,7 @@ pub struct KmeansFit {
     pub inertia: f32,
 }
 
+#[cfg(feature = "pjrt")]
 struct Inner {
     client: xla::PjRtClient,
     /// Compiled executables by artifact stem (e.g. "kmeans_k64").
@@ -41,8 +50,17 @@ struct Inner {
 }
 
 /// The artifact runtime: PJRT client + compiled executables.
+#[cfg(feature = "pjrt")]
 pub struct ArtifactRuntime {
     inner: Mutex<Inner>,
+    dir: PathBuf,
+}
+
+/// Stub artifact runtime compiled without the `pjrt` feature:
+/// construction always fails, so every caller takes its native-analysis
+/// fallback path.
+#[cfg(not(feature = "pjrt"))]
+pub struct ArtifactRuntime {
     dir: PathBuf,
 }
 
@@ -52,9 +70,52 @@ pub struct ArtifactRuntime {
 // `self.inner`'s Mutex, so the non-atomic Rc counts are never mutated
 // concurrently, and no Rc clone escapes the guarded scope (only plain
 // `Literal` host data is returned).
+#[cfg(feature = "pjrt")]
 unsafe impl Send for ArtifactRuntime {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for ArtifactRuntime {}
 
+#[cfg(not(feature = "pjrt"))]
+impl ArtifactRuntime {
+    /// Always fails: the crate was built without the `pjrt` feature.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let _ = dir;
+        Err(Error::Runtime(
+            "PJRT unavailable: built without the `pjrt` feature (native analysis is used instead)"
+                .into(),
+        ))
+    }
+
+    /// Default artifact directory: `$GBDI_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("GBDI_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Whether the artifact file for a given stem exists.
+    pub fn has_artifact(&self, stem: &str) -> bool {
+        self.dir.join(format!("{stem}.hlo.txt")).exists()
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        "unavailable (no pjrt feature)".into()
+    }
+
+    /// Unreachable in practice ([`Self::new`] always errs), but keeps the
+    /// API surface identical for callers compiled either way.
+    pub fn kmeans(&self, _samples: &[f32], _init: &[f32]) -> Result<KmeansFit> {
+        Err(Error::Runtime("PJRT unavailable: built without the `pjrt` feature".into()))
+    }
+
+    /// See [`Self::kmeans`].
+    pub fn size_estimate(&self, _samples: &[f32], _bases: &[f32], _widths: &[f32]) -> Result<f32> {
+        Err(Error::Runtime("PJRT unavailable: built without the `pjrt` feature".into()))
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl ArtifactRuntime {
     /// Create a runtime over the artifact directory. Fails if the PJRT
     /// client cannot start; individual artifacts are loaded lazily so a
@@ -163,6 +224,7 @@ impl ArtifactRuntime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn wrap(e: xla::Error) -> Error {
     Error::Runtime(e.to_string())
 }

@@ -101,7 +101,11 @@ where
         return f(0, items);
     }
     let chunk = (items.len() + threads - 1) / threads;
-    let mut out: Vec<Option<Vec<R>>> = (0..threads).map(|_| None).collect();
+    // ceil-division can yield fewer pieces than threads (e.g. 12 items on
+    // 8 threads -> chunk 2 -> 6 pieces); size the slots to the pieces so
+    // the trailing slots don't stay None and panic below.
+    let n_pieces = (items.len() + chunk - 1) / chunk;
+    let mut out: Vec<Option<Vec<R>>> = (0..n_pieces).map(|_| None).collect();
     std::thread::scope(|scope| {
         let mut pending = Vec::new();
         for (i, (slot, piece)) in out.iter_mut().zip(items.chunks(chunk)).enumerate() {
@@ -159,6 +163,19 @@ mod tests {
             chunk.iter().map(|x| x * 2).collect()
         });
         assert_eq!(doubled, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_fewer_pieces_than_threads() {
+        // 12 items / 8 threads -> chunk 2 -> 6 pieces; must not panic on
+        // the 2 never-filled slots (regression: "all chunks ran" expect)
+        let items: Vec<u64> = (0..12).collect();
+        let r = parallel_map_chunks(&items, 8, |_, chunk| chunk.to_vec());
+        assert_eq!(r, items);
+        // and the pathological 3 items / 2 threads -> chunk 2 -> 2 pieces
+        let items = [7u32, 8, 9];
+        let r = parallel_map_chunks(&items, 2, |_, c| c.to_vec());
+        assert_eq!(r, items);
     }
 
     #[test]

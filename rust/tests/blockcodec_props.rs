@@ -1,0 +1,168 @@
+//! Integration: the unified block-codec layer. Every registered
+//! [`BlockCodec`] must roundtrip byte-identically through the shared
+//! container — across all workloads, word sizes, block sizes, and the
+//! serial vs parallel chunked pipelines — and the serialized container
+//! must survive a bytes roundtrip. Includes the regression for the old
+//! `GbdiWholeImage` format's u16 per-block bit lengths, which silently
+//! truncated blocks larger than 64 B.
+
+use gbdi::codec::{BlockCodec, CodecId, CodecKind};
+use gbdi::container::{self, Container};
+use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig};
+use gbdi::util::prng::Rng;
+use gbdi::util::testkit::{check, BytesGen};
+use gbdi::value::WordSize;
+use gbdi::workloads;
+
+#[test]
+fn every_codec_roundtrips_every_workload_serial_and_parallel() {
+    for w in workloads::all() {
+        // 512 KiB: two 256 KiB chunks, so compress_parallel really chunks
+        let img = w.generate(1 << 19, 13);
+        for &kind in CodecKind::all() {
+            let codec = kind.build_for_image(&img, &GbdiConfig::default());
+            let serial = container::compress(codec.as_ref(), &img);
+            assert_eq!(
+                serial.decompress().unwrap(),
+                img,
+                "{} serial lossy on {}",
+                kind.name(),
+                w.name()
+            );
+            for threads in [2usize, 4] {
+                let par = container::compress_parallel(codec.as_ref(), &img, threads);
+                assert_eq!(
+                    par.block_bits,
+                    serial.block_bits,
+                    "{} parallel framing differs on {} ({threads} threads)",
+                    kind.name(),
+                    w.name()
+                );
+                assert_eq!(
+                    par.decompress().unwrap(),
+                    img,
+                    "{} parallel lossy on {} ({threads} threads)",
+                    kind.name(),
+                    w.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn container_bytes_roundtrip_every_codec() {
+    let img = workloads::by_name("mcf").unwrap().generate(1 << 19, 5);
+    for &kind in CodecKind::all() {
+        let codec = kind.build_for_image(&img, &GbdiConfig::default());
+        let comp = container::compress_parallel(codec.as_ref(), &img, 4);
+        let bytes = comp.to_bytes();
+        assert_eq!(bytes.len(), comp.total_len(), "{} total_len", kind.name());
+        let back = Container::from_bytes(&bytes).unwrap();
+        assert_eq!(back.codec_id, comp.codec_id);
+        assert_eq!(back.block_bits, comp.block_bits);
+        assert_eq!(back.chunk_blocks, comp.chunk_blocks);
+        // self-contained decode: the container alone rebuilds its decoder
+        assert_eq!(back.decompress().unwrap(), img, "{}", kind.name());
+    }
+}
+
+#[test]
+fn word_sizes_and_block_sizes_roundtrip_through_container() {
+    let img = workloads::by_name("omnetpp").unwrap().generate(1 << 17, 9);
+    for (ws, classes) in [
+        (WordSize::W32, vec![0u32, 4, 8, 12, 16, 20, 24]),
+        (WordSize::W64, vec![0u32, 4, 8, 16, 24, 32]),
+    ] {
+        for block_bytes in [32usize, 64, 128] {
+            let cfg = GbdiConfig {
+                word_size: ws,
+                width_classes: classes.clone(),
+                block_bytes,
+                ..Default::default()
+            };
+            let table = analyze::analyze_image(&img, &cfg);
+            let codec = GbdiCodec::new(table, cfg);
+            let comp = container::compress_parallel(&codec, &img, 4);
+            let back = Container::from_bytes(&comp.to_bytes()).unwrap();
+            assert_eq!(
+                back.decompress().unwrap(),
+                img,
+                "gbdi {ws:?} block={block_bytes}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_every_codec_roundtrips_arbitrary_bytes() {
+    let gen = BytesGen { max_len: 4096 };
+    for &kind in CodecKind::all() {
+        check(0xB10C ^ kind.name().len() as u64, 40, &gen, |data| {
+            let codec = kind.build_for_image(data, &GbdiConfig::default());
+            let comp = container::compress(codec.as_ref(), data);
+            match Container::from_bytes(&comp.to_bytes()) {
+                Ok(back) => back.decompress().map(|d| d == *data).unwrap_or(false),
+                Err(_) => false,
+            }
+        });
+    }
+}
+
+#[test]
+fn u16_block_bits_regression_oversized_blocks() {
+    // The retired GbdiWholeImage container stored per-block bit lengths as
+    // u16: any block compressing to more than 65535 bits (e.g. a raw
+    // 16 KiB block = 131074 bits) truncated silently and corrupted the
+    // stream. The unified container's u32 varints must carry them exactly.
+    let mut rng = Rng::new(0xB16);
+    let mut image = vec![0u8; 96 * 1024];
+    rng.fill_bytes(&mut image); // incompressible -> raw blocks
+    let cfg = GbdiConfig { block_bytes: 16384, ..Default::default() };
+    let table = analyze::analyze_image(&image, &cfg);
+    let codec = GbdiCodec::new(table, cfg);
+    let comp = container::compress(&codec, &image);
+    let max_bits = *comp.block_bits.iter().max().unwrap();
+    assert!(
+        max_bits > u16::MAX as u32,
+        "test must exercise >u16 block bits, got {max_bits}"
+    );
+    assert_eq!(max_bits as u64, 2 + 16384 * 8, "raw 16 KiB block");
+    let back = Container::from_bytes(&comp.to_bytes()).unwrap();
+    assert_eq!(back.block_bits, comp.block_bits, "bit lengths must survive exactly");
+    assert_eq!(back.decompress().unwrap(), image);
+}
+
+#[test]
+fn containers_distinguish_codecs_on_decode() {
+    // compress with one codec; the container remembers which, and a
+    // mismatched decoder is rejected instead of producing garbage
+    let img = workloads::by_name("svm").unwrap().generate(1 << 15, 3);
+    let cfg = GbdiConfig::default();
+    let bdi = CodecKind::Bdi.build_for_image(&img, &cfg);
+    let comp = container::compress(bdi.as_ref(), &img);
+    assert_eq!(comp.codec_id, CodecId::Bdi);
+    let fpc = CodecKind::Fpc.build_for_image(&img, &cfg);
+    assert!(container::decompress_with(&comp, fpc.as_ref()).is_err());
+    assert_eq!(container::decompress_with(&comp, bdi.as_ref()).unwrap(), img);
+    // and gbdi's legacy entry point refuses non-gbdi containers
+    assert!(gbdi::gbdi::decode::decompress_image(&comp).is_err());
+}
+
+#[test]
+fn estimate_matches_emitted_bits_for_every_codec() {
+    let img = workloads::by_name("fluidanimate").unwrap().generate(1 << 14, 21);
+    let cfg = GbdiConfig::default();
+    for &kind in CodecKind::all() {
+        let codec = kind.build_for_image(&img, &cfg);
+        let comp = container::compress(codec.as_ref(), &img);
+        for (i, block) in img.chunks(codec.block_bytes()).enumerate() {
+            assert_eq!(
+                codec.estimate_block_bits(block),
+                comp.block_bits[i] as u64,
+                "{} block {i}",
+                kind.name()
+            );
+        }
+    }
+}
