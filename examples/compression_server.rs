@@ -1,14 +1,16 @@
 //! Coordinator demo: stream pages from a mixed workload through the
 //! compression service while the background analyzer re-derives the
 //! global base table from sampled traffic (through the AOT JAX/Pallas
-//! k-means artifact when `artifacts/` exists, else the native fallback),
-//! then migrate old pages forward and report the table-version history.
+//! k-means artifact when `artifacts/` exists, else the mini-batch
+//! warm-start selector), then migrate old pages forward and report the
+//! table-version history.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example compression_server
 //! ```
 
-use gbdi::coordinator::{AnalyzerBackend, CompressionService, ServiceConfig};
+use gbdi::cluster::{ArtifactSelector, BaseSelector, MiniBatchSelector};
+use gbdi::coordinator::{CompressionService, ServiceConfig};
 use gbdi::report::{fmt_bytes, fmt_ratio};
 use gbdi::runtime::ArtifactRuntime;
 use gbdi::util::prng::Rng;
@@ -28,20 +30,21 @@ fn wait_for_version(svc: &CompressionService, version: u64) {
 }
 
 fn main() {
-    let backend = match ArtifactRuntime::new(ArtifactRuntime::default_dir()) {
+    let selector: Box<dyn BaseSelector> = match ArtifactRuntime::new(ArtifactRuntime::default_dir())
+    {
         Ok(rt) if rt.has_artifact("kmeans_k64") => {
-            println!("analyzer backend: AOT JAX/Pallas artifact via PJRT ({})", rt.platform());
-            AnalyzerBackend::Artifact(Arc::new(rt))
+            println!("analyzer selector: AOT JAX/Pallas artifact via PJRT ({})", rt.platform());
+            Box::new(ArtifactSelector::new(Arc::new(rt)))
         }
         _ => {
-            println!("analyzer backend: native Rust k-means (run `make artifacts` for PJRT)");
-            AnalyzerBackend::Native
+            println!("analyzer selector: mini-batch warm start (run `make artifacts` for PJRT)");
+            Box::new(MiniBatchSelector)
         }
     };
 
-    let svc = CompressionService::start(
+    let svc = CompressionService::start_with_selector(
         ServiceConfig { workers: 4, analyze_every: 96, ..Default::default() },
-        backend,
+        selector,
     )
     .expect("service start");
 

@@ -6,8 +6,8 @@
 //! `cargo bench --bench analysis` (artifact rows skip if `make artifacts`
 //! has not run).
 
-use gbdi::cluster::{kmeans, KmeansConfig, Metric};
-use gbdi::gbdi::{analyze, GbdiConfig};
+use gbdi::cluster::{kmeans, KmeansConfig, Metric, SelectorConfig, SelectorKind};
+use gbdi::gbdi::{analyze, GbdiConfig, GlobalBaseTable};
 use gbdi::runtime::{shape_samples, ArtifactRuntime, N_SAMPLES};
 use gbdi::util::bench::Bencher;
 use gbdi::util::prng::Rng;
@@ -60,7 +60,33 @@ fn main() {
     let euc = KmeansConfig { k: 63, iters: 16, metric: Metric::Euclidean, ..Default::default() };
     b.bench("native-kmeans/bitcost-metric", None, || kmeans(&samples, &bit));
     b.bench("native-kmeans/euclidean-metric", None, || kmeans(&samples, &euc));
+
+    // the selector engine: per-pass latency of every registered selector
+    // (cold), plus the mini-batch warm start against a serving table —
+    // the number drift-triggered re-analysis actually pays
+    println!();
+    let sel_cfg = SelectorConfig::from_gbdi(&cfg);
+    for &kind in SelectorKind::all() {
+        let mut sel = kind.build();
+        b.bench(&format!("selector/{}/cold", kind.name()), None, || {
+            sel.select(&samples, None, &sel_cfg).unwrap()
+        });
+    }
+    let incumbent = {
+        let selection =
+            SelectorKind::Lloyd.build().select(&samples, None, &sel_cfg).unwrap();
+        GlobalBaseTable::from_selection(&samples, &selection, &cfg, 1)
+    };
+    let mut warm = SelectorKind::MiniBatch.build();
+    b.bench("selector/minibatch/warm", None, || {
+        warm.select(&samples, Some(&incumbent), &sel_cfg).unwrap()
+    });
+
     std::fs::create_dir_all("target").ok();
     b.write_csv("target/analysis.csv").ok();
     println!("\ncsv: target/analysis.csv");
+    match b.write_bench_json("analysis") {
+        Ok(p) => println!("json: {}", p.display()),
+        Err(e) => eprintln!("json write failed: {e}"),
+    }
 }

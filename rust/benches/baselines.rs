@@ -65,4 +65,8 @@ fn main() {
     std::fs::create_dir_all("target").ok();
     b.write_csv("target/baselines_speed.csv").ok();
     println!("\ncsv: target/baselines_speed.csv");
+    match b.write_bench_json("baselines") {
+        Ok(p) => println!("json: {}", p.display()),
+        Err(e) => eprintln!("json write failed: {e}"),
+    }
 }

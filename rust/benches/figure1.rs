@@ -76,8 +76,17 @@ fn main() {
     let mut csv = String::from("workload,ratio\n");
     for (n, r) in &chart {
         csv.push_str(&format!("{n},{r:.4}\n"));
+        bencher.metric(&format!("ratio/{n}"), *r);
     }
+    bencher.metric("mean_ratio/c_workloads", mean(&c_ratios));
+    bencher.metric("mean_ratio/java", mean(&j_ratios));
+    bencher.metric("mean_ratio/overall", mean(&all));
+    bencher.metric("ratio/ideal_clusterable", ideal);
     std::fs::create_dir_all("target").ok();
     std::fs::write("target/figure1.csv", csv).ok();
     println!("\ncsv: target/figure1.csv");
+    match bencher.write_bench_json("figure1") {
+        Ok(p) => println!("json: {}", p.display()),
+        Err(e) => eprintln!("json write failed: {e}"),
+    }
 }

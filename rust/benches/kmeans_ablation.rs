@@ -1,88 +1,224 @@
-//! E4 — the paper's modified-k-means claim (§II.A): GBDI's bit-cost
-//! clustering "achieves higher compression ratios than unmodified
-//! Kmeans". Three arms, everything else fixed:
+//! E4 + E9 — clustering ablation, now across the whole base-selector
+//! engine.
 //!
-//! * modified — bit-cost assignment metric (the paper's algorithm)
-//! * unmodified — Euclidean assignment metric
-//! * uniform — K bases evenly spaced over the value range (no clustering)
+//! Arms (everything but the selector fixed):
+//!
+//! * lloyd — full bit-cost Lloyd k-means (the paper's modified
+//!   algorithm; the reference arm)
+//! * unmodified — Euclidean-metric Lloyd (the paper's ablation)
+//! * minibatch-warm — mini-batch k-means **warm-started from a table fit
+//!   on the previous epoch's sample** (the production configuration)
+//! * minibatch-cold — the same selector without an incumbent
+//! * histogram — frequency top-K bucket selector
+//! * uniform — K evenly spaced bases (no clustering at all)
+//!
+//! Each arm is scored on compression ratio over the nine paper workloads
+//! and on wall time per analysis pass (selector + width fitting — what
+//! the coordinator pays when drift detection fires). A phase-change
+//! experiment (fluidanimate traffic shifting to mcf) exercises the warm
+//! start under the adaptation scenario it exists for.
+//!
+//! Headline targets (reported in `BENCH_kmeans_ablation.json`):
+//! minibatch-warm >= 5x faster per pass than lloyd at <= 2% mean ratio
+//! loss.
 //!
 //! `cargo bench --bench kmeans_ablation`
 
-use gbdi::cluster::Metric;
-use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig};
+use gbdi::cluster::{BaseSelector, Metric, SelectorConfig, SelectorKind};
+use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig, GlobalBaseTable};
 use gbdi::report::Table;
 use gbdi::util::bench::Bencher;
 use gbdi::workloads;
+use std::time::Instant;
 
-fn ratio_with_table(img: &[u8], table: gbdi::gbdi::GlobalBaseTable, cfg: &GbdiConfig) -> f64 {
+fn ratio_with_table(img: &[u8], table: GlobalBaseTable, cfg: &GbdiConfig) -> f64 {
     let codec = GbdiCodec::new(table, cfg.clone());
     codec.compress_image(img).ratio()
+}
+
+/// Run one analysis pass `runs` times (selectors are deterministic for
+/// fixed inputs); returns the produced table and the best-of-runs wall
+/// time in milliseconds.
+fn timed(runs: usize, mut f: impl FnMut() -> GlobalBaseTable) -> (GlobalBaseTable, f64) {
+    let mut best = f64::INFINITY;
+    let mut table = None;
+    for _ in 0..runs.max(1) {
+        let t0 = Instant::now();
+        let t = f();
+        best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+        table = Some(t);
+    }
+    (table.expect("runs >= 1"), best)
+}
+
+/// One analysis pass: selector + width fitting (the swap scoring is the
+/// same O(n) for every arm and is excluded).
+fn analysis_pass(
+    selector: &mut dyn BaseSelector,
+    samples: &[u64],
+    incumbent: Option<&GlobalBaseTable>,
+    cfg: &GbdiConfig,
+    sel_cfg: &SelectorConfig,
+) -> GlobalBaseTable {
+    let selection = selector.select(samples, incumbent, sel_cfg).expect("native selector");
+    GlobalBaseTable::from_selection(samples, &selection, cfg, 0)
 }
 
 fn main() {
     let fast = std::env::var("GBDI_BENCH_FAST").is_ok_and(|v| v == "1");
     let size = if fast { 1 << 19 } else { 2 << 20 };
+    let runs = if fast { 2 } else { 3 };
     let cfg = GbdiConfig::default();
+    let sel_cfg = SelectorConfig::from_gbdi(&cfg);
+    let mut b = Bencher::new();
 
-    println!("== E4: clustering ablation ({} KiB per workload) ==\n", size >> 10);
-    let mut t = Table::new(&["workload", "modified", "unmodified", "uniform bases"]);
-    let mut wins_mod = 0;
-    let mut sums = [0.0f64; 3];
+    println!("== E4/E9: base-selector ablation ({} KiB per workload) ==\n", size >> 10);
+    const ARMS: [&str; 6] =
+        ["lloyd", "unmodified", "minibatch-warm", "minibatch-cold", "histogram", "uniform"];
+    let mut header: Vec<String> = vec!["workload".into()];
+    header.extend(ARMS.iter().map(|a| a.to_string()));
+    let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hrefs);
+    let mut ratio_sums = [0.0f64; 6];
+    let mut ms_sums = [0.0f64; 6];
+    let mut n_workloads = 0usize;
+
     for w in workloads::all() {
         let img = w.generate(size, 7);
         let samples = analyze::sample_image(&img, &cfg);
-        let modified = ratio_with_table(
-            &img,
-            analyze::analyze_samples_metric(&samples, &cfg, Metric::BitCost),
+        // the warm arm's incumbent: a lloyd table fit on the previous
+        // epoch's sample of the same workload (steady-state serving)
+        let prev_img = w.generate(size, 11);
+        let prev_samples = analyze::sample_image(&prev_img, &cfg);
+        let incumbent = analysis_pass(
+            &mut *SelectorKind::Lloyd.build(),
+            &prev_samples,
+            None,
             &cfg,
+            &sel_cfg,
         );
-        let unmodified = ratio_with_table(
-            &img,
-            analyze::analyze_samples_metric(&samples, &cfg, Metric::Euclidean),
-            &cfg,
-        );
-        let uniform = {
-            let k = cfg.num_bases as u64;
-            let centroids: Vec<u64> = (0..k).map(|i| i * (u32::MAX as u64 / k)).collect();
-            ratio_with_table(
-                &img,
-                analyze::table_from_centroids(&samples, &centroids, &cfg, 0),
-                &cfg,
-            )
-        };
-        if modified >= unmodified {
-            wins_mod += 1;
+
+        let mut ratios = [0.0f64; 6];
+        for (i, &arm) in ARMS.iter().enumerate() {
+            let (table, ms) = match arm {
+                "lloyd" => {
+                    let mut s = SelectorKind::Lloyd.build();
+                    timed(runs, || analysis_pass(&mut *s, &samples, None, &cfg, &sel_cfg))
+                }
+                "unmodified" => {
+                    let euc = SelectorConfig { metric: Metric::Euclidean, ..sel_cfg.clone() };
+                    let mut s = SelectorKind::Lloyd.build();
+                    timed(runs, || analysis_pass(&mut *s, &samples, None, &cfg, &euc))
+                }
+                "minibatch-warm" => {
+                    let mut s = SelectorKind::MiniBatch.build();
+                    timed(runs, || {
+                        analysis_pass(&mut *s, &samples, Some(&incumbent), &cfg, &sel_cfg)
+                    })
+                }
+                "minibatch-cold" => {
+                    let mut s = SelectorKind::MiniBatch.build();
+                    timed(runs, || analysis_pass(&mut *s, &samples, None, &cfg, &sel_cfg))
+                }
+                "histogram" => {
+                    let mut s = SelectorKind::Histogram.build();
+                    timed(runs, || analysis_pass(&mut *s, &samples, None, &cfg, &sel_cfg))
+                }
+                _ => {
+                    // uniform: K evenly spaced bases, no clustering
+                    let k = cfg.num_bases as u64;
+                    let centroids: Vec<u64> = (0..k).map(|i| i * (u32::MAX as u64 / k)).collect();
+                    timed(runs, || GlobalBaseTable::fit_from_centroids(&samples, &centroids, &cfg, 0))
+                }
+            };
+            ratios[i] = ratio_with_table(&img, table, &cfg);
+            ratio_sums[i] += ratios[i];
+            ms_sums[i] += ms;
+            b.metric(&format!("ratio/{}/{arm}", w.name()), ratios[i]);
+            b.metric(&format!("analysis_ms/{}/{arm}", w.name()), ms);
         }
-        sums[0] += modified;
-        sums[1] += unmodified;
-        sums[2] += uniform;
-        t.row(&[
-            w.name().into(),
-            format!("{modified:.3}"),
-            format!("{unmodified:.3}"),
-            format!("{uniform:.3}"),
-        ]);
+        n_workloads += 1;
+        let mut row = vec![w.name().to_string()];
+        row.extend(ratios.iter().map(|r| format!("{r:.3}")));
+        t.row(&row);
     }
-    t.row(&[
-        "MEAN".into(),
-        format!("{:.3}", sums[0] / 9.0),
-        format!("{:.3}", sums[1] / 9.0),
-        format!("{:.3}", sums[2] / 9.0),
-    ]);
+    let mut mean_row = vec!["MEAN ratio".to_string()];
+    mean_row.extend(ratio_sums.iter().map(|s| format!("{:.3}", s / n_workloads as f64)));
+    t.row(&mean_row);
+    let mut ms_row = vec!["MEAN pass ms".to_string()];
+    ms_row.extend(ms_sums.iter().map(|s| format!("{:.2}", s / n_workloads as f64)));
+    t.row(&ms_row);
     print!("{}", t.render());
+
+    let mean_ratio = |i: usize| ratio_sums[i] / n_workloads as f64;
+    let mean_ms = |i: usize| ms_sums[i] / n_workloads as f64;
+    for (i, &arm) in ARMS.iter().enumerate() {
+        b.metric(&format!("mean_ratio/{arm}"), mean_ratio(i));
+        b.metric(&format!("mean_analysis_ms/{arm}"), mean_ms(i));
+    }
+    let speedup = mean_ms(0) / mean_ms(2).max(1e-9);
+    let loss_pct = (1.0 - mean_ratio(2) / mean_ratio(0)) * 100.0;
+    b.metric("speedup/minibatch_warm_vs_lloyd", speedup);
+    b.metric("ratio_loss_pct/minibatch_warm_vs_lloyd", loss_pct);
     println!(
-        "\nmodified >= unmodified on {wins_mod}/9 workloads (paper claim: modified wins)"
+        "\nmodified (lloyd) >= unmodified on ratio: {} (paper claim: modified wins)",
+        if mean_ratio(0) >= mean_ratio(1) { "yes" } else { "NO" }
+    );
+    println!(
+        "minibatch-warm vs lloyd: {speedup:.1}x faster per pass, {loss_pct:.2}% mean ratio loss \
+         (targets: >=5x, <=2%) -> {}",
+        if speedup >= 5.0 && loss_pct <= 2.0 { "PASS" } else { "MISS" }
     );
 
-    // analysis-time cost of each arm
+    // phase change: incumbent fit on fluidanimate traffic, traffic is
+    // now mcf — the adaptation scenario the warm start exists for
+    println!("\n== phase change (fluidanimate -> mcf) ==");
+    let img_a = workloads::by_name("fluidanimate").unwrap().generate(size, 7);
+    let img_b = workloads::by_name("mcf").unwrap().generate(size, 7);
+    let samples_a = analyze::sample_image(&img_a, &cfg);
+    let samples_b = analyze::sample_image(&img_b, &cfg);
+    let stale =
+        analysis_pass(&mut *SelectorKind::Lloyd.build(), &samples_a, None, &cfg, &sel_cfg);
+    let stale_ratio = ratio_with_table(&img_b, stale.clone(), &cfg);
+    let mut warm_sel = SelectorKind::MiniBatch.build();
+    let (warm_table, warm_ms) =
+        timed(runs, || analysis_pass(&mut *warm_sel, &samples_b, Some(&stale), &cfg, &sel_cfg));
+    let warm_ratio = ratio_with_table(&img_b, warm_table, &cfg);
+    let mut lloyd_sel = SelectorKind::Lloyd.build();
+    let (lloyd_table, lloyd_ms) =
+        timed(runs, || analysis_pass(&mut *lloyd_sel, &samples_b, None, &cfg, &sel_cfg));
+    let lloyd_ratio = ratio_with_table(&img_b, lloyd_table, &cfg);
+    println!(
+        "stale table on new phase: {stale_ratio:.3}  |  warm re-analysis: {warm_ratio:.3} \
+         ({warm_ms:.2} ms)  |  full lloyd: {lloyd_ratio:.3} ({lloyd_ms:.2} ms)"
+    );
+    b.metric("phase_change/stale_ratio", stale_ratio);
+    b.metric("phase_change/minibatch_warm_ratio", warm_ratio);
+    b.metric("phase_change/minibatch_warm_ms", warm_ms);
+    b.metric("phase_change/lloyd_ratio", lloyd_ratio);
+    b.metric("phase_change/lloyd_ms", lloyd_ms);
+
+    // steady timing rows for the JSON results array (one workload)
     println!();
     let img = workloads::by_name("mcf").unwrap().generate(size, 7);
     let samples = analyze::sample_image(&img, &cfg);
-    let mut b = Bencher::new();
-    b.bench("analysis/modified-kmeans", None, || {
-        analyze::analyze_samples_metric(&samples, &cfg, Metric::BitCost)
+    let incumbent =
+        analysis_pass(&mut *SelectorKind::Lloyd.build(), &samples, None, &cfg, &sel_cfg);
+    let mut s = SelectorKind::Lloyd.build();
+    b.bench("analysis/lloyd/mcf", None, || {
+        analysis_pass(&mut *s, &samples, None, &cfg, &sel_cfg)
     });
-    b.bench("analysis/unmodified-kmeans", None, || {
-        analyze::analyze_samples_metric(&samples, &cfg, Metric::Euclidean)
+    let mut s = SelectorKind::MiniBatch.build();
+    b.bench("analysis/minibatch-warm/mcf", None, || {
+        analysis_pass(&mut *s, &samples, Some(&incumbent), &cfg, &sel_cfg)
     });
+    let mut s = SelectorKind::Histogram.build();
+    b.bench("analysis/histogram/mcf", None, || {
+        analysis_pass(&mut *s, &samples, None, &cfg, &sel_cfg)
+    });
+
+    match b.write_bench_json("kmeans_ablation") {
+        Ok(p) => println!("\njson: {}", p.display()),
+        Err(e) => eprintln!("json write failed: {e}"),
+    }
 }

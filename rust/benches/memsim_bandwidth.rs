@@ -9,6 +9,7 @@
 use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig};
 use gbdi::memsim::{replay, trace, CompressedMemory, DramModel, TraceKind};
 use gbdi::report::Table;
+use gbdi::util::bench::Bencher;
 use gbdi::workloads;
 
 fn main() {
@@ -72,4 +73,11 @@ fn main() {
         "speedup at 60% memory-bound {:.3}x (claim shape: 1.1x performance)",
         1.0 / ((1.0 - 0.6) + 0.6 / mean)
     );
+    let mut b = Bencher::new();
+    b.metric("mean_streaming_amplification", mean);
+    b.metric("speedup_at_0.6_memory_bound", 1.0 / ((1.0 - 0.6) + 0.6 / mean));
+    match b.write_bench_json("memsim_bandwidth") {
+        Ok(p) => println!("json: {}", p.display()),
+        Err(e) => eprintln!("json write failed: {e}"),
+    }
 }

@@ -8,6 +8,7 @@ use gbdi::baselines::ratio_of;
 use gbdi::baselines::GbdiWholeImage;
 use gbdi::gbdi::GbdiConfig;
 use gbdi::report::Table;
+use gbdi::util::bench::Bencher;
 use gbdi::workloads;
 
 fn ratio(img: &[u8], cfg: GbdiConfig) -> f64 {
@@ -18,6 +19,7 @@ fn main() {
     let fast = std::env::var("GBDI_BENCH_FAST").is_ok_and(|v| v == "1");
     let size = if fast { 1 << 19 } else { 2 << 20 };
     let loads = ["mcf", "triangle_count", "fluidanimate"];
+    let mut bencher = Bencher::new();
 
     // --- K sweep ------------------------------------------------------
     println!("== E6a: number of global bases (K), {} KiB ==\n", size >> 10);
@@ -30,10 +32,9 @@ fn main() {
         let img = workloads::by_name(name).unwrap().generate(size, 7);
         let mut row = vec![name.to_string()];
         for &k in &ks {
-            row.push(format!(
-                "{:.3}",
-                ratio(&img, GbdiConfig { num_bases: k, ..Default::default() })
-            ));
+            let r = ratio(&img, GbdiConfig { num_bases: k, ..Default::default() });
+            bencher.metric(&format!("ratio/{name}/K={k}"), r);
+            row.push(format!("{r:.3}"));
         }
         t.row(&row);
     }
@@ -100,4 +101,8 @@ fn main() {
         t.row(&row);
     }
     print!("{}", t.render());
+    match bencher.write_bench_json("sensitivity") {
+        Ok(p) => println!("\njson: {}", p.display()),
+        Err(e) => eprintln!("json write failed: {e}"),
+    }
 }

@@ -49,4 +49,8 @@ fn main() {
     std::fs::create_dir_all("target").ok();
     b.write_csv("target/throughput.csv").ok();
     println!("\ncsv: target/throughput.csv");
+    match b.write_bench_json("throughput") {
+        Ok(p) => println!("json: {}", p.display()),
+        Err(e) => eprintln!("json write failed: {e}"),
+    }
 }

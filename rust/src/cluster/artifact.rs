@@ -1,0 +1,128 @@
+//! The AOT JAX/Pallas k-means (executed through PJRT) as just another
+//! [`BaseSelector`] — the analyzer no longer special-cases it.
+//!
+//! The artifact runs a fixed-shape f32 k-means (`crate::runtime`): the
+//! selector shims arbitrary sample counts to the artifact's shape,
+//! seeds the initial centroids (from the incumbent table when one is
+//! serving — the warm start travels through the same seam as the native
+//! selectors), executes the compiled HLO, and snaps the f32 centroids
+//! back to exact word values (the f32→word precision hand-off,
+//! DESIGN.md §5).
+//!
+//! Without the `pjrt` cargo feature (or without `artifacts/` built),
+//! [`ArtifactRuntime`] construction or execution fails and callers fall
+//! back to a native selector — see `gbdi serve --selector artifact`.
+
+use super::{
+    degenerate_selection, finalize_centroids, selection_cost, BaseSelector, Selection,
+    SelectorConfig,
+};
+use crate::gbdi::table::GlobalBaseTable;
+use crate::runtime::{shape_samples, ArtifactRuntime, KMEANS_KS};
+use crate::util::prng::Rng;
+use crate::value::WordSize;
+use std::sync::Arc;
+
+/// PJRT-artifact selector (see module docs).
+pub struct ArtifactSelector {
+    rt: Arc<ArtifactRuntime>,
+}
+
+impl ArtifactSelector {
+    /// Selector over an already-started PJRT runtime.
+    pub fn new(rt: Arc<ArtifactRuntime>) -> Self {
+        ArtifactSelector { rt }
+    }
+}
+
+impl BaseSelector for ArtifactSelector {
+    fn name(&self) -> &'static str {
+        "artifact(pjrt)"
+    }
+
+    fn select(
+        &mut self,
+        samples: &[u64],
+        incumbent: Option<&GlobalBaseTable>,
+        cfg: &SelectorConfig,
+    ) -> crate::Result<Selection> {
+        if samples.is_empty() {
+            return Ok(degenerate_selection());
+        }
+        // fresh, seed-derived RNG per call: the trait promises
+        // deterministic selections for a given (samples, incumbent, cfg)
+        let mut rng = Rng::new(cfg.seed ^ 0xA27F_5EED);
+        // choose the largest available artifact K that fits the budget
+        let ak = *KMEANS_KS
+            .iter()
+            .filter(|&&a| a <= cfg.k.max(KMEANS_KS[0]))
+            .max()
+            .unwrap_or(&KMEANS_KS[0]);
+        let warm = incumbent.is_some_and(|t| t.len() >= 2);
+        // Warm start: seed from the incumbent's bases, skipping base 0 —
+        // `GlobalBaseTable::new` pins a zero base into every table, so
+        // zero stays covered downstream while a real high base is not
+        // evicted from the K-capped seed list here.
+        let mut init: Vec<f32> = match incumbent {
+            Some(t) if t.len() >= 2 => t
+                .entries()
+                .iter()
+                .map(|e| e.base)
+                .filter(|&b| b != 0)
+                .map(|b| b as f32)
+                .take(ak)
+                .collect(),
+            _ => Vec::new(),
+        };
+        while init.len() < ak {
+            init.push(samples[rng.below(samples.len() as u64) as usize] as f32);
+        }
+        let x = shape_samples(samples);
+        let fit = self.rt.kmeans(&x, &init)?;
+        let centroids: Vec<u64> = fit
+            .centroids
+            .iter()
+            .zip(&fit.counts)
+            .filter(|&(_, &n)| n > 0.0)
+            .map(|(&c, _)| snap_word(c, cfg.word_size))
+            .collect();
+        let centroids = finalize_centroids(centroids);
+        let cost = selection_cost(samples, &centroids, cfg);
+        Ok(Selection { centroids, cost, iters_run: cfg.iters, warm_started: warm })
+    }
+}
+
+/// Snap an f32 centroid back to an exact word value (clamped to the word
+/// range) — the precision hand-off from the f32 analysis plane to the
+/// exact codec (DESIGN.md §5).
+pub fn snap_word(c: f32, ws: WordSize) -> u64 {
+    let max = match ws {
+        WordSize::W32 => u32::MAX as u64,
+        WordSize::W64 => u64::MAX,
+    };
+    let c = c as f64;
+    if c <= 0.0 {
+        0
+    } else if c >= max as f64 {
+        max
+    } else {
+        c.round() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snap_word_clamps() {
+        assert_eq!(snap_word(-5.0, WordSize::W32), 0);
+        assert_eq!(snap_word(5e12, WordSize::W32), u32::MAX as u64);
+        assert_eq!(snap_word(1000.4, WordSize::W32), 1000);
+        assert_eq!(snap_word(5e12, WordSize::W64), 5_000_000_000_000);
+    }
+
+    // Execution paths need built artifacts; they are covered by
+    // rust/tests/runtime_artifacts.rs, which skips gracefully when
+    // `artifacts/` is absent.
+}

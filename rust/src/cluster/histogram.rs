@@ -1,0 +1,99 @@
+//! Frequency top-K bucket selector — the near-free [`BaseSelector`].
+//!
+//! One pass bins every sample by its high bits (bucket width matched to
+//! the largest delta class, so a bucket's mean can cover its members),
+//! then proposes the means of the K most populated buckets as bases. No
+//! iteration, no distance computations — `O(n + B log B)` total.
+//!
+//! This is weak on smooth/continuous populations (it quantizes the value
+//! space), but strong on pointer-heavy workloads (the paper's Java
+//! group): heap references pile up in a handful of allocation regions, so
+//! the occupancy histogram *is* the cluster structure.
+
+use super::{
+    degenerate_selection, finalize_centroids, selection_cost, BaseSelector, Selection,
+    SelectorConfig,
+};
+use crate::gbdi::table::GlobalBaseTable;
+use std::collections::BTreeMap;
+
+/// Top-K occupancy-histogram selector (see module docs).
+pub struct HistogramSelector;
+
+impl BaseSelector for HistogramSelector {
+    fn name(&self) -> &'static str {
+        "histogram"
+    }
+
+    fn select(
+        &mut self,
+        samples: &[u64],
+        _incumbent: Option<&GlobalBaseTable>,
+        cfg: &SelectorConfig,
+    ) -> crate::Result<Selection> {
+        if samples.is_empty() {
+            return Ok(degenerate_selection());
+        }
+        // Bucket width ~ the largest class's coverage (2^(w-1) either
+        // side), so members of a full bucket fit a delta against its mean.
+        let max_class = cfg.width_classes.last().copied().unwrap_or(cfg.word_size.bits());
+        let shift = max_class.saturating_sub(1).clamp(4, cfg.word_size.bits() - 1);
+        let mut buckets: BTreeMap<u64, (u64, u128)> = BTreeMap::new();
+        for &v in samples {
+            let e = buckets.entry(v >> shift).or_insert((0, 0));
+            e.0 += 1;
+            e.1 += v as u128;
+        }
+        // Most-populated first; ties break on the bucket key so the
+        // proposal is deterministic.
+        let mut ranked: Vec<(u64, u64, u128)> =
+            buckets.into_iter().map(|(key, (n, sum))| (key, n, sum)).collect();
+        ranked.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let centroids: Vec<u64> = ranked
+            .into_iter()
+            .take(cfg.k.max(1))
+            .map(|(_, n, sum)| (sum / n as u128) as u64)
+            .collect();
+        let centroids = finalize_centroids(centroids);
+        let cost = selection_cost(samples, &centroids, cfg);
+        Ok(Selection { centroids, cost, iters_run: 1, warm_started: false })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::apply_delta;
+    use crate::util::prng::Rng;
+    use crate::value::WordSize;
+
+    #[test]
+    fn finds_occupied_regions() {
+        // two dense "allocation regions" plus scattered noise
+        let mut rng = Rng::new(4);
+        let mut samples = Vec::new();
+        for _ in 0..1000 {
+            samples.push(apply_delta(0x4000_0000, rng.range_i64(-500, 500), WordSize::W32));
+            samples.push(apply_delta(0xC000_0000, rng.range_i64(-500, 500), WordSize::W32));
+        }
+        for _ in 0..50 {
+            samples.push(rng.next_u32() as u64);
+        }
+        let cfg = SelectorConfig { k: 4, ..Default::default() };
+        let s = HistogramSelector.select(&samples, None, &cfg).unwrap();
+        let near = |target: u64| {
+            s.centroids.iter().any(|&c| (c as i64 - target as i64).abs() < 1 << 20)
+        };
+        assert!(near(0x4000_0000), "centroids {:?}", s.centroids);
+        assert!(near(0xC000_0000), "centroids {:?}", s.centroids);
+        assert_eq!(s.iters_run, 1);
+    }
+
+    #[test]
+    fn respects_k_budget() {
+        let samples: Vec<u64> = (0..4096u64).map(|i| i * 1_000_003).collect();
+        let cfg = SelectorConfig { k: 8, ..Default::default() };
+        let s = HistogramSelector.select(&samples, None, &cfg).unwrap();
+        assert!(s.centroids.len() <= 8, "{} centroids", s.centroids.len());
+    }
+}

@@ -1,33 +1,19 @@
-//! K-means clustering over memory word values — GBDI's "background data
-//! analysis" step that establishes the global bases.
+//! Full Lloyd k-means over memory word values — the paper's algorithm
+//! and the selector engine's reference arm ([`LloydSelector`]).
 //!
-//! Two assignment metrics are provided:
-//!
-//! * [`Metric::Euclidean`] — textbook Lloyd's k-means (the paper's
-//!   "unmodified Kmeans" ablation arm).
-//! * [`Metric::BitCost`] — GBDI's *modified* k-means: the distance between
-//!   a value and a candidate base is the **encoded size** of their delta
-//!   (the smallest width class that can hold it; outliers cost a full
-//!   word). This directly optimizes what the codec pays per value.
-//!
-//! This module is the pure-Rust reference/fallback; the production path
-//! runs the same algorithm as an AOT-compiled JAX/Pallas artifact through
-//! [`crate::runtime`] (see `python/compile/`), with this implementation as
-//! the correctness oracle and the ablation baseline.
+//! Runs cold every pass: k-means++ seeding, then `iters` full
+//! assignment/update sweeps under the configured [`Metric`]. The
+//! mini-batch selector (`super::minibatch`) trades a little quality for
+//! an order of magnitude less work; this implementation is the
+//! correctness oracle and the quality ceiling the benches compare
+//! against. The same algorithm also ships as an AOT-compiled JAX/Pallas
+//! artifact executed through [`crate::runtime`] (`super::artifact`).
 
-use crate::util::bits::signed_width;
+use super::{
+    point_cost as cost, wrapping_delta, BaseSelector, Metric, Selection, SelectorConfig,
+};
 use crate::util::prng::Rng;
 use crate::value::WordSize;
-
-/// Assignment metric.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Metric {
-    /// |v - c| (the paper's unmodified k-means arm).
-    Euclidean,
-    /// Encoded bits of the delta under the codec's width classes
-    /// (the paper's modified k-means).
-    BitCost,
-}
 
 /// Clustering configuration.
 #[derive(Debug, Clone)]
@@ -73,50 +59,6 @@ pub struct KmeansResult {
     pub inertia: f64,
     /// Iterations actually run (stops early on convergence).
     pub iters_run: usize,
-}
-
-/// Wrapping signed delta `v - c` at word granularity: the delta the codec
-/// will store, sign-extended to i64. Reconstruction is exact under
-/// wrapping addition at the same width.
-#[inline]
-pub fn wrapping_delta(v: u64, c: u64, ws: WordSize) -> i64 {
-    match ws {
-        WordSize::W32 => (v as u32).wrapping_sub(c as u32) as i32 as i64,
-        WordSize::W64 => v.wrapping_sub(c) as i64,
-    }
-}
-
-/// Inverse of [`wrapping_delta`]: reconstruct `v` from base and delta.
-#[inline]
-pub fn apply_delta(c: u64, d: i64, ws: WordSize) -> u64 {
-    match ws {
-        WordSize::W32 => (c as u32).wrapping_add(d as u32) as u64,
-        WordSize::W64 => c.wrapping_add(d as u64),
-    }
-}
-
-/// Smallest width class (from sorted `classes`) that can hold signed `d`
-/// in offset-binary, or `None` if `d` needs more bits than the largest
-/// class. Class 0 means exact match (d == 0).
-#[inline]
-pub fn fit_class(classes: &[u32], d: i64) -> Option<u32> {
-    let need = signed_width(d);
-    classes.iter().copied().find(|&c| c >= need)
-}
-
-/// Per-value cost of assigning `v` to base `c` under `metric`:
-/// * Euclidean — |delta| as f64.
-/// * BitCost — encoded delta bits, or `outlier_bits` when no class fits.
-#[inline]
-fn cost(v: u64, c: u64, metric: Metric, classes: &[u32], ws: WordSize, outlier_bits: u32) -> f64 {
-    let d = wrapping_delta(v, c, ws);
-    match metric {
-        Metric::Euclidean => (d as f64).abs(),
-        Metric::BitCost => match fit_class(classes, d) {
-            Some(w) => w as f64,
-            None => outlier_bits as f64,
-        },
-    }
 }
 
 /// k-means++ seeding: first center uniform, subsequent centers sampled
@@ -166,7 +108,7 @@ pub fn kmeans(samples: &[u64], cfg: &KmeansConfig) -> KmeansResult {
     if samples.is_empty() {
         return KmeansResult { centroids: vec![0], counts: vec![0], inertia: 0.0, iters_run: 0 };
     }
-    let outlier_bits = cfg.word_size.bits() + 8;
+    let outlier_bits = super::outlier_bits(cfg.word_size);
     let mut rng = Rng::new(cfg.seed);
     let mut centers = seed_centers(samples, cfg, &mut rng, outlier_bits);
     let mut assign = vec![0u32; samples.len()];
@@ -252,9 +194,43 @@ pub fn kmeans(samples: &[u64], cfg: &KmeansConfig) -> KmeansResult {
     KmeansResult { centroids, counts, inertia, iters_run }
 }
 
+/// The reference [`BaseSelector`]: full Lloyd k-means, re-seeded cold on
+/// every pass (the incumbent is ignored). Highest quality, highest cost.
+pub struct LloydSelector;
+
+impl BaseSelector for LloydSelector {
+    fn name(&self) -> &'static str {
+        "lloyd"
+    }
+
+    fn select(
+        &mut self,
+        samples: &[u64],
+        _incumbent: Option<&crate::gbdi::table::GlobalBaseTable>,
+        cfg: &SelectorConfig,
+    ) -> crate::Result<Selection> {
+        let kcfg = KmeansConfig {
+            k: cfg.k,
+            iters: cfg.iters,
+            metric: cfg.metric,
+            width_classes: cfg.width_classes.clone(),
+            word_size: cfg.word_size,
+            seed: cfg.seed,
+        };
+        let r = kmeans(samples, &kcfg);
+        Ok(Selection {
+            centroids: r.centroids,
+            cost: r.inertia,
+            iters_run: r.iters_run,
+            warm_started: false,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::{apply_delta, fit_class};
 
     fn cfg(k: usize, metric: Metric) -> KmeansConfig {
         KmeansConfig { k, iters: 20, metric, seed: 42, ..Default::default() }

@@ -19,9 +19,15 @@
 //! workers = 4
 //! analyze_every = 256
 //! sample_words = 8192
+//!
+//! [analyzer]
+//! selector = "minibatch"     # lloyd | minibatch | histogram
+//! drift_margin = 1.02
+//! swap_margin = 0.98
 //! ```
 
 use crate::cli::parse_u64;
+use crate::cluster::SelectorKind;
 use crate::coordinator::ServiceConfig;
 use crate::gbdi::GbdiConfig;
 use crate::value::WordSize;
@@ -175,10 +181,24 @@ impl ConfigFile {
         Ok(cfg)
     }
 
-    /// Build a [`ServiceConfig`] from `[service]` (+ the `[codec]`
-    /// section for the embedded codec config).
+    /// Build a [`ServiceConfig`] from `[service]` + `[analyzer]` (+ the
+    /// `[codec]` section for the embedded codec config).
     pub fn service_config(&self) -> Result<ServiceConfig, String> {
         let d = ServiceConfig::default();
+        let selector = match self.get("analyzer", "selector") {
+            None => d.selector,
+            Some(Value::Str(s)) => SelectorKind::parse(s)
+                .ok_or_else(|| format!("analyzer.selector: unknown selector '{s}'"))?,
+            Some(v) => return Err(format!("analyzer.selector: expected string, got {v:?}")),
+        };
+        let drift_margin = self.get_f64("analyzer", "drift_margin", d.drift_margin)?;
+        if drift_margin < 1.0 {
+            return Err(format!("analyzer.drift_margin: {drift_margin} must be >= 1.0"));
+        }
+        let swap_margin = self.get_f64("analyzer", "swap_margin", d.swap_margin)?;
+        if !(0.0..=1.0).contains(&swap_margin) {
+            return Err(format!("analyzer.swap_margin: {swap_margin} must be in [0, 1]"));
+        }
         Ok(ServiceConfig {
             codec: self.codec_config()?,
             workers: self.get_u64("service", "workers", d.workers as u64)? as usize,
@@ -187,6 +207,9 @@ impl ConfigFile {
             recompress_batch: self
                 .get_u64("service", "recompress_batch", d.recompress_batch as u64)?
                 as usize,
+            selector,
+            drift_margin,
+            swap_margin,
         })
     }
 
@@ -214,6 +237,10 @@ seed = 0xDEAD_BEEF
 [service]
 workers = 8
 analyze_every = 1k
+
+[analyzer]
+selector = "minibatch"
+drift_margin = 1.05
 "#;
 
     #[test]
@@ -247,6 +274,25 @@ analyze_every = 1k
         assert_eq!(cfg.workers, 8);
         assert_eq!(cfg.analyze_every, 1024);
         assert_eq!(cfg.codec.block_bytes, 128);
+        assert_eq!(cfg.selector, SelectorKind::MiniBatch);
+        assert!((cfg.drift_margin - 1.05).abs() < 1e-12);
+        // unspecified analyzer keys keep their defaults
+        assert!((cfg.swap_margin - ServiceConfig::default().swap_margin).abs() < 1e-12);
+    }
+
+    #[test]
+    fn analyzer_section_validates() {
+        let c = ConfigFile::parse("[analyzer]\nselector = \"bogus\"").unwrap();
+        assert!(c.service_config().is_err());
+        let c = ConfigFile::parse("[analyzer]\nselector = 3").unwrap();
+        assert!(c.service_config().is_err());
+        let c = ConfigFile::parse("[analyzer]\ndrift_margin = 0.5").unwrap();
+        assert!(c.service_config().is_err());
+        let c = ConfigFile::parse("[analyzer]\nswap_margin = 1.5").unwrap();
+        assert!(c.service_config().is_err());
+        // defaults when the section is absent
+        let c = ConfigFile::parse("").unwrap().service_config().unwrap();
+        assert_eq!(c.selector, ServiceConfig::default().selector);
     }
 
     #[test]

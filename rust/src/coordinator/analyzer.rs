@@ -1,62 +1,66 @@
 //! Background analyzer: turns sampled traffic into candidate global base
 //! tables, scores them against the incumbent, and decides swaps.
 //!
-//! The clustering itself runs on one of two backends:
+//! The clustering itself runs on any [`BaseSelector`] — full Lloyd
+//! k-means, mini-batch with incumbent warm start, the histogram
+//! selector, or the AOT JAX/Pallas artifact through PJRT
+//! ([`crate::cluster::ArtifactSelector`]); the analyzer no longer
+//! special-cases backends. The back half is always shared: centroids →
+//! width-class fitting → [`GlobalBaseTable`]
+//! ([`GlobalBaseTable::from_selection`]), and a candidate only replaces
+//! the incumbent if it shrinks the estimated encoded size of the current
+//! sample by at least `swap_margin`.
 //!
-//! * [`AnalyzerBackend::Artifact`] — the AOT-compiled JAX/Pallas k-means
-//!   through PJRT ([`crate::runtime::ArtifactRuntime`]); the production
-//!   configuration.
-//! * [`AnalyzerBackend::Native`] — the pure-Rust `cluster::kmeans`
-//!   (fallback when `artifacts/` is absent, and the ablation arm).
-//!
-//! Either way the back half is shared: centroids → width-class fitting →
-//! [`GlobalBaseTable`] (see `gbdi::analyze::table_from_centroids`), and a
-//! candidate only replaces the incumbent if it shrinks the estimated
-//! encoded size of the current sample by at least `swap_margin`.
+//! On top of selection sits **drift detection**: once a table has been
+//! adopted, the analyzer remembers how well it scored on the traffic it
+//! was adopted for ([`Analyzer::note_adopted`]). While fresh samples
+//! still score within `drift_margin` of that baseline, re-clustering is
+//! skipped entirely ([`Analyzer::should_recluster`]) — scoring a
+//! reservoir under the incumbent is one `O(n)` pass, so a stable
+//! workload pays near-zero analysis cost and only a real phase change
+//! triggers the selector.
 
-use crate::cluster::{kmeans, KmeansConfig, Metric};
-use crate::gbdi::analyze::table_from_centroids;
+use crate::cluster::{BaseSelector, LloydSelector, Selection, SelectorConfig};
 use crate::gbdi::table::GlobalBaseTable;
 use crate::gbdi::GbdiConfig;
-use crate::runtime::{shape_samples, ArtifactRuntime, KMEANS_KS, N_SAMPLES};
-use crate::util::prng::Rng;
 use crate::Result;
-use std::sync::Arc;
 
-/// Which engine runs the clustering.
-pub enum AnalyzerBackend {
-    /// AOT JAX/Pallas artifact via PJRT.
-    Artifact(Arc<ArtifactRuntime>),
-    /// Pure-Rust k-means.
-    Native,
-}
-
-impl AnalyzerBackend {
-    /// Human-readable backend name (for logs/metrics).
-    pub fn name(&self) -> &'static str {
-        match self {
-            AnalyzerBackend::Artifact(_) => "artifact(pjrt)",
-            AnalyzerBackend::Native => "native(rust)",
-        }
-    }
-}
-
-/// The analyzer: owns the backend and the scoring policy.
+/// The analyzer: owns the selector and the scoring policy.
 pub struct Analyzer {
-    backend: AnalyzerBackend,
+    selector: Box<dyn BaseSelector>,
     config: GbdiConfig,
+    sel_cfg: SelectorConfig,
     /// A candidate must beat the incumbent's estimated bits by this
     /// factor to be swapped in (hysteresis against churn).
     pub swap_margin: f64,
-    rng: Rng,
+    /// Re-clustering is skipped while fresh samples score within this
+    /// factor of the adopted table's baseline bits/word (drift
+    /// detection); > 1.0, where 1.02 means "tolerate 2% degradation".
+    pub drift_margin: f64,
+    /// Bits/word the incumbent scored when it was adopted (None until a
+    /// table has been adopted — a trivial initial table never blocks
+    /// analysis).
+    baseline_bits_per_word: Option<f64>,
 }
 
 impl Analyzer {
-    /// New analyzer. `config.num_bases` selects the artifact K (rounded
-    /// down to an available artifact when using the PJRT backend).
-    pub fn new(backend: AnalyzerBackend, config: GbdiConfig) -> Self {
-        let seed = config.seed;
-        Analyzer { backend, config, swap_margin: 0.98, rng: Rng::new(seed) }
+    /// New analyzer over `selector`. `config` supplies the base budget,
+    /// width classes, and the selector knobs ([`SelectorConfig::from_gbdi`]).
+    pub fn new(selector: Box<dyn BaseSelector>, config: GbdiConfig) -> Self {
+        let sel_cfg = SelectorConfig::from_gbdi(&config);
+        Analyzer {
+            selector,
+            config,
+            sel_cfg,
+            swap_margin: 0.98,
+            drift_margin: 1.02,
+            baseline_bits_per_word: None,
+        }
+    }
+
+    /// Convenience: the reference configuration (full Lloyd k-means).
+    pub fn native(config: GbdiConfig) -> Self {
+        Analyzer::new(Box::new(LloydSelector), config)
     }
 
     /// The codec config this analyzer builds tables for.
@@ -64,62 +68,47 @@ impl Analyzer {
         &self.config
     }
 
-    /// Seed `k` initial centroids from the sample (cheap k-means++-lite:
-    /// random distinct picks plus the zero base's neighbourhood) — the
-    /// contract the kmeans artifact expects.
-    fn seed_init(&mut self, samples: &[u64], k: usize) -> Vec<f32> {
-        let mut init = Vec::with_capacity(k);
-        if samples.is_empty() {
-            return vec![0.0; k];
-        }
-        for _ in 0..k {
-            init.push(samples[self.rng.below(samples.len() as u64) as usize] as f32);
-        }
-        init
+    /// Run one analysis over `samples` (word values), producing a table
+    /// at `version`. Cold start — no incumbent is passed to the selector.
+    pub fn analyze(&mut self, samples: &[u64], version: u64) -> Result<GlobalBaseTable> {
+        self.analyze_warm(samples, None, version)
     }
 
-    /// Run one analysis over `samples` (word values), producing a table
-    /// at `version`.
-    pub fn analyze(&mut self, samples: &[u64], version: u64) -> Result<GlobalBaseTable> {
-        let k = self.config.num_bases.saturating_sub(1).max(1);
-        // clone the Arc up front so the backend borrow does not pin `self`
-        let artifact_rt = match &self.backend {
-            AnalyzerBackend::Artifact(rt) => Some(Arc::clone(rt)),
-            AnalyzerBackend::Native => None,
-        };
-        let centroids: Vec<u64> = match artifact_rt {
-            Some(rt) => {
-                // choose the largest available artifact K that fits
-                let ak = *KMEANS_KS
-                    .iter()
-                    .filter(|&&a| a <= k.max(KMEANS_KS[0]))
-                    .max()
-                    .unwrap_or(&KMEANS_KS[0]);
-                let x = shape_samples(samples);
-                debug_assert_eq!(x.len(), N_SAMPLES);
-                let init = self.seed_init(samples, ak);
-                let fit = rt.kmeans(&x, &init)?;
-                fit.centroids
-                    .iter()
-                    .zip(&fit.counts)
-                    .filter(|&(_, &n)| n > 0.0)
-                    .map(|(&c, _)| snap_word(c, &self.config))
-                    .collect()
+    /// Run one analysis, letting incremental selectors warm-start from
+    /// the incumbent table.
+    pub fn analyze_warm(
+        &mut self,
+        samples: &[u64],
+        incumbent: Option<&GlobalBaseTable>,
+        version: u64,
+    ) -> Result<GlobalBaseTable> {
+        let selection: Selection = self.selector.select(samples, incumbent, &self.sel_cfg)?;
+        Ok(GlobalBaseTable::from_selection(samples, &selection, &self.config, version))
+    }
+
+    /// Drift detection: does `incumbent` still score close enough to the
+    /// traffic it was adopted for that re-clustering can be skipped?
+    /// Always true until a table has been adopted ([`Self::note_adopted`]).
+    pub fn should_recluster(&self, samples: &[u64], incumbent: &GlobalBaseTable) -> bool {
+        if samples.is_empty() {
+            return false;
+        }
+        match self.baseline_bits_per_word {
+            None => true,
+            Some(baseline) => {
+                let current = self.estimate_bits(samples, incumbent) as f64 / samples.len() as f64;
+                current > baseline * self.drift_margin
             }
-            None => {
-                let kcfg = KmeansConfig {
-                    k,
-                    iters: self.config.analysis_iters,
-                    metric: Metric::BitCost,
-                    width_classes: self.config.width_classes.clone(),
-                    word_size: self.config.word_size,
-                    seed: self.config.seed,
-                };
-                kmeans(samples, &kcfg).centroids
-            }
-        };
-        let centroids = if centroids.is_empty() { vec![0] } else { centroids };
-        Ok(table_from_centroids(samples, &centroids, &self.config, version))
+        }
+    }
+
+    /// Record that `table` was adopted for traffic that looks like
+    /// `samples` — the drift-detection baseline.
+    pub fn note_adopted(&mut self, samples: &[u64], table: &GlobalBaseTable) {
+        if !samples.is_empty() {
+            self.baseline_bits_per_word =
+                Some(self.estimate_bits(samples, table) as f64 / samples.len() as f64);
+        }
     }
 
     /// Estimated encoded bits of `samples` under `table` (exact L3
@@ -156,34 +145,17 @@ impl Analyzer {
         (new as f64) < (old as f64) * self.swap_margin
     }
 
-    /// Backend name (diagnostics).
-    pub fn backend_name(&self) -> &'static str {
-        self.backend.name()
-    }
-}
-
-/// Snap an f32 centroid back to an exact word value (clamped to the word
-/// range) — the precision hand-off from the f32 analysis plane to the
-/// exact codec (DESIGN.md §5).
-fn snap_word(c: f32, config: &GbdiConfig) -> u64 {
-    let max = match config.word_size {
-        crate::value::WordSize::W32 => u32::MAX as u64,
-        crate::value::WordSize::W64 => u64::MAX,
-    };
-    let c = c as f64;
-    if c <= 0.0 {
-        0
-    } else if c >= max as f64 {
-        max
-    } else {
-        c.round() as u64
+    /// Selector name (diagnostics).
+    pub fn selector_name(&self) -> &'static str {
+        self.selector.name()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::apply_delta;
+    use crate::cluster::{apply_delta, MiniBatchSelector, SelectorKind};
+    use crate::util::prng::Rng;
     use crate::value::WordSize;
 
     fn mixture(seed: u64) -> Vec<u64> {
@@ -199,7 +171,7 @@ mod tests {
     #[test]
     fn native_analysis_produces_good_table() {
         let cfg = GbdiConfig { num_bases: 16, ..Default::default() };
-        let mut a = Analyzer::new(AnalyzerBackend::Native, cfg);
+        let mut a = Analyzer::native(cfg);
         let samples = mixture(1);
         let table = a.analyze(&samples, 3).unwrap();
         assert_eq!(table.version, 3);
@@ -213,9 +185,27 @@ mod tests {
     }
 
     #[test]
+    fn every_selector_kind_analyzes_well() {
+        let samples = mixture(4);
+        for &kind in SelectorKind::all() {
+            let cfg = GbdiConfig { num_bases: 16, ..Default::default() };
+            let mut a = Analyzer::new(kind.build(), cfg);
+            assert_eq!(a.selector_name(), kind.name());
+            let table = a.analyze(&samples, 1).unwrap();
+            let est = a.estimate_bits(&samples, &table);
+            assert!(
+                est < samples.len() as u64 * 24,
+                "{}: est {est} vs raw {}",
+                kind.name(),
+                samples.len() * 32
+            );
+        }
+    }
+
+    #[test]
     fn swap_policy_prefers_better_tables() {
         let cfg = GbdiConfig { num_bases: 16, ..Default::default() };
-        let mut a = Analyzer::new(AnalyzerBackend::Native, cfg.clone());
+        let mut a = Analyzer::native(cfg.clone());
         let samples = mixture(2);
         let good = a.analyze(&samples, 2).unwrap();
         let bad = GlobalBaseTable::new(vec![(123, 4)], cfg.word_size, 1);
@@ -228,17 +218,33 @@ mod tests {
     }
 
     #[test]
-    fn snap_word_clamps() {
-        let cfg = GbdiConfig::default();
-        assert_eq!(snap_word(-5.0, &cfg), 0);
-        assert_eq!(snap_word(5e12, &cfg), u32::MAX as u64);
-        assert_eq!(snap_word(1000.4, &cfg), 1000);
+    fn drift_detection_skips_stable_traffic_and_fires_on_phase_change() {
+        let cfg = GbdiConfig { num_bases: 16, ..Default::default() };
+        let mut a = Analyzer::new(Box::new(MiniBatchSelector), cfg);
+        let phase_a = mixture(5);
+        // before anything is adopted, analysis must always run
+        let table = a.analyze(&phase_a, 1).unwrap();
+        assert!(a.should_recluster(&phase_a, &table));
+        a.note_adopted(&phase_a, &table);
+        // same distribution, fresh sample: within the margin -> skip
+        let phase_a2 = mixture(6);
+        assert!(!a.should_recluster(&phase_a2, &table), "stable traffic must skip");
+        // shifted distribution: outliers blow the budget -> recluster
+        let mut rng = Rng::new(7);
+        let phase_b: Vec<u64> =
+            (0..4096).map(|_| apply_delta(1_700_000_000, rng.range_i64(-80, 80), WordSize::W32)).collect();
+        assert!(a.should_recluster(&phase_b, &table), "phase change must recluster");
+        // warm re-analysis adapts to the new phase
+        let t2 = a.analyze_warm(&phase_b, Some(&table), 2).unwrap();
+        assert!(a.should_swap(&phase_b, &table, &t2));
+        // empty samples never trigger work
+        assert!(!a.should_recluster(&[], &table));
     }
 
     #[test]
     fn empty_samples_yield_valid_table() {
         let cfg = GbdiConfig { num_bases: 8, ..Default::default() };
-        let mut a = Analyzer::new(AnalyzerBackend::Native, cfg);
+        let mut a = Analyzer::native(cfg);
         let t = a.analyze(&[], 1).unwrap();
         assert!(!t.is_empty());
     }

@@ -11,6 +11,7 @@ pub struct Metrics {
     bytes_out: AtomicU64,
     compress_ns: AtomicU64,
     analyses: AtomicU64,
+    analyses_skipped: AtomicU64,
     table_swaps: AtomicU64,
     table_rejects: AtomicU64,
     recompressions: AtomicU64,
@@ -30,6 +31,8 @@ pub struct MetricsSnapshot {
     pub compress_ns: u64,
     /// Background analyses completed.
     pub analyses: u64,
+    /// Analysis rounds skipped by drift detection (incumbent still good).
+    pub analyses_skipped: u64,
     /// Analyses that published a new table version.
     pub table_swaps: u64,
     /// Analyses whose candidate lost to the incumbent table.
@@ -74,6 +77,11 @@ impl Metrics {
         self.compress_ns.fetch_add(ns, Ordering::Relaxed);
     }
 
+    /// Record an analysis round skipped by drift detection.
+    pub fn analysis_skipped(&self) {
+        self.analyses_skipped.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Record an analysis round; `swapped` = published a new table.
     pub fn analysis(&self, swapped: bool) {
         self.analyses.fetch_add(1, Ordering::Relaxed);
@@ -102,6 +110,7 @@ impl Metrics {
             bytes_out: self.bytes_out.load(Ordering::Relaxed),
             compress_ns: self.compress_ns.load(Ordering::Relaxed),
             analyses: self.analyses.load(Ordering::Relaxed),
+            analyses_skipped: self.analyses_skipped.load(Ordering::Relaxed),
             table_swaps: self.table_swaps.load(Ordering::Relaxed),
             table_rejects: self.table_rejects.load(Ordering::Relaxed),
             recompressions: self.recompressions.load(Ordering::Relaxed),
@@ -121,12 +130,14 @@ mod tests {
         m.page(4096, 1024, 1000);
         m.analysis(true);
         m.analysis(false);
+        m.analysis_skipped();
         m.recompression();
         let s = m.snapshot();
         assert_eq!(s.pages_in, 2);
         assert_eq!(s.bytes_in, 8192);
         assert_eq!(s.bytes_out, 3072);
         assert_eq!(s.analyses, 2);
+        assert_eq!(s.analyses_skipped, 1);
         assert_eq!(s.table_swaps, 1);
         assert_eq!(s.table_rejects, 1);
         assert_eq!(s.recompressions, 1);

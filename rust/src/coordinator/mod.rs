@@ -2,13 +2,20 @@
 //! memory-controller firmware the paper's system implies — pages stream
 //! in, workers compress them against the current global base table, and
 //! a background analyzer continuously re-derives the table from sampled
-//! traffic (running the AOT-compiled JAX/Pallas k-means through
-//! [`crate::runtime`] when artifacts are present, or the native Rust
-//! fallback otherwise).
+//! traffic through the pluggable [`crate::cluster::BaseSelector`] engine
+//! (full Lloyd k-means, mini-batch with incumbent warm start, the
+//! histogram selector, or the AOT-compiled JAX/Pallas k-means through
+//! [`crate::runtime`]).
 //!
 //! Key invariants:
 //!
-//! * **Python never runs here.** The analyzer executes pre-compiled HLO.
+//! * **Python never runs here.** The artifact selector executes
+//!   pre-compiled HLO.
+//! * **Analysis is incremental by default.** Drift detection scores the
+//!   reservoir under the incumbent table and skips re-clustering while
+//!   the score stays within `drift_margin` of the adoption baseline;
+//!   warm-start selectors reuse the incumbent's centroids when they do
+//!   run.
 //! * **Codec versioning.** Every stored page records the codec version
 //!   that encoded it; the [`store::PageStore`] keeps all published
 //!   versions (as `Arc<dyn BlockCodec>`) so any page decompresses
@@ -25,7 +32,7 @@ pub mod metrics;
 pub mod service;
 pub mod store;
 
-pub use analyzer::{Analyzer, AnalyzerBackend};
+pub use analyzer::Analyzer;
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use service::{CompressionService, ServiceConfig};
 pub use store::PageStore;

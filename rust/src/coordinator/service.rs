@@ -17,11 +17,14 @@
 //!                         │  feed word samples → Reservoir (Mutex)
 //!                         ▼
 //!  analyzer thread (adaptive mode only): every `analyze_every` pages,
-//!  snapshot the reservoir, run k-means (PJRT artifact or native), fit
+//!  snapshot the reservoir; if drift detection says the incumbent still
+//!  scores well, skip; otherwise run the configured BaseSelector
+//!  (lloyd / minibatch warm-start / histogram / PJRT artifact), fit
 //!  widths, score vs incumbent, publish new version + swap codec.
 //! ```
 
-use super::analyzer::{Analyzer, AnalyzerBackend};
+use super::analyzer::Analyzer;
+use crate::cluster::{BaseSelector, SelectorKind};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::store::{PageStore, StoredPage};
 use crate::codec::BlockCodec;
@@ -52,6 +55,14 @@ pub struct ServiceConfig {
     pub sample_words: usize,
     /// Pages migrated to the newest codec per maintenance step.
     pub recompress_batch: usize,
+    /// Base selector the adaptive analyzer runs (adaptive mode only).
+    pub selector: SelectorKind,
+    /// Drift-detection margin: re-clustering is skipped while fresh
+    /// samples score within this factor of the adopted table's baseline.
+    pub drift_margin: f64,
+    /// Swap hysteresis: a candidate must shrink estimated bits below
+    /// `incumbent * swap_margin` to be published.
+    pub swap_margin: f64,
 }
 
 impl Default for ServiceConfig {
@@ -62,6 +73,9 @@ impl Default for ServiceConfig {
             analyze_every: 256,
             sample_words: 8192,
             recompress_batch: 64,
+            selector: SelectorKind::Lloyd,
+            drift_margin: 1.02,
+            swap_margin: 0.98,
         }
     }
 }
@@ -96,14 +110,27 @@ pub struct CompressionService {
 impl CompressionService {
     /// Start the adaptive GBDI service with an initial table derived from
     /// nothing (the pinned zero base only); the analyzer will improve it
-    /// as traffic arrives. `backend` picks PJRT-artifact vs native
-    /// clustering.
-    pub fn start(config: ServiceConfig, backend: AnalyzerBackend) -> Result<Self> {
+    /// as traffic arrives, running the selector named by
+    /// `config.selector`.
+    pub fn start(config: ServiceConfig) -> Result<Self> {
+        let selector = config.selector.build();
+        Self::start_with_selector(config, selector)
+    }
+
+    /// [`Self::start`] with an explicit selector instance — the hook for
+    /// selectors that need external state, e.g.
+    /// [`crate::cluster::ArtifactSelector`] over a PJRT runtime.
+    pub fn start_with_selector(
+        config: ServiceConfig,
+        selector: Box<dyn BaseSelector>,
+    ) -> Result<Self> {
         config.codec.validate().map_err(crate::Error::Config)?;
         let initial = GlobalBaseTable::new(vec![(0, 8)], config.codec.word_size, 0);
         let codec: Arc<dyn BlockCodec> =
             Arc::new(GbdiCodec::new(initial, config.codec.clone()));
-        let analyzer = Analyzer::new(backend, config.codec.clone());
+        let mut analyzer = Analyzer::new(selector, config.codec.clone());
+        analyzer.swap_margin = config.swap_margin;
+        analyzer.drift_margin = config.drift_margin;
         Self::start_inner(config, codec, Some(analyzer))
     }
 
@@ -323,9 +350,10 @@ fn analyzer_loop(shared: Arc<Shared>, analyzer: &mut Analyzer) {
         if shared.shutdown.load(Ordering::Acquire) {
             break;
         }
-        let due = shared.pages_since_analysis.load(Ordering::Acquire)
-            >= shared.config.analyze_every
-            || shared.analyze_now.swap(false, Ordering::AcqRel);
+        let forced = shared.analyze_now.swap(false, Ordering::AcqRel);
+        let due = forced
+            || shared.pages_since_analysis.load(Ordering::Acquire)
+                >= shared.config.analyze_every;
         if !due {
             std::thread::sleep(std::time::Duration::from_millis(2));
             continue;
@@ -338,20 +366,33 @@ fn analyzer_loop(shared: Arc<Shared>, analyzer: &mut Analyzer) {
         if samples.is_empty() {
             continue;
         }
+        // the adaptive loop only ever swaps GBDI tables; a static codec
+        // never reaches this thread
+        let incumbent = Arc::clone(&shared.codec.read().unwrap());
+        let incumbent_table = incumbent.global_table();
+        // drift detection: while the incumbent still scores within the
+        // margin of its adoption baseline, skip the selector entirely
+        // (explicit `request_analysis` calls bypass the check)
+        if !forced {
+            if let Some(table) = incumbent_table {
+                if !analyzer.should_recluster(&samples, table) {
+                    shared.metrics.analysis_skipped();
+                    continue;
+                }
+            }
+        }
         let version = shared.next_version.fetch_add(1, Ordering::AcqRel);
-        let candidate = match analyzer.analyze(&samples, version) {
+        let candidate = match analyzer.analyze_warm(&samples, incumbent_table, version) {
             Ok(t) => t,
             Err(_) => continue, // artifact missing/failing: stay on incumbent
         };
-        let incumbent = Arc::clone(&shared.codec.read().unwrap());
-        // the adaptive loop only ever swaps GBDI tables; a static codec
-        // never reaches this thread
-        let swap = match incumbent.global_table() {
+        let swap = match incumbent_table {
             Some(table) => analyzer.should_swap(&samples, table, &candidate),
             None => false,
         };
         shared.metrics.analysis(swap);
         if swap {
+            analyzer.note_adopted(&samples, &candidate);
             let new_codec: Arc<dyn BlockCodec> =
                 Arc::new(GbdiCodec::new(candidate, shared.config.codec.clone()));
             {
@@ -374,7 +415,7 @@ mod tests {
             analyze_every: 16,
             ..Default::default()
         };
-        CompressionService::start(cfg, AnalyzerBackend::Native).unwrap()
+        CompressionService::start(cfg).unwrap()
     }
 
     #[test]

@@ -13,8 +13,7 @@
 
 use super::table::GlobalBaseTable;
 use super::GbdiConfig;
-use crate::cluster::{kmeans, wrapping_delta, KmeansConfig, Metric};
-use crate::util::bits::signed_width;
+use crate::cluster::{kmeans, KmeansConfig, Metric};
 use crate::util::stats::stride_sample;
 use crate::value::words;
 
@@ -54,55 +53,17 @@ pub fn analyze_samples_metric(samples: &[u64], cfg: &GbdiConfig, metric: Metric)
 }
 
 /// Fit per-base width classes around given centroids and build the table
-/// (the paper's "establishing maximum deltas" step):
-///
-/// 1. assign every sample to its nearest centroid (min |wrapping delta|);
-/// 2. per centroid, take the `delta_quantile` of required delta widths;
-/// 3. snap that up to the smallest configured width class (values beyond
-///    it become outliers at encode time).
+/// (the paper's "establishing maximum deltas" step). Thin alias for
+/// [`GlobalBaseTable::fit_from_centroids`], where the width-fitting now
+/// lives — every analysis path (native selectors, the PJRT artifact, the
+/// CLI, the benches) shares that one implementation.
 pub fn table_from_centroids(
     samples: &[u64],
     centroids: &[u64],
     cfg: &GbdiConfig,
     version: u64,
 ) -> GlobalBaseTable {
-    assert!(!centroids.is_empty());
-    let mut widths_needed: Vec<Vec<u32>> = vec![Vec::new(); centroids.len()];
-    for &v in samples {
-        let mut best = 0usize;
-        let mut best_abs = u64::MAX;
-        for (j, &c) in centroids.iter().enumerate() {
-            let abs = wrapping_delta(v, c, cfg.word_size).unsigned_abs();
-            if abs < best_abs {
-                best_abs = abs;
-                best = j;
-            }
-        }
-        let d = wrapping_delta(v, centroids[best], cfg.word_size);
-        widths_needed[best].push(signed_width(d));
-    }
-    let max_class = *cfg.width_classes.last().unwrap();
-    let pairs: Vec<(u64, u32)> = centroids
-        .iter()
-        .zip(widths_needed.iter_mut())
-        .map(|(&c, widths)| {
-            if widths.is_empty() {
-                return (c, 0);
-            }
-            widths.sort_unstable();
-            let q_idx = ((cfg.delta_quantile * (widths.len() - 1) as f64).round() as usize)
-                .min(widths.len() - 1);
-            let need = widths[q_idx];
-            let class = cfg
-                .width_classes
-                .iter()
-                .copied()
-                .find(|&w| w >= need)
-                .unwrap_or(max_class);
-            (c, class)
-        })
-        .collect();
-    GlobalBaseTable::new(pairs, cfg.word_size, version)
+    GlobalBaseTable::fit_from_centroids(samples, centroids, cfg, version)
 }
 
 #[cfg(test)]

@@ -7,7 +7,8 @@
 //! decompressor knows each field's width from the base pointer alone —
 //! no per-value width metadata).
 
-use crate::cluster::wrapping_delta;
+use super::GbdiConfig;
+use crate::cluster::{wrapping_delta, Selection};
 use crate::util::bits::signed_width;
 use crate::value::WordSize;
 use crate::{Error, Result};
@@ -50,20 +51,23 @@ pub struct GlobalBaseTable {
     /// W32 fast path, CSR layout: `bucket_off[b]..bucket_off[b+1]` slices
     /// `bucket_cands` with the candidate entry indices for bucket `b`,
     /// sorted by (width, base). Deterministic from `entries`, rebuilt on
-    /// deserialize; empty for W64 tables.
+    /// deserialize; empty for W64 tables. Indices are u32 so oversized
+    /// tables (> u16::MAX entries) keep the fast path instead of silently
+    /// falling back to the linear scan.
     bucket_off: Vec<u32>,
-    bucket_cands: Vec<u16>,
+    bucket_cands: Vec<u32>,
     /// Monotonic version assigned by the coordinator (0 = ad-hoc).
     pub version: u64,
     /// Word granularity the table was built for.
     pub word_size: WordSize,
 }
 
-fn build_buckets(entries: &[BaseEntry], word_size: WordSize) -> (Vec<u32>, Vec<u16>) {
-    if word_size != WordSize::W32 || entries.len() > u16::MAX as usize {
+fn build_buckets(entries: &[BaseEntry], word_size: WordSize) -> (Vec<u32>, Vec<u32>) {
+    if word_size != WordSize::W32 {
         return (Vec::new(), Vec::new());
     }
-    let mut buckets: Vec<Vec<u16>> = vec![Vec::new(); NUM_BUCKETS];
+    debug_assert!(entries.len() <= u32::MAX as usize);
+    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); NUM_BUCKETS];
     for (i, e) in entries.iter().enumerate() {
         // coverage: v in [base - 2^(w-1), base + 2^(w-1) - 1] (wrapping)
         let span: u32 = if e.width == 0 { 0 } else { 1u32 << (e.width - 1) };
@@ -77,7 +81,7 @@ fn build_buckets(entries: &[BaseEntry], word_size: WordSize) -> (Vec<u32>, Vec<u
             NUM_BUCKETS as u32 - b0 + b1 + 1 // wrapped interval
         };
         for j in 0..count {
-            buckets[((b0 + j) as usize) & (NUM_BUCKETS - 1)].push(i as u16);
+            buckets[((b0 + j) as usize) & (NUM_BUCKETS - 1)].push(i as u32);
         }
     }
     // flatten to CSR, candidates width-sorted for early exit
@@ -114,6 +118,72 @@ impl GlobalBaseTable {
         let max_width = entries.iter().map(|e| e.width).max().unwrap_or(0);
         let (bucket_off, bucket_cands) = build_buckets(&entries, word_size);
         GlobalBaseTable { entries, max_width, bucket_off, bucket_cands, version, word_size }
+    }
+
+    /// Build a table from a selector's [`Selection`] — the one seam every
+    /// analysis path (native selectors, PJRT artifact, CLI, benches) goes
+    /// through, so the width-fitting lives here and nowhere else.
+    pub fn from_selection(
+        samples: &[u64],
+        selection: &Selection,
+        cfg: &GbdiConfig,
+        version: u64,
+    ) -> Self {
+        Self::fit_from_centroids(samples, &selection.centroids, cfg, version)
+    }
+
+    /// Fit per-base width classes around given centroids and build the
+    /// table (the paper's "establishing maximum deltas" step):
+    ///
+    /// 1. assign every sample to its nearest centroid (min |wrapping
+    ///    delta|);
+    /// 2. per centroid, take the `delta_quantile` of required delta
+    ///    widths;
+    /// 3. snap that up to the smallest configured width class (values
+    ///    beyond it become outliers at encode time).
+    pub fn fit_from_centroids(
+        samples: &[u64],
+        centroids: &[u64],
+        cfg: &GbdiConfig,
+        version: u64,
+    ) -> Self {
+        assert!(!centroids.is_empty());
+        let mut widths_needed: Vec<Vec<u32>> = vec![Vec::new(); centroids.len()];
+        for &v in samples {
+            let mut best = 0usize;
+            let mut best_abs = u64::MAX;
+            for (j, &c) in centroids.iter().enumerate() {
+                let abs = wrapping_delta(v, c, cfg.word_size).unsigned_abs();
+                if abs < best_abs {
+                    best_abs = abs;
+                    best = j;
+                }
+            }
+            let d = wrapping_delta(v, centroids[best], cfg.word_size);
+            widths_needed[best].push(signed_width(d));
+        }
+        let max_class = *cfg.width_classes.last().unwrap();
+        let pairs: Vec<(u64, u32)> = centroids
+            .iter()
+            .zip(widths_needed.iter_mut())
+            .map(|(&c, widths)| {
+                if widths.is_empty() {
+                    return (c, 0);
+                }
+                widths.sort_unstable();
+                let q_idx = ((cfg.delta_quantile * (widths.len() - 1) as f64).round() as usize)
+                    .min(widths.len() - 1);
+                let need = widths[q_idx];
+                let class = cfg
+                    .width_classes
+                    .iter()
+                    .copied()
+                    .find(|&w| w >= need)
+                    .unwrap_or(max_class);
+                (c, class)
+            })
+            .collect();
+        GlobalBaseTable::new(pairs, cfg.word_size, version)
     }
 
     /// Number of bases.
@@ -265,21 +335,23 @@ impl GlobalBaseTable {
 
     /// Serialized length in bytes (see [`GlobalBaseTable::serialize`]).
     pub fn serialized_len(&self) -> usize {
-        // magic(4) + version(8) + word_size(1) + count(2) + entries * (word + 1)
-        15 + self.entries.len() * (self.word_size.bytes() + 1)
+        // magic(4) + version(8) + word_size(1) + count(4) + entries * (word + 1)
+        17 + self.entries.len() * (self.word_size.bytes() + 1)
     }
 
     /// Serialize (little-endian framing) for embedding in compressed
-    /// images and for the coordinator's table ring.
+    /// images and for the coordinator's table ring. The entry count is a
+    /// u32 ("GBT2" framing) so oversized tables serialize exactly instead
+    /// of silently truncating at u16::MAX.
     pub fn serialize(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.serialized_len());
-        out.extend_from_slice(b"GBT1");
+        out.extend_from_slice(b"GBT2");
         out.extend_from_slice(&self.version.to_le_bytes());
         out.push(match self.word_size {
             WordSize::W32 => 4,
             WordSize::W64 => 8,
         });
-        out.extend_from_slice(&(self.entries.len() as u16).to_le_bytes());
+        out.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
         for e in &self.entries {
             match self.word_size {
                 WordSize::W32 => out.extend_from_slice(&(e.base as u32).to_le_bytes()),
@@ -292,7 +364,7 @@ impl GlobalBaseTable {
 
     /// Parse a serialized table; returns the table and bytes consumed.
     pub fn deserialize(data: &[u8]) -> Result<(GlobalBaseTable, usize)> {
-        if data.len() < 15 || &data[0..4] != b"GBT1" {
+        if data.len() < 17 || &data[0..4] != b"GBT2" {
             return Err(Error::Corrupt("bad table magic".into()));
         }
         let version = u64::from_le_bytes(data[4..12].try_into().unwrap());
@@ -301,15 +373,15 @@ impl GlobalBaseTable {
             8 => WordSize::W64,
             b => return Err(Error::Corrupt(format!("bad word size {b}"))),
         };
-        let count = u16::from_le_bytes(data[13..15].try_into().unwrap()) as usize;
+        let count = u32::from_le_bytes(data[13..17].try_into().unwrap()) as usize;
         let entry_len = word_size.bytes() + 1;
-        let need = 15 + count * entry_len;
+        let need = 17 + count * entry_len;
         if data.len() < need {
             return Err(Error::Corrupt("truncated table".into()));
         }
         let mut entries = Vec::with_capacity(count);
         for i in 0..count {
-            let o = 15 + i * entry_len;
+            let o = 17 + i * entry_len;
             let base = match word_size {
                 WordSize::W32 => u32::from_le_bytes(data[o..o + 4].try_into().unwrap()) as u64,
                 WordSize::W64 => u64::from_le_bytes(data[o..o + 8].try_into().unwrap()),
@@ -442,6 +514,68 @@ mod tests {
         let (i, d, _) = t.best_base(u32::MAX as u64 - 6).unwrap();
         assert_eq!(t.get(i).base, 0);
         assert_eq!(d, -7);
+    }
+
+    #[test]
+    fn oversized_table_keeps_fast_path_and_serializes() {
+        // regression: tables with more than u16::MAX entries used to
+        // silently drop the W32 bucket index (u16 candidate indices) and
+        // silently truncate the serialized entry count (u16 framing)
+        let n = u16::MAX as usize + 2;
+        let pairs: Vec<(u64, u32)> = (0..n).map(|i| ((i as u64) << 12, 4)).collect();
+        let t = GlobalBaseTable::new(pairs, WordSize::W32, 9);
+        assert!(t.len() > u16::MAX as usize, "len {}", t.len());
+        assert!(!t.bucket_off.is_empty(), "fast path must survive oversized tables");
+        let mut rng = Rng::new(123);
+        for _ in 0..500 {
+            let v = if rng.chance(0.5) {
+                let e = t.get(rng.below(t.len() as u64) as usize);
+                crate::cluster::apply_delta(e.base, rng.range_i64(-10, 10), WordSize::W32)
+            } else {
+                rng.next_u32() as u64
+            };
+            assert_eq!(
+                t.best_base(v).map(|(_, _, w)| w),
+                t.best_base_exhaustive(v).map(|(_, _, w)| w),
+                "v={v}"
+            );
+        }
+        // entries above the old u16 boundary are reachable through the index
+        let hi = t.get(t.len() - 1);
+        let (i, d, _) = t.best_base(hi.base).unwrap();
+        assert_eq!(t.get(i).base, hi.base);
+        assert_eq!(d, 0);
+        // and the wire roundtrip preserves every entry
+        let bytes = t.serialize();
+        assert_eq!(bytes.len(), t.serialized_len());
+        let (t2, consumed) = GlobalBaseTable::deserialize(&bytes).unwrap();
+        assert_eq!(consumed, bytes.len());
+        assert_eq!(t2.len(), t.len());
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn from_selection_matches_fit_from_centroids() {
+        let cfg = GbdiConfig { num_bases: 8, ..Default::default() };
+        let mut rng = Rng::new(31);
+        let samples: Vec<u64> = (0..2000)
+            .map(|_| {
+                let c = [9_000u64, 70_000_000][rng.below(2) as usize];
+                crate::cluster::apply_delta(c, rng.range_i64(-50, 50), WordSize::W32)
+            })
+            .collect();
+        let sel = Selection {
+            centroids: vec![9_000, 70_000_000],
+            cost: 0.0,
+            iters_run: 1,
+            warm_started: false,
+        };
+        let a = GlobalBaseTable::from_selection(&samples, &sel, &cfg, 5);
+        let b = GlobalBaseTable::fit_from_centroids(&samples, &sel.centroids, &cfg, 5);
+        assert_eq!(a, b);
+        assert_eq!(a.version, 5);
+        // both clusters got a base with a sane width class
+        assert!(a.entries().iter().any(|e| e.base == 9_000 && e.width <= 8));
     }
 
     #[test]

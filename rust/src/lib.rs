@@ -40,6 +40,32 @@
 //! behind the coarser [`baselines::Codec`] trait — they have no block
 //! granularity for the simulator to exploit.
 //!
+//! ## The base-selection engine
+//!
+//! The background analysis that decides GBDI's global bases sits behind
+//! its own seam, [`cluster::BaseSelector`] (DESIGN.md §6):
+//!
+//! * [`cluster::LloydSelector`] — full bit-cost Lloyd k-means (the
+//!   paper's algorithm; the quality reference).
+//! * [`cluster::MiniBatchSelector`] — streaming mini-batch k-means that
+//!   **warm-starts from the incumbent table** (an order of magnitude
+//!   cheaper per pass; the production arm).
+//! * [`cluster::HistogramSelector`] — frequency top-K buckets
+//!   (near-free; strong on pointer-heavy populations).
+//! * [`cluster::ArtifactSelector`] — the AOT JAX/Pallas k-means through
+//!   PJRT, folded in as just another selector.
+//!
+//! Every selector's proposal goes through
+//! [`gbdi::GlobalBaseTable::from_selection`] for width fitting, so
+//! selector choice affects ratio and analysis latency, never
+//! correctness. The coordinator's analyzer adds **drift detection** on
+//! top: it scores fresh samples under the incumbent table and skips
+//! re-clustering entirely while the score stays within its
+//! `drift_margin` — stable traffic pays one O(n) scoring pass instead
+//! of a re-derivation. Select on the CLI via `gbdi serve --selector
+//! lloyd|minibatch|histogram|artifact`, compare with `gbdi selectors`
+//! or `cargo bench --bench kmeans_ablation`.
+//!
 //! ## Quickstart
 //!
 //! ```

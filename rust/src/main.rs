@@ -7,10 +7,11 @@
 
 use gbdi::baselines::{self, GbdiWholeImage};
 use gbdi::cli::{App, Arg};
+use gbdi::cluster::{ArtifactSelector, BaseSelector, SelectorConfig, SelectorKind};
 use gbdi::codec::{BlockCodec, CodecKind};
 use gbdi::container::{self, Container};
-use gbdi::coordinator::{AnalyzerBackend, CompressionService, ServiceConfig};
-use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig};
+use gbdi::coordinator::{CompressionService, ServiceConfig};
+use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig, GlobalBaseTable};
 use gbdi::memsim::{self, trace, CompressedMemory, DramModel};
 use gbdi::report::{bar_chart, fmt_bytes, fmt_ratio, Table};
 use gbdi::runtime::ArtifactRuntime;
@@ -32,7 +33,8 @@ fn app() -> App {
             App::new("analyze", "background analysis: print the global base table")
                 .arg(Arg::pos("input", "ELF dump or raw image"))
                 .arg(Arg::opt("bases", "64", "number of global bases"))
-                .arg(Arg::opt("samples", "4096", "analysis sample words")),
+                .arg(Arg::opt("samples", "4096", "analysis sample words"))
+                .arg(Arg::opt("selector", "lloyd", "base selector: lloyd|minibatch|histogram")),
         )
         .subcommand(
             App::new("compress", "compress a dump/file into a framed container")
@@ -72,8 +74,20 @@ fn app() -> App {
                 .arg(Arg::opt("workers", "4", "compression workers"))
                 .arg(Arg::opt("workload", "mix", "workload or 'mix'"))
                 .arg(Arg::opt("codec", "gbdi", "gbdi (adaptive analyzer) or bdi|fpc (static)"))
-                .arg(Arg::opt("config", "", "TOML config file ([codec] + [service])"))
-                .arg(Arg::flag("native", "force native k-means (skip PJRT artifacts)")),
+                .arg(Arg::opt(
+                    "selector",
+                    "",
+                    "base selector: lloyd|minibatch|histogram|artifact (default from config)",
+                ))
+                .arg(Arg::opt("drift", "", "drift-detection margin override (e.g. 1.02)"))
+                .arg(Arg::opt("config", "", "TOML config ([codec] + [service] + [analyzer])")),
+        )
+        .subcommand(
+            App::new("selectors", "base-selector ablation: ratio + analysis time per workload")
+                .arg(Arg::opt("size", "1m", "image bytes per workload"))
+                .arg(Arg::opt("seed", "7", "generator seed"))
+                .arg(Arg::opt("bases", "64", "number of global bases"))
+                .arg(Arg::opt("csv", "", "also write CSV here")),
         )
         .subcommand(
             App::new("memsim", "compressed-memory bandwidth experiment (E7)")
@@ -143,8 +157,20 @@ fn cmd_analyze(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
         ..Default::default()
     };
     cfg.validate().map_err(gbdi::Error::Config)?;
-    let table = analyze::analyze_image(&image, &cfg);
+    let sel_name = m.get("selector");
+    let kind = SelectorKind::parse(sel_name).ok_or_else(|| {
+        gbdi::Error::Config(format!("unknown selector '{sel_name}' (lloyd|minibatch|histogram)"))
+    })?;
+    let samples = analyze::sample_image(&image, &cfg);
+    let selection = kind.build().select(&samples, None, &SelectorConfig::from_gbdi(&cfg))?;
+    let table = GlobalBaseTable::from_selection(&samples, &selection, &cfg, 0);
     println!("image: {} ({})", m.get("input"), fmt_bytes(image.len() as u64));
+    println!(
+        "selector: {} ({} pass{})",
+        kind.name(),
+        selection.iters_run,
+        if selection.iters_run == 1 { "" } else { "es" }
+    );
     println!("global bases: {} (budget {})", table.len(), cfg.num_bases);
     let mut t = Table::new(&["base (hex)", "width class"]);
     for e in table.entries().iter().take(32) {
@@ -323,22 +349,41 @@ fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
             .map_err(gbdi::Error::Config)?,
     };
     cfg.workers = m.get_usize("workers");
+    if !m.get("drift").is_empty() {
+        let drift = m.get_f64("drift");
+        if drift < 1.0 {
+            return Err(gbdi::Error::Config(format!("--drift {drift} must be >= 1.0")));
+        }
+        cfg.drift_margin = drift;
+    }
     let svc = if kind == CodecKind::Gbdi {
-        let backend = if m.get_flag("native") {
-            AnalyzerBackend::Native
-        } else {
-            match ArtifactRuntime::new(ArtifactRuntime::default_dir()) {
+        // the --selector flag overrides [analyzer] selector from --config
+        let selector: Box<dyn BaseSelector> = match m.get("selector") {
+            "" => cfg.selector.build(),
+            "artifact" => match ArtifactRuntime::new(ArtifactRuntime::default_dir()) {
                 Ok(rt) if rt.has_artifact("kmeans_k64") => {
-                    println!("analyzer backend: PJRT artifacts ({})", rt.platform());
-                    AnalyzerBackend::Artifact(Arc::new(rt))
+                    println!("artifact selector: PJRT ({})", rt.platform());
+                    Box::new(ArtifactSelector::new(Arc::new(rt)))
                 }
                 _ => {
-                    println!("analyzer backend: native (artifacts not found)");
-                    AnalyzerBackend::Native
+                    println!("artifact selector unavailable (run `make artifacts`); using lloyd");
+                    Box::new(gbdi::cluster::LloydSelector)
                 }
-            }
+            },
+            name => SelectorKind::parse(name)
+                .ok_or_else(|| {
+                    gbdi::Error::Config(format!(
+                        "unknown selector '{name}' (lloyd|minibatch|histogram|artifact)"
+                    ))
+                })?
+                .build(),
         };
-        CompressionService::start(cfg, backend)?
+        println!(
+            "analyzer selector: {} (drift margin {:.3})",
+            selector.name(),
+            cfg.drift_margin
+        );
+        CompressionService::start_with_selector(cfg, selector)?
     } else {
         println!("static codec: {} (no background analyzer)", kind.name());
         let codec: Arc<dyn BlockCodec> = Arc::from(kind.build_for_image(&[], &cfg.codec));
@@ -372,14 +417,73 @@ fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
     let (logical, stored, ratio) = svc.storage_ratio();
     let snap = svc.shutdown();
     println!(
-        "final: {} pages, {} -> {} stored ({}), {} migrated, {} swaps",
+        "final: {} pages, {} -> {} stored ({}), {} migrated, {} swaps, {} analyses ({} skipped by drift detection)",
         snap.pages_in,
         fmt_bytes(logical as u64),
         fmt_bytes(stored as u64),
         fmt_ratio(ratio),
         migrated,
-        snap.table_swaps
+        snap.table_swaps,
+        snap.analyses,
+        snap.analyses_skipped
     );
+    Ok(())
+}
+
+fn cmd_selectors(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
+    let size = m.get_usize("size");
+    let seed = m.get_u64("seed");
+    let cfg = GbdiConfig { num_bases: m.get_usize("bases"), ..Default::default() };
+    cfg.validate().map_err(gbdi::Error::Config)?;
+    let sel_cfg = SelectorConfig::from_gbdi(&cfg);
+    let kinds = SelectorKind::all();
+    let mut header: Vec<String> = vec!["workload".into()];
+    for k in kinds {
+        header.push(format!("{} ratio", k.name()));
+        header.push(format!("{} ms", k.name()));
+    }
+    let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hrefs);
+    let mut ratio_sums = vec![0.0f64; kinds.len()];
+    let mut ms_sums = vec![0.0f64; kinds.len()];
+    let mut n = 0usize;
+    for w in workloads::all() {
+        let img = w.generate(size, seed);
+        let samples = analyze::sample_image(&img, &cfg);
+        let mut row = vec![w.name().to_string()];
+        for (i, kind) in kinds.iter().enumerate() {
+            let mut sel = kind.build();
+            let t0 = std::time::Instant::now();
+            let selection = sel.select(&samples, None, &sel_cfg)?;
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            let table = GlobalBaseTable::from_selection(&samples, &selection, &cfg, 0);
+            let codec = GbdiCodec::new(table, cfg.clone());
+            let ratio = codec.compress_image(&img).ratio();
+            ratio_sums[i] += ratio;
+            ms_sums[i] += ms;
+            row.push(format!("{ratio:.3}"));
+            row.push(format!("{ms:.2}"));
+        }
+        t.row(&row);
+        n += 1;
+    }
+    let mut mean_row = vec!["MEAN".to_string()];
+    for i in 0..kinds.len() {
+        mean_row.push(format!("{:.3}", ratio_sums[i] / n as f64));
+        mean_row.push(format!("{:.2}", ms_sums[i] / n as f64));
+    }
+    t.row(&mean_row);
+    println!(
+        "== base-selector ablation: {} per workload, K={} ==\n",
+        fmt_bytes(size as u64),
+        cfg.num_bases
+    );
+    print!("{}", t.render());
+    let csv_path = m.get("csv");
+    if !csv_path.is_empty() {
+        std::fs::write(csv_path, t.csv())?;
+        println!("csv written to {csv_path}");
+    }
     Ok(())
 }
 
@@ -453,6 +557,7 @@ fn main() {
         "sweep" => cmd_sweep(m),
         "figure1" => cmd_figure1(m),
         "serve" => cmd_serve(m),
+        "selectors" => cmd_selectors(m),
         "memsim" => cmd_memsim(m),
         "info" => {
             cmd_info();

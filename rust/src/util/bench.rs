@@ -2,9 +2,14 @@
 //!
 //! [`Bencher::bench`] calibrates an iteration count to a target measurement
 //! window, runs warmup + measured batches, and reports mean / p50 / p99 and
-//! optional throughput. Benches print criterion-style lines and can also
-//! emit CSV for the experiment logs.
+//! optional throughput. Benches print criterion-style lines and can emit
+//! CSV for the experiment logs plus machine-readable JSON
+//! ([`Bencher::write_bench_json`] drops `BENCH_<name>.json` at the repo
+//! root — the perf-trajectory files CI uploads as artifacts). Scalar
+//! outcomes that are not timings (compression ratios, speedup factors)
+//! ride along via [`Bencher::metric`].
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 /// One benchmark result.
@@ -86,6 +91,7 @@ pub struct Bencher {
     /// Number of batches the window is split into (for percentiles).
     pub batches: usize,
     results: Vec<BenchResult>,
+    metrics: Vec<(String, f64)>,
 }
 
 impl Default for Bencher {
@@ -95,6 +101,7 @@ impl Default for Bencher {
             measure: Duration::from_millis(800),
             batches: 20,
             results: Vec::new(),
+            metrics: Vec::new(),
         }
     }
 }
@@ -159,6 +166,18 @@ impl Bencher {
         &self.results
     }
 
+    /// Record a scalar outcome that is not a timing (a compression ratio,
+    /// a speedup factor, a quality-loss percentage). Included in the JSON
+    /// emission alongside the timing results.
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.push((name.to_string(), value));
+    }
+
+    /// All recorded scalar metrics.
+    pub fn metrics(&self) -> &[(String, f64)] {
+        &self.metrics
+    }
+
     /// Write all results as CSV to `path` (with header).
     pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
         use std::io::Write;
@@ -169,6 +188,94 @@ impl Bencher {
         }
         Ok(())
     }
+
+    /// Render timing results + scalar metrics as a JSON document
+    /// (hand-rolled: serde is unavailable offline).
+    pub fn to_json(&self, bench: &str) -> String {
+        let mut out = String::with_capacity(256 + self.results.len() * 160);
+        out.push_str("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(bench)));
+        out.push_str("  \"results\": [\n");
+        for (i, r) in self.results.iter().enumerate() {
+            let mib = r
+                .mib_per_s()
+                .map(|t| format!("{t:.3}"))
+                .unwrap_or_else(|| "null".into());
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"mean_ns\": {}, \"p50_ns\": {}, \"p99_ns\": {}, \"iters\": {}, \"bytes_per_iter\": {}, \"mib_per_s\": {}}}{}\n",
+                json_escape(&r.name),
+                r.mean.as_nanos(),
+                r.p50.as_nanos(),
+                r.p99.as_nanos(),
+                r.iters,
+                r.bytes_per_iter.map(|b| b.to_string()).unwrap_or_else(|| "null".into()),
+                mib,
+                if i + 1 < self.results.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ],\n");
+        out.push_str("  \"metrics\": [\n");
+        for (i, (name, value)) in self.metrics.iter().enumerate() {
+            let v = if value.is_finite() { format!("{value}") } else { "null".into() };
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"value\": {}}}{}\n",
+                json_escape(name),
+                v,
+                if i + 1 < self.metrics.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write the JSON document to an explicit path.
+    pub fn write_json(&self, bench: &str, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json(bench))
+    }
+
+    /// Write `BENCH_<name>.json` at the repo root (located by walking up
+    /// from the current directory — cargo runs benches from the crate
+    /// root, one level below it). Returns the path written.
+    pub fn write_bench_json(&self, bench: &str) -> std::io::Result<PathBuf> {
+        let path = repo_root().join(format!("BENCH_{bench}.json"));
+        self.write_json(bench, &path)?;
+        Ok(path)
+    }
+}
+
+/// Locate the repository root: the nearest ancestor of the current
+/// directory holding `ROADMAP.md` or `.git` (the crate lives one level
+/// below it). Falls back to the current directory.
+fn repo_root() -> PathBuf {
+    let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    let mut dir = cwd.clone();
+    for _ in 0..5 {
+        if dir.join("ROADMAP.md").exists() || dir.join(".git").exists() {
+            return dir;
+        }
+        match dir.parent() {
+            Some(p) => dir = p.to_path_buf(),
+            None => break,
+        }
+    }
+    cwd
+}
+
+/// Minimal JSON string escaping for the hand-rolled emitter.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -180,7 +287,7 @@ mod tests {
             warmup: Duration::from_millis(5),
             measure: Duration::from_millis(20),
             batches: 4,
-            results: Vec::new(),
+            ..Bencher::default()
         }
     }
 
@@ -219,6 +326,38 @@ mod tests {
         assert!(body.starts_with("name,"));
         assert!(body.contains("a/b,"));
         std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn json_emission_is_well_formed() {
+        let mut b = fast();
+        b.bench("a/b", Some(4096), || 7u32);
+        b.bench("no-throughput", None, || 1u8);
+        b.metric("ratio/mcf/\"lloyd\"", 3.25);
+        b.metric("speedup", 8.0);
+        let json = b.to_json("unit_test");
+        assert!(json.contains("\"bench\": \"unit_test\""));
+        assert!(json.contains("\"name\": \"a/b\""));
+        assert!(json.contains("\"mib_per_s\": null"), "{json}");
+        assert!(json.contains("\\\"lloyd\\\""), "quotes escaped: {json}");
+        assert!(json.contains("\"value\": 3.25"));
+        // crude structural sanity: balanced braces/brackets, one trailing
+        // newline, no trailing commas before closers
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        assert!(!json.contains(",\n  ]"), "{json}");
+        let tmp = std::env::temp_dir().join("gbdi_bench_test.json");
+        b.write_json("unit_test", &tmp).unwrap();
+        assert_eq!(std::fs::read_to_string(&tmp).unwrap(), json);
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn json_escape_handles_specials() {
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("x\ny"), "x\\ny");
+        assert_eq!(json_escape("\u{01}"), "\\u0001");
     }
 
     #[test]

@@ -6,9 +6,10 @@
 //! `GbdiWholeImage` format's u16 per-block bit lengths, which silently
 //! truncated blocks larger than 64 B.
 
+use gbdi::cluster::{SelectorConfig, SelectorKind};
 use gbdi::codec::{BlockCodec, CodecId, CodecKind};
 use gbdi::container::{self, Container};
-use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig};
+use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig, GlobalBaseTable};
 use gbdi::util::prng::Rng;
 use gbdi::util::testkit::{check, BytesGen};
 use gbdi::value::WordSize;
@@ -106,6 +107,58 @@ fn prop_every_codec_roundtrips_arbitrary_bytes() {
                 Err(_) => false,
             }
         });
+    }
+}
+
+#[test]
+fn prop_every_selector_table_roundtrips_arbitrary_bytes() {
+    // tables proposed by any base selector must decode bit-exactly, on
+    // workload images and on adversarial byte strings alike
+    let gen = BytesGen { max_len: 4096 };
+    for &kind in SelectorKind::all() {
+        check(0x5E1 ^ kind.name().len() as u64, 30, &gen, |data| {
+            let cfg = GbdiConfig { num_bases: 16, ..Default::default() };
+            let samples = analyze::sample_image(data, &cfg);
+            let selection = kind
+                .build()
+                .select(&samples, None, &SelectorConfig::from_gbdi(&cfg))
+                .expect("native selectors never fail");
+            let table = GlobalBaseTable::from_selection(&samples, &selection, &cfg, 0);
+            let codec = GbdiCodec::new(table, cfg);
+            let comp = container::compress(&codec, data);
+            match Container::from_bytes(&comp.to_bytes()) {
+                Ok(back) => back.decompress().map(|d| d == *data).unwrap_or(false),
+                Err(_) => false,
+            }
+        });
+    }
+}
+
+#[test]
+fn selector_tables_roundtrip_workloads_serial_and_parallel() {
+    for w in workloads::all() {
+        let img = w.generate(1 << 18, 17);
+        let cfg = GbdiConfig::default();
+        let samples = analyze::sample_image(&img, &cfg);
+        for &kind in SelectorKind::all() {
+            let selection = kind
+                .build()
+                .select(&samples, None, &SelectorConfig::from_gbdi(&cfg))
+                .unwrap();
+            let table = GlobalBaseTable::from_selection(&samples, &selection, &cfg, 0);
+            let codec = GbdiCodec::new(table, cfg.clone());
+            let serial = container::compress(&codec, &img);
+            assert_eq!(
+                serial.decompress().unwrap(),
+                img,
+                "{} serial lossy on {}",
+                kind.name(),
+                w.name()
+            );
+            let par = container::compress_parallel(&codec, &img, 4);
+            assert_eq!(par.block_bits, serial.block_bits, "{} on {}", kind.name(), w.name());
+            assert_eq!(par.decompress().unwrap(), img, "{} on {}", kind.name(), w.name());
+        }
     }
 }
 

@@ -2,8 +2,8 @@
 //! cross-checked against the native Rust clustering. Skips (with a loud
 //! message) when `artifacts/` has not been built — run `make artifacts`.
 
-use gbdi::cluster::apply_delta;
-use gbdi::coordinator::{Analyzer, AnalyzerBackend};
+use gbdi::cluster::{apply_delta, ArtifactSelector};
+use gbdi::coordinator::Analyzer;
 use gbdi::gbdi::GbdiConfig;
 use gbdi::runtime::{shape_samples, ArtifactRuntime, N_SAMPLES};
 use gbdi::util::prng::Rng;
@@ -63,8 +63,8 @@ fn artifact_kmeans_recovers_centers() {
 fn artifact_analyzer_builds_compressive_table() {
     let Some(rt) = runtime() else { return };
     let cfg = GbdiConfig::default();
-    let mut artifact = Analyzer::new(AnalyzerBackend::Artifact(rt), cfg.clone());
-    let mut native = Analyzer::new(AnalyzerBackend::Native, cfg);
+    let mut artifact = Analyzer::new(Box::new(ArtifactSelector::new(rt)), cfg.clone());
+    let mut native = Analyzer::native(cfg);
     let samples = mixture(3, N_SAMPLES);
     let t_a = artifact.analyze(&samples, 1).expect("artifact analyze");
     let t_n = native.analyze(&samples, 1).expect("native analyze");
