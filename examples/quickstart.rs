@@ -1,47 +1,79 @@
-//! Quickstart: the five-line GBDI story — generate a workload image, run
-//! background analysis, compress, decompress, check bit-exactness.
+//! Quickstart: the GBDI story on the random-access surface — generate a
+//! workload image, run background analysis, stream it through a
+//! compression session, then serve single cache-line reads and writes
+//! straight out of the compressed frame (no whole-image decode).
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig};
 use gbdi::report::fmt_ratio;
-use gbdi::workloads;
+use gbdi::{workloads, BlockCodec, CodecKind, Compressor, GbdiConfig, Scratch};
+use std::sync::Arc;
+use std::time::Instant;
 
 fn main() {
     // 4 MiB of mcf-like memory content (pointer graph + small ints).
     let image = workloads::by_name("mcf").unwrap().generate(4 << 20, 7);
 
     // 1. Background data analysis: sample, cluster (modified k-means),
-    //    pair each global base with a max-delta width class.
-    let config = GbdiConfig::default();
-    let table = analyze::analyze_image(&image, &config);
-    println!("analysis found {} global bases:", table.len());
-    for e in table.entries().iter().take(8) {
-        println!("  base {:#010x}  max-delta class {:>2} bits", e.base, e.width);
+    //    pair each global base with a max-delta width class. CodecKind
+    //    wraps that into a ready codec.
+    let codec: Arc<dyn BlockCodec> =
+        Arc::from(CodecKind::Gbdi.build_for_image(&image, &GbdiConfig::default()));
+
+    // 2. Compress through a streaming session: chunked input, bounded
+    //    memory (only one partial block is ever buffered).
+    let mut session = Compressor::new(Arc::clone(&codec));
+    for chunk in image.chunks(64 << 10) {
+        session.write(chunk);
     }
-
-    // 2. Compress.
-    let codec = GbdiCodec::new(table, config);
-    let (compressed, stats) = codec.compress_image_stats(&image);
+    let mut frame = session.finish();
     println!(
-        "\ncompressed {} KiB -> {} KiB  ratio {}",
+        "compressed {} KiB -> {} KiB  ratio {}  ({} blocks indexed)",
         image.len() / 1024,
-        compressed.total_len() / 1024,
-        fmt_ratio(compressed.ratio())
-    );
-    println!(
-        "blocks: {} gbdi, {} zero, {} rep, {} raw; outliers {:.2}%",
-        stats.gbdi_blocks,
-        stats.zero_blocks,
-        stats.rep_blocks,
-        stats.raw_blocks,
-        stats.outlier_frac() * 100.0
+        frame.compressed_len() / 1024,
+        fmt_ratio(image.len() as f64 / frame.compressed_len() as f64),
+        frame.n_blocks()
     );
 
-    // 3. Decompress and verify (always bit-exact).
-    let restored = gbdi::gbdi::decode::decompress_image(&compressed).expect("decode");
-    assert_eq!(restored, image);
-    println!("\nreconstruction: BIT-EXACT");
+    // 3. Random access: single cache-line reads out of the compressed
+    //    image — O(1) in the image size, zero allocations per read.
+    let mut line = [0u8; 64];
+    let t0 = Instant::now();
+    let reads = 100_000usize;
+    let mut checksum = 0u64;
+    for i in 0..reads {
+        let blk = (i * 2654435761) % frame.n_blocks(); // scattered probe
+        frame.read_block(blk, &mut line).expect("read");
+        checksum = checksum.wrapping_add(line[0] as u64);
+    }
+    let per_read = t0.elapsed().as_nanos() as f64 / reads as f64;
+    let t0 = Instant::now();
+    let full = frame.decompress().expect("decode");
+    let full_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(full, image);
+    println!(
+        "read_block: {per_read:.0} ns/line (checksum {checksum}) vs whole-image decode {full_ms:.1} ms"
+    );
+
+    // 4. Writes recompress one line in place; growth spills to the
+    //    frame's patch region instead of rewriting the image.
+    let mut scratch = Scratch::new();
+    let hot_line = [0xA5u8; 64];
+    let wr = frame.write_block(123, &hot_line, &mut scratch).expect("write");
+    println!(
+        "write_block: {} bits re-encoded {}",
+        wr.bits,
+        if wr.spilled { "(spilled to patch region)" } else { "(in place)" }
+    );
+    frame.read_block(123, &mut line).expect("read back");
+    assert_eq!(line, hot_line);
+
+    // 5. Ship it: compaction folds the patch region back into the
+    //    canonical container format, bit-exact.
+    let container = frame.to_container();
+    let restored = container.decompress().expect("decode");
+    assert_eq!(&restored[123 * 64..124 * 64], &hot_line[..]);
+    println!("\nreconstruction after random writes: BIT-EXACT");
 }

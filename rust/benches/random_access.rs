@@ -1,0 +1,105 @@
+//! Random-access latency: single-block reads through the
+//! [`gbdi::Frame`] index vs the whole-image decode every consumer paid
+//! before the Frame API existed — across the paper's nine workloads on
+//! 4 MiB images, for all three block codecs on the reference workload.
+//!
+//! The acceptance bar this bench guards: a single-block read must be
+//! ≥ 10x faster than a full decode on a 4 MiB image, with **zero heap
+//! allocations** per `read_block` and per `estimate_block_bits_with`
+//! call at steady state (measured by the crate's counting allocator,
+//! registered as this binary's global allocator).
+//!
+//! `cargo bench --bench random_access`
+
+use gbdi::util::alloc::CountingAlloc;
+use gbdi::util::bench::Bencher;
+use gbdi::{workloads, BlockCodec, CodecKind, Frame, GbdiConfig, Scratch};
+use std::sync::Arc;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+fn main() {
+    let fast = std::env::var("GBDI_BENCH_FAST").is_ok_and(|v| v == "1");
+    let size: usize = if fast { 1 << 20 } else { 4 << 20 };
+    println!(
+        "== random access: Frame::read_block vs whole-image decode ({} MiB images) ==\n",
+        size >> 20
+    );
+    let cfg = GbdiConfig::default();
+    let mut b = Bencher::new();
+
+    // all nine workloads under GBDI (the paper's codec)
+    for w in workloads::all() {
+        let img = w.generate(size, 7);
+        let codec: Arc<dyn BlockCodec> = Arc::from(CodecKind::Gbdi.build_for_image(&img, &cfg));
+        let container = gbdi::container::compress(codec.as_ref(), &img);
+        let frame = Frame::with_codec(container.clone(), Arc::clone(&codec)).expect("frame");
+        let n = frame.n_blocks();
+        let mut line = vec![0u8; frame.block_bytes()];
+        let mut i = 0usize;
+        let read = b
+            .bench(&format!("read_block/{}", w.name()), Some(64), || {
+                i = (i.wrapping_mul(2654435761).wrapping_add(12345)) % n; // scattered
+                frame.read_block(i, &mut line).unwrap();
+                line[0]
+            })
+            .mean;
+        let full = b
+            .bench(&format!("decompress/{}", w.name()), Some(img.len() as u64), || {
+                container.decompress().unwrap()
+            })
+            .mean;
+        let speedup = full.as_nanos() as f64 / (read.as_nanos() as f64).max(1.0);
+        b.metric(&format!("speedup/{}", w.name()), speedup);
+        assert!(
+            speedup >= 10.0,
+            "{}: single-block read only {speedup:.1}x faster than full decode",
+            w.name()
+        );
+
+        // allocation budget: steady-state reads and estimates are free.
+        // (warmed above: the scratch writer and line buffer exist)
+        let mut scratch = Scratch::new();
+        let block = &img[0..64];
+        codec.estimate_block_bits_with(block, &mut scratch); // warm scratch
+        let before = CountingAlloc::allocations();
+        let mut sink = 0u64;
+        for k in 0..4096usize {
+            let idx = (k * 997) % n;
+            frame.read_block(idx, &mut line).unwrap();
+            sink = sink.wrapping_add(line[0] as u64);
+            sink = sink.wrapping_add(
+                codec.estimate_block_bits_with(&img[idx * 64..(idx + 1) * 64], &mut scratch),
+            );
+        }
+        let allocs = CountingAlloc::allocations() - before;
+        std::hint::black_box(sink);
+        b.metric(&format!("allocs_per_read/{}", w.name()), allocs as f64 / 4096.0);
+        assert_eq!(allocs, 0, "{}: hot loop allocated {allocs} times", w.name());
+    }
+
+    // codec sweep on the reference workload: the index is codec-agnostic
+    println!("\n-- per-codec single-block latency (mcf) --");
+    let img = workloads::by_name("mcf").unwrap().generate(size, 7);
+    for &kind in CodecKind::all() {
+        let codec: Arc<dyn BlockCodec> = Arc::from(kind.build_for_image(&img, &cfg));
+        let frame = Frame::compress(Arc::clone(&codec), &img);
+        let n = frame.n_blocks();
+        let mut line = vec![0u8; frame.block_bytes()];
+        let mut i = 0usize;
+        b.bench(&format!("read_block/codec/{}", kind.name()), Some(64), || {
+            i = (i.wrapping_mul(2654435761).wrapping_add(12345)) % n;
+            frame.read_block(i, &mut line).unwrap();
+            line[0]
+        });
+    }
+
+    std::fs::create_dir_all("target").ok();
+    b.write_csv("target/random_access.csv").ok();
+    println!("\ncsv: target/random_access.csv");
+    match b.write_bench_json("random_access") {
+        Ok(p) => println!("json: {}", p.display()),
+        Err(e) => eprintln!("json write failed: {e}"),
+    }
+}

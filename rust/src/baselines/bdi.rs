@@ -87,36 +87,54 @@ fn sign_fits(delta: u64, k: usize, d: usize) -> bool {
 }
 
 impl Bdi {
-    /// Try encoding `block` with (k, d); return per-word (mask, delta)
-    /// plan if every word fits against the block base or the zero base.
-    fn plan(block: &[u8], k: usize, d: usize) -> Option<(u64, Vec<(bool, u64)>)> {
+    /// Feasibility scan for the (k, d) encoding: every word must fit
+    /// against either the zero base or the block base. Plan-free — the
+    /// selection loop runs this for the whole encoding menu without
+    /// materializing anything.
+    fn plan_fits(block: &[u8], k: usize, d: usize) -> bool {
         let n = block.len() / k;
         let kbits = 8 * k as u32;
-        // base = first word that does not fit the zero base
         let mut base: Option<u64> = None;
-        let mut plan = Vec::with_capacity(n);
         for i in 0..n {
             let v = read_le(block, i, k);
-            let zero_delta = v; // v - 0
-            if sign_fits(zero_delta, k, d) {
-                plan.push((true, zero_delta & mask_bits(8 * d as u32)));
-                continue;
+            if sign_fits(v, k, d) {
+                continue; // zero base
             }
-            let b = match base {
-                Some(b) => b,
-                None => {
-                    base = Some(v);
-                    v
-                }
-            };
-            let delta = v.wrapping_sub(b) & mask_bits(kbits);
-            if sign_fits(delta, k, d) {
-                plan.push((false, delta & mask_bits(8 * d as u32)));
-            } else {
-                return None;
+            let b = *base.get_or_insert(v);
+            if !sign_fits(v.wrapping_sub(b) & mask_bits(kbits), k, d) {
+                return false;
             }
         }
-        Some((base.unwrap_or(0), plan))
+        true
+    }
+
+    /// Materialize the per-word (zero-base?, delta) plan for an encoding
+    /// [`Self::plan_fits`] already accepted, into a caller-owned buffer
+    /// (cleared first). Returns the block base — or `None` if the
+    /// encoding does not actually fit, so a future divergence from the
+    /// feasibility scan degrades to the raw fallback instead of emitting
+    /// a corrupt stream.
+    fn plan_into(block: &[u8], k: usize, d: usize, plan: &mut Vec<(bool, u64)>) -> Option<u64> {
+        let n = block.len() / k;
+        let kbits = 8 * k as u32;
+        let dmask = mask_bits(8 * d as u32);
+        let mut base: Option<u64> = None;
+        plan.clear();
+        for i in 0..n {
+            let v = read_le(block, i, k);
+            if sign_fits(v, k, d) {
+                plan.push((true, v & dmask));
+                continue;
+            }
+            let b = *base.get_or_insert(v);
+            let delta = v.wrapping_sub(b) & mask_bits(kbits);
+            if !sign_fits(delta, k, d) {
+                debug_assert!(false, "plan_into on an infeasible encoding");
+                return None;
+            }
+            plan.push((false, delta & dmask));
+        }
+        Some(base.unwrap_or(0))
     }
 
     /// Size in bits of a (k, d) encoding for an n-word block: id + base +
@@ -127,6 +145,14 @@ impl Bdi {
     }
 
     fn encode_block(&self, block: &[u8], w: &mut BitWriter) {
+        let mut plan = Vec::new();
+        self.encode_block_with(block, w, &mut plan);
+    }
+
+    /// [`Self::encode_block`] with a caller-owned plan buffer (the
+    /// [`crate::codec::Scratch`]-aware hot path: zero allocations once
+    /// the buffer reaches its steady-state size).
+    fn encode_block_with(&self, block: &[u8], w: &mut BitWriter, plan: &mut Vec<(bool, u64)>) {
         // fast paths
         if block.len() == self.block_bytes {
             if block.iter().all(|&b| b == 0) {
@@ -142,32 +168,34 @@ impl Bdi {
                     return;
                 }
             }
-            // pick the smallest fitting delta encoding
-            let mut best: Option<(Enc, u64, u64, Vec<(bool, u64)>)> = None;
+            // pick the smallest fitting delta encoding: one plan-free
+            // feasibility pass over the menu, then materialize only the
+            // winner into the reusable buffer
+            let mut best: Option<(Enc, u64)> = None;
             for enc in [Enc::B8D1, Enc::B4D1, Enc::B8D2, Enc::B2D1, Enc::B4D2, Enc::B8D4] {
                 let (k, d) = enc.kd().unwrap();
                 if block.len() % k != 0 {
                     continue;
                 }
-                if let Some((base, plan)) = Self::plan(block, k, d) {
-                    let bits = Self::enc_bits(block.len(), k, d);
-                    if best.as_ref().map_or(true, |(_, bb, _, _)| bits < *bb) {
-                        best = Some((enc, bits, base, plan));
-                    }
+                let bits = Self::enc_bits(block.len(), k, d);
+                if best.map_or(true, |(_, bb)| bits < bb) && Self::plan_fits(block, k, d) {
+                    best = Some((enc, bits));
                 }
             }
-            if let Some((enc, bits, base, plan)) = best {
+            if let Some((enc, bits)) = best {
                 if bits < 4 + 8 * block.len() as u64 {
                     let (k, d) = enc.kd().unwrap();
-                    w.put(enc as u64, 4);
-                    w.put(base & mask_bits(8 * k as u32), 8 * k as u32);
-                    for &(zero, _) in &plan {
-                        w.put_bit(zero);
+                    if let Some(base) = Self::plan_into(block, k, d, plan) {
+                        w.put(enc as u64, 4);
+                        w.put(base & mask_bits(8 * k as u32), 8 * k as u32);
+                        for &(zero, _) in plan.iter() {
+                            w.put_bit(zero);
+                        }
+                        for &(_, delta) in plan.iter() {
+                            w.put(delta, 8 * d as u32);
+                        }
+                        return;
                     }
-                    for &(_, delta) in &plan {
-                        w.put(delta, 8 * d as u32);
-                    }
-                    return;
                 }
             }
         }
@@ -207,17 +235,34 @@ impl Bdi {
                 let kbits = 8 * k as u32;
                 let dbits = 8 * d as u32;
                 let base = r.get(kbits).map_err(|_| corrupt("truncated base"))?;
-                let mut zero_mask = Vec::with_capacity(n);
-                for _ in 0..n {
-                    zero_mask.push(r.get_bit().map_err(|_| corrupt("truncated mask"))?);
+                // The zero-base mask precedes the deltas on the wire. Run
+                // two cursors instead of buffering the mask: `r` walks the
+                // mask in up-to-57-bit gulps while a clone walks the delta
+                // stream just past it — allocation-free for any block size
+                // (this is the per-line read path of Frame::read_block).
+                let mut dr = r.clone();
+                let mut skip = n as u64;
+                while skip > 0 {
+                    let take = skip.min(57) as u32;
+                    dr.get(take).map_err(|_| corrupt("truncated mask"))?;
+                    skip -= take as u64;
                 }
-                for i in 0..n {
-                    let delta = r.get(dbits).map_err(|_| corrupt("truncated delta"))?;
-                    // sign-extend delta from dbits to kbits
-                    let sd = ((delta << (64 - dbits)) as i64 >> (64 - dbits)) as u64;
-                    let v = if zero_mask[i] { sd } else { base.wrapping_add(sd) } & mask_bits(kbits);
-                    out[i * k..(i + 1) * k].copy_from_slice(&v.to_le_bytes()[..k]);
+                let mut i = 0usize;
+                while i < n {
+                    let take = (n - i).min(57);
+                    let mut m = r.get(take as u32).map_err(|_| corrupt("truncated mask"))?;
+                    for _ in 0..take {
+                        let delta = dr.get(dbits).map_err(|_| corrupt("truncated delta"))?;
+                        // sign-extend delta from dbits to kbits
+                        let sd = ((delta << (64 - dbits)) as i64 >> (64 - dbits)) as u64;
+                        let v = if m & 1 != 0 { sd } else { base.wrapping_add(sd) }
+                            & mask_bits(kbits);
+                        out[i * k..(i + 1) * k].copy_from_slice(&v.to_le_bytes()[..k]);
+                        m >>= 1;
+                        i += 1;
+                    }
                 }
+                *r = dr;
             }
         }
         Ok(())
@@ -249,6 +294,17 @@ impl crate::codec::BlockCodec for Bdi {
     fn compress_block(&self, block: &[u8], w: &mut BitWriter) -> u32 {
         let start = w.bit_len();
         self.encode_block(block, w);
+        (w.bit_len() - start) as u32
+    }
+
+    fn compress_block_with(
+        &self,
+        block: &[u8],
+        w: &mut BitWriter,
+        scratch: &mut crate::codec::Scratch,
+    ) -> u32 {
+        let start = w.bit_len();
+        self.encode_block_with(block, w, &mut scratch.bdi_plan);
         (w.bit_len() - start) as u32
     }
 

@@ -53,6 +53,37 @@ impl CodecId {
     }
 }
 
+/// Caller-owned reusable buffers for the allocation-free hot paths:
+/// [`BlockCodec::compress_block_with`],
+/// [`BlockCodec::estimate_block_bits_with`], and the random-access
+/// [`crate::frame::Frame`] write/range operations all borrow one of
+/// these instead of allocating per call.
+///
+/// A `Scratch` is plain state — create one per thread (they are cheap
+/// and start empty; buffers grow to their steady-state size on first
+/// use and are then reused). It is deliberately *not* `Sync`-shared:
+/// ownership stays with the caller, which is what lets the per-request
+/// paths in the coordinator and the memory simulator run without a
+/// single heap allocation.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Reusable bit writer (estimate + in-place write paths).
+    pub(crate) w: BitWriter,
+    /// One decoded block (partial-block edges of range reads).
+    pub(crate) block: Vec<u8>,
+    /// GBDI per-word (base ptr, delta, width) plan.
+    pub(crate) gbdi_plan: Vec<(u64, i64, u32)>,
+    /// BDI per-word (zero-base?, delta) plan.
+    pub(crate) bdi_plan: Vec<(bool, u64)>,
+}
+
+impl Scratch {
+    /// Fresh, empty scratch space.
+    pub fn new() -> Self {
+        Scratch::default()
+    }
+}
+
 /// A block-granular lossless codec: the one interface the simulator, the
 /// coordinator, the container layer, and the CLI sweep all consume.
 ///
@@ -80,16 +111,41 @@ pub trait BlockCodec: Send + Sync {
     /// Compress one block into `w`; returns the bits written.
     fn compress_block(&self, block: &[u8], w: &mut BitWriter) -> u32;
 
+    /// [`Self::compress_block`] with caller-owned [`Scratch`] buffers —
+    /// the hot-path variant: codecs that need per-block temporaries (the
+    /// GBDI word plan, BDI's per-word mask plan) take them from `scratch`
+    /// instead of allocating. The default ignores the scratch and
+    /// delegates; stateless codecs need nothing more.
+    fn compress_block_with(&self, block: &[u8], w: &mut BitWriter, scratch: &mut Scratch) -> u32 {
+        let _ = scratch;
+        self.compress_block(block, w)
+    }
+
     /// Decode one block from `r` into `out` (exactly `out.len()` bytes;
-    /// pass a short slice for ragged tail blocks).
+    /// pass a short slice for ragged tail blocks). Implementations must
+    /// not allocate: this is the per-request path of
+    /// [`crate::frame::Frame::read_block`].
     fn decompress_block(&self, r: &mut BitReader<'_>, out: &mut [u8]) -> Result<()>;
 
-    /// Compressed bit size of `block` without emitting anything. The
-    /// default encodes into a scratch writer (exact but allocating);
-    /// codecs with a cheap closed form override it.
+    /// Compressed bit size of `block` without emitting anything.
+    /// Convenience wrapper that builds a throwaway [`Scratch`] per call —
+    /// fine for one-offs, wrong for loops: analysis loops must hold a
+    /// `Scratch` and call [`Self::estimate_block_bits_with`], which is
+    /// allocation-free at steady state.
     fn estimate_block_bits(&self, block: &[u8]) -> u64 {
-        let mut w = BitWriter::with_capacity(block.len() + 8);
-        self.compress_block(block, &mut w) as u64
+        self.estimate_block_bits_with(block, &mut Scratch::new())
+    }
+
+    /// Exact compressed bit size of `block` using caller-owned scratch
+    /// buffers. The default encodes into the scratch writer (reused
+    /// across calls, so zero allocations once warm); codecs with a cheap
+    /// closed form override it.
+    fn estimate_block_bits_with(&self, block: &[u8], scratch: &mut Scratch) -> u64 {
+        let mut w = std::mem::take(&mut scratch.w);
+        w.clear();
+        let bits = self.compress_block_with(block, &mut w, scratch) as u64;
+        scratch.w = w;
+        bits
     }
 
     /// Codec-specific configuration blob embedded in containers, parsed
@@ -238,6 +294,43 @@ mod tests {
             assert_eq!(c.name(), k.name());
             assert_eq!(c.codec_id(), k.id(), "registry/wire id must agree");
             assert_eq!(c.block_bytes(), 128);
+        }
+    }
+
+    #[test]
+    fn scratch_paths_agree_with_plain_paths() {
+        // compress_block_with / estimate_block_bits_with must be
+        // bit-identical to the allocating entry points for every codec
+        let mut rng = crate::util::prng::Rng::new(77);
+        let mut img = vec![0u8; 64 * 64];
+        for c in img.chunks_mut(16) {
+            let v = 9_000u32.wrapping_add(rng.range_i64(-500, 500) as u32);
+            c[..4].copy_from_slice(&v.to_le_bytes());
+        }
+        let cfg = GbdiConfig::default();
+        let mut scratch = Scratch::new();
+        for &k in CodecKind::all() {
+            let codec = k.build_for_image(&img, &cfg);
+            for block in img.chunks(64) {
+                let mut a = BitWriter::new();
+                let bits_a = codec.compress_block(block, &mut a);
+                let mut b = BitWriter::new();
+                let bits_b = codec.compress_block_with(block, &mut b, &mut scratch);
+                assert_eq!(bits_a, bits_b, "{}", k.name());
+                assert_eq!(a.finish(), b.finish(), "{} stream", k.name());
+                assert_eq!(
+                    codec.estimate_block_bits(block),
+                    bits_a as u64,
+                    "{} estimate",
+                    k.name()
+                );
+                assert_eq!(
+                    codec.estimate_block_bits_with(block, &mut scratch),
+                    bits_a as u64,
+                    "{} estimate_with",
+                    k.name()
+                );
+            }
         }
     }
 

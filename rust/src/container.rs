@@ -95,6 +95,15 @@ impl Container {
         decompress(self)
     }
 
+    /// Turn this container into a random-access [`crate::frame::Frame`]:
+    /// the payload is moved (not copied), the codec is rebuilt from the
+    /// recorded identity, and the block-offset index is materialized —
+    /// after which single blocks read and write in O(1) without whole-
+    /// image decodes.
+    pub fn into_frame(self) -> Result<crate::frame::Frame> {
+        crate::frame::Frame::from_container(self)
+    }
+
     /// Serialize to the on-disk `.gbc` format.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.total_len());
@@ -211,8 +220,9 @@ impl Container {
     }
 }
 
-/// LEB128-encode a u32 (1–5 bytes; 1 byte for values < 128).
-fn put_varint(out: &mut Vec<u8>, mut v: u32) {
+/// LEB128-encode a u32 (1–5 bytes; 1 byte for values < 128) — the
+/// per-block bit-length encoding of the container's framing index.
+pub fn put_varint(out: &mut Vec<u8>, mut v: u32) {
     loop {
         let b = (v & 0x7F) as u8;
         v >>= 7;
@@ -224,7 +234,8 @@ fn put_varint(out: &mut Vec<u8>, mut v: u32) {
     }
 }
 
-fn varint_len(v: u32) -> usize {
+/// Encoded length of [`put_varint`]`(v)` in bytes.
+pub fn varint_len(v: u32) -> usize {
     match v {
         0..=0x7F => 1,
         0x80..=0x3FFF => 2,
@@ -234,13 +245,20 @@ fn varint_len(v: u32) -> usize {
     }
 }
 
-fn read_varint(data: &[u8], off: &mut usize) -> Result<u32> {
+/// Decode one [`put_varint`] value at `data[*off..]`, advancing `off`.
+/// Strict: a fifth byte may only carry the top four bits of a `u32` —
+/// continuation past that, or payload bits above bit 31, is corruption
+/// (silently truncating them would mis-frame every later block).
+pub fn read_varint(data: &[u8], off: &mut usize) -> Result<u32> {
     let mut v: u32 = 0;
     for shift in 0..5u32 {
         let b = *data
             .get(*off)
             .ok_or_else(|| Error::Corrupt("container: truncated varint".into()))?;
         *off += 1;
+        if shift == 4 && b & 0xF0 != 0 {
+            return Err(Error::Corrupt("container: varint overflows u32".into()));
+        }
         v |= ((b & 0x7F) as u32) << (7 * shift);
         if b & 0x80 == 0 {
             return Ok(v);
@@ -379,10 +397,11 @@ pub fn decompress_parts(
     Ok(out)
 }
 
-/// Decompress with a caller-provided codec (must match the container's
-/// codec id and block size — the fast path when the codec is already
-/// built, e.g. the coordinator's codec ring).
-pub fn decompress_with(c: &Container, codec: &dyn BlockCodec) -> Result<Vec<u8>> {
+/// Check that a caller-built codec matches a container's recorded
+/// identity (wire id + block size) — the one definition of "this
+/// decoder may decode that container", shared by [`decompress_with`]
+/// and [`crate::frame::Frame::with_codec`].
+pub fn check_codec_identity(c: &Container, codec: &dyn BlockCodec) -> Result<()> {
     if codec.codec_id() != c.codec_id {
         return Err(Error::Corrupt(format!(
             "codec mismatch: container is {}, decoder is {}",
@@ -397,6 +416,14 @@ pub fn decompress_with(c: &Container, codec: &dyn BlockCodec) -> Result<Vec<u8>>
             codec.block_bytes()
         )));
     }
+    Ok(())
+}
+
+/// Decompress with a caller-provided codec (must match the container's
+/// codec id and block size — the fast path when the codec is already
+/// built, e.g. the coordinator's codec ring).
+pub fn decompress_with(c: &Container, codec: &dyn BlockCodec) -> Result<Vec<u8>> {
+    check_codec_identity(c, codec)?;
     decompress_parts(codec, &c.payload, &c.block_bits, c.original_len, c.chunk_blocks)
 }
 
@@ -443,6 +470,16 @@ mod tests {
         }
         let mut off = 0;
         assert!(read_varint(&[0x80, 0x80], &mut off).is_err()); // truncated
+        // strictness: a fifth byte carrying bits past u32 (or continuing)
+        // is corruption, not silent truncation
+        let mut off = 0;
+        assert!(read_varint(&[0xFF, 0xFF, 0xFF, 0xFF, 0x7F], &mut off).is_err());
+        let mut off = 0;
+        assert!(read_varint(&[0xFF, 0xFF, 0xFF, 0xFF, 0x10], &mut off).is_err());
+        let mut off = 0;
+        assert!(read_varint(&[0xFF, 0xFF, 0xFF, 0xFF, 0x8F], &mut off).is_err());
+        let mut off = 0;
+        assert_eq!(read_varint(&[0xFF, 0xFF, 0xFF, 0xFF, 0x0F], &mut off).unwrap(), u32::MAX);
     }
 
     #[test]

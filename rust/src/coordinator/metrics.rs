@@ -16,6 +16,11 @@ pub struct Metrics {
     table_rejects: AtomicU64,
     recompressions: AtomicU64,
     read_errors: AtomicU64,
+    write_errors: AtomicU64,
+    block_reads: AtomicU64,
+    block_read_ns: AtomicU64,
+    block_writes: AtomicU64,
+    block_write_ns: AtomicU64,
 }
 
 /// Point-in-time copy of [`Metrics`].
@@ -39,8 +44,18 @@ pub struct MetricsSnapshot {
     pub table_rejects: u64,
     /// Pages migrated to a newer table version.
     pub recompressions: u64,
-    /// Failed page reads.
+    /// Failed page/block reads.
     pub read_errors: u64,
+    /// Failed block writes.
+    pub write_errors: u64,
+    /// Single-block GETs served straight from frames.
+    pub block_reads: u64,
+    /// Nanoseconds spent serving block reads.
+    pub block_read_ns: u64,
+    /// Single-block PUTs (in-place recompression) served.
+    pub block_writes: u64,
+    /// Nanoseconds spent serving block writes.
+    pub block_write_ns: u64,
 }
 
 impl MetricsSnapshot {
@@ -59,6 +74,26 @@ impl MetricsSnapshot {
             0.0
         } else {
             self.bytes_in as f64 / (1024.0 * 1024.0) / (self.compress_ns as f64 / 1e9)
+        }
+    }
+
+    /// Mean single-block read latency in nanoseconds (0 before the
+    /// first block GET).
+    pub fn block_read_mean_ns(&self) -> f64 {
+        if self.block_reads == 0 {
+            0.0
+        } else {
+            self.block_read_ns as f64 / self.block_reads as f64
+        }
+    }
+
+    /// Mean single-block write latency in nanoseconds (0 before the
+    /// first block PUT).
+    pub fn block_write_mean_ns(&self) -> f64 {
+        if self.block_writes == 0 {
+            0.0
+        } else {
+            self.block_write_ns as f64 / self.block_writes as f64
         }
     }
 }
@@ -102,6 +137,23 @@ impl Metrics {
         self.read_errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a failed block write.
+    pub fn write_error(&self) {
+        self.write_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one served single-block read and its latency.
+    pub fn block_read(&self, ns: u64) {
+        self.block_reads.fetch_add(1, Ordering::Relaxed);
+        self.block_read_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Record one served single-block write and its latency.
+    pub fn block_write(&self, ns: u64) {
+        self.block_writes.fetch_add(1, Ordering::Relaxed);
+        self.block_write_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
     /// Snapshot all counters.
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
@@ -115,6 +167,11 @@ impl Metrics {
             table_rejects: self.table_rejects.load(Ordering::Relaxed),
             recompressions: self.recompressions.load(Ordering::Relaxed),
             read_errors: self.read_errors.load(Ordering::Relaxed),
+            write_errors: self.write_errors.load(Ordering::Relaxed),
+            block_reads: self.block_reads.load(Ordering::Relaxed),
+            block_read_ns: self.block_read_ns.load(Ordering::Relaxed),
+            block_writes: self.block_writes.load(Ordering::Relaxed),
+            block_write_ns: self.block_write_ns.load(Ordering::Relaxed),
         }
     }
 }
@@ -132,7 +189,16 @@ mod tests {
         m.analysis(false);
         m.analysis_skipped();
         m.recompression();
+        m.block_read(100);
+        m.block_read(300);
+        m.block_write(500);
+        m.write_error();
         let s = m.snapshot();
+        assert_eq!(s.write_errors, 1);
+        assert_eq!(s.block_reads, 2);
+        assert_eq!(s.block_read_mean_ns(), 200.0);
+        assert_eq!(s.block_writes, 1);
+        assert_eq!(s.block_write_mean_ns(), 500.0);
         assert_eq!(s.pages_in, 2);
         assert_eq!(s.bytes_in, 8192);
         assert_eq!(s.bytes_out, 3072);

@@ -3,31 +3,41 @@
 //! page stays decodable until migrated. Codec-agnostic: the ring holds
 //! `Arc<dyn BlockCodec>` — GBDI tables are just one kind of versioned
 //! codec state.
+//!
+//! Pages are stored as random-access [`Frame`]s, so the serving paths
+//! are block-granular: [`PageStore::read_block`] decodes one cache line
+//! out of a compressed page in O(1) without materializing the page, and
+//! [`PageStore::write_block`] recompresses one line in place (spilling
+//! to the frame's patch region when it grows) instead of round-tripping
+//! the whole page.
 
-use crate::codec::BlockCodec;
-use crate::container;
+use crate::codec::{BlockCodec, Scratch};
+use crate::frame::{BlockWrite, Frame};
 use crate::{Error, Result};
 use std::collections::HashMap;
 use std::sync::Arc;
 
-/// One stored page.
-#[derive(Debug, Clone)]
+/// One stored page: a compressed random-access frame. The codec version
+/// it references is the frame's codec's version.
 pub struct StoredPage {
-    /// Codec version the payload references (GBDI: table version).
-    pub codec_version: u64,
-    /// Original (logical) length.
-    pub original_len: usize,
-    /// Per-block bit lengths.
-    pub block_bits: Vec<u32>,
-    /// Packed payload.
-    pub payload: Vec<u8>,
+    /// The page's compressed form + block index.
+    pub frame: Frame,
 }
 
 impl StoredPage {
-    /// Compressed bytes (payload + framing approximation: ~2 bytes per
-    /// block-length varint + fixed header).
+    /// Codec version the payload references (GBDI: table version).
+    pub fn codec_version(&self) -> u64 {
+        self.frame.codec().version()
+    }
+
+    /// Original (logical) length in bytes.
+    pub fn original_len(&self) -> usize {
+        self.frame.len()
+    }
+
+    /// Compressed bytes including framing (payload + patches + index).
     pub fn stored_len(&self) -> usize {
-        self.payload.len() + 2 * self.block_bits.len() + 16
+        self.frame.compressed_len()
     }
 }
 
@@ -36,6 +46,8 @@ impl StoredPage {
 pub struct PageStore {
     pages: HashMap<u64, StoredPage>,
     codecs: HashMap<u64, Arc<dyn BlockCodec>>,
+    /// Reusable buffers for the block-granular write path.
+    scratch: Scratch,
 }
 
 impl PageStore {
@@ -62,9 +74,9 @@ impl PageStore {
     /// Insert/overwrite a page.
     pub fn put(&mut self, page_id: u64, page: StoredPage) {
         debug_assert!(
-            self.codecs.contains_key(&page.codec_version),
+            self.codecs.contains_key(&page.codec_version()),
             "page references unpublished codec v{}",
-            page.codec_version
+            page.codec_version()
         );
         self.pages.insert(page_id, page);
     }
@@ -96,7 +108,7 @@ impl PageStore {
 
     /// Total logical bytes stored.
     pub fn logical_bytes(&self) -> usize {
-        self.pages.values().map(|p| p.original_len).sum()
+        self.pages.values().map(|p| p.original_len()).sum()
     }
 
     /// Ids of pages encoded with a version older than `version`.
@@ -104,36 +116,53 @@ impl PageStore {
         let mut ids: Vec<u64> = self
             .pages
             .iter()
-            .filter(|(_, p)| p.codec_version < version)
+            .filter(|(_, p)| p.codec_version() < version)
             .map(|(&id, _)| id)
             .collect();
         ids.sort_unstable();
         ids
     }
 
-    /// Decompress a page using its recorded codec version.
+    fn page(&self, page_id: u64) -> Result<&StoredPage> {
+        self.pages
+            .get(&page_id)
+            .ok_or_else(|| Error::Corrupt(format!("page {page_id} not found")))
+    }
+
+    /// Decompress a whole page (each frame carries its own codec, so
+    /// any published version decodes).
     pub fn read(&self, page_id: u64) -> Result<Vec<u8>> {
+        self.page(page_id)?.frame.decompress()
+    }
+
+    /// Decode one block of a page into `out[..len]`; returns the bytes
+    /// written. O(1) in the page size, allocation-free.
+    pub fn read_block(&self, page_id: u64, block: usize, out: &mut [u8]) -> Result<usize> {
+        self.page(page_id)?.frame.read_block(block, out)
+    }
+
+    /// Recompress one block of a page in place from `data` (exactly the
+    /// block's logical length). Spilled writes accumulate patch-region
+    /// garbage; once a page's patch bytes exceed half its footprint the
+    /// frame is compacted, so storage accounting stays bounded under
+    /// sustained write traffic.
+    pub fn write_block(&mut self, page_id: u64, block: usize, data: &[u8]) -> Result<BlockWrite> {
         let page = self
             .pages
-            .get(&page_id)
+            .get_mut(&page_id)
             .ok_or_else(|| Error::Corrupt(format!("page {page_id} not found")))?;
-        let codec = self.codecs.get(&page.codec_version).ok_or_else(|| {
-            Error::Corrupt(format!("codec v{} not in ring", page.codec_version))
-        })?;
-        container::decompress_parts(
-            codec.as_ref(),
-            &page.payload,
-            &page.block_bits,
-            page.original_len,
-            0,
-        )
+        let wr = page.frame.write_block(block, data, &mut self.scratch)?;
+        if page.frame.patch_len() * 2 > page.frame.compressed_len() {
+            page.frame.compact();
+        }
+        Ok(wr)
     }
 
     /// Drop codec versions no page references anymore (except the newest
     /// `keep` versions). Returns how many were dropped.
     pub fn gc_codecs(&mut self, keep: usize) -> usize {
         let referenced: std::collections::BTreeSet<u64> =
-            self.pages.values().map(|p| p.codec_version).collect();
+            self.pages.values().map(|p| p.codec_version()).collect();
         let mut versions: Vec<u64> = self.codecs.keys().copied().collect();
         versions.sort_unstable();
         let keep_from = versions.len().saturating_sub(keep);
@@ -155,14 +184,8 @@ mod tests {
     use crate::value::WordSize;
     use crate::workloads;
 
-    fn compress_page(data: &[u8], codec: &dyn BlockCodec) -> StoredPage {
-        let (payload, block_bits) = container::compress_blocks(codec, data);
-        StoredPage {
-            codec_version: codec.version(),
-            original_len: data.len(),
-            block_bits,
-            payload,
-        }
+    fn compress_page(data: &[u8], codec: &Arc<dyn BlockCodec>) -> StoredPage {
+        StoredPage { frame: Frame::compress(Arc::clone(codec), data) }
     }
 
     #[test]
@@ -179,15 +202,75 @@ mod tests {
 
         let mut store = PageStore::new();
         store.publish_codec(Arc::clone(&c1));
-        store.put(10, compress_page(&img_a, c1.as_ref()));
+        store.put(10, compress_page(&img_a, &c1));
         store.publish_codec(Arc::clone(&c2));
-        store.put(20, compress_page(&img_b, c2.as_ref()));
+        store.put(20, compress_page(&img_b, &c2));
 
         // both decode bit-exactly despite different codec versions
         assert_eq!(store.read(10).unwrap(), img_a);
         assert_eq!(store.read(20).unwrap(), img_b);
         assert_eq!(store.lagging_pages(2), vec![10]);
         assert_eq!(store.lagging_pages(1), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn block_reads_and_writes_hit_frames_not_pages() {
+        let cfg = GbdiConfig::default();
+        let img = workloads::by_name("mcf").unwrap().generate(4096, 9);
+        let codec: Arc<dyn BlockCodec> =
+            Arc::new(GbdiCodec::new(analyze::analyze_image(&img, &cfg), cfg));
+        let mut store = PageStore::new();
+        store.publish_codec(Arc::clone(&codec));
+        store.put(1, compress_page(&img, &codec));
+        // single-block GET matches the image slice
+        let mut buf = [0u8; 64];
+        for i in [0usize, 7, 63] {
+            let n = store.read_block(1, i, &mut buf).unwrap();
+            assert_eq!(&buf[..n], &img[i * 64..(i + 1) * 64]);
+        }
+        // single-block PUT is visible to both block and page reads
+        let line = [0x5Au8; 64];
+        store.write_block(1, 5, &line).unwrap();
+        let n = store.read_block(1, 5, &mut buf).unwrap();
+        assert_eq!(&buf[..n], &line[..]);
+        let mut expect = img.clone();
+        expect[5 * 64..6 * 64].copy_from_slice(&line);
+        assert_eq!(store.read(1).unwrap(), expect);
+        // out-of-range accesses error
+        assert!(store.read_block(1, 64, &mut buf).is_err());
+        assert!(store.read_block(99, 0, &mut buf).is_err());
+        assert!(store.write_block(99, 0, &line).is_err());
+    }
+
+    #[test]
+    fn sustained_block_writes_keep_storage_bounded() {
+        // growth-spill garbage must not accumulate without bound: the
+        // store compacts a frame once patch bytes dominate its footprint
+        let cfg = GbdiConfig::default();
+        let img = vec![0u8; 4096];
+        let codec: Arc<dyn BlockCodec> =
+            Arc::new(GbdiCodec::new(analyze::analyze_image(&img, &cfg), cfg));
+        let mut store = PageStore::new();
+        store.publish_codec(Arc::clone(&codec));
+        store.put(1, compress_page(&img, &codec));
+        let mut rng = crate::util::prng::Rng::new(5);
+        let mut noisy = [0u8; 64];
+        let mut expect = img.clone();
+        for round in 0..200 {
+            let blk = (round * 7) % 64;
+            if round % 3 == 2 {
+                noisy[..].fill(0);
+            } else {
+                rng.fill_bytes(&mut noisy);
+            }
+            store.write_block(1, blk, &noisy).unwrap();
+            expect[blk * 64..(blk + 1) * 64].copy_from_slice(&noisy);
+        }
+        // bound: the page never stores more than ~2x its worst-case raw
+        // footprint (64 raw blocks + framing), however many spills happened
+        let stored = store.get(1).unwrap().stored_len();
+        assert!(stored < 2 * (4096 + 4096 / 64 * 3 + 16), "stored {stored} B unbounded");
+        assert_eq!(store.read(1).unwrap(), expect, "content survives compactions");
     }
 
     #[test]
@@ -204,9 +287,9 @@ mod tests {
 
         let mut store = PageStore::new();
         store.publish_codec(Arc::clone(&bdi));
-        store.put(1, compress_page(&img, bdi.as_ref()));
+        store.put(1, compress_page(&img, &bdi));
         store.publish_codec(Arc::clone(&gbdi));
-        store.put(2, compress_page(&img, gbdi.as_ref()));
+        store.put(2, compress_page(&img, &gbdi));
         assert_eq!(store.read(1).unwrap(), img);
         assert_eq!(store.read(2).unwrap(), img);
         assert_eq!(store.codec_count(), 2);
@@ -228,7 +311,7 @@ mod tests {
             let codec: Arc<dyn BlockCodec> = Arc::new(GbdiCodec::new(t, cfg.clone()));
             store.publish_codec(Arc::clone(&codec));
             if v == 2 {
-                store.put(1, compress_page(&img, codec.as_ref()));
+                store.put(1, compress_page(&img, &codec));
             }
         }
         let dropped = store.gc_codecs(1);
@@ -247,7 +330,7 @@ mod tests {
         let codec: Arc<dyn BlockCodec> = Arc::new(GbdiCodec::new(t, cfg));
         let mut store = PageStore::new();
         store.publish_codec(Arc::clone(&codec));
-        store.put(1, compress_page(&img, codec.as_ref()));
+        store.put(1, compress_page(&img, &codec));
         assert_eq!(store.len(), 1);
         assert_eq!(store.logical_bytes(), 8192);
         assert!(store.stored_bytes() < 2048, "zeros compress: {}", store.stored_bytes());

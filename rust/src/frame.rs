@@ -1,0 +1,993 @@
+//! Random-access frames: O(1) single-block reads and writes over a
+//! compressed image, without a format break.
+//!
+//! GBDI is a *memory* compression algorithm — its deployment target
+//! serves single cache-line reads and writes out of compressed pages.
+//! The whole-image [`Container`](crate::container::Container) surface
+//! forces every consumer to pay a full decode plus a fresh allocation
+//! per access. A [`Frame`] fixes the access granularity instead of the
+//! format: it materializes a **block-offset index** (prefix sums of the
+//! per-block bit lengths the wire format already carries) once, then
+//! serves
+//!
+//! * [`Frame::read_block`] — decode one block straight out of the
+//!   packed payload: O(1) index lookup, zero heap allocations;
+//! * [`Frame::read_range`] — arbitrary byte ranges, decoding only the
+//!   touched blocks;
+//! * [`Frame::write_block`] — recompress one block in place. The new
+//!   encoding lands inside the block's old bit span when it fits
+//!   (slack bits are don't-care; framing records the new exact length)
+//!   and **spills to a patch region** when it grows — the expensive
+//!   event a real memory controller must amortize, surfaced to callers
+//!   via [`BlockWrite::spilled`];
+//! * [`Frame::append_blocks`] — grow the image without recompressing
+//!   what exists.
+//!
+//! All hot paths borrow caller-owned [`Scratch`] buffers instead of
+//! allocating. [`Frame::to_container`] compacts payload + patches back
+//! into the canonical serial container — frames are a runtime handle,
+//! the wire format is unchanged.
+//!
+//! On top of frames sit the streaming sessions: [`Compressor`] ingests
+//! chunked input with bounded buffering (one partial block), and
+//! [`Decompressor`] streams an image back out through a caller-sized
+//! window.
+
+use crate::codec::{build_codec, BlockCodec, Scratch};
+use crate::container::{self, varint_len, Container};
+use crate::util::bits::{overwrite_bits, BitReader, BitWriter};
+use crate::{Error, Result};
+use std::ops::Range;
+use std::sync::Arc;
+
+/// Sentinel: block lives in the base payload, not the patch region.
+const IN_BASE: (u32, u32) = (u32::MAX, 0);
+
+/// Outcome of a [`Frame::write_block`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockWrite {
+    /// Exact bits of the block's new encoding.
+    pub bits: u32,
+    /// The new encoding did not fit the block's current slot and was
+    /// appended to the patch region — the "page re-layout" event a
+    /// memory controller amortizes.
+    pub spilled: bool,
+}
+
+/// A compressed image handle with an O(1) block index.
+///
+/// Built from a [`Container`] ([`Frame::from_container`]), from raw
+/// image bytes ([`Frame::compress`]), or by a streaming [`Compressor`].
+/// Cheap to clone the codec (shared `Arc`); the payload is owned.
+#[derive(Clone)]
+pub struct Frame {
+    codec: Arc<dyn BlockCodec>,
+    /// The packed base payload (blocks at their original bit spans).
+    payload: Vec<u8>,
+    /// Spill region: byte-aligned slots for blocks that outgrew their
+    /// base span, plus all appended blocks.
+    patch: Vec<u8>,
+    /// Bit offset of each of the first `base_blocks` blocks inside
+    /// `payload`, plus one end sentinel (`base_blocks + 1` entries).
+    offsets: Vec<u64>,
+    /// Current exact encoding length per block (framing truth).
+    bits: Vec<u32>,
+    /// Per-block patch slot `(byte offset, byte capacity)`;
+    /// `(u32::MAX, 0)` = block lives in the base payload. Empty until
+    /// the first spill (read-only frames pay nothing).
+    patches: Vec<(u32, u32)>,
+    /// Blocks that have a span in `payload` (appended blocks do not).
+    base_blocks: usize,
+    original_len: usize,
+}
+
+impl Frame {
+    // ---- construction ----------------------------------------------------
+
+    /// Compress `image` serially into a fresh frame.
+    pub fn compress(codec: Arc<dyn BlockCodec>, image: &[u8]) -> Frame {
+        Self::compress_with(codec, image, &mut Scratch::new())
+    }
+
+    /// [`Self::compress`] with caller-owned scratch buffers (the
+    /// allocation-conscious path for loops building many frames).
+    pub fn compress_with(codec: Arc<dyn BlockCodec>, image: &[u8], scratch: &mut Scratch) -> Frame {
+        Self::compress_aligned(codec, image, 0, scratch)
+    }
+
+    /// Compress with per-block **slack**: each block's bit span in the
+    /// payload is rounded up to a multiple of `align_bits` (0 or 1 =
+    /// tight). Slack lets [`Self::write_block`] absorb growth in place —
+    /// the memory simulator aligns spans to its sector size so only
+    /// sector-crossing growth triggers a spill, exactly the re-layout
+    /// event the hardware model charges for.
+    pub fn compress_aligned(
+        codec: Arc<dyn BlockCodec>,
+        image: &[u8],
+        align_bits: u32,
+        scratch: &mut Scratch,
+    ) -> Frame {
+        let bb = codec.block_bytes();
+        let n = image.len().div_ceil(bb.max(1));
+        let mut w = BitWriter::with_capacity(image.len() / 2 + 64);
+        let mut bits = Vec::with_capacity(n);
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut cur: u64 = 0;
+        for block in image.chunks(bb) {
+            offsets.push(cur);
+            let b = codec.compress_block_with(block, &mut w, scratch);
+            bits.push(b);
+            cur += b as u64;
+            if align_bits > 1 {
+                let span_end = cur.next_multiple_of(align_bits as u64);
+                let mut pad = span_end - cur;
+                while pad > 0 {
+                    let take = pad.min(57) as u32;
+                    w.put(0, take);
+                    pad -= take as u64;
+                }
+                cur = span_end;
+            }
+        }
+        offsets.push(cur);
+        debug_assert_eq!(cur as usize, w.bit_len());
+        Frame {
+            codec,
+            payload: w.finish(),
+            patch: Vec::new(),
+            offsets,
+            base_blocks: bits.len(),
+            bits,
+            patches: Vec::new(),
+            original_len: image.len(),
+        }
+    }
+
+    /// Build a frame from a parsed [`Container`], rebuilding the decoder
+    /// from the recorded codec id, config, and table. The payload is
+    /// moved, not copied; the block-offset index is materialized here
+    /// (one pass over the bit lengths, honoring the chunk realignment of
+    /// parallel-compressed streams).
+    pub fn from_container(c: Container) -> Result<Frame> {
+        let codec = build_codec(c.codec_id, &c.config, c.table)?;
+        if codec.block_bytes() != c.block_bytes {
+            return Err(Error::Corrupt(format!(
+                "container block size {} disagrees with codec config {}",
+                c.block_bytes,
+                codec.block_bytes()
+            )));
+        }
+        Self::from_parts(Arc::from(codec), c.payload, c.block_bits, c.original_len, c.chunk_blocks)
+    }
+
+    /// [`Self::from_container`] with an already-built codec (the
+    /// coordinator's codec-ring path — skips table reconstruction). The
+    /// codec must match the container's identity and block size.
+    pub fn with_codec(c: Container, codec: Arc<dyn BlockCodec>) -> Result<Frame> {
+        container::check_codec_identity(&c, codec.as_ref())?;
+        Self::from_parts(codec, c.payload, c.block_bits, c.original_len, c.chunk_blocks)
+    }
+
+    /// Assemble a frame from compressed parts, materializing the offset
+    /// index and validating it against the payload (a forged bit-length
+    /// table must fail here, not at read time).
+    pub fn from_parts(
+        codec: Arc<dyn BlockCodec>,
+        payload: Vec<u8>,
+        bits: Vec<u32>,
+        original_len: usize,
+        chunk_blocks: usize,
+    ) -> Result<Frame> {
+        let bb = codec.block_bytes();
+        if bb == 0 {
+            return Err(Error::Config("block size must be positive".into()));
+        }
+        let expect = original_len.div_ceil(bb);
+        if bits.len() != expect {
+            return Err(Error::Corrupt(format!(
+                "frame: {} block lengths for an image of {expect} blocks",
+                bits.len()
+            )));
+        }
+        let mut offsets = Vec::with_capacity(bits.len() + 1);
+        let mut cur: u64 = 0;
+        for (i, &b) in bits.iter().enumerate() {
+            // parallel streams: every chunk_blocks-th block starts
+            // byte-aligned (mirrors container::decompress_parts)
+            if chunk_blocks > 0 && i > 0 && i % chunk_blocks == 0 {
+                cur = cur.next_multiple_of(8);
+            }
+            offsets.push(cur);
+            cur += b as u64;
+        }
+        offsets.push(cur);
+        if cur > (payload.len() as u64) * 8 {
+            return Err(Error::Corrupt(format!(
+                "frame: index claims {cur} bits, payload holds {}",
+                payload.len() * 8
+            )));
+        }
+        Ok(Frame {
+            codec,
+            payload,
+            patch: Vec::new(),
+            offsets,
+            base_blocks: bits.len(),
+            bits,
+            patches: Vec::new(),
+            original_len,
+        })
+    }
+
+    // ---- geometry --------------------------------------------------------
+
+    /// Logical (uncompressed) image length in bytes.
+    pub fn len(&self) -> usize {
+        self.original_len
+    }
+
+    /// Whether the image is empty.
+    pub fn is_empty(&self) -> bool {
+        self.original_len == 0
+    }
+
+    /// Number of blocks.
+    pub fn n_blocks(&self) -> usize {
+        self.bits.len()
+    }
+
+    /// Block granularity in bytes.
+    pub fn block_bytes(&self) -> usize {
+        self.codec.block_bytes()
+    }
+
+    /// Logical length of block `i` (shorter than
+    /// [`Self::block_bytes`] only for a ragged tail).
+    pub fn block_len(&self, i: usize) -> usize {
+        let bb = self.block_bytes();
+        bb.min(self.original_len - i * bb)
+    }
+
+    /// Current exact encoding length of block `i` in bits.
+    pub fn block_bits(&self, i: usize) -> u32 {
+        self.bits[i]
+    }
+
+    /// The codec this frame decodes with.
+    pub fn codec(&self) -> &Arc<dyn BlockCodec> {
+        &self.codec
+    }
+
+    /// Compressed footprint in bytes: base payload + patch region + the
+    /// varint bit-length index + fixed header (the honest numerator for
+    /// storage accounting; the shared table is charged separately by
+    /// whoever owns it).
+    pub fn compressed_len(&self) -> usize {
+        self.payload.len()
+            + self.patch.len()
+            + self.bits.iter().map(|&b| varint_len(b)).sum::<usize>()
+            + 16
+    }
+
+    /// Bytes currently in the patch region (spilled + appended blocks;
+    /// includes slots orphaned by re-spills).
+    pub fn patch_len(&self) -> usize {
+        self.patch.len()
+    }
+
+    fn check_block(&self, i: usize) -> Result<usize> {
+        if i >= self.bits.len() {
+            return Err(Error::Config(format!(
+                "block {i} out of range ({} blocks)",
+                self.bits.len()
+            )));
+        }
+        Ok(self.block_len(i))
+    }
+
+    /// Where block `i` currently lives: a byte slice holding it and the
+    /// bit offset of its first bit within that slice.
+    fn locate(&self, i: usize) -> (&[u8], u32) {
+        if let Some(&(pos, cap)) = self.patches.get(i) {
+            if pos != u32::MAX {
+                return (&self.patch[pos as usize..pos as usize + cap as usize], 0);
+            }
+        }
+        let off = self.offsets[i];
+        (&self.payload[(off / 8) as usize..], (off % 8) as u32)
+    }
+
+    /// Bit capacity of block `i`'s span in the base payload (only
+    /// meaningful for `i < base_blocks`). The last base block's span
+    /// extends into the stream's byte padding.
+    fn span_bits(&self, i: usize) -> u64 {
+        let end = if i + 1 < self.base_blocks {
+            self.offsets[i + 1]
+        } else {
+            (self.payload.len() as u64) * 8
+        };
+        end - self.offsets[i]
+    }
+
+    // ---- reads -----------------------------------------------------------
+
+    /// Decode block `i` into `out[..block_len(i)]`; returns the bytes
+    /// written. O(1) in the image size and allocation-free: one index
+    /// lookup, one bounded bit-stream decode. `out` must hold at least
+    /// [`Self::block_len`]`(i)` bytes.
+    pub fn read_block(&self, i: usize, out: &mut [u8]) -> Result<usize> {
+        let blen = self.check_block(i)?;
+        if out.len() < blen {
+            return Err(Error::Config(format!(
+                "output buffer {} B short of block length {blen} B",
+                out.len()
+            )));
+        }
+        let (src, sub) = self.locate(i);
+        let mut r = BitReader::new(src);
+        if sub != 0 {
+            r.get(sub).map_err(|_| Error::Corrupt(format!("frame: block {i} offset truncated")))?;
+        }
+        self.codec.decompress_block(&mut r, &mut out[..blen])?;
+        let used = r.bit_pos() - sub as usize;
+        if used != self.bits[i] as usize {
+            return Err(Error::Corrupt(format!(
+                "block {i}: consumed {used} bits, framing recorded {}",
+                self.bits[i]
+            )));
+        }
+        Ok(blen)
+    }
+
+    /// Decode the byte range `[offset, offset + out.len())` into `out`,
+    /// touching only the blocks it overlaps. Partial-block edges decode
+    /// through `scratch`; whole blocks decode straight into `out`, so
+    /// the steady-state path is allocation-free.
+    pub fn read_range(&self, offset: usize, out: &mut [u8], scratch: &mut Scratch) -> Result<()> {
+        if offset + out.len() > self.original_len {
+            return Err(Error::Config(format!(
+                "range {offset}..{} past image end {}",
+                offset + out.len(),
+                self.original_len
+            )));
+        }
+        let bb = self.block_bytes();
+        let mut written = 0usize;
+        while written < out.len() {
+            let pos = offset + written;
+            let i = pos / bb;
+            let within = pos % bb;
+            let blen = self.block_len(i);
+            let take = (blen - within).min(out.len() - written);
+            if within == 0 && take == blen {
+                self.read_block(i, &mut out[written..written + blen])?;
+            } else {
+                scratch.block.resize(blen, 0);
+                self.read_block(i, &mut scratch.block)?;
+                out[written..written + take].copy_from_slice(&scratch.block[within..within + take]);
+            }
+            written += take;
+        }
+        Ok(())
+    }
+
+    /// Decode the whole image (convenience; allocates the result). The
+    /// random-access equivalent of [`Container::decompress`].
+    pub fn decompress(&self) -> Result<Vec<u8>> {
+        let bb = self.block_bytes();
+        let mut out = vec![0u8; self.original_len];
+        for (i, chunk) in out.chunks_mut(bb).enumerate() {
+            self.read_block(i, chunk)?;
+        }
+        Ok(out)
+    }
+
+    // ---- writes ----------------------------------------------------------
+
+    /// Recompress block `i` from `data` (exactly
+    /// [`Self::block_len`]`(i)` bytes) in place. The new encoding lands
+    /// in the block's current slot when it fits — base-payload span or
+    /// existing patch slot — and spills to a fresh patch slot otherwise.
+    /// Reads see the new content immediately; [`Self::to_container`]
+    /// compacts everything back to the canonical stream.
+    pub fn write_block(
+        &mut self,
+        i: usize,
+        data: &[u8],
+        scratch: &mut Scratch,
+    ) -> Result<BlockWrite> {
+        let blen = self.check_block(i)?;
+        if data.len() != blen {
+            return Err(Error::Config(format!(
+                "write must supply exactly {blen} B for block {i}, got {}",
+                data.len()
+            )));
+        }
+        let mut w = std::mem::take(&mut scratch.w);
+        w.clear();
+        let bits = self.codec.compress_block_with(data, &mut w, scratch);
+        w.flush_to_byte();
+        let res = self.place_block(i, w.bytes(), bits);
+        scratch.w = w;
+        res
+    }
+
+    /// Append a fresh byte-aligned patch slot holding `bits` bits of
+    /// `bytes`, sizing the per-block slot table first. Returns the slot
+    /// `(byte offset, byte capacity)`. The single definition of patch
+    /// geometry — spills and appends must never disagree on it.
+    fn push_patch_slot(&mut self, bytes: &[u8], bits: u32) -> Result<(u32, u32)> {
+        let need = (bits as usize).div_ceil(8);
+        let pos = self.patch.len();
+        if pos + need > u32::MAX as usize {
+            return Err(Error::Config("frame patch region exceeds 4 GiB".into()));
+        }
+        if self.patches.len() < self.bits.len() {
+            self.patches.resize(self.bits.len(), IN_BASE);
+        }
+        self.patch.extend_from_slice(&bytes[..need]);
+        Ok((pos as u32, need as u32))
+    }
+
+    /// Put an encoded block (packed in `bytes`, `bits` bits long) into
+    /// block `i`'s slot, spilling to the patch region on overflow.
+    fn place_block(&mut self, i: usize, bytes: &[u8], bits: u32) -> Result<BlockWrite> {
+        let need = (bits as usize).div_ceil(8);
+        let in_patch = self.patches.get(i).is_some_and(|&(pos, _)| pos != u32::MAX);
+        if !in_patch && i < self.base_blocks && bits as u64 <= self.span_bits(i) {
+            overwrite_bits(&mut self.payload, self.offsets[i] as usize, bytes, bits as usize);
+            self.bits[i] = bits;
+            return Ok(BlockWrite { bits, spilled: false });
+        }
+        if in_patch {
+            let (pos, cap) = self.patches[i];
+            if need <= cap as usize {
+                let pos = pos as usize;
+                self.patch[pos..pos + need].copy_from_slice(&bytes[..need]);
+                self.bits[i] = bits;
+                return Ok(BlockWrite { bits, spilled: false });
+            }
+        }
+        // spill: the old slot, if any, becomes garbage until compaction
+        let slot = self.push_patch_slot(bytes, bits)?;
+        self.patches[i] = slot;
+        self.bits[i] = bits;
+        Ok(BlockWrite { bits, spilled: true })
+    }
+
+    /// Compress `data` as new blocks appended to the image (stored in
+    /// the patch region; existing blocks are untouched). Returns the
+    /// indices of the new blocks. Fails if the image currently ends in a
+    /// ragged tail block — only whole-block images can grow.
+    pub fn append_blocks(&mut self, data: &[u8], scratch: &mut Scratch) -> Result<Range<usize>> {
+        let bb = self.block_bytes();
+        if self.original_len % bb != 0 {
+            return Err(Error::Config(format!(
+                "cannot append after a ragged tail ({} B image, {bb} B blocks)",
+                self.original_len
+            )));
+        }
+        let first = self.bits.len();
+        let mut w = std::mem::take(&mut scratch.w);
+        for chunk in data.chunks(bb) {
+            w.clear();
+            let bits = self.codec.compress_block_with(chunk, &mut w, scratch);
+            w.flush_to_byte();
+            let slot = match self.push_patch_slot(w.bytes(), bits) {
+                Ok(slot) => slot,
+                Err(e) => {
+                    scratch.w = w;
+                    return Err(e);
+                }
+            };
+            self.bits.push(bits);
+            self.patches.push(slot);
+            self.original_len += chunk.len();
+        }
+        scratch.w = w;
+        Ok(first..self.bits.len())
+    }
+
+    /// Rebuild the base payload tight in place: every block's current
+    /// encoding is bit-spliced back into one contiguous stream and the
+    /// patch region (including any slots orphaned by re-spills) is
+    /// dropped. Long-running write workloads call this when
+    /// [`Self::patch_len`] grows past their garbage budget — the page
+    /// store does so automatically.
+    pub fn compact(&mut self) {
+        if self.patch.is_empty() {
+            return;
+        }
+        let mut w = BitWriter::with_capacity(self.payload.len());
+        let mut offsets = Vec::with_capacity(self.bits.len() + 1);
+        let mut cur: u64 = 0;
+        for i in 0..self.bits.len() {
+            let (src, sub) = self.locate(i);
+            w.append_from(src, sub as usize, self.bits[i] as u64);
+            offsets.push(cur);
+            cur += self.bits[i] as u64;
+        }
+        offsets.push(cur);
+        self.payload = w.finish();
+        self.offsets = offsets;
+        self.base_blocks = self.bits.len();
+        self.patch.clear();
+        self.patches.clear();
+    }
+
+    // ---- serialization ---------------------------------------------------
+
+    /// Compact the frame back into a canonical serial [`Container`]:
+    /// every block's current encoding (base span or patch slot) is
+    /// spliced tight into one stream — no re-encoding, no patch-region
+    /// garbage, and the wire format is exactly what
+    /// [`container::compress`] would have produced for the current
+    /// content.
+    pub fn to_container(&self) -> Container {
+        let mut w = BitWriter::with_capacity(self.payload.len() + self.patch.len());
+        for i in 0..self.bits.len() {
+            let (src, sub) = self.locate(i);
+            w.append_from(src, sub as usize, self.bits[i] as u64);
+        }
+        container::assemble(
+            self.codec.as_ref(),
+            self.original_len,
+            0,
+            w.finish(),
+            self.bits.clone(),
+        )
+    }
+}
+
+/// Streaming compression session: feed input in chunks of any size;
+/// only one partial block is ever buffered, the compressed stream grows
+/// incrementally. [`Compressor::finish`] yields a random-access
+/// [`Frame`]; [`Compressor::finish_container`] the serializable
+/// [`Container`].
+pub struct Compressor {
+    codec: Arc<dyn BlockCodec>,
+    w: BitWriter,
+    bits: Vec<u32>,
+    /// Pending partial block (never reaches `block_bytes`).
+    tail: Vec<u8>,
+    len: usize,
+    scratch: Scratch,
+}
+
+impl Compressor {
+    /// New session over `codec`.
+    pub fn new(codec: Arc<dyn BlockCodec>) -> Compressor {
+        Compressor {
+            codec,
+            w: BitWriter::new(),
+            bits: Vec::new(),
+            tail: Vec::new(),
+            len: 0,
+            scratch: Scratch::new(),
+        }
+    }
+
+    /// Ingest the next chunk of the image (any size, any alignment).
+    pub fn write(&mut self, data: &[u8]) {
+        self.len += data.len();
+        let bb = self.codec.block_bytes();
+        let mut rest = data;
+        if !self.tail.is_empty() {
+            let take = (bb - self.tail.len()).min(rest.len());
+            let mut tail = std::mem::take(&mut self.tail);
+            tail.extend_from_slice(&rest[..take]);
+            rest = &rest[take..];
+            if tail.len() == bb {
+                let b = self.codec.compress_block_with(&tail, &mut self.w, &mut self.scratch);
+                self.bits.push(b);
+                tail.clear();
+            }
+            self.tail = tail;
+        }
+        let full = rest.len() / bb * bb;
+        for block in rest[..full].chunks(bb) {
+            let b = self.codec.compress_block_with(block, &mut self.w, &mut self.scratch);
+            self.bits.push(b);
+        }
+        self.tail.extend_from_slice(&rest[full..]);
+    }
+
+    /// Bytes ingested so far.
+    pub fn bytes_in(&self) -> usize {
+        self.len
+    }
+
+    fn flush_tail(&mut self) {
+        if !self.tail.is_empty() {
+            let tail = std::mem::take(&mut self.tail);
+            let b = self.codec.compress_block_with(&tail, &mut self.w, &mut self.scratch);
+            self.bits.push(b);
+        }
+    }
+
+    /// Close the session into a random-access [`Frame`].
+    pub fn finish(mut self) -> Frame {
+        self.flush_tail();
+        Frame::from_parts(self.codec, self.w.finish(), self.bits, self.len, 0)
+            .expect("compressor framing is self-consistent")
+    }
+
+    /// Close the session into a serializable [`Container`].
+    pub fn finish_container(mut self) -> Container {
+        self.flush_tail();
+        container::assemble(self.codec.as_ref(), self.len, 0, self.w.finish(), self.bits)
+    }
+}
+
+/// Streaming decompression session over a [`Frame`]: pull the image
+/// through a caller-sized window (bounded memory — only the blocks
+/// overlapping each pull are decoded).
+pub struct Decompressor<'a> {
+    frame: &'a Frame,
+    pos: usize,
+    scratch: Scratch,
+}
+
+impl<'a> Decompressor<'a> {
+    /// New session at the start of `frame`'s image.
+    pub fn new(frame: &'a Frame) -> Decompressor<'a> {
+        Decompressor { frame, pos: 0, scratch: Scratch::new() }
+    }
+
+    /// Decode the next `out.len()`-or-fewer bytes into `out`; returns
+    /// the bytes produced (0 at end of image).
+    pub fn read(&mut self, out: &mut [u8]) -> Result<usize> {
+        let take = out.len().min(self.frame.len() - self.pos);
+        if take == 0 {
+            return Ok(0);
+        }
+        self.frame.read_range(self.pos, &mut out[..take], &mut self.scratch)?;
+        self.pos += take;
+        Ok(take)
+    }
+
+    /// Bytes not yet produced.
+    pub fn remaining(&self) -> usize {
+        self.frame.len() - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::CodecKind;
+    use crate::gbdi::GbdiConfig;
+    use crate::util::prng::Rng;
+
+    fn clustered_image(len_words: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Rng::new(seed);
+        (0..len_words)
+            .flat_map(|_| {
+                let v: u32 = match rng.below(4) {
+                    0 => 6000u32.wrapping_add(rng.range_i64(-120, 120) as u32),
+                    1 => (1u32 << 21).wrapping_add(rng.range_i64(-400, 400) as u32),
+                    2 => 0,
+                    _ => rng.next_u32(),
+                };
+                v.to_le_bytes()
+            })
+            .collect()
+    }
+
+    fn frame_for(kind: CodecKind, image: &[u8]) -> Frame {
+        let cfg = GbdiConfig::default();
+        let codec: Arc<dyn BlockCodec> = Arc::from(kind.build_for_image(image, &cfg));
+        Frame::compress(codec, image)
+    }
+
+    #[test]
+    fn every_codec_reads_blocks_identical_to_whole_decode() {
+        let mut image = clustered_image(4096, 1);
+        image.extend_from_slice(&[1, 2, 3, 4, 5]); // ragged tail
+        for &kind in CodecKind::all() {
+            let frame = frame_for(kind, &image);
+            assert_eq!(frame.decompress().unwrap(), image, "{}", kind.name());
+            let mut buf = vec![0u8; frame.block_bytes()];
+            for i in 0..frame.n_blocks() {
+                let n = frame.read_block(i, &mut buf).unwrap();
+                assert_eq!(n, frame.block_len(i));
+                assert_eq!(&buf[..n], &image[i * 64..i * 64 + n], "{} block {i}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn frame_from_parallel_container_realigns_chunks() {
+        // 384 KiB so compress_parallel really chunks; block reads must
+        // honor the byte realignment at chunk boundaries
+        let image = clustered_image(96 * 1024, 2);
+        let cfg = GbdiConfig::default();
+        for &kind in CodecKind::all() {
+            let codec = kind.build_for_image(&image, &cfg);
+            let par = container::compress_parallel(codec.as_ref(), &image, 4);
+            assert!(par.chunk_blocks > 0, "{} must chunk", kind.name());
+            let frame = Frame::from_container(par).unwrap();
+            let mut buf = [0u8; 64];
+            // probe around every chunk boundary plus a spread of blocks
+            let n = frame.n_blocks();
+            let probes: Vec<usize> = (0..n)
+                .filter(|&i| i % 997 == 0 || i % container::CHUNK_BLOCKS <= 1 || i + 1 == n)
+                .collect();
+            for i in probes {
+                frame.read_block(i, &mut buf).unwrap();
+                assert_eq!(&buf[..], &image[i * 64..(i + 1) * 64], "{} block {i}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn read_range_matches_image_slices() {
+        let image = clustered_image(8192, 3);
+        let frame = frame_for(CodecKind::Gbdi, &image);
+        let mut scratch = Scratch::new();
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            let off = rng.below(image.len() as u64) as usize;
+            let len = rng.below((image.len() - off) as u64 + 1) as usize;
+            let mut out = vec![0u8; len];
+            frame.read_range(off, &mut out, &mut scratch).unwrap();
+            assert_eq!(out, &image[off..off + len], "off {off} len {len}");
+        }
+        // degenerate ranges
+        frame.read_range(0, &mut [], &mut scratch).unwrap();
+        frame.read_range(image.len(), &mut [], &mut scratch).unwrap();
+        assert!(frame.read_range(image.len(), &mut [0u8], &mut scratch).is_err());
+    }
+
+    #[test]
+    fn write_block_in_place_and_spill_roundtrip() {
+        for &kind in CodecKind::all() {
+            let mut image = clustered_image(4096, 7);
+            // pin the targets: block 3 compresses well (small ints), block
+            // 9 is all-zero — so its base span is tiny and any real data
+            // must spill
+            for c in image[3 * 64..4 * 64].chunks_mut(4) {
+                c.copy_from_slice(&77u32.to_le_bytes());
+            }
+            image[9 * 64..10 * 64].fill(0);
+            let mut frame = frame_for(kind, &image);
+            let mut scratch = Scratch::new();
+            let mut rng = Rng::new(11);
+            // shrink: overwrite a compressible block with zeros (fits the
+            // old span in place)
+            let zeros = [0u8; 64];
+            let wr = frame.write_block(3, &zeros, &mut scratch).unwrap();
+            assert!(!wr.spilled, "{}: shrink must not spill", kind.name());
+            image[3 * 64..4 * 64].fill(0);
+            // grow: incompressible data into the zero block spills
+            let mut noisy = [0u8; 64];
+            rng.fill_bytes(&mut noisy);
+            let wr = frame.write_block(9, &noisy, &mut scratch).unwrap();
+            assert!(wr.spilled, "{}: raw block must spill", kind.name());
+            assert!(frame.patch_len() > 0);
+            image[9 * 64..10 * 64].copy_from_slice(&noisy);
+            // rewrite the spilled block smaller: reuses its patch slot
+            let wr = frame.write_block(9, &zeros, &mut scratch).unwrap();
+            assert!(!wr.spilled, "{}: patch slot reuse", kind.name());
+            image[9 * 64..10 * 64].fill(0);
+            assert_eq!(frame.decompress().unwrap(), image, "{}", kind.name());
+            // compaction drops the patch region and still decodes
+            let c = frame.to_container();
+            assert_eq!(c.decompress().unwrap(), image, "{} compacted", kind.name());
+            let reframed = Frame::from_container(c).unwrap();
+            assert_eq!(reframed.patch_len(), 0);
+            assert_eq!(reframed.decompress().unwrap(), image);
+        }
+    }
+
+    #[test]
+    fn compact_drops_patch_garbage_and_preserves_content() {
+        let image = vec![0u8; 64 * 32];
+        let cfg = GbdiConfig::default();
+        let codec: Arc<dyn BlockCodec> = Arc::from(CodecKind::Gbdi.build_for_image(&image, &cfg));
+        let mut frame = Frame::compress(Arc::clone(&codec), &image);
+        let mut scratch = Scratch::new();
+        let mut rng = Rng::new(41);
+        let mut expect = image.clone();
+        // spill small (repeated-word) encodings first, then grow two of
+        // them past their slots so the old slots are orphaned garbage
+        let mut rep = [0u8; 64];
+        for c in rep.chunks_mut(4) {
+            c.copy_from_slice(&7u32.to_le_bytes());
+        }
+        for &i in &[1usize, 5, 9] {
+            frame.write_block(i, &rep, &mut scratch).unwrap();
+            expect[i * 64..(i + 1) * 64].copy_from_slice(&rep);
+        }
+        for &i in &[1usize, 5] {
+            let mut noisy = [0u8; 64];
+            rng.fill_bytes(&mut noisy);
+            frame.write_block(i, &noisy, &mut scratch).unwrap();
+            expect[i * 64..(i + 1) * 64].copy_from_slice(&noisy);
+        }
+        assert!(frame.patch_len() > 0);
+        let before = frame.compressed_len();
+        frame.compact();
+        assert_eq!(frame.patch_len(), 0);
+        assert!(frame.compressed_len() <= before);
+        assert_eq!(frame.decompress().unwrap(), expect);
+        // compacted frames keep serving reads and writes
+        let mut buf = [0u8; 64];
+        frame.read_block(5, &mut buf).unwrap();
+        assert_eq!(&buf[..], &expect[5 * 64..6 * 64]);
+        frame.write_block(9, &[0u8; 64], &mut scratch).unwrap();
+        expect[9 * 64..10 * 64].fill(0);
+        assert_eq!(frame.decompress().unwrap(), expect);
+        // compacting a patch-free frame is a no-op
+        let len = frame.compressed_len();
+        frame.compact();
+        assert_eq!(frame.compressed_len(), len);
+    }
+
+    #[test]
+    fn ragged_tail_blocks_write_and_read() {
+        let mut image = clustered_image(100, 13);
+        image.truncate(image.len() - 3); // 397 B: last block is 13 B
+        let mut frame = frame_for(CodecKind::Bdi, &image);
+        let last = frame.n_blocks() - 1;
+        assert_eq!(frame.block_len(last), 13);
+        let mut scratch = Scratch::new();
+        let new_tail = [0xEEu8; 13];
+        frame.write_block(last, &new_tail, &mut scratch).unwrap();
+        let mut buf = [0u8; 64];
+        let n = frame.read_block(last, &mut buf).unwrap();
+        assert_eq!(&buf[..n], &new_tail);
+        // wrong-size writes are rejected
+        assert!(frame.write_block(last, &[0u8; 64], &mut scratch).is_err());
+        assert!(frame.write_block(0, &[0u8; 13], &mut scratch).is_err());
+        // appends are blocked by the ragged tail
+        assert!(frame.append_blocks(&[0u8; 64], &mut scratch).is_err());
+    }
+
+    #[test]
+    fn append_blocks_grows_the_image() {
+        let image = clustered_image(1024, 17);
+        let mut frame = frame_for(CodecKind::Gbdi, &image);
+        let mut scratch = Scratch::new();
+        let extra = clustered_image(256, 18);
+        let added = frame.append_blocks(&extra, &mut scratch).unwrap();
+        assert_eq!(added, 64..64 + 16);
+        assert_eq!(frame.len(), image.len() + extra.len());
+        let mut whole = image.clone();
+        whole.extend_from_slice(&extra);
+        assert_eq!(frame.decompress().unwrap(), whole);
+        // appended blocks are writable like any other
+        let zeros = [0u8; 64];
+        frame.write_block(70, &zeros, &mut scratch).unwrap();
+        whole[70 * 64..71 * 64].fill(0);
+        assert_eq!(frame.decompress().unwrap(), whole);
+        // and the compacted container reproduces the grown image
+        assert_eq!(frame.to_container().decompress().unwrap(), whole);
+        // appending a ragged tail works once, then blocks further growth
+        frame.append_blocks(&[7u8; 10], &mut scratch).unwrap();
+        whole.extend_from_slice(&[7u8; 10]);
+        assert_eq!(frame.decompress().unwrap(), whole);
+        assert!(frame.append_blocks(&[7u8; 64], &mut scratch).is_err());
+    }
+
+    #[test]
+    fn empty_and_zero_block_frames() {
+        let frame = frame_for(CodecKind::Fpc, &[]);
+        assert!(frame.is_empty());
+        assert_eq!(frame.n_blocks(), 0);
+        assert_eq!(frame.decompress().unwrap(), Vec::<u8>::new());
+        assert!(frame.read_block(0, &mut [0u8; 64]).is_err());
+        // an empty frame can still grow
+        let cfg = GbdiConfig::default();
+        let codec: Arc<dyn BlockCodec> = Arc::from(CodecKind::Fpc.build_for_image(&[], &cfg));
+        let mut frame = Frame::compress(codec, &[]);
+        let mut scratch = Scratch::new();
+        frame.append_blocks(&[9u8; 128], &mut scratch).unwrap();
+        assert_eq!(frame.decompress().unwrap(), vec![9u8; 128]);
+    }
+
+    #[test]
+    fn forged_framing_rejected_at_construction() {
+        let image = clustered_image(1024, 19);
+        let cfg = GbdiConfig::default();
+        let codec = CodecKind::Bdi.build_for_image(&image, &cfg);
+        let c = container::compress(codec.as_ref(), &image);
+        // u32::MAX bit lengths must overflow the payload check, not panic
+        let mut forged = c.clone();
+        for b in forged.block_bits.iter_mut() {
+            *b = u32::MAX;
+        }
+        assert!(Frame::from_container(forged).is_err());
+        // wrong block count
+        let mut forged = c.clone();
+        forged.block_bits.pop();
+        assert!(Frame::from_container(forged).is_err());
+        // a single inflated entry shifts every later offset: reads fail
+        // cleanly instead of decoding garbage
+        let mut forged = c;
+        if forged.block_bits[0] < 100 {
+            forged.block_bits[0] += 8;
+            forged.block_bits[1] = forged.block_bits[1].saturating_sub(8);
+            let frame = Frame::from_container(forged).unwrap();
+            let mut buf = [0u8; 64];
+            let a = frame.read_block(0, &mut buf);
+            let b = frame.read_block(1, &mut buf);
+            assert!(a.is_err() || b.is_err());
+        }
+    }
+
+    #[test]
+    fn sessions_match_one_shot_compression() {
+        let image = clustered_image(8192, 23);
+        let cfg = GbdiConfig::default();
+        for &kind in CodecKind::all() {
+            let codec: Arc<dyn BlockCodec> = Arc::from(kind.build_for_image(&image, &cfg));
+            let oneshot = container::compress(codec.as_ref(), &image);
+            // feed awkward chunk sizes through the session
+            let mut rng = Rng::new(29);
+            let mut c = Compressor::new(Arc::clone(&codec));
+            let mut off = 0;
+            while off < image.len() {
+                let n = (rng.below(777) as usize + 1).min(image.len() - off);
+                c.write(&image[off..off + n]);
+                off += n;
+            }
+            assert_eq!(c.bytes_in(), image.len());
+            let sc = c.finish_container();
+            assert_eq!(sc.block_bits, oneshot.block_bits, "{} framing", kind.name());
+            assert_eq!(sc.payload, oneshot.payload, "{} payload", kind.name());
+            // and the frame-yielding variant decodes bit-exactly
+            let mut c = Compressor::new(Arc::clone(&codec));
+            for chunk in image.chunks(1000) {
+                c.write(chunk);
+            }
+            let frame = c.finish();
+            assert_eq!(frame.decompress().unwrap(), image, "{}", kind.name());
+            // streaming decode through odd window sizes
+            let mut d = Decompressor::new(&frame);
+            let mut out = Vec::new();
+            let mut buf = [0u8; 333];
+            loop {
+                let n = d.read(&mut buf).unwrap();
+                if n == 0 {
+                    break;
+                }
+                out.extend_from_slice(&buf[..n]);
+            }
+            assert_eq!(out, image, "{} streamed", kind.name());
+            assert_eq!(d.remaining(), 0);
+        }
+    }
+
+    #[test]
+    fn aligned_frames_absorb_growth_in_place() {
+        // sector-aligned slack: growth within the padded span stays in
+        // place; only span-crossing growth spills
+        let image = vec![0u8; 64 * 64];
+        let cfg = GbdiConfig::default();
+        let codec: Arc<dyn BlockCodec> = Arc::from(CodecKind::Bdi.build_for_image(&image, &cfg));
+        let mut scratch = Scratch::new();
+        let mut frame = Frame::compress_aligned(codec, &image, 128, &mut scratch);
+        // zero block = 4 bits, span padded to 128 bits: a rep8 rewrite
+        // (4 + 64 = 68 bits) grows but still fits the slack in place
+        let mut rep = [0u8; 64];
+        for c in rep.chunks_mut(8) {
+            c.copy_from_slice(&0xABCD_EF01_2345_6789u64.to_le_bytes());
+        }
+        let wr = frame.write_block(5, &rep, &mut scratch).unwrap();
+        assert_eq!(wr.bits, 68);
+        assert!(!wr.spilled, "growth within slack must stay in place");
+        // incompressible data crosses the span: spill
+        let mut noisy = [0u8; 64];
+        Rng::new(31).fill_bytes(&mut noisy);
+        let wr = frame.write_block(5, &noisy, &mut scratch).unwrap();
+        assert!(wr.spilled);
+        let mut buf = [0u8; 64];
+        frame.read_block(5, &mut buf).unwrap();
+        assert_eq!(buf, noisy);
+        frame.read_block(4, &mut buf).unwrap();
+        assert_eq!(buf, [0u8; 64], "left neighbour untouched");
+        frame.read_block(6, &mut buf).unwrap();
+        assert_eq!(buf, [0u8; 64], "right neighbour untouched");
+    }
+}

@@ -122,12 +122,13 @@ impl GbdiCodec {
         stats: &mut EncodeStats,
     ) -> (BlockMode, u32) {
         let mut plan = Vec::with_capacity(self.config.words_per_block());
-        self.compress_block_with(block, w, stats, &mut plan)
+        self.compress_block_into(block, w, stats, &mut plan)
     }
 
     /// [`Self::compress_block_stats`] with a caller-provided plan scratch
-    /// buffer (the image loop reuses one allocation across all blocks).
-    fn compress_block_with(
+    /// buffer (the image loop and the [`crate::codec::Scratch`]-aware
+    /// trait method reuse one allocation across all blocks).
+    fn compress_block_into(
         &self,
         block: &[u8],
         w: &mut BitWriter,
@@ -252,7 +253,7 @@ impl GbdiCodec {
         let mut block_bits = Vec::with_capacity(image.len() / self.config.block_bytes + 1);
         let mut plan = Vec::with_capacity(self.config.words_per_block());
         for block in image.chunks(self.config.block_bytes) {
-            let (_, bits) = self.compress_block_with(block, &mut w, &mut stats, &mut plan);
+            let (_, bits) = self.compress_block_into(block, &mut w, &mut stats, &mut plan);
             block_bits.push(bits);
         }
         (container::assemble(self, image.len(), 0, w.finish(), block_bits), stats)
@@ -272,7 +273,7 @@ impl GbdiCodec {
                 let mut block_bits = Vec::with_capacity(chunk.len() / self.config.block_bytes + 1);
                 let mut plan = Vec::with_capacity(self.config.words_per_block());
                 for block in chunk.chunks(self.config.block_bytes) {
-                    let (_, bits) = self.compress_block_with(block, &mut w, &mut stats, &mut plan);
+                    let (_, bits) = self.compress_block_into(block, &mut w, &mut stats, &mut plan);
                     block_bits.push(bits);
                 }
                 (w.finish(), block_bits, stats)
@@ -301,6 +302,16 @@ impl BlockCodec for GbdiCodec {
     fn compress_block(&self, block: &[u8], w: &mut BitWriter) -> u32 {
         let mut stats = EncodeStats::default();
         self.compress_block_stats(block, w, &mut stats).1
+    }
+
+    fn compress_block_with(
+        &self,
+        block: &[u8],
+        w: &mut BitWriter,
+        scratch: &mut crate::codec::Scratch,
+    ) -> u32 {
+        let mut stats = EncodeStats::default();
+        self.compress_block_into(block, w, &mut stats, &mut scratch.gbdi_plan).1
     }
 
     fn decompress_block(&self, r: &mut BitReader<'_>, out: &mut [u8]) -> crate::Result<()> {
@@ -334,6 +345,12 @@ impl BlockCodec for GbdiCodec {
                 };
         }
         bits.min(2 + block.len() as u64 * 8)
+    }
+
+    /// The closed form above is already allocation-free; the scratch
+    /// variant simply reuses it.
+    fn estimate_block_bits_with(&self, block: &[u8], _scratch: &mut crate::codec::Scratch) -> u64 {
+        self.estimate_block_bits(block)
     }
 
     fn config_bytes(&self) -> Vec<u8> {

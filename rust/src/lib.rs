@@ -16,25 +16,44 @@
 //!   simulator, and a serving-style [`coordinator`] that runs the L2
 //!   artifacts through PJRT ([`runtime`]) off the hot path.
 //!
-//! ## The codec/container layering (L3 internals)
+//! ## The codec/frame/container layering (L3 internals)
 //!
 //! Everything that compresses cache-line-sized blocks sits behind one
-//! seam:
+//! seam, and everything that *serves* compressed data goes through the
+//! random-access layer above it:
 //!
 //! * [`codec::BlockCodec`] — the crate-wide trait: per-block
 //!   `compress_block` / `decompress_block` / `estimate_block_bits` over
 //!   the shared bit stream ([`util::bits`]). Implemented by
 //!   [`GbdiCodec`], [`baselines::bdi::Bdi`], and
-//!   [`baselines::fpc::FpcBlock`]; new codecs plug in here.
-//! * [`container`] — the single framed format for whole images: codec id
-//!   + config + optional global table + per-block bit lengths (u32
-//!   varints) + chunked payload. Serial ([`container::compress`]) and
-//!   parallel ([`container::compress_parallel`]) pipelines work for
-//!   *every* codec; parallel output decodes bit-exactly like serial.
-//! * Consumers — the memory simulator ([`memsim::CompressedMemory`]),
-//!   the serving coordinator ([`coordinator::CompressionService`]), the
-//!   CLI (`gbdi compress|verify|memsim|sweep --codec gbdi|bdi|fpc`), and
-//!   the benches all accept any `dyn BlockCodec`.
+//!   [`baselines::fpc::FpcBlock`]; new codecs plug in here. The `_with`
+//!   variants borrow caller-owned [`Scratch`] buffers, so per-request
+//!   paths never allocate.
+//! * [`frame::Frame`] — the random-access handle over a compressed
+//!   image: a block-offset index (prefix sums of the per-block bit
+//!   lengths the wire format already carries) makes
+//!   [`Frame::read_block`](frame::Frame::read_block) /
+//!   [`write_block`](frame::Frame::write_block) O(1) and
+//!   allocation-free; writes recompress in place and spill to a patch
+//!   region when they outgrow their span. [`Compressor`] /
+//!   [`Decompressor`] are the streaming sessions on top (chunked input,
+//!   bounded memory). This is the surface memory-compression
+//!   deployments actually need: single cache-line reads and writes out
+//!   of compressed pages.
+//! * [`container`] — the single framed *wire format*: codec id + config
+//!   + optional global table + per-block bit lengths (u32 varints) +
+//!   chunked payload. Serial ([`container::compress`]) and parallel
+//!   ([`container::compress_parallel`]) pipelines work for *every*
+//!   codec; parallel output decodes bit-exactly like serial, and
+//!   [`Container::into_frame`] upgrades a parsed container to random
+//!   access without copying the payload.
+//! * Consumers — the memory simulator ([`memsim::CompressedMemory`],
+//!   one sector-aligned frame per page) and the serving coordinator
+//!   ([`coordinator::CompressionService`], block GET/PUT with
+//!   per-request latency metrics) serve single blocks from frames; the
+//!   CLI (`gbdi read --block`, `gbdi bench-access`, `compress|verify|
+//!   memsim|sweep --codec gbdi|bdi|fpc`) and the benches drive any
+//!   `dyn BlockCodec` through both surfaces.
 //!
 //! Whole-image software comparators (LZSS, Huffman, gzip, zstd) stay
 //! behind the coarser [`baselines::Codec`] trait — they have no block
@@ -69,20 +88,32 @@
 //! ## Quickstart
 //!
 //! ```
-//! use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig};
-//! use gbdi::{container, workloads};
+//! use gbdi::{BlockCodec, CodecKind, Compressor, GbdiConfig, Scratch, workloads};
+//! use std::sync::Arc;
 //!
-//! // 1 MiB of mcf-like memory content.
-//! let image = workloads::by_name("mcf").unwrap().generate(1 << 20, 7);
-//! // Background analysis -> global base table.
-//! let cfg = GbdiConfig::default();
-//! let table = analyze::analyze_image(&image, &cfg);
-//! let codec = GbdiCodec::new(table, cfg);
-//! // Any BlockCodec compresses through the shared container layer
-//! // (compress_parallel chunks across threads with identical output).
-//! let compressed = container::compress(&codec, &image);
-//! assert!(compressed.ratio() > 1.0);
-//! assert_eq!(compressed.decompress().unwrap(), image);
+//! // 256 KiB of mcf-like memory content.
+//! let image = workloads::by_name("mcf").unwrap().generate(1 << 18, 7);
+//! // Background analysis -> codec (GBDI derives its global base table).
+//! let codec: Arc<dyn BlockCodec> =
+//!     Arc::from(CodecKind::Gbdi.build_for_image(&image, &GbdiConfig::default()));
+//!
+//! // Streaming session: feed chunks of any size, bounded memory.
+//! let mut session = Compressor::new(Arc::clone(&codec));
+//! for chunk in image.chunks(4096) {
+//!     session.write(chunk);
+//! }
+//! let mut frame = session.finish();
+//!
+//! // Random access: O(1), allocation-free single-block reads...
+//! let mut line = [0u8; 64];
+//! frame.read_block(100, &mut line).unwrap();
+//! assert_eq!(&line[..], &image[100 * 64..101 * 64]);
+//! // ...in-place writes (spilling to a patch region when they grow)...
+//! let mut scratch = Scratch::new();
+//! frame.write_block(100, &[0u8; 64], &mut scratch).unwrap();
+//! // ...and the canonical wire format when you need to ship it.
+//! let container = frame.to_container();
+//! assert!(container.ratio() > 1.0);
 //! ```
 
 pub mod baselines;
@@ -93,6 +124,7 @@ pub mod config;
 pub mod container;
 pub mod coordinator;
 pub mod elf;
+pub mod frame;
 pub mod gbdi;
 pub mod memsim;
 pub mod report;
@@ -101,8 +133,9 @@ pub mod util;
 pub mod value;
 pub mod workloads;
 
-pub use codec::{BlockCodec, CodecId, CodecKind};
+pub use codec::{BlockCodec, CodecId, CodecKind, Scratch};
 pub use container::Container;
+pub use frame::{BlockWrite, Compressor, Decompressor, Frame};
 pub use gbdi::{GbdiCodec, GbdiConfig};
 
 /// Crate-wide error type.

@@ -11,6 +11,7 @@ use gbdi::cluster::{ArtifactSelector, BaseSelector, SelectorConfig, SelectorKind
 use gbdi::codec::{BlockCodec, CodecKind};
 use gbdi::container::{self, Container};
 use gbdi::coordinator::{CompressionService, ServiceConfig};
+use gbdi::frame::Frame;
 use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig, GlobalBaseTable};
 use gbdi::memsim::{self, trace, CompressedMemory, DramModel};
 use gbdi::report::{bar_chart, fmt_bytes, fmt_ratio, Table};
@@ -48,6 +49,24 @@ fn app() -> App {
             App::new("decompress", "decompress a framed container (codec auto-detected)")
                 .arg(Arg::pos("input", "compressed container"))
                 .arg(Arg::req("out", "output path")),
+        )
+        .subcommand(
+            App::new("read", "random-access: decode single blocks (no full decode)")
+                .arg(Arg::pos("input", "compressed container"))
+                .arg(Arg::opt("block", "0", "first block index"))
+                .arg(Arg::opt("count", "1", "blocks to read"))
+                .arg(Arg::opt("out", "", "write raw bytes here instead of hex-dumping")),
+        )
+        .subcommand(
+            App::new(
+                "bench-access",
+                "single-block read latency vs whole-image decode (the Frame API's reason to exist)",
+            )
+            .arg(Arg::opt("workload", "mcf", "workload name"))
+            .arg(Arg::opt("size", "4m", "image bytes"))
+            .arg(Arg::opt("codec", "gbdi", "block codec: gbdi|bdi|fpc"))
+            .arg(Arg::opt("reads", "100k", "random block reads to time"))
+            .arg(Arg::opt("seed", "7", "generator seed")),
         )
         .subcommand(
             App::new("verify", "compress + decompress + bit-exactness check")
@@ -226,6 +245,102 @@ fn cmd_decompress(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
         comp.codec_id.name(),
         fmt_bytes(out.len() as u64)
     );
+    Ok(())
+}
+
+fn cmd_read(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
+    let comp = Container::from_bytes(&std::fs::read(m.get("input"))?)?;
+    let codec_name = comp.codec_id.name();
+    let frame = comp.into_frame()?;
+    let first = m.get_usize("block");
+    let count = m.get_usize("count").max(1);
+    if first >= frame.n_blocks() {
+        return Err(gbdi::Error::Config(format!(
+            "--block {first} out of range ({} blocks)",
+            frame.n_blocks()
+        )));
+    }
+    let mut buf = vec![0u8; frame.block_bytes()];
+    let mut raw = Vec::new();
+    let mut read = 0usize;
+    let out_path = m.get("out");
+    for i in first..(first + count).min(frame.n_blocks()) {
+        let n = frame.read_block(i, &mut buf)?;
+        if out_path.is_empty() {
+            use std::fmt::Write as _;
+            let mut hex = String::with_capacity(64);
+            for b in &buf[..n.min(32)] {
+                let _ = write!(hex, "{b:02x}");
+            }
+            println!(
+                "block {i:>8}  {:>5} bits  {}{}",
+                frame.block_bits(i),
+                hex,
+                if n > 32 { "…" } else { "" }
+            );
+        } else {
+            raw.extend_from_slice(&buf[..n]);
+        }
+        read += 1;
+    }
+    if !out_path.is_empty() {
+        std::fs::write(out_path, &raw)?;
+        println!(
+            "wrote {} ({read} blocks, codec {codec_name}) to {out_path}",
+            fmt_bytes(raw.len() as u64)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bench_access(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
+    let w = workloads::by_name(m.get("workload"))
+        .ok_or_else(|| gbdi::Error::Config("unknown workload".into()))?;
+    let image = w.generate(m.get_usize("size"), m.get_u64("seed"));
+    let kind = parse_codec(m)?;
+    let codec: Arc<dyn BlockCodec> =
+        Arc::from(kind.build_for_image(&image, &GbdiConfig::default()));
+    let comp = container::compress(codec.as_ref(), &image);
+    // whole-image decode latency (the old API's only read path), then
+    // hand the container to the frame without copying the payload
+    let t0 = std::time::Instant::now();
+    let full = comp.decompress()?;
+    let t_full = t0.elapsed();
+    assert_eq!(full.len(), image.len());
+    let frame = Frame::with_codec(comp, Arc::clone(&codec))?;
+    // random single-block reads through the frame index
+    let reads = m.get_usize("reads").max(1);
+    let n = frame.n_blocks() as u64;
+    let mut rng = Rng::new(0xACCE55);
+    let mut buf = vec![0u8; frame.block_bytes()];
+    let t0 = std::time::Instant::now();
+    for _ in 0..reads {
+        let i = rng.below(n) as usize;
+        frame.read_block(i, &mut buf)?;
+    }
+    let t_block = t0.elapsed();
+    let per_read = t_block.as_nanos() as f64 / reads as f64;
+    let speedup = t_full.as_nanos() as f64 / per_read.max(1e-9);
+    println!(
+        "workload {} codec {}: image {} in {} blocks",
+        w.name(),
+        kind.name(),
+        fmt_bytes(image.len() as u64),
+        frame.n_blocks()
+    );
+    let mut t = Table::new(&["path", "latency", "per logical byte"]);
+    t.row(&[
+        "whole-image decompress".into(),
+        format!("{:.2} ms", t_full.as_secs_f64() * 1e3),
+        format!("{:.2} ns/B", t_full.as_nanos() as f64 / image.len() as f64),
+    ]);
+    t.row(&[
+        format!("Frame::read_block x{reads}"),
+        format!("{per_read:.0} ns/read"),
+        format!("{:.2} ns/B", per_read / frame.block_bytes() as f64),
+    ]);
+    print!("{}", t.render());
+    println!("single-block read is {speedup:.0}x faster than a full decode");
     Ok(())
 }
 
@@ -413,6 +528,18 @@ fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
         }
     }
     svc.flush();
+    // block-granular serving: random single-line GETs and a few PUTs
+    // straight out of the compressed frames (the paths a memory-expansion
+    // deployment actually exercises)
+    let mut line = vec![0u8; 64];
+    for _ in 0..if pages > 0 { 2048 } else { 0 } {
+        let pid = rng.below(pages);
+        let blk = rng.below(64) as usize;
+        svc.read_block(pid, blk, &mut line)?;
+    }
+    for pid in 0..pages.min(16) {
+        svc.write_block(pid, (pid % 64) as usize, &line)?;
+    }
     let migrated = svc.recompress_step()?;
     let (logical, stored, ratio) = svc.storage_ratio();
     let snap = svc.shutdown();
@@ -426,6 +553,13 @@ fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
         snap.table_swaps,
         snap.analyses,
         snap.analyses_skipped
+    );
+    println!(
+        "block serving: {} GETs @ {:.0} ns mean, {} PUTs @ {:.0} ns mean",
+        snap.block_reads,
+        snap.block_read_mean_ns(),
+        snap.block_writes,
+        snap.block_write_mean_ns()
     );
     Ok(())
 }
@@ -553,6 +687,8 @@ fn main() {
         "analyze" => cmd_analyze(m),
         "compress" => cmd_compress(m),
         "decompress" => cmd_decompress(m),
+        "read" => cmd_read(m),
+        "bench-access" => cmd_bench_access(m),
         "verify" => cmd_verify(m),
         "sweep" => cmd_sweep(m),
         "figure1" => cmd_figure1(m),

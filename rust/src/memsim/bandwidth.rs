@@ -60,19 +60,34 @@ impl ReplayReport {
 
 /// Replay a trace against compressed memory under the DRAM model.
 ///
+/// Every access really goes through the block-granular compressed path
+/// ([`CompressedMemory::read_block_into`] /
+/// [`CompressedMemory::write_block`]): reads decode the line, writes
+/// read-modify-write it — so the transfer accounting below charges
+/// exactly the bits the memory actually served, and the replay cost is
+/// the real per-line decode cost, not a table lookup.
+///
 /// `meta_miss` is charged deterministically as an expected value (no
 /// extra randomness: replay is reproducible).
 pub fn replay(mem: &mut CompressedMemory, trace: &[Access], model: &DramModel) -> Result<ReplayReport> {
     let block_bytes = mem.block_bytes() as u64;
+    let total = mem.total_blocks();
+    let mut line = vec![0u8; block_bytes as usize];
     let mut moved_bursts_x1000: u64 = 0; // fixed-point: bursts * 1000
     for a in trace {
-        let bits = mem.block_bits(a.block % mem.total_blocks())?;
-        let bytes = (bits as u64 + 7) / 8;
-        let bursts = (bytes + model.burst_bytes - 1) / model.burst_bytes;
+        let addr = a.block % total;
+        mem.read_block_into(addr, &mut line)?;
+        let bits = mem.block_bits(addr)?;
+        let bytes = (bits as u64).div_ceil(8);
+        let bursts = bytes.div_ceil(model.burst_bytes);
         moved_bursts_x1000 += bursts * 1000 + (model.meta_miss * 1000.0) as u64;
         if a.is_write {
-            // write path: read-modify-write moves the same compressed size
-            moved_bursts_x1000 += bursts * 1000;
+            // write path: read-modify-write the same line back through
+            // the compressor; moves the (re)compressed size again
+            mem.write_block(addr, &line)?;
+            let wbits = mem.block_bits(addr)?;
+            let wbytes = (wbits as u64).div_ceil(8);
+            moved_bursts_x1000 += wbytes.div_ceil(model.burst_bytes) * 1000;
         }
     }
     let logical: u64 = trace

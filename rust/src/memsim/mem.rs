@@ -4,17 +4,21 @@
 //! [`BlockCodec`], so the bandwidth experiments sweep GBDI against BDI
 //! and FPC through the same machinery.
 //!
-//! Layout model: each logical 64-byte block compresses to `n` **sectors**
-//! of `sector_bytes` (8 by default). The metadata table holds the sector
+//! Layout model: each 4 KiB page is one random-access
+//! [`Frame`](crate::frame::Frame) whose block spans are **aligned to the
+//! sector size** — each logical 64-byte block occupies `n` sectors of
+//! `sector_bytes` (8 by default). The metadata table holds the sector
 //! count per block (the real hardware keeps this in a cache-able side
 //! table; we charge its size in the capacity accounting). Writes
-//! recompress the block in place; a block whose sector need grows beyond
-//! its page's slack triggers a page re-layout (counted, as these are the
-//! expensive events a real controller must amortize).
+//! recompress the block in place inside its sector span; a block whose
+//! encoding outgrows the span spills to the frame's patch region —
+//! counted as a page re-layout, the expensive event a real controller
+//! must amortize.
 
-use crate::codec::BlockCodec;
-use crate::util::bits::{BitReader, BitWriter};
+use crate::codec::{BlockCodec, Scratch};
+use crate::frame::Frame;
 use crate::{Error, Result};
+use std::sync::Arc;
 
 /// Per-memory statistics.
 #[derive(Debug, Clone, Default)]
@@ -27,24 +31,17 @@ pub struct MemStats {
     pub writes: u64,
     /// Block reads served.
     pub reads: u64,
-    /// Writes that forced a page re-layout (sector growth).
+    /// Writes that forced a page re-layout (sector-span overflow).
     pub relayouts: u64,
-}
-
-/// One compressed page: packed block payloads + per-block sector counts.
-struct Page {
-    /// Per-block compressed payload (padded to whole sectors).
-    blocks: Vec<Vec<u8>>,
-    /// Per-block bit length (exact, for transfer accounting).
-    bits: Vec<u32>,
 }
 
 /// Compressed memory built over any [`BlockCodec`].
 pub struct CompressedMemory {
-    codec: Box<dyn BlockCodec>,
+    codec: Arc<dyn BlockCodec>,
     page_bytes: usize,
     sector_bytes: usize,
-    pages: Vec<Page>,
+    pages: Vec<Frame>,
+    scratch: Scratch,
     stats: MemStats,
 }
 
@@ -57,7 +54,14 @@ impl CompressedMemory {
     /// [`Self::new`] from an already-boxed codec (the CLI's `--codec`
     /// path hands over a `Box<dyn BlockCodec>`).
     pub fn new_dyn(codec: Box<dyn BlockCodec>) -> Self {
-        CompressedMemory { codec, page_bytes: 4096, sector_bytes: 8, pages: Vec::new(), stats: MemStats::default() }
+        CompressedMemory {
+            codec: Arc::from(codec),
+            page_bytes: 4096,
+            sector_bytes: 8,
+            pages: Vec::new(),
+            scratch: Scratch::new(),
+            stats: MemStats::default(),
+        }
     }
 
     /// The codec this memory compresses with.
@@ -76,7 +80,8 @@ impl CompressedMemory {
     }
 
     /// Store an image; returns the base block address of the first page.
-    /// The image is padded to whole pages.
+    /// The image is padded to whole pages. Each page becomes one frame
+    /// with sector-aligned block spans.
     pub fn store_image(&mut self, image: &[u8]) -> u64 {
         let first_block = (self.pages.len() * self.blocks_per_page()) as u64;
         let mut padded = image.to_vec();
@@ -84,30 +89,26 @@ impl CompressedMemory {
         if rem != 0 {
             padded.resize(padded.len() + self.page_bytes - rem, 0);
         }
+        let align_bits = (self.sector_bytes * 8) as u32;
         for page_data in padded.chunks(self.page_bytes) {
-            let mut blocks = Vec::with_capacity(self.blocks_per_page());
-            let mut bits = Vec::with_capacity(self.blocks_per_page());
-            for block in page_data.chunks(self.block_bytes()) {
-                let (payload, b) = self.compress_block(block);
-                self.stats.used_sectors += self.sectors_for_bits(b) as u64;
-                blocks.push(payload);
-                bits.push(b);
+            let frame = Frame::compress_aligned(
+                Arc::clone(&self.codec),
+                page_data,
+                align_bits,
+                &mut self.scratch,
+            );
+            for i in 0..frame.n_blocks() {
+                self.stats.used_sectors += self.sectors_for_bits(frame.block_bits(i)) as u64;
             }
-            self.pages.push(Page { blocks, bits });
+            self.pages.push(frame);
             self.stats.logical_bytes += self.page_bytes as u64;
         }
         first_block
     }
 
-    fn compress_block(&self, block: &[u8]) -> (Vec<u8>, u32) {
-        let mut w = BitWriter::with_capacity(self.block_bytes() + 8);
-        let bits = self.codec.compress_block(block, &mut w);
-        (w.finish(), bits)
-    }
-
     fn sectors_for_bits(&self, bits: u32) -> u32 {
-        let bytes = (bits as usize + 7) / 8;
-        ((bytes + self.sector_bytes - 1) / self.sector_bytes) as u32
+        let bytes = (bits as usize).div_ceil(8);
+        bytes.div_ceil(self.sector_bytes) as u32
     }
 
     fn locate(&self, block_addr: u64) -> Result<(usize, usize)> {
@@ -120,24 +121,30 @@ impl CompressedMemory {
         Ok((page, idx))
     }
 
-    /// Read one logical block.
-    pub fn read_block(&mut self, block_addr: u64) -> Result<Vec<u8>> {
+    /// Read one logical block into `out` (exactly `block_bytes`), the
+    /// allocation-free path a memory controller would take.
+    pub fn read_block_into(&mut self, block_addr: u64, out: &mut [u8]) -> Result<()> {
         let (page, idx) = self.locate(block_addr)?;
         self.stats.reads += 1;
-        let p = &self.pages[page];
+        self.pages[page].read_block(idx, out)?;
+        Ok(())
+    }
+
+    /// Read one logical block (allocating convenience wrapper).
+    pub fn read_block(&mut self, block_addr: u64) -> Result<Vec<u8>> {
         let mut out = vec![0u8; self.block_bytes()];
-        let mut r = BitReader::new(&p.blocks[idx]);
-        self.codec.decompress_block(&mut r, &mut out)?;
+        self.read_block_into(block_addr, &mut out)?;
         Ok(out)
     }
 
     /// Compressed bits a read of this block transfers on the bus.
     pub fn block_bits(&self, block_addr: u64) -> Result<u32> {
         let (page, idx) = self.locate(block_addr)?;
-        Ok(self.pages[page].bits[idx])
+        Ok(self.pages[page].block_bits(idx))
     }
 
-    /// Overwrite one logical block (recompress; track sector growth).
+    /// Overwrite one logical block (recompress in place; track sector
+    /// growth and span-overflow re-layouts).
     pub fn write_block(&mut self, block_addr: u64, data: &[u8]) -> Result<()> {
         if data.len() != self.block_bytes() {
             return Err(Error::Config(format!(
@@ -146,26 +153,25 @@ impl CompressedMemory {
             )));
         }
         let (page, idx) = self.locate(block_addr)?;
-        let (payload, bits) = self.compress_block(data);
-        let old = self.pages[page].bits[idx];
-        let (old_s, new_s) = (self.sectors_for_bits(old), self.sectors_for_bits(bits));
-        if new_s > old_s {
-            // page must be re-laid-out to make room
+        let old = self.pages[page].block_bits(idx);
+        let wr = self.pages[page].write_block(idx, data, &mut self.scratch)?;
+        if wr.spilled {
+            // the page's sector layout must be rebuilt to make room
             self.stats.relayouts += 1;
         }
+        let (old_s, new_s) = (self.sectors_for_bits(old), self.sectors_for_bits(wr.bits));
         self.stats.used_sectors = self.stats.used_sectors + new_s as u64 - old_s as u64;
-        self.pages[page].blocks[idx] = payload;
-        self.pages[page].bits[idx] = bits;
         self.stats.writes += 1;
         Ok(())
     }
 
     /// Read back a whole stored image region (for verification).
     pub fn read_image(&mut self, first_block: u64, len: usize) -> Result<Vec<u8>> {
-        let mut out = Vec::with_capacity(len);
+        let bb = self.block_bytes();
+        let mut out = vec![0u8; len.next_multiple_of(bb.max(1))];
         let mut addr = first_block;
-        while out.len() < len {
-            out.extend_from_slice(&self.read_block(addr)?);
+        for chunk in out.chunks_mut(bb) {
+            self.read_block_into(addr, chunk)?;
             addr += 1;
         }
         out.truncate(len);
@@ -260,6 +266,27 @@ mod tests {
         // write it back to zeros: sectors shrink
         mem.write_block(base + 3, &vec![0u8; 64]).unwrap();
         assert_eq!(mem.stats().used_sectors, before);
+    }
+
+    #[test]
+    fn sector_slack_absorbs_small_growth_without_relayout() {
+        // blocks whose encoding grows but stays within its sector span
+        // must rewrite in place (no re-layout) — the property the
+        // sector-aligned frame layout exists for
+        let mut image = vec![0u8; 1 << 14];
+        for c in image.chunks_mut(4) {
+            c.copy_from_slice(&1000u32.to_le_bytes());
+        }
+        let mut mem = memory_with(&image);
+        let base = mem.store_image(&image);
+        // same-shaped data (equal encoding size): in place, no relayout
+        let mut block = vec![0u8; 64];
+        for c in block.chunks_mut(4) {
+            c.copy_from_slice(&1001u32.to_le_bytes());
+        }
+        mem.write_block(base + 2, &block).unwrap();
+        assert_eq!(mem.stats().relayouts, 0);
+        assert_eq!(mem.read_block(base + 2).unwrap(), block);
     }
 
     #[test]

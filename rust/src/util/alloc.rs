@@ -1,0 +1,77 @@
+//! A counting global allocator for allocation-budget tests and benches.
+//!
+//! The Frame API's contract is *zero heap allocations* on the
+//! steady-state read/estimate paths; asserting that requires observing
+//! the allocator. Register [`CountingAlloc`] as the `#[global_allocator]`
+//! of a test or bench **binary** (never the library), then diff
+//! [`CountingAlloc::allocations`] around the code under test:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: gbdi::util::alloc::CountingAlloc = gbdi::util::alloc::CountingAlloc::new();
+//!
+//! let before = gbdi::util::alloc::CountingAlloc::allocations();
+//! hot_path();
+//! assert_eq!(gbdi::util::alloc::CountingAlloc::allocations(), before);
+//! ```
+//!
+//! Counters are global (one allocator per process) and monotonically
+//! increasing; `realloc` counts as one allocation event.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+static ALLOCATED_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// [`System`] allocator wrapper that counts allocation events.
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    /// Const constructor for `#[global_allocator]` statics.
+    pub const fn new() -> Self {
+        CountingAlloc
+    }
+
+    /// Allocation events since process start (allocs + reallocs).
+    pub fn allocations() -> u64 {
+        ALLOCATIONS.load(Ordering::Relaxed)
+    }
+
+    /// Bytes requested since process start.
+    pub fn allocated_bytes() -> u64 {
+        ALLOCATED_BYTES.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for CountingAlloc {
+    fn default() -> Self {
+        CountingAlloc::new()
+    }
+}
+
+// SAFETY: delegates directly to `System`; the counters are lock-free
+// atomics and never allocate.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        ALLOCATED_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        ALLOCATED_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        ALLOCATED_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}

@@ -76,17 +76,91 @@ impl BitWriter {
     /// Finish the stream, zero-padding to a byte boundary, and return the
     /// packed bytes.
     pub fn finish(mut self) -> Vec<u8> {
+        self.flush_to_byte();
+        self.buf
+    }
+
+    /// Reset to an empty stream, keeping the buffer's capacity — the
+    /// reuse hook [`crate::codec::Scratch`] is built on (per-block
+    /// encodes in a loop must not re-allocate).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.acc = 0;
+        self.fill = 0;
+    }
+
+    /// Zero-pad to a byte boundary in place (non-consuming [`Self::finish`]):
+    /// after this call [`Self::bytes`] exposes the complete packed stream
+    /// and further `put`s continue byte-aligned.
+    pub fn flush_to_byte(&mut self) {
         while self.fill > 0 {
             self.buf.push(self.acc as u8);
             self.acc >>= 8;
             self.fill = self.fill.saturating_sub(8);
         }
-        self.buf
+        self.acc = 0;
+    }
+
+    /// The packed bytes written so far. Only whole bytes are visible —
+    /// call [`Self::flush_to_byte`] first if the stream may end mid-byte.
+    pub fn bytes(&self) -> &[u8] {
+        debug_assert_eq!(self.fill, 0, "unflushed bits; call flush_to_byte first");
+        &self.buf
+    }
+
+    /// Append `nbits` bits copied from `src` starting at bit offset
+    /// `bit_off` (same LSB-first layout). The compaction primitive under
+    /// [`crate::frame::Frame::to_container`]: blocks are moved between
+    /// streams without re-encoding.
+    ///
+    /// Panics if `src` holds fewer than `bit_off + nbits` bits.
+    pub fn append_from(&mut self, src: &[u8], bit_off: usize, nbits: u64) {
+        let mut r = BitReader::new(&src[bit_off / 8..]);
+        let sub = (bit_off % 8) as u32;
+        if sub != 0 {
+            r.get(sub).expect("append_from: offset past source");
+        }
+        let mut rem = nbits;
+        while rem > 0 {
+            let n = rem.min(57) as u32;
+            let v = r.get(n).expect("append_from: source exhausted");
+            self.put(v, n);
+            rem -= n as u64;
+        }
     }
 
     /// Current byte length if finished now.
     pub fn byte_len(&self) -> usize {
         (self.bit_len() + 7) / 8
+    }
+}
+
+/// Overwrite `nbits` bits of `dst` starting at bit `pos` with the first
+/// `nbits` bits of `src` (both LSB-first packed). Bits of `dst` outside
+/// the window are preserved — this is the read-modify-write splice under
+/// [`crate::frame::Frame::write_block`]'s in-place path, where a block's
+/// new encoding lands inside its old bit span without disturbing the
+/// neighbouring blocks that share its boundary bytes.
+pub fn overwrite_bits(dst: &mut [u8], pos: usize, src: &[u8], nbits: usize) {
+    debug_assert!(pos + nbits <= dst.len() * 8, "overwrite_bits: window past dst");
+    debug_assert!(nbits <= src.len() * 8, "overwrite_bits: src too short");
+    let mut done = 0usize;
+    while done < nbits {
+        let byte = (pos + done) / 8;
+        let bit = ((pos + done) % 8) as u32;
+        let take = (8 - bit).min((nbits - done) as u32);
+        // gather `take` bits from src at bit offset `done` (may straddle
+        // a byte boundary)
+        let sb = done / 8;
+        let so = (done % 8) as u32;
+        let mut v = (src[sb] >> so) as u16;
+        if so + take > 8 {
+            v |= (src[sb + 1] as u16) << (8 - so);
+        }
+        let keep = ((1u16 << take) - 1) as u8;
+        let v = (v as u8) & keep;
+        dst[byte] = (dst[byte] & !(keep << bit)) | (v << bit);
+        done += take as usize;
     }
 }
 
@@ -389,6 +463,94 @@ mod tests {
             if n >= 2 && v != -(1i64 << (n - 2)) {
                 let bias = 1i64 << (n - 2);
                 assert!(v < -bias || v >= bias, "width {n} not tight for {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn clear_reuses_without_leaking_state() {
+        let mut w = BitWriter::new();
+        w.put(0x5A5A, 16);
+        w.put(1, 3);
+        w.clear();
+        w.put(0b101, 3);
+        let bytes = w.finish();
+        assert_eq!(bytes, vec![0b101]);
+    }
+
+    #[test]
+    fn flush_to_byte_then_bytes_matches_finish() {
+        let mut rng = Rng::new(21);
+        for _ in 0..50 {
+            let fields: Vec<(u64, u32)> = (0..rng.range(1, 40))
+                .map(|_| {
+                    let n = rng.range(1, 58) as u32;
+                    (rng.next_u64() & ((1u64 << n) - 1), n)
+                })
+                .collect();
+            let mut a = BitWriter::new();
+            let mut b = BitWriter::new();
+            for &(v, n) in &fields {
+                a.put(v, n);
+                b.put(v, n);
+            }
+            a.flush_to_byte();
+            assert_eq!(a.bytes(), b.finish().as_slice());
+        }
+    }
+
+    #[test]
+    fn append_from_moves_bit_ranges_exactly() {
+        // build a source stream of known fields, then splice the middle
+        // field into a fresh writer and read it back
+        let mut src_w = BitWriter::new();
+        src_w.put(0b1101, 4);
+        src_w.put(0x2AFE, 15);
+        src_w.put(0x1F, 5);
+        let src = src_w.finish();
+        let mut w = BitWriter::new();
+        w.put(0b11, 2); // pre-existing bits shift the splice off-byte
+        w.append_from(&src, 4, 15);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(2).unwrap(), 0b11);
+        assert_eq!(r.get(15).unwrap(), 0x2AFE);
+        // wide ranges survive too (crosses several 57-bit chunks)
+        let mut rng = Rng::new(9);
+        let mut big = vec![0u8; 64];
+        rng.fill_bytes(&mut big);
+        let mut w = BitWriter::new();
+        w.append_from(&big, 3, 64 * 8 - 10);
+        let out = w.finish();
+        let mut ra = BitReader::new(&big);
+        ra.get(3).unwrap();
+        let mut rb = BitReader::new(&out);
+        for _ in 0..(64 * 8 - 10) / 13 {
+            assert_eq!(ra.get(13).unwrap(), rb.get(13).unwrap());
+        }
+    }
+
+    #[test]
+    fn overwrite_bits_preserves_surroundings() {
+        let mut rng = Rng::new(33);
+        for _ in 0..300 {
+            let mut dst = vec![0u8; 24];
+            rng.fill_bytes(&mut dst);
+            let orig = dst.clone();
+            let pos = rng.below(150) as usize;
+            let nbits = rng.below((dst.len() * 8 - pos) as u64 + 1) as usize;
+            let mut src = vec![0u8; nbits.div_ceil(8) + 1];
+            rng.fill_bytes(&mut src);
+            overwrite_bits(&mut dst, pos, &src, nbits);
+            // window holds src's bits; everything else untouched
+            for i in 0..dst.len() * 8 {
+                let got = (dst[i / 8] >> (i % 8)) & 1;
+                let want = if i >= pos && i < pos + nbits {
+                    (src[(i - pos) / 8] >> ((i - pos) % 8)) & 1
+                } else {
+                    (orig[i / 8] >> (i % 8)) & 1
+                };
+                assert_eq!(got, want, "bit {i} (pos {pos}, nbits {nbits})");
             }
         }
     }

@@ -1,7 +1,9 @@
 //! Infrastructure substrates built from scratch for the offline environment:
 //! deterministic PRNG, bit-level I/O, sampling/statistics, a thread pool,
-//! a property-testing kit, and a micro-benchmark harness.
+//! a property-testing kit, a micro-benchmark harness, and a counting
+//! allocator for allocation-budget tests.
 
+pub mod alloc;
 pub mod bench;
 pub mod bits;
 pub mod pool;

@@ -1,0 +1,123 @@
+//! Allocation-budget regression: the steady-state random-access paths —
+//! `Frame::read_block`, `Frame::read_range`, in-place `write_block`,
+//! and `BlockCodec::estimate_block_bits_with` — must not touch the heap
+//! once scratch buffers are warm. This binary registers the crate's
+//! counting allocator globally and diffs its counter around the hot
+//! loops, for all three block codecs.
+//!
+//! The allocator counter is process-global, so the tests serialize
+//! through a gate mutex: no sibling test can allocate inside another's
+//! measured window.
+
+use gbdi::util::alloc::CountingAlloc;
+use gbdi::util::prng::Rng;
+use gbdi::{BlockCodec, CodecKind, Frame, GbdiConfig, Scratch};
+use std::sync::{Arc, Mutex};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+/// Serializes whole test bodies (see module docs).
+static GATE: Mutex<()> = Mutex::new(());
+
+/// Run `f` in a measured window and return the allocation events it
+/// caused.
+fn allocs_during(f: impl FnOnce()) -> u64 {
+    let before = CountingAlloc::allocations();
+    f();
+    CountingAlloc::allocations() - before
+}
+
+fn clustered_image(len_words: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    (0..len_words)
+        .flat_map(|_| {
+            let v: u32 = match rng.below(4) {
+                0 => 4000u32.wrapping_add(rng.range_i64(-100, 100) as u32),
+                1 => (1u32 << 23).wrapping_add(rng.range_i64(-300, 300) as u32),
+                2 => 0,
+                _ => rng.next_u32(),
+            };
+            v.to_le_bytes()
+        })
+        .collect()
+}
+
+#[test]
+fn read_and_estimate_paths_do_not_allocate() {
+    let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let image = clustered_image(16 * 1024, 61); // 64 KiB
+    let cfg = GbdiConfig::default();
+    for &kind in CodecKind::all() {
+        let codec: Arc<dyn BlockCodec> = Arc::from(kind.build_for_image(&image, &cfg));
+        let frame = Frame::compress(Arc::clone(&codec), &image);
+        let n = frame.n_blocks();
+        let mut line = vec![0u8; frame.block_bytes()];
+        let mut scratch = Scratch::new();
+        let mut sink = 0u64;
+        let mut pass = |sink: &mut u64, scratch: &mut Scratch| {
+            for k in 0..2000usize {
+                let i = (k * 131) % n;
+                frame.read_block(i, &mut line).unwrap();
+                *sink = sink.wrapping_add(line[0] as u64);
+                *sink = sink.wrapping_add(
+                    codec.estimate_block_bits_with(&image[i * 64..(i + 1) * 64], scratch),
+                );
+            }
+        };
+        // warm pass: scratch buffers grow to their steady-state size
+        pass(&mut sink, &mut scratch);
+        let allocs = allocs_during(|| pass(&mut sink, &mut scratch));
+        std::hint::black_box(sink);
+        assert_eq!(allocs, 0, "{}: read/estimate hot loop allocated", kind.name());
+    }
+}
+
+#[test]
+fn range_reads_do_not_allocate_once_warm() {
+    let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let image = clustered_image(16 * 1024, 62);
+    let cfg = GbdiConfig::default();
+    let codec: Arc<dyn BlockCodec> = Arc::from(CodecKind::Gbdi.build_for_image(&image, &cfg));
+    let frame = Frame::compress(Arc::clone(&codec), &image);
+    let mut scratch = Scratch::new();
+    let mut out = vec![0u8; 300];
+    // warm: the partial-block scratch buffer allocates exactly once
+    frame.read_range(13, &mut out, &mut scratch).unwrap();
+    let allocs = allocs_during(|| {
+        for k in 0..1000usize {
+            let off = (k * 77) % (image.len() - out.len());
+            frame.read_range(off, &mut out, &mut scratch).unwrap();
+        }
+    });
+    assert_eq!(allocs, 0, "read_range hot loop allocated");
+}
+
+#[test]
+fn in_place_writes_do_not_allocate_once_warm() {
+    let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    // rewriting blocks with same-shaped content stays inside each
+    // block's span: no patch growth, no writer growth, no allocations
+    let image = clustered_image(16 * 1024, 63);
+    let cfg = GbdiConfig::default();
+    for &kind in CodecKind::all() {
+        let codec: Arc<dyn BlockCodec> = Arc::from(kind.build_for_image(&image, &cfg));
+        let mut frame = Frame::compress(Arc::clone(&codec), &image);
+        let n = frame.n_blocks();
+        let mut scratch = Scratch::new();
+        let mut line = vec![0u8; frame.block_bytes()];
+        let mut pass = |frame: &mut Frame, scratch: &mut Scratch| {
+            for k in 0..500usize {
+                let i = (k * 37) % n;
+                // read the block and write the same bytes back: the
+                // re-encoding is identical, so it always fits in place
+                frame.read_block(i, &mut line).unwrap();
+                frame.write_block(i, &line, scratch).unwrap();
+            }
+        };
+        // warm pass: scratch writer + plan buffers reach steady state
+        pass(&mut frame, &mut scratch);
+        let allocs = allocs_during(|| pass(&mut frame, &mut scratch));
+        assert_eq!(allocs, 0, "{}: in-place write hot loop allocated", kind.name());
+    }
+}

@@ -187,6 +187,81 @@ fn u16_block_bits_regression_oversized_blocks() {
 }
 
 #[test]
+fn varint_boundaries_roundtrip_and_overflow_is_rejected() {
+    // the container's framing index is u32 LEB128; every boundary value
+    // must roundtrip exactly and oversized encodings must be corruption,
+    // not silent truncation (a truncated length mis-frames every later
+    // block)
+    let boundaries = [
+        0u32,
+        1,
+        0x7F,
+        0x80,
+        0x3FFF,
+        0x4000,
+        0x1F_FFFF,
+        0x20_0000,
+        0xFFF_FFFF,
+        0x1000_0000,
+        u32::MAX - 1,
+        u32::MAX,
+    ];
+    let mut buf = Vec::new();
+    for &v in &boundaries {
+        buf.clear();
+        container::put_varint(&mut buf, v);
+        assert_eq!(buf.len(), container::varint_len(v), "len for {v:#x}");
+        let mut off = 0;
+        assert_eq!(container::read_varint(&buf, &mut off).unwrap(), v, "{v:#x}");
+        assert_eq!(off, buf.len());
+    }
+    // a fifth byte with payload past bit 31, or still continuing, is corrupt
+    for bad in [[0xFF, 0xFF, 0xFF, 0xFF, 0x10], [0xFF, 0xFF, 0xFF, 0xFF, 0x80]] {
+        let mut off = 0;
+        assert!(container::read_varint(&bad, &mut off).is_err(), "{bad:?}");
+    }
+    // truncated stream
+    let mut off = 0;
+    assert!(container::read_varint(&[0x80], &mut off).is_err());
+}
+
+#[test]
+fn frame_index_math_survives_boundaries() {
+    use gbdi::frame::Frame;
+    use std::sync::Arc;
+    let cfg = GbdiConfig::default();
+    // zero-block image: a frame over nothing reads nothing and errors
+    // out-of-range instead of panicking
+    for &kind in CodecKind::all() {
+        let codec = kind.build_for_image(&[], &cfg);
+        let c = container::compress(codec.as_ref(), &[]);
+        let frame = Frame::from_container(c).unwrap();
+        assert_eq!(frame.n_blocks(), 0);
+        assert!(frame.read_block(0, &mut [0u8; 64]).is_err());
+        assert_eq!(frame.decompress().unwrap(), Vec::<u8>::new());
+    }
+    // ragged tails at every offset within a block boundary
+    let base = workloads::by_name("perlbench").unwrap().generate(4096, 55);
+    for cut in [1usize, 63, 64, 65, 4095] {
+        let img = &base[..cut];
+        let codec: Arc<dyn BlockCodec> = Arc::from(CodecKind::Fpc.build_for_image(img, &cfg));
+        let frame = Frame::compress(Arc::clone(&codec), img);
+        let mut buf = [0u8; 64];
+        let last = frame.n_blocks() - 1;
+        let n = frame.read_block(last, &mut buf).unwrap();
+        assert_eq!(n, if cut % 64 == 0 { 64 } else { cut % 64 }, "cut {cut}");
+        assert_eq!(frame.decompress().unwrap(), img, "cut {cut}");
+    }
+    // u32::MAX-scale bit lengths in a forged index must be rejected at
+    // frame construction (the offsets would run past the payload)
+    let img = base;
+    let codec = CodecKind::Bdi.build_for_image(&img, &cfg);
+    let mut c = container::compress(codec.as_ref(), &img);
+    c.block_bits[0] = u32::MAX;
+    assert!(Frame::from_container(c).is_err());
+}
+
+#[test]
 fn containers_distinguish_codecs_on_decode() {
     // compress with one codec; the container remembers which, and a
     // mismatched decoder is rejected instead of producing garbage
