@@ -232,6 +232,25 @@ pub(crate) fn degenerate_selection() -> Selection {
 /// The pure-Rust selectors the CLI and configs can instantiate by name
 /// ([`ArtifactSelector`] needs a PJRT runtime handle and is constructed
 /// explicitly — see `gbdi serve --selector artifact`).
+///
+/// Every kind builds a [`BaseSelector`] whose proposal flows through
+/// the same width fitting
+/// ([`GlobalBaseTable::from_selection`](crate::gbdi::table::GlobalBaseTable::from_selection)),
+/// so choosing a selector trades ratio against analysis latency but can
+/// never affect decode correctness (DESIGN.md §6).
+///
+/// ```
+/// use gbdi::cluster::{BaseSelector, SelectorConfig, SelectorKind};
+///
+/// let kind = SelectorKind::parse("minibatch").unwrap();
+/// assert_eq!(kind.name(), "minibatch");
+/// let mut selector = kind.build();
+/// // a tight cluster around 50_000: one base covers everything
+/// let samples: Vec<u64> = (0..512u64).map(|i| 50_000 + (i % 40)).collect();
+/// let selection = selector.select(&samples, None, &SelectorConfig::default()).unwrap();
+/// assert!(!selection.centroids.is_empty());
+/// assert!(selection.cost.is_finite());
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SelectorKind {
     /// Full bit-cost Lloyd k-means (reference arm).

@@ -64,7 +64,22 @@ impl CodecId {
 /// use and are then reused). It is deliberately *not* `Sync`-shared:
 /// ownership stays with the caller, which is what lets the per-request
 /// paths in the coordinator and the memory simulator run without a
-/// single heap allocation.
+/// single heap allocation. Each shard of the coordinator's page store
+/// owns one, so block writes on different shards never share buffers.
+///
+/// ```
+/// use gbdi::{BlockCodec, CodecKind, GbdiConfig, Scratch};
+///
+/// let cfg = GbdiConfig::default();
+/// let codec = CodecKind::Bdi.build_for_image(&[], &cfg);
+/// let mut scratch = Scratch::new();
+/// // hold the scratch across a loop: after the first call these paths
+/// // are allocation-free (pinned by tests/alloc_counting.rs)
+/// let block = [7u8; 64];
+/// let bits = codec.estimate_block_bits_with(&block, &mut scratch);
+/// assert!(bits > 0);
+/// assert_eq!(codec.estimate_block_bits(&block), bits);
+/// ```
 #[derive(Debug, Default)]
 pub struct Scratch {
     /// Reusable bit writer (estimate + in-place write paths).

@@ -17,6 +17,8 @@
 //!
 //! [service]
 //! workers = 4
+//! shards = 8                 # independently locked page-store shards
+//! ingest_batch = 32          # pages grouped per submit_batch call
 //! analyze_every = 256
 //! sample_words = 8192
 //!
@@ -199,6 +201,14 @@ impl ConfigFile {
         if !(0.0..=1.0).contains(&swap_margin) {
             return Err(format!("analyzer.swap_margin: {swap_margin} must be in [0, 1]"));
         }
+        let shards = self.get_u64("service", "shards", d.shards as u64)? as usize;
+        if shards == 0 {
+            return Err("service.shards: must be >= 1".into());
+        }
+        let ingest_batch = self.get_u64("service", "ingest_batch", d.ingest_batch as u64)? as usize;
+        if ingest_batch == 0 {
+            return Err("service.ingest_batch: must be >= 1".into());
+        }
         Ok(ServiceConfig {
             codec: self.codec_config()?,
             workers: self.get_u64("service", "workers", d.workers as u64)? as usize,
@@ -210,6 +220,8 @@ impl ConfigFile {
             selector,
             drift_margin,
             swap_margin,
+            shards,
+            ingest_batch,
         })
     }
 
@@ -236,6 +248,8 @@ seed = 0xDEAD_BEEF
 
 [service]
 workers = 8
+shards = 4
+ingest_batch = 16
 analyze_every = 1k
 
 [analyzer]
@@ -272,12 +286,26 @@ drift_margin = 1.05
     fn builds_service_config() {
         let cfg = ConfigFile::parse(SAMPLE).unwrap().service_config().unwrap();
         assert_eq!(cfg.workers, 8);
+        assert_eq!(cfg.shards, 4);
+        assert_eq!(cfg.ingest_batch, 16);
         assert_eq!(cfg.analyze_every, 1024);
         assert_eq!(cfg.codec.block_bytes, 128);
         assert_eq!(cfg.selector, SelectorKind::MiniBatch);
         assert!((cfg.drift_margin - 1.05).abs() < 1e-12);
         // unspecified analyzer keys keep their defaults
         assert!((cfg.swap_margin - ServiceConfig::default().swap_margin).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sharding_keys_validate() {
+        let c = ConfigFile::parse("[service]\nshards = 0").unwrap();
+        assert!(c.service_config().is_err());
+        let c = ConfigFile::parse("[service]\ningest_batch = 0").unwrap();
+        assert!(c.service_config().is_err());
+        // defaults when the keys are absent
+        let c = ConfigFile::parse("").unwrap().service_config().unwrap();
+        assert_eq!(c.shards, ServiceConfig::default().shards);
+        assert_eq!(c.ingest_batch, ServiceConfig::default().ingest_batch);
     }
 
     #[test]

@@ -37,6 +37,27 @@ const FLAG_TABLE: u8 = 1;
 
 /// A compressed image: codec identity + framing + payload. This is the
 /// one in-memory and on-disk compressed form for every block codec.
+///
+/// ```
+/// use gbdi::{CodecKind, Container, GbdiConfig};
+///
+/// // 4 KiB of clustered little-endian words — GBDI's favorite diet
+/// let image: Vec<u8> = (0u32..1024).flat_map(|i| (9000 + (i % 40)).to_le_bytes()).collect();
+/// let codec = CodecKind::Gbdi.build_for_image(&image, &GbdiConfig::default());
+/// let container = gbdi::container::compress(codec.as_ref(), &image);
+/// assert!(container.ratio() > 1.0);
+///
+/// // the wire format roundtrips bit-exactly...
+/// let bytes = container.to_bytes();
+/// let parsed = Container::from_bytes(&bytes).unwrap();
+/// assert_eq!(parsed.decompress().unwrap(), image);
+///
+/// // ...and upgrades to a random-access frame without copying the payload
+/// let frame = parsed.into_frame().unwrap();
+/// let mut line = [0u8; 64];
+/// frame.read_block(0, &mut line).unwrap();
+/// assert_eq!(&line[..], &image[..64]);
+/// ```
 #[derive(Debug, Clone)]
 pub struct Container {
     /// Which codec encoded the payload.

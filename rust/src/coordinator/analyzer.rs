@@ -19,6 +19,14 @@
 //! reservoir under the incumbent is one `O(n)` pass, so a stable
 //! workload pays near-zero analysis cost and only a real phase change
 //! triggers the selector.
+//!
+//! The analyzer's interaction with the sharded store is deliberately
+//! minimal (DESIGN.md §8): a winning candidate is published with one
+//! O(1) insert into the shared codec ring — never an O(shards) fan-out
+//! or a store-wide stall — and the follow-up recompress migration
+//! ([`super::service::CompressionService::recompress_step`]) walks one
+//! shard at a time so maintenance only ever blocks the shard it is
+//! currently migrating.
 
 use crate::cluster::{BaseSelector, LloydSelector, Selection, SelectorConfig};
 use crate::gbdi::table::GlobalBaseTable;

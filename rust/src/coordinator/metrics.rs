@@ -1,5 +1,17 @@
 //! Lock-free metrics registry for the coordinator (atomics only — the
 //! hot path must never take a lock to count).
+//!
+//! Two granularities:
+//!
+//! * [`Metrics`] / [`MetricsSnapshot`] — service-wide totals (pages,
+//!   bytes, analyses, block-op counts and latencies).
+//! * [`ShardMetrics`] / [`ShardMetricsSnapshot`] — per-shard counters
+//!   owned by each shard of the
+//!   [`ShardedPageStore`](super::store::ShardedPageStore): occupancy,
+//!   exclusive lock-hold time, and block read/write latency. The
+//!   invariant the stress tests pin down: per-shard block-op counters
+//!   sum exactly to the service-wide totals, because both sides count
+//!   the same successful operations once.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -129,7 +141,13 @@ impl Metrics {
 
     /// Record a page migration.
     pub fn recompression(&self) {
-        self.recompressions.fetch_add(1, Ordering::Relaxed);
+        self.recompressed(1);
+    }
+
+    /// Record a batch of `n` page migrations in one atomic add (the
+    /// per-shard migration walk reports whole shards at a time).
+    pub fn recompressed(&self, n: u64) {
+        self.recompressions.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Record a failed read.
@@ -173,6 +191,161 @@ impl Metrics {
             block_writes: self.block_writes.load(Ordering::Relaxed),
             block_write_ns: self.block_write_ns.load(Ordering::Relaxed),
         }
+    }
+}
+
+/// Per-shard hot-path counters, owned by one shard of the
+/// [`ShardedPageStore`](super::store::ShardedPageStore). All methods are
+/// `&self` and wait-free; occupancy gauges (pages, bytes) are read from
+/// the shard's page map at snapshot time rather than counted here, so
+/// they can never drift from the map itself.
+#[derive(Debug, Default)]
+pub struct ShardMetrics {
+    block_reads: AtomicU64,
+    block_read_ns: AtomicU64,
+    block_writes: AtomicU64,
+    block_write_ns: AtomicU64,
+    lock_holds: AtomicU64,
+    lock_hold_ns: AtomicU64,
+}
+
+impl ShardMetrics {
+    /// Fresh zeroed registry.
+    pub fn new() -> Self {
+        ShardMetrics::default()
+    }
+
+    /// Record one served single-block read and its latency (includes the
+    /// shard-lock wait, so contention shows up here).
+    pub fn block_read(&self, ns: u64) {
+        self.block_reads.fetch_add(1, Ordering::Relaxed);
+        self.block_read_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Record one served single-block write and its latency.
+    pub fn block_write(&self, ns: u64) {
+        self.block_writes.fetch_add(1, Ordering::Relaxed);
+        self.block_write_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Record one exclusive (write-side) lock acquisition and how long
+    /// the guard was held — the quantity shard sizing tunes against.
+    pub fn lock_hold(&self, ns: u64) {
+        self.lock_holds.fetch_add(1, Ordering::Relaxed);
+        self.lock_hold_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Snapshot the counters, attaching the occupancy gauges the caller
+    /// read under the shard lock.
+    pub fn snapshot(
+        &self,
+        shard: usize,
+        pages: u64,
+        logical_bytes: u64,
+        stored_bytes: u64,
+    ) -> ShardMetricsSnapshot {
+        ShardMetricsSnapshot {
+            shard,
+            pages,
+            logical_bytes,
+            stored_bytes,
+            block_reads: self.block_reads.load(Ordering::Relaxed),
+            block_read_ns: self.block_read_ns.load(Ordering::Relaxed),
+            block_writes: self.block_writes.load(Ordering::Relaxed),
+            block_write_ns: self.block_write_ns.load(Ordering::Relaxed),
+            lock_holds: self.lock_holds.load(Ordering::Relaxed),
+            lock_hold_ns: self.lock_hold_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of one shard's [`ShardMetrics`] plus its occupancy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardMetricsSnapshot {
+    /// Shard index (0-based).
+    pub shard: usize,
+    /// Pages resident in this shard.
+    pub pages: u64,
+    /// Logical bytes resident in this shard.
+    pub logical_bytes: u64,
+    /// Compressed bytes resident in this shard.
+    pub stored_bytes: u64,
+    /// Single-block reads served by this shard.
+    pub block_reads: u64,
+    /// Nanoseconds spent serving this shard's block reads.
+    pub block_read_ns: u64,
+    /// Single-block writes served by this shard.
+    pub block_writes: u64,
+    /// Nanoseconds spent serving this shard's block writes.
+    pub block_write_ns: u64,
+    /// Exclusive lock acquisitions on this shard.
+    pub lock_holds: u64,
+    /// Nanoseconds the exclusive lock was held in total.
+    pub lock_hold_ns: u64,
+}
+
+impl ShardMetricsSnapshot {
+    /// Mean block-read latency in nanoseconds (0 before the first read).
+    pub fn block_read_mean_ns(&self) -> f64 {
+        if self.block_reads == 0 {
+            0.0
+        } else {
+            self.block_read_ns as f64 / self.block_reads as f64
+        }
+    }
+
+    /// Mean block-write latency in nanoseconds (0 before the first
+    /// write).
+    pub fn block_write_mean_ns(&self) -> f64 {
+        if self.block_writes == 0 {
+            0.0
+        } else {
+            self.block_write_ns as f64 / self.block_writes as f64
+        }
+    }
+
+    /// Mean exclusive lock-hold time in nanoseconds (0 before the first
+    /// exclusive acquisition).
+    pub fn lock_hold_mean_ns(&self) -> f64 {
+        if self.lock_holds == 0 {
+            0.0
+        } else {
+            self.lock_hold_ns as f64 / self.lock_holds as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod shard_tests {
+    use super::*;
+
+    #[test]
+    fn shard_counters_accumulate() {
+        let m = ShardMetrics::new();
+        m.block_read(100);
+        m.block_read(300);
+        m.block_write(500);
+        m.lock_hold(40);
+        m.lock_hold(60);
+        let s = m.snapshot(3, 7, 7 * 4096, 9000);
+        assert_eq!(s.shard, 3);
+        assert_eq!(s.pages, 7);
+        assert_eq!(s.logical_bytes, 7 * 4096);
+        assert_eq!(s.stored_bytes, 9000);
+        assert_eq!(s.block_reads, 2);
+        assert_eq!(s.block_read_mean_ns(), 200.0);
+        assert_eq!(s.block_writes, 1);
+        assert_eq!(s.block_write_mean_ns(), 500.0);
+        assert_eq!(s.lock_holds, 2);
+        assert_eq!(s.lock_hold_mean_ns(), 50.0);
+    }
+
+    #[test]
+    fn empty_shard_snapshot_sane() {
+        let s = ShardMetrics::new().snapshot(0, 0, 0, 0);
+        assert_eq!(s.block_read_mean_ns(), 0.0);
+        assert_eq!(s.block_write_mean_ns(), 0.0);
+        assert_eq!(s.lock_hold_mean_ns(), 0.0);
     }
 }
 

@@ -17,15 +17,24 @@
 //!   warm-start selectors reuse the incumbent's centroids when they do
 //!   run.
 //! * **Codec versioning.** Every stored page records the codec version
-//!   that encoded it; the [`store::PageStore`] keeps all published
-//!   versions (as `Arc<dyn BlockCodec>`) so any page decompresses
-//!   bit-exactly at any time.
+//!   that encoded it; the page store keeps all published versions (as
+//!   `Arc<dyn BlockCodec>`) so any page decompresses bit-exactly at any
+//!   time.
 //! * **One codec seam.** The service is generic over
 //!   [`crate::codec::BlockCodec`]: the adaptive path swaps GBDI table
 //!   versions; [`service::CompressionService::start_static`] serves any
 //!   baseline (BDI, FPC) through the identical pipeline.
 //! * **Analysis off the hot path.** Workers only read the current codec
 //!   (an `Arc` swap); clustering happens on the analyzer thread.
+//! * **The store is sharded.** The service serves from a
+//!   [`store::ShardedPageStore`]: N independently locked shards routed
+//!   by a page-id hash, so block GETs/PUTs on different shards never
+//!   contend, ingest batches take each shard lock once per batch
+//!   ([`service::CompressionService::submit_batch`]), and recompression
+//!   migration walks one shard at a time — maintenance never stalls
+//!   foreground traffic on other shards (DESIGN.md §8). The single-lock
+//!   [`store::PageStore`] remains as the reference semantics the
+//!   equivalence property tests check the sharded store against.
 
 pub mod analyzer;
 pub mod metrics;
@@ -33,6 +42,6 @@ pub mod service;
 pub mod store;
 
 pub use analyzer::Analyzer;
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{Metrics, MetricsSnapshot, ShardMetrics, ShardMetricsSnapshot};
 pub use service::{CompressionService, ServiceConfig};
-pub use store::PageStore;
+pub use store::{PageStore, ShardedPageStore, StoredPage};

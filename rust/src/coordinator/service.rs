@@ -11,23 +11,33 @@
 //! Threading model (all std, no async runtime available offline):
 //!
 //! ```text
-//!  submit()  ──mpsc──►  workers (N threads)
+//!  submit() / submit_batch()  ──mpsc──►  workers (N threads)
 //!                         │  read current Arc<dyn BlockCodec> (RwLock swap)
-//!                         │  compress page → PageStore (RwLock: block GETs
-//!                         │  take the shared read side and run concurrently)
+//!                         │  compress the whole batch OUTSIDE any store
+//!                         │  lock, then put_batch → ShardedPageStore:
+//!                         │  pages grouped per shard, each shard lock
+//!                         │  taken once per batch
 //!                         │  feed word samples → Reservoir (Mutex)
 //!                         ▼
+//!  ShardedPageStore (S shards, page-id hash routing): block GETs take
+//!  one shard's read side, block PUTs one shard's write side — traffic
+//!  on different shards never contends, and a codec publish is one O(1)
+//!  insert into the shared ring (DESIGN.md §8).
+//!
 //!  analyzer thread (adaptive mode only): every `analyze_every` pages,
 //!  snapshot the reservoir; if drift detection says the incumbent still
 //!  scores well, skip; otherwise run the configured BaseSelector
 //!  (lloyd / minibatch warm-start / histogram / PJRT artifact), fit
 //!  widths, score vs incumbent, publish new version + swap codec.
+//!  Recompression migration walks one shard at a time
+//!  ([`CompressionService::recompress_step`]), so maintenance never
+//!  stalls foreground GETs/PUTs on other shards.
 //! ```
 
 use super::analyzer::Analyzer;
 use crate::cluster::{BaseSelector, SelectorKind};
-use super::metrics::{Metrics, MetricsSnapshot};
-use super::store::{PageStore, StoredPage};
+use super::metrics::{Metrics, MetricsSnapshot, ShardMetricsSnapshot};
+use super::store::{ShardedPageStore, StoredPage};
 use crate::codec::{BlockCodec, Scratch};
 use crate::frame::Frame;
 use crate::gbdi::table::GlobalBaseTable;
@@ -64,6 +74,16 @@ pub struct ServiceConfig {
     /// Swap hysteresis: a candidate must shrink estimated bits below
     /// `incumbent * swap_margin` to be published.
     pub swap_margin: f64,
+    /// Independently locked shards of the page store (clamped to ≥ 1).
+    /// More shards = less lock contention between concurrent block
+    /// GETs/PUTs and ingest; 1 reproduces the old single-lock behavior.
+    pub shards: usize,
+    /// Preferred pages per [`CompressionService::submit_batch`] call —
+    /// the grouping the CLI and benches use when streaming ingest.
+    /// Workers take each shard lock once per batch instead of once per
+    /// page, so larger batches amortize locking at the cost of ingest
+    /// latency.
+    pub ingest_batch: usize,
 }
 
 impl Default for ServiceConfig {
@@ -77,13 +97,15 @@ impl Default for ServiceConfig {
             selector: SelectorKind::Lloyd,
             drift_margin: 1.02,
             swap_margin: 0.98,
+            shards: 8,
+            ingest_batch: 32,
         }
     }
 }
 
 struct Shared {
     codec: RwLock<Arc<dyn BlockCodec>>,
-    store: RwLock<PageStore>,
+    store: ShardedPageStore,
     reservoir: Mutex<Reservoir<u64>>,
     metrics: Metrics,
     config: ServiceConfig,
@@ -97,10 +119,36 @@ struct Shared {
 }
 
 enum Job {
-    Page { page_id: u64, data: Vec<u8> },
+    /// One ingest batch: compressed together by one worker, stored with
+    /// one shard-lock acquisition per touched shard.
+    Batch(Vec<(u64, Vec<u8>)>),
 }
 
 /// The running service.
+///
+/// ```
+/// use gbdi::coordinator::{CompressionService, ServiceConfig};
+///
+/// let svc = CompressionService::start(ServiceConfig {
+///     workers: 2,
+///     shards: 4,
+///     ..Default::default()
+/// })
+/// .unwrap();
+/// // ingest: single pages or per-shard-batched
+/// svc.submit(0, vec![0u8; 4096]);
+/// svc.submit_batch((1..4u64).map(|i| (i, vec![i as u8; 4096])).collect());
+/// svc.flush();
+/// assert_eq!(svc.read_page(2).unwrap(), vec![2u8; 4096]);
+/// // block-granular serving straight out of the compressed frames
+/// let mut line = [0u8; 64];
+/// svc.read_block(0, 3, &mut line).unwrap();
+/// svc.write_block(0, 3, &[7u8; 64]).unwrap();
+/// let metrics = svc.shutdown();
+/// assert_eq!(metrics.pages_in, 4);
+/// assert_eq!(metrics.block_reads, 1);
+/// assert_eq!(metrics.block_writes, 1);
+/// ```
 pub struct CompressionService {
     shared: Arc<Shared>,
     tx: Option<Sender<Job>>,
@@ -150,11 +198,11 @@ impl CompressionService {
         analyzer: Option<Analyzer>,
     ) -> Result<Self> {
         let first_version = codec.version();
-        let mut store = PageStore::new();
+        let store = ShardedPageStore::new(config.shards);
         store.publish_codec(Arc::clone(&codec));
         let shared = Arc::new(Shared {
             codec: RwLock::new(codec),
-            store: RwLock::new(store),
+            store,
             reservoir: Mutex::new(Reservoir::new(config.sample_words)),
             metrics: Metrics::new(),
             config: config.clone(),
@@ -196,13 +244,28 @@ impl CompressionService {
         })
     }
 
-    /// Submit one page for compression (non-blocking).
+    /// Submit one page for compression (non-blocking). Equivalent to a
+    /// batch of one; streaming callers should group pages with
+    /// [`Self::submit_batch`] (see [`ServiceConfig::ingest_batch`]) so
+    /// workers amortize shard locking.
     pub fn submit(&self, page_id: u64, data: Vec<u8>) {
-        self.shared.inflight.fetch_add(1, Ordering::AcqRel);
+        self.submit_batch(vec![(page_id, data)]);
+    }
+
+    /// Submit a batch of pages for compression (non-blocking). One
+    /// worker compresses the whole batch outside any store lock, then
+    /// stores it with **one lock acquisition per touched shard** —
+    /// under concurrent ingest this is what keeps workers from
+    /// serializing on the store. An empty batch is a no-op.
+    pub fn submit_batch(&self, pages: Vec<(u64, Vec<u8>)>) {
+        if pages.is_empty() {
+            return;
+        }
+        self.shared.inflight.fetch_add(pages.len() as u64, Ordering::AcqRel);
         self.tx
             .as_ref()
             .expect("service running")
-            .send(Job::Page { page_id, data })
+            .send(Job::Batch(pages))
             .expect("workers alive");
     }
 
@@ -216,8 +279,7 @@ impl CompressionService {
 
     /// Read back a page (bit-exact), whatever codec version encoded it.
     pub fn read_page(&self, page_id: u64) -> Result<Vec<u8>> {
-        let store = self.shared.store.read().unwrap();
-        let r = store.read(page_id);
+        let r = self.shared.store.read(page_id);
         if r.is_err() {
             self.shared.metrics.read_error();
         }
@@ -226,14 +288,13 @@ impl CompressionService {
 
     /// Serve a single-block GET: decode one block of a stored page into
     /// `out` (returns the bytes written) without touching the rest of
-    /// the page. O(1) in the page size; per-request latency lands in
-    /// [`MetricsSnapshot::block_read_mean_ns`].
+    /// the page. O(1) in the page size, contending only with writers of
+    /// the same shard; per-request latency lands in
+    /// [`MetricsSnapshot::block_read_mean_ns`] and in that shard's
+    /// [`ShardMetricsSnapshot`].
     pub fn read_block(&self, page_id: u64, block: usize, out: &mut [u8]) -> Result<usize> {
         let t0 = Instant::now();
-        let r = {
-            let store = self.shared.store.read().unwrap();
-            store.read_block(page_id, block, out)
-        };
+        let r = self.shared.store.read_block(page_id, block, out);
         if r.is_err() {
             self.shared.metrics.read_error();
         } else {
@@ -245,14 +306,12 @@ impl CompressionService {
     /// Serve a single-block PUT: recompress one block of a stored page
     /// in place under the codec version that encoded the page (the new
     /// encoding spills to the frame's patch region if it outgrows its
-    /// slot). Latency lands in
-    /// [`MetricsSnapshot::block_write_mean_ns`].
+    /// slot). Takes only that page's shard lock. Latency lands in
+    /// [`MetricsSnapshot::block_write_mean_ns`] and in that shard's
+    /// [`ShardMetricsSnapshot`].
     pub fn write_block(&self, page_id: u64, block: usize, data: &[u8]) -> Result<()> {
         let t0 = Instant::now();
-        let r = {
-            let mut store = self.shared.store.write().unwrap();
-            store.write_block(page_id, block, data)
-        };
+        let r = self.shared.store.write_block(page_id, block, data);
         match r {
             Ok(_) => {
                 self.shared.metrics.block_write(t0.elapsed().as_nanos() as u64);
@@ -286,42 +345,44 @@ impl CompressionService {
         self.shared.metrics.snapshot()
     }
 
-    /// Stored/logical byte accounting: (logical, stored, ratio).
+    /// Per-shard metrics: occupancy, exclusive lock-hold time, and block
+    /// read/write latency for each shard of the page store. The block-op
+    /// counters sum to the [`Self::metrics`] totals.
+    pub fn shard_metrics(&self) -> Vec<ShardMetricsSnapshot> {
+        self.shared.store.shard_metrics()
+    }
+
+    /// Number of page-store shards this service was started with.
+    pub fn shard_count(&self) -> usize {
+        self.shared.store.shard_count()
+    }
+
+    /// Stored/logical byte accounting: (logical, stored, ratio). One
+    /// lock acquisition per shard; each shard's contribution to both
+    /// numbers comes from the same instant.
     pub fn storage_ratio(&self) -> (usize, usize, f64) {
-        let store = self.shared.store.read().unwrap();
-        let (l, s) = (store.logical_bytes(), store.stored_bytes());
+        let (l, s) = self.shared.store.usage();
         (l, s, if s == 0 { 1.0 } else { l as f64 / s as f64 })
     }
 
     /// Migrate up to `config.recompress_batch` pages encoded under old
-    /// codec versions to the current one. Returns pages migrated.
+    /// codec versions to the current one, walking the shards one at a
+    /// time so maintenance only ever blocks the shard it is migrating —
+    /// foreground GETs/PUTs on every other shard proceed untouched, and
+    /// even within a shard the lock drops between pages
+    /// ([`ShardedPageStore::migrate_shard`]). Returns pages migrated.
     pub fn recompress_step(&self) -> Result<usize> {
         let codec = Arc::clone(&self.shared.codec.read().unwrap());
-        let current = codec.version();
-        let lagging: Vec<u64> = {
-            let store = self.shared.store.read().unwrap();
-            store
-                .lagging_pages(current)
-                .into_iter()
-                .take(self.shared.config.recompress_batch)
-                .collect()
-        };
+        let mut budget = self.shared.config.recompress_batch;
         let mut moved = 0;
-        let mut scratch = Scratch::new();
-        for id in lagging {
-            // read under the old version and re-encode under the current
-            // one while holding the write guard for this page: a block
-            // PUT landing between the read and the put would otherwise
-            // be silently clobbered by the stale re-encode (one 4 KiB
-            // page encode is microseconds; migration stays incremental
-            // because the guard drops between pages)
-            let mut store = self.shared.store.write().unwrap();
-            let data = store.read(id)?;
-            let frame = Frame::compress_with(Arc::clone(&codec), &data, &mut scratch);
-            store.put(id, StoredPage { frame });
-            drop(store);
-            self.shared.metrics.recompression();
-            moved += 1;
+        for shard in 0..self.shared.store.shard_count() {
+            if budget == 0 {
+                break;
+            }
+            let n = self.shared.store.migrate_shard(shard, &codec, budget)?;
+            self.shared.metrics.recompressed(n as u64);
+            moved += n;
+            budget -= n;
         }
         Ok(moved)
     }
@@ -350,28 +411,36 @@ fn worker_loop(shared: Arc<Shared>, rx: Arc<Mutex<Receiver<Job>>>, worker_id: u6
             let guard = rx.lock().unwrap();
             guard.recv()
         };
-        let Job::Page { page_id, data } = match job {
+        let Job::Batch(pages) = match job {
             Ok(j) => j,
             Err(_) => break,
         };
-        let t0 = Instant::now();
-        // sample traffic for the analyzer (cheap stride over the page)
+        let n = pages.len() as u64;
+        // sample traffic for the analyzer (cheap stride over each page,
+        // one reservoir acquisition per batch)
         {
             let mut res = shared.reservoir.lock().unwrap();
-            for w in words(&data, shared.config.codec.word_size).step_by(17) {
-                res.offer(w, &mut rng);
+            for (_, data) in &pages {
+                for w in words(data, shared.config.codec.word_size).step_by(17) {
+                    res.offer(w, &mut rng);
+                }
             }
         }
+        // compress the whole batch outside any store lock...
         let codec = Arc::clone(&shared.codec.read().unwrap());
-        let stored = StoredPage { frame: Frame::compress_with(codec, &data, &mut scratch) };
-        let out_len = stored.stored_len() as u64;
-        {
-            let mut store = shared.store.write().unwrap();
-            store.put(page_id, stored);
+        let mut staged: Vec<(u64, StoredPage)> = Vec::with_capacity(pages.len());
+        for (page_id, data) in &pages {
+            let t0 = Instant::now();
+            let stored =
+                StoredPage { frame: Frame::compress_with(Arc::clone(&codec), data, &mut scratch) };
+            let out_len = stored.stored_len() as u64;
+            shared.metrics.page(data.len() as u64, out_len, t0.elapsed().as_nanos() as u64);
+            staged.push((*page_id, stored));
         }
-        shared.metrics.page(data.len() as u64, out_len, t0.elapsed().as_nanos() as u64);
-        shared.pages_since_analysis.fetch_add(1, Ordering::AcqRel);
-        if shared.inflight.fetch_sub(1, Ordering::AcqRel) == 1 {
+        // ...then store it with one lock acquisition per touched shard
+        shared.store.put_batch(staged);
+        shared.pages_since_analysis.fetch_add(n, Ordering::AcqRel);
+        if shared.inflight.fetch_sub(n, Ordering::AcqRel) == n {
             let _g = shared.idle_lock.lock().unwrap();
             shared.idle.notify_all();
         }
@@ -428,10 +497,10 @@ fn analyzer_loop(shared: Arc<Shared>, analyzer: &mut Analyzer) {
             analyzer.note_adopted(&samples, &candidate);
             let new_codec: Arc<dyn BlockCodec> =
                 Arc::new(GbdiCodec::new(candidate, shared.config.codec.clone()));
-            {
-                let mut store = shared.store.write().unwrap();
-                store.publish_codec(Arc::clone(&new_codec));
-            }
+            // the ring is shared across shards, so publishing the new
+            // version is one O(1) insert — no per-shard fan-out, no
+            // store-wide stall
+            shared.store.publish_codec(Arc::clone(&new_codec));
             *shared.codec.write().unwrap() = new_codec;
         }
     }
@@ -618,5 +687,106 @@ mod tests {
         assert!(svc.read_page(999).is_err());
         let m = svc.shutdown();
         assert_eq!(m.read_errors, 1);
+    }
+
+    #[test]
+    fn batched_submit_matches_single_submits() {
+        // submit_batch must be observationally identical to a stream of
+        // single submits: same stored pages, same accounting
+        let w = workloads::by_name("fluidanimate").unwrap();
+        let pages: Vec<Vec<u8>> = (0..48).map(|i| w.generate(4096, i)).collect();
+        let arm = |batched: bool| {
+            let svc = CompressionService::start_static(
+                ServiceConfig { workers: 2, shards: 4, ..Default::default() },
+                Arc::new(crate::baselines::bdi::Bdi::default()),
+            )
+            .unwrap();
+            if batched {
+                svc.submit_batch(
+                    pages.iter().enumerate().map(|(i, p)| (i as u64, p.clone())).collect(),
+                );
+            } else {
+                for (i, p) in pages.iter().enumerate() {
+                    svc.submit(i as u64, p.clone());
+                }
+            }
+            svc.flush();
+            for (i, p) in pages.iter().enumerate() {
+                assert_eq!(&svc.read_page(i as u64).unwrap(), p, "batched={batched} page {i}");
+            }
+            let (logical, stored, _) = svc.storage_ratio();
+            let m = svc.shutdown();
+            (logical, stored, m.pages_in, m.bytes_in, m.bytes_out)
+        };
+        let single = arm(false);
+        let batched = arm(true);
+        assert_eq!(single, batched);
+        // empty batches are a no-op and must not wedge flush
+        let svc = service(1);
+        svc.submit_batch(Vec::new());
+        svc.flush();
+        assert_eq!(svc.shutdown().pages_in, 0);
+    }
+
+    #[test]
+    fn shard_metrics_sum_to_service_totals() {
+        let svc = service(2); // default config: 8 shards
+        assert_eq!(svc.shard_count(), 8);
+        let w = workloads::by_name("mcf").unwrap();
+        for i in 0..64u64 {
+            svc.submit(i, w.generate(4096, i));
+        }
+        svc.flush();
+        let mut line = [0u8; 64];
+        for i in 0..64u64 {
+            svc.read_block(i, (i % 64) as usize, &mut line).unwrap();
+        }
+        for i in 0..16u64 {
+            svc.write_block(i, 3, &line).unwrap();
+        }
+        // failed ops are counted as errors, never as served block ops
+        assert!(svc.read_block(9999, 0, &mut line).is_err());
+        assert!(svc.write_block(9999, 0, &line).is_err());
+        let shards = svc.shard_metrics();
+        assert_eq!(shards.len(), 8);
+        let m = svc.metrics();
+        assert_eq!(shards.iter().map(|s| s.block_reads).sum::<u64>(), m.block_reads);
+        assert_eq!(shards.iter().map(|s| s.block_writes).sum::<u64>(), m.block_writes);
+        assert_eq!(m.block_reads, 64);
+        assert_eq!(m.block_writes, 16);
+        assert_eq!(shards.iter().map(|s| s.pages).sum::<u64>(), 64);
+        assert_eq!(shards.iter().map(|s| s.logical_bytes).sum::<u64>(), 64 * 4096);
+        assert_eq!(
+            shards.iter().map(|s| s.stored_bytes).sum::<u64>(),
+            svc.storage_ratio().1 as u64
+        );
+        // ingest really spread over multiple shards
+        assert!(shards.iter().filter(|s| s.pages > 0).count() > 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn single_shard_service_still_serves() {
+        // shards = 1 must reproduce the old single-lock behavior
+        let svc = CompressionService::start(ServiceConfig {
+            workers: 2,
+            shards: 1,
+            analyze_every: 16,
+            ..Default::default()
+        })
+        .unwrap();
+        let w = workloads::by_name("svm").unwrap();
+        for i in 0..32u64 {
+            svc.submit(i, w.generate(4096, i));
+        }
+        svc.flush();
+        for i in 0..32u64 {
+            assert_eq!(svc.read_page(i).unwrap(), w.generate(4096, i));
+        }
+        assert_eq!(svc.shard_count(), 1);
+        let shards = svc.shard_metrics();
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].pages, 32);
+        svc.shutdown();
     }
 }

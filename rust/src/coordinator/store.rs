@@ -10,12 +10,28 @@
 //! [`PageStore::write_block`] recompresses one line in place (spilling
 //! to the frame's patch region when it grows) instead of round-tripping
 //! the whole page.
+//!
+//! Two stores live here (DESIGN.md §8):
+//!
+//! * [`PageStore`] — the plain single-owner store: no interior locking,
+//!   `&mut self` writes. It is the *reference semantics* — the sharded
+//!   store must be observationally identical to it under any
+//!   single-threaded interleaving of operations
+//!   (`tests/sharded_store.rs` enforces this for N ∈ {1, 2, 7}).
+//! * [`ShardedPageStore`] — N independently locked shards routed by a
+//!   page-id hash, each with its own [`Scratch`] and
+//!   [`ShardMetrics`](super::metrics::ShardMetrics), sharing **one**
+//!   codec ring behind its own lock so publishing a new table version
+//!   is a single O(1) insert, not an O(shards) fan-out. All methods are
+//!   `&self`: callers on different shards never contend.
 
+use super::metrics::{ShardMetrics, ShardMetricsSnapshot};
 use crate::codec::{BlockCodec, Scratch};
 use crate::frame::{BlockWrite, Frame};
 use crate::{Error, Result};
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
+use std::time::Instant;
 
 /// One stored page: a compressed random-access frame. The codec version
 /// it references is the frame's codec's version.
@@ -174,6 +190,458 @@ impl PageStore {
             }
         }
         dropped
+    }
+}
+
+/// One shard's mutable state: its slice of the page map plus the
+/// scratch buffers the block-write path reuses under the shard lock.
+struct PageShard {
+    pages: HashMap<u64, StoredPage>,
+    scratch: Scratch,
+}
+
+impl Default for PageShard {
+    fn default() -> Self {
+        PageShard { pages: HashMap::new(), scratch: Scratch::new() }
+    }
+}
+
+/// A shard: independently locked state + its hot-path counters.
+struct Shard {
+    state: RwLock<PageShard>,
+    metrics: ShardMetrics,
+}
+
+/// The concurrent page store: N independently locked shards with
+/// page-id hash routing, sharing one codec ring (DESIGN.md §8).
+///
+/// Every method takes `&self`: operations on pages in different shards
+/// run fully in parallel, readers of the same shard run in parallel
+/// (per-shard `RwLock`), and only writers to the *same shard* serialize.
+/// The codec ring sits behind its own lock, so publishing a swapped-in
+/// table version is one O(1) insert — shards read codecs through the
+/// shared `Arc`s and never copy the ring.
+///
+/// Semantics are observationally identical to [`PageStore`] (same
+/// compaction policy, same error surface); `tests/sharded_store.rs`
+/// pins the equivalence under randomized operation interleavings for
+/// N ∈ {1, 2, 7}.
+///
+/// ```
+/// use gbdi::coordinator::{ShardedPageStore, StoredPage};
+/// use gbdi::{BlockCodec, CodecKind, Frame, GbdiConfig};
+/// use std::sync::Arc;
+///
+/// let image = vec![0u8; 4096];
+/// let codec: Arc<dyn BlockCodec> =
+///     Arc::from(CodecKind::Gbdi.build_for_image(&image, &GbdiConfig::default()));
+/// let store = ShardedPageStore::new(4);
+/// store.publish_codec(Arc::clone(&codec));
+/// store.put(7, StoredPage { frame: Frame::compress(Arc::clone(&codec), &image) });
+/// assert_eq!(store.read(7).unwrap(), image);
+/// let mut line = [0u8; 64];
+/// store.write_block(7, 3, &[9u8; 64]).unwrap();
+/// assert_eq!(store.read_block(7, 3, &mut line).unwrap(), 64);
+/// assert_eq!(line, [9u8; 64]);
+/// ```
+pub struct ShardedPageStore {
+    shards: Vec<Shard>,
+    codecs: RwLock<HashMap<u64, Arc<dyn BlockCodec>>>,
+    /// Compact a frame once its patch region dominates its footprint
+    /// (the serving default). The memory simulator opts out: compaction
+    /// rebuilds frames *tight*, which would silently discard the
+    /// sector-alignment slack its hardware model depends on.
+    auto_compact: bool,
+}
+
+impl ShardedPageStore {
+    /// Empty store with `shards` shards (clamped to at least 1).
+    pub fn new(shards: usize) -> Self {
+        ShardedPageStore {
+            shards: (0..shards.max(1))
+                .map(|_| Shard {
+                    state: RwLock::new(PageShard::default()),
+                    metrics: ShardMetrics::new(),
+                })
+                .collect(),
+            codecs: RwLock::new(HashMap::new()),
+            auto_compact: true,
+        }
+    }
+
+    /// Disable the automatic patch-compaction policy (consuming
+    /// builder; call at construction, before the store is shared).
+    /// Writes then never rebuild a frame's layout behind the caller's
+    /// back — the memory simulator uses this to keep its sector-aligned
+    /// spans intact, at the cost of unbounded patch growth under
+    /// sustained writes.
+    pub fn without_auto_compact(mut self) -> Self {
+        self.auto_compact = false;
+        self
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard a page id routes to: a Fibonacci multiplicative hash
+    /// so dense sequential ids still spread evenly, reduced mod N (N
+    /// need not be a power of two).
+    pub fn shard_of(&self, page_id: u64) -> usize {
+        ((page_id.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) % self.shards.len() as u64) as usize
+    }
+
+    fn shard(&self, page_id: u64) -> &Shard {
+        &self.shards[self.shard_of(page_id)]
+    }
+
+    // ---- codec ring ------------------------------------------------------
+
+    /// Publish a codec version (idempotent; versions are immutable). One
+    /// O(1) insert into the shared ring — never an O(shards) fan-out.
+    pub fn publish_codec(&self, codec: Arc<dyn BlockCodec>) {
+        self.codecs.write().unwrap().entry(codec.version()).or_insert(codec);
+    }
+
+    /// Look up a published codec version (cloned `Arc`).
+    pub fn codec(&self, version: u64) -> Option<Arc<dyn BlockCodec>> {
+        self.codecs.read().unwrap().get(&version).cloned()
+    }
+
+    /// Number of published codec versions.
+    pub fn codec_count(&self) -> usize {
+        self.codecs.read().unwrap().len()
+    }
+
+    /// Drop codec versions no page references anymore (except the newest
+    /// `keep` versions). Returns how many were dropped. Safe even if a
+    /// racing `put` lands a page under an old version: frames carry
+    /// their own codec `Arc`, so decode never depends on ring membership.
+    pub fn gc_codecs(&self, keep: usize) -> usize {
+        let mut referenced = std::collections::BTreeSet::new();
+        for shard in &self.shards {
+            let state = shard.state.read().unwrap();
+            referenced.extend(state.pages.values().map(|p| p.codec_version()));
+        }
+        let mut ring = self.codecs.write().unwrap();
+        let mut versions: Vec<u64> = ring.keys().copied().collect();
+        versions.sort_unstable();
+        let keep_from = versions.len().saturating_sub(keep);
+        let mut dropped = 0;
+        for (i, v) in versions.into_iter().enumerate() {
+            if i < keep_from && !referenced.contains(&v) {
+                ring.remove(&v);
+                dropped += 1;
+            }
+        }
+        dropped
+    }
+
+    // ---- writes ----------------------------------------------------------
+
+    /// Insert/overwrite a page (one exclusive acquisition of its shard).
+    pub fn put(&self, page_id: u64, page: StoredPage) {
+        debug_assert!(
+            self.codecs.read().unwrap().contains_key(&page.codec_version()),
+            "page references unpublished codec v{}",
+            page.codec_version()
+        );
+        let shard = self.shard(page_id);
+        let mut state = shard.state.write().unwrap();
+        let t0 = Instant::now();
+        state.pages.insert(page_id, page);
+        shard.metrics.lock_hold(t0.elapsed().as_nanos() as u64);
+    }
+
+    /// Insert a batch of pages, grouping them per shard so each shard's
+    /// lock is taken **once per batch** instead of once per page — the
+    /// ingest path the batched submit feeds.
+    pub fn put_batch(&self, pages: Vec<(u64, StoredPage)>) {
+        #[cfg(debug_assertions)]
+        {
+            let ring = self.codecs.read().unwrap();
+            for (_, p) in &pages {
+                debug_assert!(
+                    ring.contains_key(&p.codec_version()),
+                    "page references unpublished codec v{}",
+                    p.codec_version()
+                );
+            }
+        }
+        let n = self.shards.len();
+        let mut by_shard: Vec<Vec<(u64, StoredPage)>> = (0..n).map(|_| Vec::new()).collect();
+        for (id, page) in pages {
+            by_shard[self.shard_of(id)].push((id, page));
+        }
+        for (idx, group) in by_shard.into_iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let shard = &self.shards[idx];
+            let mut state = shard.state.write().unwrap();
+            let t0 = Instant::now();
+            for (id, page) in group {
+                state.pages.insert(id, page);
+            }
+            shard.metrics.lock_hold(t0.elapsed().as_nanos() as u64);
+        }
+    }
+
+    /// Remove a page (returns it).
+    pub fn remove(&self, page_id: u64) -> Option<StoredPage> {
+        let shard = self.shard(page_id);
+        let mut state = shard.state.write().unwrap();
+        let t0 = Instant::now();
+        let removed = state.pages.remove(&page_id);
+        shard.metrics.lock_hold(t0.elapsed().as_nanos() as u64);
+        removed
+    }
+
+    /// Recompress one block of a page in place from `data` (exactly the
+    /// block's logical length), under this shard's lock with its own
+    /// scratch. Same compaction policy as [`PageStore::write_block`]
+    /// unless disabled via [`Self::without_auto_compact`]: once patch
+    /// bytes exceed half the frame's footprint it compacts, so storage
+    /// stays bounded under sustained write traffic.
+    pub fn write_block(&self, page_id: u64, block: usize, data: &[u8]) -> Result<BlockWrite> {
+        self.write_block_observed(page_id, block, data).map(|(_, wr)| wr)
+    }
+
+    /// [`Self::write_block`] that also reports the block's encoded bits
+    /// *before* the write, all under one lock acquisition — the memory
+    /// simulator's sector accounting needs the before/after pair and
+    /// must not pay two shard lookups per simulated write.
+    pub fn write_block_observed(
+        &self,
+        page_id: u64,
+        block: usize,
+        data: &[u8],
+    ) -> Result<(u32, BlockWrite)> {
+        let shard = self.shard(page_id);
+        let t0 = Instant::now();
+        let r = {
+            let mut state = shard.state.write().unwrap();
+            let held = Instant::now();
+            let r = {
+                let PageShard { pages, scratch } = &mut *state;
+                match pages.get_mut(&page_id) {
+                    Some(page) => {
+                        // out-of-range blocks fall through to the
+                        // frame's own range error below
+                        let old = if block < page.frame.n_blocks() {
+                            page.frame.block_bits(block)
+                        } else {
+                            0
+                        };
+                        let wr = page.frame.write_block(block, data, scratch);
+                        if wr.is_ok()
+                            && self.auto_compact
+                            && page.frame.patch_len() * 2 > page.frame.compressed_len()
+                        {
+                            page.frame.compact();
+                        }
+                        wr.map(|wr| (old, wr))
+                    }
+                    None => Err(Error::Corrupt(format!("page {page_id} not found"))),
+                }
+            };
+            shard.metrics.lock_hold(held.elapsed().as_nanos() as u64);
+            r
+        };
+        if r.is_ok() {
+            shard.metrics.block_write(t0.elapsed().as_nanos() as u64);
+        }
+        r
+    }
+
+    /// Migrate up to `max_pages` pages of shard `idx` that are encoded
+    /// under a version older than `codec.version()`, re-encoding them
+    /// under `codec`. The shard lock is dropped between pages, so
+    /// foreground GETs/PUTs on this shard interleave with maintenance —
+    /// and other shards never see the migration at all. Each page's
+    /// decode + re-encode happens under the exclusive guard, so a block
+    /// PUT can never be clobbered by a stale re-encode. Returns the
+    /// pages migrated.
+    pub fn migrate_shard(
+        &self,
+        idx: usize,
+        codec: &Arc<dyn BlockCodec>,
+        max_pages: usize,
+    ) -> Result<usize> {
+        let target = codec.version();
+        let shard = &self.shards[idx];
+        let mut lagging: Vec<u64> = {
+            let state = shard.state.read().unwrap();
+            state
+                .pages
+                .iter()
+                .filter(|(_, p)| p.codec_version() < target)
+                .map(|(&id, _)| id)
+                .collect()
+        };
+        lagging.sort_unstable();
+        lagging.truncate(max_pages);
+        let mut moved = 0;
+        for id in lagging {
+            let mut state = shard.state.write().unwrap();
+            let t0 = Instant::now();
+            {
+                let PageShard { pages, scratch } = &mut *state;
+                // re-check under the exclusive guard: the page may have
+                // been removed or already migrated since the snapshot
+                if let Some(page) = pages.get_mut(&id) {
+                    if page.codec_version() < target {
+                        let data = page.frame.decompress()?;
+                        page.frame = Frame::compress_with(Arc::clone(codec), &data, scratch);
+                        moved += 1;
+                    }
+                }
+            }
+            shard.metrics.lock_hold(t0.elapsed().as_nanos() as u64);
+        }
+        Ok(moved)
+    }
+
+    // ---- reads -----------------------------------------------------------
+
+    /// Run `f` on a stored page under the shard's read lock (metadata
+    /// inspection without copying the page out).
+    pub fn with_page<R>(&self, page_id: u64, f: impl FnOnce(&StoredPage) -> R) -> Option<R> {
+        let state = self.shard(page_id).state.read().unwrap();
+        state.pages.get(&page_id).map(f)
+    }
+
+    /// Whether a page is stored.
+    pub fn contains(&self, page_id: u64) -> bool {
+        self.shard(page_id).state.read().unwrap().pages.contains_key(&page_id)
+    }
+
+    /// Decompress a whole page (each frame carries its own codec, so any
+    /// published version decodes).
+    pub fn read(&self, page_id: u64) -> Result<Vec<u8>> {
+        let state = self.shard(page_id).state.read().unwrap();
+        match state.pages.get(&page_id) {
+            Some(p) => p.frame.decompress(),
+            None => Err(Error::Corrupt(format!("page {page_id} not found"))),
+        }
+    }
+
+    /// Decode one block of a page into `out[..len]`; returns the bytes
+    /// written. O(1) in the page size, allocation-free, and concurrent
+    /// with every read on this shard (shared lock side).
+    pub fn read_block(&self, page_id: u64, block: usize, out: &mut [u8]) -> Result<usize> {
+        let shard = self.shard(page_id);
+        let t0 = Instant::now();
+        let r = {
+            let state = shard.state.read().unwrap();
+            match state.pages.get(&page_id) {
+                Some(p) => p.frame.read_block(block, out),
+                None => Err(Error::Corrupt(format!("page {page_id} not found"))),
+            }
+        };
+        if r.is_ok() {
+            shard.metrics.block_read(t0.elapsed().as_nanos() as u64);
+        }
+        r
+    }
+
+    /// Current exact encoding length of one block of a page, in bits
+    /// (the memory simulator's sector accounting reads this).
+    pub fn block_bits(&self, page_id: u64, block: usize) -> Result<u32> {
+        let state = self.shard(page_id).state.read().unwrap();
+        match state.pages.get(&page_id) {
+            Some(p) if block < p.frame.n_blocks() => Ok(p.frame.block_bits(block)),
+            Some(p) => Err(Error::Config(format!(
+                "block {block} out of range ({} blocks)",
+                p.frame.n_blocks()
+            ))),
+            None => Err(Error::Corrupt(format!("page {page_id} not found"))),
+        }
+    }
+
+    // ---- accounting ------------------------------------------------------
+
+    /// Number of stored pages (sums the shards; not an atomic snapshot
+    /// under concurrent writers, like any aggregate here).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.state.read().unwrap().pages.len()).sum()
+    }
+
+    /// Whether the store is empty.
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.state.read().unwrap().pages.is_empty())
+    }
+
+    /// Total compressed bytes stored.
+    pub fn stored_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.state.read().unwrap().pages.values().map(|p| p.stored_len()).sum::<usize>())
+            .sum()
+    }
+
+    /// Total logical bytes stored.
+    pub fn logical_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                s.state.read().unwrap().pages.values().map(|p| p.original_len()).sum::<usize>()
+            })
+            .sum()
+    }
+
+    /// `(logical_bytes, stored_bytes)` in one sweep: each shard's
+    /// contribution is read under a single lock acquisition, so the two
+    /// numbers are mutually consistent per shard (and the lock traffic
+    /// is half of calling the two accessors separately).
+    pub fn usage(&self) -> (usize, usize) {
+        let mut logical = 0usize;
+        let mut stored = 0usize;
+        for shard in &self.shards {
+            let state = shard.state.read().unwrap();
+            for p in state.pages.values() {
+                logical += p.original_len();
+                stored += p.stored_len();
+            }
+        }
+        (logical, stored)
+    }
+
+    /// Ids of pages encoded with a version older than `version`, across
+    /// all shards, sorted.
+    pub fn lagging_pages(&self, version: u64) -> Vec<u64> {
+        let mut ids = Vec::new();
+        for shard in &self.shards {
+            let state = shard.state.read().unwrap();
+            ids.extend(
+                state
+                    .pages
+                    .iter()
+                    .filter(|(_, p)| p.codec_version() < version)
+                    .map(|(&id, _)| id),
+            );
+        }
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Per-shard metrics: occupancy gauges read under each shard's read
+    /// lock plus the wait-free counters. Counter sums equal the
+    /// service-wide totals (both sides count each successful op once).
+    pub fn shard_metrics(&self) -> Vec<ShardMetricsSnapshot> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                let state = shard.state.read().unwrap();
+                let pages = state.pages.len() as u64;
+                let logical =
+                    state.pages.values().map(|p| p.original_len() as u64).sum::<u64>();
+                let stored = state.pages.values().map(|p| p.stored_len() as u64).sum::<u64>();
+                shard.metrics.snapshot(i, pages, logical, stored)
+            })
+            .collect()
     }
 }
 
@@ -336,5 +804,194 @@ mod tests {
         assert!(store.stored_bytes() < 2048, "zeros compress: {}", store.stored_bytes());
         store.remove(1).unwrap();
         assert!(store.is_empty());
+    }
+
+    #[test]
+    fn sharded_routing_covers_all_shards_and_is_stable() {
+        let store = ShardedPageStore::new(7);
+        assert_eq!(store.shard_count(), 7);
+        let mut seen = [false; 7];
+        for id in 0..512u64 {
+            let s = store.shard_of(id);
+            assert!(s < 7);
+            assert_eq!(s, store.shard_of(id), "routing must be deterministic");
+            seen[s] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "dense ids must spread over every shard");
+        // a single shard degenerates to "everything routes to 0"
+        let one = ShardedPageStore::new(1);
+        assert!((0..100).all(|id| one.shard_of(id) == 0));
+        // shard count is clamped to at least one
+        assert_eq!(ShardedPageStore::new(0).shard_count(), 1);
+    }
+
+    #[test]
+    fn sharded_store_serves_pages_and_blocks() {
+        let cfg = GbdiConfig::default();
+        let img = workloads::by_name("mcf").unwrap().generate(4096, 9);
+        let codec: Arc<dyn BlockCodec> =
+            Arc::new(GbdiCodec::new(analyze::analyze_image(&img, &cfg), cfg));
+        let store = ShardedPageStore::new(3);
+        store.publish_codec(Arc::clone(&codec));
+        for id in 0..12u64 {
+            store.put(id, compress_page(&img, &codec));
+        }
+        assert_eq!(store.len(), 12);
+        assert!(store.contains(5) && !store.contains(99));
+        assert_eq!(store.logical_bytes(), 12 * 4096);
+        assert_eq!(store.usage(), (store.logical_bytes(), store.stored_bytes()));
+        let mut buf = [0u8; 64];
+        for id in [0u64, 5, 11] {
+            assert_eq!(store.read(id).unwrap(), img);
+            let n = store.read_block(id, 7, &mut buf).unwrap();
+            assert_eq!(&buf[..n], &img[7 * 64..8 * 64]);
+        }
+        // block write lands and block_bits tracks it
+        let line = [0x5Au8; 64];
+        let wr = store.write_block(3, 5, &line).unwrap();
+        assert_eq!(store.block_bits(3, 5).unwrap(), wr.bits);
+        let n = store.read_block(3, 5, &mut buf).unwrap();
+        assert_eq!(&buf[..n], &line[..]);
+        // errors on the right surface
+        assert!(store.read(99).is_err());
+        assert!(store.read_block(0, 64, &mut buf).is_err());
+        assert!(store.write_block(99, 0, &line).is_err());
+        assert!(store.block_bits(0, 64).is_err());
+        assert!(store.block_bits(99, 0).is_err());
+        // metadata inspection without copying
+        assert_eq!(store.with_page(0, |p| p.original_len()), Some(4096));
+        assert_eq!(store.with_page(99, |p| p.original_len()), None);
+        // removal
+        assert!(store.remove(0).is_some());
+        assert!(store.remove(0).is_none());
+        assert_eq!(store.len(), 11);
+    }
+
+    #[test]
+    fn sharded_put_batch_takes_each_shard_once() {
+        let cfg = GbdiConfig::default();
+        let img = vec![3u8; 4096];
+        let codec: Arc<dyn BlockCodec> =
+            Arc::new(GbdiCodec::new(analyze::analyze_image(&img, &cfg), cfg));
+        let store = ShardedPageStore::new(4);
+        store.publish_codec(Arc::clone(&codec));
+        let batch: Vec<(u64, StoredPage)> =
+            (0..64u64).map(|id| (id, compress_page(&img, &codec))).collect();
+        store.put_batch(batch);
+        assert_eq!(store.len(), 64);
+        for id in 0..64u64 {
+            assert_eq!(store.read(id).unwrap(), img);
+        }
+        // each non-empty shard was locked exactly once for the batch
+        let snaps = store.shard_metrics();
+        assert_eq!(snaps.len(), 4);
+        let total_pages: u64 = snaps.iter().map(|s| s.pages).sum();
+        assert_eq!(total_pages, 64);
+        for s in &snaps {
+            if s.pages > 0 {
+                assert_eq!(s.lock_holds, 1, "shard {} locked once per batch", s.shard);
+            }
+        }
+        // empty batches are a no-op
+        store.put_batch(Vec::new());
+        assert_eq!(store.len(), 64);
+    }
+
+    #[test]
+    fn sharded_migration_walks_one_shard_at_a_time() {
+        let cfg = GbdiConfig::default();
+        let img_a = workloads::by_name("mcf").unwrap().generate(4096, 1);
+        let img_b = workloads::by_name("svm").unwrap().generate(4096, 2);
+        let mut t1 = analyze::analyze_image(&img_a, &cfg);
+        t1.version = 1;
+        let mut t2 = analyze::analyze_image(&img_b, &cfg);
+        t2.version = 2;
+        let c1: Arc<dyn BlockCodec> = Arc::new(GbdiCodec::new(t1, cfg.clone()));
+        let c2: Arc<dyn BlockCodec> = Arc::new(GbdiCodec::new(t2, cfg));
+        let store = ShardedPageStore::new(2);
+        store.publish_codec(Arc::clone(&c1));
+        for id in 0..16u64 {
+            store.put(id, compress_page(&img_a, &c1));
+        }
+        store.publish_codec(Arc::clone(&c2));
+        assert_eq!(store.lagging_pages(2).len(), 16);
+        // migrate shard by shard under a per-call budget
+        let mut moved = 0;
+        for shard in 0..store.shard_count() {
+            loop {
+                let n = store.migrate_shard(shard, &c2, 3).unwrap();
+                moved += n;
+                if n == 0 {
+                    break;
+                }
+            }
+        }
+        assert_eq!(moved, 16);
+        assert!(store.lagging_pages(2).is_empty());
+        for id in 0..16u64 {
+            assert_eq!(store.read(id).unwrap(), img_a, "page {id} after migration");
+            assert_eq!(store.with_page(id, |p| p.codec_version()), Some(2));
+        }
+        // a second walk is a no-op
+        assert_eq!(store.migrate_shard(0, &c2, 100).unwrap(), 0);
+    }
+
+    #[test]
+    fn sharded_gc_keeps_referenced_versions() {
+        let cfg = GbdiConfig::default();
+        let img = vec![7u8; 4096];
+        let store = ShardedPageStore::new(3);
+        for v in 1..=5 {
+            let t = GlobalBaseTable::new(vec![(v * 1000, 8)], WordSize::W32, v);
+            let codec: Arc<dyn BlockCodec> = Arc::new(GbdiCodec::new(t, cfg.clone()));
+            store.publish_codec(Arc::clone(&codec));
+            if v == 2 {
+                store.put(1, compress_page(&img, &codec));
+            }
+        }
+        assert_eq!(store.codec_count(), 5);
+        let dropped = store.gc_codecs(1);
+        // v1, v3, v4 droppable; v2 referenced; v5 newest kept
+        assert_eq!(dropped, 3);
+        assert!(store.codec(2).is_some());
+        assert!(store.codec(5).is_some());
+        assert!(store.codec(1).is_none());
+        assert_eq!(store.read(1).unwrap(), img);
+    }
+
+    #[test]
+    fn sharded_sustained_writes_keep_storage_bounded() {
+        // same compaction policy as the single-lock store: patch-region
+        // garbage must not accumulate without bound
+        let cfg = GbdiConfig::default();
+        let img = vec![0u8; 4096];
+        let codec: Arc<dyn BlockCodec> =
+            Arc::new(GbdiCodec::new(analyze::analyze_image(&img, &cfg), cfg));
+        let store = ShardedPageStore::new(2);
+        store.publish_codec(Arc::clone(&codec));
+        store.put(1, compress_page(&img, &codec));
+        let mut rng = crate::util::prng::Rng::new(5);
+        let mut noisy = [0u8; 64];
+        let mut expect = img.clone();
+        for round in 0..200 {
+            let blk = (round * 7) % 64;
+            if round % 3 == 2 {
+                noisy[..].fill(0);
+            } else {
+                rng.fill_bytes(&mut noisy);
+            }
+            store.write_block(1, blk, &noisy).unwrap();
+            expect[blk * 64..(blk + 1) * 64].copy_from_slice(&noisy);
+        }
+        let stored = store.with_page(1, |p| p.stored_len()).unwrap();
+        assert!(stored < 2 * (4096 + 4096 / 64 * 3 + 16), "stored {stored} B unbounded");
+        assert_eq!(store.read(1).unwrap(), expect, "content survives compactions");
+        // write latencies and lock holds were recorded on page 1's shard
+        let snaps = store.shard_metrics();
+        let shard = &snaps[store.shard_of(1)];
+        assert_eq!(shard.block_writes, 200);
+        assert!(shard.block_write_mean_ns() > 0.0);
+        assert!(shard.lock_holds >= 200);
+        assert!(shard.lock_hold_mean_ns() > 0.0);
     }
 }

@@ -43,7 +43,15 @@ use std::sync::Arc;
 /// Sentinel: block lives in the base payload, not the patch region.
 const IN_BASE: (u32, u32) = (u32::MAX, 0);
 
-/// Outcome of a [`Frame::write_block`].
+/// Outcome of a [`Frame::write_block`]: how large the block's new
+/// encoding is and whether placing it forced a spill.
+///
+/// Callers branch on [`spilled`](Self::spilled) to charge re-layout
+/// costs: the memory simulator counts it as a page re-layout
+/// (`MemStats::relayouts`), and the page store watches the accumulated
+/// patch garbage it implies to decide when to compact a frame. `bits`
+/// is the framing truth — [`Frame::block_bits`] returns the same value
+/// afterwards, and sector accounting derives sector counts from it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BlockWrite {
     /// Exact bits of the block's new encoding.
@@ -59,6 +67,33 @@ pub struct BlockWrite {
 /// Built from a [`Container`] ([`Frame::from_container`]), from raw
 /// image bytes ([`Frame::compress`]), or by a streaming [`Compressor`].
 /// Cheap to clone the codec (shared `Arc`); the payload is owned.
+///
+/// ```
+/// use gbdi::{BlockCodec, CodecKind, Frame, GbdiConfig, Scratch};
+/// use std::sync::Arc;
+///
+/// let image: Vec<u8> = (0u32..4096).flat_map(|i| (7000 + (i % 50)).to_le_bytes()).collect();
+/// let codec: Arc<dyn BlockCodec> =
+///     Arc::from(CodecKind::Gbdi.build_for_image(&image, &GbdiConfig::default()));
+/// let mut frame = Frame::compress(codec, &image);
+///
+/// // O(1), allocation-free single-block read
+/// let mut line = [0u8; 64];
+/// let n = frame.read_block(5, &mut line).unwrap();
+/// assert_eq!(&line[..n], &image[5 * 64..6 * 64]);
+///
+/// // in-place single-block write (spills to the patch region on growth;
+/// // the `BlockWrite` outcome reports both the new size and the spill)
+/// let mut scratch = Scratch::new();
+/// let write = frame.write_block(5, &[0u8; 64], &mut scratch).unwrap();
+/// assert!(write.bits > 0);
+/// frame.read_block(5, &mut line).unwrap();
+/// assert_eq!(line, [0u8; 64]);
+///
+/// // compact back to the canonical wire format whenever needed
+/// let roundtrip = frame.to_container().decompress().unwrap();
+/// assert_eq!(&roundtrip[5 * 64..6 * 64], &[0u8; 64]);
+/// ```
 #[derive(Clone)]
 pub struct Frame {
     codec: Arc<dyn BlockCodec>,

@@ -55,6 +55,23 @@
 //!   memsim|sweep --codec gbdi|bdi|fpc`) and the benches drive any
 //!   `dyn BlockCodec` through both surfaces.
 //!
+//! ## The sharded serving plane
+//!
+//! Both block-serving consumers sit on one concurrent store,
+//! [`coordinator::ShardedPageStore`]: N independently locked shards
+//! (page-id hash routing, per-shard [`Scratch`] and metrics) sharing a
+//! single codec ring, so a table swap publishes with one O(1) insert
+//! and traffic on different shards never contends. Ingest is batched —
+//! [`coordinator::CompressionService::submit_batch`] groups pages per
+//! shard so workers take each shard lock once per batch — and
+//! recompression migration walks one shard at a time, keeping
+//! maintenance off the foreground path (DESIGN.md §8, and
+//! `docs/ARCHITECTURE.md` for the full dataflow). `shards = 1`
+//! reproduces the old single-lock store exactly; a property test pins
+//! the observational equivalence, and `cargo bench --bench
+//! concurrent_serving` measures throughput and tail latency as the
+//! shard count scales.
+//!
 //! Whole-image software comparators (LZSS, Huffman, gzip, zstd) stay
 //! behind the coarser [`baselines::Codec`] trait — they have no block
 //! granularity for the simulator to exploit.

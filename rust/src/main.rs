@@ -91,6 +91,8 @@ fn app() -> App {
             App::new("serve", "run the coordinator service demo")
                 .arg(Arg::opt("pages", "512", "pages to stream"))
                 .arg(Arg::opt("workers", "4", "compression workers"))
+                .arg(Arg::opt("shards", "", "page-store shards (default from config: 8)"))
+                .arg(Arg::opt("batch", "", "pages per ingest batch (default from config: 32)"))
                 .arg(Arg::opt("workload", "mix", "workload or 'mix'"))
                 .arg(Arg::opt("codec", "gbdi", "gbdi (adaptive analyzer) or bdi|fpc (static)"))
                 .arg(Arg::opt(
@@ -113,6 +115,7 @@ fn app() -> App {
                 .arg(Arg::opt("workload", "triangle_count", "workload name"))
                 .arg(Arg::opt("codec", "gbdi", "block codec: gbdi|bdi|fpc"))
                 .arg(Arg::opt("size", "4m", "image bytes"))
+                .arg(Arg::opt("shards", "1", "page-store shards behind the memory"))
                 .arg(Arg::opt("trace", "streaming", "streaming|uniform|zipf"))
                 .arg(Arg::opt("accesses", "65536", "trace length"))
                 .arg(Arg::opt("burst", "16", "DRAM burst bytes")),
@@ -464,6 +467,20 @@ fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
             .map_err(gbdi::Error::Config)?,
     };
     cfg.workers = m.get_usize("workers");
+    if !m.get("shards").is_empty() {
+        let shards = m.get_usize("shards");
+        if shards == 0 {
+            return Err(gbdi::Error::Config("--shards must be >= 1".into()));
+        }
+        cfg.shards = shards;
+    }
+    if !m.get("batch").is_empty() {
+        let batch = m.get_usize("batch");
+        if batch == 0 {
+            return Err(gbdi::Error::Config("--batch must be >= 1".into()));
+        }
+        cfg.ingest_batch = batch;
+    }
     if !m.get("drift").is_empty() {
         let drift = m.get_f64("drift");
         if drift < 1.0 {
@@ -471,6 +488,7 @@ fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
         }
         cfg.drift_margin = drift;
     }
+    let (shards, ingest_batch) = (cfg.shards, cfg.ingest_batch);
     let svc = if kind == CodecKind::Gbdi {
         // the --selector flag overrides [analyzer] selector from --config
         let selector: Box<dyn BaseSelector> = match m.get("selector") {
@@ -504,16 +522,22 @@ fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
         let codec: Arc<dyn BlockCodec> = Arc::from(kind.build_for_image(&[], &cfg.codec));
         CompressionService::start_static(cfg, codec)?
     };
+    println!("store: {shards} shard(s), ingest batches of {ingest_batch} page(s)");
     let names: Vec<&str> = match m.get("workload") {
         "mix" => vec!["mcf", "perlbench", "fluidanimate", "triangle_count", "svm"],
         w => vec![w],
     };
     let mut rng = Rng::new(1);
+    let mut batch: Vec<(u64, Vec<u8>)> = Vec::with_capacity(ingest_batch);
     for i in 0..pages {
         let w = workloads::by_name(names[rng.below(names.len() as u64) as usize])
             .ok_or_else(|| gbdi::Error::Config("unknown workload".into()))?;
-        svc.submit(i, w.generate(4096, i));
+        batch.push((i, w.generate(4096, i)));
+        if batch.len() >= ingest_batch {
+            svc.submit_batch(std::mem::take(&mut batch));
+        }
         if i % 128 == 127 {
+            svc.submit_batch(std::mem::take(&mut batch));
             svc.flush();
             let snap = svc.metrics();
             println!(
@@ -527,6 +551,7 @@ fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
             );
         }
     }
+    svc.submit_batch(batch);
     svc.flush();
     // block-granular serving: random single-line GETs and a few PUTs
     // straight out of the compressed frames (the paths a memory-expansion
@@ -542,6 +567,20 @@ fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
     }
     let migrated = svc.recompress_step()?;
     let (logical, stored, ratio) = svc.storage_ratio();
+    // per-shard telemetry: occupancy, lock-hold time, block-op latency
+    let mut t = Table::new(&["shard", "pages", "stored", "lock holds", "hold mean", "GET mean", "PUT mean"]);
+    for s in svc.shard_metrics() {
+        t.row(&[
+            format!("{}", s.shard),
+            format!("{}", s.pages),
+            fmt_bytes(s.stored_bytes),
+            format!("{}", s.lock_holds),
+            format!("{:.0} ns", s.lock_hold_mean_ns()),
+            format!("{:.0} ns", s.block_read_mean_ns()),
+            format!("{:.0} ns", s.block_write_mean_ns()),
+        ]);
+    }
+    print!("{}", t.render());
     let snap = svc.shutdown();
     println!(
         "final: {} pages, {} -> {} stored ({}), {} migrated, {} swaps, {} analyses ({} skipped by drift detection)",
@@ -626,8 +665,14 @@ fn cmd_memsim(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
         .ok_or_else(|| gbdi::Error::Config("unknown workload".into()))?;
     let image = w.generate(m.get_usize("size"), 7);
     let codec_kind = parse_codec(m)?;
-    let mut mem =
-        CompressedMemory::new_dyn(codec_kind.build_for_image(&image, &GbdiConfig::default()));
+    let shards = m.get_usize("shards");
+    if shards == 0 {
+        return Err(gbdi::Error::Config("--shards must be >= 1".into()));
+    }
+    let mut mem = CompressedMemory::new_sharded(
+        codec_kind.build_for_image(&image, &GbdiConfig::default()),
+        shards,
+    );
     mem.store_image(&image);
     let kind = trace::TraceKind::parse(m.get("trace"))
         .ok_or_else(|| gbdi::Error::Config("bad trace kind".into()))?;

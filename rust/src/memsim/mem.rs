@@ -14,8 +14,19 @@
 //! encoding outgrows the span spills to the frame's patch region —
 //! counted as a page re-layout, the expensive event a real controller
 //! must amortize.
+//!
+//! Pages live in the coordinator's [`ShardedPageStore`] — the same
+//! store the serving path uses — keyed by page index, so the simulator
+//! exercises the production read/write paths rather than a private
+//! layout. The store's automatic patch compaction is **disabled** here
+//! (compaction rebuilds frames tight, which would silently discard the
+//! sector-alignment slack this model charges re-layouts against).
+//! Single-threaded replay uses 1 shard by default;
+//! [`CompressedMemory::new_sharded`] raises the shard count for
+//! concurrent experiments.
 
 use crate::codec::{BlockCodec, Scratch};
+use crate::coordinator::store::{ShardedPageStore, StoredPage};
 use crate::frame::Frame;
 use crate::{Error, Result};
 use std::sync::Arc;
@@ -35,18 +46,21 @@ pub struct MemStats {
     pub relayouts: u64,
 }
 
-/// Compressed memory built over any [`BlockCodec`].
+/// Compressed memory built over any [`BlockCodec`], backed by the
+/// coordinator's sharded page store.
 pub struct CompressedMemory {
     codec: Arc<dyn BlockCodec>,
     page_bytes: usize,
     sector_bytes: usize,
-    pages: Vec<Frame>,
+    store: ShardedPageStore,
+    n_pages: usize,
     scratch: Scratch,
     stats: MemStats,
 }
 
 impl CompressedMemory {
-    /// New memory with 4 KiB pages and 8-byte sectors.
+    /// New memory with 4 KiB pages and 8-byte sectors (single store
+    /// shard — the right default for single-threaded trace replay).
     pub fn new<C: BlockCodec + 'static>(codec: C) -> Self {
         Self::new_dyn(Box::new(codec))
     }
@@ -54,14 +68,34 @@ impl CompressedMemory {
     /// [`Self::new`] from an already-boxed codec (the CLI's `--codec`
     /// path hands over a `Box<dyn BlockCodec>`).
     pub fn new_dyn(codec: Box<dyn BlockCodec>) -> Self {
+        Self::new_sharded(codec, 1)
+    }
+
+    /// [`Self::new_dyn`] over a store with `shards` independently locked
+    /// shards (`gbdi memsim --shards`). Shard count changes lock
+    /// granularity only, never contents: trace replay results are
+    /// identical for any value.
+    pub fn new_sharded(codec: Box<dyn BlockCodec>, shards: usize) -> Self {
+        let codec: Arc<dyn BlockCodec> = Arc::from(codec);
+        // no auto-compaction: a compacted frame loses its sector slack,
+        // and this model's whole point is charging sector-crossing
+        // growth (not store housekeeping) as the re-layout event
+        let store = ShardedPageStore::new(shards).without_auto_compact();
+        store.publish_codec(Arc::clone(&codec));
         CompressedMemory {
-            codec: Arc::from(codec),
+            codec,
             page_bytes: 4096,
             sector_bytes: 8,
-            pages: Vec::new(),
+            store,
+            n_pages: 0,
             scratch: Scratch::new(),
             stats: MemStats::default(),
         }
+    }
+
+    /// Number of store shards behind this memory.
+    pub fn shard_count(&self) -> usize {
+        self.store.shard_count()
     }
 
     /// The codec this memory compresses with.
@@ -81,9 +115,10 @@ impl CompressedMemory {
 
     /// Store an image; returns the base block address of the first page.
     /// The image is padded to whole pages. Each page becomes one frame
-    /// with sector-aligned block spans.
+    /// with sector-aligned block spans, stored in the sharded page store
+    /// under its page index.
     pub fn store_image(&mut self, image: &[u8]) -> u64 {
-        let first_block = (self.pages.len() * self.blocks_per_page()) as u64;
+        let first_block = (self.n_pages * self.blocks_per_page()) as u64;
         let mut padded = image.to_vec();
         let rem = padded.len() % self.page_bytes;
         if rem != 0 {
@@ -100,7 +135,8 @@ impl CompressedMemory {
             for i in 0..frame.n_blocks() {
                 self.stats.used_sectors += self.sectors_for_bits(frame.block_bits(i)) as u64;
             }
-            self.pages.push(frame);
+            self.store.put(self.n_pages as u64, StoredPage { frame });
+            self.n_pages += 1;
             self.stats.logical_bytes += self.page_bytes as u64;
         }
         first_block
@@ -111,14 +147,14 @@ impl CompressedMemory {
         bytes.div_ceil(self.sector_bytes) as u32
     }
 
-    fn locate(&self, block_addr: u64) -> Result<(usize, usize)> {
+    fn locate(&self, block_addr: u64) -> Result<(u64, usize)> {
         let bpp = self.blocks_per_page();
         let page = (block_addr as usize) / bpp;
         let idx = (block_addr as usize) % bpp;
-        if page >= self.pages.len() {
+        if page >= self.n_pages {
             return Err(Error::Corrupt(format!("block address {block_addr} out of range")));
         }
-        Ok((page, idx))
+        Ok((page as u64, idx))
     }
 
     /// Read one logical block into `out` (exactly `block_bytes`), the
@@ -126,7 +162,7 @@ impl CompressedMemory {
     pub fn read_block_into(&mut self, block_addr: u64, out: &mut [u8]) -> Result<()> {
         let (page, idx) = self.locate(block_addr)?;
         self.stats.reads += 1;
-        self.pages[page].read_block(idx, out)?;
+        self.store.read_block(page, idx, out)?;
         Ok(())
     }
 
@@ -140,11 +176,12 @@ impl CompressedMemory {
     /// Compressed bits a read of this block transfers on the bus.
     pub fn block_bits(&self, block_addr: u64) -> Result<u32> {
         let (page, idx) = self.locate(block_addr)?;
-        Ok(self.pages[page].block_bits(idx))
+        self.store.block_bits(page, idx)
     }
 
-    /// Overwrite one logical block (recompress in place; track sector
-    /// growth and span-overflow re-layouts).
+    /// Overwrite one logical block (recompress in place through the
+    /// store's write path; track sector growth and span-overflow
+    /// re-layouts).
     pub fn write_block(&mut self, block_addr: u64, data: &[u8]) -> Result<()> {
         if data.len() != self.block_bytes() {
             return Err(Error::Config(format!(
@@ -153,8 +190,7 @@ impl CompressedMemory {
             )));
         }
         let (page, idx) = self.locate(block_addr)?;
-        let old = self.pages[page].block_bits(idx);
-        let wr = self.pages[page].write_block(idx, data, &mut self.scratch)?;
+        let (old, wr) = self.store.write_block_observed(page, idx, data)?;
         if wr.spilled {
             // the page's sector layout must be rebuilt to make room
             self.stats.relayouts += 1;
@@ -187,7 +223,7 @@ impl CompressedMemory {
     /// per block: sector count) + the codec's shared dictionary (GBDI's
     /// global base table; stateless codecs charge nothing).
     pub fn physical_bytes(&self) -> u64 {
-        let blocks = (self.pages.len() * self.blocks_per_page()) as u64;
+        let blocks = (self.n_pages * self.blocks_per_page()) as u64;
         self.stats.used_sectors * self.sector_bytes as u64
             + blocks
             + self.codec.global_table().map_or(0, |t| t.serialized_len()) as u64
@@ -204,7 +240,7 @@ impl CompressedMemory {
 
     /// Total logical blocks stored.
     pub fn total_blocks(&self) -> u64 {
-        (self.pages.len() * self.blocks_per_page()) as u64
+        (self.n_pages * self.blocks_per_page()) as u64
     }
 }
 
@@ -320,5 +356,44 @@ mod tests {
         let base = mem.store_image(&image);
         assert_eq!(mem.total_blocks(), 2 * 64); // 2 pages of 64 blocks
         assert_eq!(mem.read_image(base, 5000).unwrap(), image);
+    }
+
+    #[test]
+    fn sharded_memory_matches_single_shard() {
+        // shard count changes lock granularity only — contents, sector
+        // accounting, and relayout counts must be identical
+        let image = workloads::by_name("triangle_count").unwrap().generate(1 << 15, 11);
+        let cfg = GbdiConfig::default();
+        let build = || {
+            let t = analyze::analyze_image(&image, &cfg);
+            Box::new(GbdiCodec::new(t, cfg.clone())) as Box<dyn BlockCodec>
+        };
+        let mut a = CompressedMemory::new_dyn(build());
+        let mut b = CompressedMemory::new_sharded(build(), 7);
+        assert_eq!(a.shard_count(), 1);
+        assert_eq!(b.shard_count(), 7);
+        let base_a = a.store_image(&image);
+        let base_b = b.store_image(&image);
+        assert_eq!(base_a, base_b);
+        let mut rng = crate::util::prng::Rng::new(13);
+        let mut buf = vec![0u8; 64];
+        for _ in 0..400 {
+            let addr = rng.below(a.total_blocks());
+            if rng.below(4) == 0 {
+                rng.fill_bytes(&mut buf);
+                a.write_block(addr, &buf).unwrap();
+                b.write_block(addr, &buf).unwrap();
+            } else {
+                assert_eq!(a.read_block(addr).unwrap(), b.read_block(addr).unwrap());
+            }
+            assert_eq!(a.block_bits(addr).unwrap(), b.block_bits(addr).unwrap());
+        }
+        assert_eq!(a.stats().used_sectors, b.stats().used_sectors);
+        assert_eq!(a.stats().relayouts, b.stats().relayouts);
+        assert_eq!(a.physical_bytes(), b.physical_bytes());
+        assert_eq!(
+            a.read_image(base_a, image.len()).unwrap(),
+            b.read_image(base_b, image.len()).unwrap()
+        );
     }
 }

@@ -1,0 +1,300 @@
+//! Shard correctness: the sharded page store must be observationally
+//! identical to the single-lock reference store under any interleaving
+//! of operations, and concurrent mixed traffic must lose no writes
+//! while per-shard metrics sum exactly to the global totals.
+//!
+//! * `sharded_store_equivalent_to_reference_store` — a randomized
+//!   single-threaded interleaving of put / get / read_block /
+//!   write_block / table-swap / remove applied to both stores, compared
+//!   op-by-op and in a final sweep, for N ∈ {1, 2, 7} shards.
+//! * `concurrent_mixed_ops_lose_no_writes` — M threads × mixed ops on
+//!   the sharded store (each thread owns a disjoint page set for
+//!   writes), then a full content verification plus the metrics-sum
+//!   invariant.
+//! * `service_under_concurrent_clients_stays_consistent` — the same
+//!   shape through the full `CompressionService`.
+
+use gbdi::coordinator::{
+    CompressionService, PageStore, ServiceConfig, ShardedPageStore, StoredPage,
+};
+use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig};
+use gbdi::util::prng::Rng;
+use gbdi::workloads;
+use gbdi::{BlockCodec, Frame};
+use std::sync::Arc;
+
+/// Three GBDI codec versions derived from three different value
+/// populations — enough to exercise the codec ring and lagging-page
+/// bookkeeping.
+fn versioned_codecs(cfg: &GbdiConfig) -> (Vec<Vec<u8>>, Vec<Arc<dyn BlockCodec>>) {
+    let imgs: Vec<Vec<u8>> = ["mcf", "svm", "fluidanimate"]
+        .iter()
+        .enumerate()
+        .map(|(i, n)| workloads::by_name(n).unwrap().generate(4096, i as u64 + 1))
+        .collect();
+    let codecs = imgs
+        .iter()
+        .enumerate()
+        .map(|(i, img)| {
+            let mut t = analyze::analyze_image(img, cfg);
+            t.version = i as u64 + 1;
+            Arc::new(GbdiCodec::new(t, cfg.clone())) as Arc<dyn BlockCodec>
+        })
+        .collect();
+    (imgs, codecs)
+}
+
+#[test]
+fn sharded_store_equivalent_to_reference_store() {
+    let cfg = GbdiConfig::default();
+    let (imgs, codecs) = versioned_codecs(&cfg);
+    for &shards in &[1usize, 2, 7] {
+        let mut reference = PageStore::new();
+        let sharded = ShardedPageStore::new(shards);
+        reference.publish_codec(Arc::clone(&codecs[0]));
+        sharded.publish_codec(Arc::clone(&codecs[0]));
+        let mut active = 0usize; // index of the currently published codec
+        let mut rng = Rng::new(0xD1CE ^ shards as u64);
+        let id_space = 96u64;
+        for step in 0..1500u32 {
+            let id = rng.below(id_space);
+            match rng.below(10) {
+                // put (insert or overwrite) under the active codec
+                0..=2 => {
+                    let img = &imgs[(id % 3) as usize];
+                    let codec = &codecs[active];
+                    reference
+                        .put(id, StoredPage { frame: Frame::compress(Arc::clone(codec), img) });
+                    sharded
+                        .put(id, StoredPage { frame: Frame::compress(Arc::clone(codec), img) });
+                }
+                // whole-page read
+                3..=4 => {
+                    let a = reference.read(id);
+                    let b = sharded.read(id);
+                    match (a, b) {
+                        (Ok(a), Ok(b)) => assert_eq!(a, b, "step {step} page {id}"),
+                        (a, b) => assert_eq!(a.is_err(), b.is_err(), "step {step} page {id}"),
+                    }
+                }
+                // single-block read
+                5..=6 => {
+                    let blk = rng.below(64) as usize;
+                    let mut buf_a = [0u8; 64];
+                    let mut buf_b = [0u8; 64];
+                    let a = reference.read_block(id, blk, &mut buf_a);
+                    let b = sharded.read_block(id, blk, &mut buf_b);
+                    assert_eq!(a.is_ok(), b.is_ok(), "step {step} page {id} block {blk}");
+                    if a.is_ok() {
+                        assert_eq!(a.unwrap(), b.unwrap());
+                        assert_eq!(buf_a, buf_b, "step {step} page {id} block {blk}");
+                    }
+                }
+                // single-block write of identical random data
+                7..=8 => {
+                    let blk = rng.below(64) as usize;
+                    let mut data = [0u8; 64];
+                    if rng.below(3) == 0 {
+                        // compressible content exercises the in-place path
+                        data.fill(0);
+                    } else {
+                        rng.fill_bytes(&mut data);
+                    }
+                    let a = reference.write_block(id, blk, &data);
+                    let b = sharded.write_block(id, blk, &data);
+                    assert_eq!(a.is_ok(), b.is_ok(), "step {step} page {id} block {blk}");
+                    if let (Ok(a), Ok(b)) = (a, b) {
+                        assert_eq!(a, b, "step {step}: BlockWrite outcome must match");
+                    }
+                }
+                // table swap or removal
+                _ => {
+                    if active + 1 < codecs.len() && rng.below(2) == 0 {
+                        active += 1;
+                        reference.publish_codec(Arc::clone(&codecs[active]));
+                        sharded.publish_codec(Arc::clone(&codecs[active]));
+                    } else {
+                        let a = reference.remove(id);
+                        let b = sharded.remove(id);
+                        assert_eq!(a.is_some(), b.is_some(), "step {step} remove {id}");
+                    }
+                }
+            }
+        }
+        // final sweep: aggregates and every page byte-identical
+        assert_eq!(reference.len(), sharded.len(), "{shards} shards");
+        assert_eq!(reference.logical_bytes(), sharded.logical_bytes(), "{shards} shards");
+        assert_eq!(reference.stored_bytes(), sharded.stored_bytes(), "{shards} shards");
+        assert_eq!(reference.codec_count(), sharded.codec_count(), "{shards} shards");
+        let newest = codecs.last().unwrap().version();
+        assert_eq!(
+            reference.lagging_pages(newest),
+            sharded.lagging_pages(newest),
+            "{shards} shards"
+        );
+        for id in 0..id_space {
+            match reference.get(id) {
+                Some(p) => {
+                    assert_eq!(
+                        Some(p.codec_version()),
+                        sharded.with_page(id, |q| q.codec_version()),
+                        "page {id} version"
+                    );
+                    assert_eq!(
+                        Some(p.stored_len()),
+                        sharded.with_page(id, |q| q.stored_len()),
+                        "page {id} footprint"
+                    );
+                    assert_eq!(
+                        reference.read(id).unwrap(),
+                        sharded.read(id).unwrap(),
+                        "page {id} content"
+                    );
+                }
+                None => assert!(!sharded.contains(id), "page {id} must be absent"),
+            }
+        }
+    }
+}
+
+#[test]
+fn concurrent_mixed_ops_lose_no_writes() {
+    let cfg = GbdiConfig::default();
+    let img = workloads::by_name("mcf").unwrap().generate(4096, 42);
+    let codec: Arc<dyn BlockCodec> =
+        Arc::new(GbdiCodec::new(analyze::analyze_image(&img, &cfg), cfg));
+    let store = ShardedPageStore::new(7);
+    store.publish_codec(Arc::clone(&codec));
+    let n_pages = 48u64;
+    let threads = 8u64;
+    for id in 0..n_pages {
+        store.put(id, StoredPage { frame: Frame::compress(Arc::clone(&codec), &img) });
+    }
+    // deterministic per-(page, block) content, so repeated writes are
+    // idempotent and the final state is known regardless of scheduling
+    let pattern = |id: u64, blk: usize| [(id as u8).wrapping_mul(37) ^ (blk as u8); 64];
+    let total_reads: u64 = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let store = &store;
+                let img = &img;
+                s.spawn(move || {
+                    let mut rng = Rng::new(1000 + t);
+                    let mut line = [0u8; 64];
+                    let mut reads = 0u64;
+                    // write every block of every page this thread owns,
+                    // interleaving reads of random (possibly foreign,
+                    // possibly mid-write) pages
+                    for id in (t..n_pages).step_by(threads as usize) {
+                        for blk in 0..64usize {
+                            store.write_block(id, blk, &pattern(id, blk)).unwrap();
+                            // immediately visible to the writer
+                            store.read_block(id, blk, &mut line).unwrap();
+                            assert_eq!(line, pattern(id, blk), "read-own-write {id}/{blk}");
+                            reads += 1;
+                            // a read of someone else's page sees either
+                            // the original image or their pattern, never
+                            // torn data (read_block verifies framing)
+                            let other = rng.below(n_pages);
+                            let oblk = rng.below(64) as usize;
+                            store.read_block(other, oblk, &mut line).unwrap();
+                            assert!(
+                                line == pattern(other, oblk)
+                                    || line[..] == img[oblk * 64..(oblk + 1) * 64],
+                                "torn read on {other}/{oblk}"
+                            );
+                            reads += 1;
+                        }
+                    }
+                    reads
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("stress thread")).sum()
+    });
+    // no lost writes: every block of every page holds its final pattern
+    for id in 0..n_pages {
+        let page = store.read(id).unwrap();
+        for blk in 0..64usize {
+            assert_eq!(
+                page[blk * 64..(blk + 1) * 64],
+                pattern(id, blk),
+                "lost write on {id}/{blk}"
+            );
+        }
+    }
+    // per-shard metrics sum to the totals we actually issued
+    let total_writes = n_pages * 64;
+    let snaps = store.shard_metrics();
+    assert_eq!(snaps.len(), 7);
+    assert_eq!(snaps.iter().map(|s| s.block_writes).sum::<u64>(), total_writes);
+    assert_eq!(snaps.iter().map(|s| s.block_reads).sum::<u64>(), total_reads);
+    assert_eq!(snaps.iter().map(|s| s.pages).sum::<u64>(), store.len() as u64);
+    assert_eq!(
+        snaps.iter().map(|s| s.logical_bytes).sum::<u64>(),
+        store.logical_bytes() as u64
+    );
+    assert_eq!(
+        snaps.iter().map(|s| s.stored_bytes).sum::<u64>(),
+        store.stored_bytes() as u64
+    );
+    // exclusive acquisitions happened on every shard that holds pages
+    for s in &snaps {
+        if s.pages > 0 {
+            assert!(s.lock_holds > 0, "shard {} never took its write lock", s.shard);
+        }
+    }
+}
+
+#[test]
+fn service_under_concurrent_clients_stays_consistent() {
+    let img = workloads::by_name("triangle_count").unwrap().generate(4096, 7);
+    let codec: Arc<dyn BlockCodec> = {
+        let cfg = GbdiConfig::default();
+        Arc::new(GbdiCodec::new(analyze::analyze_image(&img, &cfg), cfg))
+    };
+    let svc = CompressionService::start_static(
+        ServiceConfig { workers: 2, shards: 7, ..Default::default() },
+        codec,
+    )
+    .unwrap();
+    let n_pages = 40u64;
+    let threads = 4u64;
+    svc.submit_batch((0..n_pages).map(|i| (i, img.clone())).collect());
+    svc.flush();
+    let pattern = |id: u64, blk: usize| [(id as u8) ^ (blk as u8).wrapping_mul(11); 64];
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let svc = &svc;
+            s.spawn(move || {
+                let mut line = [0u8; 64];
+                let mut rng = Rng::new(7 + t);
+                for id in (t..n_pages).step_by(threads as usize) {
+                    for blk in 0..64usize {
+                        svc.write_block(id, blk, &pattern(id, blk)).unwrap();
+                        let other = rng.below(n_pages);
+                        svc.read_block(other, rng.below(64) as usize, &mut line).unwrap();
+                    }
+                }
+            });
+        }
+    });
+    for id in 0..n_pages {
+        let page = svc.read_page(id).unwrap();
+        for blk in 0..64usize {
+            assert_eq!(
+                page[blk * 64..(blk + 1) * 64],
+                pattern(id, blk),
+                "lost write on {id}/{blk}"
+            );
+        }
+    }
+    let shards = svc.shard_metrics();
+    let m = svc.metrics();
+    assert_eq!(shards.iter().map(|s| s.block_reads).sum::<u64>(), m.block_reads);
+    assert_eq!(shards.iter().map(|s| s.block_writes).sum::<u64>(), m.block_writes);
+    assert_eq!(m.block_writes, n_pages * 64);
+    assert_eq!(m.write_errors, 0);
+    assert_eq!(m.read_errors, 0);
+    svc.shutdown();
+}
