@@ -3,12 +3,41 @@
 //! workload, GBDI end-to-end, with block-granular decode latency (the
 //! number a memory controller cares about).
 //!
+//! The single-block probe locates a **real GBDI-mode block** through the
+//! container's per-block bit index and the 2-bit mode tag — the block at
+//! payload offset 0 need not be GBDI-coded (it is frequently ZERO or
+//! REP, which would make the "latency" number fiction). Both the fused
+//! LUT kernel (the codec's hot path) and the scalar reference decoder
+//! are timed on that block, so the JSON records the kernel speedup.
+//!
 //! `cargo bench --bench throughput`
 
-use gbdi::gbdi::{analyze, decode, GbdiCodec, GbdiConfig};
+use gbdi::gbdi::{analyze, decode, BlockMode, GbdiCodec, GbdiConfig};
 use gbdi::util::bench::Bencher;
 use gbdi::util::bits::BitReader;
 use gbdi::workloads;
+use gbdi::BlockCodec;
+
+/// Bit offset of the first GBDI-mode block in a serially-compressed
+/// container, via the block-bits index + each block's mode tag. The
+/// plain prefix-sum walk is only valid without parallel-chunk byte
+/// realignment (a chunked payload would need `Frame`'s offset index).
+fn find_gbdi_block(comp: &gbdi::Container) -> Option<u64> {
+    assert_eq!(comp.chunk_blocks, 0, "offset walk requires a serial payload");
+    let mut off = 0u64;
+    for &bits in &comp.block_bits {
+        let mut r = BitReader::new(&comp.payload[(off / 8) as usize..]);
+        if off % 8 != 0 {
+            r.get((off % 8) as u32).ok()?;
+        }
+        let tag = r.get(2).ok()?;
+        if BlockMode::from_tag(tag) == BlockMode::Gbdi {
+            return Some(off);
+        }
+        off += bits as u64;
+    }
+    None
+}
 
 fn main() {
     let fast = std::env::var("GBDI_BENCH_FAST").is_ok_and(|v| v == "1");
@@ -38,11 +67,25 @@ fn main() {
     let table = analyze::analyze_image(&img, &cfg);
     let codec = GbdiCodec::new(table.clone(), cfg.clone());
     let comp = codec.compress_image(&img);
-    // pick the first GBDI-coded block's payload
-    let payload = &comp.payload;
+    let off = find_gbdi_block(&comp).expect("workload produced no GBDI-mode block");
+    let byte = (off / 8) as usize;
+    let sub = off % 8;
     let mut out = vec![0u8; cfg.block_bytes];
     b.bench("decode/single-block", Some(64), || {
-        let mut r = BitReader::new(payload);
+        let mut r = BitReader::new(&comp.payload[byte..]);
+        if sub != 0 {
+            r.get(sub as u32).unwrap();
+        }
+        codec.decompress_block(&mut r, &mut out).unwrap();
+        out[0]
+    });
+    // the scalar reference decoder on the same block: the LUT-kernel
+    // ablation, recorded so the JSON carries the kernel speedup
+    b.bench("decode/single-block-reference", Some(64), || {
+        let mut r = BitReader::new(&comp.payload[byte..]);
+        if sub != 0 {
+            r.get(sub as u32).unwrap();
+        }
         decode::decompress_block(&mut r, &table, &cfg, &mut out).unwrap();
         out[0]
     });

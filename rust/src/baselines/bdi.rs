@@ -199,11 +199,9 @@ impl Bdi {
                 }
             }
         }
-        // raw fallback (also ragged tails)
+        // raw fallback (also ragged tails): bulk byte append
         w.put(Enc::Raw as u64, 4);
-        for &b in block {
-            w.put(b as u64, 8);
-        }
+        w.put_bytes(block);
     }
 
     fn decode_block(&self, r: &mut BitReader, out: &mut [u8]) -> Result<()> {
@@ -222,9 +220,7 @@ impl Bdi {
                 }
             }
             Enc::Raw => {
-                for b in out.iter_mut() {
-                    *b = r.get(8).map_err(|_| corrupt("truncated raw"))? as u8;
-                }
+                r.read_bytes(out).map_err(|_| corrupt("truncated raw"))?;
             }
             _ => {
                 let (k, d) = enc.kd().unwrap();

@@ -132,9 +132,7 @@ impl crate::codec::BlockCodec for FpcBlock {
             let v = u32::from_le_bytes(block[i * 4..i * 4 + 4].try_into().unwrap());
             Fpc::encode_word(w, v);
         }
-        for &b in &block[words * 4..] {
-            w.put(b as u64, 8); // ragged tail raw
-        }
+        w.put_bytes(&block[words * 4..]); // ragged tail raw
         (w.bit_len() - start) as u32
     }
 
@@ -144,9 +142,9 @@ impl crate::codec::BlockCodec for FpcBlock {
             let v = Fpc::decode_word(r)?;
             out[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
         }
-        for b in out[words * 4..].iter_mut() {
-            *b = r.get(8).map_err(|_| Error::Corrupt("fpc: truncated tail".into()))? as u8;
-        }
+        let tail = words * 4;
+        r.read_bytes(&mut out[tail..])
+            .map_err(|_| Error::Corrupt("fpc: truncated tail".into()))?;
         Ok(())
     }
 
@@ -167,9 +165,7 @@ impl Codec for Fpc {
             let v = u32::from_le_bytes(data[i * 4..i * 4 + 4].try_into().unwrap());
             Self::encode_word(&mut w, v);
         }
-        for &b in &data[words * 4..] {
-            w.put(b as u64, 8); // ragged tail raw
-        }
+        w.put_bytes(&data[words * 4..]); // ragged tail raw
         w.finish()
     }
 

@@ -161,13 +161,21 @@ impl Codec for Huffman {
         let codes = canonical_codes(&lens);
         let mut out = Vec::with_capacity(256 + data.len() / 2 + 8);
         out.extend_from_slice(&lens); // 256-byte header
+        // Codes are canonical-MSB-first on the wire; the writer is
+        // LSB-first, so pre-reverse each code once and emit it as a
+        // single `put` instead of one `put_bit` per code bit. The bit
+        // sequence is identical.
+        let mut fast = [(0u64, 0u32); 256];
+        for (s, f) in fast.iter_mut().enumerate() {
+            let (code, l) = codes[s];
+            if l > 0 {
+                *f = ((code as u64).reverse_bits() >> (64 - l as u32), l as u32);
+            }
+        }
         let mut w = BitWriter::with_capacity(data.len() / 2);
         for &b in data {
-            let (code, l) = codes[b as usize];
-            // MSB-first emission so canonical decode walks bit-by-bit
-            for k in (0..l).rev() {
-                w.put_bit((code >> k) & 1 == 1);
-            }
+            let (v, l) = fast[b as usize];
+            w.put(v, l);
         }
         out.extend_from_slice(&w.finish());
         out

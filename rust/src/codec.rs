@@ -86,8 +86,10 @@ pub struct Scratch {
     pub(crate) w: BitWriter,
     /// One decoded block (partial-block edges of range reads).
     pub(crate) block: Vec<u8>,
-    /// GBDI per-word (base ptr, delta, width) plan.
-    pub(crate) gbdi_plan: Vec<(u64, i64, u32)>,
+    /// GBDI per-word emission plan, u64-packed: each entry is one fused
+    /// `(field value, field bits)` writer `put` (base pointer and
+    /// offset-binary delta pre-merged; wide W64 fields split in two).
+    pub(crate) gbdi_plan: Vec<(u64, u32)>,
     /// BDI per-word (zero-base?, delta) plan.
     pub(crate) bdi_plan: Vec<(bool, u64)>,
 }

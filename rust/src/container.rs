@@ -21,7 +21,11 @@
 //! byte-aligned sub-stream, and concatenates — for **any**
 //! [`BlockCodec`], not just GBDI. Decompression realigns at chunk
 //! boundaries, so parallel output decodes bit-exactly like the serial
-//! stream (ratio identical up to <1 byte padding per chunk).
+//! stream (ratio identical up to <1 byte padding per chunk). Both
+//! directions sit on the word-at-a-time bit substrate
+//! ([`crate::util::bits`], DESIGN.md §9): every codec's RAW paths are
+//! bulk byte copies and per-field I/O moves up to 64 bits per shift,
+//! so the container layer adds framing, not bit-loop overhead.
 
 use crate::codec::{build_codec, BlockCodec, CodecId};
 use crate::gbdi::table::GlobalBaseTable;

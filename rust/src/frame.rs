@@ -24,9 +24,12 @@
 //!   what exists.
 //!
 //! All hot paths borrow caller-owned [`Scratch`] buffers instead of
-//! allocating. [`Frame::to_container`] compacts payload + patches back
-//! into the canonical serial container — frames are a runtime handle,
-//! the wire format is unchanged.
+//! allocating, and all bit movement rides the word-at-a-time substrate
+//! in [`crate::util::bits`]: the in-place `write_block` splice is a
+//! bulk [`overwrite_bits`] (64 bits per step), and compaction /
+//! [`Frame::to_container`] move whole blocks between streams with
+//! [`BitWriter::append_from`]'s memcpy-or-shifted-word paths — frames
+//! are a runtime handle, the wire format is unchanged.
 //!
 //! On top of frames sit the streaming sessions: [`Compressor`] ingests
 //! chunked input with bounded buffering (one partial block), and

@@ -1,16 +1,188 @@
 //! The GBDI decompression engine: format decoding, global table access,
 //! and bit-exact value reconstruction (paper §IV.B).
+//!
+//! Two implementations share the wire format:
+//!
+//! * [`decompress_block`] — the scalar reference decoder, one field per
+//!   read, bounds-checking the base pointer per word. Kept as the
+//!   differential-testing oracle and for callers that only have a
+//!   table + config in hand.
+//! * [`decompress_block_lut`] — the hot-path kernel the
+//!   [`GbdiCodec`](super::GbdiCodec) trait impl runs: a flat
+//!   [`DecodeLut`] (built and validated once at codec construction)
+//!   replaces the per-word table lookup + bounds check, the base
+//!   pointer and its delta are extracted from a **single accumulator
+//!   refill** (`peek`/`consume`), and RAW/REP blocks take bulk-copy
+//!   paths. Output is bit-for-bit identical to the reference decoder.
 
 use super::table::GlobalBaseTable;
 use super::{BlockMode, GbdiConfig};
 use crate::cluster::apply_delta;
 use crate::container::Container;
 use crate::util::bits::BitReader;
-use crate::value::write_word;
+use crate::value::{write_word, WordSize};
 use crate::{Error, Result};
+
+/// `width[]` sentinel: this pointer is the outlier escape code.
+const W_OUTLIER: u32 = u32::MAX;
+/// `width[]` sentinel: this pointer names no table entry (corrupt input).
+const W_INVALID: u32 = u32::MAX - 1;
+
+/// Flat per-table decode tables: `base[]` / `width[]` indexed directly by
+/// the on-wire base pointer.
+///
+/// Both arrays are sized `1 << ptr_bits`, so **any** pointer value the
+/// wire can physically encode is in range — the per-word bounds check of
+/// the reference decoder disappears. Codes past the real table (possible
+/// whenever `num_bases + 1` is not a power of two) carry the `W_INVALID`
+/// sentinel and surface as the same corruption error the reference
+/// decoder raises; the escape code carries `W_OUTLIER`. Everything is
+/// validated once in [`DecodeLut::new`], which only
+/// [`GbdiCodec::try_new`](super::GbdiCodec::try_new) calls — after it has
+/// checked the table/config contract (`table.len() <= num_bases`, word
+/// sizes agree), so LUT construction cannot alias a real base onto the
+/// escape code.
+#[derive(Debug, Clone)]
+pub struct DecodeLut {
+    base: Box<[u64]>,
+    width: Box<[u32]>,
+    ptr_bits: u32,
+    word_size: WordSize,
+    block_bytes: usize,
+    words_per_block: usize,
+}
+
+impl DecodeLut {
+    /// Build the LUT for a (table, config) pair.
+    ///
+    /// # Panics
+    ///
+    /// If `table.len() > config.num_bases` (a real base would alias the
+    /// outlier escape code) or the word sizes disagree — the contract
+    /// [`GbdiCodec::try_new`](super::GbdiCodec::try_new) validates with a
+    /// recoverable error before calling this. Enforced unconditionally:
+    /// a violating LUT would decode wrong bytes as `Ok`, not fail.
+    pub fn new(table: &GlobalBaseTable, config: &GbdiConfig) -> DecodeLut {
+        let ptr_bits = config.base_ptr_bits();
+        let size = 1usize << ptr_bits;
+        assert!(
+            table.len() <= config.num_bases,
+            "table has {} bases, config allows {}",
+            table.len(),
+            config.num_bases
+        );
+        assert_eq!(table.word_size, config.word_size, "table/config word size mismatch");
+        debug_assert!(config.outlier_code() < size as u64);
+        let mut base = vec![0u64; size].into_boxed_slice();
+        let mut width = vec![W_INVALID; size].into_boxed_slice();
+        for (i, e) in table.entries().iter().enumerate() {
+            base[i] = e.base;
+            width[i] = e.width;
+        }
+        width[config.outlier_code() as usize] = W_OUTLIER;
+        DecodeLut {
+            base,
+            width,
+            ptr_bits,
+            word_size: config.word_size,
+            block_bytes: config.block_bytes,
+            words_per_block: config.words_per_block(),
+        }
+    }
+}
+
+/// Decode one block from `r` into `out` through a prebuilt [`DecodeLut`]
+/// — the allocation-free hot path behind
+/// [`BlockCodec::decompress_block`](crate::codec::BlockCodec::decompress_block)
+/// for GBDI. Exactly `out.len()` bytes are reconstructed; pass a short
+/// slice for ragged tail blocks.
+pub fn decompress_block_lut(r: &mut BitReader, lut: &DecodeLut, out: &mut [u8]) -> Result<()> {
+    let corrupt = |what: &str| Error::Corrupt(format!("block: {what}"));
+    let tag = r.get(2).map_err(|_| corrupt("missing tag"))?;
+    let ws = lut.word_size;
+    match BlockMode::from_tag(tag) {
+        BlockMode::Raw => {
+            r.read_bytes(out).map_err(|_| corrupt("truncated raw block"))?;
+        }
+        BlockMode::Zero => out.fill(0),
+        BlockMode::Rep => {
+            let v = r.get(ws.bits()).map_err(|_| corrupt("truncated rep word"))?;
+            if out.len() % ws.bytes() != 0 {
+                return Err(corrupt("rep block with ragged length"));
+            }
+            match ws {
+                WordSize::W32 => {
+                    let pat = (v as u32).to_le_bytes();
+                    for c in out.chunks_exact_mut(4) {
+                        c.copy_from_slice(&pat);
+                    }
+                }
+                WordSize::W64 => {
+                    let pat = v.to_le_bytes();
+                    for c in out.chunks_exact_mut(8) {
+                        c.copy_from_slice(&pat);
+                    }
+                }
+            }
+        }
+        BlockMode::Gbdi => {
+            if out.len() != lut.block_bytes {
+                return Err(corrupt("gbdi block with ragged length"));
+            }
+            let ptr_bits = lut.ptr_bits;
+            let word_bits = ws.bits();
+            // `width.len() == 1 << ptr_bits`, so masking with `len - 1`
+            // both extracts the pointer field and proves the index in
+            // range — no per-word bounds check survives optimization.
+            let idx_mask = lut.width.len() - 1;
+            for i in 0..lut.words_per_block {
+                // One refill serves the base pointer AND its delta: peek
+                // up to 57 bits, classify via the LUT, consume the fused
+                // field in one step.
+                let peeked = r.peek(57);
+                let ptr = peeked as usize & idx_mask;
+                let width = lut.width[ptr];
+                let v = if width == 0 {
+                    r.consume(ptr_bits).map_err(|_| corrupt("truncated base ptr"))?;
+                    lut.base[ptr]
+                } else if width <= 57 - ptr_bits {
+                    let raw = (peeked >> ptr_bits) & ((1u64 << width) - 1);
+                    r.consume(ptr_bits + width).map_err(|_| corrupt("truncated delta"))?;
+                    let d = raw as i64 - (1i64 << (width - 1));
+                    apply_delta(lut.base[ptr], d, ws)
+                } else if width == W_OUTLIER {
+                    if ptr_bits + word_bits <= 57 {
+                        let v = (peeked >> ptr_bits) & ((1u64 << word_bits) - 1);
+                        r.consume(ptr_bits + word_bits)
+                            .map_err(|_| corrupt("truncated outlier"))?;
+                        v
+                    } else {
+                        r.consume(ptr_bits).map_err(|_| corrupt("truncated base ptr"))?;
+                        r.get(word_bits).map_err(|_| corrupt("truncated outlier"))?
+                    }
+                } else if width == W_INVALID {
+                    return Err(corrupt("base pointer beyond table"));
+                } else {
+                    // wide delta field (W64 tables): unfused two-step read
+                    r.consume(ptr_bits).map_err(|_| corrupt("truncated base ptr"))?;
+                    let d = r.get_signed(width).map_err(|_| corrupt("truncated delta"))?;
+                    apply_delta(lut.base[ptr], d, ws)
+                };
+                write_word(out, i, ws, v);
+            }
+        }
+    }
+    Ok(())
+}
 
 /// Decode one block from `r` into `out` (exactly `out.len()` bytes are
 /// reconstructed; pass a short slice for ragged tail blocks).
+///
+/// This is the scalar **reference** decoder: one field per read, base
+/// pointers bounds-checked per word. The codec's hot path is
+/// [`decompress_block_lut`]; the two are asserted bit-equivalent (same
+/// outputs, same error/ok classification, same bits consumed) by the
+/// differential tests below and by the golden wire fixtures.
 pub fn decompress_block(
     r: &mut BitReader,
     table: &GlobalBaseTable,
@@ -89,6 +261,7 @@ pub fn decompress_image(comp: &Container) -> Result<Vec<u8>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::codec::BlockCodec;
     use crate::gbdi::encode::GbdiCodec;
     use crate::util::prng::Rng;
 
@@ -125,6 +298,132 @@ mod tests {
         let comp = c.compress_image(&image);
         assert_eq!(decompress_image(&comp).unwrap(), image);
         assert!(comp.ratio() > 1.0, "ratio {}", comp.ratio());
+    }
+
+    #[test]
+    fn lut_decoder_matches_reference_per_block() {
+        // differential: the fused LUT kernel and the scalar reference
+        // must agree on output bytes AND bits consumed for every block
+        let image = mixed_image(2048, 21);
+        let c = codec();
+        let comp = c.compress_image(&image);
+        let mut off = 0u64;
+        let mut a = vec![0u8; c.config().block_bytes];
+        let mut b = vec![0u8; c.config().block_bytes];
+        let lut = DecodeLut::new(c.table(), c.config());
+        for (i, &bits) in comp.block_bits.iter().enumerate() {
+            let byte = (off / 8) as usize;
+            let sub = (off % 8) as u32;
+            let mut ra = BitReader::new(&comp.payload[byte..]);
+            let mut rb = BitReader::new(&comp.payload[byte..]);
+            if sub != 0 {
+                ra.get(sub).unwrap();
+                rb.get(sub).unwrap();
+            }
+            decompress_block_lut(&mut ra, &lut, &mut a).unwrap();
+            decompress_block(&mut rb, c.table(), c.config(), &mut b).unwrap();
+            assert_eq!(a, b, "block {i}");
+            assert_eq!(ra.bit_pos(), rb.bit_pos(), "block {i} bits consumed");
+            assert_eq!(ra.bit_pos() - sub as usize, bits as usize, "block {i} framing");
+            off += bits as u64;
+        }
+    }
+
+    #[test]
+    fn lut_decoder_matches_reference_under_corruption() {
+        // bit-flipped payloads: both decoders must classify identically
+        // (both Ok with equal bytes, or both Err), and never panic
+        let image = mixed_image(512, 23);
+        let c = codec();
+        let comp = c.compress_image(&image);
+        let lut = DecodeLut::new(c.table(), c.config());
+        let mut rng = Rng::new(29);
+        let mut a = vec![0u8; c.config().block_bytes];
+        let mut b = vec![0u8; c.config().block_bytes];
+        for _ in 0..300 {
+            let mut bad = comp.payload.clone();
+            let i = rng.below(bad.len() as u64) as usize;
+            bad[i] ^= 1 << rng.below(8);
+            // also truncate sometimes
+            if rng.chance(0.3) {
+                bad.truncate(rng.below(bad.len() as u64 + 1) as usize);
+            }
+            let mut ra = BitReader::new(&bad);
+            let mut rb = BitReader::new(&bad);
+            let res_a = decompress_block_lut(&mut ra, &lut, &mut a);
+            let res_b = decompress_block(&mut rb, c.table(), c.config(), &mut b);
+            assert_eq!(res_a.is_ok(), res_b.is_ok(), "classification diverged");
+            if res_a.is_ok() {
+                assert_eq!(a, b);
+                assert_eq!(ra.bit_pos(), rb.bit_pos());
+            }
+        }
+    }
+
+    #[test]
+    fn lut_rejects_out_of_table_pointer() {
+        // handcraft a GBDI block whose first pointer names an entry past
+        // the table: both decoders must reject it
+        let c = codec(); // 4 real bases (incl. pinned zero), num_bases 64
+        let lut = DecodeLut::new(c.table(), c.config());
+        let mut w = crate::util::bits::BitWriter::new();
+        w.put(BlockMode::Gbdi as u64, 2);
+        w.put(40, c.config().base_ptr_bits()); // 40 > table.len(), != escape
+        w.put(0, 57); // padding so reads don't run dry first
+        let bytes = w.finish();
+        let mut out = vec![0u8; c.config().block_bytes];
+        let mut r = BitReader::new(&bytes);
+        assert!(decompress_block_lut(&mut r, &lut, &mut out).is_err());
+        let mut r = BitReader::new(&bytes);
+        assert!(decompress_block(&mut r, c.table(), c.config(), &mut out).is_err());
+    }
+
+    #[test]
+    fn trait_decode_uses_lut_and_roundtrips_w64() {
+        // W64 tables exercise the unfused wide-field branches
+        let cfg = GbdiConfig {
+            word_size: crate::value::WordSize::W64,
+            width_classes: vec![0, 4, 8, 16, 24, 32],
+            ..Default::default()
+        };
+        let table = GlobalBaseTable::new(
+            vec![(0x7F3A_0000_0000, 24), (5_000, 8)],
+            cfg.word_size,
+            1,
+        );
+        let c = GbdiCodec::new(table, cfg.clone());
+        let mut rng = Rng::new(31);
+        let image: Vec<u8> = (0..1024)
+            .flat_map(|_| {
+                let v: u64 = match rng.below(4) {
+                    0 => 0x7F3A_0000_0000u64.wrapping_add(rng.range_i64(-400_000, 400_000) as u64),
+                    1 => 5_000u64.wrapping_add(rng.range_i64(-100, 100) as u64),
+                    2 => 0,
+                    _ => rng.next_u64(),
+                };
+                v.to_le_bytes()
+            })
+            .collect();
+        let comp = c.compress_image(&image);
+        assert_eq!(decompress_image(&comp).unwrap(), image);
+        // per-block trait decode (the LUT path) agrees with the reference
+        let mut off = 0u64;
+        let mut a = vec![0u8; cfg.block_bytes];
+        let mut b = vec![0u8; cfg.block_bytes];
+        for &bits in &comp.block_bits {
+            let byte = (off / 8) as usize;
+            let sub = (off % 8) as u32;
+            let mut ra = BitReader::new(&comp.payload[byte..]);
+            let mut rb = BitReader::new(&comp.payload[byte..]);
+            if sub != 0 {
+                ra.get(sub).unwrap();
+                rb.get(sub).unwrap();
+            }
+            c.decompress_block(&mut ra, &mut a).unwrap();
+            decompress_block(&mut rb, c.table(), c.config(), &mut b).unwrap();
+            assert_eq!(a, b);
+            off += bits as u64;
+        }
     }
 
     #[test]

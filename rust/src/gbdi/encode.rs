@@ -66,12 +66,34 @@ impl EncodeStats {
     }
 }
 
+/// Append the fused `(base pointer, field)` emission of one word to the
+/// plan: a single writer `put` when `ptr_bits + field_bits <= 64`
+/// (always true for W32 tables), otherwise split into exactly two puts
+/// (wide W64 delta or outlier fields). The emitted bit sequence is
+/// identical to `put(ptr); put(field)` — the pointer occupies the low
+/// bits, LSB-first.
+#[inline]
+fn push_packed(plan: &mut Vec<(u64, u32)>, ptr: u64, ptr_bits: u32, field: u64, field_bits: u32) {
+    let total = ptr_bits + field_bits;
+    if total <= 64 {
+        plan.push((ptr | (field << ptr_bits), total));
+    } else {
+        // low 64 bits first; the shift drops the field's top bits, which
+        // the second put re-emits
+        plan.push((ptr | (field << ptr_bits), 64));
+        plan.push((field >> (64 - ptr_bits), total - 64));
+    }
+}
+
 /// The GBDI codec: a validated config + the global base table to encode
-/// against. Cheap to clone; the coordinator clones one per worker.
+/// against, plus the flat decode LUT derived from both at construction
+/// (see [`super::decode::DecodeLut`]). Cheap enough to clone per worker;
+/// the coordinator clones one per thread.
 #[derive(Debug, Clone)]
 pub struct GbdiCodec {
     table: GlobalBaseTable,
     config: GbdiConfig,
+    lut: super::decode::DecodeLut,
 }
 
 impl GbdiCodec {
@@ -99,7 +121,10 @@ impl GbdiCodec {
                 config.num_bases
             )));
         }
-        Ok(GbdiCodec { table, config })
+        // Validated once here so the per-word decode loop can index the
+        // LUT without bounds or validity checks.
+        let lut = super::decode::DecodeLut::new(&table, &config);
+        Ok(GbdiCodec { table, config, lut })
     }
 
     /// The table this codec encodes against.
@@ -128,12 +153,22 @@ impl GbdiCodec {
     /// [`Self::compress_block_stats`] with a caller-provided plan scratch
     /// buffer (the image loop and the [`crate::codec::Scratch`]-aware
     /// trait method reuse one allocation across all blocks).
+    ///
+    /// The plan is u64-packed: the base search runs once per word and
+    /// deposits ready-to-emit `(field, bits)` pairs — base pointer and
+    /// offset-binary delta fused into a single writer `put` wherever
+    /// `ptr_bits + width <= 64` (always, for W32 tables). The search
+    /// itself carries a per-block most-recently-used base hint
+    /// ([`GlobalBaseTable::best_base_hinted`]): block-local value
+    /// locality means consecutive words usually share a base, so the
+    /// probe short-circuits the bucket walk without changing any field
+    /// width.
     fn compress_block_into(
         &self,
         block: &[u8],
         w: &mut BitWriter,
         stats: &mut EncodeStats,
-        plan: &mut Vec<(u64, i64, u32)>,
+        plan: &mut Vec<(u64, u32)>,
     ) -> (BlockMode, u32) {
         let start = w.bit_len();
         let ws = self.config.word_size;
@@ -190,19 +225,29 @@ impl GbdiCodec {
         // GBDI path: plan the block first (cheap), emit only if it wins.
         let ptr_bits = self.config.base_ptr_bits();
         let word_bits = ws.bits();
-        plan.clear(); // (ptr, delta, width), or (escape, value, MAX) per word
+        let escape = self.config.outlier_code();
+        plan.clear(); // packed (field, bits) puts, one or two per word
         let mut gbdi_bits: u64 = 2;
         let mut outliers = 0u64;
+        let mut delta_bits = 0u64;
+        let mut mru: Option<u32> = None;
         for &v in words {
-            match self.table.best_base(v) {
+            match self.table.best_base_hinted(v, mru) {
                 Some((idx, delta, width)) => {
-                    plan.push((idx as u64, delta, width));
+                    mru = Some(idx as u32);
                     gbdi_bits += (ptr_bits + width) as u64;
+                    if width == 0 {
+                        plan.push((idx as u64, ptr_bits));
+                    } else {
+                        delta_bits += width as u64;
+                        let biased = (delta + (1i64 << (width - 1))) as u64;
+                        push_packed(plan, idx as u64, ptr_bits, biased, width);
+                    }
                 }
                 None => {
-                    plan.push((self.config.outlier_code(), v as i64, u32::MAX));
-                    gbdi_bits += (ptr_bits + word_bits) as u64;
                     outliers += 1;
+                    gbdi_bits += (ptr_bits + word_bits) as u64;
+                    push_packed(plan, escape, ptr_bits, v, word_bits);
                 }
             }
         }
@@ -212,16 +257,10 @@ impl GbdiCodec {
             return (BlockMode::Raw, (w.bit_len() - start) as u32);
         }
         w.put(BlockMode::Gbdi as u64, 2);
-        for &(ptr, delta, width) in plan.iter() {
-            w.put(ptr, ptr_bits);
-            if width == u32::MAX {
-                // outlier: raw word (delta field holds the value)
-                self.put_word(w, delta as u64);
-            } else if width > 0 {
-                w.put_signed(delta, width);
-                stats.delta_bits += width as u64;
-            }
+        for &(field, bits) in plan.iter() {
+            w.put(field, bits);
         }
+        stats.delta_bits += delta_bits;
         stats.gbdi_blocks += 1;
         stats.encoded_words += (n_words as u64) - outliers;
         stats.outlier_words += outliers;
@@ -230,9 +269,7 @@ impl GbdiCodec {
 
     fn emit_raw(&self, block: &[u8], w: &mut BitWriter, stats: &mut EncodeStats) {
         w.put(BlockMode::Raw as u64, 2);
-        for &b in block {
-            w.put(b as u64, 8);
-        }
+        w.put_bytes(block);
         stats.raw_blocks += 1;
     }
 
@@ -315,7 +352,7 @@ impl BlockCodec for GbdiCodec {
     }
 
     fn decompress_block(&self, r: &mut BitReader<'_>, out: &mut [u8]) -> crate::Result<()> {
-        super::decode::decompress_block(r, &self.table, &self.config, out)
+        super::decode::decompress_block_lut(r, &self.lut, out)
     }
 
     /// Exact compressed bit size of `block` without emitting anything —
@@ -336,11 +373,17 @@ impl BlockCodec for GbdiCodec {
         }
         let ptr_bits = self.config.base_ptr_bits() as u64;
         let mut bits = 2u64;
+        // same MRU hint chain as the encoder, so the estimate walks the
+        // exact search the emission path would (widths always agree)
+        let mut mru: Option<u32> = None;
         for i in 0..n_words {
             let v = read_word(block, i, ws);
             bits += ptr_bits
-                + match self.table.best_base(v) {
-                    Some((_, _, width)) => width as u64,
+                + match self.table.best_base_hinted(v, mru) {
+                    Some((idx, _, width)) => {
+                        mru = Some(idx as u32);
+                        width as u64
+                    }
                     None => ws.bits() as u64,
                 };
         }

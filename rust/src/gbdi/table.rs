@@ -231,6 +231,47 @@ impl GlobalBaseTable {
         self.best_base_scan(v)
     }
 
+    /// [`Self::best_base`] with a caller-supplied most-recently-used hint
+    /// (the per-block value-locality probe of the encode hot path). When
+    /// the hinted entry fits `v`, only *strictly narrower* candidates can
+    /// beat it — on the W32 bucketed path that is the width-sorted prefix
+    /// of `v`'s bucket, so runs of words clustered near one base skip the
+    /// full bucket walk. Exact: the returned field width always equals
+    /// [`Self::best_base`]'s (a width tie may resolve to a different
+    /// same-width base, which encodes in identical bits — verified by the
+    /// `hinted_search_matches_exhaustive_width` property test).
+    ///
+    /// `hint` must be an entry index previously returned by a search on
+    /// **this** table (panics on an out-of-range index).
+    #[inline]
+    pub fn best_base_hinted(&self, v: u64, hint: Option<u32>) -> Option<(usize, i64, u32)> {
+        if let Some(h) = hint {
+            if !self.bucket_off.is_empty() {
+                let e = self.entries[h as usize];
+                let d = wrapping_delta(v, e.base, self.word_size);
+                if e.fits(d) {
+                    if e.width == 0 {
+                        return Some((h as usize, d, 0)); // cost 0: unbeatable
+                    }
+                    let b = (v as u32 >> BUCKET_SHIFT) as usize;
+                    let (lo, hi) = (self.bucket_off[b] as usize, self.bucket_off[b + 1] as usize);
+                    for &i in &self.bucket_cands[lo..hi] {
+                        let c = self.entries[i as usize];
+                        if c.width >= e.width {
+                            break; // width-sorted: nothing narrower remains
+                        }
+                        let cd = wrapping_delta(v, c.base, self.word_size);
+                        if c.fits(cd) {
+                            return Some((i as usize, cd, c.width));
+                        }
+                    }
+                    return Some((h as usize, d, e.width));
+                }
+            }
+        }
+        self.best_base(v)
+    }
+
     /// W32 fast path: walk the bucket's width-sorted candidates; the
     /// first fit is a minimal-width fit.
     #[inline]
@@ -496,6 +537,57 @@ mod tests {
                     assert_eq!(e.width, w);
                     assert!(e.fits(d));
                     assert_eq!(crate::cluster::apply_delta(e.base, d, WordSize::W32), v);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hinted_search_matches_exhaustive_width() {
+        // the MRU probe must never pick a wider (more expensive) base
+        // than the exhaustive search, for any hint, and its result must
+        // itself be a valid encoding
+        let mut rng = Rng::new(91);
+        for ws in [WordSize::W32, WordSize::W64] {
+            for _ in 0..10 {
+                let k = 1 + rng.below(48) as usize;
+                let pairs: Vec<(u64, u32)> = (0..k)
+                    .map(|_| {
+                        let base = if rng.chance(0.4) {
+                            rng.below(1 << 18)
+                        } else if ws == WordSize::W32 {
+                            rng.next_u32() as u64
+                        } else {
+                            rng.next_u64()
+                        };
+                        (base, [0u32, 4, 8, 16, 24][rng.below(5) as usize])
+                    })
+                    .collect();
+                let t = GlobalBaseTable::new(pairs, ws, 0);
+                let mut hint: Option<u32> = None;
+                for _ in 0..1500 {
+                    let v = if rng.chance(0.6) {
+                        let e = t.get(rng.below(t.len() as u64) as usize);
+                        crate::cluster::apply_delta(e.base, rng.range_i64(-5000, 5000), ws)
+                    } else if ws == WordSize::W32 {
+                        rng.next_u32() as u64
+                    } else {
+                        rng.next_u64()
+                    };
+                    let hinted = t.best_base_hinted(v, hint);
+                    let slow = t.best_base_exhaustive(v);
+                    assert_eq!(
+                        hinted.map(|(_, _, w)| w),
+                        slow.map(|(_, _, w)| w),
+                        "ws {ws:?}, v={v}, hint={hint:?}"
+                    );
+                    if let Some((i, d, w)) = hinted {
+                        let e = t.get(i);
+                        assert_eq!(e.width, w);
+                        assert!(e.fits(d));
+                        assert_eq!(crate::cluster::apply_delta(e.base, d, ws), v);
+                        hint = Some(i as u32);
+                    }
                 }
             }
         }

@@ -2,15 +2,21 @@
 //! repo (GBDI, BDI, FPC, Huffman).
 //!
 //! The stream is **LSB-first within a little-endian u64 accumulator**: the
-//! first bit written is the lowest bit of the first byte. Fields up to 57
-//! bits are written/read in a single shift-or; wider fields are split. This
-//! layout lets the hot decoder refill with one unaligned 8-byte load.
+//! first bit written is the lowest bit of the first byte. The writer's
+//! accumulator drains eight bytes at a time (`to_le_bytes` +
+//! `extend_from_slice`), never byte-by-byte; the reader refills with one
+//! unaligned 8-byte load. Fields up to 57 bits read in a single shift-or
+//! (the refill keeps at least 57 valid bits available); the writer takes
+//! up to 64 bits per `put`. Bulk block payloads ride [`BitWriter::put_bytes`]
+//! and [`BitReader::read_bytes`], which degrade to a plain `memcpy` when
+//! the stream is byte-aligned. See DESIGN.md §9 for the layout invariants.
 
 /// Append-only bit writer over a growable byte buffer.
 #[derive(Debug, Default)]
 pub struct BitWriter {
     buf: Vec<u8>,
     /// Bit accumulator; low `fill` bits are valid and not yet flushed.
+    /// Invariant between calls: `fill <= 63`.
     acc: u64,
     fill: u32,
 }
@@ -41,19 +47,17 @@ impl BitWriter {
         if n == 0 {
             return;
         }
-        if n <= 57 || self.fill + n <= 64 {
-            self.acc |= v << self.fill;
-            self.fill += n;
-            while self.fill >= 8 {
-                self.buf.push(self.acc as u8);
-                self.acc >>= 8;
-                self.fill -= 8;
-            }
+        // `fill <= 63`, so the shift is defined; bits past 63 fall off the
+        // top and are re-emitted from `v` after the word flush below.
+        self.acc |= v << self.fill;
+        let total = self.fill + n;
+        if total >= 64 {
+            self.buf.extend_from_slice(&self.acc.to_le_bytes());
+            self.fill = total - 64;
+            // 64 - old_fill bits of `v` were flushed; keep the rest.
+            self.acc = if self.fill == 0 { 0 } else { v >> (n - self.fill) };
         } else {
-            // Split wide writes.
-            let lo_n = 32;
-            self.put(v & 0xFFFF_FFFF, lo_n);
-            self.put(v >> lo_n, n - lo_n);
+            self.fill = total;
         }
     }
 
@@ -71,6 +75,49 @@ impl BitWriter {
         let bias = 1i64 << (n - 1);
         debug_assert!(v >= -bias && v < bias, "signed {v} does not fit {n} bits");
         self.put((v + bias) as u64, n);
+    }
+
+    /// Append whole bytes, equivalent to `put(b, 8)` per byte but bulk:
+    /// on a byte-aligned stream this is a single `extend_from_slice`
+    /// (memcpy); off alignment it moves eight bytes per shift through the
+    /// accumulator. The RAW-block fast path of every codec.
+    ///
+    /// ```
+    /// use gbdi::util::bits::{BitReader, BitWriter};
+    ///
+    /// let mut w = BitWriter::new();
+    /// w.put(0b101, 3); // stream is now mid-byte: shifted-copy slow path
+    /// w.put_bytes(&[0xAB, 0xCD, 0xEF]);
+    /// let bytes = w.finish();
+    /// let mut r = BitReader::new(&bytes);
+    /// assert_eq!(r.get(3).unwrap(), 0b101);
+    /// let mut back = [0u8; 3];
+    /// r.read_bytes(&mut back).unwrap();
+    /// assert_eq!(back, [0xAB, 0xCD, 0xEF]);
+    /// ```
+    pub fn put_bytes(&mut self, bytes: &[u8]) {
+        if self.fill % 8 == 0 {
+            // Byte-aligned: drain the accumulator's whole bytes, then memcpy.
+            while self.fill > 0 {
+                self.buf.push(self.acc as u8);
+                self.acc >>= 8;
+                self.fill -= 8;
+            }
+            self.buf.extend_from_slice(bytes);
+            return;
+        }
+        let mut words = bytes.chunks_exact(8);
+        for c in &mut words {
+            self.put(u64::from_le_bytes(c.try_into().unwrap()), 64);
+        }
+        let rest = words.remainder();
+        if !rest.is_empty() {
+            let mut v = 0u64;
+            for (i, &b) in rest.iter().enumerate() {
+                v |= (b as u64) << (8 * i as u32);
+            }
+            self.put(v, 8 * rest.len() as u32);
+        }
     }
 
     /// Finish the stream, zero-padding to a byte boundary, and return the
@@ -111,27 +158,119 @@ impl BitWriter {
     /// Append `nbits` bits copied from `src` starting at bit offset
     /// `bit_off` (same LSB-first layout). The compaction primitive under
     /// [`crate::frame::Frame::to_container`]: blocks are moved between
-    /// streams without re-encoding.
+    /// streams without re-encoding. After aligning the source cursor to a
+    /// byte boundary the copy proceeds a word (or, when the writer is
+    /// also aligned, a memcpy) at a time.
     ///
     /// Panics if `src` holds fewer than `bit_off + nbits` bits.
     pub fn append_from(&mut self, src: &[u8], bit_off: usize, nbits: u64) {
-        let mut r = BitReader::new(&src[bit_off / 8..]);
+        assert!(
+            (src.len() as u64) * 8 >= bit_off as u64 + nbits,
+            "append_from: source exhausted"
+        );
+        let mut byte = bit_off / 8;
         let sub = (bit_off % 8) as u32;
-        if sub != 0 {
-            r.get(sub).expect("append_from: offset past source");
-        }
         let mut rem = nbits;
-        while rem > 0 {
-            let n = rem.min(57) as u32;
-            let v = r.get(n).expect("append_from: source exhausted");
-            self.put(v, n);
-            rem -= n as u64;
+        if sub != 0 {
+            let take = rem.min((8 - sub) as u64) as u32;
+            self.put(((src[byte] >> sub) as u64) & ((1u64 << take) - 1), take);
+            rem -= take as u64;
+            byte += 1;
+        }
+        if rem == 0 {
+            return;
+        }
+        // Source cursor is now byte-aligned at `byte`; put_bytes picks the
+        // memcpy or shifted-word path from the writer's own alignment.
+        let whole = (rem / 8) as usize;
+        self.put_bytes(&src[byte..byte + whole]);
+        byte += whole;
+        rem %= 8;
+        if rem > 0 {
+            self.put((src[byte] as u64) & ((1u64 << rem) - 1), rem as u32);
         }
     }
 
     /// Current byte length if finished now.
     pub fn byte_len(&self) -> usize {
         (self.bit_len() + 7) / 8
+    }
+}
+
+/// Gather 64 bits of `src` starting at bit offset `bit` (LSB-first).
+/// Caller guarantees `bit + 64 <= src.len() * 8`; for an unaligned `bit`
+/// that bound also puts the ninth byte in range.
+#[inline]
+fn load_bits64(src: &[u8], bit: usize) -> u64 {
+    let b = bit / 8;
+    let sh = (bit % 8) as u32;
+    let lo = u64::from_le_bytes(src[b..b + 8].try_into().unwrap());
+    if sh == 0 {
+        lo
+    } else {
+        (lo >> sh) | ((src[b + 8] as u64) << (64 - sh))
+    }
+}
+
+/// Copy one sub-byte piece (up to the next `dst` byte boundary) from
+/// `src` bit `spos` to `dst` bit `dpos`; returns the bits copied.
+#[inline]
+fn copy_piece(dst: &mut [u8], dpos: usize, src: &[u8], spos: usize, max: usize) -> usize {
+    let byte = dpos / 8;
+    let bit = (dpos % 8) as u32;
+    let take = (8 - bit).min(max.min(8) as u32);
+    let sb = spos / 8;
+    let so = (spos % 8) as u32;
+    let mut v = (src[sb] >> so) as u16;
+    if so + take > 8 {
+        v |= (src[sb + 1] as u16) << (8 - so);
+    }
+    let keep = ((1u16 << take) - 1) as u8;
+    let v = (v as u8) & keep;
+    dst[byte] = (dst[byte] & !(keep << bit)) | (v << bit);
+    take as usize
+}
+
+/// Copy `nbits` bits from `src` starting at bit `src_pos` into `dst`
+/// starting at bit `dst_pos` (both LSB-first packed); bits of `dst`
+/// outside the window are preserved. Word-at-a-time: after a sub-byte
+/// head aligns the destination cursor, the middle runs 64 bits per
+/// iteration (one unaligned gather, one aligned 8-byte store).
+///
+/// The general splice primitive; [`overwrite_bits`] is the `src_pos = 0`
+/// special case used by [`crate::frame::Frame::write_block`].
+///
+/// ```
+/// use gbdi::util::bits::copy_bits;
+///
+/// let src = [0b1111_0110u8, 0b1010_1010];
+/// let mut dst = [0u8; 2];
+/// // move 9 bits starting at src bit 2 to dst bit 3
+/// copy_bits(&mut dst, 3, &src, 2, 9);
+/// for i in 0..9 {
+///     let s = (src[(2 + i) / 8] >> ((2 + i) % 8)) & 1;
+///     let d = (dst[(3 + i) / 8] >> ((3 + i) % 8)) & 1;
+///     assert_eq!(s, d, "bit {i}");
+/// }
+/// ```
+pub fn copy_bits(dst: &mut [u8], dst_pos: usize, src: &[u8], src_pos: usize, nbits: usize) {
+    debug_assert!(dst_pos + nbits <= dst.len() * 8, "copy_bits: window past dst");
+    debug_assert!(src_pos + nbits <= src.len() * 8, "copy_bits: src too short");
+    let mut done = 0usize;
+    // Head: per-piece until the destination cursor is byte-aligned.
+    while done < nbits && (dst_pos + done) % 8 != 0 {
+        done += copy_piece(dst, dst_pos + done, src, src_pos + done, nbits - done);
+    }
+    // Middle: 64 bits per iteration onto the aligned destination.
+    while nbits - done >= 64 {
+        let v = load_bits64(src, src_pos + done);
+        let b = (dst_pos + done) / 8;
+        dst[b..b + 8].copy_from_slice(&v.to_le_bytes());
+        done += 64;
+    }
+    // Tail: fewer than 64 bits left (at most 8 pieces).
+    while done < nbits {
+        done += copy_piece(dst, dst_pos + done, src, src_pos + done, nbits - done);
     }
 }
 
@@ -142,26 +281,8 @@ impl BitWriter {
 /// new encoding lands inside its old bit span without disturbing the
 /// neighbouring blocks that share its boundary bytes.
 pub fn overwrite_bits(dst: &mut [u8], pos: usize, src: &[u8], nbits: usize) {
-    debug_assert!(pos + nbits <= dst.len() * 8, "overwrite_bits: window past dst");
     debug_assert!(nbits <= src.len() * 8, "overwrite_bits: src too short");
-    let mut done = 0usize;
-    while done < nbits {
-        let byte = (pos + done) / 8;
-        let bit = ((pos + done) % 8) as u32;
-        let take = (8 - bit).min((nbits - done) as u32);
-        // gather `take` bits from src at bit offset `done` (may straddle
-        // a byte boundary)
-        let sb = done / 8;
-        let so = (done % 8) as u32;
-        let mut v = (src[sb] >> so) as u16;
-        if so + take > 8 {
-            v |= (src[sb + 1] as u16) << (8 - so);
-        }
-        let keep = ((1u16 << take) - 1) as u8;
-        let v = (v as u8) & keep;
-        dst[byte] = (dst[byte] & !(keep << bit)) | (v << bit);
-        done += take as usize;
-    }
+    copy_bits(dst, pos, src, 0, nbits);
 }
 
 /// Zig-zag encode a signed integer to an unsigned one (small magnitudes →
@@ -281,6 +402,48 @@ impl<'a> BitReader<'a> {
         Ok(self.get(n)? as i64 - bias)
     }
 
+    /// Read exactly `out.len()` whole bytes, equivalent to `get(8)` per
+    /// byte but bulk: on a byte-aligned stream one `copy_from_slice`
+    /// (memcpy), off alignment seven bytes per accumulator refill. The
+    /// RAW-block decode fast path. Fails without consuming a defined
+    /// amount if the stream is short.
+    ///
+    /// ```
+    /// use gbdi::util::bits::{BitReader, BitWriter};
+    ///
+    /// let mut w = BitWriter::new();
+    /// w.put_bytes(&[1, 2, 3, 4]);
+    /// let bytes = w.finish();
+    /// let mut r = BitReader::new(&bytes);
+    /// let mut out = [0u8; 4];
+    /// r.read_bytes(&mut out).unwrap(); // byte-aligned: memcpy fast path
+    /// assert_eq!(out, [1, 2, 3, 4]);
+    /// assert!(r.read_bytes(&mut out).is_err()); // stream exhausted
+    /// ```
+    pub fn read_bytes(&mut self, out: &mut [u8]) -> Result<(), OutOfBits> {
+        let bit = self.bit_pos();
+        if bit % 8 == 0 {
+            let b = bit / 8;
+            if b + out.len() > self.data.len() {
+                return Err(OutOfBits);
+            }
+            out.copy_from_slice(&self.data[b..b + out.len()]);
+            self.pos = b + out.len();
+            self.acc = 0;
+            self.fill = 0;
+            return Ok(());
+        }
+        let mut chunks = out.chunks_exact_mut(7);
+        for c in &mut chunks {
+            let v = self.get(56)?;
+            c.copy_from_slice(&v.to_le_bytes()[..7]);
+        }
+        for b in chunks.into_remainder() {
+            *b = self.get(8)? as u8;
+        }
+        Ok(())
+    }
+
     /// Peek `n` bits (n <= 57) without consuming. Bits past the end read as
     /// zero (for Huffman-style table lookups near stream end).
     #[inline]
@@ -338,6 +501,29 @@ mod tests {
         assert_eq!(r.get(0).unwrap(), 0);
         assert_eq!(r.get(1).unwrap(), 1);
         assert_eq!(r.get(48).unwrap(), 0x1234_5678_9ABC);
+    }
+
+    #[test]
+    fn wire_layout_is_pinned_lsb_first() {
+        // The exact byte values, not just a roundtrip: this is the layout
+        // every checked-in golden fixture depends on.
+        let mut w = BitWriter::new();
+        w.put(0b101, 3);
+        w.put(0b1010, 4);
+        let bytes = w.finish();
+        assert_eq!(bytes, vec![0b0101_0101]); // 101 then 1010, LSB-first
+        let mut w = BitWriter::new();
+        w.put(0xFF, 8);
+        w.put(0b1, 1);
+        assert_eq!(w.finish(), vec![0xFF, 0x01]);
+        let mut w = BitWriter::new();
+        w.put(0x0123_4567_89AB_CDEF, 64);
+        assert_eq!(w.finish(), 0x0123_4567_89AB_CDEFu64.to_le_bytes().to_vec());
+        // a 60-bit field crossing the accumulator flush boundary
+        let mut w = BitWriter::new();
+        w.put(0b1111, 4);
+        w.put(0x0AAA_AAAA_AAAA_AAAA, 60);
+        assert_eq!(w.finish(), vec![0xAF, 0xAA, 0xAA, 0xAA, 0xAA, 0xAA, 0xAA, 0xAA]);
     }
 
     #[test]
@@ -418,6 +604,63 @@ mod tests {
             assert_eq!(r.peek(13), v);
             r.consume(13).unwrap();
         }
+    }
+
+    #[test]
+    fn put_bytes_matches_per_byte_puts_at_any_alignment() {
+        let mut rng = Rng::new(41);
+        for _ in 0..200 {
+            let lead = rng.below(23) as u32; // 0..22 bits of misalignment
+            let n = rng.below(70) as usize;
+            let mut payload = vec![0u8; n];
+            rng.fill_bytes(&mut payload);
+            let lead_v = if lead == 0 { 0 } else { rng.next_u64() & ((1u64 << lead) - 1) };
+            let mut a = BitWriter::new();
+            let mut b = BitWriter::new();
+            a.put(lead_v, lead);
+            b.put(lead_v, lead);
+            a.put_bytes(&payload);
+            for &byte in &payload {
+                b.put(byte as u64, 8);
+            }
+            assert_eq!(a.bit_len(), b.bit_len(), "lead {lead} n {n}");
+            assert_eq!(a.finish(), b.finish(), "lead {lead} n {n}");
+        }
+    }
+
+    #[test]
+    fn read_bytes_matches_per_byte_gets_at_any_alignment() {
+        let mut rng = Rng::new(43);
+        for _ in 0..200 {
+            let lead = rng.below(23) as u32;
+            let n = rng.below(70) as usize;
+            let mut payload = vec![0u8; n + 8];
+            rng.fill_bytes(&mut payload);
+            let mut w = BitWriter::new();
+            w.put(if lead == 0 { 0 } else { 1 }, lead.min(1));
+            if lead > 1 {
+                w.put(rng.next_u64() & ((1u64 << (lead - 1)) - 1), lead - 1);
+            }
+            w.put_bytes(&payload);
+            let bytes = w.finish();
+            let mut a = BitReader::new(&bytes);
+            let mut b = BitReader::new(&bytes);
+            a.get(lead).unwrap();
+            b.get(lead).unwrap();
+            let mut out = vec![0u8; n];
+            a.read_bytes(&mut out).unwrap();
+            assert_eq!(out, payload[..n], "lead {lead} n {n}");
+            for (i, &want) in payload[..n].iter().enumerate() {
+                assert_eq!(b.get(8).unwrap() as u8, want, "byte {i}");
+            }
+            assert_eq!(a.bit_pos(), b.bit_pos());
+        }
+        // short streams fail cleanly in both paths
+        let mut r = BitReader::new(&[1, 2]);
+        assert_eq!(r.read_bytes(&mut [0u8; 3]), Err(OutOfBits));
+        let mut r = BitReader::new(&[1, 2]);
+        r.get(3).unwrap();
+        assert_eq!(r.read_bytes(&mut [0u8; 2]), Err(OutOfBits));
     }
 
     #[test]
@@ -515,7 +758,7 @@ mod tests {
         let mut r = BitReader::new(&bytes);
         assert_eq!(r.get(2).unwrap(), 0b11);
         assert_eq!(r.get(15).unwrap(), 0x2AFE);
-        // wide ranges survive too (crosses several 57-bit chunks)
+        // wide ranges survive too (crosses several word gulps)
         let mut rng = Rng::new(9);
         let mut big = vec![0u8; 64];
         rng.fill_bytes(&mut big);
@@ -527,6 +770,31 @@ mod tests {
         let mut rb = BitReader::new(&out);
         for _ in 0..(64 * 8 - 10) / 13 {
             assert_eq!(ra.get(13).unwrap(), rb.get(13).unwrap());
+        }
+    }
+
+    #[test]
+    fn append_from_all_alignments_bitwise_exact() {
+        // writer alignment x source alignment x ragged lengths; compare
+        // against the naive 1-bit-at-a-time splice
+        let mut rng = Rng::new(57);
+        let mut src = vec![0u8; 40];
+        rng.fill_bytes(&mut src);
+        for lead in 0..17u32 {
+            for off in 0..16usize {
+                let nbits = (rng.below(200) + 1).min((src.len() * 8 - off) as u64);
+                let lead_v = if lead == 0 { 0 } else { rng.next_u64() & ((1u64 << lead) - 1) };
+                let mut a = BitWriter::new();
+                a.put(lead_v, lead);
+                a.append_from(&src, off, nbits);
+                let mut b = BitWriter::new();
+                b.put(lead_v, lead);
+                for i in 0..nbits as usize {
+                    b.put_bit((src[(off + i) / 8] >> ((off + i) % 8)) & 1 == 1);
+                }
+                assert_eq!(a.bit_len(), b.bit_len(), "lead {lead} off {off} n {nbits}");
+                assert_eq!(a.finish(), b.finish(), "lead {lead} off {off} n {nbits}");
+            }
         }
     }
 
@@ -551,6 +819,33 @@ mod tests {
                     (orig[i / 8] >> (i % 8)) & 1
                 };
                 assert_eq!(got, want, "bit {i} (pos {pos}, nbits {nbits})");
+            }
+        }
+    }
+
+    #[test]
+    fn copy_bits_arbitrary_offsets_preserve_surroundings() {
+        let mut rng = Rng::new(35);
+        for _ in 0..300 {
+            let mut dst = vec![0u8; 32];
+            let mut src = vec![0u8; 32];
+            rng.fill_bytes(&mut dst);
+            rng.fill_bytes(&mut src);
+            let orig = dst.clone();
+            let dpos = rng.below(120) as usize;
+            let spos = rng.below(120) as usize;
+            let room = (dst.len() * 8 - dpos).min(src.len() * 8 - spos);
+            let nbits = rng.below(room as u64 + 1) as usize;
+            copy_bits(&mut dst, dpos, &src, spos, nbits);
+            for i in 0..dst.len() * 8 {
+                let got = (dst[i / 8] >> (i % 8)) & 1;
+                let want = if i >= dpos && i < dpos + nbits {
+                    let s = spos + (i - dpos);
+                    (src[s / 8] >> (s % 8)) & 1
+                } else {
+                    (orig[i / 8] >> (i % 8)) & 1
+                };
+                assert_eq!(got, want, "bit {i} (dpos {dpos}, spos {spos}, nbits {nbits})");
             }
         }
     }

@@ -74,6 +74,54 @@ fn read_and_estimate_paths_do_not_allocate() {
 }
 
 #[test]
+fn decode_hot_paths_do_not_allocate() {
+    // the decode side of the kernel rewrite: raw `decompress_block`
+    // straight off a packed payload (GBDI through its decode LUT) and
+    // `Frame::read_block` must stay at 0 allocs/op
+    let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let image = clustered_image(16 * 1024, 65); // 64 KiB, whole blocks only
+    let cfg = GbdiConfig::default();
+    for &kind in CodecKind::all() {
+        let codec: Arc<dyn BlockCodec> = Arc::from(kind.build_for_image(&image, &cfg));
+        let container = gbdi::container::compress(codec.as_ref(), &image);
+        let frame = Frame::compress(Arc::clone(&codec), &image);
+        let n = frame.n_blocks();
+        // bit offset of every block in the serial payload (the plain
+        // prefix-sum walk needs chunk_blocks == 0: no chunk realignment)
+        assert_eq!(container.chunk_blocks, 0);
+        let mut offsets = Vec::with_capacity(n);
+        let mut off = 0u64;
+        for &bits in &container.block_bits {
+            offsets.push(off);
+            off += bits as u64;
+        }
+        let payload = &container.payload;
+        let mut out = vec![0u8; codec.block_bytes()];
+        let mut sink = 0u64;
+        let mut pass = |sink: &mut u64| {
+            for k in 0..2000usize {
+                let i = (k * 131) % n;
+                let byte = (offsets[i] / 8) as usize;
+                let sub = (offsets[i] % 8) as u32;
+                let mut r = gbdi::util::bits::BitReader::new(&payload[byte..]);
+                if sub != 0 {
+                    r.get(sub).unwrap();
+                }
+                codec.decompress_block(&mut r, &mut out).unwrap();
+                *sink = sink.wrapping_add(out[0] as u64);
+                frame.read_block(i, &mut out).unwrap();
+                *sink = sink.wrapping_add(out[0] as u64);
+            }
+        };
+        // warm pass (nothing to warm on these paths, but keep symmetry)
+        pass(&mut sink);
+        let allocs = allocs_during(|| pass(&mut sink));
+        std::hint::black_box(sink);
+        assert_eq!(allocs, 0, "{}: decode hot loop allocated", kind.name());
+    }
+}
+
+#[test]
 fn range_reads_do_not_allocate_once_warm() {
     let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
     let image = clustered_image(16 * 1024, 62);

@@ -1,0 +1,230 @@
+//! Golden wire-format fixtures: checked-in compressed images that pin
+//! the on-disk format bit-for-bit.
+//!
+//! Every case asserts two things against its fixture file under
+//! `tests/golden/`:
+//!
+//! 1. **exact decode** — parsing the checked-in bytes and decompressing
+//!    them reproduces the (deterministically reconstructed) source image
+//!    byte-identically, whole-image and per-block through a [`Frame`];
+//! 2. **byte-identical recompression** — compressing the source image
+//!    with an identically-constructed codec reproduces the checked-in
+//!    file exactly, down to the last bit of the last varint.
+//!
+//! Together these freeze the stream layout (LSB-first fields, block tags,
+//! fused ptr+delta fields, container framing, table serialization): any
+//! kernel rewrite that moves a single bit fails here before it can ship.
+//! The cases cover GBDI (mixed ZERO/REP/RAW/GBDI blocks with outliers),
+//! a ragged-tail image, an all-raw (incompressible) image, and the BDI
+//! and FPC baselines.
+//!
+//! Regenerate after an *intentional* format change with:
+//! `GOLDEN_BLESS=1 cargo test --test golden_wire` (then commit the new
+//! fixtures and explain the break in the PR).
+
+use gbdi::baselines::bdi::Bdi;
+use gbdi::baselines::fpc::FpcBlock;
+use gbdi::container::{self, Container};
+use gbdi::gbdi::{GbdiCodec, GbdiConfig, GlobalBaseTable};
+use gbdi::BlockCodec;
+use std::path::PathBuf;
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden").join(name)
+}
+
+fn words_le(words: &[u32]) -> Vec<u8> {
+    words.iter().flat_map(|w| w.to_le_bytes()).collect()
+}
+
+/// GBDI codec shared by the mixed and ragged cases: explicit table
+/// (analysis-free, so the fixture does not depend on any selector), the
+/// default config.
+fn gbdi_fixture_codec() -> GbdiCodec {
+    let cfg = GbdiConfig::default();
+    let table = GlobalBaseTable::new(vec![(1000, 8), (1 << 20, 16)], cfg.word_size, 7);
+    GbdiCodec::new(table, cfg)
+}
+
+/// Eight 64-byte blocks exercising every GBDI block mode: near-base
+/// deltas, ZERO, REP, all-outlier RAW, wide deltas, mixed outliers,
+/// exact base hits, and descending runs. Every word fits at most one
+/// table entry, so the encoding is independent of search order.
+fn gbdi_mixed_image() -> Vec<u8> {
+    let mut words: Vec<u32> = Vec::new();
+    words.extend((0..16u32).map(|i| 900 + 7 * i)); // deltas around base 1000
+    words.extend([0u32; 16]); // ZERO block
+    words.extend([0xDEAD_BEEFu32; 16]); // REP block
+    // all outliers -> RAW beats GBDI
+    words.extend((0..16u32).map(|i| 0x1000_0000u32.wrapping_add(i.wrapping_mul(0x0123_4567))));
+    // wide deltas around base 1<<20
+    words.extend((0..16u32).map(|i| (1u32 << 20) - 15000 + 1234 * i));
+    // mixed: 12 near-base words + 4 outliers, GBDI still wins
+    words.extend((0..12u32).map(|i| 1000 + i));
+    words.extend((12..16u32).map(|i| 0xA000_0000 + i));
+    // exact base hits
+    words.extend((0..16usize).map(|i| [0u32, 1000, 1 << 20][i % 3]));
+    words.extend((0..16u32).map(|i| 1000 - i)); // descending run
+    words_le(&words)
+}
+
+/// Two full blocks plus a 21-byte ragged tail (stored raw).
+fn gbdi_ragged_image() -> Vec<u8> {
+    let mut image = Vec::new();
+    image.extend(words_le(&(0..16u32).map(|i| 900 + 7 * i).collect::<Vec<_>>()));
+    image.extend(words_le(&[0u32; 16]));
+    image.extend((0..21u32).map(|j| (3 * j + 1) as u8));
+    image
+}
+
+/// GBDI with only the pinned zero base; every word is an outlier, every
+/// block falls back to RAW.
+fn gbdi_allraw_codec() -> GbdiCodec {
+    let cfg = GbdiConfig::default();
+    let table = GlobalBaseTable::new(vec![(0, 8)], cfg.word_size, 3);
+    GbdiCodec::new(table, cfg)
+}
+
+fn gbdi_allraw_image() -> Vec<u8> {
+    (0..256u32).map(|j| ((37 * j + 11) % 256) as u8).collect()
+}
+
+/// Six BDI blocks: Zeros, Rep8, B8D1, B4D2, raw, B8D2.
+fn bdi_image() -> Vec<u8> {
+    let mut image = vec![0u8; 64]; // Zeros
+    for _ in 0..8 {
+        image.extend_from_slice(&0x0123_4567_89AB_CDEFu64.to_le_bytes()); // Rep8
+    }
+    for i in 0..8u64 {
+        image.extend_from_slice(&(0x7F3A_0000_1000u64 + 3 * i).to_le_bytes()); // B8D1
+    }
+    for j in 0..16u32 {
+        image.extend_from_slice(&(0x0010_0000u32 + 200 * j).to_le_bytes()); // B4D2
+    }
+    image.extend((0..64u32).map(|j| ((91 * j + 7) % 256) as u8)); // raw
+    for i in 0..8u64 {
+        image.extend_from_slice(&(0x7FFF_0000_0000u64 + 1000 * i).to_le_bytes()); // B8D2
+    }
+    image
+}
+
+/// Two FPC blocks hitting every word pattern, plus a 7-byte ragged tail.
+fn fpc_image() -> Vec<u8> {
+    let words: [u32; 32] = [
+        0,
+        3,
+        0xFFFF_FFFF,
+        100,
+        0xFFFF_FF80,
+        30000,
+        0xFFFF_8000,
+        0x1234_0000,
+        0x0042_0017,
+        0xABAB_ABAB,
+        0xDEAD_BEEF,
+        8,
+        127,
+        128,
+        0x7FFF_0000,
+        0xFFFF_FFF8,
+        0x0001_0001,
+        0,
+        0x0000_0005,
+        0x0000_FF00,
+        0x0032_0000,
+        0x1111_1111,
+        0x8000_0000,
+        0x0000_ABCD,
+        0xFFFF_0001,
+        42,
+        0xFFFF_FF01,
+        0x0000_8000,
+        0x7F7F_7F7F,
+        1,
+        0xC0C0_C0C0,
+        0x00FF_00FF,
+    ];
+    let mut image = words_le(&words);
+    image.extend_from_slice(&[9, 8, 7, 6, 5, 4, 3]);
+    image
+}
+
+/// The shared assertion: fixture decodes to `image` exactly, and
+/// recompressing `image` reproduces the fixture byte-for-byte.
+fn check_golden(name: &str, codec: &dyn BlockCodec, image: &[u8]) {
+    let path = fixture_path(name);
+    let recompressed = container::compress(codec, image).to_bytes();
+    if std::env::var("GOLDEN_BLESS").is_ok_and(|v| v == "1") {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &recompressed).unwrap();
+        eprintln!("blessed {name}: {} bytes", recompressed.len());
+        return;
+    }
+    let golden = std::fs::read(&path).unwrap_or_else(|e| {
+        panic!("missing fixture {path:?} ({e}); regenerate with GOLDEN_BLESS=1")
+    });
+
+    // 1. exact decode of the checked-in bytes
+    let parsed = Container::from_bytes(&golden).unwrap_or_else(|e| {
+        panic!("{name}: fixture no longer parses: {e:?}")
+    });
+    assert_eq!(parsed.decompress().unwrap(), image, "{name}: whole-image decode diverged");
+    // ...including per-block through the random-access path
+    let frame = Container::from_bytes(&golden).unwrap().into_frame().unwrap();
+    let mut buf = vec![0u8; frame.block_bytes()];
+    for i in 0..frame.n_blocks() {
+        let n = frame.read_block(i, &mut buf).unwrap();
+        let bb = frame.block_bytes();
+        assert_eq!(&buf[..n], &image[i * bb..i * bb + n], "{name}: block {i} decode diverged");
+    }
+
+    // 2. byte-identical recompression
+    if recompressed != golden {
+        let first_diff = recompressed
+            .iter()
+            .zip(golden.iter())
+            .position(|(a, b)| a != b)
+            .unwrap_or_else(|| recompressed.len().min(golden.len()));
+        panic!(
+            "{name}: wire format moved: {} bytes now vs {} in fixture, first diff at byte {} \
+             (got {:#04x?}, fixture {:#04x?})",
+            recompressed.len(),
+            golden.len(),
+            first_diff,
+            recompressed.get(first_diff),
+            golden.get(first_diff),
+        );
+    }
+}
+
+#[test]
+fn golden_gbdi_mixed() {
+    check_golden("gbdi_mixed.gbc", &gbdi_fixture_codec(), &gbdi_mixed_image());
+}
+
+#[test]
+fn golden_gbdi_ragged_tail() {
+    check_golden("gbdi_ragged.gbc", &gbdi_fixture_codec(), &gbdi_ragged_image());
+}
+
+#[test]
+fn golden_gbdi_all_raw() {
+    let codec = gbdi_allraw_codec();
+    let image = gbdi_allraw_image();
+    check_golden("gbdi_allraw.gbc", &codec, &image);
+    // the case's premise: every block really did fall back to RAW
+    let comp = codec.compress_image(&image);
+    for (i, &bits) in comp.block_bits.iter().enumerate() {
+        assert_eq!(bits, 2 + 64 * 8, "block {i} was not stored raw");
+    }
+}
+
+#[test]
+fn golden_bdi() {
+    check_golden("bdi.gbc", &Bdi { block_bytes: 64 }, &bdi_image());
+}
+
+#[test]
+fn golden_fpc() {
+    check_golden("fpc.gbc", &FpcBlock { block_bytes: 64 }, &fpc_image());
+}

@@ -1,0 +1,84 @@
+#!/usr/bin/env python3
+"""Fail CI when benchmark throughput regresses against a committed baseline.
+
+Usage:
+    check_bench_regression.py CURRENT.json BASELINE.json [--tolerance 0.20]
+
+Compares the `mib_per_s` of every result name present in BOTH files and
+exits non-zero if any current number falls more than `tolerance` below
+the baseline (default 20%, overridable via --tolerance or the
+BENCH_TOLERANCE env var). Results without throughput (null `mib_per_s`)
+and names missing from either side are reported but never fail the job.
+
+Bootstrap: a baseline carrying `"provisional": true` (the committed
+placeholder before the first real CI run) prints the comparison but
+always exits 0 — replace it with a `BENCH_throughput.json` artifact from
+a representative CI run and drop the flag to arm the gate. See
+docs/OPERATIONS.md ("Throughput regression gate").
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_results(path):
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    results = {}
+    for r in doc.get("results", []):
+        if r.get("mib_per_s") is not None:
+            results[r["name"]] = float(r["mib_per_s"])
+    return doc, results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current")
+    ap.add_argument("baseline")
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="allowed fractional regression (default 0.20)")
+    args = ap.parse_args()
+
+    import os
+    tolerance = args.tolerance
+    if tolerance is None:
+        tolerance = float(os.environ.get("BENCH_TOLERANCE", "0.20"))
+
+    cur_doc, current = load_results(args.current)
+    base_doc, baseline = load_results(args.baseline)
+    provisional = bool(base_doc.get("provisional"))
+
+    regressions = []
+    print(f"{'benchmark':<44} {'baseline':>12} {'current':>12} {'delta':>8}")
+    for name in sorted(baseline):
+        if name not in current:
+            print(f"{name:<44} {baseline[name]:>10.1f} {'missing':>12} {'--':>8}")
+            continue
+        b, c = baseline[name], current[name]
+        delta = (c - b) / b if b else 0.0
+        flag = ""
+        if c < b * (1.0 - tolerance):
+            regressions.append((name, b, c, delta))
+            flag = "  << REGRESSION"
+        print(f"{name:<44} {b:>10.1f} {c:>10.1f} {delta:>+7.1%}{flag}")
+    for name in sorted(set(current) - set(baseline)):
+        print(f"{name:<44} {'--':>12} {current[name]:>10.1f}   (new, not gated)")
+
+    if not baseline:
+        print("\nbaseline carries no throughput results; nothing to gate")
+    if provisional:
+        print("\nbaseline is marked provisional: comparison is informational only")
+        return 0
+    if regressions:
+        print(f"\n{len(regressions)} benchmark(s) regressed more than "
+              f"{tolerance:.0%} vs {args.baseline}:")
+        for name, b, c, delta in regressions:
+            print(f"  {name}: {b:.1f} -> {c:.1f} MiB/s ({delta:+.1%})")
+        return 1
+    print(f"\nno regression beyond {tolerance:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

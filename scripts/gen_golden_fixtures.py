@@ -1,0 +1,564 @@
+#!/usr/bin/env python3
+"""Generate the golden wire-format fixtures under rust/tests/golden/.
+
+This is a deliberate, minimal re-implementation of the crate's wire
+format (bit stream, block codecs, container framing) used to produce the
+checked-in fixtures that `rust/tests/golden_wire.rs` pins the Rust
+implementation against. Two independent implementations agreeing
+bit-for-bit is the point: a drift in either one fails the golden tests.
+
+The GBDI fixture images are constructed so that every word fits at most
+one table entry (asserted below), making the encoding independent of the
+encoder's search order / MRU probe tie-breaks.
+
+Normally you regenerate fixtures from the Rust side
+(`GOLDEN_BLESS=1 cargo test --test golden_wire`); this script exists so
+the fixtures can also be produced and cross-checked without a Rust
+toolchain.
+"""
+
+import os
+import sys
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "golden")
+
+MASK32 = (1 << 32) - 1
+MASK64 = (1 << 64) - 1
+
+
+# ---- bit stream (LSB-first, matches util/bits.rs) -----------------------
+
+class BitWriter:
+    def __init__(self):
+        self.bits = 0  # LSB = first bit of the stream
+        self.n = 0
+
+    def put(self, v, n):
+        assert 0 <= n <= 64
+        assert 0 <= v and (n == 64 or v < (1 << n)), f"{v} does not fit {n} bits"
+        self.bits |= v << self.n
+        self.n += n
+
+    def put_bytes(self, bs):
+        for b in bs:
+            self.put(b, 8)
+
+    def bit_len(self):
+        return self.n
+
+    def finish(self):
+        return self.bits.to_bytes((self.n + 7) // 8, "little")
+
+
+class BitReader:
+    def __init__(self, data):
+        self.v = int.from_bytes(data, "little")
+        self.total = len(data) * 8
+        self.pos = 0
+
+    def get(self, n):
+        if self.pos + n > self.total:
+            raise EOFError(f"need {n} bits at {self.pos}, have {self.total}")
+        out = (self.v >> self.pos) & ((1 << n) - 1)
+        self.pos += n
+        return out
+
+
+def varint(v):
+    out = bytearray()
+    while True:
+        b = v & 0x7F
+        v >>= 7
+        if v == 0:
+            out.append(b)
+            return bytes(out)
+        out.append(b | 0x80)
+
+
+def sext(v, bits):
+    v &= (1 << bits) - 1
+    return v - (1 << bits) if v >= (1 << (bits - 1)) else v
+
+
+def signed_width(d):
+    if d == 0:
+        return 0
+    n = 1
+    while not (-(1 << (n - 1)) <= d < (1 << (n - 1))):
+        n += 1
+    return n
+
+
+# ---- GBDI (gbdi/{table,encode}.rs) --------------------------------------
+
+GBDI_CLASSES = [0, 4, 8, 12, 16, 20, 24]
+NUM_BASES = 64
+PTR_BITS = 7  # ceil(log2(64 + 1))
+ESCAPE = NUM_BASES
+
+
+def gbdi_config_bytes(block_bytes=64):
+    out = block_bytes.to_bytes(4, "little") + bytes([4])
+    out += NUM_BASES.to_bytes(2, "little") + bytes([len(GBDI_CLASSES)])
+    out += bytes(GBDI_CLASSES)
+    return out
+
+
+def table_entries(pairs):
+    """GlobalBaseTable::new: pin (0, 8), sort, dedup keeping max width."""
+    pairs = list(pairs)
+    if not any(b == 0 for b, _ in pairs):
+        pairs.append((0, 8))
+    pairs.sort()
+    entries = []
+    for base, width in pairs:
+        if entries and entries[-1][0] == base:
+            entries[-1] = (base, max(entries[-1][1], width))
+        else:
+            entries.append((base, width))
+    return entries
+
+
+def table_bytes(entries, version):
+    out = b"GBT2" + version.to_bytes(8, "little") + bytes([4])
+    out += len(entries).to_bytes(4, "little")
+    for base, width in entries:
+        out += base.to_bytes(4, "little") + bytes([width])
+    return out
+
+
+def gbdi_fits(entries, v):
+    """All (idx, delta, width) encodings of word v; the fixtures assert
+    at most one, so search-order tie-breaks cannot move the wire."""
+    fits = []
+    for idx, (base, width) in enumerate(entries):
+        d = sext(v - base, 32)
+        if signed_width(d) <= width:
+            fits.append((idx, d, width))
+    return fits
+
+
+def gbdi_encode_block(entries, block, w):
+    if len(block) != 64:
+        w.put(0, 2)  # RAW tag
+        w.put_bytes(block)
+        return
+    words = [int.from_bytes(block[i * 4:(i + 1) * 4], "little") for i in range(16)]
+    if all(v == words[0] for v in words):
+        if words[0] == 0:
+            w.put(1, 2)  # ZERO
+        else:
+            w.put(2, 2)  # REP
+            w.put(words[0], 32)
+        return
+    plan = []
+    gbdi_bits = 2
+    for v in words:
+        fits = gbdi_fits(entries, v)
+        assert len(fits) <= 1, f"word {v:#x} fits {len(fits)} bases; fixture must be unambiguous"
+        if fits:
+            idx, d, width = fits[0]
+            gbdi_bits += PTR_BITS + width
+            if width == 0:
+                plan.append((idx, PTR_BITS))
+            else:
+                plan.append((idx | ((d + (1 << (width - 1))) << PTR_BITS), PTR_BITS + width))
+        else:
+            gbdi_bits += PTR_BITS + 32
+            plan.append((ESCAPE | (v << PTR_BITS), PTR_BITS + 32))
+    if gbdi_bits >= 2 + len(block) * 8:
+        w.put(0, 2)
+        w.put_bytes(block)
+        return
+    w.put(3, 2)  # GBDI
+    for field, bits in plan:
+        w.put(field, bits)
+
+
+def gbdi_decode_block(entries, r, out_len):
+    tag = r.get(2)
+    if tag == 0:
+        return bytes(r.get(8) for _ in range(out_len))
+    if tag == 1:
+        return bytes(out_len)
+    if tag == 2:
+        v = r.get(32)
+        assert out_len % 4 == 0
+        return v.to_bytes(4, "little") * (out_len // 4)
+    assert out_len == 64
+    out = bytearray()
+    for _ in range(16):
+        ptr = r.get(PTR_BITS)
+        if ptr == ESCAPE:
+            v = r.get(32)
+        else:
+            assert ptr < len(entries), "pointer beyond table"
+            base, width = entries[ptr]
+            if width == 0:
+                v = base
+            else:
+                d = r.get(width) - (1 << (width - 1))
+                v = (base + d) & MASK32
+        out += v.to_bytes(4, "little")
+    return bytes(out)
+
+
+# ---- BDI (baselines/bdi.rs) ---------------------------------------------
+
+# (enc id, base bytes, delta bytes) in the Rust selection-menu order
+BDI_MENU = [(2, 8, 1), (5, 4, 1), (3, 8, 2), (7, 2, 1), (6, 4, 2), (4, 8, 4)]
+
+
+def read_le(block, i, k):
+    return int.from_bytes(block[i * k:(i + 1) * k], "little")
+
+
+def bdi_sign_fits(delta, k, d):
+    return -(1 << (8 * d - 1)) <= sext(delta, 8 * k) < (1 << (8 * d - 1))
+
+
+def bdi_plan_fits(block, k, d):
+    base = None
+    for i in range(len(block) // k):
+        v = read_le(block, i, k)
+        if bdi_sign_fits(v, k, d):
+            continue
+        if base is None:
+            base = v
+        if not bdi_sign_fits((v - base) & ((1 << (8 * k)) - 1), k, d):
+            return False
+    return True
+
+
+def bdi_plan_into(block, k, d):
+    dmask = (1 << (8 * d)) - 1
+    kmask = (1 << (8 * k)) - 1
+    base = None
+    plan = []
+    for i in range(len(block) // k):
+        v = read_le(block, i, k)
+        if bdi_sign_fits(v, k, d):
+            plan.append((True, v & dmask))
+            continue
+        if base is None:
+            base = v
+        delta = (v - base) & kmask
+        assert bdi_sign_fits(delta, k, d)
+        plan.append((False, delta & dmask))
+    return (0 if base is None else base), plan
+
+
+def bdi_encode_block(block, w, block_bytes=64):
+    if len(block) == block_bytes:
+        if all(b == 0 for b in block):
+            w.put(0, 4)  # Zeros
+            return
+        if len(block) % 8 == 0:
+            first = read_le(block, 0, 8)
+            if all(read_le(block, i, 8) == first for i in range(1, len(block) // 8)):
+                w.put(1, 4)  # Rep8
+                w.put(first, 64)
+                return
+        best = None
+        for enc_id, k, d in BDI_MENU:
+            if len(block) % k != 0:
+                continue
+            n = len(block) // k
+            bits = 4 + 8 * k + n + 8 * d * n
+            if (best is None or bits < best[3]) and bdi_plan_fits(block, k, d):
+                best = (enc_id, k, d, bits)
+        if best is not None:
+            enc_id, k, d, bits = best
+            if bits < 4 + 8 * len(block):
+                base, plan = bdi_plan_into(block, k, d)
+                w.put(enc_id, 4)
+                w.put(base & ((1 << (8 * k)) - 1), 8 * k)
+                for zero, _ in plan:
+                    w.put(1 if zero else 0, 1)
+                for _, delta in plan:
+                    w.put(delta, 8 * d)
+                return
+    w.put(8, 4)  # Raw
+    w.put_bytes(block)
+
+
+def bdi_decode_block(r, out_len):
+    enc = r.get(4)
+    if enc == 0:
+        return bytes(out_len)
+    if enc == 1:
+        v = r.get(64)
+        assert out_len % 8 == 0
+        return v.to_bytes(8, "little") * (out_len // 8)
+    if enc == 8:
+        return bytes(r.get(8) for _ in range(out_len))
+    kd = {2: (8, 1), 3: (8, 2), 4: (8, 4), 5: (4, 1), 6: (4, 2), 7: (2, 1)}[enc]
+    k, d = kd
+    assert out_len % k == 0
+    n = out_len // k
+    base = r.get(8 * k)
+    mask = [r.get(1) for _ in range(n)]
+    out = bytearray()
+    for i in range(n):
+        delta = r.get(8 * d)
+        sd = sext(delta, 8 * d) & ((1 << (8 * k)) - 1)
+        v = sd if mask[i] else (base + sd) & ((1 << (8 * k)) - 1)
+        v &= (1 << (8 * k)) - 1
+        out += v.to_bytes(k, "little")
+    return bytes(out)
+
+
+# ---- FPC (baselines/fpc.rs) ---------------------------------------------
+
+def fpc_sext_fits(v, bits):
+    s = sext(v, 32)
+    return -(1 << (bits - 1)) <= s < (1 << (bits - 1))
+
+
+def fpc_encode_word(w, v):
+    if v == 0:
+        w.put(0b000, 3)
+    elif fpc_sext_fits(v, 4):
+        w.put(0b001, 3)
+        w.put(v & 0xF, 4)
+    elif fpc_sext_fits(v, 8):
+        w.put(0b010, 3)
+        w.put(v & 0xFF, 8)
+    elif fpc_sext_fits(v, 16):
+        w.put(0b011, 3)
+        w.put(v & 0xFFFF, 16)
+    elif v & 0xFFFF == 0:
+        w.put(0b100, 3)
+        w.put(v >> 16, 16)
+    elif -128 <= sext(v & 0xFFFF, 16) < 128 and -128 <= sext(v >> 16, 16) < 128:
+        w.put(0b101, 3)
+        w.put(v & 0xFF, 8)
+        w.put((v >> 16) & 0xFF, 8)
+    elif all(b == (v & 0xFF) for b in v.to_bytes(4, "little")):
+        w.put(0b110, 3)
+        w.put(v & 0xFF, 8)
+    else:
+        w.put(0b111, 3)
+        w.put(v, 32)
+
+
+def fpc_decode_word(r):
+    p = r.get(3)
+    if p == 0b000:
+        return 0
+    if p == 0b001:
+        return sext(r.get(4), 4) & MASK32
+    if p == 0b010:
+        return sext(r.get(8), 8) & MASK32
+    if p == 0b011:
+        return sext(r.get(16), 16) & MASK32
+    if p == 0b100:
+        return r.get(16) << 16
+    if p == 0b101:
+        lo = sext(r.get(8), 8) & 0xFFFF
+        hi = sext(r.get(8), 8) & 0xFFFF
+        return lo | (hi << 16)
+    if p == 0b110:
+        b = r.get(8)
+        return b | (b << 8) | (b << 16) | (b << 24)
+    return r.get(32)
+
+
+def fpc_encode_block(block, w):
+    words = len(block) // 4
+    for i in range(words):
+        fpc_encode_word(w, read_le(block, i, 4))
+    w.put_bytes(block[words * 4:])
+
+
+def fpc_decode_block(r, out_len):
+    words = out_len // 4
+    out = bytearray()
+    for _ in range(words):
+        out += fpc_decode_word(r).to_bytes(4, "little")
+    for _ in range(out_len - words * 4):
+        out.append(r.get(8))
+    return bytes(out)
+
+
+# ---- container framing (container.rs) -----------------------------------
+
+def compress_image(encode_block, image, block_bytes=64):
+    w = BitWriter()
+    block_bits = []
+    for off in range(0, len(image), block_bytes):
+        before = w.bit_len()
+        encode_block(image[off:off + block_bytes], w)
+        block_bits.append(w.bit_len() - before)
+    return w.finish(), block_bits
+
+
+def container_bytes(codec_id, config, table, image_len, block_bits, payload,
+                    block_bytes=64):
+    out = bytearray(b"GBC1")
+    out.append(codec_id)
+    out.append(1 if table is not None else 0)
+    out += len(config).to_bytes(2, "little")
+    out += config
+    if table is not None:
+        out += table
+    out += image_len.to_bytes(8, "little")
+    out += block_bytes.to_bytes(4, "little")
+    out += (0).to_bytes(4, "little")  # chunk_blocks: serial stream
+    out += len(block_bits).to_bytes(4, "little")
+    for b in block_bits:
+        out += varint(b)
+    out += payload
+    return bytes(out)
+
+
+# ---- fixture images (mirrored in rust/tests/golden_wire.rs) -------------
+
+def words_le(words):
+    return b"".join((v & MASK32).to_bytes(4, "little") for v in words)
+
+
+def gbdi_mixed_image():
+    words = []
+    words += [900 + 7 * i for i in range(16)]
+    words += [0] * 16
+    words += [0xDEADBEEF] * 16
+    words += [(0x10000000 + i * 0x01234567) & MASK32 for i in range(16)]
+    words += [(1 << 20) - 15000 + 1234 * i for i in range(16)]
+    words += [1000 + i for i in range(12)] + [0xA0000000 + i for i in range(12, 16)]
+    words += [[0, 1000, 1 << 20][i % 3] for i in range(16)]
+    words += [1000 - i for i in range(16)]
+    return words_le(words)
+
+
+def gbdi_ragged_image():
+    image = words_le([900 + 7 * i for i in range(16)])
+    image += words_le([0] * 16)
+    image += bytes((3 * j + 1) % 256 for j in range(21))
+    return image
+
+
+def gbdi_allraw_image():
+    return bytes((37 * j + 11) % 256 for j in range(256))
+
+
+def bdi_image():
+    image = bytes(64)
+    image += (0x0123456789ABCDEF).to_bytes(8, "little") * 8
+    image += b"".join((0x7F3A00001000 + 3 * i).to_bytes(8, "little") for i in range(8))
+    image += b"".join((0x00100000 + 200 * j).to_bytes(4, "little") for j in range(16))
+    image += bytes((91 * j + 7) % 256 for j in range(64))
+    image += b"".join((0x7FFF00000000 + 1000 * i).to_bytes(8, "little") for i in range(8))
+    return image
+
+
+FPC_WORDS = [
+    0, 3, 0xFFFFFFFF, 100, 0xFFFFFF80, 30000, 0xFFFF8000, 0x12340000,
+    0x00420017, 0xABABABAB, 0xDEADBEEF, 8, 127, 128, 0x7FFF0000, 0xFFFFFFF8,
+    0x00010001, 0, 0x00000005, 0x0000FF00, 0x00320000, 0x11111111,
+    0x80000000, 0x0000ABCD, 0xFFFF0001, 42, 0xFFFFFF01, 0x00008000,
+    0x7F7F7F7F, 1, 0xC0C0C0C0, 0x00FF00FF,
+]
+
+
+def fpc_image():
+    return words_le(FPC_WORDS) + bytes([9, 8, 7, 6, 5, 4, 3])
+
+
+# ---- assembly + self-verification ---------------------------------------
+
+def verify(decode_block, payload, block_bits, image, block_bytes=64):
+    """Decode the payload per block and check bytes + per-block framing."""
+    r = BitReader(payload)
+    off = 0
+    for i, bits in enumerate(block_bits):
+        before = r.pos
+        out_len = min(block_bytes, len(image) - off)
+        got = decode_block(r, out_len)
+        assert got == image[off:off + out_len], f"block {i} decode mismatch"
+        assert r.pos - before == bits, f"block {i}: consumed {r.pos - before}, framed {bits}"
+        off += out_len
+    assert off == len(image)
+    assert len(payload) == (sum(block_bits) + 7) // 8, "payload length vs framing"
+
+
+def build_gbdi(name, pairs, version, image):
+    entries = table_entries(pairs)
+    payload, block_bits = compress_image(
+        lambda b, w: gbdi_encode_block(entries, b, w), image)
+    verify(lambda r, n: gbdi_decode_block(entries, r, n), payload, block_bits, image)
+    return name, container_bytes(
+        1, gbdi_config_bytes(), table_bytes(entries, version),
+        len(image), block_bits, payload)
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="Generate + cross-verify the golden wire fixtures "
+                    "under rust/tests/golden/ (overwrites them).")
+    ap.add_argument("--check", action="store_true",
+                    help="verify the checked-in fixtures match instead of rewriting them")
+    args = ap.parse_args()
+
+    fixtures = [
+        build_gbdi("gbdi_mixed.gbc", [(1000, 8), (1 << 20, 16)], 7, gbdi_mixed_image()),
+        build_gbdi("gbdi_ragged.gbc", [(1000, 8), (1 << 20, 16)], 7, gbdi_ragged_image()),
+        build_gbdi("gbdi_allraw.gbc", [(0, 8)], 3, gbdi_allraw_image()),
+    ]
+    # the all-raw case's premise: every block fell back to RAW
+    image = gbdi_allraw_image()
+    entries = table_entries([(0, 8)])
+    _, bits = compress_image(lambda b, w: gbdi_encode_block(entries, b, w), image)
+    assert all(b == 2 + 512 for b in bits), f"all-raw fixture not all raw: {bits}"
+
+    image = bdi_image()
+    payload, block_bits = compress_image(bdi_encode_block, image)
+    verify(bdi_decode_block, payload, block_bits, image)
+    fixtures.append(("bdi.gbc", container_bytes(
+        2, (64).to_bytes(4, "little"), None, len(image), block_bits, payload)))
+    # coverage premise: the six intended encodings, in order
+    r = BitReader(payload)
+    seen = []
+    for b in block_bits:
+        at = r.pos
+        seen.append(r.get(4))
+        r.pos = at + b
+    assert seen == [0, 1, 2, 6, 8, 3], f"bdi block encodings moved: {seen}"
+
+    image = fpc_image()
+    payload, block_bits = compress_image(fpc_encode_block, image)
+    verify(fpc_decode_block, payload, block_bits, image)
+    fixtures.append(("fpc.gbc", container_bytes(
+        3, (64).to_bytes(4, "little"), None, len(image), block_bits, payload)))
+
+    if args.check:
+        bad = 0
+        for name, data in fixtures:
+            path = os.path.join(OUT_DIR, name)
+            try:
+                with open(path, "rb") as f:
+                    on_disk = f.read()
+            except FileNotFoundError:
+                print(f"MISSING {path}")
+                bad += 1
+                continue
+            if on_disk == data:
+                print(f"ok {path} ({len(data)} bytes)")
+            else:
+                print(f"MISMATCH {path}: {len(on_disk)} bytes on disk, {len(data)} generated")
+                bad += 1
+        return 1 if bad else 0
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    for name, data in fixtures:
+        path = os.path.join(OUT_DIR, name)
+        with open(path, "wb") as f:
+            f.write(data)
+        print(f"wrote {path} ({len(data)} bytes)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
