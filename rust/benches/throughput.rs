@@ -10,9 +10,16 @@
 //! LUT kernel (the codec's hot path) and the scalar reference decoder
 //! are timed on that block, so the JSON records the kernel speedup.
 //!
+//! A per-ISA ablation then re-decodes one image under **every SIMD
+//! backend this host supports** (forced through the dispatch override)
+//! and emits `speedup/<isa>-vs-scalar` metrics; the JSON is tagged with
+//! the ISA that served the main measurements, which the regression gate
+//! checks before comparing runs.
+//!
 //! `cargo bench --bench throughput`
 
 use gbdi::gbdi::{analyze, decode, BlockMode, GbdiCodec, GbdiConfig};
+use gbdi::simd::{self, Isa};
 use gbdi::util::bench::Bencher;
 use gbdi::util::bits::BitReader;
 use gbdi::workloads;
@@ -89,6 +96,51 @@ fn main() {
         decode::decompress_block(&mut r, &table, &cfg, &mut out).unwrap();
         out[0]
     });
+    // -- per-ISA ablation: the same image decoded under every backend
+    // this host supports, forced through the dispatch override. Records
+    // absolute rates per ISA plus speedup-vs-forced-scalar ratios (the
+    // number ISSUE acceptance gates on).
+    println!("\n-- per-ISA decode ablation --");
+    let mut rates: Vec<(Isa, f64)> = Vec::new();
+    for &isa in Isa::all() {
+        if !isa.supported() {
+            continue;
+        }
+        simd::force(Some(isa)).expect("forcing a supported ISA cannot fail");
+        let restored = decode::decompress_image(&comp).expect("decode under forced ISA");
+        assert_eq!(restored, img, "reconstruction under {}", isa.name());
+        let r = b.bench(
+            &format!("decompress/isa/{}", isa.name()),
+            Some(img.len() as u64),
+            || decode::decompress_image(&comp).unwrap(),
+        );
+        rates.push((isa, r.mib_per_s().unwrap()));
+    }
+    simd::force(None).expect("clearing the ISA override cannot fail");
+    let scalar_rate = rates
+        .iter()
+        .find(|(i, _)| *i == Isa::Scalar)
+        .map(|&(_, r)| r)
+        .expect("scalar backend always runs");
+    let mut best = (Isa::Scalar, scalar_rate);
+    for &(isa, rate) in &rates {
+        b.metric(&format!("speedup/{}-vs-scalar", isa.name()), rate / scalar_rate);
+        if rate > best.1 {
+            best = (isa, rate);
+        }
+    }
+    b.metric("speedup/best-vs-scalar", best.1 / scalar_rate);
+    println!(
+        "best backend: {} ({:.1} MiB/s, {:.2}x scalar)",
+        best.0.name(),
+        best.1,
+        best.1 / scalar_rate
+    );
+    // which ISA served the (un-forced) measurements above — the
+    // regression gate refuses to compare runs tagged differently
+    b.tag("isa", simd::active().isa.name());
+    b.tag("isa_best", Isa::detect_best().name());
+
     std::fs::create_dir_all("target").ok();
     b.write_csv("target/throughput.csv").ok();
     println!("\ncsv: target/throughput.csv");

@@ -86,30 +86,45 @@ fn sign_fits(delta: u64, k: usize, d: usize) -> bool {
     sd >= -bias && sd < bias
 }
 
-impl Bdi {
-    /// Feasibility scan for the (k, d) encoding: every word must fit
-    /// against either the zero base or the block base. Plan-free — the
-    /// selection loop runs this for the whole encoding menu without
-    /// materializing anything.
-    fn plan_fits(block: &[u8], k: usize, d: usize) -> bool {
-        let n = block.len() / k;
-        let kbits = 8 * k as u32;
-        let mut base: Option<u64> = None;
-        for i in 0..n {
-            let v = read_le(block, i, k);
-            if sign_fits(v, k, d) {
-                continue; // zero base
-            }
-            let b = *base.get_or_insert(v);
-            if !sign_fits(v.wrapping_sub(b) & mask_bits(kbits), k, d) {
-                return false;
-            }
-        }
-        true
-    }
+/// Feasibility scan for the (k, d) encoding: every word must fit
+/// against either the zero base or the block base (the first word that
+/// misses the zero base). Plan-free — the selection loop runs this for
+/// the whole encoding menu without materializing anything. This is the
+/// scalar reference the SIMD kernels ([`crate::simd::Kernels::bdi_fits`])
+/// are differentially tested against.
+pub(crate) fn plan_fits(block: &[u8], k: usize, d: usize) -> bool {
+    plan_fits_from(block, k, d, 0, None)
+}
 
+/// [`plan_fits`] resumed from word index `start` with carried base
+/// state — the scalar tail every vector kernel falls back to after its
+/// full-register chunks (`base` is the block base if a preceding word
+/// already latched one).
+pub(crate) fn plan_fits_from(
+    block: &[u8],
+    k: usize,
+    d: usize,
+    start: usize,
+    mut base: Option<u64>,
+) -> bool {
+    let n = block.len() / k;
+    let kbits = 8 * k as u32;
+    for i in start..n {
+        let v = read_le(block, i, k);
+        if sign_fits(v, k, d) {
+            continue; // zero base
+        }
+        let b = *base.get_or_insert(v);
+        if !sign_fits(v.wrapping_sub(b) & mask_bits(kbits), k, d) {
+            return false;
+        }
+    }
+    true
+}
+
+impl Bdi {
     /// Materialize the per-word (zero-base?, delta) plan for an encoding
-    /// [`Self::plan_fits`] already accepted, into a caller-owned buffer
+    /// [`plan_fits`] already accepted, into a caller-owned buffer
     /// (cleared first). Returns the block base — or `None` if the
     /// encoding does not actually fit, so a future divergence from the
     /// feasibility scan degrades to the raw fallback instead of emitting
@@ -153,20 +168,17 @@ impl Bdi {
     /// [`crate::codec::Scratch`]-aware hot path: zero allocations once
     /// the buffer reaches its steady-state size).
     fn encode_block_with(&self, block: &[u8], w: &mut BitWriter, plan: &mut Vec<(bool, u64)>) {
+        let kernels = crate::simd::active();
         // fast paths
         if block.len() == self.block_bytes {
-            if block.iter().all(|&b| b == 0) {
+            if (kernels.all_zero)(block) {
                 w.put(Enc::Zeros as u64, 4);
                 return;
             }
-            if block.len() % 8 == 0 {
-                let first = read_le(block, 0, 8);
-                let n = block.len() / 8;
-                if (1..n).all(|i| read_le(block, i, 8) == first) {
-                    w.put(Enc::Rep8 as u64, 4);
-                    w.put(first, 64);
-                    return;
-                }
+            if block.len() % 8 == 0 && (kernels.rep_words)(block, 8) {
+                w.put(Enc::Rep8 as u64, 4);
+                w.put(read_le(block, 0, 8), 64);
+                return;
             }
             // pick the smallest fitting delta encoding: one plan-free
             // feasibility pass over the menu, then materialize only the
@@ -178,7 +190,7 @@ impl Bdi {
                     continue;
                 }
                 let bits = Self::enc_bits(block.len(), k, d);
-                if best.map_or(true, |(_, bb)| bits < bb) && Self::plan_fits(block, k, d) {
+                if best.map_or(true, |(_, bb)| bits < bb) && (kernels.bdi_fits)(block, k, d) {
                     best = Some((enc, bits));
                 }
             }

@@ -46,6 +46,22 @@ const W_INVALID: u32 = u32::MAX - 1;
 pub struct DecodeLut {
     base: Box<[u64]>,
     width: Box<[u32]>,
+    /// Derived per-pointer tables for the two-phase SIMD decode (W32
+    /// only; all three empty when ineligible). Indexed by the on-wire
+    /// pointer like `base`/`width`:
+    ///
+    /// * `step32[p]` — total bits the word's fused field occupies
+    ///   (pointer + delta/outlier payload); **0 marks an invalid
+    ///   pointer**, the rejection the reference decoder raises.
+    /// * `mask32[p]` — mask extracting the payload bits that follow the
+    ///   pointer (0 for exact-hit bases, `u32::MAX` for outliers).
+    /// * `adj32[p]` — additive constant folding the base and the
+    ///   offset-binary bias: the decoded word is
+    ///   `adj32[p].wrapping_add(raw)`, which the apply kernel runs four
+    ///   or eight lanes at a time.
+    step32: Box<[u32]>,
+    mask32: Box<[u32]>,
+    adj32: Box<[u32]>,
     ptr_bits: u32,
     word_size: WordSize,
     block_bytes: usize,
@@ -80,9 +96,13 @@ impl DecodeLut {
             width[i] = e.width;
         }
         width[config.outlier_code() as usize] = W_OUTLIER;
+        let (step32, mask32, adj32) = build_w32_tables(&base, &width, ptr_bits, config.word_size);
         DecodeLut {
             base,
             width,
+            step32,
+            mask32,
+            adj32,
             ptr_bits,
             word_size: config.word_size,
             block_bytes: config.block_bytes,
@@ -91,12 +111,82 @@ impl DecodeLut {
     }
 }
 
+/// Largest `words_per_block` the two-phase SIMD decode handles (its
+/// phase-1 scratch lives on the stack). Default GBDI blocks are 16
+/// words; 256 covers 1 KiB W32 blocks. Larger configs fall back to the
+/// reference loop.
+const SIMD_MAX_WORDS: usize = 256;
+
+/// Derive the fused `step32`/`mask32`/`adj32` tables (see [`DecodeLut`])
+/// for W32 tables. Every delta width is at most 32 and `ptr_bits <= 13`,
+/// so each fused field fits a single 57-bit `peek` — one refill serves
+/// pointer *and* payload for every word class, including outliers.
+/// Returns empty tables for W64 (wide fields can exceed the peek window).
+fn build_w32_tables(
+    base: &[u64],
+    width: &[u32],
+    ptr_bits: u32,
+    word_size: WordSize,
+) -> (Box<[u32]>, Box<[u32]>, Box<[u32]>) {
+    let widths_fused = width
+        .iter()
+        .all(|&w| w <= 32 || w == W_OUTLIER || w == W_INVALID);
+    if word_size != WordSize::W32 || !widths_fused || ptr_bits + 32 > 57 {
+        let empty = || Vec::new().into_boxed_slice();
+        return (empty(), empty(), empty());
+    }
+    let mut step = Vec::with_capacity(width.len());
+    let mut mask = Vec::with_capacity(width.len());
+    let mut adj = Vec::with_capacity(width.len());
+    for (&b, &w) in base.iter().zip(width.iter()) {
+        let (s, m, a) = match w {
+            W_INVALID => (0, 0, 0),
+            W_OUTLIER => (ptr_bits + 32, u32::MAX, 0),
+            0 => (ptr_bits, 0, b as u32),
+            w => (
+                ptr_bits + w,
+                u32::MAX >> (32 - w),
+                // fold the offset-binary bias -2^(w-1) into the base
+                (b as u32).wrapping_sub(1u32 << (w - 1)),
+            ),
+        };
+        step.push(s);
+        mask.push(m);
+        adj.push(a);
+    }
+    (step.into_boxed_slice(), mask.into_boxed_slice(), adj.into_boxed_slice())
+}
+
 /// Decode one block from `r` into `out` through a prebuilt [`DecodeLut`]
 /// — the allocation-free hot path behind
 /// [`BlockCodec::decompress_block`](crate::codec::BlockCodec::decompress_block)
 /// for GBDI. Exactly `out.len()` bytes are reconstructed; pass a short
 /// slice for ragged tail blocks.
+///
+/// Dispatches through the active SIMD kernel set
+/// ([`crate::simd::active`]); use [`decompress_block_lut_with`] to pin a
+/// specific backend (differential tests, per-ISA benches).
 pub fn decompress_block_lut(r: &mut BitReader, lut: &DecodeLut, out: &mut [u8]) -> Result<()> {
+    decompress_block_lut_with(r, lut, out, crate::simd::active())
+}
+
+/// [`decompress_block_lut`] with an explicit kernel vtable.
+///
+/// W32 GBDI payloads run a two-phase decode when `kernels` is a vector
+/// backend: a serial branch-light scan splits the (inherently
+/// sequential) bit stream into per-word `(pointer, raw payload)` pairs
+/// using the fused `step32`/`mask32` tables, then the backend's apply
+/// kernel reconstructs words in parallel as `adj32[ptr] + raw`. The
+/// scan performs the **same `peek`/`consume` sequence** as the
+/// reference loop below, so truncation and bad-pointer corruption
+/// classify identically (pinned by the differential tests). The scalar
+/// backend, W64 tables, and oversized blocks take the reference loop.
+pub fn decompress_block_lut_with(
+    r: &mut BitReader,
+    lut: &DecodeLut,
+    out: &mut [u8],
+    kernels: &crate::simd::Kernels,
+) -> Result<()> {
     let corrupt = |what: &str| Error::Corrupt(format!("block: {what}"));
     let tag = r.get(2).map_err(|_| corrupt("missing tag"))?;
     let ws = lut.word_size;
@@ -128,6 +218,12 @@ pub fn decompress_block_lut(r: &mut BitReader, lut: &DecodeLut, out: &mut [u8]) 
         BlockMode::Gbdi => {
             if out.len() != lut.block_bytes {
                 return Err(corrupt("gbdi block with ragged length"));
+            }
+            if kernels.isa != crate::simd::Isa::Scalar
+                && !lut.step32.is_empty()
+                && lut.words_per_block <= SIMD_MAX_WORDS
+            {
+                return gbdi_payload_simd(r, lut, out, kernels);
             }
             let ptr_bits = lut.ptr_bits;
             let word_bits = ws.bits();
@@ -172,6 +268,47 @@ pub fn decompress_block_lut(r: &mut BitReader, lut: &DecodeLut, out: &mut [u8]) 
             }
         }
     }
+    Ok(())
+}
+
+/// Two-phase GBDI payload decode (W32 fast path). Phase 1 is the
+/// serial field scan — each field's bit position depends on every
+/// previous field's width, so this part cannot vectorize, but the LUT
+/// collapses it to one `peek`, two table loads, and one `consume` per
+/// word with a single unpredictable branch (the corrupt-pointer
+/// rejection). Phase 2 — the base gather, bias add, and byte store —
+/// is data-parallel and runs through the backend's apply kernel.
+///
+/// Scratch lives on the stack: this path stays allocation-free (pinned
+/// by `tests/alloc_counting.rs`).
+fn gbdi_payload_simd(
+    r: &mut BitReader,
+    lut: &DecodeLut,
+    out: &mut [u8],
+    kernels: &crate::simd::Kernels,
+) -> Result<()> {
+    let corrupt = |what: &str| Error::Corrupt(format!("block: {what}"));
+    let ptr_bits = lut.ptr_bits;
+    let idx_mask = lut.width.len() - 1;
+    let n = lut.words_per_block;
+    debug_assert!(n <= SIMD_MAX_WORDS && out.len() == 4 * n);
+    let mut ptrs = [0u32; SIMD_MAX_WORDS];
+    let mut raws = [0u32; SIMD_MAX_WORDS];
+    for (p, raw) in ptrs[..n].iter_mut().zip(raws[..n].iter_mut()) {
+        // Same refill discipline as the reference loop: peek up to 57
+        // bits (pointer + widest payload always fit), classify via the
+        // fused tables, consume the whole field in one step.
+        let peeked = r.peek(57);
+        let ptr = peeked as usize & idx_mask;
+        let step = lut.step32[ptr];
+        if step == 0 {
+            return Err(corrupt("base pointer beyond table"));
+        }
+        *p = ptr as u32;
+        *raw = (peeked >> ptr_bits) as u32 & lut.mask32[ptr];
+        r.consume(step).map_err(|_| corrupt("truncated gbdi field"))?;
+    }
+    (kernels.gbdi_apply_w32)(&lut.adj32, &ptrs[..n], &raws[..n], out);
     Ok(())
 }
 

@@ -178,46 +178,35 @@ impl GbdiCodec {
             return (BlockMode::Raw, (w.bit_len() - start) as u32);
         }
         let n_words = self.config.words_per_block();
+        // One dispatch resolution per block, shared by the ZERO/REP
+        // scans and every per-word base search below.
+        let kernels = crate::simd::active();
 
-        // Single pass: load the words once (stack buffer for cache-line
-        // sized blocks), detecting ZERO and REP on the way.
+        // ZERO/REP classification through the dispatched block scans.
+        // Config validation guarantees `block_bytes % word bytes == 0`,
+        // the `rep_words` precondition. ZERO first: an all-zero block
+        // satisfies both, and ZERO is the cheaper emission.
+        if (kernels.all_zero)(block) {
+            w.put(BlockMode::Zero as u64, 2);
+            stats.zero_blocks += 1;
+            return (BlockMode::Zero, (w.bit_len() - start) as u32);
+        }
+        if (kernels.rep_words)(block, ws.bytes()) {
+            w.put(BlockMode::Rep as u64, 2);
+            self.put_word(w, read_word(block, 0, ws));
+            stats.rep_blocks += 1;
+            return (BlockMode::Rep, (w.bit_len() - start) as u32);
+        }
+
+        // Load the words once (stack buffer for cache-line sized blocks).
         let mut words_buf = [0u64; 64];
         let mut words_big: Vec<u64> = Vec::new(); // oversized-block path only
         let words: &[u64] = if n_words <= 64 {
-            let mut rep = true;
-            let first = read_word(block, 0, ws);
-            for i in 0..n_words {
-                let v = read_word(block, i, ws);
-                words_buf[i] = v;
-                rep &= v == first;
-            }
-            if rep {
-                if first == 0 {
-                    w.put(BlockMode::Zero as u64, 2);
-                    stats.zero_blocks += 1;
-                    return (BlockMode::Zero, (w.bit_len() - start) as u32);
-                }
-                w.put(BlockMode::Rep as u64, 2);
-                self.put_word(w, first);
-                stats.rep_blocks += 1;
-                return (BlockMode::Rep, (w.bit_len() - start) as u32);
+            for (i, slot) in words_buf[..n_words].iter_mut().enumerate() {
+                *slot = read_word(block, i, ws);
             }
             &words_buf[..n_words]
         } else {
-            // oversized blocks: keep the two-pass path (cold config)
-            if block.iter().all(|&b| b == 0) {
-                w.put(BlockMode::Zero as u64, 2);
-                stats.zero_blocks += 1;
-                return (BlockMode::Zero, (w.bit_len() - start) as u32);
-            }
-            let first = read_word(block, 0, ws);
-            if (1..n_words).all(|i| read_word(block, i, ws) == first) {
-                w.put(BlockMode::Rep as u64, 2);
-                self.put_word(w, first);
-                stats.rep_blocks += 1;
-                return (BlockMode::Rep, (w.bit_len() - start) as u32);
-            }
-            words_big.clear();
             words_big.extend((0..n_words).map(|i| read_word(block, i, ws)));
             &words_big[..]
         };
@@ -232,7 +221,7 @@ impl GbdiCodec {
         let mut delta_bits = 0u64;
         let mut mru: Option<u32> = None;
         for &v in words {
-            match self.table.best_base_hinted(v, mru) {
+            match self.table.best_base_hinted_with(v, mru, kernels) {
                 Some((idx, delta, width)) => {
                     mru = Some(idx as u32);
                     gbdi_bits += (ptr_bits + width) as u64;
@@ -363,14 +352,14 @@ impl BlockCodec for GbdiCodec {
             return 2 + block.len() as u64 * 8;
         }
         let ws = self.config.word_size;
-        if block.iter().all(|&b| b == 0) {
+        let kernels = crate::simd::active();
+        if (kernels.all_zero)(block) {
             return 2;
         }
-        let n_words = self.config.words_per_block();
-        let first = read_word(block, 0, ws);
-        if (1..n_words).all(|i| read_word(block, i, ws) == first) {
+        if (kernels.rep_words)(block, ws.bytes()) {
             return 2 + ws.bits() as u64;
         }
+        let n_words = self.config.words_per_block();
         let ptr_bits = self.config.base_ptr_bits() as u64;
         let mut bits = 2u64;
         // same MRU hint chain as the encoder, so the estimate walks the
@@ -379,7 +368,7 @@ impl BlockCodec for GbdiCodec {
         for i in 0..n_words {
             let v = read_word(block, i, ws);
             bits += ptr_bits
-                + match self.table.best_base_hinted(v, mru) {
+                + match self.table.best_base_hinted_with(v, mru, kernels) {
                     Some((idx, _, width)) => {
                         mru = Some(idx as u32);
                         width as u64

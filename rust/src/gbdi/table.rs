@@ -48,23 +48,39 @@ pub struct GlobalBaseTable {
     entries: Vec<BaseEntry>,
     /// Largest width class present (scan radius for the encoder search).
     max_width: u32,
-    /// W32 fast path, CSR layout: `bucket_off[b]..bucket_off[b+1]` slices
-    /// `bucket_cands` with the candidate entry indices for bucket `b`,
-    /// sorted by (width, base). Deterministic from `entries`, rebuilt on
-    /// deserialize; empty for W64 tables. Indices are u32 so oversized
-    /// tables (> u16::MAX entries) keep the fast path instead of silently
-    /// falling back to the linear scan.
-    bucket_off: Vec<u32>,
-    bucket_cands: Vec<u32>,
+    /// W32 fast-path bucket index (SoA CSR; empty for W64 tables).
+    /// Deterministic from `entries`, rebuilt on deserialize. Indices are
+    /// u32 so oversized tables (> u16::MAX entries) keep the fast path
+    /// instead of silently falling back to the linear scan.
+    buckets: BucketIndex,
     /// Monotonic version assigned by the coordinator (0 = ad-hoc).
     pub version: u64,
     /// Word granularity the table was built for.
     pub word_size: WordSize,
 }
 
-fn build_buckets(entries: &[BaseEntry], word_size: WordSize) -> (Vec<u32>, Vec<u32>) {
+/// The W32 bucket index in structure-of-arrays form, shaped for the
+/// SIMD first-fit kernel ([`crate::simd::Kernels::first_fit`]):
+/// `off[b]..off[b+1]` slices the candidate arrays for bucket `b`,
+/// sorted by (width, base) so the first fit is a minimal-width fit.
+/// Per candidate, `lo`/`span` hold its coverage interval as a wrapped
+/// unsigned range — `v` fits candidate `i` iff
+/// `(v - lo[i]) mod 2^32 <= span[i]`, the exact lane test the kernels
+/// run — `cands` maps back to the entry index (wire-visible: it becomes
+/// the base pointer), and `width` mirrors the entry widths for the
+/// hinted search's strictly-narrower prefix cut.
+#[derive(Debug, Clone, PartialEq, Default)]
+struct BucketIndex {
+    off: Vec<u32>,
+    cands: Vec<u32>,
+    lo: Vec<u32>,
+    span: Vec<u32>,
+    width: Vec<u32>,
+}
+
+fn build_buckets(entries: &[BaseEntry], word_size: WordSize) -> BucketIndex {
     if word_size != WordSize::W32 {
-        return (Vec::new(), Vec::new());
+        return BucketIndex::default();
     }
     debug_assert!(entries.len() <= u32::MAX as usize);
     let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); NUM_BUCKETS];
@@ -84,16 +100,37 @@ fn build_buckets(entries: &[BaseEntry], word_size: WordSize) -> (Vec<u32>, Vec<u
             buckets[((b0 + j) as usize) & (NUM_BUCKETS - 1)].push(i as u32);
         }
     }
-    // flatten to CSR, candidates width-sorted for early exit
-    let mut off = Vec::with_capacity(NUM_BUCKETS + 1);
-    let mut cands = Vec::with_capacity(buckets.iter().map(|b| b.len()).sum());
-    off.push(0u32);
+    // flatten to SoA CSR, candidates width-sorted for early exit
+    let total = buckets.iter().map(|b| b.len()).sum();
+    let mut idx = BucketIndex {
+        off: Vec::with_capacity(NUM_BUCKETS + 1),
+        cands: Vec::with_capacity(total),
+        lo: Vec::with_capacity(total),
+        span: Vec::with_capacity(total),
+        width: Vec::with_capacity(total),
+    };
+    idx.off.push(0u32);
     for b in &mut buckets {
         b.sort_by_key(|&i| (entries[i as usize].width, entries[i as usize].base));
-        cands.extend_from_slice(b);
-        off.push(cands.len() as u32);
+        for &i in b.iter() {
+            let e = entries[i as usize];
+            // the same coverage interval as above, in the wrapped-range
+            // form the fit test consumes: w = 0 covers exactly the base,
+            // w >= 1 covers [base - 2^(w-1), base + 2^(w-1) - 1]
+            let (lo, span) = if e.width == 0 {
+                (e.base as u32, 0u32)
+            } else {
+                let half = 1u32 << (e.width - 1);
+                ((e.base as u32).wrapping_sub(half), half.wrapping_mul(2).wrapping_sub(1))
+            };
+            idx.cands.push(i);
+            idx.lo.push(lo);
+            idx.span.push(span);
+            idx.width.push(e.width);
+        }
+        idx.off.push(idx.cands.len() as u32);
     }
-    (off, cands)
+    idx
 }
 
 impl GlobalBaseTable {
@@ -116,8 +153,8 @@ impl GlobalBaseTable {
             }
         }
         let max_width = entries.iter().map(|e| e.width).max().unwrap_or(0);
-        let (bucket_off, bucket_cands) = build_buckets(&entries, word_size);
-        GlobalBaseTable { entries, max_width, bucket_off, bucket_cands, version, word_size }
+        let buckets = build_buckets(&entries, word_size);
+        GlobalBaseTable { entries, max_width, buckets, version, word_size }
     }
 
     /// Build a table from a selector's [`Selection`] — the one seam every
@@ -225,8 +262,19 @@ impl GlobalBaseTable {
     /// against [`Self::best_base_exhaustive`] by property tests).
     #[inline]
     pub fn best_base(&self, v: u64) -> Option<(usize, i64, u32)> {
-        if !self.bucket_off.is_empty() {
-            return self.best_base_bucketed(v);
+        self.best_base_with(v, crate::simd::active())
+    }
+
+    /// [`Self::best_base`] with an explicit kernel vtable — the encode
+    /// loops resolve dispatch once per block instead of once per word.
+    #[inline]
+    pub(crate) fn best_base_with(
+        &self,
+        v: u64,
+        kernels: &crate::simd::Kernels,
+    ) -> Option<(usize, i64, u32)> {
+        if !self.buckets.off.is_empty() {
+            return self.best_base_bucketed(v, kernels);
         }
         self.best_base_scan(v)
     }
@@ -245,8 +293,20 @@ impl GlobalBaseTable {
     /// **this** table (panics on an out-of-range index).
     #[inline]
     pub fn best_base_hinted(&self, v: u64, hint: Option<u32>) -> Option<(usize, i64, u32)> {
+        self.best_base_hinted_with(v, hint, crate::simd::active())
+    }
+
+    /// [`Self::best_base_hinted`] with an explicit kernel vtable (see
+    /// [`Self::best_base_with`]).
+    #[inline]
+    pub(crate) fn best_base_hinted_with(
+        &self,
+        v: u64,
+        hint: Option<u32>,
+        kernels: &crate::simd::Kernels,
+    ) -> Option<(usize, i64, u32)> {
         if let Some(h) = hint {
-            if !self.bucket_off.is_empty() {
+            if !self.buckets.off.is_empty() {
                 let e = self.entries[h as usize];
                 let d = wrapping_delta(v, e.base, self.word_size);
                 if e.fits(d) {
@@ -254,38 +314,43 @@ impl GlobalBaseTable {
                         return Some((h as usize, d, 0)); // cost 0: unbeatable
                     }
                     let b = (v as u32 >> BUCKET_SHIFT) as usize;
-                    let (lo, hi) = (self.bucket_off[b] as usize, self.bucket_off[b + 1] as usize);
-                    for &i in &self.bucket_cands[lo..hi] {
-                        let c = self.entries[i as usize];
-                        if c.width >= e.width {
-                            break; // width-sorted: nothing narrower remains
-                        }
+                    let (lo, hi) = (self.buckets.off[b] as usize, self.buckets.off[b + 1] as usize);
+                    // width-sorted candidates: only the strictly-narrower
+                    // prefix can beat the hinted entry
+                    let cut = lo + self.buckets.width[lo..hi].partition_point(|&w| w < e.width);
+                    let (los, spans) = (&self.buckets.lo[lo..cut], &self.buckets.span[lo..cut]);
+                    if let Some(p) = (kernels.first_fit)(v as u32, los, spans) {
+                        let i = self.buckets.cands[lo + p] as usize;
+                        let c = self.entries[i];
                         let cd = wrapping_delta(v, c.base, self.word_size);
-                        if c.fits(cd) {
-                            return Some((i as usize, cd, c.width));
-                        }
+                        return Some((i, cd, c.width));
                     }
                     return Some((h as usize, d, e.width));
                 }
             }
         }
-        self.best_base(v)
+        self.best_base_with(v, kernels)
     }
 
-    /// W32 fast path: walk the bucket's width-sorted candidates; the
-    /// first fit is a minimal-width fit.
+    /// W32 fast path: first fit over the bucket's width-sorted coverage
+    /// intervals (vectorized through the kernel vtable); the first fit
+    /// is a minimal-width fit, and its candidate index is the base
+    /// pointer that goes on the wire.
     #[inline]
-    fn best_base_bucketed(&self, v: u64) -> Option<(usize, i64, u32)> {
+    fn best_base_bucketed(
+        &self,
+        v: u64,
+        kernels: &crate::simd::Kernels,
+    ) -> Option<(usize, i64, u32)> {
         let b = (v as u32 >> BUCKET_SHIFT) as usize;
-        let (lo, hi) = (self.bucket_off[b] as usize, self.bucket_off[b + 1] as usize);
-        for &i in &self.bucket_cands[lo..hi] {
-            let e = self.entries[i as usize];
-            let d = wrapping_delta(v, e.base, self.word_size);
-            if e.fits(d) {
-                return Some((i as usize, d, e.width));
-            }
-        }
-        None
+        let (lo, hi) = (self.buckets.off[b] as usize, self.buckets.off[b + 1] as usize);
+        let (los, spans) = (&self.buckets.lo[lo..hi], &self.buckets.span[lo..hi]);
+        let p = (kernels.first_fit)(v as u32, los, spans)?;
+        let i = self.buckets.cands[lo + p] as usize;
+        let e = self.entries[i];
+        let d = wrapping_delta(v, e.base, self.word_size);
+        debug_assert!(e.fits(d));
+        Some((i, d, e.width))
     }
 
     /// Range-bounded sorted scan (W64 path): binary-search to the
@@ -437,8 +502,8 @@ impl GlobalBaseTable {
             return Err(Error::Corrupt("table bases not sorted/unique".into()));
         }
         let max_width = entries.iter().map(|e| e.width).max().unwrap_or(0);
-        let (bucket_off, bucket_cands) = build_buckets(&entries, word_size);
-        Ok((GlobalBaseTable { entries, max_width, bucket_off, bucket_cands, version, word_size }, need))
+        let buckets = build_buckets(&entries, word_size);
+        Ok((GlobalBaseTable { entries, max_width, buckets, version, word_size }, need))
     }
 }
 
@@ -617,7 +682,7 @@ mod tests {
         let pairs: Vec<(u64, u32)> = (0..n).map(|i| ((i as u64) << 12, 4)).collect();
         let t = GlobalBaseTable::new(pairs, WordSize::W32, 9);
         assert!(t.len() > u16::MAX as usize, "len {}", t.len());
-        assert!(!t.bucket_off.is_empty(), "fast path must survive oversized tables");
+        assert!(!t.buckets.off.is_empty(), "fast path must survive oversized tables");
         let mut rng = Rng::new(123);
         for _ in 0..500 {
             let v = if rng.chance(0.5) {

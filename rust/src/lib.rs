@@ -76,6 +76,17 @@
 //! behind the coarser [`baselines::Codec`] trait — they have no block
 //! granularity for the simulator to exploit.
 //!
+//! ## SIMD kernel dispatch
+//!
+//! The per-word hot loops — the GBDI decode apply phase, the encoder's
+//! base-candidate search, BDI's feasibility scans, and the ZERO/REP
+//! block classifiers — run through a runtime-dispatched kernel vtable
+//! ([`simd`], DESIGN.md §10): SSE2/AVX2 on x86_64, NEON on aarch64, a
+//! scalar reference everywhere. Backend choice never changes a single
+//! output bit (differentially tested per backend in
+//! `tests/simd_kernels.rs`); override it for ablation with the `--isa`
+//! CLI flag or the `GBDI_FORCE_ISA` env var.
+//!
 //! ## The base-selection engine
 //!
 //! The background analysis that decides GBDI's global bases sits behind
@@ -146,6 +157,7 @@ pub mod gbdi;
 pub mod memsim;
 pub mod report;
 pub mod runtime;
+pub mod simd;
 pub mod util;
 pub mod value;
 pub mod workloads;

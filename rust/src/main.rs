@@ -43,12 +43,14 @@ fn app() -> App {
                 .arg(Arg::req("out", "output container path"))
                 .arg(Arg::opt("codec", "gbdi", "block codec: gbdi|bdi|fpc"))
                 .arg(Arg::opt("threads", "0", "compression threads (0 = all cores)"))
-                .arg(Arg::opt("bases", "64", "number of global bases (gbdi)")),
+                .arg(Arg::opt("bases", "64", "number of global bases (gbdi)"))
+                .arg(isa_arg()),
         )
         .subcommand(
             App::new("decompress", "decompress a framed container (codec auto-detected)")
                 .arg(Arg::pos("input", "compressed container"))
-                .arg(Arg::req("out", "output path")),
+                .arg(Arg::req("out", "output path"))
+                .arg(isa_arg()),
         )
         .subcommand(
             App::new("read", "random-access: decode single blocks (no full decode)")
@@ -66,13 +68,15 @@ fn app() -> App {
             .arg(Arg::opt("size", "4m", "image bytes"))
             .arg(Arg::opt("codec", "gbdi", "block codec: gbdi|bdi|fpc"))
             .arg(Arg::opt("reads", "100k", "random block reads to time"))
-            .arg(Arg::opt("seed", "7", "generator seed")),
+            .arg(Arg::opt("seed", "7", "generator seed"))
+            .arg(isa_arg()),
         )
         .subcommand(
             App::new("verify", "compress + decompress + bit-exactness check")
                 .arg(Arg::pos("input", "ELF dump or raw image"))
                 .arg(Arg::opt("codec", "gbdi", "block codec: gbdi|bdi|fpc"))
-                .arg(Arg::opt("threads", "0", "parallel-path threads (0 = all cores)")),
+                .arg(Arg::opt("threads", "0", "parallel-path threads (0 = all cores)"))
+                .arg(isa_arg()),
         )
         .subcommand(
             App::new("sweep", "compression-ratio sweep: every block codec x every workload")
@@ -101,7 +105,8 @@ fn app() -> App {
                     "base selector: lloyd|minibatch|histogram|artifact (default from config)",
                 ))
                 .arg(Arg::opt("drift", "", "drift-detection margin override (e.g. 1.02)"))
-                .arg(Arg::opt("config", "", "TOML config ([codec] + [service] + [analyzer])")),
+                .arg(Arg::opt("config", "", "TOML config ([codec] + [service] + [analyzer])"))
+                .arg(isa_arg()),
         )
         .subcommand(
             App::new("selectors", "base-selector ablation: ratio + analysis time per workload")
@@ -118,9 +123,30 @@ fn app() -> App {
                 .arg(Arg::opt("shards", "1", "page-store shards behind the memory"))
                 .arg(Arg::opt("trace", "streaming", "streaming|uniform|zipf"))
                 .arg(Arg::opt("accesses", "65536", "trace length"))
-                .arg(Arg::opt("burst", "16", "DRAM burst bytes")),
+                .arg(Arg::opt("burst", "16", "DRAM burst bytes"))
+                .arg(isa_arg()),
         )
         .subcommand(App::new("info", "platform + artifact status"))
+}
+
+/// The shared `--isa` option: every command with a compression or
+/// decompression hot path accepts it (DESIGN.md §10).
+fn isa_arg() -> Arg {
+    Arg::opt("isa", "", "force SIMD backend: scalar|sse2|avx2|neon (default: auto-detect)")
+}
+
+/// Install the `--isa` kernel override before any blocks move. An empty
+/// value (the default) keeps `GBDI_FORCE_ISA` / auto-detection in charge;
+/// unknown names and backends this host cannot execute are hard errors.
+fn apply_isa(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
+    let name = m.get("isa");
+    if name.is_empty() {
+        return Ok(());
+    }
+    let isa = gbdi::simd::Isa::parse(name).ok_or_else(|| {
+        gbdi::Error::Config(format!("unknown --isa '{name}' (scalar|sse2|avx2|neon)"))
+    })?;
+    gbdi::simd::force(Some(isa)).map_err(gbdi::Error::Config)
 }
 
 fn load_image(path: &str) -> gbdi::Result<Vec<u8>> {
@@ -217,6 +243,7 @@ fn cmd_analyze(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
 }
 
 fn cmd_compress(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
+    apply_isa(m)?;
     let image = load_image(m.get("input"))?;
     let kind = parse_codec(m)?;
     let cfg = GbdiConfig { num_bases: m.get_usize("bases"), ..Default::default() };
@@ -238,6 +265,7 @@ fn cmd_compress(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
 }
 
 fn cmd_decompress(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
+    apply_isa(m)?;
     let comp = Container::from_bytes(&std::fs::read(m.get("input"))?)?;
     let out = comp.decompress()?;
     std::fs::write(m.get("out"), &out)?;
@@ -297,6 +325,7 @@ fn cmd_read(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
 }
 
 fn cmd_bench_access(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
+    apply_isa(m)?;
     let w = workloads::by_name(m.get("workload"))
         .ok_or_else(|| gbdi::Error::Config("unknown workload".into()))?;
     let image = w.generate(m.get_usize("size"), m.get_u64("seed"));
@@ -348,6 +377,7 @@ fn cmd_bench_access(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
 }
 
 fn cmd_verify(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
+    apply_isa(m)?;
     let image = load_image(m.get("input"))?;
     let kind = parse_codec(m)?;
     let threads = parse_threads(m);
@@ -458,6 +488,7 @@ fn cmd_figure1(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
 }
 
 fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
+    apply_isa(m)?;
     let pages = m.get_u64("pages");
     let kind = parse_codec(m)?;
     let mut cfg = match m.get("config") {
@@ -661,6 +692,7 @@ fn cmd_selectors(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
 }
 
 fn cmd_memsim(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
+    apply_isa(m)?;
     let w = workloads::by_name(m.get("workload"))
         .ok_or_else(|| gbdi::Error::Config("unknown workload".into()))?;
     let image = w.generate(m.get_usize("size"), 7);
@@ -697,6 +729,13 @@ fn cmd_memsim(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
 
 fn cmd_info() {
     println!("gbdi {} — three-layer GBDI reproduction", env!("CARGO_PKG_VERSION"));
+    let supported: Vec<&str> = gbdi::simd::supported().iter().map(|i| i.name()).collect();
+    println!(
+        "simd: active {} (detected best {}; supported: {})",
+        gbdi::simd::active().isa.name(),
+        gbdi::simd::Isa::detect_best().name(),
+        supported.join(", ")
+    );
     let dir = ArtifactRuntime::default_dir();
     println!("artifact dir: {}", dir.display());
     match ArtifactRuntime::new(&dir) {

@@ -1,0 +1,343 @@
+//! Runtime-dispatched SIMD kernels for the block-codec hot loops
+//! (DESIGN.md §10).
+//!
+//! Three backends share one function-pointer vtable ([`Kernels`]):
+//!
+//! * **x86_64** — SSE2 (baseline, unconditionally present on the
+//!   target) and AVX2 (detected at runtime via
+//!   `is_x86_feature_detected!`), in [`x86`];
+//! * **aarch64** — NEON (baseline on the target), in [`neon`];
+//! * **portable** — the scalar reference kernels in [`scalar`], the
+//!   differential-testing oracle every vector backend is property-tested
+//!   against (`tests/simd_kernels.rs`).
+//!
+//! Dispatch resolves **once**: [`active`] returns a `'static` vtable
+//! from a `OnceLock`, honoring the `GBDI_FORCE_ISA` env var (values
+//! `scalar|sse2|avx2|neon`) and falling back to [`Isa::detect_best`].
+//! [`force`] installs a process-wide override on top (the `--isa` CLI
+//! flag and the per-ISA ablation in `benches/throughput.rs`); tests that
+//! must not race on process-global state take a vtable directly via
+//! [`kernels_for`] instead.
+//!
+//! Every kernel is observationally identical across backends — same
+//! results, same first-fit *index* (base pointer indices are on the
+//! wire, so the SIMD search must return the exact candidate the scalar
+//! walk would). The wire format is untouched by ISA choice; only
+//! throughput changes.
+
+pub mod scalar;
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+#[cfg(target_arch = "x86_64")]
+pub mod x86;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// The instruction-set backends the dispatch layer knows about.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Isa {
+    /// Portable scalar kernels (every host; the differential reference).
+    Scalar,
+    /// x86_64 SSE2 — baseline for the target, no detection needed.
+    Sse2,
+    /// x86_64 AVX2 — requires runtime detection.
+    Avx2,
+    /// aarch64 NEON — baseline for the target.
+    Neon,
+}
+
+impl Isa {
+    /// All known backends, in ascending preference order.
+    pub fn all() -> &'static [Isa] {
+        &[Isa::Scalar, Isa::Sse2, Isa::Avx2, Isa::Neon]
+    }
+
+    /// Stable lowercase name (CLI / env / bench-JSON vocabulary).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Sse2 => "sse2",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Parse a [`Self::name`] (case-insensitive; `none` aliases scalar).
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" | "none" => Some(Isa::Scalar),
+            "sse2" => Some(Isa::Sse2),
+            "avx2" => Some(Isa::Avx2),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+
+    /// Whether the current host can execute this backend.
+    pub fn supported(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            Isa::Sse2 => cfg!(target_arch = "x86_64"),
+            Isa::Avx2 => avx2_supported(),
+            Isa::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+
+    /// The best backend the current host supports.
+    pub fn detect_best() -> Isa {
+        if Isa::Avx2.supported() {
+            Isa::Avx2
+        } else if Isa::Sse2.supported() {
+            Isa::Sse2
+        } else if Isa::Neon.supported() {
+            Isa::Neon
+        } else {
+            Isa::Scalar
+        }
+    }
+
+    fn as_index(self) -> u8 {
+        match self {
+            Isa::Scalar => 0,
+            Isa::Sse2 => 1,
+            Isa::Avx2 => 2,
+            Isa::Neon => 3,
+        }
+    }
+
+    fn from_index(b: u8) -> Isa {
+        match b {
+            1 => Isa::Sse2,
+            2 => Isa::Avx2,
+            3 => Isa::Neon,
+            _ => Isa::Scalar,
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_supported() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_supported() -> bool {
+    false
+}
+
+/// The kernel vtable: one function pointer per vectorized hot loop. All
+/// kernels are pure slice transforms — no allocation, no codec-internal
+/// types — so backends stay trivially testable against [`scalar`].
+pub struct Kernels {
+    /// Which backend these kernels belong to.
+    pub isa: Isa,
+    /// True iff every byte of the slice is zero (ZERO block scans).
+    pub all_zero: fn(&[u8]) -> bool,
+    /// True iff the slice is one `stride`-byte pattern repeated (REP
+    /// block scans). Callers guarantee `stride > 0`, a non-empty slice,
+    /// and `len % stride == 0`.
+    pub rep_words: fn(&[u8], usize) -> bool,
+    /// BDI `(k, d)` feasibility: every k-byte word fits either the zero
+    /// base or the block base (first non-zero-fitting word) in d bytes.
+    /// Exact mirror of the scalar scan in `baselines::bdi`.
+    pub bdi_fits: fn(&[u8], usize, usize) -> bool,
+    /// First index `i` with `(v - lo[i]) mod 2^32 <= span[i]`, i.e. the
+    /// first candidate whose wrapped coverage interval contains `v`.
+    /// Must return the *first* fit — candidate order is wire-visible
+    /// (the base pointer index is what gets emitted).
+    pub first_fit: fn(u32, &[u32], &[u32]) -> Option<usize>,
+    /// GBDI W32 apply phase: `out[4i..4i+4] = le(adj[ptrs[i]] + raws[i])`
+    /// (wrapping u32 add) for every scanned word. `adj` is the LUT's
+    /// bias-folded base array, `raws` the masked delta/outlier fields.
+    pub gbdi_apply_w32: fn(&[u32], &[u32], &[u32], &mut [u8]),
+}
+
+static SCALAR: Kernels = Kernels {
+    isa: Isa::Scalar,
+    all_zero: scalar::all_zero,
+    rep_words: scalar::rep_words,
+    bdi_fits: scalar::bdi_fits,
+    first_fit: scalar::first_fit,
+    gbdi_apply_w32: scalar::gbdi_apply_w32,
+};
+
+#[cfg(target_arch = "x86_64")]
+static SSE2: Kernels = Kernels {
+    isa: Isa::Sse2,
+    all_zero: x86::all_zero_sse2,
+    rep_words: x86::rep_words_sse2,
+    bdi_fits: x86::bdi_fits_sse2,
+    first_fit: x86::first_fit_sse2,
+    gbdi_apply_w32: x86::gbdi_apply_w32_sse2,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: Kernels = Kernels {
+    isa: Isa::Avx2,
+    all_zero: x86::all_zero_avx2,
+    rep_words: x86::rep_words_avx2,
+    bdi_fits: x86::bdi_fits_avx2,
+    first_fit: x86::first_fit_avx2,
+    gbdi_apply_w32: x86::gbdi_apply_w32_avx2,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON: Kernels = Kernels {
+    isa: Isa::Neon,
+    all_zero: neon::all_zero_neon,
+    rep_words: neon::rep_words_neon,
+    bdi_fits: neon::bdi_fits_neon,
+    first_fit: neon::first_fit_neon,
+    gbdi_apply_w32: neon::gbdi_apply_w32_neon,
+};
+
+/// The vtable for a specific backend. Unsupported requests degrade to
+/// scalar (never a crash), so differential tests can iterate
+/// `Isa::all()` filtered by [`Isa::supported`] and callers that bypass
+/// [`force`]'s validation still get a working vtable.
+pub fn kernels_for(isa: Isa) -> &'static Kernels {
+    if !isa.supported() {
+        return &SCALAR;
+    }
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => &SSE2,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => &AVX2,
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => &NEON,
+        _ => &SCALAR,
+    }
+}
+
+/// Process-wide override installed by [`force`]: 0 = none, else
+/// `Isa::as_index() + 1`. Reads are relaxed — every vtable computes
+/// identical results, so a racing switch is observationally benign.
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// The default vtable, resolved once: `GBDI_FORCE_ISA` if set and
+/// supported (unsupported/unknown values warn and fall back), else the
+/// best detected backend.
+static DEFAULT: OnceLock<&'static Kernels> = OnceLock::new();
+
+fn default_kernels() -> &'static Kernels {
+    DEFAULT.get_or_init(|| {
+        let isa = match std::env::var("GBDI_FORCE_ISA") {
+            Ok(s) if !s.is_empty() => match Isa::parse(&s) {
+                Some(isa) if isa.supported() => isa,
+                Some(isa) => {
+                    eprintln!(
+                        "GBDI_FORCE_ISA={} unsupported on this host; using {}",
+                        isa.name(),
+                        Isa::detect_best().name()
+                    );
+                    Isa::detect_best()
+                }
+                None => {
+                    eprintln!(
+                        "GBDI_FORCE_ISA={s:?} unrecognized (scalar|sse2|avx2|neon); using {}",
+                        Isa::detect_best().name()
+                    );
+                    Isa::detect_best()
+                }
+            },
+            _ => Isa::detect_best(),
+        };
+        kernels_for(isa)
+    })
+}
+
+/// The active kernel vtable — the one call every dispatch site makes.
+/// Resolution order: [`force`] override, then the `OnceLock`'d default
+/// (`GBDI_FORCE_ISA` / detection). Two relaxed atomic loads on the hot
+/// path.
+#[inline]
+pub fn active() -> &'static Kernels {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        0 => default_kernels(),
+        b => kernels_for(Isa::from_index(b - 1)),
+    }
+}
+
+/// Install (or with `None`, clear) a process-wide backend override —
+/// the `--isa` flag and the bench ablation go through here. Errors when
+/// the host cannot execute `isa`, leaving the previous selection in
+/// place.
+pub fn force(isa: Option<Isa>) -> std::result::Result<(), String> {
+    match isa {
+        None => {
+            OVERRIDE.store(0, Ordering::Relaxed);
+            Ok(())
+        }
+        Some(i) => {
+            if !i.supported() {
+                let names: Vec<&str> = supported().iter().map(|s| s.name()).collect();
+                return Err(format!(
+                    "isa '{}' is not supported on this host (supported: {})",
+                    i.name(),
+                    names.join(", ")
+                ));
+            }
+            OVERRIDE.store(i.as_index() + 1, Ordering::Relaxed);
+            Ok(())
+        }
+    }
+}
+
+/// The backends the current host can execute (always includes scalar).
+pub fn supported() -> Vec<Isa> {
+    Isa::all().iter().copied().filter(|i| i.supported()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_parse_roundtrip() {
+        for &isa in Isa::all() {
+            assert_eq!(Isa::parse(isa.name()), Some(isa));
+            assert_eq!(Isa::parse(&isa.name().to_uppercase()), Some(isa));
+            assert_eq!(Isa::from_index(isa.as_index()), isa);
+        }
+        assert_eq!(Isa::parse("none"), Some(Isa::Scalar));
+        assert_eq!(Isa::parse("sse9"), None);
+    }
+
+    #[test]
+    fn detection_is_coherent() {
+        let best = Isa::detect_best();
+        assert!(best.supported());
+        assert!(supported().contains(&Isa::Scalar));
+        assert!(supported().contains(&best));
+        // every supported backend hands out its own vtable; unsupported
+        // ones degrade to scalar
+        for &isa in Isa::all() {
+            let k = kernels_for(isa);
+            if isa.supported() {
+                assert_eq!(k.isa, isa, "{}", isa.name());
+            } else {
+                assert_eq!(k.isa, Isa::Scalar, "{}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn force_overrides_and_restores() {
+        // scalar is supported everywhere, so the override path is always
+        // exercisable; restore before returning so sibling tests see the
+        // default dispatch
+        assert!(force(Some(Isa::Scalar)).is_ok());
+        assert_eq!(active().isa, Isa::Scalar);
+        assert!(force(None).is_ok());
+        assert_eq!(active().isa, default_kernels().isa);
+        // an unsupported request errors and leaves the selection alone
+        if let Some(&unsup) = Isa::all().iter().find(|i| !i.supported()) {
+            let before = active().isa;
+            assert!(force(Some(unsup)).is_err());
+            assert_eq!(active().isa, before);
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! aarch64 NEON kernels. NEON (ASIMD) is baseline for the
+//! `aarch64-unknown-linux-gnu` target, so every entry point is safe
+//! code with small `unsafe` blocks around the intrinsics; loads go
+//! through `vld1q_u8` (alignment-free) and lane layouts match the
+//! little-endian byte order of the wire format.
+
+#[allow(clippy::wildcard_imports)]
+use std::arch::aarch64::*;
+
+use crate::baselines::bdi::{plan_fits, plan_fits_from};
+
+/// NEON `all_zero`: 16-byte horizontal max per chunk.
+pub fn all_zero_neon(b: &[u8]) -> bool {
+    let mut i = 0;
+    unsafe {
+        while i + 16 <= b.len() {
+            if vmaxvq_u8(vld1q_u8(b.as_ptr().add(i))) != 0 {
+                return false;
+            }
+            i += 16;
+        }
+    }
+    b[i..].iter().all(|&x| x == 0)
+}
+
+/// NEON `rep_words`: splat the leading pattern, compare 16 bytes at a
+/// time (all-equal iff the lane-wise minimum of the compare mask is
+/// saturated). Strides 2/4/8 vectorize; anything else is scalar.
+pub fn rep_words_neon(b: &[u8], stride: usize) -> bool {
+    debug_assert!(stride > 0 && !b.is_empty() && b.len() % stride == 0);
+    let pat = unsafe {
+        match stride {
+            2 => vreinterpretq_u8_u16(vdupq_n_u16(u16::from_le_bytes([b[0], b[1]]))),
+            4 => vreinterpretq_u8_u32(vdupq_n_u32(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))),
+            8 => vreinterpretq_u8_u64(vdupq_n_u64(u64::from_le_bytes(b[..8].try_into().unwrap()))),
+            _ => return crate::simd::scalar::rep_words(b, stride),
+        }
+    };
+    let mut i = 0;
+    unsafe {
+        while i + 16 <= b.len() {
+            let eq = vceqq_u8(vld1q_u8(b.as_ptr().add(i)), pat);
+            if vminvq_u8(eq) != 0xFF {
+                return false;
+            }
+            i += 16;
+        }
+    }
+    b[i..].chunks_exact(stride).all(|c| c == &b[..stride])
+}
+
+/// NEON first-fit over the coverage-interval SoA. NEON compares
+/// unsigned natively (`vcleq_u32`); the first fitting lane is recovered
+/// by spilling the mask.
+pub fn first_fit_neon(v: u32, lo: &[u32], span: &[u32]) -> Option<usize> {
+    let n = lo.len().min(span.len());
+    let mut i = 0;
+    unsafe {
+        let vv = vdupq_n_u32(v);
+        while i + 4 <= n {
+            let l = vld1q_u32(lo.as_ptr().add(i));
+            let s = vld1q_u32(span.as_ptr().add(i));
+            let fit = vcleq_u32(vsubq_u32(vv, l), s);
+            if vmaxvq_u32(fit) != 0 {
+                let mut m = [0u32; 4];
+                vst1q_u32(m.as_mut_ptr(), fit);
+                for (j, &f) in m.iter().enumerate() {
+                    if f != 0 {
+                        return Some(i + j);
+                    }
+                }
+            }
+            i += 4;
+        }
+    }
+    while i < n {
+        if v.wrapping_sub(lo[i]) <= span[i] {
+            return Some(i);
+        }
+        i += 1;
+    }
+    None
+}
+
+/// NEON GBDI W32 apply: scalar gather into a lane buffer, vector add,
+/// byte store (little-endian lane order matches the wire).
+pub fn gbdi_apply_w32_neon(adj: &[u32], ptrs: &[u32], raws: &[u32], out: &mut [u8]) {
+    let n = ptrs.len().min(raws.len()).min(out.len() / 4);
+    let mut i = 0;
+    unsafe {
+        while i + 4 <= n {
+            let a = [
+                adj[ptrs[i] as usize],
+                adj[ptrs[i + 1] as usize],
+                adj[ptrs[i + 2] as usize],
+                adj[ptrs[i + 3] as usize],
+            ];
+            let v = vaddq_u32(vld1q_u32(a.as_ptr()), vld1q_u32(raws.as_ptr().add(i)));
+            vst1q_u8(out.as_mut_ptr().add(4 * i), vreinterpretq_u8_u32(v));
+            i += 4;
+        }
+    }
+    while i < n {
+        let v = adj[ptrs[i] as usize].wrapping_add(raws[i]);
+        out[4 * i..4 * i + 4].copy_from_slice(&v.to_le_bytes());
+        i += 1;
+    }
+}
+
+/// NEON BDI feasibility. k=4 and k=2 vectorize; k=8 stays scalar (no
+/// horizontal min over 64-bit lanes worth the shuffle tax at n=8).
+pub fn bdi_fits_neon(block: &[u8], k: usize, d: usize) -> bool {
+    match k {
+        4 => bdi_fits_k4_neon(block, d),
+        2 => bdi_fits_k2_neon(block, d),
+        _ => plan_fits(block, k, d),
+    }
+}
+
+/// Same streaming single-pass shape as the x86 kernels (see
+/// `x86::bdi_fits_k4_sse2`): zero-fit lanes via `(v + bias) <u limit`,
+/// latch the first miss as the block base, re-test the chunk with
+/// `zero-fit OR base-fit`.
+fn bdi_fits_k4_neon(block: &[u8], d: usize) -> bool {
+    let n = block.len() / 4;
+    let bias = 1u32 << (8 * d - 1);
+    let limit = 1u32 << (8 * d);
+    let mut base: Option<u32> = None;
+    let mut i = 0;
+    unsafe {
+        let biasv = vdupq_n_u32(bias);
+        let limitv = vdupq_n_u32(limit);
+        while i + 4 <= n {
+            let v = vreinterpretq_u32_u8(vld1q_u8(block.as_ptr().add(4 * i)));
+            let zfit = vcltq_u32(vaddq_u32(v, biasv), limitv);
+            if vminvq_u32(zfit) != u32::MAX {
+                let b = match base {
+                    Some(b) => b,
+                    None => {
+                        let mut m = [0u32; 4];
+                        vst1q_u32(m.as_mut_ptr(), zfit);
+                        let j = m.iter().position(|&f| f == 0).unwrap();
+                        let o = 4 * (i + j);
+                        let b = u32::from_le_bytes(block[o..o + 4].try_into().unwrap());
+                        base = Some(b);
+                        b
+                    }
+                };
+                let bfit = vcltq_u32(vaddq_u32(vsubq_u32(v, vdupq_n_u32(b)), biasv), limitv);
+                if vminvq_u32(vorrq_u32(zfit, bfit)) != u32::MAX {
+                    return false;
+                }
+            }
+            i += 4;
+        }
+    }
+    plan_fits_from(block, 4, d, i, base.map(u64::from))
+}
+
+fn bdi_fits_k2_neon(block: &[u8], d: usize) -> bool {
+    debug_assert_eq!(d, 1, "the BDI menu only pairs k=2 with d=1");
+    let n = block.len() / 2;
+    let mut base: Option<u16> = None;
+    let mut i = 0;
+    unsafe {
+        let biasv = vdupq_n_u16(0x80);
+        let limitv = vdupq_n_u16(0x100);
+        while i + 8 <= n {
+            let v = vreinterpretq_u16_u8(vld1q_u8(block.as_ptr().add(2 * i)));
+            let zfit = vcltq_u16(vaddq_u16(v, biasv), limitv);
+            if vminvq_u16(zfit) != u16::MAX {
+                let b = match base {
+                    Some(b) => b,
+                    None => {
+                        let mut m = [0u16; 8];
+                        vst1q_u16(m.as_mut_ptr(), zfit);
+                        let j = m.iter().position(|&f| f == 0).unwrap();
+                        let o = 2 * (i + j);
+                        let b = u16::from_le_bytes([block[o], block[o + 1]]);
+                        base = Some(b);
+                        b
+                    }
+                };
+                let bfit = vcltq_u16(vaddq_u16(vsubq_u16(v, vdupq_n_u16(b)), biasv), limitv);
+                if vminvq_u16(vorrq_u16(zfit, bfit)) != u16::MAX {
+                    return false;
+                }
+            }
+            i += 8;
+        }
+    }
+    plan_fits_from(block, 2, d, i, base.map(u64::from))
+}

@@ -1,0 +1,81 @@
+//! Portable scalar kernels — the semantics every vector backend must
+//! reproduce exactly (including first-fit *index* choice, which is
+//! wire-visible through GBDI base pointers). These double as the
+//! fallback vtable for hosts with no vector backend and as the oracle
+//! for the differential property tests in `tests/simd_kernels.rs`.
+
+/// True iff every byte of `b` is zero.
+pub fn all_zero(b: &[u8]) -> bool {
+    b.iter().all(|&x| x == 0)
+}
+
+/// True iff `b` is one `stride`-byte pattern repeated. Callers
+/// guarantee `stride > 0`, a non-empty slice, and `len % stride == 0`
+/// (block lengths are validated against the word size at config build).
+pub fn rep_words(b: &[u8], stride: usize) -> bool {
+    debug_assert!(stride > 0 && !b.is_empty() && b.len() % stride == 0);
+    let (first, rest) = b.split_at(stride);
+    rest.chunks_exact(stride).all(|c| c == first)
+}
+
+/// BDI `(k, d)` feasibility — the scalar scan from `baselines::bdi`,
+/// re-exported into the vtable shape.
+pub fn bdi_fits(block: &[u8], k: usize, d: usize) -> bool {
+    crate::baselines::bdi::plan_fits(block, k, d)
+}
+
+/// First index `i` with `(v - lo[i]) mod 2^32 <= span[i]` — the wrapped
+/// coverage-interval test of the base-table bucket walk, in branchless
+/// form.
+pub fn first_fit(v: u32, lo: &[u32], span: &[u32]) -> Option<usize> {
+    lo.iter().zip(span).position(|(&l, &s)| v.wrapping_sub(l) <= s)
+}
+
+/// GBDI W32 apply phase: `out[4i..4i+4] = le(adj[ptrs[i]] + raws[i])`
+/// with wrapping u32 arithmetic (the offset-binary bias is already
+/// folded into `adj`).
+pub fn gbdi_apply_w32(adj: &[u32], ptrs: &[u32], raws: &[u32], out: &mut [u8]) {
+    for ((&p, &r), o) in ptrs.iter().zip(raws).zip(out.chunks_exact_mut(4)) {
+        let v = adj[p as usize].wrapping_add(r);
+        o.copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rep_and_zero_scans() {
+        assert!(all_zero(&[0; 64]));
+        assert!(!all_zero(&[0, 0, 1, 0]));
+        assert!(rep_words(&[7, 8, 7, 8, 7, 8], 2));
+        assert!(!rep_words(&[7, 8, 7, 9, 7, 8], 2));
+        assert!(rep_words(&[5; 24], 8));
+    }
+
+    #[test]
+    fn first_fit_is_first() {
+        // both candidates fit v=10; the first must win
+        let lo = [8u32, 9];
+        let span = [4u32, 4];
+        assert_eq!(first_fit(10, &lo, &span), Some(0));
+        assert_eq!(first_fit(14, &lo, &span), None);
+        // wrapped interval: lo near u32::MAX covering small values
+        assert_eq!(first_fit(1, &[u32::MAX - 1], &[3]), Some(0));
+        assert_eq!(first_fit(3, &[u32::MAX - 1], &[3]), None);
+        assert_eq!(first_fit(5, &[], &[]), None);
+    }
+
+    #[test]
+    fn apply_writes_le_words() {
+        let adj = [100u32, u32::MAX];
+        let ptrs = [0u32, 1, 0];
+        let raws = [1u32, 2, 0xFFFF_FFFF];
+        let mut out = [0u8; 12];
+        gbdi_apply_w32(&adj, &ptrs, &raws, &mut out);
+        assert_eq!(&out[0..4], &101u32.to_le_bytes());
+        assert_eq!(&out[4..8], &1u32.to_le_bytes()); // wraps
+        assert_eq!(&out[8..12], &99u32.to_le_bytes()); // wraps
+    }
+}

@@ -1,0 +1,443 @@
+//! x86_64 kernels: SSE2 (baseline for the target, callable from safe
+//! code) and AVX2 (runtime-detected; every AVX2 entry point is a safe
+//! wrapper whose `#[target_feature]` inner function is only reachable
+//! through the AVX2 vtable, which the dispatch layer hands out only
+//! after `is_x86_feature_detected!("avx2")`).
+//!
+//! Unsigned lane comparisons (which SSE2/AVX2 lack) use the classic
+//! sign-bit-flip identity: `a <u b  <=>  (a ^ MIN) <s (b ^ MIN)`.
+//! Lane layouts and the equivalence arguments are written up in
+//! DESIGN.md §10.
+
+#[allow(clippy::wildcard_imports)]
+use std::arch::x86_64::*;
+
+use crate::baselines::bdi::{plan_fits, plan_fits_from};
+
+// ---------------------------------------------------------------- SSE2
+
+/// SSE2 `all_zero`: 16-byte compare + movemask, scalar tail.
+pub fn all_zero_sse2(b: &[u8]) -> bool {
+    let mut i = 0;
+    unsafe {
+        let zero = _mm_setzero_si128();
+        while i + 16 <= b.len() {
+            let v = _mm_loadu_si128(b.as_ptr().add(i) as *const __m128i);
+            if _mm_movemask_epi8(_mm_cmpeq_epi8(v, zero)) != 0xFFFF {
+                return false;
+            }
+            i += 16;
+        }
+    }
+    b[i..].iter().all(|&x| x == 0)
+}
+
+/// SSE2 `rep_words`: splat the leading pattern across a register and
+/// compare 16 bytes at a time. Strides 2/4/8 (the word sizes the codecs
+/// use) vectorize; anything else falls back to scalar.
+pub fn rep_words_sse2(b: &[u8], stride: usize) -> bool {
+    debug_assert!(stride > 0 && !b.is_empty() && b.len() % stride == 0);
+    let pat = match stride {
+        2 => unsafe { _mm_set1_epi16(i16::from_le_bytes([b[0], b[1]])) },
+        4 => unsafe { _mm_set1_epi32(i32::from_le_bytes([b[0], b[1], b[2], b[3]])) },
+        8 => unsafe { _mm_set1_epi64x(i64::from_le_bytes(b[..8].try_into().unwrap())) },
+        _ => return crate::simd::scalar::rep_words(b, stride),
+    };
+    let mut i = 0;
+    unsafe {
+        while i + 16 <= b.len() {
+            let v = _mm_loadu_si128(b.as_ptr().add(i) as *const __m128i);
+            if _mm_movemask_epi8(_mm_cmpeq_epi8(v, pat)) != 0xFFFF {
+                return false;
+            }
+            i += 16;
+        }
+    }
+    // stride divides 16, so the tail is whole strides
+    b[i..].chunks_exact(stride).all(|c| c == &b[..stride])
+}
+
+/// SSE2 first-fit over the coverage-interval SoA: 4 candidates per
+/// compare, lowest set movemask bit = first fitting index.
+pub fn first_fit_sse2(v: u32, lo: &[u32], span: &[u32]) -> Option<usize> {
+    let n = lo.len().min(span.len());
+    let mut i = 0;
+    unsafe {
+        let sign = _mm_set1_epi32(i32::MIN);
+        let vv = _mm_set1_epi32(v as i32);
+        while i + 4 <= n {
+            let l = _mm_loadu_si128(lo.as_ptr().add(i) as *const __m128i);
+            let s = _mm_loadu_si128(span.as_ptr().add(i) as *const __m128i);
+            let t = _mm_sub_epi32(vv, l);
+            // t <=u s  <=>  !(t >u s), via the sign-flip identity
+            let gt = _mm_cmpgt_epi32(_mm_xor_si128(t, sign), _mm_xor_si128(s, sign));
+            let fit = !_mm_movemask_ps(_mm_castsi128_ps(gt)) & 0xF;
+            if fit != 0 {
+                return Some(i + fit.trailing_zeros() as usize);
+            }
+            i += 4;
+        }
+    }
+    while i < n {
+        if v.wrapping_sub(lo[i]) <= span[i] {
+            return Some(i);
+        }
+        i += 1;
+    }
+    None
+}
+
+/// SSE2 GBDI W32 apply: scalar gather of `adj[ptrs[i]]` into a lane
+/// buffer, vector add against the raw fields, unaligned store.
+pub fn gbdi_apply_w32_sse2(adj: &[u32], ptrs: &[u32], raws: &[u32], out: &mut [u8]) {
+    let n = ptrs.len().min(raws.len()).min(out.len() / 4);
+    let mut i = 0;
+    unsafe {
+        while i + 4 <= n {
+            let a = _mm_set_epi32(
+                adj[ptrs[i + 3] as usize] as i32,
+                adj[ptrs[i + 2] as usize] as i32,
+                adj[ptrs[i + 1] as usize] as i32,
+                adj[ptrs[i] as usize] as i32,
+            );
+            let r = _mm_loadu_si128(raws.as_ptr().add(i) as *const __m128i);
+            let v = _mm_add_epi32(a, r);
+            _mm_storeu_si128(out.as_mut_ptr().add(4 * i) as *mut __m128i, v);
+            i += 4;
+        }
+    }
+    while i < n {
+        let v = adj[ptrs[i] as usize].wrapping_add(raws[i]);
+        out[4 * i..4 * i + 4].copy_from_slice(&v.to_le_bytes());
+        i += 1;
+    }
+}
+
+/// SSE2 BDI feasibility. k=4 and k=2 vectorize (32-/16-bit lanes); k=8
+/// needs 64-bit unsigned compares SSE2 lacks, so it stays scalar.
+pub fn bdi_fits_sse2(block: &[u8], k: usize, d: usize) -> bool {
+    match k {
+        4 => bdi_fits_k4_sse2(block, d),
+        2 => bdi_fits_k2_sse2(block, d),
+        _ => plan_fits(block, k, d),
+    }
+}
+
+/// The streaming one-pass shape shared by all vector BDI kernels: per
+/// chunk, lane-test the zero base (`(v + bias) <u limit`, the unsigned
+/// form of the sign-fit check); on the first lane that misses, latch
+/// that word as the block base and re-test the chunk against
+/// `zero-fit OR base-fit`. Any lane failing both kills the encoding —
+/// exactly the scalar scan's accept set, word for word.
+fn bdi_fits_k4_sse2(block: &[u8], d: usize) -> bool {
+    let n = block.len() / 4;
+    let bias = 1u32 << (8 * d - 1);
+    let limit = 1u32 << (8 * d);
+    let mut base: Option<u32> = None;
+    let mut i = 0;
+    unsafe {
+        let sign = _mm_set1_epi32(i32::MIN);
+        let biasv = _mm_set1_epi32(bias as i32);
+        let limitx = _mm_set1_epi32((limit ^ 0x8000_0000u32) as i32);
+        while i + 4 <= n {
+            let v = _mm_loadu_si128(block.as_ptr().add(4 * i) as *const __m128i);
+            let t = _mm_add_epi32(v, biasv);
+            let zfit = _mm_cmpgt_epi32(limitx, _mm_xor_si128(t, sign));
+            let zbits = _mm_movemask_ps(_mm_castsi128_ps(zfit));
+            if zbits != 0xF {
+                let b = match base {
+                    Some(b) => b,
+                    None => {
+                        let j = ((!zbits & 0xF) as u32).trailing_zeros() as usize;
+                        let o = 4 * (i + j);
+                        let b = u32::from_le_bytes(block[o..o + 4].try_into().unwrap());
+                        base = Some(b);
+                        b
+                    }
+                };
+                let t2 = _mm_add_epi32(_mm_sub_epi32(v, _mm_set1_epi32(b as i32)), biasv);
+                let bfit = _mm_cmpgt_epi32(limitx, _mm_xor_si128(t2, sign));
+                if _mm_movemask_ps(_mm_castsi128_ps(_mm_or_si128(zfit, bfit))) != 0xF {
+                    return false;
+                }
+            }
+            i += 4;
+        }
+    }
+    plan_fits_from(block, 4, d, i, base.map(u64::from))
+}
+
+fn bdi_fits_k2_sse2(block: &[u8], d: usize) -> bool {
+    debug_assert_eq!(d, 1, "the BDI menu only pairs k=2 with d=1");
+    let n = block.len() / 2;
+    let mut base: Option<u16> = None;
+    let mut i = 0;
+    unsafe {
+        let sign = _mm_set1_epi16(i16::MIN);
+        let biasv = _mm_set1_epi16(0x80);
+        let limitx = _mm_set1_epi16((0x100u16 ^ 0x8000) as i16);
+        while i + 8 <= n {
+            let v = _mm_loadu_si128(block.as_ptr().add(2 * i) as *const __m128i);
+            let t = _mm_add_epi16(v, biasv);
+            let zfit = _mm_cmpgt_epi16(limitx, _mm_xor_si128(t, sign));
+            let zbits = _mm_movemask_epi8(zfit); // 2 mask bits per u16 lane
+            if zbits != 0xFFFF {
+                let b = match base {
+                    Some(b) => b,
+                    None => {
+                        let lane = ((!zbits & 0xFFFF) as u32).trailing_zeros() as usize / 2;
+                        let o = 2 * (i + lane);
+                        let b = u16::from_le_bytes([block[o], block[o + 1]]);
+                        base = Some(b);
+                        b
+                    }
+                };
+                let t2 = _mm_add_epi16(_mm_sub_epi16(v, _mm_set1_epi16(b as i16)), biasv);
+                let bfit = _mm_cmpgt_epi16(limitx, _mm_xor_si128(t2, sign));
+                if _mm_movemask_epi8(_mm_or_si128(zfit, bfit)) != 0xFFFF {
+                    return false;
+                }
+            }
+            i += 8;
+        }
+    }
+    plan_fits_from(block, 2, d, i, base.map(u64::from))
+}
+
+// ---------------------------------------------------------------- AVX2
+//
+// Safe wrappers + `#[target_feature(enable = "avx2")]` inner functions.
+// The wrappers are only installed in the AVX2 vtable, which the
+// dispatch layer refuses to hand out on hosts without AVX2.
+
+/// AVX2 `all_zero` (32-byte compares).
+pub fn all_zero_avx2(b: &[u8]) -> bool {
+    debug_assert!(crate::simd::Isa::Avx2.supported());
+    unsafe { all_zero_avx2_impl(b) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn all_zero_avx2_impl(b: &[u8]) -> bool {
+    let mut i = 0;
+    let zero = _mm256_setzero_si256();
+    while i + 32 <= b.len() {
+        let v = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+        if _mm256_movemask_epi8(_mm256_cmpeq_epi8(v, zero)) as u32 != u32::MAX {
+            return false;
+        }
+        i += 32;
+    }
+    b[i..].iter().all(|&x| x == 0)
+}
+
+/// AVX2 `rep_words` (32-byte compares against the splatted pattern).
+pub fn rep_words_avx2(b: &[u8], stride: usize) -> bool {
+    debug_assert!(crate::simd::Isa::Avx2.supported());
+    unsafe { rep_words_avx2_impl(b, stride) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn rep_words_avx2_impl(b: &[u8], stride: usize) -> bool {
+    debug_assert!(stride > 0 && !b.is_empty() && b.len() % stride == 0);
+    let pat = match stride {
+        2 => _mm256_set1_epi16(i16::from_le_bytes([b[0], b[1]])),
+        4 => _mm256_set1_epi32(i32::from_le_bytes([b[0], b[1], b[2], b[3]])),
+        8 => _mm256_set1_epi64x(i64::from_le_bytes(b[..8].try_into().unwrap())),
+        _ => return crate::simd::scalar::rep_words(b, stride),
+    };
+    let mut i = 0;
+    while i + 32 <= b.len() {
+        let v = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+        if _mm256_movemask_epi8(_mm256_cmpeq_epi8(v, pat)) as u32 != u32::MAX {
+            return false;
+        }
+        i += 32;
+    }
+    b[i..].chunks_exact(stride).all(|c| c == &b[..stride])
+}
+
+/// AVX2 first-fit (8 candidates per compare).
+pub fn first_fit_avx2(v: u32, lo: &[u32], span: &[u32]) -> Option<usize> {
+    debug_assert!(crate::simd::Isa::Avx2.supported());
+    unsafe { first_fit_avx2_impl(v, lo, span) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn first_fit_avx2_impl(v: u32, lo: &[u32], span: &[u32]) -> Option<usize> {
+    let n = lo.len().min(span.len());
+    let sign = _mm256_set1_epi32(i32::MIN);
+    let vv = _mm256_set1_epi32(v as i32);
+    let mut i = 0;
+    while i + 8 <= n {
+        let l = _mm256_loadu_si256(lo.as_ptr().add(i) as *const __m256i);
+        let s = _mm256_loadu_si256(span.as_ptr().add(i) as *const __m256i);
+        let t = _mm256_sub_epi32(vv, l);
+        let gt = _mm256_cmpgt_epi32(_mm256_xor_si256(t, sign), _mm256_xor_si256(s, sign));
+        let fit = !_mm256_movemask_ps(_mm256_castsi256_ps(gt)) & 0xFF;
+        if fit != 0 {
+            return Some(i + fit.trailing_zeros() as usize);
+        }
+        i += 8;
+    }
+    while i < n {
+        if v.wrapping_sub(lo[i]) <= span[i] {
+            return Some(i);
+        }
+        i += 1;
+    }
+    None
+}
+
+/// AVX2 GBDI W32 apply (8 words per add; the gather stays scalar — the
+/// LUT is small and hot in L1, where scalar loads beat the latency of
+/// the hardware gather on every pre-Icelake core CI might schedule).
+pub fn gbdi_apply_w32_avx2(adj: &[u32], ptrs: &[u32], raws: &[u32], out: &mut [u8]) {
+    debug_assert!(crate::simd::Isa::Avx2.supported());
+    unsafe { gbdi_apply_w32_avx2_impl(adj, ptrs, raws, out) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn gbdi_apply_w32_avx2_impl(adj: &[u32], ptrs: &[u32], raws: &[u32], out: &mut [u8]) {
+    let n = ptrs.len().min(raws.len()).min(out.len() / 4);
+    let mut i = 0;
+    while i + 8 <= n {
+        let mut a = [0u32; 8];
+        for (j, slot) in a.iter_mut().enumerate() {
+            *slot = adj[ptrs[i + j] as usize];
+        }
+        let av = _mm256_loadu_si256(a.as_ptr() as *const __m256i);
+        let rv = _mm256_loadu_si256(raws.as_ptr().add(i) as *const __m256i);
+        let v = _mm256_add_epi32(av, rv);
+        _mm256_storeu_si256(out.as_mut_ptr().add(4 * i) as *mut __m256i, v);
+        i += 8;
+    }
+    while i < n {
+        let v = adj[ptrs[i] as usize].wrapping_add(raws[i]);
+        out[4 * i..4 * i + 4].copy_from_slice(&v.to_le_bytes());
+        i += 1;
+    }
+}
+
+/// AVX2 BDI feasibility: every menu width vectorizes (k=8 via the
+/// AVX2-only 64-bit compare).
+pub fn bdi_fits_avx2(block: &[u8], k: usize, d: usize) -> bool {
+    debug_assert!(crate::simd::Isa::Avx2.supported());
+    unsafe {
+        match k {
+            8 => bdi_fits_k8_avx2(block, d),
+            4 => bdi_fits_k4_avx2(block, d),
+            2 => bdi_fits_k2_avx2(block, d),
+            _ => plan_fits(block, k, d),
+        }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn bdi_fits_k8_avx2(block: &[u8], d: usize) -> bool {
+    let n = block.len() / 8;
+    let bias = 1i64 << (8 * d as u32 - 1);
+    let limit = 1i64 << (8 * d as u32); // d <= 4, so <= 2^32: no overflow
+    let sign = _mm256_set1_epi64x(i64::MIN);
+    let biasv = _mm256_set1_epi64x(bias);
+    let limitx = _mm256_set1_epi64x(limit ^ i64::MIN);
+    let mut base: Option<u64> = None;
+    let mut i = 0;
+    while i + 4 <= n {
+        let v = _mm256_loadu_si256(block.as_ptr().add(8 * i) as *const __m256i);
+        let t = _mm256_add_epi64(v, biasv);
+        let zfit = _mm256_cmpgt_epi64(limitx, _mm256_xor_si256(t, sign));
+        let zbits = _mm256_movemask_pd(_mm256_castsi256_pd(zfit));
+        if zbits != 0xF {
+            let b = match base {
+                Some(b) => b,
+                None => {
+                    let j = ((!zbits & 0xF) as u32).trailing_zeros() as usize;
+                    let o = 8 * (i + j);
+                    let b = u64::from_le_bytes(block[o..o + 8].try_into().unwrap());
+                    base = Some(b);
+                    b
+                }
+            };
+            let t2 = _mm256_add_epi64(_mm256_sub_epi64(v, _mm256_set1_epi64x(b as i64)), biasv);
+            let bfit = _mm256_cmpgt_epi64(limitx, _mm256_xor_si256(t2, sign));
+            if _mm256_movemask_pd(_mm256_castsi256_pd(_mm256_or_si256(zfit, bfit))) != 0xF {
+                return false;
+            }
+        }
+        i += 4;
+    }
+    plan_fits_from(block, 8, d, i, base)
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn bdi_fits_k4_avx2(block: &[u8], d: usize) -> bool {
+    let n = block.len() / 4;
+    let bias = 1u32 << (8 * d - 1);
+    let limit = 1u32 << (8 * d);
+    let sign = _mm256_set1_epi32(i32::MIN);
+    let biasv = _mm256_set1_epi32(bias as i32);
+    let limitx = _mm256_set1_epi32((limit ^ 0x8000_0000u32) as i32);
+    let mut base: Option<u32> = None;
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = _mm256_loadu_si256(block.as_ptr().add(4 * i) as *const __m256i);
+        let t = _mm256_add_epi32(v, biasv);
+        let zfit = _mm256_cmpgt_epi32(limitx, _mm256_xor_si256(t, sign));
+        let zbits = _mm256_movemask_ps(_mm256_castsi256_ps(zfit));
+        if zbits != 0xFF {
+            let b = match base {
+                Some(b) => b,
+                None => {
+                    let j = ((!zbits & 0xFF) as u32).trailing_zeros() as usize;
+                    let o = 4 * (i + j);
+                    let b = u32::from_le_bytes(block[o..o + 4].try_into().unwrap());
+                    base = Some(b);
+                    b
+                }
+            };
+            let t2 = _mm256_add_epi32(_mm256_sub_epi32(v, _mm256_set1_epi32(b as i32)), biasv);
+            let bfit = _mm256_cmpgt_epi32(limitx, _mm256_xor_si256(t2, sign));
+            if _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_or_si256(zfit, bfit))) != 0xFF {
+                return false;
+            }
+        }
+        i += 8;
+    }
+    plan_fits_from(block, 4, d, i, base.map(u64::from))
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn bdi_fits_k2_avx2(block: &[u8], d: usize) -> bool {
+    debug_assert_eq!(d, 1, "the BDI menu only pairs k=2 with d=1");
+    let n = block.len() / 2;
+    let sign = _mm256_set1_epi16(i16::MIN);
+    let biasv = _mm256_set1_epi16(0x80);
+    let limitx = _mm256_set1_epi16((0x100u16 ^ 0x8000) as i16);
+    let mut base: Option<u16> = None;
+    let mut i = 0;
+    while i + 16 <= n {
+        let v = _mm256_loadu_si256(block.as_ptr().add(2 * i) as *const __m256i);
+        let t = _mm256_add_epi16(v, biasv);
+        let zfit = _mm256_cmpgt_epi16(limitx, _mm256_xor_si256(t, sign));
+        let zbits = _mm256_movemask_epi8(zfit) as u32; // 2 bits per lane
+        if zbits != u32::MAX {
+            let b = match base {
+                Some(b) => b,
+                None => {
+                    let lane = (!zbits).trailing_zeros() as usize / 2;
+                    let o = 2 * (i + lane);
+                    let b = u16::from_le_bytes([block[o], block[o + 1]]);
+                    base = Some(b);
+                    b
+                }
+            };
+            let t2 = _mm256_add_epi16(_mm256_sub_epi16(v, _mm256_set1_epi16(b as i16)), biasv);
+            let bfit = _mm256_cmpgt_epi16(limitx, _mm256_xor_si256(t2, sign));
+            if _mm256_movemask_epi8(_mm256_or_si256(zfit, bfit)) as u32 != u32::MAX {
+                return false;
+            }
+        }
+        i += 16;
+    }
+    plan_fits_from(block, 2, d, i, base.map(u64::from))
+}

@@ -92,6 +92,7 @@ pub struct Bencher {
     pub batches: usize,
     results: Vec<BenchResult>,
     metrics: Vec<(String, f64)>,
+    tags: Vec<(String, String)>,
 }
 
 impl Default for Bencher {
@@ -102,6 +103,7 @@ impl Default for Bencher {
             batches: 20,
             results: Vec::new(),
             metrics: Vec::new(),
+            tags: Vec::new(),
         }
     }
 }
@@ -178,6 +180,24 @@ impl Bencher {
         &self.metrics
     }
 
+    /// Attach a string tag describing the measurement environment (the
+    /// ISA that served the run, a workload variant...). Tags land in the
+    /// JSON `"tags"` object, where the regression gate uses them to
+    /// refuse comparing runs from different environments. Last write per
+    /// key wins.
+    pub fn tag(&mut self, key: &str, value: &str) {
+        if let Some(t) = self.tags.iter_mut().find(|(k, _)| k == key) {
+            t.1 = value.to_string();
+        } else {
+            self.tags.push((key.to_string(), value.to_string()));
+        }
+    }
+
+    /// All recorded tags.
+    pub fn tags(&self) -> &[(String, String)] {
+        &self.tags
+    }
+
     /// Write all results as CSV to `path` (with header).
     pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
         use std::io::Write;
@@ -195,6 +215,14 @@ impl Bencher {
         let mut out = String::with_capacity(256 + self.results.len() * 160);
         out.push_str("{\n");
         out.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(bench)));
+        out.push_str("  \"tags\": {");
+        for (i, (k, v)) in self.tags.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("\"{}\": \"{}\"", json_escape(k), json_escape(v)));
+        }
+        out.push_str("},\n");
         out.push_str("  \"results\": [\n");
         for (i, r) in self.results.iter().enumerate() {
             let mib = r
@@ -335,8 +363,12 @@ mod tests {
         b.bench("no-throughput", None, || 1u8);
         b.metric("ratio/mcf/\"lloyd\"", 3.25);
         b.metric("speedup", 8.0);
+        b.tag("isa", "scalar");
+        b.tag("isa", "avx2"); // last write per key wins
+        b.tag("host", "ci");
         let json = b.to_json("unit_test");
         assert!(json.contains("\"bench\": \"unit_test\""));
+        assert!(json.contains("\"tags\": {\"isa\": \"avx2\", \"host\": \"ci\"}"), "{json}");
         assert!(json.contains("\"name\": \"a/b\""));
         assert!(json.contains("\"mib_per_s\": null"), "{json}");
         assert!(json.contains("\\\"lloyd\\\""), "quotes escaped: {json}");

@@ -1,0 +1,459 @@
+//! Differential tests for the SIMD kernel backends (DESIGN.md §10).
+//!
+//! Every vector kernel must be **observationally identical** to the
+//! scalar reference on every backend the host supports — same booleans,
+//! same first-fit index (it goes on the wire as the base pointer), same
+//! decoded bytes, same Ok/Err classification on corrupt input. Tests
+//! iterate `Isa::all()` filtered by `Isa::supported()` and fetch
+//! vtables through `kernels_for`, so they exercise whatever silicon CI
+//! provides (SSE2 everywhere on x86_64, AVX2 where detected, NEON under
+//! the QEMU aarch64 job) without racing on the process-global dispatch.
+
+use gbdi::baselines::bdi::Bdi;
+use gbdi::baselines::Codec;
+use gbdi::gbdi::decode::{decompress_block, decompress_block_lut_with, DecodeLut};
+use gbdi::gbdi::{GbdiCodec, GbdiConfig, GlobalBaseTable};
+use gbdi::simd::{self, kernels_for, Isa, Kernels};
+use gbdi::util::bits::BitReader;
+use gbdi::util::prng::Rng;
+use gbdi::value::WordSize;
+
+/// The scalar oracle plus every vector backend this host can run.
+fn backends() -> Vec<&'static Kernels> {
+    Isa::all().iter().filter(|i| i.supported()).map(|&i| kernels_for(i)).collect()
+}
+
+fn scalar() -> &'static Kernels {
+    kernels_for(Isa::Scalar)
+}
+
+// ---------------------------------------------------------------- block scans
+
+#[test]
+fn all_zero_matches_scalar_at_every_flip_position() {
+    // ragged lengths straddle the 16/32-byte vector chunks, and a single
+    // set byte at *every* position catches lane/tail classification bugs
+    for len in [1usize, 4, 15, 16, 17, 31, 32, 33, 63, 64, 65, 256] {
+        let zeros = vec![0u8; len];
+        for k in backends() {
+            assert!((k.all_zero)(&zeros), "{} len {}", k.isa.name(), len);
+        }
+        for pos in 0..len {
+            let mut b = zeros.clone();
+            b[pos] = 1;
+            for k in backends() {
+                assert!(!(k.all_zero)(&b), "{} len {} flip {}", k.isa.name(), len, pos);
+            }
+        }
+    }
+}
+
+#[test]
+fn rep_words_matches_scalar_at_every_flip_position() {
+    let mut rng = Rng::new(41);
+    // strides 2/4/8 take the vector paths; 3 and 16 take each backend's
+    // scalar fallback (still must agree)
+    for stride in [2usize, 3, 4, 8, 16] {
+        for blocks in [1usize, 2, 5, 8, 9] {
+            let len = stride * blocks;
+            let mut pat = vec![0u8; stride];
+            rng.fill_bytes(&mut pat);
+            let rep: Vec<u8> = pat.iter().copied().cycle().take(len).collect();
+            for k in backends() {
+                let ok = (k.rep_words)(&rep, stride);
+                assert!(ok, "{} stride {} len {}", k.isa.name(), stride, len);
+            }
+            // breaking any byte outside the leading pattern must flip the
+            // verdict on every backend
+            for pos in stride..len {
+                let mut b = rep.clone();
+                b[pos] ^= 0x5A;
+                for k in backends() {
+                    assert!(
+                        !(k.rep_words)(&b, stride),
+                        "{} stride {} len {} flip {}",
+                        k.isa.name(),
+                        stride,
+                        len,
+                        pos
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- first_fit
+
+#[test]
+fn first_fit_matches_scalar_on_random_intervals() {
+    let mut rng = Rng::new(43);
+    for trial in 0..400 {
+        let n = rng.below(21) as usize; // 0..=20 candidates (ragged tails)
+        let mut lo = Vec::with_capacity(n);
+        let mut span = Vec::with_capacity(n);
+        for _ in 0..n {
+            lo.push(rng.next_u32());
+            // mix of tight and huge (wrapping) intervals
+            span.push(match rng.below(3) {
+                0 => rng.below(16) as u32,
+                1 => rng.next_u32() >> 16,
+                _ => rng.next_u32(), // may wrap past u32::MAX
+            });
+        }
+        for _ in 0..32 {
+            let v = if rng.chance(0.5) && n > 0 {
+                // land near a candidate boundary
+                let i = rng.below(n as u64) as usize;
+                lo[i].wrapping_add(span[i]).wrapping_add(rng.below(3) as u32).wrapping_sub(1)
+            } else {
+                rng.next_u32()
+            };
+            let want = (scalar().first_fit)(v, &lo, &span);
+            for k in backends() {
+                assert_eq!(
+                    (k.first_fit)(v, &lo, &span),
+                    want,
+                    "{} trial {} v {}",
+                    k.isa.name(),
+                    trial,
+                    v
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn first_fit_returns_first_index_not_any_index() {
+    // three overlapping candidates all containing v: index 0 must win on
+    // every backend (candidate order is the on-wire base pointer)
+    let lo = [100u32, 90, 0];
+    let span = [50u32, 100, u32::MAX];
+    for k in backends() {
+        assert_eq!((k.first_fit)(120, &lo, &span), Some(0), "{}", k.isa.name());
+        // only the later ones contain 95
+        assert_eq!((k.first_fit)(95, &lo, &span), Some(1), "{}", k.isa.name());
+        // wrapped interval: lo + span wraps past u32::MAX
+        let wlo = [u32::MAX - 2u32];
+        let wspan = [10u32];
+        assert_eq!((k.first_fit)(5, &wlo, &wspan), Some(0), "{} wrap", k.isa.name());
+        assert_eq!((k.first_fit)(9, &wlo, &wspan), None, "{} wrap miss", k.isa.name());
+        assert_eq!((k.first_fit)(1, &[], &[]), None, "{} empty", k.isa.name());
+    }
+}
+
+// ---------------------------------------------------------------- bdi_fits
+
+/// The BDI encoding menu `encode_block_with` sweeps.
+const BDI_MENU: [(usize, usize); 6] = [(8, 1), (4, 1), (8, 2), (2, 1), (4, 2), (8, 4)];
+
+fn bdi_block(rng: &mut Rng, k: usize, flavor: u32) -> Vec<u8> {
+    let n = 64 / k;
+    let mut out = Vec::with_capacity(64);
+    let base: u64 = rng.next_u64();
+    for _ in 0..n {
+        let v: u64 = match flavor {
+            // clustered near the block base with near-boundary deltas:
+            // |delta| hovers around every d's sign boundary
+            0 => {
+                let d = [127i64, 128, 129, -128, -129, 32767, 32768, -32768, -32769]
+                    [rng.below(9) as usize];
+                base.wrapping_add(d as u64)
+            }
+            // small values that zero-fit for most d
+            1 => rng.below(200),
+            // mix of zero-fitting and base-clustered
+            2 => {
+                if rng.chance(0.5) {
+                    rng.below(100)
+                } else {
+                    base.wrapping_add(rng.range_i64(-120, 120) as u64)
+                }
+            }
+            // adversarial: random full-width words
+            _ => rng.next_u64(),
+        };
+        for b in 0..k {
+            out.push((v >> (8 * b)) as u8);
+        }
+    }
+    out
+}
+
+#[test]
+fn bdi_fits_matches_scalar_across_menu() {
+    let mut rng = Rng::new(47);
+    for trial in 0u32..300 {
+        for &(k, d) in &BDI_MENU {
+            let block = bdi_block(&mut rng, k, trial % 4);
+            let want = (scalar().bdi_fits)(&block, k, d);
+            for ker in backends() {
+                assert_eq!(
+                    (ker.bdi_fits)(&block, k, d),
+                    want,
+                    "{} trial {} k {} d {}",
+                    ker.isa.name(),
+                    trial,
+                    k,
+                    d
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn bdi_fits_boundary_deltas_classify_identically() {
+    // hand-built blocks sitting exactly on the d-byte sign boundary:
+    // base, then base + (2^(8d-1) - 1) [fits] vs base + 2^(8d-1) [misses]
+    for &(k, d) in &BDI_MENU {
+        let bias = 1u64 << (8 * d - 1);
+        let base = 0x1111_2222_3333_4444u64 & ((1u64 << (8 * k as u32 - 1)) - 1);
+        for (delta, _should_fit_base) in [(bias - 1, true), (bias, false)] {
+            let n = 64 / k;
+            let mut block = Vec::with_capacity(64);
+            for i in 0..n {
+                let v = if i == 0 { base } else { base.wrapping_add(delta) };
+                for b in 0..k {
+                    block.push((v >> (8 * b)) as u8);
+                }
+            }
+            let want = (scalar().bdi_fits)(&block, k, d);
+            for ker in backends() {
+                assert_eq!(
+                    (ker.bdi_fits)(&block, k, d),
+                    want,
+                    "{} k {} d {} delta {}",
+                    ker.isa.name(),
+                    k,
+                    d,
+                    delta
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn bdi_wire_bytes_identical_under_every_forced_isa() {
+    // whole-image BDI compression must emit bit-identical streams no
+    // matter which backend served the feasibility scans. force() is
+    // process-global, but ISA choice never changes emitted bytes — which
+    // is exactly the invariant under test.
+    let mut rng = Rng::new(53);
+    let mut image = Vec::new();
+    for k in [2usize, 4, 8] {
+        for flavor in 0u32..4 {
+            image.extend(bdi_block(&mut rng, k, flavor));
+        }
+    }
+    image.extend_from_slice(&[0u8; 128]); // zeros + rep tails
+    image.extend_from_slice(&[0xABu8; 64]);
+    let bdi = Bdi::default();
+    simd::force(Some(Isa::Scalar)).unwrap();
+    let reference = bdi.compress(&image);
+    for &isa in Isa::all() {
+        if !isa.supported() {
+            continue;
+        }
+        simd::force(Some(isa)).unwrap();
+        assert_eq!(bdi.compress(&image), reference, "{}", isa.name());
+    }
+    simd::force(None).unwrap();
+    assert_eq!(bdi.decompress(&reference, image.len()).unwrap(), image);
+}
+
+// ---------------------------------------------------------------- gbdi apply
+
+#[test]
+fn gbdi_apply_matches_scalar_including_wrapping() {
+    let mut rng = Rng::new(59);
+    for trial in 0..200 {
+        let table = 1 + rng.below(64) as usize;
+        let adj: Vec<u32> = (0..table).map(|_| rng.next_u32()).collect();
+        let n = rng.below(33) as usize; // 0..=32 words: full chunks + tails
+        let ptrs: Vec<u32> = (0..n).map(|_| rng.below(table as u64) as u32).collect();
+        let raws: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+        let mut want = vec![0u8; 4 * n];
+        (scalar().gbdi_apply_w32)(&adj, &ptrs, &raws, &mut want);
+        for k in backends() {
+            let mut got = vec![0xEEu8; 4 * n];
+            (k.gbdi_apply_w32)(&adj, &ptrs, &raws, &mut got);
+            assert_eq!(got, want, "{} trial {}", k.isa.name(), trial);
+        }
+    }
+}
+
+// ------------------------------------------------------- end-to-end decode
+
+fn codec() -> GbdiCodec {
+    let cfg = GbdiConfig::default();
+    let table = GlobalBaseTable::new(
+        vec![(1000, 8), (1 << 20, 16), (3_000_000_000, 8)],
+        cfg.word_size,
+        1,
+    );
+    GbdiCodec::new(table, cfg)
+}
+
+fn mixed_image(len_words: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    (0..len_words)
+        .flat_map(|_| {
+            let v: u32 = match rng.below(5) {
+                0 => 1000u32.wrapping_add(rng.range_i64(-127, 127) as u32),
+                1 => (1u32 << 20).wrapping_add(rng.range_i64(-30_000, 30_000) as u32),
+                2 => 3_000_000_000u32.wrapping_add(rng.range_i64(-100, 100) as u32),
+                3 => 0,
+                _ => rng.next_u32(),
+            };
+            v.to_le_bytes()
+        })
+        .collect()
+}
+
+#[test]
+fn simd_decode_matches_scalar_per_block() {
+    // every block of a mixed image, decoded under every backend: same
+    // bytes, same bits consumed (framing is wire-visible)
+    let image = mixed_image(2048, 61);
+    let c = codec();
+    let comp = c.compress_image(&image);
+    let lut = DecodeLut::new(c.table(), c.config());
+    let mut want = vec![0u8; c.config().block_bytes];
+    let mut got = vec![0u8; c.config().block_bytes];
+    let mut off = 0u64;
+    for (i, &bits) in comp.block_bits.iter().enumerate() {
+        let byte = (off / 8) as usize;
+        let sub = (off % 8) as u32;
+        let mut rs = BitReader::new(&comp.payload[byte..]);
+        if sub != 0 {
+            rs.get(sub).unwrap();
+        }
+        decompress_block_lut_with(&mut rs, &lut, &mut want, scalar()).unwrap();
+        for k in backends() {
+            let mut r = BitReader::new(&comp.payload[byte..]);
+            if sub != 0 {
+                r.get(sub).unwrap();
+            }
+            decompress_block_lut_with(&mut r, &lut, &mut got, k).unwrap();
+            assert_eq!(got, want, "{} block {}", k.isa.name(), i);
+            assert_eq!(r.bit_pos(), rs.bit_pos(), "{} block {} framing", k.isa.name(), i);
+        }
+        off += bits as u64;
+    }
+}
+
+#[test]
+fn simd_decode_corruption_classification_matches_reference() {
+    // bit flips + truncation: each backend must classify Ok/Err exactly
+    // like the scalar reference decoder, and agree on bytes when Ok
+    let image = mixed_image(512, 67);
+    let c = codec();
+    let comp = c.compress_image(&image);
+    let lut = DecodeLut::new(c.table(), c.config());
+    let mut rng = Rng::new(71);
+    let mut a = vec![0u8; c.config().block_bytes];
+    let mut b = vec![0u8; c.config().block_bytes];
+    for trial in 0..200 {
+        let mut bad = comp.payload.clone();
+        let i = rng.below(bad.len() as u64) as usize;
+        bad[i] ^= 1 << rng.below(8);
+        if rng.chance(0.3) {
+            bad.truncate(rng.below(bad.len() as u64 + 1) as usize);
+        }
+        let mut rb = BitReader::new(&bad);
+        let reference = decompress_block(&mut rb, c.table(), c.config(), &mut b);
+        for k in backends() {
+            let mut ra = BitReader::new(&bad);
+            let res = decompress_block_lut_with(&mut ra, &lut, &mut a, k);
+            assert_eq!(
+                res.is_ok(),
+                reference.is_ok(),
+                "{} trial {} classification",
+                k.isa.name(),
+                trial
+            );
+            if reference.is_ok() {
+                assert_eq!(a, b, "{} trial {}", k.isa.name(), trial);
+                assert_eq!(ra.bit_pos(), rb.bit_pos(), "{} trial {}", k.isa.name(), trial);
+            }
+        }
+    }
+}
+
+#[test]
+fn w64_tables_fall_back_and_still_agree() {
+    // W64 has no fused SIMD tables; vector backends must take the
+    // reference loop and still decode identically
+    let cfg = GbdiConfig {
+        word_size: WordSize::W64,
+        width_classes: vec![0, 4, 8, 16, 24, 32],
+        ..Default::default()
+    };
+    let table = GlobalBaseTable::new(vec![(0x7F3A_0000_0000, 24), (5_000, 8)], cfg.word_size, 1);
+    let c = GbdiCodec::new(table, cfg.clone());
+    let mut rng = Rng::new(73);
+    let image: Vec<u8> = (0..512)
+        .flat_map(|_| {
+            let v: u64 = match rng.below(3) {
+                0 => 0x7F3A_0000_0000u64.wrapping_add(rng.range_i64(-400_000, 400_000) as u64),
+                1 => 5_000u64.wrapping_add(rng.range_i64(-100, 100) as u64),
+                _ => rng.next_u64(),
+            };
+            v.to_le_bytes()
+        })
+        .collect();
+    let comp = c.compress_image(&image);
+    let lut = DecodeLut::new(c.table(), c.config());
+    let mut want = vec![0u8; cfg.block_bytes];
+    let mut got = vec![0u8; cfg.block_bytes];
+    let mut off = 0u64;
+    for &bits in &comp.block_bits {
+        let byte = (off / 8) as usize;
+        let sub = (off % 8) as u32;
+        let mut rs = BitReader::new(&comp.payload[byte..]);
+        if sub != 0 {
+            rs.get(sub).unwrap();
+        }
+        decompress_block_lut_with(&mut rs, &lut, &mut want, scalar()).unwrap();
+        for k in backends() {
+            let mut r = BitReader::new(&comp.payload[byte..]);
+            if sub != 0 {
+                r.get(sub).unwrap();
+            }
+            decompress_block_lut_with(&mut r, &lut, &mut got, k).unwrap();
+            assert_eq!(got, want, "{}", k.isa.name());
+        }
+        off += bits as u64;
+    }
+}
+
+#[test]
+fn gbdi_wire_bytes_identical_under_every_forced_isa() {
+    // the whole GBDI pipeline — ZERO/REP scans, hinted base search,
+    // emission — must produce bit-identical containers under every
+    // backend (the encoder's first-fit index is wire-visible)
+    let image = mixed_image(4096, 79);
+    let c = codec();
+    simd::force(Some(Isa::Scalar)).unwrap();
+    let reference = c.compress_image(&image);
+    for &isa in Isa::all() {
+        if !isa.supported() {
+            continue;
+        }
+        simd::force(Some(isa)).unwrap();
+        let comp = c.compress_image(&image);
+        assert_eq!(comp.payload, reference.payload, "{} payload", isa.name());
+        assert_eq!(comp.block_bits, reference.block_bits, "{} framing", isa.name());
+        // and the image survives the roundtrip under this backend
+        assert_eq!(
+            gbdi::gbdi::decode::decompress_image(&comp).unwrap(),
+            image,
+            "{} roundtrip",
+            isa.name()
+        );
+    }
+    simd::force(None).unwrap();
+}

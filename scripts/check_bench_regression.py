@@ -3,6 +3,7 @@
 
 Usage:
     check_bench_regression.py CURRENT.json BASELINE.json [--tolerance 0.20]
+                              [--allow-provisional] [--ignore-tags]
 
 Compares the `mib_per_s` of every result name present in BOTH files and
 exits non-zero if any current number falls more than `tolerance` below
@@ -10,21 +11,40 @@ the baseline (default 20%, overridable via --tolerance or the
 BENCH_TOLERANCE env var). Results without throughput (null `mib_per_s`)
 and names missing from either side are reported but never fail the job.
 
-Bootstrap: a baseline carrying `"provisional": true` (the committed
-placeholder before the first real CI run) prints the comparison but
-always exits 0 — replace it with a `BENCH_throughput.json` artifact from
-a representative CI run and drop the flag to arm the gate. See
-docs/OPERATIONS.md ("Throughput regression gate").
+The gate is ARMED by default — these are hard failures, not warnings:
+
+  * exit 2 if the baseline file is missing or unparseable (a gate that
+    silently skips is not a gate);
+  * exit 2 if the baseline carries no throughput results;
+  * exit 2 if the baseline is marked `"provisional": true` and
+    --allow-provisional was not passed. The flag exists for the
+    bootstrap window only: the first CI run on a new perf-relevant
+    change has no real baseline yet, and the bless job
+    (scripts/bless_bench_baseline.py) replaces the placeholder with
+    that run's artifact on the next main push;
+  * exit 2 if the two files disagree on the `tags.isa` environment tag
+    (comparing an AVX2 run against a scalar baseline measures the
+    dispatch table, not the change under test) unless --ignore-tags.
+
+See docs/OPERATIONS.md ("Throughput regression gate").
 """
 
 import argparse
 import json
+import os
 import sys
 
 
-def load_results(path):
-    with open(path, encoding="utf-8") as f:
-        doc = json.load(f)
+def load_doc(path, role):
+    if not os.path.exists(path):
+        print(f"error: {role} file {path!r} does not exist", file=sys.stderr)
+        sys.exit(2)
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: cannot parse {role} file {path!r}: {e}", file=sys.stderr)
+        sys.exit(2)
     results = {}
     for r in doc.get("results", []):
         if r.get("mib_per_s") is not None:
@@ -38,16 +58,43 @@ def main():
     ap.add_argument("baseline")
     ap.add_argument("--tolerance", type=float, default=None,
                     help="allowed fractional regression (default 0.20)")
+    ap.add_argument("--allow-provisional", action="store_true",
+                    help="bootstrap only: tolerate a provisional baseline "
+                         "(informational comparison, exit 0)")
+    ap.add_argument("--ignore-tags", action="store_true",
+                    help="skip the tags.isa environment-match check")
     args = ap.parse_args()
 
-    import os
     tolerance = args.tolerance
     if tolerance is None:
         tolerance = float(os.environ.get("BENCH_TOLERANCE", "0.20"))
 
-    cur_doc, current = load_results(args.current)
-    base_doc, baseline = load_results(args.baseline)
+    cur_doc, current = load_doc(args.current, "current")
+    base_doc, baseline = load_doc(args.baseline, "baseline")
     provisional = bool(base_doc.get("provisional"))
+
+    if provisional and not args.allow_provisional:
+        print(f"error: baseline {args.baseline!r} is marked provisional; "
+              "the gate refuses to run against a placeholder.\n"
+              "Bless a real CI artifact (scripts/bless_bench_baseline.py) "
+              "or pass --allow-provisional during bootstrap.",
+              file=sys.stderr)
+        return 2
+    if not baseline and not provisional:
+        print(f"error: baseline {args.baseline!r} carries no throughput "
+              "results; refusing to gate against an empty baseline",
+              file=sys.stderr)
+        return 2
+
+    if not args.ignore_tags:
+        cur_isa = (cur_doc.get("tags") or {}).get("isa")
+        base_isa = (base_doc.get("tags") or {}).get("isa")
+        if cur_isa and base_isa and cur_isa != base_isa:
+            print(f"error: tags.isa mismatch: current run used {cur_isa!r}, "
+                  f"baseline was recorded under {base_isa!r}. Re-bless the "
+                  "baseline on matching hardware or pass --ignore-tags.",
+                  file=sys.stderr)
+            return 2
 
     regressions = []
     print(f"{'benchmark':<44} {'baseline':>12} {'current':>12} {'delta':>8}")
@@ -65,10 +112,9 @@ def main():
     for name in sorted(set(current) - set(baseline)):
         print(f"{name:<44} {'--':>12} {current[name]:>10.1f}   (new, not gated)")
 
-    if not baseline:
-        print("\nbaseline carries no throughput results; nothing to gate")
     if provisional:
-        print("\nbaseline is marked provisional: comparison is informational only")
+        print("\nbaseline is provisional (--allow-provisional): "
+              "comparison is informational only")
         return 0
     if regressions:
         print(f"\n{len(regressions)} benchmark(s) regressed more than "
