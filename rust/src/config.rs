@@ -26,6 +26,9 @@
 //! selector = "minibatch"     # lloyd | minibatch | histogram
 //! drift_margin = 1.02
 //! swap_margin = 0.98
+//!
+//! [cache]
+//! bytes = 4m                 # hot-block cache budget; 0 (default) = off
 //! ```
 
 use crate::cli::parse_u64;
@@ -222,6 +225,7 @@ impl ConfigFile {
             swap_margin,
             shards,
             ingest_batch,
+            cache_bytes: self.get_u64("cache", "bytes", d.cache_bytes as u64)? as usize,
         })
     }
 
@@ -255,6 +259,9 @@ analyze_every = 1k
 [analyzer]
 selector = "minibatch"
 drift_margin = 1.05
+
+[cache]
+bytes = 4m
 "#;
 
     #[test]
@@ -292,8 +299,25 @@ drift_margin = 1.05
         assert_eq!(cfg.codec.block_bytes, 128);
         assert_eq!(cfg.selector, SelectorKind::MiniBatch);
         assert!((cfg.drift_margin - 1.05).abs() < 1e-12);
+        assert_eq!(cfg.cache_bytes, 4 << 20);
         // unspecified analyzer keys keep their defaults
         assert!((cfg.swap_margin - ServiceConfig::default().swap_margin).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_section_defaults_off_and_validates() {
+        // no [cache] section: the cache stays disabled
+        let c = ConfigFile::parse("").unwrap().service_config().unwrap();
+        assert_eq!(c.cache_bytes, 0);
+        assert_eq!(ServiceConfig::default().cache_bytes, 0);
+        // explicit zero is also off; suffixed sizes parse
+        let c = ConfigFile::parse("[cache]\nbytes = 0").unwrap().service_config().unwrap();
+        assert_eq!(c.cache_bytes, 0);
+        let c = ConfigFile::parse("[cache]\nbytes = 64k").unwrap().service_config().unwrap();
+        assert_eq!(c.cache_bytes, 64 << 10);
+        // type errors are caught
+        let c = ConfigFile::parse("[cache]\nbytes = \"lots\"").unwrap();
+        assert!(c.service_config().is_err());
     }
 
     #[test]

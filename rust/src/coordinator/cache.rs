@@ -1,0 +1,505 @@
+//! Hot-block cache: a bounded S3-FIFO over uncompressed 64-byte blocks.
+//!
+//! One instance sits in front of each shard of the
+//! [`ShardedPageStore`](super::store::ShardedPageStore) (behind the
+//! shard's cache mutex). The structure itself is lock-free data — all
+//! locking and all interaction with frames happens in the store, which
+//! acquires the cache mutex *before* the shard's state lock, never the
+//! reverse.
+//!
+//! The replacement policy is S3-FIFO (Yang et al., SOSP '23):
+//!
+//! * a **small** probationary FIFO (~10% of capacity) absorbs new
+//!   admissions, so one-hit wonders wash out without disturbing the
+//!   resident hot set;
+//! * a **main** FIFO holds blocks that proved themselves — re-referenced
+//!   in small (the ref bit), re-admitted while still in ghost, or
+//!   admitted hot by the store's latency heuristic;
+//! * a **ghost** FIFO remembers recently evicted keys (no data) so a
+//!   quick second touch promotes straight to main.
+//!
+//! Entries carry a `dirty` bit: a deferred block write updates the
+//! cached copy only, and the compressed frame is brought up to date when
+//! the block is evicted, its page is removed/migrated, or the store
+//! flushes explicitly. Eviction therefore *returns* the evicted blocks
+//! — the store owns the flush, because flushing needs the shard lock.
+//!
+//! Queues use lazy deletion: each resident entry carries a sequence
+//! number and its queue records `(key, seq)`, so promotions,
+//! invalidations, and re-admissions never have to search a `VecDeque` —
+//! stale queue slots are skipped when they surface at the head.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+/// Cache key: `(page_id, block_index)`.
+pub type BlockKey = (u64, u32);
+
+/// A block pushed out of the cache by capacity pressure. `dirty` means
+/// the data was never written back to the frame — the caller must flush
+/// it through `Frame::write_block` or the write is lost.
+#[derive(Debug)]
+pub struct EvictedBlock {
+    /// Page the block belongs to.
+    pub page_id: u64,
+    /// Block index within the page.
+    pub block: u32,
+    /// Whether the frame still holds a stale encoding of this block.
+    pub dirty: bool,
+    /// The uncompressed block bytes (moved out of the cache).
+    pub data: Vec<u8>,
+}
+
+struct Entry {
+    data: Vec<u8>,
+    dirty: bool,
+    referenced: bool,
+    in_main: bool,
+    seq: u64,
+}
+
+/// One shard's hot-block cache. Capacity is in *bytes* of cached block
+/// data; queue/map overhead is not charged (it is a small constant per
+/// 64-byte block).
+pub struct BlockCache {
+    capacity: usize,
+    /// Byte budget for the probationary queue (~10% of capacity).
+    small_target: usize,
+    map: HashMap<BlockKey, Entry>,
+    small: VecDeque<(BlockKey, u64)>,
+    main: VecDeque<(BlockKey, u64)>,
+    ghost: VecDeque<BlockKey>,
+    ghost_set: HashSet<BlockKey>,
+    ghost_cap: usize,
+    used: usize,
+    small_used: usize,
+    dirty_blocks: usize,
+    dirty_bytes: usize,
+    seq: u64,
+}
+
+impl BlockCache {
+    /// Empty cache bounded to `capacity_bytes` of block data.
+    pub fn new(capacity_bytes: usize) -> Self {
+        let capacity = capacity_bytes.max(64);
+        BlockCache {
+            capacity,
+            small_target: (capacity / 10).max(64),
+            map: HashMap::new(),
+            small: VecDeque::new(),
+            main: VecDeque::new(),
+            ghost: VecDeque::new(),
+            ghost_set: HashSet::new(),
+            // remember about one capacity's worth of 64-byte evictees
+            ghost_cap: (capacity / 64).max(16),
+            used: 0,
+            small_used: 0,
+            dirty_blocks: 0,
+            dirty_bytes: 0,
+            seq: 0,
+        }
+    }
+
+    /// Byte capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Resident blocks.
+    pub fn resident_blocks(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Resident uncompressed bytes (clean + dirty).
+    pub fn resident_bytes(&self) -> usize {
+        self.used
+    }
+
+    /// Resident blocks whose frame encoding is stale.
+    pub fn dirty_blocks(&self) -> usize {
+        self.dirty_blocks
+    }
+
+    /// Bytes of dirty (deferred-write) block data.
+    pub fn dirty_bytes(&self) -> usize {
+        self.dirty_bytes
+    }
+
+    /// Serve a hit: returns the cached bytes and sets the ref bit, or
+    /// `None` on a miss.
+    pub fn get(&mut self, key: BlockKey) -> Option<&[u8]> {
+        let e = self.map.get_mut(&key)?;
+        e.referenced = true;
+        Some(&e.data)
+    }
+
+    /// Length of the cached block without touching the ref bit (the
+    /// write path validates the caller's buffer against it).
+    pub fn cached_len(&self, key: BlockKey) -> Option<usize> {
+        self.map.get(&key).map(|e| e.data.len())
+    }
+
+    /// Absorb a write into a resident block: overwrites the cached copy,
+    /// marks it dirty + referenced, and leaves the frame untouched. The
+    /// caller must have checked [`Self::cached_len`] first; `data` must
+    /// match it exactly.
+    pub fn absorb_write(&mut self, key: BlockKey, data: &[u8]) {
+        let e = self.map.get_mut(&key).expect("absorb_write on a non-resident block");
+        debug_assert_eq!(e.data.len(), data.len());
+        e.data.copy_from_slice(data);
+        e.referenced = true;
+        if !e.dirty {
+            e.dirty = true;
+            self.dirty_blocks += 1;
+            self.dirty_bytes += e.data.len();
+        }
+    }
+
+    /// Admit a block. `hot` skips the probationary queue (the store sets
+    /// it from its latency heuristic); a ghost hit does the same. Any
+    /// blocks pushed out by capacity pressure are returned — dirty ones
+    /// carry deferred writes the caller must flush.
+    pub fn insert(
+        &mut self,
+        key: BlockKey,
+        data: Vec<u8>,
+        dirty: bool,
+        hot: bool,
+    ) -> Vec<EvictedBlock> {
+        debug_assert!(!self.map.contains_key(&key), "insert over a resident block");
+        if data.len() > self.capacity {
+            // can never fit; hand it straight back
+            return vec![EvictedBlock { page_id: key.0, block: key.1, dirty, data }];
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        let len = data.len();
+        let to_main = hot || self.ghost_set.contains(&key);
+        self.map.insert(key, Entry { data, dirty, referenced: false, in_main: to_main, seq });
+        self.used += len;
+        if dirty {
+            self.dirty_blocks += 1;
+            self.dirty_bytes += len;
+        }
+        if to_main {
+            self.main.push_back((key, seq));
+        } else {
+            self.small.push_back((key, seq));
+            self.small_used += len;
+        }
+        let mut evicted = Vec::new();
+        while self.used > self.capacity {
+            let from_small = self.small_used > self.small_target || self.main.is_empty();
+            let progressed = if from_small {
+                self.evict_from_small(&mut evicted) || self.evict_from_main(&mut evicted)
+            } else {
+                self.evict_from_main(&mut evicted) || self.evict_from_small(&mut evicted)
+            };
+            if !progressed {
+                debug_assert!(false, "cache over capacity with nothing evictable");
+                break;
+            }
+        }
+        evicted
+    }
+
+    /// Block indexes of this page with deferred writes, sorted.
+    pub fn dirty_blocks_of_page(&self, page_id: u64) -> Vec<u32> {
+        let mut blocks: Vec<u32> = self
+            .map
+            .iter()
+            .filter(|((id, _), e)| *id == page_id && e.dirty)
+            .map(|((_, b), _)| *b)
+            .collect();
+        blocks.sort_unstable();
+        blocks
+    }
+
+    /// Page ids that have at least one deferred write, sorted.
+    pub fn dirty_pages(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self
+            .map
+            .iter()
+            .filter(|(_, e)| e.dirty)
+            .map(|((id, _), _)| *id)
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// The cached bytes of a resident block (no ref-bit side effect).
+    pub fn data_of(&self, key: BlockKey) -> Option<&[u8]> {
+        self.map.get(&key).map(|e| e.data.as_slice())
+    }
+
+    /// Mark a resident block clean after its deferred write was flushed.
+    pub fn mark_clean(&mut self, key: BlockKey) {
+        if let Some(e) = self.map.get_mut(&key) {
+            if e.dirty {
+                e.dirty = false;
+                self.dirty_blocks -= 1;
+                self.dirty_bytes -= e.data.len();
+            }
+        }
+    }
+
+    /// Drop every entry of a page (stale after a `put` overwrite, gone
+    /// after a `remove`). Queue slots are left to lazy deletion. Returns
+    /// how many entries were dropped. The caller is responsible for
+    /// flushing dirty blocks *before* invalidating if the writes matter.
+    pub fn invalidate_page(&mut self, page_id: u64) -> usize {
+        let keys: Vec<BlockKey> =
+            self.map.keys().filter(|(id, _)| *id == page_id).copied().collect();
+        for key in &keys {
+            let e = self.map.remove(key).expect("key collected from map");
+            self.used -= e.data.len();
+            if !e.in_main {
+                self.small_used -= e.data.len();
+            }
+            if e.dirty {
+                self.dirty_blocks -= 1;
+                self.dirty_bytes -= e.data.len();
+            }
+        }
+        keys.len()
+    }
+
+    /// One S3-FIFO step on the probationary queue: referenced survivors
+    /// promote to main, the first unreferenced victim is evicted (and
+    /// remembered in ghost). Returns whether a block was evicted.
+    fn evict_from_small(&mut self, out: &mut Vec<EvictedBlock>) -> bool {
+        while let Some((key, seq)) = self.small.pop_front() {
+            let live = matches!(self.map.get(&key), Some(e) if e.seq == seq && !e.in_main);
+            if !live {
+                continue;
+            }
+            let e = self.map.get_mut(&key).expect("live entry");
+            self.small_used -= e.data.len();
+            if e.referenced {
+                e.referenced = false;
+                e.in_main = true;
+                self.main.push_back((key, seq));
+            } else {
+                let e = self.map.remove(&key).expect("live entry");
+                self.used -= e.data.len();
+                if e.dirty {
+                    self.dirty_blocks -= 1;
+                    self.dirty_bytes -= e.data.len();
+                }
+                self.push_ghost(key);
+                out.push(EvictedBlock {
+                    page_id: key.0,
+                    block: key.1,
+                    dirty: e.dirty,
+                    data: e.data,
+                });
+                return true;
+            }
+        }
+        false
+    }
+
+    /// One S3-FIFO step on the main queue: referenced entries get a
+    /// second lap (ref bit cleared), the first unreferenced victim is
+    /// evicted. Returns whether a block was evicted.
+    fn evict_from_main(&mut self, out: &mut Vec<EvictedBlock>) -> bool {
+        while let Some((key, seq)) = self.main.pop_front() {
+            let live = matches!(self.map.get(&key), Some(e) if e.seq == seq && e.in_main);
+            if !live {
+                continue;
+            }
+            let e = self.map.get_mut(&key).expect("live entry");
+            if e.referenced {
+                e.referenced = false;
+                self.main.push_back((key, seq));
+            } else {
+                let e = self.map.remove(&key).expect("live entry");
+                self.used -= e.data.len();
+                if e.dirty {
+                    self.dirty_blocks -= 1;
+                    self.dirty_bytes -= e.data.len();
+                }
+                out.push(EvictedBlock {
+                    page_id: key.0,
+                    block: key.1,
+                    dirty: e.dirty,
+                    data: e.data,
+                });
+                return true;
+            }
+        }
+        false
+    }
+
+    fn push_ghost(&mut self, key: BlockKey) {
+        if self.ghost_set.insert(key) {
+            self.ghost.push_back(key);
+            while self.ghost.len() > self.ghost_cap {
+                if let Some(old) = self.ghost.pop_front() {
+                    self.ghost_set.remove(&old);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block(v: u8) -> Vec<u8> {
+        vec![v; 64]
+    }
+
+    #[test]
+    fn hits_and_misses() {
+        let mut c = BlockCache::new(1024);
+        assert!(c.get((1, 0)).is_none());
+        assert!(c.insert((1, 0), block(7), false, false).is_empty());
+        assert_eq!(c.get((1, 0)).unwrap(), &block(7)[..]);
+        assert_eq!(c.resident_blocks(), 1);
+        assert_eq!(c.resident_bytes(), 64);
+        assert_eq!(c.dirty_blocks(), 0);
+    }
+
+    #[test]
+    fn absorbed_writes_track_dirty_bytes() {
+        let mut c = BlockCache::new(1024);
+        c.insert((1, 0), block(1), false, false);
+        assert_eq!(c.cached_len((1, 0)), Some(64));
+        c.absorb_write((1, 0), &block(2));
+        assert_eq!(c.dirty_blocks(), 1);
+        assert_eq!(c.dirty_bytes(), 64);
+        // a second absorb does not double-count
+        c.absorb_write((1, 0), &block(3));
+        assert_eq!(c.dirty_blocks(), 1);
+        assert_eq!(c.get((1, 0)).unwrap(), &block(3)[..]);
+        c.mark_clean((1, 0));
+        assert_eq!(c.dirty_blocks(), 0);
+        assert_eq!(c.dirty_bytes(), 0);
+    }
+
+    #[test]
+    fn capacity_is_enforced_in_bytes() {
+        // room for exactly 4 blocks
+        let mut c = BlockCache::new(4 * 64);
+        let mut evicted = Vec::new();
+        for b in 0..8u32 {
+            evicted.extend(c.insert((1, b), block(b as u8), false, false));
+        }
+        assert_eq!(c.resident_blocks(), 4);
+        assert_eq!(c.resident_bytes(), 4 * 64);
+        assert_eq!(evicted.len(), 4);
+        for e in &evicted {
+            assert!(!e.dirty);
+        }
+    }
+
+    #[test]
+    fn referenced_probationers_promote_instead_of_evicting() {
+        let mut c = BlockCache::new(4 * 64);
+        c.insert((1, 0), block(0), false, false);
+        assert!(c.get((1, 0)).is_some()); // ref bit set
+        for b in 1..8u32 {
+            c.insert((1, b), block(b as u8), false, false);
+        }
+        // (1,0) survived the sweep that washed out the one-hit wonders
+        assert!(c.data_of((1, 0)).is_some(), "re-referenced block must be promoted");
+    }
+
+    #[test]
+    fn ghost_readmission_goes_to_main() {
+        let mut c = BlockCache::new(4 * 64);
+        // fill + overflow so (1,0) is evicted into ghost
+        for b in 0..8u32 {
+            c.insert((1, b), block(b as u8), false, false);
+        }
+        assert!(c.data_of((1, 0)).is_none());
+        // re-admit: lands in main, so a later probationary sweep spares it
+        c.insert((1, 0), block(0), false, false);
+        for b in 100..104u32 {
+            c.insert((1, b), block(0), false, false);
+        }
+        assert!(c.data_of((1, 0)).is_some(), "ghost hit must bypass probation");
+    }
+
+    #[test]
+    fn dirty_evictions_hand_data_back() {
+        let mut c = BlockCache::new(2 * 64);
+        c.insert((9, 0), block(0xAA), true, false);
+        assert_eq!(c.dirty_blocks(), 1);
+        let mut evicted = Vec::new();
+        for b in 1..4u32 {
+            evicted.extend(c.insert((9, b), block(b as u8), false, false));
+        }
+        let dirty: Vec<&EvictedBlock> = evicted.iter().filter(|e| e.dirty).collect();
+        assert_eq!(dirty.len(), 1);
+        assert_eq!(dirty[0].page_id, 9);
+        assert_eq!(dirty[0].block, 0);
+        assert_eq!(dirty[0].data, block(0xAA));
+        assert_eq!(c.dirty_blocks(), 0, "dirty bytes left with the eviction");
+    }
+
+    #[test]
+    fn invalidate_page_drops_only_that_page() {
+        let mut c = BlockCache::new(1024);
+        c.insert((1, 0), block(1), true, false);
+        c.insert((1, 1), block(2), false, false);
+        c.insert((2, 0), block(3), true, false);
+        assert_eq!(c.invalidate_page(1), 2);
+        assert!(c.data_of((1, 0)).is_none());
+        assert!(c.data_of((2, 0)).is_some());
+        assert_eq!(c.resident_blocks(), 1);
+        assert_eq!(c.resident_bytes(), 64);
+        assert_eq!(c.dirty_blocks(), 1);
+        // stale queue slots from page 1 must not break later evictions
+        for b in 1..40u32 {
+            c.insert((2, b), block(0), false, false);
+        }
+        assert!(c.resident_bytes() <= c.capacity());
+    }
+
+    #[test]
+    fn dirty_page_enumeration_is_sorted_and_deduped() {
+        let mut c = BlockCache::new(4096);
+        c.insert((5, 3), block(0), true, false);
+        c.insert((5, 1), block(0), true, false);
+        c.insert((5, 2), block(0), false, false);
+        c.insert((3, 0), block(0), true, false);
+        assert_eq!(c.dirty_pages(), vec![3, 5]);
+        assert_eq!(c.dirty_blocks_of_page(5), vec![1, 3]);
+        assert_eq!(c.dirty_blocks_of_page(3), vec![0]);
+        assert_eq!(c.dirty_blocks_of_page(99), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn reinsert_after_invalidate_is_consistent() {
+        // a stale queue slot for a key must not shadow its fresh entry
+        let mut c = BlockCache::new(8 * 64);
+        c.insert((1, 0), block(1), false, false);
+        c.invalidate_page(1);
+        c.insert((1, 0), block(2), false, false);
+        assert_eq!(c.data_of((1, 0)).unwrap(), &block(2)[..]);
+        // churn until well past where the stale slot surfaces
+        for b in 0..64u32 {
+            c.insert((7, b), block(0), false, false);
+        }
+        assert!(c.resident_bytes() <= c.capacity());
+        // internal byte accounting still reconciles with the map
+        let total: usize = (0..64u32)
+            .filter_map(|b| c.data_of((7, b)))
+            .map(|d| d.len())
+            .sum::<usize>()
+            + c.data_of((1, 0)).map_or(0, |d| d.len());
+        assert_eq!(total, c.resident_bytes());
+    }
+
+    #[test]
+    fn oversized_block_bounces() {
+        let mut c = BlockCache::new(64);
+        let e = c.insert((1, 0), vec![0u8; 4096], true, true);
+        assert_eq!(e.len(), 1);
+        assert!(e[0].dirty);
+        assert_eq!(c.resident_blocks(), 0);
+    }
+}

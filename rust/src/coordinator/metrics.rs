@@ -8,10 +8,14 @@
 //! * [`ShardMetrics`] / [`ShardMetricsSnapshot`] — per-shard counters
 //!   owned by each shard of the
 //!   [`ShardedPageStore`](super::store::ShardedPageStore): occupancy,
-//!   exclusive lock-hold time, and block read/write latency. The
-//!   invariant the stress tests pin down: per-shard block-op counters
-//!   sum exactly to the service-wide totals, because both sides count
-//!   the same successful operations once.
+//!   exclusive lock-hold time, block read/write latency, and the
+//!   hot-block cache tier (hits, misses, admissions, evictions,
+//!   deferred flushes, plus residency gauges). The invariant the stress
+//!   tests pin down: per-shard block-op counters sum exactly to the
+//!   service-wide totals, because both sides count the same successful
+//!   operations once. Service-wide cache totals are the sum of the
+//!   shard snapshots ([`CacheTotals::from_shards`]) — there is no
+//!   second counter to drift.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -207,6 +211,11 @@ pub struct ShardMetrics {
     block_write_ns: AtomicU64,
     lock_holds: AtomicU64,
     lock_hold_ns: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    cache_admissions: AtomicU64,
+    cache_evictions: AtomicU64,
+    deferred_flushes: AtomicU64,
 }
 
 impl ShardMetrics {
@@ -235,14 +244,54 @@ impl ShardMetrics {
         self.lock_hold_ns.fetch_add(ns, Ordering::Relaxed);
     }
 
+    /// Record a block op served straight from the hot-block cache (a
+    /// read hit, or a write absorbed into a resident dirty block).
+    pub fn cache_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a block op that had to go through the compressed frame.
+    pub fn cache_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a block admitted into the cache after a miss.
+    pub fn cache_admission(&self) {
+        self.cache_admissions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` blocks pushed out of the cache by capacity pressure.
+    pub fn cache_evicted(&self, n: u64) {
+        self.cache_evictions.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record `n` deferred block writes flushed back through their
+    /// frames (on eviction, page removal/migration, or explicit flush).
+    pub fn deferred_flushed(&self, n: u64) {
+        self.deferred_flushes.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Live mean block-read latency in nanoseconds (0 before the first
+    /// read) — the cache admission heuristic compares each miss's
+    /// decode cost against it without taking a snapshot.
+    pub fn block_read_mean_ns(&self) -> f64 {
+        let n = self.block_reads.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.block_read_ns.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
     /// Snapshot the counters, attaching the occupancy gauges the caller
-    /// read under the shard lock.
+    /// read under the shard lock (and cache mutex).
     pub fn snapshot(
         &self,
         shard: usize,
         pages: u64,
         logical_bytes: u64,
         stored_bytes: u64,
+        cache: CacheGauges,
     ) -> ShardMetricsSnapshot {
         ShardMetricsSnapshot {
             shard,
@@ -255,8 +304,31 @@ impl ShardMetrics {
             block_write_ns: self.block_write_ns.load(Ordering::Relaxed),
             lock_holds: self.lock_holds.load(Ordering::Relaxed),
             lock_hold_ns: self.lock_hold_ns.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            cache_admissions: self.cache_admissions.load(Ordering::Relaxed),
+            cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
+            deferred_flushes: self.deferred_flushes.load(Ordering::Relaxed),
+            cached_blocks: cache.blocks,
+            cached_bytes: cache.bytes,
+            cached_dirty_blocks: cache.dirty_blocks,
+            cached_dirty_bytes: cache.dirty_bytes,
         }
     }
+}
+
+/// Occupancy gauges of one shard's hot-block cache, read under the
+/// cache mutex at snapshot time (all zero when the cache is off).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheGauges {
+    /// Blocks resident in the cache.
+    pub blocks: u64,
+    /// Uncompressed bytes resident in the cache.
+    pub bytes: u64,
+    /// Resident blocks carrying a deferred (unflushed) write.
+    pub dirty_blocks: u64,
+    /// Bytes of deferred-write block data.
+    pub dirty_bytes: u64,
 }
 
 /// Point-in-time copy of one shard's [`ShardMetrics`] plus its occupancy.
@@ -282,6 +354,24 @@ pub struct ShardMetricsSnapshot {
     pub lock_holds: u64,
     /// Nanoseconds the exclusive lock was held in total.
     pub lock_hold_ns: u64,
+    /// Block ops served straight from the hot-block cache.
+    pub cache_hits: u64,
+    /// Block ops that went through the compressed frame.
+    pub cache_misses: u64,
+    /// Blocks admitted into the cache.
+    pub cache_admissions: u64,
+    /// Blocks evicted from the cache by capacity pressure.
+    pub cache_evictions: u64,
+    /// Deferred block writes flushed back through frames.
+    pub deferred_flushes: u64,
+    /// Blocks resident in the cache at snapshot time.
+    pub cached_blocks: u64,
+    /// Uncompressed bytes resident in the cache at snapshot time.
+    pub cached_bytes: u64,
+    /// Resident blocks with a deferred write at snapshot time.
+    pub cached_dirty_blocks: u64,
+    /// Bytes of deferred-write data at snapshot time.
+    pub cached_dirty_bytes: u64,
 }
 
 impl ShardMetricsSnapshot {
@@ -313,6 +403,71 @@ impl ShardMetricsSnapshot {
             self.lock_hold_ns as f64 / self.lock_holds as f64
         }
     }
+
+    /// Fraction of block ops served from the cache (0 before the first
+    /// op or with the cache off).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+}
+
+/// Service-wide hot-block cache totals: the sum of the per-shard
+/// snapshots, so the totals can never drift from the shard counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheTotals {
+    /// Block ops served straight from the cache.
+    pub hits: u64,
+    /// Block ops that went through the compressed frames.
+    pub misses: u64,
+    /// Blocks admitted into the cache.
+    pub admissions: u64,
+    /// Blocks evicted by capacity pressure.
+    pub evictions: u64,
+    /// Deferred block writes flushed back through frames.
+    pub deferred_flushes: u64,
+    /// Blocks resident across all shard caches.
+    pub cached_blocks: u64,
+    /// Uncompressed bytes resident across all shard caches.
+    pub cached_bytes: u64,
+    /// Resident blocks with a deferred write.
+    pub dirty_blocks: u64,
+    /// Bytes of deferred-write data.
+    pub dirty_bytes: u64,
+}
+
+impl CacheTotals {
+    /// Sum the per-shard snapshots into service totals.
+    pub fn from_shards(shards: &[ShardMetricsSnapshot]) -> Self {
+        let mut t = CacheTotals::default();
+        for s in shards {
+            t.hits += s.cache_hits;
+            t.misses += s.cache_misses;
+            t.admissions += s.cache_admissions;
+            t.evictions += s.cache_evictions;
+            t.deferred_flushes += s.deferred_flushes;
+            t.cached_blocks += s.cached_blocks;
+            t.cached_bytes += s.cached_bytes;
+            t.dirty_blocks += s.cached_dirty_blocks;
+            t.dirty_bytes += s.cached_dirty_bytes;
+        }
+        t
+    }
+
+    /// Fraction of block ops served from the cache (0 before the first
+    /// op or with the cache off).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
 }
 
 #[cfg(test)]
@@ -327,7 +482,8 @@ mod shard_tests {
         m.block_write(500);
         m.lock_hold(40);
         m.lock_hold(60);
-        let s = m.snapshot(3, 7, 7 * 4096, 9000);
+        assert_eq!(m.block_read_mean_ns(), 200.0);
+        let s = m.snapshot(3, 7, 7 * 4096, 9000, CacheGauges::default());
         assert_eq!(s.shard, 3);
         assert_eq!(s.pages, 7);
         assert_eq!(s.logical_bytes, 7 * 4096);
@@ -338,14 +494,51 @@ mod shard_tests {
         assert_eq!(s.block_write_mean_ns(), 500.0);
         assert_eq!(s.lock_holds, 2);
         assert_eq!(s.lock_hold_mean_ns(), 50.0);
+        assert_eq!(s.cache_hit_rate(), 0.0);
     }
 
     #[test]
     fn empty_shard_snapshot_sane() {
-        let s = ShardMetrics::new().snapshot(0, 0, 0, 0);
+        let m = ShardMetrics::new();
+        assert_eq!(m.block_read_mean_ns(), 0.0);
+        let s = m.snapshot(0, 0, 0, 0, CacheGauges::default());
         assert_eq!(s.block_read_mean_ns(), 0.0);
         assert_eq!(s.block_write_mean_ns(), 0.0);
         assert_eq!(s.lock_hold_mean_ns(), 0.0);
+        assert_eq!(s.cache_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn cache_counters_accumulate_and_sum() {
+        let a = ShardMetrics::new();
+        a.cache_hit();
+        a.cache_hit();
+        a.cache_miss();
+        a.cache_admission();
+        a.cache_evicted(3);
+        a.deferred_flushed(2);
+        let b = ShardMetrics::new();
+        b.cache_hit();
+        b.cache_miss();
+        let ga = CacheGauges { blocks: 4, bytes: 256, dirty_blocks: 1, dirty_bytes: 64 };
+        let gb = CacheGauges { blocks: 2, bytes: 128, dirty_blocks: 0, dirty_bytes: 0 };
+        let snaps = vec![a.snapshot(0, 0, 0, 0, ga), b.snapshot(1, 0, 0, 0, gb)];
+        assert_eq!(snaps[0].cache_hits, 2);
+        assert_eq!(snaps[0].cache_evictions, 3);
+        assert_eq!(snaps[0].deferred_flushes, 2);
+        assert!((snaps[0].cache_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        let t = CacheTotals::from_shards(&snaps);
+        assert_eq!(t.hits, 3);
+        assert_eq!(t.misses, 2);
+        assert_eq!(t.admissions, 1);
+        assert_eq!(t.evictions, 3);
+        assert_eq!(t.deferred_flushes, 2);
+        assert_eq!(t.cached_blocks, 6);
+        assert_eq!(t.cached_bytes, 384);
+        assert_eq!(t.dirty_blocks, 1);
+        assert_eq!(t.dirty_bytes, 64);
+        assert!((t.hit_rate() - 0.6).abs() < 1e-12);
+        assert_eq!(CacheTotals::default().hit_rate(), 0.0);
     }
 }
 

@@ -35,13 +35,23 @@
 //!   foreground traffic on other shards (DESIGN.md §8). The single-lock
 //!   [`store::PageStore`] remains as the reference semantics the
 //!   equivalence property tests check the sharded store against.
+//! * **Hot blocks stay uncompressed.** An optional per-shard S3-FIFO
+//!   [`cache::BlockCache`] serves the Zipfian hot set straight from
+//!   uncompressed memory and *defers* recompression of write-hot
+//!   blocks until they cool (eviction, page removal/migration, or an
+//!   explicit flush) — off by default, observationally equivalent when
+//!   on, and honestly charged in the storage accounting.
 
 pub mod analyzer;
+pub mod cache;
 pub mod metrics;
 pub mod service;
 pub mod store;
 
 pub use analyzer::Analyzer;
-pub use metrics::{Metrics, MetricsSnapshot, ShardMetrics, ShardMetricsSnapshot};
+pub use cache::{BlockCache, EvictedBlock};
+pub use metrics::{
+    CacheGauges, CacheTotals, Metrics, MetricsSnapshot, ShardMetrics, ShardMetricsSnapshot,
+};
 pub use service::{CompressionService, ServiceConfig};
 pub use store::{PageStore, ShardedPageStore, StoredPage};

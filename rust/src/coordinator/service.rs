@@ -36,7 +36,7 @@
 
 use super::analyzer::Analyzer;
 use crate::cluster::{BaseSelector, SelectorKind};
-use super::metrics::{Metrics, MetricsSnapshot, ShardMetricsSnapshot};
+use super::metrics::{CacheTotals, Metrics, MetricsSnapshot, ShardMetricsSnapshot};
 use super::store::{ShardedPageStore, StoredPage};
 use crate::codec::{BlockCodec, Scratch};
 use crate::frame::Frame;
@@ -84,6 +84,11 @@ pub struct ServiceConfig {
     /// page, so larger batches amortize locking at the cost of ingest
     /// latency.
     pub ingest_batch: usize,
+    /// Total bytes of the hot-block cache tier, split evenly across the
+    /// shards ([`ShardedPageStore::with_cache`]). 0 (the default)
+    /// disables the cache entirely: block reads and writes go straight
+    /// to the compressed frames, bit-identical to a cacheless build.
+    pub cache_bytes: usize,
 }
 
 impl Default for ServiceConfig {
@@ -99,6 +104,7 @@ impl Default for ServiceConfig {
             swap_margin: 0.98,
             shards: 8,
             ingest_batch: 32,
+            cache_bytes: 0,
         }
     }
 }
@@ -198,7 +204,10 @@ impl CompressionService {
         analyzer: Option<Analyzer>,
     ) -> Result<Self> {
         let first_version = codec.version();
-        let store = ShardedPageStore::new(config.shards);
+        let mut store = ShardedPageStore::new(config.shards);
+        if config.cache_bytes > 0 {
+            store = store.with_cache(config.cache_bytes);
+        }
         store.publish_codec(Arc::clone(&codec));
         let shared = Arc::new(Shared {
             codec: RwLock::new(codec),
@@ -286,6 +295,17 @@ impl CompressionService {
         r
     }
 
+    /// [`Self::read_page`] into a caller-owned buffer: `out` is cleared
+    /// and refilled, so a loop reusing one `Vec` decompresses page after
+    /// page without allocating once the buffer has grown to page size.
+    pub fn read_page_into(&self, page_id: u64, out: &mut Vec<u8>) -> Result<()> {
+        let r = self.shared.store.read_into(page_id, out);
+        if r.is_err() {
+            self.shared.metrics.read_error();
+        }
+        r
+    }
+
     /// Serve a single-block GET: decode one block of a stored page into
     /// `out` (returns the bytes written) without touching the rest of
     /// the page. O(1) in the page size, contending only with writers of
@@ -355,6 +375,20 @@ impl CompressionService {
     /// Number of page-store shards this service was started with.
     pub fn shard_count(&self) -> usize {
         self.shared.store.shard_count()
+    }
+
+    /// Service-wide hot-block cache counters and gauges — the exact sum
+    /// of the per-shard numbers in [`Self::shard_metrics`]. All zeros
+    /// when the cache is disabled (`cache_bytes: 0`).
+    pub fn cache_totals(&self) -> CacheTotals {
+        self.shared.store.cache_totals()
+    }
+
+    /// Flush every deferred (dirty) cached block back through its
+    /// compressed frame; cached copies stay resident but clean. Returns
+    /// the number of blocks recompressed. No-op without a cache.
+    pub fn flush_cache(&self) -> usize {
+        self.shared.store.flush_cache()
     }
 
     /// Stored/logical byte accounting: (logical, stored, ratio). One
@@ -763,6 +797,68 @@ mod tests {
         // ingest really spread over multiple shards
         assert!(shards.iter().filter(|s| s.pages > 0).count() > 1);
         svc.shutdown();
+    }
+
+    #[test]
+    fn cached_service_matches_cacheless_and_counts_every_block_op() {
+        let w = workloads::by_name("mcf").unwrap();
+        let pages: Vec<Vec<u8>> = (0..32).map(|i| w.generate(4096, i)).collect();
+        let patch = [0xA5u8; 64];
+        let arm = |cache_bytes: usize| {
+            let svc = CompressionService::start_static(
+                ServiceConfig { workers: 2, shards: 4, cache_bytes, ..Default::default() },
+                Arc::new(crate::baselines::bdi::Bdi::default()),
+            )
+            .unwrap();
+            svc.submit_batch(
+                pages.iter().enumerate().map(|(i, p)| (i as u64, p.clone())).collect(),
+            );
+            svc.flush();
+            // skewed block traffic: a small set of (page, block) pairs
+            // re-referenced many times, plus repeated writes to one block
+            let mut line = [0u8; 64];
+            for round in 0..8u64 {
+                for pid in 0..8u64 {
+                    let n = svc.read_block(pid, (pid % 4) as usize, &mut line).unwrap();
+                    assert_eq!(n, 64, "round {round} page {pid}");
+                }
+            }
+            for _ in 0..4 {
+                svc.write_block(3, 5, &patch).unwrap();
+            }
+            let flushed = svc.flush_cache();
+            // page images after the dust settles (deferred or flushed,
+            // the content must be the same)
+            let mut out = Vec::new();
+            let mut images = Vec::new();
+            for i in 0..pages.len() as u64 {
+                svc.read_page_into(i, &mut out).unwrap();
+                images.push(out.clone());
+            }
+            let totals = svc.cache_totals();
+            let shards = CacheTotals::from_shards(&svc.shard_metrics());
+            assert_eq!(totals, shards, "service totals must equal shard sums");
+            let m = svc.shutdown();
+            (images, flushed, totals, m.block_reads + m.block_writes)
+        };
+        let (plain, plain_flushed, plain_totals, _) = arm(0);
+        let (cached, cached_flushed, t, ops) = arm(1 << 20);
+        assert_eq!(plain, cached, "cache must be observationally invisible");
+        let mut expect = pages[3].clone();
+        expect[5 * 64..6 * 64].copy_from_slice(&patch);
+        assert_eq!(plain[3], expect, "block write visible in the page image");
+        assert_eq!(plain_flushed, 0);
+        assert_eq!(plain_totals, CacheTotals::default());
+        // with the cache on, every successful block op is a hit or a miss
+        assert_eq!(t.hits + t.misses, ops);
+        assert!(t.hits > 0, "re-referenced blocks never hit: {t:?}");
+        assert!(t.admissions > 0);
+        // 3 of the 4 writes to (3, 5) were absorbed and deferred; the
+        // explicit flush recompressed that one dirty block
+        assert_eq!(cached_flushed, 1);
+        assert_eq!(t.deferred_flushes, 1);
+        assert_eq!(t.dirty_blocks, 0, "flush leaves the cache clean");
+        assert!(t.cached_bytes > 0, "flushed blocks stay resident");
     }
 
     #[test]

@@ -24,13 +24,26 @@
 //!   codec ring behind its own lock so publishing a new table version
 //!   is a single O(1) insert, not an O(shards) fan-out. All methods are
 //!   `&self`: callers on different shards never contend.
+//!
+//! The sharded store can additionally carry a **hot-block cache tier**
+//! ([`Self::with_cache`](ShardedPageStore::with_cache)): one bounded
+//! S3-FIFO [`BlockCache`](super::cache::BlockCache) per shard, serving
+//! block-read hits straight from uncompressed memory and absorbing
+//! block writes to resident blocks as *deferred recompressions* — the
+//! dirty block stays uncompressed until it cools out of the cache (or
+//! its page is removed/migrated), and only then goes back through the
+//! normal [`Frame::write_block`] path. Lock order is fixed: a shard's
+//! cache mutex is always acquired *before* its state lock, so eviction
+//! flushes can take the state lock without deadlocking. With the cache
+//! off (the default), every code path is byte-identical to before.
 
-use super::metrics::{ShardMetrics, ShardMetricsSnapshot};
+use super::cache::{BlockCache, EvictedBlock};
+use super::metrics::{CacheGauges, CacheTotals, ShardMetrics, ShardMetricsSnapshot};
 use crate::codec::{BlockCodec, Scratch};
 use crate::frame::{BlockWrite, Frame};
 use crate::{Error, Result};
 use std::collections::HashMap;
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
 /// One stored page: a compressed random-access frame. The codec version
@@ -151,6 +164,13 @@ impl PageStore {
         self.page(page_id)?.frame.decompress()
     }
 
+    /// Decompress a whole page into `out`, reusing its allocation — the
+    /// zero-allocation loop shape for page sweeps
+    /// (`tests/alloc_counting.rs` pins it).
+    pub fn read_into(&self, page_id: u64, out: &mut Vec<u8>) -> Result<()> {
+        self.page(page_id)?.frame.decompress_into(out)
+    }
+
     /// Decode one block of a page into `out[..len]`; returns the bytes
     /// written. O(1) in the page size, allocation-free.
     pub fn read_block(&self, page_id: u64, block: usize, out: &mut [u8]) -> Result<usize> {
@@ -206,10 +226,14 @@ impl Default for PageShard {
     }
 }
 
-/// A shard: independently locked state + its hot-path counters.
+/// A shard: independently locked state + its hot-path counters, plus an
+/// optional hot-block cache. The cache sits behind its own mutex,
+/// acquired strictly *before* the state lock — the eviction path holds
+/// the cache mutex while flushing deferred writes under the state lock.
 struct Shard {
     state: RwLock<PageShard>,
     metrics: ShardMetrics,
+    cache: Option<Mutex<BlockCache>>,
 }
 
 /// The concurrent page store: N independently locked shards with
@@ -255,13 +279,15 @@ pub struct ShardedPageStore {
 }
 
 impl ShardedPageStore {
-    /// Empty store with `shards` shards (clamped to at least 1).
+    /// Empty store with `shards` shards (clamped to at least 1). The
+    /// hot-block cache is off; opt in with [`Self::with_cache`].
     pub fn new(shards: usize) -> Self {
         ShardedPageStore {
             shards: (0..shards.max(1))
                 .map(|_| Shard {
                     state: RwLock::new(PageShard::default()),
                     metrics: ShardMetrics::new(),
+                    cache: None,
                 })
                 .collect(),
             codecs: RwLock::new(HashMap::new()),
@@ -278,6 +304,29 @@ impl ShardedPageStore {
     pub fn without_auto_compact(mut self) -> Self {
         self.auto_compact = false;
         self
+    }
+
+    /// Attach a hot-block cache tier of `total_bytes`, split evenly
+    /// across the shards (consuming builder; call at construction,
+    /// before the store is shared). `0` leaves the cache off — every
+    /// code path then behaves byte-identically to a cacheless store.
+    pub fn with_cache(mut self, total_bytes: usize) -> Self {
+        let n = self.shards.len();
+        for shard in &mut self.shards {
+            shard.cache = if total_bytes == 0 {
+                None
+            } else {
+                // clamp so even a tiny budget holds at least a few
+                // 64-byte blocks per shard instead of thrashing
+                Some(Mutex::new(BlockCache::new((total_bytes / n).max(256))))
+            };
+        }
+        self
+    }
+
+    /// Whether the hot-block cache tier is on.
+    pub fn cache_enabled(&self) -> bool {
+        self.shards.first().is_some_and(|s| s.cache.is_some())
     }
 
     /// Number of shards.
@@ -341,6 +390,8 @@ impl ShardedPageStore {
     // ---- writes ----------------------------------------------------------
 
     /// Insert/overwrite a page (one exclusive acquisition of its shard).
+    /// Overwriting drops any cached blocks of the page — including
+    /// deferred writes, which the fresh page image supersedes.
     pub fn put(&self, page_id: u64, page: StoredPage) {
         debug_assert!(
             self.codecs.read().unwrap().contains_key(&page.codec_version()),
@@ -348,8 +399,12 @@ impl ShardedPageStore {
             page.codec_version()
         );
         let shard = self.shard(page_id);
+        let mut cache = shard.cache.as_ref().map(|c| c.lock().unwrap());
         let mut state = shard.state.write().unwrap();
         let t0 = Instant::now();
+        if let Some(cache) = cache.as_deref_mut() {
+            cache.invalidate_page(page_id);
+        }
         state.pages.insert(page_id, page);
         shard.metrics.lock_hold(t0.elapsed().as_nanos() as u64);
     }
@@ -379,20 +434,45 @@ impl ShardedPageStore {
                 continue;
             }
             let shard = &self.shards[idx];
+            let mut cache = shard.cache.as_ref().map(|c| c.lock().unwrap());
             let mut state = shard.state.write().unwrap();
             let t0 = Instant::now();
             for (id, page) in group {
+                if let Some(cache) = cache.as_deref_mut() {
+                    cache.invalidate_page(id);
+                }
                 state.pages.insert(id, page);
             }
             shard.metrics.lock_hold(t0.elapsed().as_nanos() as u64);
         }
     }
 
-    /// Remove a page (returns it).
+    /// Remove a page (returns it). Deferred cached writes are folded
+    /// into the page first, so the caller receives the latest content;
+    /// all cached blocks of the page are dropped.
     pub fn remove(&self, page_id: u64) -> Option<StoredPage> {
         let shard = self.shard(page_id);
+        let mut cache = shard.cache.as_ref().map(|c| c.lock().unwrap());
         let mut state = shard.state.write().unwrap();
         let t0 = Instant::now();
+        if let Some(cache) = cache.as_deref_mut() {
+            let dirty = cache.dirty_blocks_of_page(page_id);
+            if !dirty.is_empty() {
+                let PageShard { pages, scratch } = &mut *state;
+                if let Some(page) = pages.get_mut(&page_id) {
+                    for b in &dirty {
+                        if let Some(data) = cache.data_of((page_id, *b)) {
+                            // cached blocks always index valid blocks of
+                            // a live frame, so this cannot fail; a
+                            // corrupt frame surfaces on the next read
+                            let _ = page.frame.write_block(*b as usize, data, scratch);
+                        }
+                    }
+                    shard.metrics.deferred_flushed(dirty.len() as u64);
+                }
+            }
+            cache.invalidate_page(page_id);
+        }
         let removed = state.pages.remove(&page_id);
         shard.metrics.lock_hold(t0.elapsed().as_nanos() as u64);
         removed
@@ -420,37 +500,133 @@ impl ShardedPageStore {
     ) -> Result<(u32, BlockWrite)> {
         let shard = self.shard(page_id);
         let t0 = Instant::now();
-        let r = {
-            let mut state = shard.state.write().unwrap();
-            let held = Instant::now();
-            let r = {
-                let PageShard { pages, scratch } = &mut *state;
-                match pages.get_mut(&page_id) {
-                    Some(page) => {
-                        // out-of-range blocks fall through to the
-                        // frame's own range error below
-                        let old = if block < page.frame.n_blocks() {
-                            page.frame.block_bits(block)
-                        } else {
-                            0
-                        };
-                        let wr = page.frame.write_block(block, data, scratch);
-                        if wr.is_ok()
-                            && self.auto_compact
-                            && page.frame.patch_len() * 2 > page.frame.compressed_len()
-                        {
-                            page.frame.compact();
-                        }
-                        wr.map(|wr| (old, wr))
-                    }
-                    None => Err(Error::Corrupt(format!("page {page_id} not found"))),
-                }
-            };
-            shard.metrics.lock_hold(held.elapsed().as_nanos() as u64);
-            r
+        let r = match &shard.cache {
+            None => self.write_block_frame(shard, page_id, block, data),
+            Some(cache) => self.write_block_via_cache(shard, cache, page_id, block, data),
         };
         if r.is_ok() {
             shard.metrics.block_write(t0.elapsed().as_nanos() as u64);
+        }
+        r
+    }
+
+    /// The cacheless write path: recompress the block in the frame
+    /// under the shard's exclusive lock (records lock-hold time, not the
+    /// block-write counter — the caller owns that).
+    fn write_block_frame(
+        &self,
+        shard: &Shard,
+        page_id: u64,
+        block: usize,
+        data: &[u8],
+    ) -> Result<(u32, BlockWrite)> {
+        let mut state = shard.state.write().unwrap();
+        let held = Instant::now();
+        let r = {
+            let PageShard { pages, scratch } = &mut *state;
+            match pages.get_mut(&page_id) {
+                Some(page) => {
+                    // out-of-range blocks fall through to the
+                    // frame's own range error below
+                    let old = if block < page.frame.n_blocks() {
+                        page.frame.block_bits(block)
+                    } else {
+                        0
+                    };
+                    let wr = page.frame.write_block(block, data, scratch);
+                    if wr.is_ok()
+                        && self.auto_compact
+                        && page.frame.patch_len() * 2 > page.frame.compressed_len()
+                    {
+                        page.frame.compact();
+                    }
+                    wr.map(|wr| (old, wr))
+                }
+                None => Err(Error::Corrupt(format!("page {page_id} not found"))),
+            }
+        };
+        shard.metrics.lock_hold(held.elapsed().as_nanos() as u64);
+        r
+    }
+
+    /// The cached write path. A write to a *resident* block is absorbed:
+    /// the cached copy is updated and marked dirty, the frame keeps its
+    /// stale encoding until the block cools out of the cache (deferred
+    /// recompression), and the reported [`BlockWrite`] carries the
+    /// frame's current bits with `spilled: false` — no framing changed.
+    /// A write to a cold block goes through the frame as usual, then the
+    /// fresh copy is admitted so a write-hot block's *next* write defers.
+    fn write_block_via_cache(
+        &self,
+        shard: &Shard,
+        cache: &Mutex<BlockCache>,
+        page_id: u64,
+        block: usize,
+        data: &[u8],
+    ) -> Result<(u32, BlockWrite)> {
+        let key = (page_id, block as u32);
+        let mut cache = cache.lock().unwrap();
+        if let Some(cached) = cache.cached_len(key) {
+            if data.len() != cached {
+                return Err(Error::Config(format!(
+                    "write must supply exactly {cached} B for block {block}, got {}",
+                    data.len()
+                )));
+            }
+            cache.absorb_write(key, data);
+            shard.metrics.cache_hit();
+            let state = shard.state.read().unwrap();
+            let bits = match state.pages.get(&page_id) {
+                Some(p) if block < p.frame.n_blocks() => p.frame.block_bits(block),
+                _ => 0,
+            };
+            return Ok((bits, BlockWrite { bits, spilled: false }));
+        }
+        let r = self.write_block_frame(shard, page_id, block, data)?;
+        shard.metrics.cache_miss();
+        let evicted = cache.insert(key, data.to_vec(), false, false);
+        shard.metrics.cache_admission();
+        self.flush_evicted(shard, evicted)?;
+        Ok(r)
+    }
+
+    /// Write the deferred (dirty) blocks the cache pushed out back
+    /// through their frames, under the shard's exclusive lock. Called
+    /// with the shard's cache mutex held (lock order: cache, then state).
+    fn flush_evicted(&self, shard: &Shard, evicted: Vec<EvictedBlock>) -> Result<()> {
+        if evicted.is_empty() {
+            return Ok(());
+        }
+        shard.metrics.cache_evicted(evicted.len() as u64);
+        let dirty: Vec<EvictedBlock> = evicted.into_iter().filter(|e| e.dirty).collect();
+        if dirty.is_empty() {
+            return Ok(());
+        }
+        let mut state = shard.state.write().unwrap();
+        let t0 = Instant::now();
+        let r = {
+            let PageShard { pages, scratch } = &mut *state;
+            let mut out = Ok(());
+            for ev in &dirty {
+                // invariant: a cached entry's page is live (remove/put
+                // invalidate under the cache mutex we are holding)
+                let Some(page) = pages.get_mut(&ev.page_id) else {
+                    out = Err(Error::Corrupt(format!("page {} not found", ev.page_id)));
+                    break;
+                };
+                if let Err(e) = page.frame.write_block(ev.block as usize, &ev.data, scratch) {
+                    out = Err(e);
+                    break;
+                }
+                if self.auto_compact && page.frame.patch_len() * 2 > page.frame.compressed_len() {
+                    page.frame.compact();
+                }
+            }
+            out
+        };
+        shard.metrics.lock_hold(t0.elapsed().as_nanos() as u64);
+        if r.is_ok() {
+            shard.metrics.deferred_flushed(dirty.len() as u64);
         }
         r
     }
@@ -484,6 +660,7 @@ impl ShardedPageStore {
         lagging.truncate(max_pages);
         let mut moved = 0;
         for id in lagging {
+            let mut cache = shard.cache.as_ref().map(|c| c.lock().unwrap());
             let mut state = shard.state.write().unwrap();
             let t0 = Instant::now();
             {
@@ -492,6 +669,24 @@ impl ShardedPageStore {
                 // been removed or already migrated since the snapshot
                 if let Some(page) = pages.get_mut(&id) {
                     if page.codec_version() < target {
+                        // fold deferred cached writes into the frame
+                        // first, or the re-encode would resurrect stale
+                        // content; clean cached copies stay valid since
+                        // the logical content does not change
+                        if let Some(cache) = cache.as_deref_mut() {
+                            let dirty = cache.dirty_blocks_of_page(id);
+                            for b in &dirty {
+                                if let Some(data) = cache.data_of((id, *b)) {
+                                    page.frame.write_block(*b as usize, data, scratch)?;
+                                }
+                            }
+                            for b in &dirty {
+                                cache.mark_clean((id, *b));
+                            }
+                            if !dirty.is_empty() {
+                                shard.metrics.deferred_flushed(dirty.len() as u64);
+                            }
+                        }
                         let data = page.frame.decompress()?;
                         page.frame = Frame::compress_with(Arc::clone(codec), &data, scratch);
                         moved += 1;
@@ -518,27 +713,56 @@ impl ShardedPageStore {
     }
 
     /// Decompress a whole page (each frame carries its own codec, so any
-    /// published version decodes).
+    /// published version decodes). With the cache on, deferred cached
+    /// writes are overlaid so the caller always sees the latest content.
     pub fn read(&self, page_id: u64) -> Result<Vec<u8>> {
-        let state = self.shard(page_id).state.read().unwrap();
-        match state.pages.get(&page_id) {
-            Some(p) => p.frame.decompress(),
-            None => Err(Error::Corrupt(format!("page {page_id} not found"))),
+        let mut out = Vec::new();
+        self.read_into(page_id, &mut out)?;
+        Ok(out)
+    }
+
+    /// Decompress a whole page into `out`, reusing its allocation — the
+    /// zero-allocation loop shape for page sweeps
+    /// (`tests/alloc_counting.rs` pins it). Deferred cached writes are
+    /// overlaid, same as [`Self::read`].
+    pub fn read_into(&self, page_id: u64, out: &mut Vec<u8>) -> Result<()> {
+        let shard = self.shard(page_id);
+        let cache = shard.cache.as_ref().map(|c| c.lock().unwrap());
+        let state = shard.state.read().unwrap();
+        let p = match state.pages.get(&page_id) {
+            Some(p) => p,
+            None => return Err(Error::Corrupt(format!("page {page_id} not found"))),
+        };
+        p.frame.decompress_into(out)?;
+        if let Some(cache) = &cache {
+            let bb = p.frame.block_bytes();
+            for b in cache.dirty_blocks_of_page(page_id) {
+                if let Some(data) = cache.data_of((page_id, b)) {
+                    let off = b as usize * bb;
+                    out[off..off + data.len()].copy_from_slice(data);
+                }
+            }
         }
+        Ok(())
     }
 
     /// Decode one block of a page into `out[..len]`; returns the bytes
     /// written. O(1) in the page size, allocation-free, and concurrent
-    /// with every read on this shard (shared lock side).
+    /// with every read on this shard (shared lock side). With the cache
+    /// on, a resident block is copied straight out of uncompressed
+    /// cache memory — zero decode, zero allocation.
     pub fn read_block(&self, page_id: u64, block: usize, out: &mut [u8]) -> Result<usize> {
         let shard = self.shard(page_id);
         let t0 = Instant::now();
-        let r = {
-            let state = shard.state.read().unwrap();
-            match state.pages.get(&page_id) {
-                Some(p) => p.frame.read_block(block, out),
-                None => Err(Error::Corrupt(format!("page {page_id} not found"))),
+        let r = match &shard.cache {
+            None => {
+                let state = shard.state.read().unwrap();
+                match state.pages.get(&page_id) {
+                    Some(p) => p.frame.read_block(block, out),
+                    None => Err(Error::Corrupt(format!("page {page_id} not found"))),
+                }
             }
+            Some(cache) => self.read_block_via_cache(shard, cache, page_id, block, out),
         };
         if r.is_ok() {
             shard.metrics.block_read(t0.elapsed().as_nanos() as u64);
@@ -546,8 +770,60 @@ impl ShardedPageStore {
         r
     }
 
+    /// The cached read path: serve hits from cache memory; on a miss,
+    /// decode under the shard's read lock and admit the block. Admission
+    /// is latency-driven: a miss whose decode cost at least matches the
+    /// shard's running mean block-read latency skips probation
+    /// (expensive-to-decode blocks are exactly the ones worth keeping
+    /// uncompressed), as does any block still remembered by the ghost
+    /// history.
+    fn read_block_via_cache(
+        &self,
+        shard: &Shard,
+        cache: &Mutex<BlockCache>,
+        page_id: u64,
+        block: usize,
+        out: &mut [u8],
+    ) -> Result<usize> {
+        let key = (page_id, block as u32);
+        let mut cache = cache.lock().unwrap();
+        if let Some(data) = cache.get(key) {
+            let n = data.len();
+            if out.len() < n {
+                return Err(Error::Config(format!(
+                    "output buffer {} B short of block length {n} B",
+                    out.len()
+                )));
+            }
+            out[..n].copy_from_slice(data);
+            shard.metrics.cache_hit();
+            return Ok(n);
+        }
+        // miss: decode under the state read lock. The cache mutex stays
+        // held, so a racing remove/put cannot invalidate the page
+        // between this decode and the admission below.
+        let d0 = Instant::now();
+        let n = {
+            let state = shard.state.read().unwrap();
+            match state.pages.get(&page_id) {
+                Some(p) => p.frame.read_block(block, out)?,
+                None => return Err(Error::Corrupt(format!("page {page_id} not found"))),
+            }
+        };
+        let decode_ns = d0.elapsed().as_nanos() as u64;
+        shard.metrics.cache_miss();
+        let mean = shard.metrics.block_read_mean_ns();
+        let hot = mean > 0.0 && decode_ns as f64 >= mean;
+        let evicted = cache.insert(key, out[..n].to_vec(), false, hot);
+        shard.metrics.cache_admission();
+        self.flush_evicted(shard, evicted)?;
+        Ok(n)
+    }
+
     /// Current exact encoding length of one block of a page, in bits
-    /// (the memory simulator's sector accounting reads this).
+    /// (the memory simulator's sector accounting reads this). This is
+    /// the *compressed tier's* truth: a deferred cached write does not
+    /// change it until the block is flushed.
     pub fn block_bits(&self, page_id: u64, block: usize) -> Result<u32> {
         let state = self.shard(page_id).state.read().unwrap();
         match state.pages.get(&page_id) {
@@ -573,11 +849,25 @@ impl ShardedPageStore {
         self.shards.iter().all(|s| s.state.read().unwrap().pages.is_empty())
     }
 
-    /// Total compressed bytes stored.
+    /// Total physical bytes stored: compressed frames plus any
+    /// uncompressed bytes resident in the hot-block cache — the honest
+    /// numerator, so compression-ratio reporting cannot flatter itself
+    /// by ignoring the cache tier.
     pub fn stored_bytes(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| s.state.read().unwrap().pages.values().map(|p| p.stored_len()).sum::<usize>())
+            .map(|s| {
+                let cache = s.cache.as_ref().map(|c| c.lock().unwrap());
+                let frames = s
+                    .state
+                    .read()
+                    .unwrap()
+                    .pages
+                    .values()
+                    .map(|p| p.stored_len())
+                    .sum::<usize>();
+                frames + cache.map_or(0, |c| c.resident_bytes())
+            })
             .sum()
     }
 
@@ -594,18 +884,76 @@ impl ShardedPageStore {
     /// `(logical_bytes, stored_bytes)` in one sweep: each shard's
     /// contribution is read under a single lock acquisition, so the two
     /// numbers are mutually consistent per shard (and the lock traffic
-    /// is half of calling the two accessors separately).
+    /// is half of calling the two accessors separately). Stored bytes
+    /// include cache-resident uncompressed data, same as
+    /// [`Self::stored_bytes`].
     pub fn usage(&self) -> (usize, usize) {
         let mut logical = 0usize;
         let mut stored = 0usize;
         for shard in &self.shards {
+            let cache = shard.cache.as_ref().map(|c| c.lock().unwrap());
             let state = shard.state.read().unwrap();
             for p in state.pages.values() {
                 logical += p.original_len();
                 stored += p.stored_len();
             }
+            stored += cache.map_or(0, |c| c.resident_bytes());
         }
         (logical, stored)
+    }
+
+    /// Uncompressed bytes resident in the hot-block cache across all
+    /// shards (0 with the cache off).
+    pub fn cache_resident_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.cache.as_ref().map_or(0, |c| c.lock().unwrap().resident_bytes()))
+            .sum()
+    }
+
+    /// Service-wide cache totals: the sum of the per-shard snapshots.
+    pub fn cache_totals(&self) -> CacheTotals {
+        CacheTotals::from_shards(&self.shard_metrics())
+    }
+
+    /// Flush every deferred (dirty) cached block back through its
+    /// frame, leaving the cache resident but clean — shutdown, tests,
+    /// and accounting sweeps use this to bring the compressed tier up
+    /// to date without evicting the hot set. Returns blocks flushed.
+    pub fn flush_cache(&self) -> usize {
+        let mut flushed = 0usize;
+        for shard in &self.shards {
+            let Some(cache) = &shard.cache else { continue };
+            let mut cache = cache.lock().unwrap();
+            let dirty_pages = cache.dirty_pages();
+            if dirty_pages.is_empty() {
+                continue;
+            }
+            let mut state = shard.state.write().unwrap();
+            let t0 = Instant::now();
+            let PageShard { pages, scratch } = &mut *state;
+            for id in dirty_pages {
+                let Some(page) = pages.get_mut(&id) else { continue };
+                let dirty = cache.dirty_blocks_of_page(id);
+                for b in &dirty {
+                    if let Some(data) = cache.data_of((id, *b)) {
+                        // cannot fail for a live cached block; a corrupt
+                        // frame surfaces on the next read
+                        let _ = page.frame.write_block(*b as usize, data, scratch);
+                    }
+                }
+                if self.auto_compact && page.frame.patch_len() * 2 > page.frame.compressed_len() {
+                    page.frame.compact();
+                }
+                for b in &dirty {
+                    cache.mark_clean((id, *b));
+                }
+                shard.metrics.deferred_flushed(dirty.len() as u64);
+                flushed += dirty.len();
+            }
+            shard.metrics.lock_hold(t0.elapsed().as_nanos() as u64);
+        }
+        flushed
     }
 
     /// Ids of pages encoded with a version older than `version`, across
@@ -627,19 +975,29 @@ impl ShardedPageStore {
     }
 
     /// Per-shard metrics: occupancy gauges read under each shard's read
-    /// lock plus the wait-free counters. Counter sums equal the
-    /// service-wide totals (both sides count each successful op once).
+    /// lock (and cache mutex) plus the wait-free counters. Counter sums
+    /// equal the service-wide totals (both sides count each successful
+    /// op once). `stored_bytes` includes cache-resident bytes, matching
+    /// [`Self::usage`].
     pub fn shard_metrics(&self) -> Vec<ShardMetricsSnapshot> {
         self.shards
             .iter()
             .enumerate()
             .map(|(i, shard)| {
+                let cache = shard.cache.as_ref().map(|c| c.lock().unwrap());
+                let gauges = cache.as_ref().map_or(CacheGauges::default(), |c| CacheGauges {
+                    blocks: c.resident_blocks() as u64,
+                    bytes: c.resident_bytes() as u64,
+                    dirty_blocks: c.dirty_blocks() as u64,
+                    dirty_bytes: c.dirty_bytes() as u64,
+                });
                 let state = shard.state.read().unwrap();
                 let pages = state.pages.len() as u64;
                 let logical =
                     state.pages.values().map(|p| p.original_len() as u64).sum::<u64>();
-                let stored = state.pages.values().map(|p| p.stored_len() as u64).sum::<u64>();
-                shard.metrics.snapshot(i, pages, logical, stored)
+                let stored = state.pages.values().map(|p| p.stored_len() as u64).sum::<u64>()
+                    + gauges.bytes;
+                shard.metrics.snapshot(i, pages, logical, stored, gauges)
             })
             .collect()
     }
@@ -993,5 +1351,147 @@ mod tests {
         assert!(shard.block_write_mean_ns() > 0.0);
         assert!(shard.lock_holds >= 200);
         assert!(shard.lock_hold_mean_ns() > 0.0);
+    }
+
+    #[test]
+    fn cached_store_serves_hits_and_defers_writes() {
+        let cfg = GbdiConfig::default();
+        let img = workloads::by_name("mcf").unwrap().generate(4096, 9);
+        let codec: Arc<dyn BlockCodec> =
+            Arc::new(GbdiCodec::new(analyze::analyze_image(&img, &cfg), cfg));
+        let store = ShardedPageStore::new(2).with_cache(1 << 20);
+        assert!(store.cache_enabled());
+        assert!(!ShardedPageStore::new(2).cache_enabled());
+        store.publish_codec(Arc::clone(&codec));
+        store.put(1, compress_page(&img, &codec));
+        let mut buf = [0u8; 64];
+        // first read misses and admits, second hits straight from cache
+        store.read_block(1, 3, &mut buf).unwrap();
+        assert_eq!(&buf[..], &img[3 * 64..4 * 64]);
+        store.read_block(1, 3, &mut buf).unwrap();
+        assert_eq!(&buf[..], &img[3 * 64..4 * 64]);
+        let t = store.cache_totals();
+        assert_eq!((t.hits, t.misses, t.admissions), (1, 1, 1));
+        // a write to the resident block is absorbed: framing unchanged
+        let bits_before = store.block_bits(1, 3).unwrap();
+        let line = [0x5Au8; 64];
+        let wr = store.write_block(1, 3, &line).unwrap();
+        assert_eq!(wr.bits, bits_before);
+        assert!(!wr.spilled);
+        assert_eq!(store.block_bits(1, 3).unwrap(), bits_before, "recompression deferred");
+        // reads see the deferred write, block- and page-granular
+        let n = store.read_block(1, 3, &mut buf).unwrap();
+        assert_eq!(&buf[..n], &line[..]);
+        let mut expect = img.clone();
+        expect[3 * 64..4 * 64].copy_from_slice(&line);
+        assert_eq!(store.read(1).unwrap(), expect);
+        assert_eq!(store.cache_totals().dirty_blocks, 1);
+        // flushing brings the compressed tier up to date
+        assert_eq!(store.flush_cache(), 1);
+        assert_eq!(store.cache_totals().dirty_blocks, 0);
+        assert_eq!(store.read(1).unwrap(), expect);
+        assert_eq!(store.cache_totals().deferred_flushes, 1);
+        // wrong-length writes error without corrupting the cache
+        assert!(store.write_block(1, 3, &[0u8; 32]).is_err());
+        let n = store.read_block(1, 3, &mut buf).unwrap();
+        assert_eq!(&buf[..n], &line[..]);
+        // a cold write goes through the frame, then admits the block
+        store.write_block(1, 60, &line).unwrap();
+        let n = store.read_block(1, 60, &mut buf).unwrap();
+        assert_eq!(&buf[..n], &line[..]);
+        // error surface matches the cacheless store
+        assert!(store.read_block(1, 64, &mut buf).is_err());
+        assert!(store.read_block(99, 0, &mut buf).is_err());
+        assert!(store.write_block(99, 0, &line).is_err());
+    }
+
+    #[test]
+    fn cached_accounting_and_remove_fold_deferred_writes() {
+        let cfg = GbdiConfig::default();
+        let img = vec![0u8; 4096];
+        let codec: Arc<dyn BlockCodec> =
+            Arc::new(GbdiCodec::new(analyze::analyze_image(&img, &cfg), cfg));
+        let store = ShardedPageStore::new(1).with_cache(64 * 1024);
+        store.publish_codec(Arc::clone(&codec));
+        store.put(5, compress_page(&img, &codec));
+        let mut buf = [0u8; 64];
+        store.read_block(5, 0, &mut buf).unwrap(); // admit
+        let line = [7u8; 64];
+        store.write_block(5, 0, &line).unwrap(); // absorbed, now dirty
+        // stored accounting charges the cache-resident bytes
+        let (logical, stored) = store.usage();
+        assert_eq!(logical, 4096);
+        let frames = store.with_page(5, |p| p.stored_len()).unwrap();
+        assert_eq!(stored, frames + 64);
+        assert_eq!(store.stored_bytes(), stored);
+        assert_eq!(store.cache_resident_bytes(), 64);
+        let snaps = store.shard_metrics();
+        assert_eq!(snaps[0].cached_blocks, 1);
+        assert_eq!(snaps[0].cached_bytes, 64);
+        assert_eq!(snaps[0].cached_dirty_blocks, 1);
+        assert_eq!(snaps[0].cached_dirty_bytes, 64);
+        assert_eq!(snaps[0].stored_bytes, stored as u64);
+        // remove hands back the page with the deferred write folded in
+        let page = store.remove(5).unwrap();
+        assert_eq!(&page.frame.decompress().unwrap()[..64], &line[..]);
+        assert_eq!(store.cache_resident_bytes(), 0);
+        assert_eq!(store.cache_totals().deferred_flushes, 1);
+        assert!(store.is_empty());
+    }
+
+    #[test]
+    fn put_overwrite_invalidates_cached_blocks() {
+        let cfg = GbdiConfig::default();
+        let img_a = workloads::by_name("mcf").unwrap().generate(4096, 1);
+        let img_b = workloads::by_name("svm").unwrap().generate(4096, 2);
+        let codec: Arc<dyn BlockCodec> =
+            Arc::new(GbdiCodec::new(analyze::analyze_image(&img_a, &cfg), cfg));
+        let store = ShardedPageStore::new(2).with_cache(1 << 20);
+        store.publish_codec(Arc::clone(&codec));
+        store.put(1, compress_page(&img_a, &codec));
+        let mut buf = [0u8; 64];
+        store.read_block(1, 0, &mut buf).unwrap();
+        // write a deferred update, then overwrite the whole page: the
+        // fresh image supersedes the cached (and dirty) blocks
+        store.write_block(1, 0, &[9u8; 64]).unwrap();
+        store.put(1, compress_page(&img_b, &codec));
+        let n = store.read_block(1, 0, &mut buf).unwrap();
+        assert_eq!(&buf[..n], &img_b[..64]);
+        assert_eq!(store.read(1).unwrap(), img_b);
+    }
+
+    #[test]
+    fn cached_store_stays_bounded_and_flushes_evictions() {
+        // a cache far smaller than the write working set: every
+        // deferred write must come back via an eviction flush, and the
+        // final content must match a cacheless run
+        let cfg = GbdiConfig::default();
+        let img = vec![0u8; 4096];
+        let codec: Arc<dyn BlockCodec> =
+            Arc::new(GbdiCodec::new(analyze::analyze_image(&img, &cfg), cfg));
+        let store = ShardedPageStore::new(1).with_cache(512); // 8 blocks
+        store.publish_codec(Arc::clone(&codec));
+        store.put(1, compress_page(&img, &codec));
+        let mut rng = crate::util::prng::Rng::new(5);
+        let mut noisy = [0u8; 64];
+        let mut expect = img.clone();
+        for round in 0..200 {
+            let blk = (round * 7) % 64;
+            if round % 3 == 2 {
+                noisy[..].fill(0);
+            } else {
+                rng.fill_bytes(&mut noisy);
+            }
+            store.write_block(1, blk, &noisy).unwrap();
+            expect[blk * 64..(blk + 1) * 64].copy_from_slice(&noisy);
+        }
+        assert_eq!(store.read(1).unwrap(), expect);
+        let t = store.cache_totals();
+        assert!(t.cached_bytes <= 512, "cache over budget: {} B", t.cached_bytes);
+        assert!(t.evictions > 0, "a 8-block cache must evict under 200 writes");
+        store.flush_cache();
+        assert_eq!(store.read(1).unwrap(), expect, "content survives full flush");
+        let stored = store.with_page(1, |p| p.stored_len()).unwrap();
+        assert!(stored < 2 * (4096 + 4096 / 64 * 3 + 16), "stored {stored} B unbounded");
     }
 }

@@ -412,12 +412,23 @@ impl Frame {
     /// Decode the whole image (convenience; allocates the result). The
     /// random-access equivalent of [`Container::decompress`].
     pub fn decompress(&self) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        self.decompress_into(&mut out)?;
+        Ok(out)
+    }
+
+    /// Decode the whole image into `out`, reusing its allocation: the
+    /// vector is resized to the logical length, so a caller looping over
+    /// pages with one buffer pays zero allocations once the buffer has
+    /// grown to the largest page (`tests/alloc_counting.rs` pins this).
+    pub fn decompress_into(&self, out: &mut Vec<u8>) -> Result<()> {
         let bb = self.block_bytes();
-        let mut out = vec![0u8; self.original_len];
+        out.clear();
+        out.resize(self.original_len, 0);
         for (i, chunk) in out.chunks_mut(bb).enumerate() {
             self.read_block(i, chunk)?;
         }
-        Ok(out)
+        Ok(())
     }
 
     // ---- writes ----------------------------------------------------------

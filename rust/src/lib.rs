@@ -70,7 +70,12 @@
 //! reproduces the old single-lock store exactly; a property test pins
 //! the observational equivalence, and `cargo bench --bench
 //! concurrent_serving` measures throughput and tail latency as the
-//! shard count scales.
+//! shard count scales. An optional per-shard **hot-block cache tier**
+//! ([`coordinator::ShardedPageStore::with_cache`], DESIGN.md §11)
+//! serves skewed block traffic from bounded uncompressed S3-FIFO
+//! caches — hits skip the decode entirely, writes to hot blocks defer
+//! recompression until the block cools, and the cache-off default
+//! stays bit-identical to the cacheless build.
 //!
 //! Whole-image software comparators (LZSS, Huffman, gzip, zstd) stay
 //! behind the coarser [`baselines::Codec`] trait — they have no block

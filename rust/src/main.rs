@@ -97,6 +97,11 @@ fn app() -> App {
                 .arg(Arg::opt("workers", "4", "compression workers"))
                 .arg(Arg::opt("shards", "", "page-store shards (default from config: 8)"))
                 .arg(Arg::opt("batch", "", "pages per ingest batch (default from config: 32)"))
+                .arg(Arg::opt(
+                    "cache-bytes",
+                    "",
+                    "hot-block cache budget (k/m/g; default from config: 0 = off)",
+                ))
                 .arg(Arg::opt("workload", "mix", "workload or 'mix'"))
                 .arg(Arg::opt("codec", "gbdi", "gbdi (adaptive analyzer) or bdi|fpc (static)"))
                 .arg(Arg::opt(
@@ -121,6 +126,11 @@ fn app() -> App {
                 .arg(Arg::opt("codec", "gbdi", "block codec: gbdi|bdi|fpc"))
                 .arg(Arg::opt("size", "4m", "image bytes"))
                 .arg(Arg::opt("shards", "1", "page-store shards behind the memory"))
+                .arg(Arg::opt(
+                    "cache-bytes",
+                    "0",
+                    "hot-block cache budget (k/m/g; 0 = off, the exact sector model)",
+                ))
                 .arg(Arg::opt("trace", "streaming", "streaming|uniform|zipf"))
                 .arg(Arg::opt("accesses", "65536", "trace length"))
                 .arg(Arg::opt("burst", "16", "DRAM burst bytes"))
@@ -381,7 +391,8 @@ fn cmd_verify(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
     let image = load_image(m.get("input"))?;
     let kind = parse_codec(m)?;
     let threads = parse_threads(m);
-    let codec = kind.build_for_image(&image, &GbdiConfig::default());
+    let codec: Arc<dyn BlockCodec> =
+        Arc::from(kind.build_for_image(&image, &GbdiConfig::default()));
     let t0 = std::time::Instant::now();
     let comp = container::compress(codec.as_ref(), &image);
     let t_c = t0.elapsed();
@@ -392,16 +403,23 @@ fn cmd_verify(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
     // the parallel pipeline must reproduce the serial framing bit-for-bit
     let par = container::compress_parallel(codec.as_ref(), &image, threads);
     let par_ok = par.block_bits == comp.block_bits && par.decompress()? == image;
+    // the frame's caller-owned-buffer decode (the serving read path)
+    // must agree too; `buf` is reused, not reallocated per decode
+    let frame = Frame::with_codec(par, Arc::clone(&codec))?;
+    let mut buf = Vec::new();
+    frame.decompress_into(&mut buf)?;
+    let frame_ok = buf == image;
     println!(
-        "codec {}  reconstruction: {}  parallel({threads}t): {}  ratio {}  compress {:.1} MiB/s  decompress {:.1} MiB/s",
+        "codec {}  reconstruction: {}  parallel({threads}t): {}  frame: {}  ratio {}  compress {:.1} MiB/s  decompress {:.1} MiB/s",
         kind.name(),
         if ok { "BIT-EXACT" } else { "MISMATCH" },
         if par_ok { "BIT-EXACT" } else { "MISMATCH" },
+        if frame_ok { "BIT-EXACT" } else { "MISMATCH" },
         fmt_ratio(comp.ratio()),
         image.len() as f64 / (1 << 20) as f64 / t_c.as_secs_f64(),
         image.len() as f64 / (1 << 20) as f64 / t_d.as_secs_f64(),
     );
-    if !ok || !par_ok {
+    if !ok || !par_ok || !frame_ok {
         return Err(gbdi::Error::Corrupt("roundtrip mismatch".into()));
     }
     Ok(())
@@ -519,7 +537,10 @@ fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
         }
         cfg.drift_margin = drift;
     }
-    let (shards, ingest_batch) = (cfg.shards, cfg.ingest_batch);
+    if !m.get("cache-bytes").is_empty() {
+        cfg.cache_bytes = m.get_usize("cache-bytes");
+    }
+    let (shards, ingest_batch, cache_bytes) = (cfg.shards, cfg.ingest_batch, cfg.cache_bytes);
     let svc = if kind == CodecKind::Gbdi {
         // the --selector flag overrides [analyzer] selector from --config
         let selector: Box<dyn BaseSelector> = match m.get("selector") {
@@ -554,6 +575,12 @@ fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
         CompressionService::start_static(cfg, codec)?
     };
     println!("store: {shards} shard(s), ingest batches of {ingest_batch} page(s)");
+    if cache_bytes > 0 {
+        println!(
+            "cache: {} hot-block tier (recompression deferred while hot)",
+            fmt_bytes(cache_bytes as u64)
+        );
+    }
     let names: Vec<&str> = match m.get("workload") {
         "mix" => vec!["mcf", "perlbench", "fluidanimate", "triangle_count", "svm"],
         w => vec![w],
@@ -596,6 +623,13 @@ fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
     for pid in 0..pages.min(16) {
         svc.write_block(pid, (pid % 64) as usize, &line)?;
     }
+    // page readback through the caller-owned-buffer path: one Vec is
+    // reused across pages, so this loop stops allocating once the
+    // buffer has grown to page size
+    let mut page_buf = Vec::new();
+    for pid in 0..pages.min(64) {
+        svc.read_page_into(pid, &mut page_buf)?;
+    }
     let migrated = svc.recompress_step()?;
     let (logical, stored, ratio) = svc.storage_ratio();
     // per-shard telemetry: occupancy, lock-hold time, block-op latency
@@ -612,6 +646,7 @@ fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
         ]);
     }
     print!("{}", t.render());
+    let cache = svc.cache_totals();
     let snap = svc.shutdown();
     println!(
         "final: {} pages, {} -> {} stored ({}), {} migrated, {} swaps, {} analyses ({} skipped by drift detection)",
@@ -631,6 +666,19 @@ fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
         snap.block_writes,
         snap.block_write_mean_ns()
     );
+    if cache_bytes > 0 {
+        println!(
+            "cache: {:.1}% hit rate ({} hits / {} misses), {} resident ({} dirty), \
+             {} evictions, {} deferred flushes",
+            cache.hit_rate() * 100.0,
+            cache.hits,
+            cache.misses,
+            fmt_bytes(cache.cached_bytes),
+            fmt_bytes(cache.dirty_bytes),
+            cache.evictions,
+            cache.deferred_flushes
+        );
+    }
     Ok(())
 }
 
@@ -701,10 +749,18 @@ fn cmd_memsim(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
     if shards == 0 {
         return Err(gbdi::Error::Config("--shards must be >= 1".into()));
     }
-    let mut mem = CompressedMemory::new_sharded(
+    let cache_bytes = m.get_usize("cache-bytes");
+    let mut mem = CompressedMemory::new_with_cache(
         codec_kind.build_for_image(&image, &GbdiConfig::default()),
         shards,
+        cache_bytes,
     );
+    if cache_bytes > 0 {
+        println!(
+            "cache: {} hot-block tier on (sector accounting approximates deferred writes)",
+            fmt_bytes(cache_bytes as u64)
+        );
+    }
     mem.store_image(&image);
     let kind = trace::TraceKind::parse(m.get("trace"))
         .ok_or_else(|| gbdi::Error::Config("bad trace kind".into()))?;

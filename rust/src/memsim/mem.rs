@@ -23,7 +23,10 @@
 //! sector-alignment slack this model charges re-layouts against).
 //! Single-threaded replay uses 1 shard by default;
 //! [`CompressedMemory::new_sharded`] raises the shard count for
-//! concurrent experiments.
+//! concurrent experiments, and [`CompressedMemory::new_with_cache`]
+//! adds the store's hot-block cache tier in front of the frames
+//! (off by default so replay results stay bit-identical; see that
+//! constructor for what the sector model approximates when it is on).
 
 use crate::codec::{BlockCodec, Scratch};
 use crate::coordinator::store::{ShardedPageStore, StoredPage};
@@ -76,11 +79,29 @@ impl CompressedMemory {
     /// granularity only, never contents: trace replay results are
     /// identical for any value.
     pub fn new_sharded(codec: Box<dyn BlockCodec>, shards: usize) -> Self {
+        Self::new_with_cache(codec, shards, 0)
+    }
+
+    /// [`Self::new_sharded`] with a hot-block cache tier of
+    /// `cache_bytes` in front of the compressed frames (`gbdi memsim
+    /// --cache-bytes`; 0 = off, the default everywhere else in this
+    /// module, which keeps replay results bit-identical to the cacheless
+    /// simulator). With the cache on, block *contents* are still exact,
+    /// but the sector model is an approximation: a write absorbed by the
+    /// cache defers recompression, so its sector growth and any
+    /// re-layout are not charged to [`MemStats`] until the block is
+    /// flushed — and flushes happen inside the store, invisible to the
+    /// per-op accounting here. [`Self::physical_bytes`] charges the
+    /// cache-resident bytes instead, so capacity numbers stay honest.
+    pub fn new_with_cache(codec: Box<dyn BlockCodec>, shards: usize, cache_bytes: usize) -> Self {
         let codec: Arc<dyn BlockCodec> = Arc::from(codec);
         // no auto-compaction: a compacted frame loses its sector slack,
         // and this model's whole point is charging sector-crossing
         // growth (not store housekeeping) as the re-layout event
-        let store = ShardedPageStore::new(shards).without_auto_compact();
+        let mut store = ShardedPageStore::new(shards).without_auto_compact();
+        if cache_bytes > 0 {
+            store = store.with_cache(cache_bytes);
+        }
         store.publish_codec(Arc::clone(&codec));
         CompressedMemory {
             codec,
@@ -221,12 +242,14 @@ impl CompressedMemory {
 
     /// Physical bytes in use: payload sectors + metadata table (one byte
     /// per block: sector count) + the codec's shared dictionary (GBDI's
-    /// global base table; stateless codecs charge nothing).
+    /// global base table; stateless codecs charge nothing) + any
+    /// uncompressed blocks resident in the hot-block cache tier.
     pub fn physical_bytes(&self) -> u64 {
         let blocks = (self.n_pages * self.blocks_per_page()) as u64;
         self.stats.used_sectors * self.sector_bytes as u64
             + blocks
             + self.codec.global_table().map_or(0, |t| t.serialized_len()) as u64
+            + self.store.cache_resident_bytes() as u64
     }
 
     /// Effective capacity ratio: logical / physical — the capacity-side
@@ -394,6 +417,46 @@ mod tests {
         assert_eq!(
             a.read_image(base_a, image.len()).unwrap(),
             b.read_image(base_b, image.len()).unwrap()
+        );
+    }
+
+    #[test]
+    fn cached_memory_serves_identical_contents() {
+        // the cache tier must never change what a replay reads back,
+        // and the resident blocks must show up in the physical footprint
+        let image = workloads::by_name("mcf").unwrap().generate(1 << 15, 21);
+        let cfg = GbdiConfig::default();
+        let build = || {
+            let t = analyze::analyze_image(&image, &cfg);
+            Box::new(GbdiCodec::new(t, cfg.clone())) as Box<dyn BlockCodec>
+        };
+        let mut plain = CompressedMemory::new_sharded(build(), 4);
+        let mut cached = CompressedMemory::new_with_cache(build(), 4, 1 << 16);
+        let base_p = plain.store_image(&image);
+        let base_c = cached.store_image(&image);
+        let mut rng = crate::util::prng::Rng::new(29);
+        let mut buf = vec![0u8; 64];
+        for _ in 0..400 {
+            // skewed toward a small set of addresses so the cache hits
+            let addr = rng.below(32);
+            if rng.below(4) == 0 {
+                rng.fill_bytes(&mut buf);
+                plain.write_block(addr, &buf).unwrap();
+                cached.write_block(addr, &buf).unwrap();
+            } else {
+                assert_eq!(plain.read_block(addr).unwrap(), cached.read_block(addr).unwrap());
+            }
+        }
+        assert_eq!(
+            plain.read_image(base_p, image.len()).unwrap(),
+            cached.read_image(base_c, image.len()).unwrap()
+        );
+        assert!(cached.store.cache_resident_bytes() > 0, "cache never populated");
+        // flushing the deferred writes must not change what reads see
+        cached.store.flush_cache();
+        assert_eq!(
+            plain.read_image(base_p, image.len()).unwrap(),
+            cached.read_image(base_c, image.len()).unwrap()
         );
     }
 }

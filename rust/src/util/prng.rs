@@ -274,6 +274,41 @@ mod tests {
     }
 
     #[test]
+    fn zipf_head_mass_matches_closed_form() {
+        // The generator draws from the continuous bounded-Pareto inverse
+        // CDF, so the share of draws landing in the top `m` of `n` ranks
+        // has a closed form:
+        //   s = 1:  P(k < m) = ln(m+1) / ln(n+1)
+        //   s != 1: P(k < m) = ((m+1)^t - 1) / ((n+1)^t - 1),  t = 1 - s
+        // Check the top-1% head mass against it for the exponents the
+        // serving bench sweeps.
+        let (n, m, draws) = (1000u64, 10u64, 200_000u64);
+        let expected = |s: f64| {
+            if (s - 1.0).abs() < 1e-9 {
+                ((m + 1) as f64).ln() / ((n + 1) as f64).ln()
+            } else {
+                let t = 1.0 - s;
+                (((m + 1) as f64).powf(t) - 1.0) / (((n + 1) as f64).powf(t) - 1.0)
+            }
+        };
+        let head = |s: f64, seed: u64| {
+            let mut r = Rng::new(seed);
+            let hits = (0..draws).filter(|_| r.zipf(n, s) < m).count();
+            hits as f64 / draws as f64
+        };
+        let (h10, e10) = (head(1.0, 17), expected(1.0));
+        let (h12, e12) = (head(1.2, 19), expected(1.2));
+        assert!((h10 - e10).abs() < 0.02, "s=1.0: head {h10} vs closed form {e10}");
+        assert!((h12 - e12).abs() < 0.02, "s=1.2: head {h12} vs closed form {e12}");
+        // anchor the closed form itself: the top 1% of ranks carries
+        // ~34.7% of the mass at s=1.0 and ~50.9% at s=1.2
+        assert!((e10 - 0.347).abs() < 0.005, "e10={e10}");
+        assert!((e12 - 0.509).abs() < 0.005, "e12={e12}");
+        // a steeper exponent concentrates the head
+        assert!(h12 > h10 + 0.1, "h10={h10} h12={h12}");
+    }
+
+    #[test]
     fn weighted_respects_weights() {
         let mut r = Rng::new(5);
         let w = [1.0, 0.0, 9.0];

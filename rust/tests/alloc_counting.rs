@@ -1,14 +1,16 @@
 //! Allocation-budget regression: the steady-state random-access paths —
 //! `Frame::read_block`, `Frame::read_range`, in-place `write_block`,
-//! and `BlockCodec::estimate_block_bits_with` — must not touch the heap
-//! once scratch buffers are warm. This binary registers the crate's
-//! counting allocator globally and diffs its counter around the hot
-//! loops, for all three block codecs.
+//! `BlockCodec::estimate_block_bits_with`, the stores' `read_into` page
+//! sweeps, and the hot-block cache tier's hit/absorb paths — must not
+//! touch the heap once scratch buffers are warm. This binary registers
+//! the crate's counting allocator globally and diffs its counter around
+//! the hot loops, for all three block codecs.
 //!
 //! The allocator counter is process-global, so the tests serialize
 //! through a gate mutex: no sibling test can allocate inside another's
 //! measured window.
 
+use gbdi::coordinator::{PageStore, ShardedPageStore, StoredPage};
 use gbdi::util::alloc::CountingAlloc;
 use gbdi::util::prng::Rng;
 use gbdi::{BlockCodec, CodecKind, Frame, GbdiConfig, Scratch};
@@ -168,4 +170,66 @@ fn in_place_writes_do_not_allocate_once_warm() {
         let allocs = allocs_during(|| pass(&mut frame, &mut scratch));
         assert_eq!(allocs, 0, "{}: in-place write hot loop allocated", kind.name());
     }
+}
+
+#[test]
+fn store_read_into_and_cache_hot_paths_do_not_allocate() {
+    let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let image = clustered_image(1024, 64); // 4 KiB: one 64-block page
+    let cfg = GbdiConfig::default();
+    let codec: Arc<dyn BlockCodec> = Arc::from(CodecKind::Gbdi.build_for_image(&image, &cfg));
+
+    // `read_into` reuses the caller's buffer: after the first sweep
+    // grows it, repeat sweeps stay off the heap entirely
+    let mut plain = PageStore::new();
+    plain.publish_codec(Arc::clone(&codec));
+    plain.put(7, StoredPage { frame: Frame::compress(Arc::clone(&codec), &image) });
+    let mut page = Vec::new();
+    plain.read_into(7, &mut page).unwrap();
+    let allocs = allocs_during(|| {
+        for _ in 0..200 {
+            plain.read_into(7, &mut page).unwrap();
+        }
+    });
+    assert_eq!(allocs, 0, "PageStore::read_into hot loop allocated");
+
+    // the cache tier: one shard, a cache big enough that the page's 64
+    // blocks all stay resident once admitted
+    let store = ShardedPageStore::new(1).with_cache(1 << 20);
+    store.publish_codec(Arc::clone(&codec));
+    store.put(7, StoredPage { frame: Frame::compress(Arc::clone(&codec), &image) });
+    let mut line = [0u8; 64];
+    for blk in 0..64 {
+        store.read_block(7, blk, &mut line).unwrap(); // warm: admit every block
+    }
+    let t0 = store.cache_totals();
+    let allocs = allocs_during(|| {
+        for k in 0..2000usize {
+            store.read_block(7, k % 64, &mut line).unwrap();
+        }
+    });
+    let t1 = store.cache_totals();
+    assert_eq!(allocs, 0, "cache-hit read_block hot loop allocated");
+    assert_eq!(t1.hits - t0.hits, 2000, "every measured read must be a cache hit");
+
+    // a fully clean cache overlays nothing into the page sweep, so the
+    // sharded `read_into` matches the reference store at zero allocs
+    store.read_into(7, &mut page).unwrap();
+    let allocs = allocs_during(|| {
+        for _ in 0..200 {
+            store.read_into(7, &mut page).unwrap();
+        }
+    });
+    assert_eq!(allocs, 0, "ShardedPageStore::read_into hot loop allocated");
+
+    // absorbed writes update the resident copy in place — recompression
+    // is deferred, so the hot write path never touches the heap either
+    let allocs = allocs_during(|| {
+        for k in 0..2000usize {
+            store.write_block(7, k % 64, &line).unwrap();
+        }
+    });
+    let t2 = store.cache_totals();
+    assert_eq!(allocs, 0, "absorbed write hot loop allocated");
+    assert_eq!(t2.hits - t1.hits, 2000, "every measured write must be absorbed");
 }

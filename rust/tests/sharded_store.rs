@@ -5,8 +5,14 @@
 //!
 //! * `sharded_store_equivalent_to_reference_store` — a randomized
 //!   single-threaded interleaving of put / get / read_block /
-//!   write_block / table-swap / remove applied to both stores, compared
-//!   op-by-op and in a final sweep, for N ∈ {1, 2, 7} shards.
+//!   write_block / table-swap / shard-migration / remove applied to
+//!   three arms at once — the reference store, the sharded store, and
+//!   a sharded store with the hot-block cache tier on (deliberately
+//!   tiny, so admission, eviction, and deferred recompression all fire
+//!   mid-schedule) — compared op-by-op and in a final sweep, for
+//!   N ∈ {1, 2, 7} shards. A forced phase then migrates shards while
+//!   dirty deferred writes are outstanding, and a final `flush_cache`
+//!   must drain clean without changing any observable content.
 //! * `concurrent_mixed_ops_lose_no_writes` — M threads × mixed ops on
 //!   the sharded store (each thread owns a disjoint page set for
 //!   writes), then a full content verification plus the metrics-sum
@@ -44,6 +50,37 @@ fn versioned_codecs(cfg: &GbdiConfig) -> (Vec<Vec<u8>>, Vec<Arc<dyn BlockCodec>>
     (imgs, codecs)
 }
 
+/// Drive `migrate_shard` on both sharded arms and emulate it on the
+/// reference store: `migrate_shard` re-encodes the lowest-id pages of
+/// shard `idx` lagging behind `codec`, up to `budget` of them, so the
+/// emulation re-encodes exactly that set. Works because the lagging set
+/// (ids + codec versions) is observationally identical across the arms
+/// — deferred cached writes never change a page's codec version.
+fn migrate_all_arms(
+    reference: &mut PageStore,
+    sharded: &ShardedPageStore,
+    cached: &ShardedPageStore,
+    idx: usize,
+    codec: &Arc<dyn BlockCodec>,
+    budget: usize,
+    step: u32,
+) {
+    let mut lagging: Vec<u64> = reference
+        .lagging_pages(codec.version())
+        .into_iter()
+        .filter(|&p| sharded.shard_of(p) == idx)
+        .collect();
+    lagging.truncate(budget);
+    for &id in &lagging {
+        let data = reference.read(id).unwrap();
+        reference.put(id, StoredPage { frame: Frame::compress(Arc::clone(codec), &data) });
+    }
+    let a = sharded.migrate_shard(idx, codec, budget).unwrap();
+    let b = cached.migrate_shard(idx, codec, budget).unwrap();
+    assert_eq!(a, lagging.len(), "step {step} migrate shard {idx}");
+    assert_eq!(b, lagging.len(), "step {step} migrate shard {idx} (cached)");
+}
+
 #[test]
 fn sharded_store_equivalent_to_reference_store() {
     let cfg = GbdiConfig::default();
@@ -51,8 +88,14 @@ fn sharded_store_equivalent_to_reference_store() {
     for &shards in &[1usize, 2, 7] {
         let mut reference = PageStore::new();
         let sharded = ShardedPageStore::new(shards);
+        // third arm: the same schedule through the hot-block cache
+        // tier. 4 KiB across the shards is deliberately tiny so
+        // admission, eviction, and deferred recompression all fire
+        // mid-schedule rather than only in the final sweep.
+        let cached = ShardedPageStore::new(shards).with_cache(4 * 1024);
         reference.publish_codec(Arc::clone(&codecs[0]));
         sharded.publish_codec(Arc::clone(&codecs[0]));
+        cached.publish_codec(Arc::clone(&codecs[0]));
         let mut active = 0usize; // index of the currently published codec
         let mut rng = Rng::new(0xD1CE ^ shards as u64);
         let id_space = 96u64;
@@ -67,14 +110,19 @@ fn sharded_store_equivalent_to_reference_store() {
                         .put(id, StoredPage { frame: Frame::compress(Arc::clone(codec), img) });
                     sharded
                         .put(id, StoredPage { frame: Frame::compress(Arc::clone(codec), img) });
+                    cached
+                        .put(id, StoredPage { frame: Frame::compress(Arc::clone(codec), img) });
                 }
-                // whole-page read
+                // whole-page read (the cached arm overlays deferred writes)
                 3..=4 => {
                     let a = reference.read(id);
                     let b = sharded.read(id);
-                    match (a, b) {
-                        (Ok(a), Ok(b)) => assert_eq!(a, b, "step {step} page {id}"),
-                        (a, b) => assert_eq!(a.is_err(), b.is_err(), "step {step} page {id}"),
+                    let c = cached.read(id);
+                    assert_eq!(a.is_ok(), b.is_ok(), "step {step} page {id}");
+                    assert_eq!(a.is_ok(), c.is_ok(), "step {step} page {id} (cached)");
+                    if let Ok(a) = &a {
+                        assert_eq!(a, b.as_ref().unwrap(), "step {step} page {id}");
+                        assert_eq!(a, c.as_ref().unwrap(), "step {step} page {id} (cached)");
                     }
                 }
                 // single-block read
@@ -82,12 +130,17 @@ fn sharded_store_equivalent_to_reference_store() {
                     let blk = rng.below(64) as usize;
                     let mut buf_a = [0u8; 64];
                     let mut buf_b = [0u8; 64];
+                    let mut buf_c = [0u8; 64];
                     let a = reference.read_block(id, blk, &mut buf_a);
                     let b = sharded.read_block(id, blk, &mut buf_b);
+                    let c = cached.read_block(id, blk, &mut buf_c);
                     assert_eq!(a.is_ok(), b.is_ok(), "step {step} page {id} block {blk}");
-                    if a.is_ok() {
-                        assert_eq!(a.unwrap(), b.unwrap());
+                    assert_eq!(a.is_ok(), c.is_ok(), "step {step} block {blk} (cached)");
+                    if let Ok(n) = a {
+                        assert_eq!(n, b.unwrap());
+                        assert_eq!(n, c.unwrap());
                         assert_eq!(buf_a, buf_b, "step {step} page {id} block {blk}");
+                        assert_eq!(buf_a, buf_c, "step {step} block {blk} (cached)");
                     }
                 }
                 // single-block write of identical random data
@@ -102,37 +155,126 @@ fn sharded_store_equivalent_to_reference_store() {
                     }
                     let a = reference.write_block(id, blk, &data);
                     let b = sharded.write_block(id, blk, &data);
+                    let c = cached.write_block(id, blk, &data);
                     assert_eq!(a.is_ok(), b.is_ok(), "step {step} page {id} block {blk}");
+                    // an absorbed (deferred) write reports the frame's
+                    // stale bits by design, so the cached arm is only
+                    // comparable on success/failure here — content
+                    // equality is pinned by every read and the sweep
+                    assert_eq!(a.is_ok(), c.is_ok(), "step {step} block {blk} (cached)");
                     if let (Ok(a), Ok(b)) = (a, b) {
                         assert_eq!(a, b, "step {step}: BlockWrite outcome must match");
                     }
                 }
-                // table swap or removal
-                _ => {
-                    if active + 1 < codecs.len() && rng.below(2) == 0 {
+                // table swap, shard migration, or removal
+                _ => match rng.below(3) {
+                    0 if active + 1 < codecs.len() => {
                         active += 1;
                         reference.publish_codec(Arc::clone(&codecs[active]));
                         sharded.publish_codec(Arc::clone(&codecs[active]));
-                    } else {
+                        cached.publish_codec(Arc::clone(&codecs[active]));
+                    }
+                    1 => {
+                        let idx = rng.below(shards as u64) as usize;
+                        let budget = 1 + rng.below(3) as usize;
+                        let codec = &codecs[active];
+                        migrate_all_arms(
+                            &mut reference, &sharded, &cached, idx, codec, budget, step,
+                        );
+                    }
+                    _ => {
                         let a = reference.remove(id);
                         let b = sharded.remove(id);
+                        let c = cached.remove(id);
                         assert_eq!(a.is_some(), b.is_some(), "step {step} remove {id}");
+                        assert_eq!(a.is_some(), c.is_some(), "step {step} remove {id} (cached)");
                     }
-                }
+                },
             }
         }
-        // final sweep: aggregates and every page byte-identical
+        // forced phase: migrate shards while dirty deferred writes are
+        // outstanding. Plant pages encoded under the oldest codec (ids
+        // outside the random range, so lagging pages are guaranteed to
+        // exist), publish the newest table everywhere, absorb a write
+        // into a resident cached block of each still-lagging page, then
+        // migrate its whole shard with the dirty copy still cached —
+        // at least one such round fires per shard that holds laggards.
+        let newest = codecs.last().unwrap();
+        for id in [id_space, id_space + 1] {
+            let frame = || Frame::compress(Arc::clone(&codecs[0]), &imgs[0]);
+            reference.put(id, StoredPage { frame: frame() });
+            sharded.put(id, StoredPage { frame: frame() });
+            cached.put(id, StoredPage { frame: frame() });
+        }
+        for c in &codecs[active..] {
+            reference.publish_codec(Arc::clone(c));
+            sharded.publish_codec(Arc::clone(c));
+            cached.publish_codec(Arc::clone(c));
+        }
+        let before = cached.cache_totals();
+        let mut forced = 0u64;
+        for id in 0..id_space + 2 {
+            let lags = reference.get(id).is_some_and(|p| p.codec_version() < newest.version());
+            if !lags {
+                continue;
+            }
+            forced += 1;
+            let mut line = [0u8; 64];
+            // two reads pin block 0 resident: the first admits it on a
+            // miss, and the second either hits (a hit only sets the ref
+            // bit, it cannot evict) or re-admits into a queue whose ref
+            // bits the first admission's eviction pass already cleared,
+            // so the freshly admitted block cannot be its own victim
+            cached.read_block(id, 0, &mut line).unwrap();
+            cached.read_block(id, 0, &mut line).unwrap();
+            let hits_before = cached.cache_totals().hits;
+            let mut data = [0u8; 64];
+            rng.fill_bytes(&mut data);
+            let a = reference.write_block(id, 0, &data).unwrap();
+            let b = sharded.write_block(id, 0, &data).unwrap();
+            assert_eq!(a, b, "forced write {id}: BlockWrite outcome must match");
+            cached.write_block(id, 0, &data).unwrap(); // absorbed: deferred, dirty
+            assert!(
+                cached.cache_totals().hits > hits_before,
+                "forced write {id} must be absorbed by the cache"
+            );
+            let idx = sharded.shard_of(id);
+            migrate_all_arms(&mut reference, &sharded, &cached, idx, newest, usize::MAX, 9999);
+            assert_eq!(
+                reference.read(id).unwrap(),
+                cached.read(id).unwrap(),
+                "page {id} after migrating with a dirty deferred block outstanding"
+            );
+        }
+        assert!(forced >= 1, "{shards} shards: planted lagging pages must exist");
+        let after = cached.cache_totals();
+        assert!(
+            after.deferred_flushes >= before.deferred_flushes + forced,
+            "{shards} shards: each forced migration must fold its dirty deferred block"
+        );
+        // final sweep: aggregates and every page byte-identical. The
+        // cached arm's stored_bytes additionally counts cache-resident
+        // bytes and reflects deferred-write patch history, so only the
+        // cacheless pair is footprint-comparable.
         assert_eq!(reference.len(), sharded.len(), "{shards} shards");
+        assert_eq!(reference.len(), cached.len(), "{shards} shards (cached)");
         assert_eq!(reference.logical_bytes(), sharded.logical_bytes(), "{shards} shards");
+        assert_eq!(reference.logical_bytes(), cached.logical_bytes(), "{shards} (cached)");
         assert_eq!(reference.stored_bytes(), sharded.stored_bytes(), "{shards} shards");
         assert_eq!(reference.codec_count(), sharded.codec_count(), "{shards} shards");
-        let newest = codecs.last().unwrap().version();
+        assert_eq!(reference.codec_count(), cached.codec_count(), "{shards} shards (cached)");
+        let newest_v = newest.version();
         assert_eq!(
-            reference.lagging_pages(newest),
-            sharded.lagging_pages(newest),
+            reference.lagging_pages(newest_v),
+            sharded.lagging_pages(newest_v),
             "{shards} shards"
         );
-        for id in 0..id_space {
+        assert_eq!(
+            reference.lagging_pages(newest_v),
+            cached.lagging_pages(newest_v),
+            "{shards} shards (cached)"
+        );
+        for id in 0..id_space + 2 {
             match reference.get(id) {
                 Some(p) => {
                     assert_eq!(
@@ -141,17 +283,47 @@ fn sharded_store_equivalent_to_reference_store() {
                         "page {id} version"
                     );
                     assert_eq!(
+                        Some(p.codec_version()),
+                        cached.with_page(id, |q| q.codec_version()),
+                        "page {id} version (cached)"
+                    );
+                    assert_eq!(
                         Some(p.stored_len()),
                         sharded.with_page(id, |q| q.stored_len()),
                         "page {id} footprint"
                     );
-                    assert_eq!(
-                        reference.read(id).unwrap(),
-                        sharded.read(id).unwrap(),
-                        "page {id} content"
-                    );
+                    let want = reference.read(id).unwrap();
+                    assert_eq!(want, sharded.read(id).unwrap(), "page {id} content");
+                    assert_eq!(want, cached.read(id).unwrap(), "page {id} content (cached)");
                 }
-                None => assert!(!sharded.contains(id), "page {id} must be absent"),
+                None => {
+                    assert!(!sharded.contains(id), "page {id} must be absent");
+                    assert!(!cached.contains(id), "page {id} must be absent (cached)");
+                }
+            }
+        }
+        // the cache demonstrably engaged during the schedule, and
+        // flushing it drains every deferred write without changing any
+        // observable content
+        let t = cached.cache_totals();
+        assert!(t.admissions > 0, "{shards} shards: cache never admitted");
+        assert!(t.hits > 0, "{shards} shards: cache never hit");
+        assert!(t.evictions > 0, "{shards} shards: cache never evicted");
+        let flushed = cached.flush_cache();
+        let t2 = cached.cache_totals();
+        assert_eq!(t2.dirty_blocks, 0, "{shards} shards: flush_cache left dirty blocks");
+        assert_eq!(
+            t2.deferred_flushes,
+            t.deferred_flushes + flushed as u64,
+            "{shards} shards: flush_cache must count every deferred write"
+        );
+        for id in 0..id_space + 2 {
+            if reference.get(id).is_some() {
+                assert_eq!(
+                    reference.read(id).unwrap(),
+                    cached.read(id).unwrap(),
+                    "page {id} content after flush_cache"
+                );
             }
         }
     }

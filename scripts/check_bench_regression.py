@@ -22,9 +22,12 @@ The gate is ARMED by default — these are hard failures, not warnings:
     change has no real baseline yet, and the bless job
     (scripts/bless_bench_baseline.py) replaces the placeholder with
     that run's artifact on the next main push;
-  * exit 2 if the two files disagree on the `tags.isa` environment tag
-    (comparing an AVX2 run against a scalar baseline measures the
-    dispatch table, not the change under test) unless --ignore-tags.
+  * exit 2 if the two files disagree on an environment tag the gate
+    knows about — `tags.isa` (comparing an AVX2 run against a scalar
+    baseline measures the dispatch table, not the change under test) or
+    `tags.cache` (comparing a cache-on run against a cache-off baseline
+    measures the hot-block cache tier, not the change under test) —
+    unless --ignore-tags.
 
 See docs/OPERATIONS.md ("Throughput regression gate").
 """
@@ -62,7 +65,7 @@ def main():
                     help="bootstrap only: tolerate a provisional baseline "
                          "(informational comparison, exit 0)")
     ap.add_argument("--ignore-tags", action="store_true",
-                    help="skip the tags.isa environment-match check")
+                    help="skip the tags.isa/tags.cache environment-match check")
     args = ap.parse_args()
 
     tolerance = args.tolerance
@@ -87,14 +90,16 @@ def main():
         return 2
 
     if not args.ignore_tags:
-        cur_isa = (cur_doc.get("tags") or {}).get("isa")
-        base_isa = (base_doc.get("tags") or {}).get("isa")
-        if cur_isa and base_isa and cur_isa != base_isa:
-            print(f"error: tags.isa mismatch: current run used {cur_isa!r}, "
-                  f"baseline was recorded under {base_isa!r}. Re-bless the "
-                  "baseline on matching hardware or pass --ignore-tags.",
-                  file=sys.stderr)
-            return 2
+        for tag in ("isa", "cache"):
+            cur_tag = (cur_doc.get("tags") or {}).get(tag)
+            base_tag = (base_doc.get("tags") or {}).get(tag)
+            if cur_tag and base_tag and cur_tag != base_tag:
+                print(f"error: tags.{tag} mismatch: current run used "
+                      f"{cur_tag!r}, baseline was recorded under "
+                      f"{base_tag!r}. Re-bless the baseline under a "
+                      "matching environment or pass --ignore-tags.",
+                      file=sys.stderr)
+                return 2
 
     regressions = []
     print(f"{'benchmark':<44} {'baseline':>12} {'current':>12} {'delta':>8}")
