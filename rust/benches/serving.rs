@@ -1,0 +1,193 @@
+//! Network serving: trace-driven multi-connection load against the GBN1
+//! TCP front end ([`gbdi::server::Server`]) over loopback — the
+//! experiment the pipelined binary protocol exists for.
+//!
+//! Reports, per connection count (1/2/4/8 clients against 8 shards):
+//! aggregate op throughput (ops/s) and client-observed p50/p99/p999
+//! latency, plus two gateable single-connection byte-throughput probes
+//! (single-block GET round-trips and 4 KiB RANGE reads). The last arm
+//! forces a live codec-table swap while 8 connections are in flight and
+//! counts failed client ops. Emits `BENCH_serving.json` at the repo
+//! root.
+//!
+//! Acceptance bars this bench guards (asserted whenever the machine has
+//! ≥ 4 hardware threads, fast mode included):
+//!
+//! * 8 pipelined connections must deliver ≥ 2x the aggregate throughput
+//!   of 1 connection at 8 shards;
+//! * a codec-table swap forced under live 8-connection load must
+//!   complete with zero failed client ops.
+//!
+//! `cargo bench --bench serving`
+
+use gbdi::coordinator::{CompressionService, ServiceConfig};
+use gbdi::server::{self, protocol::stats_field, Client, LoadGenConfig, Server, ServerConfig};
+use gbdi::simd;
+use gbdi::util::bench::Bencher;
+use std::time::{Duration, Instant};
+
+/// Adaptive 8-shard service behind a GBN1 server on an ephemeral
+/// loopback port. Automatic analysis is parked (`analyze_every: MAX`)
+/// so table swaps happen exactly when an arm forces them.
+fn start_server(shards: usize) -> Server {
+    let svc = CompressionService::start(ServiceConfig {
+        workers: 2,
+        shards,
+        analyze_every: u64::MAX,
+        ingest_batch: 32,
+        ..Default::default()
+    })
+    .expect("service start");
+    let scfg = ServerConfig { listen: "127.0.0.1:0".to_string(), ..Default::default() };
+    Server::bind(svc, scfg).expect("server bind")
+}
+
+/// One scaling arm: `conns` pipelined connections replaying the mixed
+/// deterministic trace. Returns (ops_per_s, p50_ns, p99_ns, p999_ns).
+fn run_conn_arm(addr: &str, conns: usize, ops_per_conn: usize, pages: u64) -> (f64, u64, u64, u64) {
+    let cfg = LoadGenConfig {
+        addr: addr.to_string(),
+        conns,
+        ops_per_conn,
+        pages,
+        ..Default::default()
+    };
+    let rep = server::run_loadgen(&cfg).expect("loadgen");
+    assert_eq!(rep.ops_err, 0, "load generator saw failed ops at {conns} conns");
+    let mut lat = rep.lat_ns.clone();
+    lat.sort_unstable();
+    let p50 = server::percentile(&lat, 0.50);
+    let p99 = server::percentile(&lat, 0.99);
+    let p999 = server::percentile(&lat, 0.999);
+    println!(
+        "{conns:>2} conn(s): {:>10.0} ops/s   p50 {:>7} ns  p99 {:>8} ns  p999 {:>8} ns  \
+         ({} ok, {} shed)",
+        rep.ops_per_s(), p50, p99, p999, rep.ops_ok, rep.sheds
+    );
+    (rep.ops_per_s(), p50, p99, p999)
+}
+
+/// Live codec-table swap under 8-connection load: a control client
+/// forces analysis rounds while the trace is in flight. Tables start
+/// trivial and the preloaded pages seed the sample reservoir, so the
+/// first forced round adopts a real table. Returns
+/// (table swaps observed, failed client ops).
+fn run_swap_arm(pages: u64, ops_per_conn: usize) -> (u64, u64) {
+    let server = start_server(8);
+    let addr = server.local_addr().to_string();
+    let cfg = LoadGenConfig {
+        addr: addr.clone(),
+        conns: 8,
+        ops_per_conn,
+        pages,
+        ..Default::default()
+    };
+    server::preload(&cfg).expect("preload");
+
+    let ctl = std::thread::spawn(move || {
+        let mut c = Client::connect(&addr).expect("control connect");
+        let v0 = c.stats().expect("stats").get(stats_field::CODEC_VERSION);
+        // let the load connections come up so the swap lands mid-traffic
+        std::thread::sleep(Duration::from_millis(30));
+        let deadline = Instant::now() + Duration::from_secs(20);
+        loop {
+            c.reanalyze().expect("reanalyze");
+            std::thread::sleep(Duration::from_millis(20));
+            let v = c.stats().expect("stats").get(stats_field::CODEC_VERSION);
+            if v > v0 || Instant::now() >= deadline {
+                return v.saturating_sub(v0);
+            }
+        }
+    });
+    let rep = server::run_loadgen(&cfg).expect("loadgen");
+    let swaps = ctl.join().expect("control thread");
+    let (svc, _, _) = server.stop();
+    svc.shutdown();
+    (swaps, rep.ops_err)
+}
+
+fn main() {
+    let fast = std::env::var("GBDI_BENCH_FAST").is_ok_and(|v| v == "1");
+    let pages: u64 = if fast { 192 } else { 512 };
+    let ops_per_conn: usize = if fast { 2_500 } else { 20_000 };
+    println!("== GBN1 network serving: 8 shards, {pages} pages, pipelined mixed ops ==\n");
+
+    let server = start_server(8);
+    let addr = server.local_addr().to_string();
+    let pre_cfg = LoadGenConfig { addr: addr.clone(), pages, ..Default::default() };
+    let preloaded = server::preload(&pre_cfg).expect("preload");
+    assert_eq!(preloaded, pages, "preload accepted fewer pages than requested");
+
+    let mut b = Bencher::new();
+
+    // gateable byte-throughput probes: one synchronous connection, one
+    // request per iteration (protocol + service + loopback round-trip)
+    let mut probe = Client::connect(&addr).expect("probe connect");
+    let block = probe.block_bytes() as u64;
+    b.bench("net_get_block_roundtrip", Some(block), || {
+        probe.get_block(3, 9).expect("get_block").len()
+    });
+    b.bench("net_range_read_4k", Some(4096), || {
+        probe.read_range(5, 0, 64).expect("read_range").len()
+    });
+    drop(probe);
+    println!();
+
+    let mut ops_at_1 = 0.0f64;
+    let mut ops_at_8 = 0.0f64;
+    for conns in [1usize, 2, 4, 8] {
+        let (ops, p50, p99, p999) = run_conn_arm(&addr, conns, ops_per_conn, pages);
+        b.metric(&format!("ops_per_s/conns={conns}"), ops);
+        b.metric(&format!("p50_ns/conns={conns}"), p50 as f64);
+        b.metric(&format!("p99_ns/conns={conns}"), p99 as f64);
+        b.metric(&format!("p999_ns/conns={conns}"), p999 as f64);
+        if conns == 1 {
+            ops_at_1 = ops;
+        }
+        if conns == 8 {
+            ops_at_8 = ops;
+        }
+    }
+    let speedup = ops_at_8 / ops_at_1.max(1e-9);
+    b.metric("speedup/8_conns_vs_1", speedup);
+    println!("\n8 conns vs 1 conn: {speedup:.2}x aggregate throughput");
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    if cores >= 4 {
+        assert!(
+            speedup >= 2.0,
+            "8 connections must at least double 1-connection throughput \
+             (got {speedup:.2}x on {cores} cores)"
+        );
+    } else {
+        println!("(scaling assertion skipped: {cores} hardware threads)");
+    }
+
+    // drain the scaling server and record its side of the ledger
+    let (svc, stats, flushed) = server.stop();
+    let m = svc.shutdown();
+    let (ok, err, shed) = (stats.ops_ok, stats.ops_err, stats.shed_ops);
+    println!(
+        "server: {} conns, {ok} ops ok / {err} err / {shed} shed, {} protocol errors, \
+         {} pages in, {flushed} deferred blocks flushed",
+        stats.accepted_conns, stats.protocol_errors, m.pages_in
+    );
+
+    println!("\n== live codec-table swap under 8-connection load ==\n");
+    let (swaps, failed) = run_swap_arm(pages, ops_per_conn);
+    b.metric("swap/table_swaps", swaps as f64);
+    b.metric("swap/failed_ops", failed as f64);
+    println!("table swaps under load: {swaps}, failed client ops: {failed}");
+    assert!(swaps >= 1, "no codec-table swap completed under live load");
+    assert_eq!(failed, 0, "client ops failed during a live codec-table swap");
+
+    // the regression gate must only ever compare runs of the same ISA
+    // dispatch and protocol revision
+    b.tag("isa", simd::active().isa.name());
+    b.tag("proto", "gbn1");
+    std::fs::create_dir_all("target").ok();
+    b.write_csv("target/serving.csv").ok();
+    match b.write_bench_json("serving") {
+        Ok(p) => println!("json: {}", p.display()),
+        Err(e) => eprintln!("json write failed: {e}"),
+    }
+}

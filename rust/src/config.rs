@@ -29,12 +29,21 @@
 //!
 //! [cache]
 //! bytes = 4m                 # hot-block cache budget; 0 (default) = off
+//!
+//! [server]
+//! listen = "127.0.0.1:7070"  # gbdi serve --listen overrides
+//! max_conns = 64
+//! write_queue_frames = 256   # per-connection response queue (backpressure)
+//! write_queue_bytes = 4m
+//! max_inflight_pages = 0     # admission cap; 0 = shards * ingest_batch * 4
+//! retry_after_ms = 50
 //! ```
 
 use crate::cli::parse_u64;
 use crate::cluster::SelectorKind;
 use crate::coordinator::ServiceConfig;
 use crate::gbdi::GbdiConfig;
+use crate::server::ServerConfig;
 use crate::value::WordSize;
 use std::collections::BTreeMap;
 
@@ -229,6 +238,52 @@ impl ConfigFile {
         })
     }
 
+    /// Build a [`ServerConfig`] from the `[server]` section (missing
+    /// keys keep their defaults); validates the result. The listen
+    /// address here is overridden by `gbdi serve --listen` when both
+    /// are given.
+    pub fn server_config(&self) -> Result<ServerConfig, String> {
+        let d = ServerConfig::default();
+        let listen = match self.get("server", "listen") {
+            None => d.listen,
+            Some(Value::Str(s)) => s.clone(),
+            Some(v) => return Err(format!("server.listen: expected string, got {v:?}")),
+        };
+        let cfg = ServerConfig {
+            listen,
+            max_conns: self.get_u64("server", "max_conns", d.max_conns as u64)? as usize,
+            max_frame_bytes: self
+                .get_u64("server", "max_frame_bytes", d.max_frame_bytes as u64)?
+                as usize,
+            write_queue_frames: self
+                .get_u64("server", "write_queue_frames", d.write_queue_frames as u64)?
+                as usize,
+            write_queue_bytes: self
+                .get_u64("server", "write_queue_bytes", d.write_queue_bytes as u64)?
+                as usize,
+            max_inflight_pages: self.get_u64("server", "max_inflight_pages", d.max_inflight_pages)?,
+            retry_after_ms: self.get_u64("server", "retry_after_ms", d.retry_after_ms as u64)?
+                as u32,
+            poll_interval_ms: self.get_u64("server", "poll_interval_ms", d.poll_interval_ms)?,
+        };
+        if cfg.max_conns == 0 {
+            return Err("server.max_conns: must be >= 1".into());
+        }
+        if cfg.max_frame_bytes < 64 << 10 {
+            return Err("server.max_frame_bytes: must be >= 64k".into());
+        }
+        if cfg.write_queue_frames == 0 {
+            return Err("server.write_queue_frames: must be >= 1".into());
+        }
+        if cfg.write_queue_bytes < 64 << 10 {
+            return Err("server.write_queue_bytes: must be >= 64k".into());
+        }
+        if cfg.poll_interval_ms == 0 {
+            return Err("server.poll_interval_ms: must be >= 1".into());
+        }
+        Ok(cfg)
+    }
+
     /// Load + parse a file.
     pub fn load(path: &str) -> Result<ConfigFile, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
@@ -345,6 +400,40 @@ bytes = 4m
         // defaults when the section is absent
         let c = ConfigFile::parse("").unwrap().service_config().unwrap();
         assert_eq!(c.selector, ServiceConfig::default().selector);
+    }
+
+    #[test]
+    fn builds_server_config() {
+        let text = "[server]\nlisten = \"0.0.0.0:9999\"\nmax_conns = 8\n\
+                    write_queue_bytes = 1m\nmax_inflight_pages = 512\nretry_after_ms = 10";
+        let cfg = ConfigFile::parse(text).unwrap().server_config().unwrap();
+        assert_eq!(cfg.listen, "0.0.0.0:9999");
+        assert_eq!(cfg.max_conns, 8);
+        assert_eq!(cfg.write_queue_bytes, 1 << 20);
+        assert_eq!(cfg.max_inflight_pages, 512);
+        assert_eq!(cfg.retry_after_ms, 10);
+        // unspecified keys keep defaults
+        let d = ServerConfig::default();
+        assert_eq!(cfg.max_frame_bytes, d.max_frame_bytes);
+        assert_eq!(cfg.write_queue_frames, d.write_queue_frames);
+        assert_eq!(cfg.poll_interval_ms, d.poll_interval_ms);
+        // no [server] section: all defaults
+        assert_eq!(ConfigFile::parse("").unwrap().server_config().unwrap(), d);
+    }
+
+    #[test]
+    fn server_section_validates() {
+        for bad in [
+            "[server]\nmax_conns = 0",
+            "[server]\nmax_frame_bytes = 1k",
+            "[server]\nwrite_queue_frames = 0",
+            "[server]\nwrite_queue_bytes = 1k",
+            "[server]\npoll_interval_ms = 0",
+            "[server]\nlisten = 7070",
+        ] {
+            let c = ConfigFile::parse(bad).unwrap();
+            assert!(c.server_config().is_err(), "{bad:?} should fail validation");
+        }
     }
 
     #[test]

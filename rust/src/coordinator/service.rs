@@ -344,6 +344,19 @@ impl CompressionService {
         }
     }
 
+    /// Pages accepted by [`Self::submit`] / [`Self::submit_batch`] but
+    /// not yet compressed and stored — the ingest backlog. The network
+    /// front end's admission control sheds batch PUTs against this
+    /// gauge instead of letting the queue grow without bound.
+    pub fn inflight(&self) -> u64 {
+        self.shared.inflight.load(Ordering::Acquire)
+    }
+
+    /// The configuration this service was started with.
+    pub fn config(&self) -> &ServiceConfig {
+        &self.shared.config
+    }
+
     /// Force an analysis round at the next opportunity (no-op in static
     /// mode).
     pub fn request_analysis(&self) {

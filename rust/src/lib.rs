@@ -77,6 +77,14 @@
 //! recompression until the block cools, and the cache-off default
 //! stays bit-identical to the cacheless build.
 //!
+//! The serving plane is reachable over the network through [`server`]:
+//! a std-only TCP front end speaking the length-prefixed pipelined
+//! `GBN1` protocol (`docs/PROTOCOL.md`) with batch PUT, single/batch
+//! block GET, RANGE, FLUSH, and STATS ops, bounded per-connection
+//! write queues, and `RetryAfter` admission control — `gbdi serve
+//! --listen` runs it, `gbdi client` and `cargo bench --bench serving`
+//! drive it.
+//!
 //! Whole-image software comparators (LZSS, Huffman, gzip, zstd) stay
 //! behind the coarser [`baselines::Codec`] trait — they have no block
 //! granularity for the simulator to exploit.
@@ -162,6 +170,7 @@ pub mod gbdi;
 pub mod memsim;
 pub mod report;
 pub mod runtime;
+pub mod server;
 pub mod simd;
 pub mod util;
 pub mod value;

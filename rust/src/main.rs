@@ -16,9 +16,12 @@ use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig, GlobalBaseTable};
 use gbdi::memsim::{self, trace, CompressedMemory, DramModel};
 use gbdi::report::{bar_chart, fmt_bytes, fmt_ratio, Table};
 use gbdi::runtime::ArtifactRuntime;
+use gbdi::server::{self, protocol::stats_field, Client, LoadGenConfig, Server, ServerConfig};
 use gbdi::util::prng::Rng;
 use gbdi::{elf, workloads};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn app() -> App {
     App::new("gbdi", "GBDI memory compression — paper reproduction toolkit")
@@ -110,8 +113,44 @@ fn app() -> App {
                     "base selector: lloyd|minibatch|histogram|artifact (default from config)",
                 ))
                 .arg(Arg::opt("drift", "", "drift-detection margin override (e.g. 1.02)"))
-                .arg(Arg::opt("config", "", "TOML config ([codec] + [service] + [analyzer])"))
+                .arg(Arg::opt(
+                    "config",
+                    "",
+                    "TOML config ([codec] + [service] + [analyzer] + [server])",
+                ))
+                .arg(Arg::opt(
+                    "listen",
+                    "",
+                    "serve the GBN1 network protocol on host:port instead of the demo",
+                ))
+                .arg(Arg::opt(
+                    "stats-every",
+                    "10",
+                    "network mode: seconds between stats lines (0 = quiet)",
+                ))
                 .arg(isa_arg()),
+        )
+        .subcommand(
+            App::new("client", "GBN1 network client: one-shot ops and the load generator")
+                .arg(Arg::opt("addr", "127.0.0.1:7070", "server address"))
+                .arg(Arg::opt("op", "stats", "stats|flush|reanalyze|shutdown|put|get|range|load"))
+                .arg(Arg::opt("page", "0", "page id (get|range; first id for put)"))
+                .arg(Arg::opt("block", "0", "block index (get; first block for range)"))
+                .arg(Arg::opt("count", "8", "blocks to read (range)"))
+                .arg(Arg::opt("pages", "64", "pages to ingest (put) / preload (load)"))
+                .arg(Arg::opt("page-bytes", "4096", "logical page size (put|load)"))
+                .arg(Arg::opt("workload", "mcf", "workload generating page payloads"))
+                .arg(Arg::opt("seed", "7", "payload/trace seed"))
+                .arg(Arg::opt("conns", "4", "load: concurrent connections"))
+                .arg(Arg::opt("ops", "5000", "load: trace ops per connection"))
+                .arg(Arg::opt("pipeline", "32", "load: requests in flight per connection"))
+                .arg(Arg::opt("read-frac", "0.8", "load: fraction of single-block GETs"))
+                .arg(Arg::opt("zipf", "0", "load: zipf skew for page choice (0 = uniform)"))
+                .arg(Arg::flag(
+                    "check-stats",
+                    "load: assert server STATS deltas match client tallies \
+                     (requires an otherwise idle server)",
+                )),
         )
         .subcommand(
             App::new("selectors", "base-selector ablation: ratio + analysis time per workload")
@@ -509,11 +548,13 @@ fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
     apply_isa(m)?;
     let pages = m.get_u64("pages");
     let kind = parse_codec(m)?;
-    let mut cfg = match m.get("config") {
-        "" => ServiceConfig { analyze_every: 64, ..Default::default() },
-        path => gbdi::config::ConfigFile::load(path)
-            .and_then(|f| f.service_config())
-            .map_err(gbdi::Error::Config)?,
+    let file = match m.get("config") {
+        "" => None,
+        path => Some(gbdi::config::ConfigFile::load(path).map_err(gbdi::Error::Config)?),
+    };
+    let mut cfg = match &file {
+        None => ServiceConfig { analyze_every: 64, ..Default::default() },
+        Some(f) => f.service_config().map_err(gbdi::Error::Config)?,
     };
     cfg.workers = m.get_usize("workers");
     if !m.get("shards").is_empty() {
@@ -580,6 +621,15 @@ fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
             "cache: {} hot-block tier (recompression deferred while hot)",
             fmt_bytes(cache_bytes as u64)
         );
+    }
+    let listen = m.get("listen");
+    if !listen.is_empty() {
+        let mut scfg = match &file {
+            None => ServerConfig::default(),
+            Some(f) => f.server_config().map_err(gbdi::Error::Config)?,
+        };
+        scfg.listen = listen.to_string();
+        return serve_network(m.get_u64("stats-every"), svc, scfg);
     }
     let names: Vec<&str> = match m.get("workload") {
         "mix" => vec!["mcf", "perlbench", "fluidanimate", "triangle_count", "svm"],
@@ -678,6 +728,271 @@ fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
             cache.evictions,
             cache.deferred_flushes
         );
+    }
+    Ok(())
+}
+
+/// Set from the SIGINT/SIGTERM handler; the network serve loop polls it.
+static SHUTDOWN_SIGNAL: AtomicBool = AtomicBool::new(false);
+
+/// Install a flag-setting SIGINT/SIGTERM handler through the C
+/// runtime's `signal` (the libc crate is unavailable offline). The
+/// handler only stores to an atomic, which is async-signal-safe; the
+/// serve loop does the actual draining.
+#[cfg(unix)]
+fn install_shutdown_handler() {
+    extern "C" fn on_signal(_sig: i32) {
+        SHUTDOWN_SIGNAL.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    unsafe {
+        signal(2, on_signal); // SIGINT
+        signal(15, on_signal); // SIGTERM
+    }
+}
+
+/// Non-unix builds fall back to the process dying on Ctrl-C.
+#[cfg(not(unix))]
+fn install_shutdown_handler() {}
+
+/// Network mode of `gbdi serve`: run the GBN1 front end until a signal
+/// or a client SHUTDOWN op arrives, then drain connections, flush the
+/// ingest queue and deferred dirty cache blocks, and report.
+fn serve_network(
+    stats_every: u64,
+    svc: CompressionService,
+    scfg: ServerConfig,
+) -> gbdi::Result<()> {
+    install_shutdown_handler();
+    let server = Server::bind(svc, scfg)?;
+    println!(
+        "listening on {} (GBN1 v1) — SIGINT/SIGTERM or a SHUTDOWN op drains and exits",
+        server.local_addr()
+    );
+    let mut last_stats = Instant::now();
+    while !SHUTDOWN_SIGNAL.load(Ordering::SeqCst) && !server.shutdown_requested() {
+        std::thread::sleep(Duration::from_millis(100));
+        if stats_every > 0 && last_stats.elapsed().as_secs() >= stats_every {
+            last_stats = Instant::now();
+            let s = server.stats();
+            let sm = server.service().metrics();
+            let (_, _, ratio) = server.service().storage_ratio();
+            println!(
+                "stats: conns {}/{} open, ops {} ok / {} err / {} shed, {} in / {} out, \
+                 pages {}, ratio {}, table v{}",
+                s.active_conns,
+                s.accepted_conns,
+                s.ops_ok,
+                s.ops_err,
+                s.shed_ops,
+                fmt_bytes(s.bytes_in),
+                fmt_bytes(s.bytes_out),
+                sm.pages_in,
+                fmt_ratio(ratio),
+                server.service().current_version()
+            );
+        }
+    }
+    println!("shutdown: draining connections and flushing deferred writes...");
+    let (svc, s, flushed) = server.stop();
+    let snap = svc.shutdown();
+    println!(
+        "served {} conns ({} rejected, {} protocol errors): {} ops ok / {} err / {} shed, \
+         {} in / {} out, {} queue-full waits",
+        s.accepted_conns,
+        s.rejected_conns,
+        s.protocol_errors,
+        s.ops_ok,
+        s.ops_err,
+        s.shed_ops,
+        fmt_bytes(s.bytes_in),
+        fmt_bytes(s.bytes_out),
+        s.queue_full_events
+    );
+    println!(
+        "final: {} pages in, {} block reads / {} writes, {} table swaps, \
+         {} deferred dirty blocks flushed on shutdown",
+        snap.pages_in, snap.block_reads, snap.block_writes, snap.table_swaps, flushed
+    );
+    Ok(())
+}
+
+/// Hex of the first `max` bytes, with an ellipsis when truncated.
+fn hex_prefix(data: &[u8], max: usize) -> String {
+    use std::fmt::Write as _;
+    let mut hex = String::with_capacity(2 * max + 4);
+    for b in &data[..data.len().min(max)] {
+        let _ = write!(hex, "{b:02x}");
+    }
+    if data.len() > max {
+        hex.push('…');
+    }
+    hex
+}
+
+fn cmd_client(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
+    let addr = m.get("addr");
+    match m.get("op") {
+        "stats" => {
+            let mut c = Client::connect(addr)?;
+            let stats = c.stats()?;
+            let mut t = Table::new(&["field", "value"]);
+            for (i, name) in stats_field::NAMES.iter().enumerate() {
+                t.row(&[(*name).to_string(), stats.get(i).to_string()]);
+            }
+            print!("{}", t.render());
+        }
+        "flush" => {
+            let mut c = Client::connect(addr)?;
+            println!("flushed {} deferred dirty blocks", c.flush()?);
+        }
+        "reanalyze" => {
+            let mut c = Client::connect(addr)?;
+            let v = c.reanalyze()?;
+            println!("analysis requested (table v{v} at acknowledge time)");
+        }
+        "shutdown" => {
+            let mut c = Client::connect(addr)?;
+            c.shutdown()?;
+            println!("server acknowledged shutdown and is draining");
+        }
+        "put" => {
+            let name = m.get("workload");
+            let w = workloads::by_name(name)
+                .ok_or_else(|| gbdi::Error::Config(format!("unknown workload '{name}'")))?;
+            let mut c = Client::connect(addr)?;
+            let first = m.get_u64("page");
+            let pages = m.get_u64("pages");
+            let page_bytes = m.get_usize("page-bytes");
+            let mut put = 0u64;
+            let mut id = first;
+            while id < first + pages {
+                let n = (first + pages - id).min(32);
+                let batch = server::gen_pages(w.as_ref(), id, n, page_bytes, m.get_u64("seed"));
+                put += u64::from(c.put_pages(&batch)?);
+                id += n;
+            }
+            c.flush()?;
+            println!("ingested {put} pages x {page_bytes} B starting at page {first}");
+        }
+        "get" => {
+            let mut c = Client::connect(addr)?;
+            let (page, block) = (m.get_u64("page"), m.get_u64("block") as u32);
+            let data = c.get_block(page, block)?;
+            println!("page {page} block {block}: {} bytes  {}", data.len(), hex_prefix(&data, 32));
+        }
+        "range" => {
+            let mut c = Client::connect(addr)?;
+            let (page, first) = (m.get_u64("page"), m.get_u64("block") as u32);
+            let count = m.get_u64("count") as u32;
+            let data = c.read_range(page, first, count)?;
+            println!(
+                "page {page} blocks {first}..{}: {}  {}",
+                first.saturating_add(count),
+                fmt_bytes(data.len() as u64),
+                hex_prefix(&data, 32)
+            );
+        }
+        "load" => return cmd_client_load(m),
+        other => {
+            return Err(gbdi::Error::Config(format!(
+                "unknown --op '{other}' (stats|flush|reanalyze|shutdown|put|get|range|load)"
+            )))
+        }
+    }
+    Ok(())
+}
+
+/// `gbdi client --op load`: preload the page address space, run the
+/// trace-driven multi-connection load generator, and (with
+/// `--check-stats`) assert the server's STATS deltas agree with the
+/// client-side tallies — the CI serving smoke runs exactly this.
+fn cmd_client_load(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
+    let cfg = LoadGenConfig {
+        addr: m.get("addr").to_string(),
+        conns: m.get_usize("conns").max(1),
+        ops_per_conn: m.get_usize("ops").max(1),
+        pipeline: m.get_usize("pipeline").max(1),
+        pages: m.get_u64("pages").max(1),
+        page_bytes: m.get_usize("page-bytes").max(64),
+        read_fraction: m.get_f64("read-frac"),
+        zipf_s: m.get_f64("zipf"),
+        seed: m.get_u64("seed"),
+        workload: m.get("workload").to_string(),
+        ..Default::default()
+    };
+    let check = m.get_flag("check-stats");
+    let before = if check {
+        let mut c = Client::connect(&cfg.addr)?;
+        Some(c.stats()?)
+    } else {
+        None
+    };
+    let preloaded = server::preload(&cfg)?;
+    let preload_batches = cfg.pages.div_ceil(32);
+    println!("preloaded {preloaded} pages x {} B from '{}'", cfg.page_bytes, cfg.workload);
+    let rep = server::run_loadgen(&cfg)?;
+    let mut c = Client::connect(&cfg.addr)?;
+    c.flush()?;
+    let after = c.stats()?;
+
+    let mut lat = rep.lat_ns.clone();
+    lat.sort_unstable();
+    println!(
+        "{} conns x {} ops (pipeline {}): {:.0} ops/s over {:.2} s",
+        cfg.conns,
+        cfg.ops_per_conn,
+        cfg.pipeline,
+        rep.ops_per_s(),
+        rep.wall_s
+    );
+    println!(
+        "ok {} (reads {}, batch reads {} -> {} blocks, writes {}, ingest batches {} -> \
+         {} pages), shed {}, err {}",
+        rep.ops_ok,
+        rep.reads,
+        rep.batch_reads,
+        rep.batch_read_blocks,
+        rep.writes,
+        rep.put_batches,
+        rep.pages_put,
+        rep.sheds,
+        rep.ops_err
+    );
+    println!(
+        "latency p50 {} ns  p99 {} ns  p999 {} ns",
+        server::percentile(&lat, 0.50),
+        server::percentile(&lat, 0.99),
+        server::percentile(&lat, 0.999)
+    );
+    if let Some(before) = before {
+        // Every OK op this process sent after the `before` snapshot:
+        // the preload batches + the preload flush + the trace ops + the
+        // final flush + the `after` STATS op (which counts itself).
+        let expect_ok = preload_batches + 1 + rep.ops_ok + 1 + 1;
+        let delta = |f: usize| after.get(f).saturating_sub(before.get(f));
+        let checks = [
+            ("ops_ok", delta(stats_field::OPS_OK), expect_ok),
+            ("block_reads", delta(stats_field::BLOCK_READS), rep.reads + rep.batch_read_blocks),
+            ("block_writes", delta(stats_field::BLOCK_WRITES), rep.writes),
+            ("pages_in", delta(stats_field::PAGES_IN), preloaded + rep.pages_put),
+        ];
+        let mut bad = 0;
+        for (name, got, want) in checks {
+            let verdict = if got == want {
+                "ok"
+            } else {
+                bad += 1;
+                "MISMATCH"
+            };
+            println!("check {name}: server delta {got}, client tally {want} [{verdict}]");
+        }
+        if bad > 0 {
+            return Err(gbdi::Error::Corrupt(format!("{bad} STATS consistency checks failed")));
+        }
+        println!("STATS deltas match client tallies");
     }
     Ok(())
 }
@@ -833,6 +1148,7 @@ fn main() {
         "sweep" => cmd_sweep(m),
         "figure1" => cmd_figure1(m),
         "serve" => cmd_serve(m),
+        "client" => cmd_client(m),
         "selectors" => cmd_selectors(m),
         "memsim" => cmd_memsim(m),
         "info" => {

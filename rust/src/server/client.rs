@@ -1,0 +1,571 @@
+//! The `GBN1` client side: a blocking pipelined [`Client`] and the
+//! trace-driven multi-connection load generator ([`run_loadgen`])
+//! behind `gbdi client --op load` and `cargo bench --bench serving`.
+//!
+//! Pipelining model: responses on a `GBN1` connection arrive strictly
+//! in request order, so the client keeps a FIFO of outstanding request
+//! ids ([`Client::send`] / [`Client::recv`]) and the load generator
+//! measures client-observed latency as *send-to-receive* time per op —
+//! queueing delay under a deep pipeline is charged to the op, which is
+//! what a tail-latency claim must include.
+
+use std::collections::VecDeque;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::TcpStream;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::protocol::{self, Reply, Request, Response, StatsReply, Status};
+use crate::util::prng::Rng;
+use crate::workloads;
+use crate::{Error, Result};
+
+/// How many `RetryAfter` rounds [`Client::put_pages`] tolerates before
+/// giving up — generous because each round sleeps the server-suggested
+/// back-off.
+const MAX_PUT_RETRIES: usize = 1000;
+
+/// A blocking, pipelineable `GBN1` connection.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    next_req_id: u64,
+    inflight: VecDeque<u64>,
+    max_frame_bytes: usize,
+    block_bytes: usize,
+}
+
+impl Client {
+    /// Connect, send the magic, and parse the server hello.
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let rstream = stream.try_clone()?;
+        let mut writer = BufWriter::new(stream);
+        writer.write_all(&protocol::MAGIC)?;
+        writer.flush()?;
+        let mut reader = BufReader::new(rstream);
+        let mut hello = [0u8; 8];
+        reader.read_exact(&mut hello)?;
+        let (_version, block_bytes) = protocol::parse_server_hello(&hello).map_err(Error::Corrupt)?;
+        Ok(Client {
+            reader,
+            writer,
+            next_req_id: 1,
+            inflight: VecDeque::new(),
+            max_frame_bytes: protocol::DEFAULT_MAX_FRAME_BYTES,
+            block_bytes: block_bytes as usize,
+        })
+    }
+
+    /// The server's block size from the hello.
+    pub fn block_bytes(&self) -> usize {
+        self.block_bytes
+    }
+
+    /// Requests sent but not yet answered.
+    pub fn outstanding(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Pipelined send: frame the request into the write buffer and
+    /// record its id. The bytes may sit in the buffer until the next
+    /// [`Self::recv`] (which always flushes first) or an explicit flush.
+    pub fn send(&mut self, req: &Request) -> Result<u64> {
+        let id = self.next_req_id;
+        self.next_req_id += 1;
+        protocol::write_frame(&mut self.writer, &protocol::encode_request(id, req))?;
+        self.inflight.push_back(id);
+        Ok(id)
+    }
+
+    /// Receive the oldest outstanding response (responses are FIFO per
+    /// connection). Flushes buffered requests first so a recv can never
+    /// deadlock against our own write buffer.
+    pub fn recv(&mut self) -> Result<Response> {
+        self.writer.flush()?;
+        let payload = protocol::read_frame(&mut self.reader, self.max_frame_bytes)?
+            .ok_or_else(|| Error::Corrupt("server closed the connection".into()))?;
+        let resp = protocol::decode_response(&payload).map_err(Error::Corrupt)?;
+        match self.inflight.pop_front() {
+            Some(expected) if expected == resp.req_id => Ok(resp),
+            Some(expected) => Err(Error::Corrupt(format!(
+                "out-of-order response: expected req {expected}, got {}",
+                resp.req_id
+            ))),
+            None => Err(Error::Corrupt("response with no request in flight".into())),
+        }
+    }
+
+    /// Synchronous round trip; requires an empty pipeline.
+    pub fn request(&mut self, req: &Request) -> Result<Response> {
+        if !self.inflight.is_empty() {
+            return Err(Error::Config(
+                "Client::request needs an empty pipeline; drain with recv() first".into(),
+            ));
+        }
+        self.send(req)?;
+        self.recv()
+    }
+
+    /// Batch-PUT pages, sleeping out `RetryAfter` shed responses with
+    /// the server-suggested back-off. Returns pages accepted.
+    pub fn put_pages(&mut self, pages: &[(u64, Vec<u8>)]) -> Result<u32> {
+        let req = Request::PutPages(pages.to_vec());
+        for _ in 0..MAX_PUT_RETRIES {
+            match self.request(&req)?.body {
+                Reply::PutPages { accepted } => return Ok(accepted),
+                Reply::Error { status: Status::RetryAfter, retry_ms, .. } => {
+                    thread::sleep(Duration::from_millis(u64::from(retry_ms.max(1))));
+                }
+                other => return Err(unexpected("PutPages", &other)),
+            }
+        }
+        Err(Error::Corrupt("PutPages shed by admission control on every retry".into()))
+    }
+
+    /// Read one block.
+    pub fn get_block(&mut self, page_id: u64, block: u32) -> Result<Vec<u8>> {
+        match self.request(&Request::GetBlock { page_id, block })?.body {
+            Reply::Block { data } => Ok(data),
+            other => Err(unexpected("GetBlock", &other)),
+        }
+    }
+
+    /// Write one block.
+    pub fn put_block(&mut self, page_id: u64, block: u32, data: Vec<u8>) -> Result<()> {
+        match self.request(&Request::PutBlock { page_id, block, data })?.body {
+            Reply::PutBlock => Ok(()),
+            other => Err(unexpected("PutBlock", &other)),
+        }
+    }
+
+    /// Read `count` consecutive blocks starting at `first`.
+    pub fn read_range(&mut self, page_id: u64, first: u32, count: u32) -> Result<Vec<u8>> {
+        match self.request(&Request::ReadRange { page_id, first, count })?.body {
+            Reply::Range { data } => Ok(data),
+            other => Err(unexpected("ReadRange", &other)),
+        }
+    }
+
+    /// Drain the server's ingest queue and flush deferred dirty cache
+    /// blocks; returns how many dirty blocks were written back.
+    pub fn flush(&mut self) -> Result<u64> {
+        match self.request(&Request::Flush)?.body {
+            Reply::Flushed { blocks } => Ok(blocks),
+            other => Err(unexpected("Flush", &other)),
+        }
+    }
+
+    /// Snapshot the server's STATS field vector.
+    pub fn stats(&mut self) -> Result<StatsReply> {
+        match self.request(&Request::Stats)?.body {
+            Reply::Stats(stats) => Ok(stats),
+            other => Err(unexpected("Stats", &other)),
+        }
+    }
+
+    /// Force a background analysis round; returns the codec version at
+    /// acknowledge time (poll [`Self::stats`] to observe the swap).
+    pub fn reanalyze(&mut self) -> Result<u64> {
+        match self.request(&Request::Reanalyze)?.body {
+            Reply::Version { version } => Ok(version),
+            other => Err(unexpected("Reanalyze", &other)),
+        }
+    }
+
+    /// Ask the server to begin graceful shutdown.
+    pub fn shutdown(&mut self) -> Result<()> {
+        match self.request(&Request::Shutdown)?.body {
+            Reply::ShutdownAck => Ok(()),
+            other => Err(unexpected("Shutdown", &other)),
+        }
+    }
+}
+
+fn unexpected(what: &str, reply: &Reply) -> Error {
+    match reply {
+        Reply::Error { status, message, .. } => {
+            Error::Corrupt(format!("{what}: server answered {status:?}: {message}"))
+        }
+        other => Error::Corrupt(format!("{what}: mismatched reply {other:?}")),
+    }
+}
+
+/// Load-generator shape: a deterministic per-connection op trace driven
+/// through a pipelined [`Client`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadGenConfig {
+    /// Server address.
+    pub addr: String,
+    /// Concurrent connections, one OS thread each.
+    pub conns: usize,
+    /// Trace length per connection.
+    pub ops_per_conn: usize,
+    /// Pipeline window: requests in flight per connection.
+    pub pipeline: usize,
+    /// Page-id address space the trace reads/writes (must be
+    /// preloaded; see `preload`).
+    pub pages: u64,
+    /// Logical page size for generated pages.
+    pub page_bytes: usize,
+    /// Fraction of trace ops that are single-block GETs; the rest are
+    /// single-block PUTs (before batch/ingest mix-ins).
+    pub read_fraction: f64,
+    /// Every N ops, substitute an 8-block batched GET (0 = never).
+    pub batch_read_every: usize,
+    /// Every N ops, substitute a 4-page ingest batch with fresh page
+    /// ids (0 = never) — keeps the analyzer's sample reservoir fed so
+    /// codec-table swaps happen under live load.
+    pub put_pages_every: usize,
+    /// Zipf skew for page choice (0 = uniform).
+    pub zipf_s: f64,
+    /// Trace seed; each connection forks a distinct stream.
+    pub seed: u64,
+    /// Workload generating page/block payloads (`workloads::by_name`).
+    pub workload: String,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        LoadGenConfig {
+            addr: "127.0.0.1:7070".to_string(),
+            conns: 4,
+            ops_per_conn: 5000,
+            pipeline: 32,
+            pages: 64,
+            page_bytes: 4096,
+            read_fraction: 0.8,
+            batch_read_every: 16,
+            put_pages_every: 32,
+            zipf_s: 0.0,
+            seed: 7,
+            workload: "mcf".to_string(),
+        }
+    }
+}
+
+/// Client-side tallies from one load-generator run (or one
+/// connection's share before [`LoadGenReport::merge`]).
+#[derive(Debug, Clone, Default)]
+pub struct LoadGenReport {
+    /// OK responses received, all op kinds.
+    pub ops_ok: u64,
+    /// `RetryAfter` responses (admission sheds).
+    pub sheds: u64,
+    /// Other non-OK responses.
+    pub ops_err: u64,
+    /// OK single-block GETs.
+    pub reads: u64,
+    /// Blocks returned by OK batched GETs (found slots).
+    pub batch_read_blocks: u64,
+    /// OK batched-GET responses.
+    pub batch_reads: u64,
+    /// OK single-block PUTs.
+    pub writes: u64,
+    /// Pages accepted by OK ingest batches.
+    pub pages_put: u64,
+    /// OK ingest-batch responses.
+    pub put_batches: u64,
+    /// Wall time of the slowest connection, seconds.
+    pub wall_s: f64,
+    /// Per-op send-to-receive latency, nanoseconds (unsorted).
+    pub lat_ns: Vec<u64>,
+}
+
+impl LoadGenReport {
+    /// Completed ops (OK + shed + errored).
+    pub fn total_ops(&self) -> u64 {
+        self.ops_ok + self.sheds + self.ops_err
+    }
+
+    /// Completed ops per second over the slowest connection's wall time.
+    pub fn ops_per_s(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.total_ops() as f64 / self.wall_s
+        }
+    }
+
+    /// Fold another connection's tallies into this one.
+    pub fn merge(&mut self, other: LoadGenReport) {
+        self.ops_ok += other.ops_ok;
+        self.sheds += other.sheds;
+        self.ops_err += other.ops_err;
+        self.reads += other.reads;
+        self.batch_read_blocks += other.batch_read_blocks;
+        self.batch_reads += other.batch_reads;
+        self.writes += other.writes;
+        self.pages_put += other.pages_put;
+        self.put_batches += other.put_batches;
+        self.wall_s = self.wall_s.max(other.wall_s);
+        self.lat_ns.extend(other.lat_ns);
+    }
+}
+
+/// Latency percentile over an **ascending-sorted** slice (nearest-rank;
+/// 0 for an empty slice).
+pub fn percentile(sorted_ns: &[u64], q: f64) -> u64 {
+    if sorted_ns.is_empty() {
+        return 0;
+    }
+    let rank = (q * (sorted_ns.len() - 1) as f64).round() as usize;
+    sorted_ns[rank.min(sorted_ns.len() - 1)]
+}
+
+/// Generate `pages` with ids `first_id..first_id + pages` from the
+/// configured workload, deterministic in `seed`.
+pub fn gen_pages(
+    workload: &dyn workloads::Workload,
+    first_id: u64,
+    pages: u64,
+    page_bytes: usize,
+    seed: u64,
+) -> Vec<(u64, Vec<u8>)> {
+    (first_id..first_id + pages)
+        .map(|id| (id, workload.generate(page_bytes, seed ^ id.wrapping_mul(0x9E37_79B9))))
+        .collect()
+}
+
+/// Preload the trace's page address space over one connection in
+/// batches, respecting admission back-off. Returns pages accepted.
+pub fn preload(cfg: &LoadGenConfig) -> Result<u64> {
+    let workload = workload_for(cfg)?;
+    let mut client = Client::connect(&cfg.addr)?;
+    let mut total = 0u64;
+    let mut id = 0u64;
+    while id < cfg.pages {
+        let n = (cfg.pages - id).min(32);
+        let batch = gen_pages(workload.as_ref(), id, n, cfg.page_bytes, cfg.seed);
+        total += u64::from(client.put_pages(&batch)?);
+        id += n;
+    }
+    client.flush()?;
+    Ok(total)
+}
+
+fn workload_for(cfg: &LoadGenConfig) -> Result<Box<dyn workloads::Workload>> {
+    workloads::by_name(&cfg.workload)
+        .ok_or_else(|| Error::Config(format!("unknown workload {:?}", cfg.workload)))
+}
+
+enum TraceOp {
+    Get { page: u64, block: u32 },
+    BatchGet(Vec<(u64, u32)>),
+    Put { page: u64, block: u32, data: Vec<u8> },
+    PutPages(Vec<(u64, Vec<u8>)>),
+}
+
+fn pick_page(rng: &mut Rng, cfg: &LoadGenConfig) -> u64 {
+    if cfg.zipf_s > 0.0 {
+        rng.zipf(cfg.pages.max(1), cfg.zipf_s) % cfg.pages.max(1)
+    } else {
+        rng.below(cfg.pages.max(1))
+    }
+}
+
+/// Build one connection's deterministic trace. Fresh ingest page ids
+/// live above the preloaded range and are unique per connection, so
+/// concurrent traces never write the same new page.
+fn build_trace(
+    cfg: &LoadGenConfig,
+    workload: &dyn workloads::Workload,
+    conn: usize,
+    blocks_per_page: u64,
+    pool: &[u8],
+    block_bytes: usize,
+) -> Vec<TraceOp> {
+    let mut rng = Rng::new(cfg.seed ^ (conn as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut fresh_id = cfg.pages + (conn as u64) * (cfg.ops_per_conn as u64) * 4;
+    let mut trace = Vec::with_capacity(cfg.ops_per_conn);
+    for i in 1..=cfg.ops_per_conn {
+        if cfg.put_pages_every != 0 && i % cfg.put_pages_every == 0 {
+            let batch = gen_pages(workload, fresh_id, 4, cfg.page_bytes, cfg.seed ^ i as u64);
+            fresh_id += 4;
+            trace.push(TraceOp::PutPages(batch));
+        } else if cfg.batch_read_every != 0 && i % cfg.batch_read_every == 0 {
+            let items = (0..8)
+                .map(|_| (pick_page(&mut rng, cfg), rng.below(blocks_per_page) as u32))
+                .collect();
+            trace.push(TraceOp::BatchGet(items));
+        } else if rng.f64() < cfg.read_fraction {
+            trace.push(TraceOp::Get {
+                page: pick_page(&mut rng, cfg),
+                block: rng.below(blocks_per_page) as u32,
+            });
+        } else {
+            let at = rng.below((pool.len() - block_bytes + 1) as u64) as usize;
+            trace.push(TraceOp::Put {
+                page: pick_page(&mut rng, cfg),
+                block: rng.below(blocks_per_page) as u32,
+                data: pool[at..at + block_bytes].to_vec(),
+            });
+        }
+    }
+    trace
+}
+
+fn drain_one(
+    client: &mut Client,
+    pending: &mut VecDeque<Instant>,
+    report: &mut LoadGenReport,
+) -> Result<()> {
+    let resp = client.recv()?;
+    let sent = pending.pop_front().ok_or_else(|| {
+        Error::Corrupt("load generator received a response with nothing pending".into())
+    })?;
+    report.lat_ns.push(sent.elapsed().as_nanos() as u64);
+    match resp.body {
+        Reply::Block { .. } => {
+            report.reads += 1;
+            report.ops_ok += 1;
+        }
+        Reply::Blocks { items } => {
+            report.batch_read_blocks += items.iter().flatten().count() as u64;
+            report.batch_reads += 1;
+            report.ops_ok += 1;
+        }
+        Reply::PutBlock => {
+            report.writes += 1;
+            report.ops_ok += 1;
+        }
+        Reply::PutPages { accepted } => {
+            report.pages_put += u64::from(accepted);
+            report.put_batches += 1;
+            report.ops_ok += 1;
+        }
+        Reply::Error { status: Status::RetryAfter, .. } => report.sheds += 1,
+        Reply::Error { .. } => report.ops_err += 1,
+        _ => report.ops_ok += 1,
+    }
+    Ok(())
+}
+
+fn run_conn(cfg: &LoadGenConfig, conn: usize) -> Result<LoadGenReport> {
+    let workload = workload_for(cfg)?;
+    let mut client = Client::connect(&cfg.addr)?;
+    let block_bytes = client.block_bytes().max(1);
+    let blocks_per_page = (cfg.page_bytes / block_bytes).max(1) as u64;
+    let pool = workload.generate(cfg.page_bytes.max(block_bytes) * 4, cfg.seed ^ 0xB10C);
+    let trace = build_trace(cfg, workload.as_ref(), conn, blocks_per_page, &pool, block_bytes);
+
+    let mut report = LoadGenReport::default();
+    let mut pending: VecDeque<Instant> = VecDeque::with_capacity(cfg.pipeline.max(1));
+    let t0 = Instant::now();
+    for op in &trace {
+        while pending.len() >= cfg.pipeline.max(1) {
+            drain_one(&mut client, &mut pending, &mut report)?;
+        }
+        let req = match op {
+            TraceOp::Get { page, block } => Request::GetBlock { page_id: *page, block: *block },
+            TraceOp::BatchGet(items) => Request::GetBlocks(items.clone()),
+            TraceOp::Put { page, block, data } => {
+                Request::PutBlock { page_id: *page, block: *block, data: data.clone() }
+            }
+            TraceOp::PutPages(batch) => Request::PutPages(batch.clone()),
+        };
+        client.send(&req)?;
+        pending.push_back(Instant::now());
+    }
+    while !pending.is_empty() {
+        drain_one(&mut client, &mut pending, &mut report)?;
+    }
+    report.wall_s = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+/// Run the multi-connection load generator against a live server and
+/// return the merged client-side tallies. Pages `0..cfg.pages` must
+/// already exist (use [`preload`]).
+pub fn run_loadgen(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
+    let results: Vec<Result<LoadGenReport>> = thread::scope(|s| {
+        let handles: Vec<_> =
+            (0..cfg.conns.max(1)).map(|conn| s.spawn(move || run_conn(cfg, conn))).collect();
+        handles.into_iter().map(|h| h.join().expect("loadgen thread panicked")).collect()
+    });
+    let mut merged = LoadGenReport::default();
+    for r in results {
+        merged.merge(r?);
+    }
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&xs, 0.0), 1);
+        assert_eq!(percentile(&xs, 0.5), 51);
+        assert_eq!(percentile(&xs, 0.99), 99);
+        assert_eq!(percentile(&xs, 1.0), 100);
+        assert_eq!(percentile(&[], 0.5), 0);
+        assert_eq!(percentile(&[42], 0.999), 42);
+    }
+
+    #[test]
+    fn report_merge_accumulates() {
+        let mut a = LoadGenReport {
+            ops_ok: 10,
+            sheds: 1,
+            wall_s: 0.5,
+            lat_ns: vec![1, 2],
+            ..Default::default()
+        };
+        let b = LoadGenReport {
+            ops_ok: 5,
+            ops_err: 2,
+            wall_s: 1.5,
+            lat_ns: vec![3],
+            ..Default::default()
+        };
+        a.merge(b);
+        assert_eq!(a.ops_ok, 15);
+        assert_eq!(a.sheds, 1);
+        assert_eq!(a.ops_err, 2);
+        assert_eq!(a.total_ops(), 18);
+        assert_eq!(a.wall_s, 1.5);
+        assert_eq!(a.lat_ns, vec![1, 2, 3]);
+        assert!((a.ops_per_s() - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn traces_are_deterministic_and_mixed() {
+        let cfg = LoadGenConfig { ops_per_conn: 200, ..Default::default() };
+        let workload = workload_for(&cfg).unwrap();
+        let pool = workload.generate(4096 * 4, 1);
+        let t1 = build_trace(&cfg, workload.as_ref(), 0, 64, &pool, 64);
+        let t2 = build_trace(&cfg, workload.as_ref(), 0, 64, &pool, 64);
+        assert_eq!(t1.len(), 200);
+        let kind = |t: &TraceOp| match t {
+            TraceOp::Get { .. } => 0,
+            TraceOp::BatchGet(_) => 1,
+            TraceOp::Put { .. } => 2,
+            TraceOp::PutPages(_) => 3,
+        };
+        let k1: Vec<u8> = t1.iter().map(kind).collect();
+        let k2: Vec<u8> = t2.iter().map(kind).collect();
+        assert_eq!(k1, k2, "same seed, same trace");
+        for want in 0..4u8 {
+            assert!(k1.contains(&want), "trace never emitted op kind {want}");
+        }
+        // Distinct connections see distinct traces.
+        let t3 = build_trace(&cfg, workload.as_ref(), 1, 64, &pool, 64);
+        let k3: Vec<u8> = t3.iter().map(kind).collect();
+        assert!(k1 != k3 || format!("{:?}", trace_pages(&t1)) != format!("{:?}", trace_pages(&t3)));
+    }
+
+    fn trace_pages(trace: &[TraceOp]) -> Vec<u64> {
+        trace
+            .iter()
+            .map(|t| match t {
+                TraceOp::Get { page, .. } | TraceOp::Put { page, .. } => *page,
+                TraceOp::BatchGet(items) => items.first().map(|(p, _)| *p).unwrap_or(0),
+                TraceOp::PutPages(batch) => batch.first().map(|(p, _)| *p).unwrap_or(0),
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,35 @@
+//! The network serving plane: a `GBN1` TCP front end over
+//! [`crate::coordinator::CompressionService`], turning the in-process
+//! block store into a served resource real clients can load
+//! (DESIGN.md §12, `docs/PROTOCOL.md`).
+//!
+//! The stack is deliberately std-only — no async runtime, no epoll
+//! crate — because the protocol is *pipelined*: every connection is an
+//! independent, strictly ordered request stream, so one reader thread +
+//! one writer thread per connection saturates the service while keeping
+//! every failure mode inspectable:
+//!
+//! * [`protocol`] — the frozen byte format: length-prefixed frames,
+//!   request/response codecs, the versioned STATS field table. Golden
+//!   frames are cross-checked against the independent Python
+//!   implementation in `scripts/gen_golden_fixtures.py`.
+//! * [`Server`] — accept loop + per-connection reader/writer pairs.
+//!   Responses travel through a **bounded write queue** per connection
+//!   (frames *and* bytes): when a client stops draining responses, the
+//!   reader blocks on the queue instead of buffering without bound, so
+//!   backpressure propagates to the socket. Admission control sheds
+//!   batch PUTs with `RetryAfter` once the service's ingest backlog
+//!   passes `max_inflight_pages`. [`Server::stop`] drains connections,
+//!   then the ingest queue, then flushes deferred dirty cache blocks —
+//!   the graceful-shutdown path `gbdi serve` runs on SIGINT/SIGTERM.
+//! * [`Client`] — blocking pipelined client (window of in-flight
+//!   requests, FIFO response matching) plus the trace-driven
+//!   multi-connection load generator behind `gbdi client --op load`
+//!   and `cargo bench --bench serving`.
+
+pub mod client;
+pub mod net;
+pub mod protocol;
+
+pub use client::{percentile, Client, LoadGenConfig, LoadGenReport};
+pub use net::{Server, ServerConfig, ServerStats, ServerStatsSnapshot};

@@ -1,0 +1,816 @@
+//! The `GBN1` TCP server: accept loop, per-connection reader/writer
+//! pairs, bounded write queues, admission control, and the
+//! graceful-shutdown drain ([`Server::stop`]).
+//!
+//! Threading model (see the module docs in [`super`]): one nonblocking
+//! accept loop, then per connection a *reader* thread that decodes and
+//! executes requests against the shared
+//! [`CompressionService`](crate::coordinator::CompressionService) and a
+//! *writer* thread that drains that connection's bounded
+//! [`WriteQueue`]. Readers poll with a short socket read timeout so
+//! every thread observes the stop flag within `poll_interval_ms` even
+//! while idle; a mid-frame client stall cannot wedge shutdown.
+
+use std::collections::VecDeque;
+use std::io::{BufWriter, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use super::protocol::{
+    self, stats_field, Reply, Request, Response, StatsReply, Status, MIN_REQUEST_PAYLOAD,
+};
+use crate::coordinator::CompressionService;
+use crate::{Error, Result};
+
+/// How long a fresh connection may take to present its 4 magic bytes.
+const HANDSHAKE_TIMEOUT_MS: u64 = 5_000;
+
+/// Socket write timeout: a peer that stops reading for this long is
+/// dropped rather than allowed to wedge its writer thread forever.
+const WRITE_TIMEOUT_MS: u64 = 10_000;
+
+/// Tuning knobs for [`Server::bind`]; `[server]` in the config file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServerConfig {
+    /// Address to bind (`host:port`; port 0 picks a free port).
+    pub listen: String,
+    /// Maximum simultaneously open connections; later accepts are
+    /// dropped (counted as `rejected_conns`).
+    pub max_conns: usize,
+    /// Maximum frame payload size accepted or produced.
+    pub max_frame_bytes: usize,
+    /// Per-connection write-queue capacity in frames.
+    pub write_queue_frames: usize,
+    /// Per-connection write-queue capacity in bytes.
+    pub write_queue_bytes: usize,
+    /// Shed batch PUTs with `RetryAfter` once the service's ingest
+    /// backlog would exceed this many pages. 0 = auto:
+    /// `shards * ingest_batch * 4`.
+    pub max_inflight_pages: u64,
+    /// Suggested client back-off carried in `RetryAfter` responses.
+    pub retry_after_ms: u32,
+    /// Stop-flag poll granularity for idle readers and the accept loop.
+    pub poll_interval_ms: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            listen: "127.0.0.1:7070".to_string(),
+            max_conns: 64,
+            max_frame_bytes: protocol::DEFAULT_MAX_FRAME_BYTES,
+            write_queue_frames: 256,
+            write_queue_bytes: 4 << 20,
+            max_inflight_pages: 0,
+            retry_after_ms: 50,
+            poll_interval_ms: 50,
+        }
+    }
+}
+
+/// Wait-free server-wide counters, aggregated across connections. The
+/// STATS op and `gbdi serve`'s periodic line both read these; the op
+/// counters sum consistently with the service's `ShardMetrics` totals
+/// (pinned by `tests/server_proto.rs`).
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    accepted_conns: AtomicU64,
+    active_conns: AtomicU64,
+    rejected_conns: AtomicU64,
+    shed_ops: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+    frames_in: AtomicU64,
+    frames_out: AtomicU64,
+    queue_full_events: AtomicU64,
+    protocol_errors: AtomicU64,
+    ops_ok: AtomicU64,
+    ops_err: AtomicU64,
+}
+
+/// Point-in-time copy of [`ServerStats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ServerStatsSnapshot {
+    /// Connections accepted since start.
+    pub accepted_conns: u64,
+    /// Connections currently open.
+    pub active_conns: u64,
+    /// Connections dropped at accept time (`max_conns` reached).
+    pub rejected_conns: u64,
+    /// Ops shed by admission control with `RetryAfter`.
+    pub shed_ops: u64,
+    /// Bytes read off sockets (magic + frame headers + payloads).
+    pub bytes_in: u64,
+    /// Bytes written to sockets (hello + response frames).
+    pub bytes_out: u64,
+    /// Request frames decoded.
+    pub frames_in: u64,
+    /// Response frames enqueued.
+    pub frames_out: u64,
+    /// Times a response had to wait for write-queue space.
+    pub queue_full_events: u64,
+    /// Connection-fatal protocol violations.
+    pub protocol_errors: u64,
+    /// OK responses sent (a STATS snapshot includes its own op).
+    pub ops_ok: u64,
+    /// Non-OK responses sent.
+    pub ops_err: u64,
+}
+
+impl ServerStats {
+    fn conn_accepted(&self) {
+        self.accepted_conns.fetch_add(1, Ordering::Relaxed);
+        self.active_conns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn conn_closed(&self) {
+        self.active_conns.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    fn conn_rejected(&self) {
+        self.rejected_conns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn active(&self) -> u64 {
+        self.active_conns.load(Ordering::Relaxed)
+    }
+
+    fn shed(&self) {
+        self.shed_ops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn add_bytes_in(&self, n: u64) {
+        self.bytes_in.fetch_add(n, Ordering::Relaxed);
+    }
+
+    fn add_bytes_out(&self, n: u64) {
+        self.bytes_out.fetch_add(n, Ordering::Relaxed);
+    }
+
+    fn frame_in(&self, wire_bytes: u64) {
+        self.frames_in.fetch_add(1, Ordering::Relaxed);
+        self.add_bytes_in(wire_bytes);
+    }
+
+    fn frame_out(&self) {
+        self.frames_out.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn queue_full(&self) {
+        self.queue_full_events.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn protocol_error(&self) {
+        self.protocol_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn op_ok(&self) {
+        self.ops_ok.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn op_err(&self) {
+        self.ops_err.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot every counter.
+    pub fn snapshot(&self) -> ServerStatsSnapshot {
+        ServerStatsSnapshot {
+            accepted_conns: self.accepted_conns.load(Ordering::Relaxed),
+            active_conns: self.active_conns.load(Ordering::Relaxed),
+            rejected_conns: self.rejected_conns.load(Ordering::Relaxed),
+            shed_ops: self.shed_ops.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+            frames_in: self.frames_in.load(Ordering::Relaxed),
+            frames_out: self.frames_out.load(Ordering::Relaxed),
+            queue_full_events: self.queue_full_events.load(Ordering::Relaxed),
+            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+            ops_ok: self.ops_ok.load(Ordering::Relaxed),
+            ops_err: self.ops_err.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Bounded MPSC byte-chunk queue between a connection's reader and
+/// writer: the backpressure seam. `push` blocks while the queue is at
+/// capacity (frames or bytes), so a client that stops draining
+/// responses eventually stalls its own request stream instead of
+/// growing server memory.
+struct WriteQueue {
+    inner: Mutex<QueueInner>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    max_frames: usize,
+    max_bytes: usize,
+}
+
+struct QueueInner {
+    chunks: VecDeque<Vec<u8>>,
+    bytes: usize,
+    closed: bool,
+}
+
+impl WriteQueue {
+    fn new(max_frames: usize, max_bytes: usize) -> Self {
+        WriteQueue {
+            inner: Mutex::new(QueueInner { chunks: VecDeque::new(), bytes: 0, closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            max_frames: max_frames.max(1),
+            max_bytes: max_bytes.max(1),
+        }
+    }
+
+    /// Enqueue, blocking while the queue is full. Returns `None` if the
+    /// queue was closed (writer died), else `Some(had_to_wait)`. An
+    /// oversized chunk is still admitted once the queue is empty, so a
+    /// single frame larger than `max_bytes` cannot deadlock.
+    fn push(&self, chunk: Vec<u8>) -> Option<bool> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut waited = false;
+        while !inner.closed
+            && !inner.chunks.is_empty()
+            && (inner.chunks.len() >= self.max_frames
+                || inner.bytes + chunk.len() > self.max_bytes)
+        {
+            waited = true;
+            inner = self.not_full.wait(inner).unwrap();
+        }
+        if inner.closed {
+            return None;
+        }
+        inner.bytes += chunk.len();
+        inner.chunks.push_back(chunk);
+        self.not_empty.notify_one();
+        Some(waited)
+    }
+
+    /// Dequeue without blocking; `None` when currently empty.
+    fn try_pop(&self) -> Option<Vec<u8>> {
+        let mut inner = self.inner.lock().unwrap();
+        let chunk = inner.chunks.pop_front();
+        if let Some(c) = &chunk {
+            inner.bytes -= c.len();
+            self.not_full.notify_one();
+        }
+        chunk
+    }
+
+    /// Dequeue, blocking until a chunk arrives; `None` once the queue
+    /// is closed *and* drained.
+    fn pop_blocking(&self) -> Option<Vec<u8>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(c) = inner.chunks.pop_front() {
+                inner.bytes -= c.len();
+                self.not_full.notify_one();
+                return Some(c);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+/// Everything a connection thread needs, shared by `Arc`.
+struct ConnCtx {
+    svc: Arc<CompressionService>,
+    stats: Arc<ServerStats>,
+    cfg: ServerConfig,
+    stop: Arc<AtomicBool>,
+    shutdown_requested: Arc<AtomicBool>,
+    max_inflight_pages: u64,
+    block_bytes: usize,
+}
+
+/// A running `GBN1` server. Dropping without [`Server::stop`] leaks the
+/// service into the still-running threads — always stop.
+pub struct Server {
+    svc: Arc<CompressionService>,
+    stats: Arc<ServerStats>,
+    stop: Arc<AtomicBool>,
+    shutdown_requested: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    addr: SocketAddr,
+}
+
+impl Server {
+    /// Bind `cfg.listen` and start serving `svc`. The service keeps its
+    /// workers and analyzer; the server only adds the network front
+    /// end. Fails on bind/configuration errors.
+    pub fn bind(svc: CompressionService, cfg: ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(cfg.listen.as_str())?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let svc = Arc::new(svc);
+        let stats = Arc::new(ServerStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let shutdown_requested = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let max_inflight_pages = if cfg.max_inflight_pages > 0 {
+            cfg.max_inflight_pages
+        } else {
+            (svc.config().shards.max(1) * svc.config().ingest_batch.max(1) * 4) as u64
+        };
+        let block_bytes = svc.config().codec.block_bytes;
+        let ctx = Arc::new(ConnCtx {
+            svc: Arc::clone(&svc),
+            stats: Arc::clone(&stats),
+            cfg,
+            stop: Arc::clone(&stop),
+            shutdown_requested: Arc::clone(&shutdown_requested),
+            max_inflight_pages,
+            block_bytes,
+        });
+        let aconns = Arc::clone(&conns);
+        let acceptor = thread::spawn(move || accept_loop(&listener, &ctx, &aconns));
+        Ok(Server { svc, stats, stop, shutdown_requested, acceptor: Some(acceptor), conns, addr })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Live server counters.
+    pub fn stats(&self) -> ServerStatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// The service behind the front end (metrics, shard snapshots...).
+    pub fn service(&self) -> &CompressionService {
+        &self.svc
+    }
+
+    /// True once a client sent the SHUTDOWN op: the caller owning the
+    /// server should invoke [`Server::stop`].
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown_requested.load(Ordering::Acquire)
+    }
+
+    /// Graceful shutdown: stop accepting, wake every reader, let each
+    /// writer drain the responses already enqueued, then drain the
+    /// service's ingest queue and flush deferred dirty cache blocks —
+    /// no acknowledged write is lost. Returns the recovered service,
+    /// the final counters, and how many dirty blocks the final flush
+    /// wrote back.
+    pub fn stop(self) -> (CompressionService, ServerStatsSnapshot, usize) {
+        let Server { svc, stats, stop, acceptor, conns, .. } = self;
+        stop.store(true, Ordering::Release);
+        if let Some(h) = acceptor {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        svc.flush();
+        let flushed = svc.flush_cache();
+        let snapshot = stats.snapshot();
+        let svc = match Arc::try_unwrap(svc) {
+            Ok(svc) => svc,
+            Err(_) => unreachable!("connection threads joined but still hold the service"),
+        };
+        (svc, snapshot, flushed)
+    }
+}
+
+fn accept_loop(listener: &TcpListener, ctx: &Arc<ConnCtx>, conns: &Mutex<Vec<JoinHandle<()>>>) {
+    let nap = Duration::from_millis(ctx.cfg.poll_interval_ms.max(1));
+    while !ctx.stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let mut guard = conns.lock().unwrap();
+                guard.retain(|h| !h.is_finished());
+                if ctx.stats.active() >= ctx.cfg.max_conns as u64 {
+                    ctx.stats.conn_rejected();
+                    continue;
+                }
+                ctx.stats.conn_accepted();
+                let cctx = Arc::clone(ctx);
+                guard.push(thread::spawn(move || {
+                    conn_loop(&cctx, stream);
+                    cctx.stats.conn_closed();
+                }));
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => thread::sleep(nap),
+            Err(_) => thread::sleep(nap),
+        }
+    }
+}
+
+/// Outcome of a polled exact-length read.
+enum ReadOutcome {
+    /// Buffer filled.
+    Done,
+    /// Peer closed at a message boundary (nothing read).
+    CleanEof,
+    /// The stop flag went up mid-wait.
+    Aborted,
+    /// I/O error, mid-message EOF, or handshake deadline exceeded.
+    Failed,
+}
+
+/// `read_exact` that polls the stop flag on every socket timeout, so a
+/// reader blocked on an idle or stalled connection still observes
+/// shutdown within one `poll_interval_ms`.
+fn read_exact_polled(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    deadline: Option<Instant>,
+) -> ReadOutcome {
+    let mut filled = 0;
+    while filled < buf.len() {
+        if stop.load(Ordering::Acquire) {
+            return ReadOutcome::Aborted;
+        }
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return if filled == 0 { ReadOutcome::CleanEof } else { ReadOutcome::Failed };
+            }
+            Ok(n) => filled += n,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if let Some(d) = deadline {
+                    if Instant::now() >= d {
+                        return ReadOutcome::Failed;
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return ReadOutcome::Failed,
+        }
+    }
+    ReadOutcome::Done
+}
+
+fn conn_loop(ctx: &ConnCtx, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(ctx.cfg.poll_interval_ms.max(1))));
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(WRITE_TIMEOUT_MS)));
+
+    // Handshake: the client's 4 magic bytes, under a deadline so a
+    // silent connection cannot hold a thread forever.
+    let mut magic = [0u8; 4];
+    let deadline = Instant::now() + Duration::from_millis(HANDSHAKE_TIMEOUT_MS);
+    match read_exact_polled(&mut stream, &mut magic, &ctx.stop, Some(deadline)) {
+        ReadOutcome::Done => {}
+        ReadOutcome::CleanEof | ReadOutcome::Aborted => return,
+        ReadOutcome::Failed => {
+            ctx.stats.protocol_error();
+            return;
+        }
+    }
+    if magic != protocol::MAGIC {
+        ctx.stats.protocol_error();
+        return;
+    }
+    ctx.stats.add_bytes_in(4);
+
+    let queue = Arc::new(WriteQueue::new(ctx.cfg.write_queue_frames, ctx.cfg.write_queue_bytes));
+    let Ok(wstream) = stream.try_clone() else {
+        return;
+    };
+    let wqueue = Arc::clone(&queue);
+    let wstats = Arc::clone(&ctx.stats);
+    let writer = thread::spawn(move || writer_loop(wstream, &wqueue, &wstats));
+    let hello = protocol::server_hello(ctx.block_bytes.min(u16::MAX as usize) as u16);
+    queue.push(hello.to_vec());
+
+    let mut scratch = vec![0u8; ctx.block_bytes.max(1)];
+    loop {
+        let mut hdr = [0u8; 4];
+        match read_exact_polled(&mut stream, &mut hdr, &ctx.stop, None) {
+            ReadOutcome::Done => {}
+            ReadOutcome::CleanEof | ReadOutcome::Aborted => break,
+            ReadOutcome::Failed => {
+                ctx.stats.protocol_error();
+                break;
+            }
+        }
+        let len = u32::from_le_bytes(hdr) as usize;
+        if !(MIN_REQUEST_PAYLOAD..=ctx.cfg.max_frame_bytes).contains(&len) {
+            ctx.stats.protocol_error();
+            break;
+        }
+        let mut payload = vec![0u8; len];
+        match read_exact_polled(&mut stream, &mut payload, &ctx.stop, None) {
+            ReadOutcome::Done => {}
+            ReadOutcome::Aborted => break,
+            ReadOutcome::CleanEof | ReadOutcome::Failed => {
+                ctx.stats.protocol_error();
+                break;
+            }
+        }
+        ctx.stats.frame_in(4 + len as u64);
+
+        let (resp, shutdown_op) = match protocol::decode_request(&payload) {
+            Ok((req_id, req)) => {
+                let shutdown_op = matches!(req, Request::Shutdown);
+                // A STATS snapshot must reflect its own op, so its
+                // counter tick happens before execution: after K OK
+                // client ops, the K+1'th op's snapshot reads exactly
+                // K+1. The CI smoke and the counter-consistency test
+                // rely on this being deterministic.
+                let is_stats = matches!(req, Request::Stats);
+                if is_stats {
+                    ctx.stats.op_ok();
+                }
+                let resp = execute(ctx, req_id, req, &mut scratch);
+                if !is_stats {
+                    if matches!(resp.body, Reply::Error { .. }) {
+                        ctx.stats.op_err();
+                    } else {
+                        ctx.stats.op_ok();
+                    }
+                }
+                (resp, shutdown_op)
+            }
+            Err(msg) => {
+                // Framing was sound, the body was not: answer
+                // BadRequest on the salvageable req_id and keep the
+                // connection — the stream is still in sync.
+                let req_id = u64::from_le_bytes(payload[..8].try_into().unwrap());
+                let op = payload[8];
+                ctx.stats.op_err();
+                let body =
+                    Reply::Error { status: Status::BadRequest, op, retry_ms: 0, message: msg };
+                (Response { req_id, body }, false)
+            }
+        };
+
+        let frame = protocol::frame(&protocol::encode_response(&resp));
+        match queue.push(frame) {
+            Some(waited) => {
+                ctx.stats.frame_out();
+                if waited {
+                    ctx.stats.queue_full();
+                }
+            }
+            None => break,
+        }
+        if shutdown_op {
+            ctx.shutdown_requested.store(true, Ordering::Release);
+        }
+    }
+
+    queue.close();
+    let _ = writer.join();
+}
+
+fn writer_loop(stream: TcpStream, queue: &WriteQueue, stats: &ServerStats) {
+    let mut w = BufWriter::new(stream);
+    loop {
+        let chunk = match queue.try_pop() {
+            Some(c) => c,
+            None => {
+                // Idle: force buffered responses onto the wire before
+                // blocking for the next one.
+                if w.flush().is_err() {
+                    break;
+                }
+                match queue.pop_blocking() {
+                    Some(c) => c,
+                    None => break,
+                }
+            }
+        };
+        if w.write_all(&chunk).is_err() {
+            break;
+        }
+        stats.add_bytes_out(chunk.len() as u64);
+    }
+    // Unblock the reader if we died with the queue still open.
+    queue.close();
+    let _ = w.flush();
+}
+
+fn err(req_id: u64, status: Status, op: u8, retry_ms: u32, message: &str) -> Response {
+    let body = Reply::Error { status, op, retry_ms, message: message.to_string() };
+    Response { req_id, body }
+}
+
+/// Map a service error onto the wire: bad indices are the client's
+/// fault, a missing/corrupt page is NotFound, anything else is ours.
+fn err_for(req_id: u64, op: u8, e: &Error) -> Response {
+    let status = match e {
+        Error::Config(_) => Status::BadRequest,
+        Error::Corrupt(_) => Status::NotFound,
+        _ => Status::ServerError,
+    };
+    err(req_id, status, op, 0, &e.to_string())
+}
+
+fn execute(ctx: &ConnCtx, req_id: u64, req: Request, scratch: &mut [u8]) -> Response {
+    let op = req.op() as u8;
+    if ctx.shutdown_requested.load(Ordering::Acquire)
+        && !matches!(req, Request::Stats | Request::Shutdown)
+    {
+        return err(req_id, Status::ShuttingDown, op, 0, "server is draining");
+    }
+    let body = match req {
+        Request::PutPages(pages) => {
+            let n = pages.len() as u64;
+            if ctx.svc.inflight() + n > ctx.max_inflight_pages {
+                ctx.stats.shed();
+                return err(
+                    req_id,
+                    Status::RetryAfter,
+                    op,
+                    ctx.cfg.retry_after_ms,
+                    "ingest backlog full",
+                );
+            }
+            ctx.svc.submit_batch(pages);
+            Reply::PutPages { accepted: n as u32 }
+        }
+        Request::GetBlock { page_id, block } => {
+            match ctx.svc.read_block(page_id, block as usize, scratch) {
+                Ok(n) => Reply::Block { data: scratch[..n].to_vec() },
+                Err(e) => return err_for(req_id, op, &e),
+            }
+        }
+        Request::GetBlocks(items) => {
+            let mut out = Vec::with_capacity(items.len());
+            for (page_id, block) in items {
+                match ctx.svc.read_block(page_id, block as usize, scratch) {
+                    Ok(n) => out.push(Some(scratch[..n].to_vec())),
+                    Err(_) => out.push(None),
+                }
+            }
+            Reply::Blocks { items: out }
+        }
+        Request::PutBlock { page_id, block, data } => {
+            match ctx.svc.write_block(page_id, block as usize, &data) {
+                Ok(()) => Reply::PutBlock,
+                Err(e) => return err_for(req_id, op, &e),
+            }
+        }
+        Request::ReadRange { page_id, first, count } => {
+            let cap = (ctx.cfg.max_frame_bytes / 2 / ctx.block_bytes.max(1)).max(1);
+            if count as usize > cap {
+                let msg = format!("range of {count} blocks exceeds cap of {cap}");
+                return err(req_id, Status::BadRequest, op, 0, &msg);
+            }
+            let mut data = Vec::with_capacity(count as usize * ctx.block_bytes);
+            for b in first..first.saturating_add(count) {
+                match ctx.svc.read_block(page_id, b as usize, scratch) {
+                    Ok(n) => data.extend_from_slice(&scratch[..n]),
+                    Err(e) => return err_for(req_id, op, &e),
+                }
+            }
+            Reply::Range { data }
+        }
+        Request::Flush => {
+            ctx.svc.flush();
+            Reply::Flushed { blocks: ctx.svc.flush_cache() as u64 }
+        }
+        Request::Stats => Reply::Stats(stats_reply(&ctx.svc, &ctx.stats)),
+        Request::Reanalyze => {
+            ctx.svc.request_analysis();
+            Reply::Version { version: ctx.svc.current_version() }
+        }
+        Request::Shutdown => Reply::ShutdownAck,
+    };
+    Response { req_id, body }
+}
+
+/// Assemble the frozen STATS field vector (order: [`stats_field`]) from
+/// the server counters, the service metrics, the store occupancy, and
+/// the cache totals.
+pub(crate) fn stats_reply(svc: &CompressionService, server: &ServerStats) -> StatsReply {
+    let s = server.snapshot();
+    let m = svc.metrics();
+    let (logical, stored, _ratio) = svc.storage_ratio();
+    let cache = svc.cache_totals();
+    let mut fields = vec![0u64; stats_field::COUNT];
+    fields[stats_field::ACCEPTED_CONNS] = s.accepted_conns;
+    fields[stats_field::ACTIVE_CONNS] = s.active_conns;
+    fields[stats_field::REJECTED_CONNS] = s.rejected_conns;
+    fields[stats_field::SHED_OPS] = s.shed_ops;
+    fields[stats_field::BYTES_IN] = s.bytes_in;
+    fields[stats_field::BYTES_OUT] = s.bytes_out;
+    fields[stats_field::FRAMES_IN] = s.frames_in;
+    fields[stats_field::FRAMES_OUT] = s.frames_out;
+    fields[stats_field::QUEUE_FULL_EVENTS] = s.queue_full_events;
+    fields[stats_field::PROTOCOL_ERRORS] = s.protocol_errors;
+    fields[stats_field::OPS_OK] = s.ops_ok;
+    fields[stats_field::OPS_ERR] = s.ops_err;
+    fields[stats_field::PAGES_IN] = m.pages_in;
+    fields[stats_field::BLOCK_READS] = m.block_reads;
+    fields[stats_field::BLOCK_WRITES] = m.block_writes;
+    fields[stats_field::READ_ERRORS] = m.read_errors;
+    fields[stats_field::WRITE_ERRORS] = m.write_errors;
+    fields[stats_field::LOGICAL_BYTES] = logical as u64;
+    fields[stats_field::STORED_BYTES] = stored as u64;
+    fields[stats_field::CODEC_VERSION] = svc.current_version();
+    fields[stats_field::SHARDS] = svc.shard_count() as u64;
+    fields[stats_field::TABLE_SWAPS] = m.table_swaps;
+    fields[stats_field::CACHE_HITS] = cache.hits;
+    fields[stats_field::CACHE_MISSES] = cache.misses;
+    fields[stats_field::CACHE_ADMISSIONS] = cache.admissions;
+    fields[stats_field::CACHE_EVICTIONS] = cache.evictions;
+    fields[stats_field::DEFERRED_FLUSHES] = cache.deferred_flushes;
+    fields[stats_field::CACHED_BLOCKS] = cache.cached_blocks;
+    fields[stats_field::DIRTY_BLOCKS] = cache.dirty_blocks;
+    StatsReply { fields }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_queue_bounds_and_backpressure() {
+        let q = Arc::new(WriteQueue::new(2, 1 << 20));
+        assert_eq!(q.push(vec![1]), Some(false));
+        assert_eq!(q.push(vec![2]), Some(false));
+        // Third push must block until the consumer drains one.
+        let q2 = Arc::clone(&q);
+        let t = thread::spawn(move || q2.push(vec![3]));
+        thread::sleep(Duration::from_millis(30));
+        assert!(!t.is_finished(), "push past capacity should block");
+        assert_eq!(q.try_pop(), Some(vec![1]));
+        assert_eq!(t.join().unwrap(), Some(true));
+        assert_eq!(q.pop_blocking(), Some(vec![2]));
+        assert_eq!(q.pop_blocking(), Some(vec![3]));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn write_queue_byte_cap_and_oversize() {
+        let q = WriteQueue::new(100, 8);
+        // A chunk bigger than the byte cap still enters an empty queue.
+        assert_eq!(q.push(vec![0; 64]), Some(false));
+        let q = Arc::new(q);
+        let q2 = Arc::clone(&q);
+        let t = thread::spawn(move || q2.push(vec![1; 4]));
+        thread::sleep(Duration::from_millis(30));
+        assert!(!t.is_finished(), "byte cap should hold the second push");
+        assert_eq!(q.try_pop(), Some(vec![0; 64]));
+        assert_eq!(t.join().unwrap(), Some(true));
+    }
+
+    #[test]
+    fn write_queue_close_unblocks_both_sides() {
+        let q = Arc::new(WriteQueue::new(1, 1));
+        assert_eq!(q.push(vec![9]), Some(false));
+        let q2 = Arc::clone(&q);
+        let pusher = thread::spawn(move || q2.push(vec![8]));
+        let q3 = Arc::clone(&q);
+        let closer = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(30));
+            q3.close();
+        });
+        assert_eq!(pusher.join().unwrap(), None);
+        closer.join().unwrap();
+        // Close drains what was queued, then reports exhaustion.
+        assert_eq!(q.pop_blocking(), Some(vec![9]));
+        assert_eq!(q.pop_blocking(), None);
+        assert_eq!(q.push(vec![7]), None);
+    }
+
+    #[test]
+    fn server_stats_snapshot_tracks_counters() {
+        let s = ServerStats::default();
+        s.conn_accepted();
+        s.conn_accepted();
+        s.conn_closed();
+        s.conn_rejected();
+        s.shed();
+        s.frame_in(100);
+        s.frame_out();
+        s.add_bytes_out(60);
+        s.queue_full();
+        s.protocol_error();
+        s.op_ok();
+        s.op_ok();
+        s.op_err();
+        let snap = s.snapshot();
+        assert_eq!(snap.accepted_conns, 2);
+        assert_eq!(snap.active_conns, 1);
+        assert_eq!(snap.rejected_conns, 1);
+        assert_eq!(snap.shed_ops, 1);
+        assert_eq!(snap.bytes_in, 100);
+        assert_eq!(snap.bytes_out, 60);
+        assert_eq!(snap.frames_in, 1);
+        assert_eq!(snap.frames_out, 1);
+        assert_eq!(snap.queue_full_events, 1);
+        assert_eq!(snap.protocol_errors, 1);
+        assert_eq!(snap.ops_ok, 2);
+        assert_eq!(snap.ops_err, 1);
+    }
+}

@@ -1,0 +1,948 @@
+//! `GBN1` — the length-prefixed pipelined binary protocol spoken by the
+//! network front end ([`super::Server`]) and its client
+//! ([`super::Client`]).
+//!
+//! Byte-level layout, status codes, and the STATS field table are
+//! frozen in `docs/PROTOCOL.md`; golden frames under
+//! `rust/tests/golden/gbn1_*.gbn` are cross-verified against the
+//! independent Python implementation in
+//! `scripts/gen_golden_fixtures.py`. Everything is **little-endian**.
+//!
+//! A connection starts with a 4-byte client magic (`"GBN1"`) answered
+//! by an 8-byte server hello, then carries framed requests and
+//! responses: a `u32` payload length followed by the payload. Requests
+//! on one connection are answered **in order**, which is what makes
+//! pipelining trivial for clients: send a window of requests, then
+//! match responses FIFO.
+
+use crate::util::prng::Rng;
+
+/// Connection magic: the client's first 4 bytes, echoed back as the
+/// first 4 bytes of the server hello.
+pub const MAGIC: [u8; 4] = *b"GBN1";
+
+/// Protocol version carried in the server hello.
+pub const PROTOCOL_VERSION: u8 = 1;
+
+/// Smallest legal request payload: `req_id` (8) + `op` (1).
+pub const MIN_REQUEST_PAYLOAD: usize = 9;
+
+/// Smallest legal response payload: `req_id` (8) + `status` (1) + `op` (1).
+pub const MIN_RESPONSE_PAYLOAD: usize = 10;
+
+/// Default cap on a single frame's payload, requests and responses alike.
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 8 << 20;
+
+/// Version byte leading a STATS response body.
+pub const STATS_VERSION: u8 = 1;
+
+/// Hard cap on items in one `GetBlocks` request.
+pub const MAX_GET_BLOCKS: usize = 4096;
+
+/// Decode failures. The server answers a decodable `req_id` with
+/// [`Status::BadRequest`] and keeps the connection; framing-level
+/// violations (bad magic, bad length prefix) close it.
+pub type ProtoError = String;
+
+/// Operation codes (the `op` byte of every request, echoed in every
+/// response so a response is decodable without per-connection state).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Op {
+    /// Batch page ingest via `CompressionService::submit_batch`.
+    PutPages = 1,
+    /// Single-block read out of a compressed frame (or the cache tier).
+    GetBlock = 2,
+    /// Batched block reads, one found/miss slot per requested block.
+    GetBlocks = 3,
+    /// Single-block write (in-place recompression / cache absorb).
+    PutBlock = 4,
+    /// Contiguous multi-block read from one page.
+    ReadRange = 5,
+    /// Drain the ingest queue, then flush deferred dirty cache blocks.
+    Flush = 6,
+    /// Snapshot server + service + shard + cache counters.
+    Stats = 7,
+    /// Force a background analysis round (codec-table swap candidate).
+    Reanalyze = 8,
+    /// Ask the server to begin graceful shutdown after replying.
+    Shutdown = 9,
+}
+
+impl Op {
+    /// Decode an op byte.
+    pub fn from_u8(v: u8) -> Option<Op> {
+        Some(match v {
+            1 => Op::PutPages,
+            2 => Op::GetBlock,
+            3 => Op::GetBlocks,
+            4 => Op::PutBlock,
+            5 => Op::ReadRange,
+            6 => Op::Flush,
+            7 => Op::Stats,
+            8 => Op::Reanalyze,
+            9 => Op::Shutdown,
+            _ => return None,
+        })
+    }
+}
+
+/// Response status byte.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Status {
+    /// Success; the body is op-specific.
+    Ok = 0,
+    /// The addressed page/block does not exist.
+    NotFound = 1,
+    /// The request body was malformed or out of bounds.
+    BadRequest = 2,
+    /// Admission control shed the op; retry after `retry_ms`.
+    RetryAfter = 3,
+    /// The server failed internally while executing the op.
+    ServerError = 4,
+    /// The server is draining; no new work is accepted.
+    ShuttingDown = 5,
+}
+
+impl Status {
+    /// Decode a status byte.
+    pub fn from_u8(v: u8) -> Option<Status> {
+        Some(match v {
+            0 => Status::Ok,
+            1 => Status::NotFound,
+            2 => Status::BadRequest,
+            3 => Status::RetryAfter,
+            4 => Status::ServerError,
+            5 => Status::ShuttingDown,
+            _ => return None,
+        })
+    }
+}
+
+/// A decoded request body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// Ingest pages: `(page_id, page bytes)` pairs.
+    PutPages(Vec<(u64, Vec<u8>)>),
+    /// Read one block of one page.
+    GetBlock {
+        /// Page to read from.
+        page_id: u64,
+        /// Block index within the page.
+        block: u32,
+    },
+    /// Read many `(page_id, block)` pairs in one round trip.
+    GetBlocks(Vec<(u64, u32)>),
+    /// Overwrite one block of one page.
+    PutBlock {
+        /// Page to write into.
+        page_id: u64,
+        /// Block index within the page.
+        block: u32,
+        /// New block contents.
+        data: Vec<u8>,
+    },
+    /// Read `count` consecutive blocks starting at `first`.
+    ReadRange {
+        /// Page to read from.
+        page_id: u64,
+        /// First block index.
+        first: u32,
+        /// Number of blocks.
+        count: u32,
+    },
+    /// Drain ingest, then flush deferred dirty cache blocks.
+    Flush,
+    /// Snapshot counters.
+    Stats,
+    /// Force an analysis round.
+    Reanalyze,
+    /// Begin graceful shutdown after acknowledging.
+    Shutdown,
+}
+
+impl Request {
+    /// The op code this request encodes as.
+    pub fn op(&self) -> Op {
+        match self {
+            Request::PutPages(_) => Op::PutPages,
+            Request::GetBlock { .. } => Op::GetBlock,
+            Request::GetBlocks(_) => Op::GetBlocks,
+            Request::PutBlock { .. } => Op::PutBlock,
+            Request::ReadRange { .. } => Op::ReadRange,
+            Request::Flush => Op::Flush,
+            Request::Stats => Op::Stats,
+            Request::Reanalyze => Op::Reanalyze,
+            Request::Shutdown => Op::Shutdown,
+        }
+    }
+}
+
+/// STATS response body: a versioned, growable vector of `u64` fields.
+///
+/// Field order is frozen (see [`stats_field`] and `docs/PROTOCOL.md`);
+/// new fields only ever append. [`StatsReply::get`] returns 0 for
+/// fields beyond what the peer sent, so old clients read new servers
+/// and vice versa.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct StatsReply {
+    /// The raw field vector in [`stats_field`] order.
+    pub fields: Vec<u64>,
+}
+
+/// Frozen indices into [`StatsReply::fields`].
+pub mod stats_field {
+    /// Connections accepted since start.
+    pub const ACCEPTED_CONNS: usize = 0;
+    /// Connections currently open.
+    pub const ACTIVE_CONNS: usize = 1;
+    /// Connections refused at accept time (`max_conns` reached).
+    pub const REJECTED_CONNS: usize = 2;
+    /// Ops shed by admission control with `RetryAfter`.
+    pub const SHED_OPS: usize = 3;
+    /// Frame bytes read off sockets (headers + payloads).
+    pub const BYTES_IN: usize = 4;
+    /// Bytes written to sockets (hello + response frames).
+    pub const BYTES_OUT: usize = 5;
+    /// Request frames decoded.
+    pub const FRAMES_IN: usize = 6;
+    /// Response frames enqueued.
+    pub const FRAMES_OUT: usize = 7;
+    /// Times a response had to wait for write-queue space (backpressure).
+    pub const QUEUE_FULL_EVENTS: usize = 8;
+    /// Connection-fatal protocol violations (bad magic, bad length).
+    pub const PROTOCOL_ERRORS: usize = 9;
+    /// OK responses sent (a STATS snapshot includes its own op).
+    pub const OPS_OK: usize = 10;
+    /// Non-OK responses sent.
+    pub const OPS_ERR: usize = 11;
+    /// Pages compressed by the service (`MetricsSnapshot::pages_in`).
+    pub const PAGES_IN: usize = 12;
+    /// Single-block reads served.
+    pub const BLOCK_READS: usize = 13;
+    /// Single-block writes served.
+    pub const BLOCK_WRITES: usize = 14;
+    /// Failed reads.
+    pub const READ_ERRORS: usize = 15;
+    /// Failed block writes.
+    pub const WRITE_ERRORS: usize = 16;
+    /// Logical bytes resident in the store.
+    pub const LOGICAL_BYTES: usize = 17;
+    /// Compressed bytes resident in the store.
+    pub const STORED_BYTES: usize = 18;
+    /// Current codec (table) version.
+    pub const CODEC_VERSION: usize = 19;
+    /// Page-store shard count.
+    pub const SHARDS: usize = 20;
+    /// Codec-table swaps published.
+    pub const TABLE_SWAPS: usize = 21;
+    /// Hot-block cache hits.
+    pub const CACHE_HITS: usize = 22;
+    /// Hot-block cache misses.
+    pub const CACHE_MISSES: usize = 23;
+    /// Blocks admitted into the cache.
+    pub const CACHE_ADMISSIONS: usize = 24;
+    /// Blocks evicted by capacity pressure.
+    pub const CACHE_EVICTIONS: usize = 25;
+    /// Deferred dirty blocks flushed back through frames.
+    pub const DEFERRED_FLUSHES: usize = 26;
+    /// Blocks resident in the cache.
+    pub const CACHED_BLOCKS: usize = 27;
+    /// Resident blocks carrying an unflushed write.
+    pub const DIRTY_BLOCKS: usize = 28;
+    /// Number of fields this build emits.
+    pub const COUNT: usize = 29;
+
+    /// Human-readable field names in frozen index order (`gbdi client
+    /// --op stats` and the protocol docs render from this table).
+    pub const NAMES: [&str; COUNT] = [
+        "accepted_conns",
+        "active_conns",
+        "rejected_conns",
+        "shed_ops",
+        "bytes_in",
+        "bytes_out",
+        "frames_in",
+        "frames_out",
+        "queue_full_events",
+        "protocol_errors",
+        "ops_ok",
+        "ops_err",
+        "pages_in",
+        "block_reads",
+        "block_writes",
+        "read_errors",
+        "write_errors",
+        "logical_bytes",
+        "stored_bytes",
+        "codec_version",
+        "shards",
+        "table_swaps",
+        "cache_hits",
+        "cache_misses",
+        "cache_admissions",
+        "cache_evictions",
+        "deferred_flushes",
+        "cached_blocks",
+        "dirty_blocks",
+    ];
+}
+
+impl StatsReply {
+    /// Field by frozen index; 0 when the peer sent fewer fields.
+    pub fn get(&self, field: usize) -> u64 {
+        self.fields.get(field).copied().unwrap_or(0)
+    }
+}
+
+/// A decoded response body (the `Ok` arm of each op, or an error).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Reply {
+    /// `PutPages` accepted this many pages into the ingest queue.
+    PutPages {
+        /// Pages accepted.
+        accepted: u32,
+    },
+    /// `GetBlock` payload.
+    Block {
+        /// The block bytes (tail blocks may be short).
+        data: Vec<u8>,
+    },
+    /// `GetBlocks` payload: one slot per requested block, `None` = miss.
+    Blocks {
+        /// Per-request-order results.
+        items: Vec<Option<Vec<u8>>>,
+    },
+    /// `PutBlock` acknowledged.
+    PutBlock,
+    /// `ReadRange` payload: the concatenated block bytes.
+    Range {
+        /// Concatenated blocks.
+        data: Vec<u8>,
+    },
+    /// `Flush` completed.
+    Flushed {
+        /// Deferred dirty cache blocks recompressed.
+        blocks: u64,
+    },
+    /// `Stats` snapshot.
+    Stats(StatsReply),
+    /// `Reanalyze` acknowledged.
+    Version {
+        /// Codec version at acknowledge time.
+        version: u64,
+    },
+    /// `Shutdown` acknowledged; the server begins draining.
+    ShutdownAck,
+    /// Any non-OK outcome.
+    Error {
+        /// Why the op failed.
+        status: Status,
+        /// The attempted op byte (raw: it may not decode as an [`Op`]).
+        op: u8,
+        /// Suggested retry delay in ms (0 unless `RetryAfter`).
+        retry_ms: u32,
+        /// Human-readable detail (may be empty).
+        message: String,
+    },
+}
+
+impl Reply {
+    /// The status byte this reply encodes as.
+    pub fn status(&self) -> Status {
+        match self {
+            Reply::Error { status, .. } => *status,
+            _ => Status::Ok,
+        }
+    }
+
+    /// The op byte this reply encodes as.
+    pub fn op_byte(&self) -> u8 {
+        match self {
+            Reply::PutPages { .. } => Op::PutPages as u8,
+            Reply::Block { .. } => Op::GetBlock as u8,
+            Reply::Blocks { .. } => Op::GetBlocks as u8,
+            Reply::PutBlock => Op::PutBlock as u8,
+            Reply::Range { .. } => Op::ReadRange as u8,
+            Reply::Flushed { .. } => Op::Flush as u8,
+            Reply::Stats(_) => Op::Stats as u8,
+            Reply::Version { .. } => Op::Reanalyze as u8,
+            Reply::ShutdownAck => Op::Shutdown as u8,
+            Reply::Error { op, .. } => *op,
+        }
+    }
+}
+
+/// One framed response: the request id it answers plus the body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Response {
+    /// Echoed from the request.
+    pub req_id: u64,
+    /// Outcome.
+    pub body: Reply,
+}
+
+// ---------------------------------------------------------------------------
+// Little-endian primitive writers.
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked little-endian cursor over a frame payload.
+struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Rd { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        if self.remaining() < n {
+            return Err(format!(
+                "truncated payload: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtoError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtoError> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    /// Reject trailing garbage: a fully decoded payload must be spent.
+    fn finish(self) -> Result<(), ProtoError> {
+        if self.pos != self.buf.len() {
+            return Err(format!(
+                "trailing garbage: {} bytes past the end of the body",
+                self.buf.len() - self.pos
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Cap a claimed element count by what the remaining bytes could
+/// possibly hold, so a hostile count can never drive a huge
+/// pre-allocation.
+fn plausible(n: usize, min_item_bytes: usize, remaining: usize) -> usize {
+    n.min(remaining / min_item_bytes.max(1))
+}
+
+// ---------------------------------------------------------------------------
+// Handshake.
+
+/// The 8-byte server hello: magic, protocol version, flags (reserved,
+/// 0), and the service's block size in bytes.
+pub fn server_hello(block_bytes: u16) -> [u8; 8] {
+    let mut out = [0u8; 8];
+    out[..4].copy_from_slice(&MAGIC);
+    out[4] = PROTOCOL_VERSION;
+    out[5] = 0;
+    out[6..8].copy_from_slice(&block_bytes.to_le_bytes());
+    out
+}
+
+/// Parse a server hello into `(protocol_version, block_bytes)`.
+pub fn parse_server_hello(hello: &[u8; 8]) -> Result<(u8, u16), ProtoError> {
+    if hello[..4] != MAGIC {
+        return Err(format!("bad server hello magic {:02x?}", &hello[..4]));
+    }
+    if hello[4] != PROTOCOL_VERSION {
+        return Err(format!("unsupported protocol version {}", hello[4]));
+    }
+    Ok((hello[4], u16::from_le_bytes([hello[6], hello[7]])))
+}
+
+// ---------------------------------------------------------------------------
+// Encoding.
+
+/// Wrap a payload in its `u32` length prefix.
+pub fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + payload.len());
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Encode a request payload (no length prefix).
+pub fn encode_request(req_id: u64, req: &Request) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    put_u64(&mut out, req_id);
+    out.push(req.op() as u8);
+    match req {
+        Request::PutPages(pages) => {
+            put_u32(&mut out, pages.len() as u32);
+            for (page_id, data) in pages {
+                put_u64(&mut out, *page_id);
+                put_u32(&mut out, data.len() as u32);
+                out.extend_from_slice(data);
+            }
+        }
+        Request::GetBlock { page_id, block } => {
+            put_u64(&mut out, *page_id);
+            put_u32(&mut out, *block);
+        }
+        Request::GetBlocks(items) => {
+            put_u32(&mut out, items.len() as u32);
+            for (page_id, block) in items {
+                put_u64(&mut out, *page_id);
+                put_u32(&mut out, *block);
+            }
+        }
+        Request::PutBlock { page_id, block, data } => {
+            put_u64(&mut out, *page_id);
+            put_u32(&mut out, *block);
+            put_u32(&mut out, data.len() as u32);
+            out.extend_from_slice(data);
+        }
+        Request::ReadRange { page_id, first, count } => {
+            put_u64(&mut out, *page_id);
+            put_u32(&mut out, *first);
+            put_u32(&mut out, *count);
+        }
+        Request::Flush | Request::Stats | Request::Reanalyze | Request::Shutdown => {}
+    }
+    out
+}
+
+/// Encode a response payload (no length prefix).
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    put_u64(&mut out, resp.req_id);
+    out.push(resp.body.status() as u8);
+    out.push(resp.body.op_byte());
+    match &resp.body {
+        Reply::PutPages { accepted } => put_u32(&mut out, *accepted),
+        Reply::Block { data } | Reply::Range { data } => {
+            put_u32(&mut out, data.len() as u32);
+            out.extend_from_slice(data);
+        }
+        Reply::Blocks { items } => {
+            put_u32(&mut out, items.len() as u32);
+            for item in items {
+                match item {
+                    Some(data) => {
+                        out.push(1);
+                        put_u32(&mut out, data.len() as u32);
+                        out.extend_from_slice(data);
+                    }
+                    None => out.push(0),
+                }
+            }
+        }
+        Reply::PutBlock | Reply::ShutdownAck => {}
+        Reply::Flushed { blocks } => put_u64(&mut out, *blocks),
+        Reply::Stats(stats) => {
+            out.push(STATS_VERSION);
+            put_u32(&mut out, stats.fields.len() as u32);
+            for f in &stats.fields {
+                put_u64(&mut out, *f);
+            }
+        }
+        Reply::Version { version } => put_u64(&mut out, *version),
+        Reply::Error { retry_ms, message, .. } => {
+            put_u32(&mut out, *retry_ms);
+            put_u32(&mut out, message.len() as u32);
+            out.extend_from_slice(message.as_bytes());
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Decoding.
+
+/// Decode a request payload into `(req_id, request)`.
+pub fn decode_request(payload: &[u8]) -> Result<(u64, Request), ProtoError> {
+    let mut rd = Rd::new(payload);
+    let req_id = rd.u64()?;
+    let op_byte = rd.u8()?;
+    let op = Op::from_u8(op_byte).ok_or_else(|| format!("unknown op 0x{op_byte:02x}"))?;
+    let req = match op {
+        Op::PutPages => {
+            let n = rd.u32()? as usize;
+            let mut pages = Vec::with_capacity(plausible(n, 12, rd.remaining()));
+            for _ in 0..n {
+                let page_id = rd.u64()?;
+                let len = rd.u32()? as usize;
+                pages.push((page_id, rd.bytes(len)?.to_vec()));
+            }
+            Request::PutPages(pages)
+        }
+        Op::GetBlock => Request::GetBlock { page_id: rd.u64()?, block: rd.u32()? },
+        Op::GetBlocks => {
+            let n = rd.u32()? as usize;
+            if n > MAX_GET_BLOCKS {
+                return Err(format!("GetBlocks count {n} exceeds cap {MAX_GET_BLOCKS}"));
+            }
+            let mut items = Vec::with_capacity(plausible(n, 12, rd.remaining()));
+            for _ in 0..n {
+                items.push((rd.u64()?, rd.u32()?));
+            }
+            Request::GetBlocks(items)
+        }
+        Op::PutBlock => {
+            let page_id = rd.u64()?;
+            let block = rd.u32()?;
+            let len = rd.u32()? as usize;
+            Request::PutBlock { page_id, block, data: rd.bytes(len)?.to_vec() }
+        }
+        Op::ReadRange => {
+            Request::ReadRange { page_id: rd.u64()?, first: rd.u32()?, count: rd.u32()? }
+        }
+        Op::Flush => Request::Flush,
+        Op::Stats => Request::Stats,
+        Op::Reanalyze => Request::Reanalyze,
+        Op::Shutdown => Request::Shutdown,
+    };
+    rd.finish()?;
+    Ok((req_id, req))
+}
+
+/// Decode a response payload.
+pub fn decode_response(payload: &[u8]) -> Result<Response, ProtoError> {
+    let mut rd = Rd::new(payload);
+    let req_id = rd.u64()?;
+    let status_byte = rd.u8()?;
+    let status =
+        Status::from_u8(status_byte).ok_or_else(|| format!("unknown status {status_byte}"))?;
+    let op_byte = rd.u8()?;
+    let body = if status == Status::Ok {
+        let op = Op::from_u8(op_byte)
+            .ok_or_else(|| format!("OK response with unknown op 0x{op_byte:02x}"))?;
+        match op {
+            Op::PutPages => Reply::PutPages { accepted: rd.u32()? },
+            Op::GetBlock => {
+                let len = rd.u32()? as usize;
+                Reply::Block { data: rd.bytes(len)?.to_vec() }
+            }
+            Op::GetBlocks => {
+                let n = rd.u32()? as usize;
+                let mut items = Vec::with_capacity(plausible(n, 1, rd.remaining()));
+                for _ in 0..n {
+                    if rd.u8()? != 0 {
+                        let len = rd.u32()? as usize;
+                        items.push(Some(rd.bytes(len)?.to_vec()));
+                    } else {
+                        items.push(None);
+                    }
+                }
+                Reply::Blocks { items }
+            }
+            Op::PutBlock => Reply::PutBlock,
+            Op::ReadRange => {
+                let len = rd.u32()? as usize;
+                Reply::Range { data: rd.bytes(len)?.to_vec() }
+            }
+            Op::Flush => Reply::Flushed { blocks: rd.u64()? },
+            Op::Stats => {
+                let version = rd.u8()?;
+                if version != STATS_VERSION {
+                    return Err(format!("unsupported stats version {version}"));
+                }
+                let n = rd.u32()? as usize;
+                let mut fields = Vec::with_capacity(plausible(n, 8, rd.remaining()));
+                for _ in 0..n {
+                    fields.push(rd.u64()?);
+                }
+                Reply::Stats(StatsReply { fields })
+            }
+            Op::Reanalyze => Reply::Version { version: rd.u64()? },
+            Op::Shutdown => Reply::ShutdownAck,
+        }
+    } else {
+        let retry_ms = rd.u32()?;
+        let len = rd.u32()? as usize;
+        let message = String::from_utf8(rd.bytes(len)?.to_vec())
+            .map_err(|_| "error message is not UTF-8".to_string())?;
+        Reply::Error { status, op: op_byte, retry_ms, message }
+    };
+    rd.finish()?;
+    Ok(Response { req_id, body })
+}
+
+// ---------------------------------------------------------------------------
+// Blocking frame I/O over std streams.
+
+/// Read one frame payload. `Ok(None)` means the peer closed cleanly at
+/// a frame boundary; a length prefix outside
+/// `[MIN_REQUEST_PAYLOAD, max_frame_bytes]` or a mid-frame EOF is an
+/// `InvalidData` error.
+pub fn read_frame(
+    r: &mut impl std::io::Read,
+    max_frame_bytes: usize,
+) -> std::io::Result<Option<Vec<u8>>> {
+    use std::io::{Error, ErrorKind, Read};
+    let mut hdr = [0u8; 4];
+    let mut filled = 0;
+    while filled < 4 {
+        match r.read(&mut hdr[filled..]) {
+            Ok(0) if filled == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(Error::new(ErrorKind::UnexpectedEof, "EOF inside a frame header"));
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u32::from_le_bytes(hdr) as usize;
+    if len < MIN_REQUEST_PAYLOAD || len > max_frame_bytes {
+        return Err(Error::new(
+            ErrorKind::InvalidData,
+            format!("frame length {len} outside [{MIN_REQUEST_PAYLOAD}, {max_frame_bytes}]"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame(w: &mut impl std::io::Write, payload: &[u8]) -> std::io::Result<()> {
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)
+}
+
+/// Generate a pseudo-random valid request — shared by the round-trip
+/// property test here and the malformed-frame fuzz in
+/// `tests/server_proto.rs`.
+pub fn arbitrary_request(rng: &mut Rng) -> Request {
+    match rng.below(9) {
+        0 => {
+            let n = rng.below(4) as usize;
+            Request::PutPages(
+                (0..n)
+                    .map(|_| {
+                        let mut data = vec![0u8; rng.below(256) as usize];
+                        rng.fill_bytes(&mut data);
+                        (rng.next_u64(), data)
+                    })
+                    .collect(),
+            )
+        }
+        1 => Request::GetBlock { page_id: rng.next_u64(), block: rng.below(1 << 16) as u32 },
+        2 => {
+            let n = rng.below(8) as usize;
+            Request::GetBlocks((0..n).map(|_| (rng.next_u64(), rng.below(256) as u32)).collect())
+        }
+        3 => {
+            let mut data = vec![0u8; rng.below(128) as usize];
+            rng.fill_bytes(&mut data);
+            Request::PutBlock { page_id: rng.next_u64(), block: rng.below(64) as u32, data }
+        }
+        4 => Request::ReadRange {
+            page_id: rng.next_u64(),
+            first: rng.below(64) as u32,
+            count: rng.below(16) as u32,
+        },
+        5 => Request::Flush,
+        6 => Request::Stats,
+        7 => Request::Reanalyze,
+        _ => Request::Shutdown,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_request(req_id: u64, req: Request) {
+        let payload = encode_request(req_id, &req);
+        let (id, back) = decode_request(&payload).unwrap();
+        assert_eq!(id, req_id);
+        assert_eq!(back, req);
+    }
+
+    fn roundtrip_response(resp: Response) {
+        let payload = encode_response(&resp);
+        assert_eq!(decode_response(&payload).unwrap(), resp);
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        roundtrip_request(
+            1,
+            Request::PutPages(vec![(42, vec![7u8; 4096]), (u64::MAX, Vec::new())]),
+        );
+        roundtrip_request(2, Request::GetBlock { page_id: 3, block: 9 });
+        roundtrip_request(3, Request::GetBlocks(vec![(1, 2), (u64::MAX, u32::MAX)]));
+        roundtrip_request(4, Request::PutBlock { page_id: 5, block: 0, data: vec![0xC3; 64] });
+        roundtrip_request(5, Request::ReadRange { page_id: 9, first: 2, count: 3 });
+        roundtrip_request(6, Request::Flush);
+        roundtrip_request(7, Request::Stats);
+        roundtrip_request(u64::MAX, Request::Reanalyze);
+        roundtrip_request(0, Request::Shutdown);
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        roundtrip_response(Response { req_id: 1, body: Reply::PutPages { accepted: 2 } });
+        roundtrip_response(Response {
+            req_id: 2,
+            body: Reply::Block { data: (0..64).collect() },
+        });
+        roundtrip_response(Response {
+            req_id: 3,
+            body: Reply::Blocks { items: vec![Some(vec![1, 2, 3]), None, Some(Vec::new())] },
+        });
+        roundtrip_response(Response { req_id: 4, body: Reply::PutBlock });
+        roundtrip_response(Response { req_id: 5, body: Reply::Range { data: vec![9; 192] } });
+        roundtrip_response(Response { req_id: 6, body: Reply::Flushed { blocks: 7 } });
+        roundtrip_response(Response {
+            req_id: 7,
+            body: Reply::Stats(StatsReply {
+                fields: (0..stats_field::COUNT as u64).map(|i| 1000 + i).collect(),
+            }),
+        });
+        roundtrip_response(Response { req_id: 8, body: Reply::Version { version: 3 } });
+        roundtrip_response(Response { req_id: 9, body: Reply::ShutdownAck });
+        for status in [
+            Status::NotFound,
+            Status::BadRequest,
+            Status::RetryAfter,
+            Status::ServerError,
+            Status::ShuttingDown,
+        ] {
+            roundtrip_response(Response {
+                req_id: 10,
+                body: Reply::Error {
+                    status,
+                    op: 0x2A,
+                    retry_ms: if status == Status::RetryAfter { 50 } else { 0 },
+                    message: "page 3 not found".into(),
+                },
+            });
+        }
+    }
+
+    #[test]
+    fn arbitrary_requests_roundtrip() {
+        let mut rng = Rng::new(0xBEEF);
+        for i in 0..500 {
+            roundtrip_request(i, arbitrary_request(&mut rng));
+        }
+    }
+
+    #[test]
+    fn truncation_never_panics_and_always_errors() {
+        let mut rng = Rng::new(0x5EED);
+        for i in 0..200u64 {
+            let req = arbitrary_request(&mut rng);
+            let full = encode_request(i, &req);
+            for cut in 0..full.len() {
+                assert!(decode_request(&full[..cut]).is_err() || cut == full.len());
+            }
+            let resp = Response { req_id: i, body: Reply::Flushed { blocks: i } };
+            let full = encode_response(&resp);
+            for cut in 0..full.len() {
+                assert!(decode_response(&full[..cut]).is_err());
+            }
+        }
+    }
+
+    #[test]
+    fn garbage_never_panics() {
+        let mut rng = Rng::new(0xDEAD);
+        for _ in 0..2000 {
+            let mut buf = vec![0u8; rng.below(96) as usize];
+            rng.fill_bytes(&mut buf);
+            let _ = decode_request(&buf);
+            let _ = decode_response(&buf);
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut payload = encode_request(1, &Request::Flush);
+        payload.push(0);
+        assert!(decode_request(&payload).is_err());
+        let mut payload = encode_response(&Response { req_id: 1, body: Reply::PutBlock });
+        payload.push(0);
+        assert!(decode_response(&payload).is_err());
+    }
+
+    #[test]
+    fn hostile_counts_do_not_allocate() {
+        // Claimed 4 billion pages with an 8-byte body: decode must fail
+        // fast without a giant pre-allocation.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u64.to_le_bytes());
+        payload.push(Op::PutPages as u8);
+        payload.extend_from_slice(&u32::MAX.to_le_bytes());
+        payload.extend_from_slice(&[0u8; 8]);
+        assert!(decode_request(&payload).is_err());
+        // Same for a GetBlocks count past the cap.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u64.to_le_bytes());
+        payload.push(Op::GetBlocks as u8);
+        payload.extend_from_slice(&(MAX_GET_BLOCKS as u32 + 1).to_le_bytes());
+        assert!(decode_request(&payload).is_err());
+    }
+
+    #[test]
+    fn hello_roundtrips() {
+        let hello = server_hello(64);
+        let (version, block_bytes) = parse_server_hello(&hello).unwrap();
+        assert_eq!(version, PROTOCOL_VERSION);
+        assert_eq!(block_bytes, 64);
+        let mut bad = hello;
+        bad[0] = b'X';
+        assert!(parse_server_hello(&bad).is_err());
+    }
+
+    #[test]
+    fn framed_stream_roundtrips() {
+        let mut wire = Vec::new();
+        let payloads: Vec<Vec<u8>> = vec![
+            encode_request(1, &Request::Flush),
+            encode_request(2, &Request::GetBlock { page_id: 0, block: 0 }),
+        ];
+        for p in &payloads {
+            write_frame(&mut wire, p).unwrap();
+        }
+        let mut cursor = &wire[..];
+        for p in &payloads {
+            assert_eq!(read_frame(&mut cursor, 1 << 20).unwrap().unwrap(), *p);
+        }
+        assert!(read_frame(&mut cursor, 1 << 20).unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(2u32 << 20).to_le_bytes());
+        wire.resize(64, 0);
+        let mut cursor = &wire[..];
+        assert!(read_frame(&mut cursor, 1 << 20).is_err());
+    }
+}

@@ -1,0 +1,157 @@
+//! Golden GBN1 protocol fixtures: checked-in frame bytes that pin the
+//! network wire format byte-for-byte.
+//!
+//! Every case asserts two things against its fixture file under
+//! `tests/golden/`:
+//!
+//! 1. **byte-identical encoding** — encoding the frozen request/response
+//!    lists with [`gbdi::server::protocol`] reproduces the checked-in
+//!    bytes exactly (length prefixes, op/status bytes, field order,
+//!    little-endian layout);
+//! 2. **exact decode** — splitting and decoding the checked-in frames
+//!    reproduces the frozen value lists structurally.
+//!
+//! The fixtures are independently produced (and `--check`-verified) by
+//! the Python mirror in `scripts/gen_golden_fixtures.py`; the two
+//! implementations share no code, so agreement pins the protocol. The
+//! frozen lists below MUST stay in sync with `GBN_REQUESTS` /
+//! `GBN_RESPONSES` in that script.
+//!
+//! Regenerate after an *intentional* protocol change (which needs a
+//! version bump) with `GOLDEN_BLESS=1 cargo test --test golden_protocol`
+//! or `python3 scripts/gen_golden_fixtures.py`, then commit the new
+//! fixtures and explain the break in the PR.
+
+use gbdi::server::protocol::{
+    self, stats_field, Reply, Request, Response, StatsReply, Status, MAGIC, PROTOCOL_VERSION,
+};
+use std::path::PathBuf;
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden").join(name)
+}
+
+/// Bless (under `GOLDEN_BLESS=1`) or compare, then return the
+/// checked-in bytes for the decode leg.
+fn check_golden(name: &str, generated: &[u8]) -> Vec<u8> {
+    let path = fixture_path(name);
+    if std::env::var("GOLDEN_BLESS").is_ok_and(|v| v == "1") {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, generated).unwrap();
+        eprintln!("blessed {name}: {} bytes", generated.len());
+        return generated.to_vec();
+    }
+    let golden = std::fs::read(&path).unwrap_or_else(|e| {
+        panic!("missing fixture {path:?} ({e}); regenerate with GOLDEN_BLESS=1")
+    });
+    assert_eq!(golden, generated, "{name}: checked-in fixture != Rust encoding");
+    golden
+}
+
+/// The frozen request sequence. Touch ONLY with a protocol version bump,
+/// in lockstep with `GBN_REQUESTS` in `scripts/gen_golden_fixtures.py`.
+fn golden_requests() -> Vec<(u64, Request)> {
+    let pages = vec![
+        (0x1122_3344_5566_7788, (0..16u32).map(|i| (i * 7 + 3) as u8).collect()),
+        (7, vec![0xAB; 5]),
+    ];
+    vec![
+        (1, Request::PutPages(pages)),
+        (2, Request::GetBlock { page_id: 3, block: 9 }),
+        (3, Request::GetBlocks(vec![(1, 2), (u64::MAX, u32::MAX)])),
+        (4, Request::PutBlock { page_id: 5, block: 0, data: vec![0xC3; 64] }),
+        (5, Request::ReadRange { page_id: 9, first: 2, count: 3 }),
+        (6, Request::Flush),
+        (7, Request::Stats),
+        (u64::MAX, Request::Reanalyze),
+        (0, Request::Shutdown),
+    ]
+}
+
+fn resp(req_id: u64, body: Reply) -> Response {
+    Response { req_id, body }
+}
+
+fn err(status: Status, op: u8, retry_ms: u32, message: &str) -> Reply {
+    Reply::Error { status, op, retry_ms, message: message.to_string() }
+}
+
+/// The frozen response sequence, one OK body per reply shape plus one
+/// error body per non-OK status. Kept in lockstep with `GBN_RESPONSES`
+/// in `scripts/gen_golden_fixtures.py`.
+fn golden_responses() -> Vec<Response> {
+    vec![
+        resp(1, Reply::PutPages { accepted: 2 }),
+        resp(2, Reply::Block { data: (0..64).collect() }),
+        resp(3, Reply::Blocks { items: vec![Some((1..=8).collect()), None] }),
+        resp(4, Reply::PutBlock),
+        resp(5, Reply::Range { data: (0..12u8).map(|i| 255 - i).collect() }),
+        resp(6, Reply::Flushed { blocks: 7 }),
+        resp(7, Reply::Stats(StatsReply { fields: (0..29u64).map(|i| 1000 + i).collect() })),
+        resp(8, Reply::Version { version: 3 }),
+        resp(9, Reply::ShutdownAck),
+        resp(2, err(Status::NotFound, 2, 0, "page 3 not found")),
+        resp(10, err(Status::BadRequest, 0x2A, 0, "unknown op 0x2a")),
+        resp(1, err(Status::RetryAfter, 1, 50, "ingest backlog")),
+        resp(11, err(Status::ShuttingDown, 4, 0, "")),
+        resp(12, err(Status::ServerError, 6, 0, "internal")),
+    ]
+}
+
+#[test]
+fn golden_hello() {
+    let mut generated = Vec::new();
+    generated.extend_from_slice(&MAGIC);
+    generated.extend_from_slice(&protocol::server_hello(64));
+    let bytes = check_golden("gbn1_hello.gbn", &generated);
+
+    assert_eq!(bytes.len(), 12, "handshake fixture is client magic + 8-byte server hello");
+    assert_eq!(&bytes[..4], &MAGIC, "client handshake magic moved");
+    let mut hello = [0u8; 8];
+    hello.copy_from_slice(&bytes[4..]);
+    let (version, block_bytes) = protocol::parse_server_hello(&hello).unwrap();
+    assert_eq!(version, PROTOCOL_VERSION);
+    assert_eq!(block_bytes, 64);
+}
+
+#[test]
+fn golden_request_frames() {
+    let reqs = golden_requests();
+    let mut generated = Vec::new();
+    for (req_id, req) in &reqs {
+        generated.extend_from_slice(&protocol::frame(&protocol::encode_request(*req_id, req)));
+    }
+    let bytes = check_golden("gbn1_requests.gbn", &generated);
+
+    let mut stream = &bytes[..];
+    let mut decoded = Vec::new();
+    while let Some(payload) = protocol::read_frame(&mut stream, 8 << 20).unwrap() {
+        decoded.push(protocol::decode_request(&payload).unwrap());
+    }
+    assert_eq!(decoded, reqs, "decoding the checked-in request frames drifted");
+}
+
+#[test]
+fn golden_response_frames() {
+    let resps = golden_responses();
+    let mut generated = Vec::new();
+    for r in &resps {
+        generated.extend_from_slice(&protocol::frame(&protocol::encode_response(r)));
+    }
+    let bytes = check_golden("gbn1_responses.gbn", &generated);
+
+    let mut stream = &bytes[..];
+    let mut decoded = Vec::new();
+    while let Some(payload) = protocol::read_frame(&mut stream, 8 << 20).unwrap() {
+        decoded.push(protocol::decode_response(&payload).unwrap());
+    }
+    assert_eq!(decoded, resps, "decoding the checked-in response frames drifted");
+}
+
+#[test]
+fn stats_layout_is_frozen() {
+    // The golden stats reply carries exactly one word per frozen field;
+    // growing the field set is append-only and must rev this fixture.
+    assert_eq!(stats_field::COUNT, 29, "stats_field grew: rev STATS fixtures + docs");
+    assert_eq!(stats_field::NAMES.len(), stats_field::COUNT);
+}

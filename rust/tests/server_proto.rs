@@ -1,0 +1,369 @@
+//! End-to-end tests for the GBN1 network front end: a real
+//! [`gbdi::server::Server`] on an ephemeral loopback port, driven
+//! through [`gbdi::server::Client`] and through raw sockets.
+//!
+//! Covers the handshake and every op round-trip, the malformed-frame
+//! contract (framing violations close the connection, decodable frames
+//! with bad bodies answer `BadRequest` and keep it), a fuzz sweep that
+//! must never kill the server, deterministic `RetryAfter` admission
+//! sheds, the drain semantics of the SHUTDOWN op, the counter ledger
+//! (client tallies == server stats == service metrics == per-shard
+//! sums), and the shutdown-flushes-absorbed-writes guarantee the cache
+//! tier owes its callers.
+
+use gbdi::coordinator::{CompressionService, ServiceConfig};
+use gbdi::server::protocol::{self, stats_field, Reply, Request, Status};
+use gbdi::server::{Client, Server, ServerConfig};
+use gbdi::util::prng::Rng;
+use gbdi::{workloads, BlockCodec, CodecKind, GbdiConfig};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A static-codec service (analysis-free, deterministic) behind a GBN1
+/// server on an ephemeral loopback port.
+fn server_with(shards: usize, cache_bytes: usize, max_inflight_pages: u64) -> Server {
+    let image = workloads::by_name("mcf").unwrap().generate(1 << 16, 7);
+    let codec: Arc<dyn BlockCodec> =
+        Arc::from(CodecKind::Gbdi.build_for_image(&image, &GbdiConfig::default()));
+    let svc = CompressionService::start_static(
+        ServiceConfig { workers: 2, shards, cache_bytes, ..Default::default() },
+        codec,
+    )
+    .expect("service start");
+    let cfg = ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        max_inflight_pages,
+        ..Default::default()
+    };
+    Server::bind(svc, cfg).expect("server bind")
+}
+
+/// Raw-socket handshake: send the magic, swallow the hello.
+fn handshake(server: &Server) -> TcpStream {
+    let mut s = TcpStream::connect(server.local_addr()).expect("connect");
+    s.write_all(&protocol::MAGIC).unwrap();
+    let mut hello = [0u8; 8];
+    s.read_exact(&mut hello).unwrap();
+    protocol::parse_server_hello(&hello).unwrap();
+    s
+}
+
+fn read_response(s: &mut TcpStream) -> protocol::Response {
+    let payload = protocol::read_frame(s, 8 << 20).unwrap().expect("response frame");
+    protocol::decode_response(&payload).unwrap()
+}
+
+/// Read until EOF (or timeout); returns total bytes drained.
+fn drain(s: &mut TcpStream) -> usize {
+    let _ = s.set_read_timeout(Some(Duration::from_secs(10)));
+    let mut total = 0;
+    let mut buf = [0u8; 256];
+    loop {
+        match s.read(&mut buf) {
+            Ok(0) => return total,
+            Ok(n) => total += n,
+            Err(_) => return total,
+        }
+    }
+}
+
+fn mcf_pages(n: u64) -> Vec<(u64, Vec<u8>)> {
+    let w = workloads::by_name("mcf").unwrap();
+    (0..n).map(|i| (i, w.generate(4096, i))).collect()
+}
+
+#[test]
+fn handshake_and_all_ops_roundtrip() {
+    let server = server_with(4, 0, 0);
+    let mut c = Client::connect(&server.local_addr().to_string()).unwrap();
+    assert_eq!(c.block_bytes(), 64, "hello must carry the service block size");
+
+    let pages = mcf_pages(8);
+    assert_eq!(c.put_pages(&pages).unwrap(), 8);
+    c.flush().unwrap();
+
+    // single-block GET matches the source bytes
+    assert_eq!(c.get_block(3, 9).unwrap(), &pages[3].1[9 * 64..10 * 64]);
+
+    // batched GET: two hits plus a missing-page slot
+    let reply = c.request(&Request::GetBlocks(vec![(0, 0), (7, 63), (999, 0)])).unwrap();
+    match reply.body {
+        Reply::Blocks { items } => {
+            assert_eq!(items.len(), 3);
+            assert_eq!(items[0].as_deref().unwrap(), &pages[0].1[..64]);
+            assert_eq!(items[1].as_deref().unwrap(), &pages[7].1[63 * 64..]);
+            assert!(items[2].is_none(), "a missing page must come back as a miss slot");
+        }
+        other => panic!("unexpected batched-GET reply {other:?}"),
+    }
+
+    // single-block PUT, re-read through a two-block RANGE
+    let line = vec![0x5A; 64];
+    c.put_block(1, 2, line.clone()).unwrap();
+    let range = c.read_range(1, 2, 2).unwrap();
+    assert_eq!(&range[..64], &line[..]);
+    assert_eq!(&range[64..], &pages[1].1[3 * 64..4 * 64]);
+
+    // STATS reflects the traffic; Reanalyze is a no-op on a static codec
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get(stats_field::PAGES_IN), 8);
+    assert_eq!(stats.get(stats_field::SHARDS), 4);
+    assert_eq!(stats.get(stats_field::OPS_ERR), 0);
+    assert_eq!(c.reanalyze().unwrap(), 0);
+
+    // pipelined sends drain strictly in request order
+    let mut ids = Vec::new();
+    for i in 0..16u64 {
+        ids.push(c.send(&Request::GetBlock { page_id: i % 8, block: 0 }).unwrap());
+    }
+    for id in ids {
+        assert_eq!(c.recv().unwrap().req_id, id, "responses must drain in request order");
+    }
+    drop(c);
+
+    let (svc, snap, _) = server.stop();
+    assert!(snap.accepted_conns >= 1);
+    assert_eq!(snap.protocol_errors, 0);
+    svc.shutdown();
+}
+
+#[test]
+fn bad_magic_closes_without_a_hello() {
+    let server = server_with(1, 0, 0);
+    let mut s = TcpStream::connect(server.local_addr()).unwrap();
+    s.write_all(b"HTTP").unwrap();
+    assert_eq!(drain(&mut s), 0, "a bad-magic connection must be closed hello-free");
+    // the server is still alive for well-behaved clients
+    let mut c = Client::connect(&server.local_addr().to_string()).unwrap();
+    assert!(c.stats().unwrap().get(stats_field::PROTOCOL_ERRORS) >= 1);
+    drop(c);
+    let (svc, _, _) = server.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn framing_violations_close_the_connection() {
+    let server = server_with(1, 0, 0);
+    for bad_len in [0u32, 1, 8, u32::MAX] {
+        let mut s = handshake(&server);
+        s.write_all(&bad_len.to_le_bytes()).unwrap();
+        // the server may already have closed on the bad header, so the
+        // trailing junk write is allowed to fail
+        let _ = s.write_all(&[0u8; 8]);
+        assert_eq!(drain(&mut s), 0, "frame length {bad_len} must close the connection");
+    }
+    // truncation mid-frame: a valid header whose body never arrives
+    let s = handshake(&server);
+    let mut s2 = s.try_clone().unwrap();
+    s2.write_all(&100u32.to_le_bytes()).unwrap();
+    s2.write_all(&[0u8; 10]).unwrap();
+    drop(s2);
+    drop(s);
+    // a healthy second connection is unaffected
+    let mut c = Client::connect(&server.local_addr().to_string()).unwrap();
+    assert!(c.stats().unwrap().get(stats_field::PROTOCOL_ERRORS) >= 4);
+    drop(c);
+    let (svc, _, _) = server.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn bad_bodies_get_bad_request_and_the_connection_survives() {
+    let server = server_with(1, 0, 0);
+    let mut s = handshake(&server);
+
+    // unknown op byte: decodable framing, undecodable body
+    let mut payload = 77u64.to_le_bytes().to_vec();
+    payload.push(0x2A);
+    protocol::write_frame(&mut s, &payload).unwrap();
+    let resp = read_response(&mut s);
+    assert_eq!(resp.req_id, 77, "req id must be salvaged from the bad frame");
+    match resp.body {
+        Reply::Error { status, op, .. } => {
+            assert_eq!(status, Status::BadRequest);
+            assert_eq!(op, 0x2A, "the offending op byte must be echoed");
+        }
+        other => panic!("expected BadRequest, got {other:?}"),
+    }
+
+    // truncated GetBlock body: same outcome, same still-open connection
+    let mut payload = 78u64.to_le_bytes().to_vec();
+    payload.push(2);
+    payload.extend_from_slice(&[1, 2]);
+    protocol::write_frame(&mut s, &payload).unwrap();
+    let resp = read_response(&mut s);
+    assert_eq!(resp.req_id, 78);
+    assert!(matches!(resp.body, Reply::Error { status: Status::BadRequest, .. }));
+
+    // the connection still serves valid requests afterwards
+    protocol::write_frame(&mut s, &protocol::encode_request(79, &Request::Stats)).unwrap();
+    let resp = read_response(&mut s);
+    assert_eq!(resp.req_id, 79);
+    match resp.body {
+        Reply::Stats(stats) => assert_eq!(stats.get(stats_field::OPS_ERR), 2),
+        other => panic!("expected a stats reply, got {other:?}"),
+    }
+    drop(s);
+    let (svc, snap, _) = server.stop();
+    assert_eq!(snap.protocol_errors, 0, "bad bodies are not framing violations");
+    svc.shutdown();
+}
+
+#[test]
+fn fuzzed_frames_never_kill_the_server() {
+    let server = server_with(2, 0, 0);
+    let mut rng = Rng::new(0xF0_2221);
+    for round in 0..100u64 {
+        let mut s = handshake(&server);
+        let req = protocol::arbitrary_request(&mut rng);
+        let mut payload = protocol::encode_request(round, &req);
+        match rng.below(4) {
+            0 => payload.truncate(rng.below(payload.len() as u64 + 1) as usize),
+            1 => {
+                let i = rng.below(payload.len() as u64) as usize;
+                payload[i] ^= 1 << rng.below(8);
+            }
+            2 => {
+                for _ in 0..=rng.below(16) {
+                    payload.push(rng.next_u64() as u8);
+                }
+            }
+            _ => {}
+        }
+        // under-length payloads go out with their (invalid) real length
+        let _ = s.write_all(&(payload.len() as u32).to_le_bytes());
+        let _ = s.write_all(&payload);
+        let _ = s.flush();
+        drop(s); // never read: exercises writer-side broken pipes too
+    }
+    // the server survived every round and still serves a clean client
+    let mut c = Client::connect(&server.local_addr().to_string()).unwrap();
+    let stats = c.stats().unwrap();
+    assert!(stats.get(stats_field::ACCEPTED_CONNS) >= 100);
+    drop(c);
+    let (svc, _, _) = server.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn admission_control_sheds_with_retry_after() {
+    // inflight cap of 4 pages: an 8-page batch must shed, deterministically
+    let server = server_with(1, 0, 4);
+    let mut c = Client::connect(&server.local_addr().to_string()).unwrap();
+    let pages: Vec<(u64, Vec<u8>)> = (0..8u64).map(|i| (i, vec![i as u8; 4096])).collect();
+    let reply = c.request(&Request::PutPages(pages)).unwrap();
+    match reply.body {
+        Reply::Error { status, retry_ms, .. } => {
+            assert_eq!(status, Status::RetryAfter);
+            assert!(retry_ms > 0, "a shed must tell the client when to come back");
+        }
+        other => panic!("a batch over the inflight cap must shed, got {other:?}"),
+    }
+    assert_eq!(c.stats().unwrap().get(stats_field::SHED_OPS), 1);
+    drop(c);
+    let (svc, snap, _) = server.stop();
+    assert_eq!(snap.shed_ops, 1);
+    svc.shutdown();
+}
+
+#[test]
+fn shutdown_op_drains_then_refuses_work() {
+    let server = server_with(1, 0, 0);
+    let mut c = Client::connect(&server.local_addr().to_string()).unwrap();
+    assert!(!server.shutdown_requested());
+    c.shutdown().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while !server.shutdown_requested() && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(server.shutdown_requested(), "the SHUTDOWN op must set the drain flag");
+
+    // draining: new work is refused, STATS still answers
+    let reply = c.request(&Request::Flush).unwrap();
+    assert!(matches!(reply.body, Reply::Error { status: Status::ShuttingDown, .. }));
+    assert!(c.stats().is_ok(), "STATS must still answer while draining");
+    drop(c);
+    let (svc, _, _) = server.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn stats_counters_stay_consistent() {
+    let server = server_with(4, 0, 0);
+    let mut c = Client::connect(&server.local_addr().to_string()).unwrap();
+    let pages = mcf_pages(6);
+    assert_eq!(c.put_pages(&pages).unwrap(), 6);
+    c.flush().unwrap();
+
+    let mut reads = 0u64;
+    let mut writes = 0u64;
+    for i in 0..30u64 {
+        if i % 3 == 0 {
+            c.put_block(i % 6, (i % 64) as u32, vec![i as u8; 64]).unwrap();
+            writes += 1;
+        } else {
+            c.get_block(i % 6, (i % 64) as u32).unwrap();
+            reads += 1;
+        }
+    }
+
+    // client-side ledger: put_pages + flush + 30 block ops + this STATS
+    // op (which counts itself before executing)
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get(stats_field::OPS_OK), 1 + 1 + 30 + 1);
+    assert_eq!(stats.get(stats_field::OPS_ERR), 0);
+    assert_eq!(stats.get(stats_field::BLOCK_READS), reads);
+    assert_eq!(stats.get(stats_field::BLOCK_WRITES), writes);
+    assert_eq!(stats.get(stats_field::PAGES_IN), 6);
+    drop(c);
+
+    let (svc, snap, _) = server.stop();
+    assert_eq!(snap.ops_ok, 33);
+    assert_eq!(snap.ops_err, 0);
+    assert_eq!(snap.frames_in, snap.frames_out, "every request frame must get one response");
+
+    // server-side ledger: per-shard sums == service totals == client tallies
+    let shard_reads: u64 = svc.shard_metrics().iter().map(|s| s.block_reads).sum();
+    let shard_writes: u64 = svc.shard_metrics().iter().map(|s| s.block_writes).sum();
+    let m = svc.shutdown();
+    assert_eq!(shard_reads, m.block_reads);
+    assert_eq!(shard_writes, m.block_writes);
+    assert_eq!(m.block_reads, reads);
+    assert_eq!(m.block_writes, writes);
+    assert_eq!(m.pages_in, 6);
+}
+
+#[test]
+fn server_stop_flushes_absorbed_writes() {
+    let server = server_with(2, 1 << 20, 0);
+    let mut c = Client::connect(&server.local_addr().to_string()).unwrap();
+    let pages = mcf_pages(4);
+    c.put_pages(&pages).unwrap();
+    c.flush().unwrap();
+
+    // the first write admits the block into the cache; the second is
+    // absorbed: the cached copy goes dirty and the frame keeps its
+    // stale encoding until a flush
+    let line_b = vec![0x22u8; 64];
+    c.put_block(1, 5, vec![0x11u8; 64]).unwrap();
+    c.put_block(1, 5, line_b.clone()).unwrap();
+    let stats = c.stats().unwrap();
+    assert!(
+        stats.get(stats_field::DIRTY_BLOCKS) >= 1,
+        "the second write must defer, not recompress"
+    );
+    drop(c);
+
+    // kill the server right after the absorb: stop() must drain the
+    // connections and flush the deferred write before handing the
+    // service back
+    let (svc, _, flushed) = server.stop();
+    assert!(flushed >= 1, "stop() must flush deferred dirty blocks");
+    assert_eq!(svc.cache_totals().dirty_blocks, 0);
+    let mut expect = pages[1].1.clone();
+    expect[5 * 64..6 * 64].copy_from_slice(&line_b);
+    assert_eq!(svc.read_page(1).unwrap(), expect, "absorbed write lost on shutdown");
+    svc.shutdown();
+}

@@ -7,6 +7,11 @@ checked-in fixtures that `rust/tests/golden_wire.rs` pins the Rust
 implementation against. Two independent implementations agreeing
 bit-for-bit is the point: a drift in either one fails the golden tests.
 
+It also carries an independent encoder/decoder for the GBN1 network
+protocol (`rust/src/server/protocol.rs`): the `gbn1_*.gbn` fixtures pin
+the handshake and every request/response frame shape byte-for-byte
+against `rust/tests/golden_protocol.rs`.
+
 The GBDI fixture images are constructed so that every word fits at most
 one table entry (asserted below), making the encoding independent of the
 encoder's search order / MRU probe tie-breaks.
@@ -465,6 +470,267 @@ def fpc_image():
     return words_le(FPC_WORDS) + bytes([9, 8, 7, 6, 5, 4, 3])
 
 
+# ---- GBN1 network protocol (rust/src/server/protocol.rs) ----------------
+#
+# Everything below mirrors the Rust encoders byte-for-byte: little-endian
+# fixed-width integers, u32 length prefixes, one op byte per request and
+# one status byte + echoed op byte per response. The decoders exist so
+# the fixtures are cross-checked (decode -> re-encode -> identical) by an
+# implementation that shares no code with the encoder's call sites.
+
+GBN_MAGIC = b"GBN1"
+GBN_VERSION = 1
+GBN_STATS_VERSION = 1
+GBN_MIN_REQUEST_PAYLOAD = 9
+MASK32 = (1 << 32) - 1
+MASK64 = (1 << 64) - 1
+
+GBN_OPS = {
+    "put_pages": 1, "get_block": 2, "get_blocks": 3, "put_block": 4,
+    "read_range": 5, "flush": 6, "stats": 7, "reanalyze": 8, "shutdown": 9,
+}
+GBN_STATUS = {
+    "ok": 0, "not_found": 1, "bad_request": 2, "retry_after": 3,
+    "server_error": 4, "shutting_down": 5,
+}
+GBN_OP_NAMES = {v: k for k, v in GBN_OPS.items()}
+GBN_STATUS_NAMES = {v: k for k, v in GBN_STATUS.items()}
+
+
+def u32le(v):
+    return (v & MASK32).to_bytes(4, "little")
+
+
+def u64le(v):
+    return (v & MASK64).to_bytes(8, "little")
+
+
+def gbn_frame(payload):
+    return u32le(len(payload)) + payload
+
+
+def gbn_server_hello(block_bytes):
+    return GBN_MAGIC + bytes([GBN_VERSION, 0]) + block_bytes.to_bytes(2, "little")
+
+
+def gbn_request(req_id, op, body):
+    """Encode one request payload (no length prefix)."""
+    out = bytearray(u64le(req_id))
+    out.append(GBN_OPS[op])
+    if op == "put_pages":
+        out += u32le(len(body))
+        for page_id, data in body:
+            out += u64le(page_id) + u32le(len(data)) + bytes(data)
+    elif op == "get_block":
+        page_id, block = body
+        out += u64le(page_id) + u32le(block)
+    elif op == "get_blocks":
+        out += u32le(len(body))
+        for page_id, block in body:
+            out += u64le(page_id) + u32le(block)
+    elif op == "put_block":
+        page_id, block, data = body
+        out += u64le(page_id) + u32le(block) + u32le(len(data)) + bytes(data)
+    elif op == "read_range":
+        page_id, first, count = body
+        out += u64le(page_id) + u32le(first) + u32le(count)
+    else:
+        assert op in ("flush", "stats", "reanalyze", "shutdown") and body == ()
+    return bytes(out)
+
+
+def gbn_response(req_id, status, op, body):
+    """Encode one response payload. For non-ok statuses `op` is the raw
+    echoed op byte and `body` is `(retry_ms, message)`."""
+    out = bytearray(u64le(req_id))
+    out.append(GBN_STATUS[status])
+    if status != "ok":
+        out.append(op)
+        retry_ms, message = body
+        msg = message.encode("utf-8")
+        out += u32le(retry_ms) + u32le(len(msg)) + msg
+        return bytes(out)
+    out.append(GBN_OPS[op])
+    if op == "put_pages":
+        out += u32le(body)
+    elif op in ("get_block", "read_range"):
+        out += u32le(len(body)) + bytes(body)
+    elif op == "get_blocks":
+        out += u32le(len(body))
+        for item in body:
+            if item is None:
+                out.append(0)
+            else:
+                out.append(1)
+                out += u32le(len(item)) + bytes(item)
+    elif op == "flush":
+        out += u64le(body)
+    elif op == "stats":
+        out.append(GBN_STATS_VERSION)
+        out += u32le(len(body))
+        for field in body:
+            out += u64le(field)
+    elif op == "reanalyze":
+        out += u64le(body)
+    else:
+        assert op in ("put_block", "shutdown") and body == ()
+    return bytes(out)
+
+
+class GbnCursor:
+    """Bounds-checked little-endian reader (mirror of protocol.rs `Rd`)."""
+
+    def __init__(self, buf):
+        self.buf = buf
+        self.pos = 0
+
+    def take(self, n):
+        assert self.pos + n <= len(self.buf), "truncated GBN1 payload"
+        out = self.buf[self.pos:self.pos + n]
+        self.pos += n
+        return out
+
+    def u8(self):
+        return self.take(1)[0]
+
+    def u32(self):
+        return int.from_bytes(self.take(4), "little")
+
+    def u64(self):
+        return int.from_bytes(self.take(8), "little")
+
+    def finish(self):
+        assert self.pos == len(self.buf), "trailing bytes after GBN1 payload"
+
+
+def gbn_decode_request(payload):
+    c = GbnCursor(payload)
+    req_id = c.u64()
+    op = GBN_OP_NAMES[c.u8()]
+    if op == "put_pages":
+        body = [(c.u64(), c.take(c.u32())) for _ in range(c.u32())]
+    elif op == "get_block":
+        body = (c.u64(), c.u32())
+    elif op == "get_blocks":
+        body = [(c.u64(), c.u32()) for _ in range(c.u32())]
+    elif op == "put_block":
+        body = (c.u64(), c.u32(), c.take(c.u32()))
+    elif op == "read_range":
+        body = (c.u64(), c.u32(), c.u32())
+    else:
+        body = ()
+    c.finish()
+    return req_id, op, body
+
+
+def gbn_decode_response(payload):
+    c = GbnCursor(payload)
+    req_id = c.u64()
+    status = GBN_STATUS_NAMES[c.u8()]
+    op_byte = c.u8()
+    if status != "ok":
+        body = (c.u32(), c.take(c.u32()).decode("utf-8"))
+        c.finish()
+        return req_id, status, op_byte, body
+    op = GBN_OP_NAMES[op_byte]
+    if op == "put_pages":
+        body = c.u32()
+    elif op in ("get_block", "read_range"):
+        body = c.take(c.u32())
+    elif op == "get_blocks":
+        body = [c.take(c.u32()) if c.u8() else None for _ in range(c.u32())]
+    elif op == "flush":
+        body = c.u64()
+    elif op == "stats":
+        assert c.u8() == GBN_STATS_VERSION, "stats reply version moved"
+        body = [c.u64() for _ in range(c.u32())]
+    elif op == "reanalyze":
+        body = c.u64()
+    else:
+        body = ()
+    c.finish()
+    return req_id, status, op, body
+
+
+# The frozen frame sequences. Touch ONLY with a protocol version bump:
+# rust/tests/golden_protocol.rs builds the identical lists in Rust and
+# the checked-in bytes must match both.
+GBN_REQUESTS = [
+    (1, "put_pages", [
+        (0x1122334455667788, bytes((i * 7 + 3) & 0xFF for i in range(16))),
+        (7, b"\xAB" * 5),
+    ]),
+    (2, "get_block", (3, 9)),
+    (3, "get_blocks", [(1, 2), (MASK64, MASK32)]),
+    (4, "put_block", (5, 0, b"\xC3" * 64)),
+    (5, "read_range", (9, 2, 3)),
+    (6, "flush", ()),
+    (7, "stats", ()),
+    (MASK64, "reanalyze", ()),
+    (0, "shutdown", ()),
+]
+
+GBN_RESPONSES = [
+    (1, "ok", "put_pages", 2),
+    (2, "ok", "get_block", bytes(range(64))),
+    (3, "ok", "get_blocks", [bytes(range(1, 9)), None]),
+    (4, "ok", "put_block", ()),
+    (5, "ok", "read_range", bytes(255 - i for i in range(12))),
+    (6, "ok", "flush", 7),
+    (7, "ok", "stats", [1000 + i for i in range(29)]),
+    (8, "ok", "reanalyze", 3),
+    (9, "ok", "shutdown", ()),
+    (2, "not_found", 2, (0, "page 3 not found")),
+    (10, "bad_request", 0x2A, (0, "unknown op 0x2a")),
+    (1, "retry_after", 1, (50, "ingest backlog")),
+    (11, "shutting_down", 4, (0, "")),
+    (12, "server_error", 6, (0, "internal")),
+]
+
+
+def gbn_split_frames(stream):
+    """Split a concatenation of length-prefixed frames back into payloads."""
+    out = []
+    pos = 0
+    while pos < len(stream):
+        assert pos + 4 <= len(stream), "truncated frame header"
+        n = int.from_bytes(stream[pos:pos + 4], "little")
+        assert n >= GBN_MIN_REQUEST_PAYLOAD, f"frame length {n} under minimum"
+        payload = stream[pos + 4:pos + 4 + n]
+        assert len(payload) == n, "truncated frame body"
+        out.append(payload)
+        pos += 4 + n
+    return out
+
+
+def build_gbn1_fixtures():
+    hello = GBN_MAGIC + gbn_server_hello(64)
+
+    requests = bytearray()
+    for req_id, op, body in GBN_REQUESTS:
+        payload = gbn_request(req_id, op, body)
+        rid, rop, rbody = gbn_decode_request(payload)
+        assert gbn_request(rid, rop, rbody) == payload, \
+            f"GBN1 request {req_id}/{op} decode/re-encode drift"
+        requests += gbn_frame(payload)
+
+    responses = bytearray()
+    for req_id, status, op, body in GBN_RESPONSES:
+        payload = gbn_response(req_id, status, op, body)
+        decoded = gbn_decode_response(payload)
+        assert gbn_response(*decoded) == payload, \
+            f"GBN1 response {req_id}/{status} decode/re-encode drift"
+        responses += gbn_frame(payload)
+
+    assert len(gbn_split_frames(bytes(requests))) == len(GBN_REQUESTS)
+    assert len(gbn_split_frames(bytes(responses))) == len(GBN_RESPONSES)
+    return [
+        ("gbn1_hello.gbn", hello),
+        ("gbn1_requests.gbn", bytes(requests)),
+        ("gbn1_responses.gbn", bytes(responses)),
+    ]
+
+
 # ---- assembly + self-verification ---------------------------------------
 
 def verify(decode_block, payload, block_bits, image, block_bytes=64):
@@ -532,6 +798,8 @@ def main():
     verify(fpc_decode_block, payload, block_bits, image)
     fixtures.append(("fpc.gbc", container_bytes(
         3, (64).to_bytes(4, "little"), None, len(image), block_bits, payload)))
+
+    fixtures.extend(build_gbn1_fixtures())
 
     if args.check:
         bad = 0
