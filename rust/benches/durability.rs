@@ -1,0 +1,136 @@
+//! Durability overhead and recovery speed: what the WAL costs on the
+//! ingest path as the group-commit window grows, and how fast a data
+//! directory comes back.
+//!
+//! * **Ingest sweep** — pages ingested (parse GBC1 + `put`) into a plain
+//!   in-memory store (`persist=off`, the PR-8 baseline) and into a
+//!   `DurableStore` at `fsync_batch` ∈ {1, 8, 64}. Every durable put
+//!   appends a `PutPage` WAL record; batch 1 fsyncs each append (full
+//!   durability), larger batches amortize the sync (group commit). The
+//!   WAL rolls over through `maybe_checkpoint`, so checkpoint cost is
+//!   amortized into the numbers exactly as in production.
+//! * **Recovery metrics** — wall time of `recover()` over the same page
+//!   population held (a) entirely in the WAL and (b) folded into
+//!   checkpoint segments, reported as `recover_*_ms` metrics.
+//!
+//! Emits `BENCH_durability.json` (tags: `isa`, `persist`) for
+//! `scripts/check_bench_regression.py`; honours `GBDI_BENCH_FAST=1`.
+//! Works in a private directory under the system temp dir and removes
+//! it on exit.
+//!
+//! `cargo bench --bench durability`
+
+use gbdi::container::Container;
+use gbdi::coordinator::{ShardedPageStore, StoredPage};
+use gbdi::persist::recover::recover;
+use gbdi::persist::{DurableStore, PersistConfig, RealFs};
+use gbdi::simd;
+use gbdi::util::bench::Bencher;
+use gbdi::{workloads, BlockCodec, CodecKind, Frame, GbdiConfig};
+use std::sync::Arc;
+use std::time::Instant;
+
+const PAGE_BYTES: u64 = 4096;
+const ID_SPACE: u64 = 512;
+const SHARDS: usize = 4;
+
+fn parse_page(bytes: &[u8]) -> StoredPage {
+    let frame = Frame::from_container(Container::from_bytes(bytes).expect("bench container"))
+        .expect("bench frame");
+    StoredPage { frame }
+}
+
+fn main() {
+    let fast = std::env::var("GBDI_BENCH_FAST").is_ok_and(|v| v == "1");
+    let root = std::env::temp_dir().join(format!("gbdi-bench-durability-{}", std::process::id()));
+    let root = root.to_string_lossy().into_owned();
+
+    let cfg = GbdiConfig::default();
+    let image = workloads::by_name("mcf").unwrap().generate(PAGE_BYTES as usize, 42);
+    let codec: Arc<dyn BlockCodec> = Arc::from(CodecKind::Gbdi.build_for_image(&image, &cfg));
+    // one pre-serialized page: every arm pays the identical parse + put,
+    // so the durable arms' delta is purely WAL append + fsync cadence
+    let page_bytes = gbdi::container::compress(codec.as_ref(), &image).to_bytes();
+
+    let mut b = Bencher::new();
+    println!(
+        "== durable ingest: {PAGE_BYTES}-byte pages over {ID_SPACE} ids, {SHARDS} shards ==\n"
+    );
+
+    // baseline: persistence off — the exact ingest path PR 8 shipped
+    {
+        let store = ShardedPageStore::new(SHARDS);
+        store.publish_codec(Arc::clone(&codec));
+        let mut i = 0u64;
+        b.bench("ingest/persist=off", Some(PAGE_BYTES), || {
+            store.put(i % ID_SPACE, parse_page(&page_bytes));
+            i += 1;
+        });
+    }
+
+    for &batch in &[1usize, 8, 64] {
+        let dir = format!("{root}/batch{batch}");
+        let pc = PersistConfig { fsync_batch: batch, wal_limit_bytes: 32 << 20 };
+        let (ds, _) = DurableStore::open(Arc::new(RealFs), &dir, pc, SHARDS, 0)
+            .expect("bench data dir must open");
+        ds.publish_codec(Arc::clone(&codec)).expect("publish");
+        let mut i = 0u64;
+        b.bench(&format!("ingest/fsync_batch={batch}"), Some(PAGE_BYTES), || {
+            ds.put(i % ID_SPACE, parse_page(&page_bytes)).expect("durable put");
+            ds.maybe_checkpoint().expect("wal rollover");
+            i += 1;
+        });
+        assert_eq!(ds.store().len(), ID_SPACE.min(i) as usize);
+    }
+
+    // recovery: the same population once WAL-resident, once checkpointed
+    let n_pages: u64 = if fast { 256 } else { 2048 };
+    let dir = format!("{root}/recover");
+    {
+        let pc = PersistConfig { fsync_batch: 64, wal_limit_bytes: u64::MAX };
+        let (ds, _) = DurableStore::open(Arc::new(RealFs), &dir, pc, SHARDS, 0)
+            .expect("recover data dir must open");
+        ds.publish_codec(Arc::clone(&codec)).expect("publish");
+        for id in 0..n_pages {
+            ds.put(id, parse_page(&page_bytes)).expect("durable put");
+        }
+        // dropped here: all n_pages stay in the WAL behind an empty
+        // checkpoint, so the next recovery is a pure WAL replay
+    }
+    let t0 = Instant::now();
+    let (store, report) = recover(&RealFs, &dir, None, 0).expect("recover");
+    let wal_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(store.len(), n_pages as usize);
+    assert!(!report.saw_damage(), "bench directory must be clean");
+    println!("\nrecover (WAL replay):      {n_pages} pages in {wal_ms:>8.2} ms");
+    b.metric(&format!("recover_wal_ms/pages={n_pages}"), wal_ms);
+
+    {
+        // reopening folds the WAL into fresh segments + manifest
+        let pc = PersistConfig::default();
+        let (_ds, report) = DurableStore::open(Arc::new(RealFs), &dir, pc, SHARDS, 0)
+            .expect("checkpointing reopen");
+        assert!(!report.saw_damage());
+    }
+    let t0 = Instant::now();
+    let (store, report) = recover(&RealFs, &dir, None, 0).expect("recover");
+    let ckpt_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(store.len(), n_pages as usize);
+    assert!(!report.saw_damage(), "checkpointed directory must be clean");
+    println!("recover (checkpoint load): {n_pages} pages in {ckpt_ms:>8.2} ms");
+    b.metric(&format!("recover_checkpoint_ms/pages={n_pages}"), ckpt_ms);
+
+    // the fsync cadence and storage stack are part of the measurement
+    // environment: never compare against a baseline from another setup
+    b.tag("isa", simd::active().isa.name());
+    b.tag("persist", "wal-fsync-sweep-1-8-64");
+
+    std::fs::remove_dir_all(&root).ok();
+    std::fs::create_dir_all("target").ok();
+    b.write_csv("target/durability.csv").ok();
+    println!("\ncsv: target/durability.csv");
+    match b.write_bench_json("durability") {
+        Ok(p) => println!("json: {}", p.display()),
+        Err(e) => eprintln!("json write failed: {e}"),
+    }
+}

@@ -30,6 +30,11 @@
 //! [cache]
 //! bytes = 4m                 # hot-block cache budget; 0 (default) = off
 //!
+//! [persist]
+//! data_dir = "data"          # durability on; gbdi serve --data-dir overrides
+//! fsync_batch = 1            # WAL group commit: fsync every N appends
+//! wal_limit = 8m             # checkpoint once the WAL outgrows this
+//!
 //! [server]
 //! listen = "127.0.0.1:7070"  # gbdi serve --listen overrides
 //! max_conns = 64
@@ -43,6 +48,7 @@ use crate::cli::parse_u64;
 use crate::cluster::SelectorKind;
 use crate::coordinator::ServiceConfig;
 use crate::gbdi::GbdiConfig;
+use crate::persist::PersistConfig;
 use crate::server::ServerConfig;
 use crate::value::WordSize;
 use std::collections::BTreeMap;
@@ -284,6 +290,32 @@ impl ConfigFile {
         Ok(cfg)
     }
 
+    /// Build the durability settings from the `[persist]` section:
+    /// `Ok(None)` when the section is absent or has no `data_dir`
+    /// (persistence off, the default), otherwise the data directory and
+    /// a validated [`PersistConfig`]. `gbdi serve --data-dir` overrides
+    /// the directory.
+    pub fn persist_config(&self) -> Result<Option<(String, PersistConfig)>, String> {
+        let dir = match self.get("persist", "data_dir") {
+            None => return Ok(None),
+            Some(Value::Str(s)) if s.is_empty() => return Ok(None),
+            Some(Value::Str(s)) => s.clone(),
+            Some(v) => return Err(format!("persist.data_dir: expected string, got {v:?}")),
+        };
+        let d = PersistConfig::default();
+        let cfg = PersistConfig {
+            fsync_batch: self.get_u64("persist", "fsync_batch", d.fsync_batch as u64)? as usize,
+            wal_limit_bytes: self.get_u64("persist", "wal_limit", d.wal_limit_bytes)?,
+        };
+        if cfg.fsync_batch == 0 {
+            return Err("persist.fsync_batch: must be >= 1".into());
+        }
+        if cfg.wal_limit_bytes < 4 << 10 {
+            return Err("persist.wal_limit: must be >= 4k".into());
+        }
+        Ok(Some((dir, cfg)))
+    }
+
     /// Load + parse a file.
     pub fn load(path: &str) -> Result<ConfigFile, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
@@ -400,6 +432,36 @@ bytes = 4m
         // defaults when the section is absent
         let c = ConfigFile::parse("").unwrap().service_config().unwrap();
         assert_eq!(c.selector, ServiceConfig::default().selector);
+    }
+
+    #[test]
+    fn persist_section_builds_and_validates() {
+        // absent section or absent data_dir: persistence off
+        assert_eq!(ConfigFile::parse("").unwrap().persist_config().unwrap(), None);
+        let c = ConfigFile::parse("[persist]\nfsync_batch = 4").unwrap();
+        assert_eq!(c.persist_config().unwrap(), None);
+        let c = ConfigFile::parse("[persist]\ndata_dir = \"\"").unwrap();
+        assert_eq!(c.persist_config().unwrap(), None);
+        // full section
+        let text = "[persist]\ndata_dir = \"data\"\nfsync_batch = 8\nwal_limit = 1m";
+        let (dir, cfg) = ConfigFile::parse(text).unwrap().persist_config().unwrap().unwrap();
+        assert_eq!(dir, "data");
+        assert_eq!(cfg.fsync_batch, 8);
+        assert_eq!(cfg.wal_limit_bytes, 1 << 20);
+        // defaults for unspecified keys
+        let c = ConfigFile::parse("[persist]\ndata_dir = \"d\"").unwrap();
+        let (_, cfg) = c.persist_config().unwrap().unwrap();
+        assert_eq!(cfg.fsync_batch, PersistConfig::default().fsync_batch);
+        assert_eq!(cfg.wal_limit_bytes, PersistConfig::default().wal_limit_bytes);
+        // validation
+        for bad in [
+            "[persist]\ndata_dir = \"d\"\nfsync_batch = 0",
+            "[persist]\ndata_dir = \"d\"\nwal_limit = 1k",
+            "[persist]\ndata_dir = 7",
+        ] {
+            let c = ConfigFile::parse(bad).unwrap();
+            assert!(c.persist_config().is_err(), "{bad:?} should fail validation");
+        }
     }
 
     #[test]

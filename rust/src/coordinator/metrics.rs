@@ -271,6 +271,30 @@ impl ShardMetrics {
         self.deferred_flushes.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Fold another registry's counters into this one — an online shard
+    /// resize retires shard indices and must not lose their history, or
+    /// per-shard sums would stop matching the service-wide totals.
+    pub fn absorb(&self, other: &ShardMetrics) {
+        macro_rules! fold {
+            ($($field:ident),*) => {
+                $(self.$field.fetch_add(other.$field.load(Ordering::Relaxed), Ordering::Relaxed);)*
+            };
+        }
+        fold!(
+            block_reads,
+            block_read_ns,
+            block_writes,
+            block_write_ns,
+            lock_holds,
+            lock_hold_ns,
+            cache_hits,
+            cache_misses,
+            cache_admissions,
+            cache_evictions,
+            deferred_flushes
+        );
+    }
+
     /// Live mean block-read latency in nanoseconds (0 before the first
     /// read) — the cache admission heuristic compares each miss's
     /// decode cost against it without taking a snapshot.

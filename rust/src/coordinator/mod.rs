@@ -41,6 +41,15 @@
 //!   blocks until they cool (eviction, page removal/migration, or an
 //!   explicit flush) — off by default, observationally equivalent when
 //!   on, and honestly charged in the storage accounting.
+//! * **Durability is optional and sits below.** With a
+//!   [`crate::persist::Durability`] engine attached
+//!   ([`service::ServiceConfig::persist`]), every accepted mutation is
+//!   WAL-logged before it is applied and the store is periodically
+//!   checkpointed; the service adopts the recovered store on start and
+//!   folds a final checkpoint on shutdown. Without one (the default)
+//!   none of that code runs (DESIGN.md §12). Shard count is elastic
+//!   either way: [`store::ShardedPageStore::resize_shards`] retopologizes
+//!   online while concurrent GETs/PUTs queue behind one lock.
 
 pub mod analyzer;
 pub mod cache;

@@ -42,6 +42,7 @@ use crate::codec::{BlockCodec, Scratch};
 use crate::frame::Frame;
 use crate::gbdi::table::GlobalBaseTable;
 use crate::gbdi::{GbdiCodec, GbdiConfig};
+use crate::persist::{self, Durability, WalRecord};
 use crate::util::prng::Rng;
 use crate::util::stats::Reservoir;
 use crate::value::words;
@@ -89,6 +90,13 @@ pub struct ServiceConfig {
     /// disables the cache entirely: block reads and writes go straight
     /// to the compressed frames, bit-identical to a cacheless build.
     pub cache_bytes: usize,
+    /// Durability engine (`gbdi serve --data-dir`): when set, the
+    /// service adopts the store recovered by [`Durability::open`],
+    /// WAL-logs every mutation before applying it, checkpoints when the
+    /// WAL outgrows its limit, and takes a final checkpoint on
+    /// shutdown. `None` (the default) keeps every serving path
+    /// bit-identical to a persistence-free build.
+    pub persist: Option<Arc<Durability>>,
 }
 
 impl Default for ServiceConfig {
@@ -105,6 +113,7 @@ impl Default for ServiceConfig {
             shards: 8,
             ingest_batch: 32,
             cache_bytes: 0,
+            persist: None,
         }
     }
 }
@@ -203,11 +212,42 @@ impl CompressionService {
         codec: Arc<dyn BlockCodec>,
         analyzer: Option<Analyzer>,
     ) -> Result<Self> {
-        let first_version = codec.version();
-        let mut store = ShardedPageStore::new(config.shards);
-        if config.cache_bytes > 0 {
-            store = store.with_cache(config.cache_bytes);
-        }
+        let mut codec = codec;
+        let store = match config.persist.as_ref().and_then(|d| d.take_store()) {
+            Some(recovered) => {
+                // adaptive mode resumes from the newest recovered table
+                // version instead of re-learning from scratch; static
+                // mode keeps its pinned codec (recovered GBDI tables
+                // stay in the ring so old pages still decode)
+                if analyzer.is_some() {
+                    let best = recovered
+                        .codecs()
+                        .into_iter()
+                        .filter(|c| c.global_table().is_some())
+                        .max_by_key(|c| c.version());
+                    if let Some(best) = best {
+                        if best.version() > codec.version() {
+                            codec = best;
+                        }
+                    }
+                }
+                recovered
+            }
+            None => {
+                let mut store = ShardedPageStore::new(config.shards);
+                if config.cache_bytes > 0 {
+                    store = store.with_cache(config.cache_bytes);
+                }
+                store
+            }
+        };
+        let first_version = store
+            .codecs()
+            .iter()
+            .map(|c| c.version())
+            .max()
+            .unwrap_or(0)
+            .max(codec.version());
         store.publish_codec(Arc::clone(&codec));
         let shared = Arc::new(Shared {
             codec: RwLock::new(codec),
@@ -331,7 +371,28 @@ impl CompressionService {
     /// [`ShardMetricsSnapshot`].
     pub fn write_block(&self, page_id: u64, block: usize, data: &[u8]) -> Result<()> {
         let t0 = Instant::now();
-        let r = self.shared.store.write_block(page_id, block, data);
+        let r = match &self.shared.config.persist {
+            None => self.shared.store.write_block(page_id, block, data),
+            Some(d) => {
+                // log-before-apply under the gate; a log failure fails
+                // the write. Logging a write the store then rejects
+                // (missing page) is harmless: replay rejects it the
+                // same way and counts a replay error.
+                let logged = {
+                    let _gate = d.gate();
+                    d.log(&WalRecord::WriteBlock {
+                        page_id,
+                        block: block as u32,
+                        data: data.to_vec(),
+                    })
+                    .and_then(|()| self.shared.store.write_block(page_id, block, data))
+                };
+                if logged.is_ok() {
+                    let _ = d.maybe_checkpoint(&self.shared.store);
+                }
+                logged
+            }
+        };
         match r {
             Ok(_) => {
                 self.shared.metrics.block_write(t0.elapsed().as_nanos() as u64);
@@ -434,8 +495,36 @@ impl CompressionService {
         Ok(moved)
     }
 
+    /// Resize the page store to `shards` shards **online**: concurrent
+    /// GETs/PUTs simply queue for the swap's duration, no restart and no
+    /// lost writes (`tests/sharded_store.rs` exercises this under
+    /// concurrent traffic). With persistence on, the resize is WAL-logged
+    /// first so a crash replays into the same topology. Returns how many
+    /// pages changed shard.
+    pub fn resize_shards(&self, shards: usize) -> Result<usize> {
+        match &self.shared.config.persist {
+            None => Ok(self.shared.store.resize_shards(shards)),
+            Some(d) => {
+                let _gate = d.gate();
+                d.log(&WalRecord::Resize { shards: shards.max(1) as u32 })?;
+                Ok(self.shared.store.resize_shards(shards))
+            }
+        }
+    }
+
+    /// Fold the WAL into a fresh checkpoint now (no-op `Ok(0)` without
+    /// persistence). Returns the new checkpoint epoch.
+    pub fn checkpoint(&self) -> Result<u64> {
+        match &self.shared.config.persist {
+            None => Ok(0),
+            Some(d) => d.checkpoint(&self.shared.store),
+        }
+    }
+
     /// Stop the service, joining all threads. Pending pages are drained
-    /// first (the queue closes, workers finish what is buffered).
+    /// first (the queue closes, workers finish what is buffered). With
+    /// persistence on, a final checkpoint folds the WAL so the next open
+    /// recovers from segments alone.
     pub fn shutdown(mut self) -> MetricsSnapshot {
         self.flush();
         self.shared.shutdown.store(true, Ordering::Release);
@@ -445,6 +534,9 @@ impl CompressionService {
         }
         if let Some(a) = self.analyzer.take() {
             let _ = a.join();
+        }
+        if let Some(d) = &self.shared.config.persist {
+            let _ = d.checkpoint(&self.shared.store);
         }
         self.shared.metrics.snapshot()
     }
@@ -484,8 +576,38 @@ fn worker_loop(shared: Arc<Shared>, rx: Arc<Mutex<Receiver<Job>>>, worker_id: u6
             shared.metrics.page(data.len() as u64, out_len, t0.elapsed().as_nanos() as u64);
             staged.push((*page_id, stored));
         }
-        // ...then store it with one lock acquisition per touched shard
-        shared.store.put_batch(staged);
+        // ...then store it with one lock acquisition per touched shard.
+        // With persistence on, the whole batch is WAL-logged under the
+        // apply gate *before* it lands in the store — recovery can then
+        // never observe a page the log does not know about.
+        match &shared.config.persist {
+            None => shared.store.put_batch(staged),
+            Some(d) => {
+                let logged = {
+                    let _gate = d.gate();
+                    let recs: Vec<WalRecord> =
+                        staged.iter().map(|(id, p)| persist::wal_put_page(*id, p)).collect();
+                    match d.log_all(&recs) {
+                        Ok(()) => {
+                            shared.store.put_batch(staged);
+                            true
+                        }
+                        Err(_) => {
+                            // an unlogged batch must not become readable
+                            // state the WAL cannot reproduce: drop it and
+                            // surface the loss as write errors
+                            for _ in 0..n {
+                                shared.metrics.write_error();
+                            }
+                            false
+                        }
+                    }
+                };
+                if logged {
+                    let _ = d.maybe_checkpoint(&shared.store);
+                }
+            }
+        }
         shared.pages_since_analysis.fetch_add(n, Ordering::AcqRel);
         if shared.inflight.fetch_sub(n, Ordering::AcqRel) == n {
             let _g = shared.idle_lock.lock().unwrap();
@@ -544,6 +666,13 @@ fn analyzer_loop(shared: Arc<Shared>, analyzer: &mut Analyzer) {
             analyzer.note_adopted(&samples, &candidate);
             let new_codec: Arc<dyn BlockCodec> =
                 Arc::new(GbdiCodec::new(candidate, shared.config.codec.clone()));
+            // WAL the table snapshot first (best effort: every PutPage
+            // container embeds its own table, so recovery re-seeds the
+            // ring from page records even if this append is lost)
+            if let Some(d) = &shared.config.persist {
+                let _gate = d.gate();
+                let _ = d.log(&persist::wal_publish_codec(&new_codec));
+            }
             // the ring is shared across shards, so publishing the new
             // version is one O(1) insert — no per-shard fan-out, no
             // store-wide stall

@@ -269,13 +269,23 @@ struct Shard {
 /// assert_eq!(line, [9u8; 64]);
 /// ```
 pub struct ShardedPageStore {
-    shards: Vec<Shard>,
+    /// The shard set sits behind one outer `RwLock` so
+    /// [`Self::resize_shards`] can swap the topology online: every
+    /// operation takes the read side for its duration (uncontended in
+    /// steady state), a resize takes the write side and so runs exactly
+    /// when no operation is in flight. Inside the guard, routing uses
+    /// [`Self::route`] with the guard's own length — never a re-entrant
+    /// read acquisition, which could deadlock behind a queued resize.
+    shards: RwLock<Vec<Shard>>,
     codecs: RwLock<HashMap<u64, Arc<dyn BlockCodec>>>,
     /// Compact a frame once its patch region dominates its footprint
     /// (the serving default). The memory simulator opts out: compaction
     /// rebuilds frames *tight*, which would silently discard the
     /// sector-alignment slack its hardware model depends on.
     auto_compact: bool,
+    /// Total cache budget [`Self::with_cache`] was given — remembered so
+    /// a resize can re-split it across the new shard count.
+    cache_bytes: usize,
 }
 
 impl ShardedPageStore {
@@ -283,15 +293,18 @@ impl ShardedPageStore {
     /// hot-block cache is off; opt in with [`Self::with_cache`].
     pub fn new(shards: usize) -> Self {
         ShardedPageStore {
-            shards: (0..shards.max(1))
-                .map(|_| Shard {
-                    state: RwLock::new(PageShard::default()),
-                    metrics: ShardMetrics::new(),
-                    cache: None,
-                })
-                .collect(),
+            shards: RwLock::new(
+                (0..shards.max(1))
+                    .map(|_| Shard {
+                        state: RwLock::new(PageShard::default()),
+                        metrics: ShardMetrics::new(),
+                        cache: None,
+                    })
+                    .collect(),
+            ),
             codecs: RwLock::new(HashMap::new()),
             auto_compact: true,
+            cache_bytes: 0,
         }
     }
 
@@ -311,8 +324,10 @@ impl ShardedPageStore {
     /// before the store is shared). `0` leaves the cache off — every
     /// code path then behaves byte-identically to a cacheless store.
     pub fn with_cache(mut self, total_bytes: usize) -> Self {
-        let n = self.shards.len();
-        for shard in &mut self.shards {
+        self.cache_bytes = total_bytes;
+        let shards = self.shards.get_mut().unwrap();
+        let n = shards.len();
+        for shard in shards.iter_mut() {
             shard.cache = if total_bytes == 0 {
                 None
             } else {
@@ -326,23 +341,27 @@ impl ShardedPageStore {
 
     /// Whether the hot-block cache tier is on.
     pub fn cache_enabled(&self) -> bool {
-        self.shards.first().is_some_and(|s| s.cache.is_some())
+        self.cache_bytes > 0
     }
 
     /// Number of shards.
     pub fn shard_count(&self) -> usize {
-        self.shards.len()
+        self.shards.read().unwrap().len()
     }
 
-    /// Which shard a page id routes to: a Fibonacci multiplicative hash
-    /// so dense sequential ids still spread evenly, reduced mod N (N
-    /// need not be a power of two).
+    /// Which shard of `n` a page id routes to: a Fibonacci
+    /// multiplicative hash so dense sequential ids still spread evenly,
+    /// reduced mod N (N need not be a power of two). Internal code calls
+    /// this with the length of an already-held shards guard; re-entering
+    /// [`Self::shard_of`] under a guard could deadlock behind a queued
+    /// resize.
+    fn route(page_id: u64, n: usize) -> usize {
+        ((page_id.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) % n as u64) as usize
+    }
+
+    /// Which shard a page id routes to under the current topology.
     pub fn shard_of(&self, page_id: u64) -> usize {
-        ((page_id.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) % self.shards.len() as u64) as usize
-    }
-
-    fn shard(&self, page_id: u64) -> &Shard {
-        &self.shards[self.shard_of(page_id)]
+        Self::route(page_id, self.shards.read().unwrap().len())
     }
 
     // ---- codec ring ------------------------------------------------------
@@ -369,10 +388,12 @@ impl ShardedPageStore {
     /// their own codec `Arc`, so decode never depends on ring membership.
     pub fn gc_codecs(&self, keep: usize) -> usize {
         let mut referenced = std::collections::BTreeSet::new();
-        for shard in &self.shards {
+        let shards = self.shards.read().unwrap();
+        for shard in shards.iter() {
             let state = shard.state.read().unwrap();
             referenced.extend(state.pages.values().map(|p| p.codec_version()));
         }
+        drop(shards);
         let mut ring = self.codecs.write().unwrap();
         let mut versions: Vec<u64> = ring.keys().copied().collect();
         versions.sort_unstable();
@@ -398,7 +419,8 @@ impl ShardedPageStore {
             "page references unpublished codec v{}",
             page.codec_version()
         );
-        let shard = self.shard(page_id);
+        let shards = self.shards.read().unwrap();
+        let shard = &shards[Self::route(page_id, shards.len())];
         let mut cache = shard.cache.as_ref().map(|c| c.lock().unwrap());
         let mut state = shard.state.write().unwrap();
         let t0 = Instant::now();
@@ -424,16 +446,17 @@ impl ShardedPageStore {
                 );
             }
         }
-        let n = self.shards.len();
+        let shards = self.shards.read().unwrap();
+        let n = shards.len();
         let mut by_shard: Vec<Vec<(u64, StoredPage)>> = (0..n).map(|_| Vec::new()).collect();
         for (id, page) in pages {
-            by_shard[self.shard_of(id)].push((id, page));
+            by_shard[Self::route(id, n)].push((id, page));
         }
         for (idx, group) in by_shard.into_iter().enumerate() {
             if group.is_empty() {
                 continue;
             }
-            let shard = &self.shards[idx];
+            let shard = &shards[idx];
             let mut cache = shard.cache.as_ref().map(|c| c.lock().unwrap());
             let mut state = shard.state.write().unwrap();
             let t0 = Instant::now();
@@ -451,7 +474,8 @@ impl ShardedPageStore {
     /// into the page first, so the caller receives the latest content;
     /// all cached blocks of the page are dropped.
     pub fn remove(&self, page_id: u64) -> Option<StoredPage> {
-        let shard = self.shard(page_id);
+        let shards = self.shards.read().unwrap();
+        let shard = &shards[Self::route(page_id, shards.len())];
         let mut cache = shard.cache.as_ref().map(|c| c.lock().unwrap());
         let mut state = shard.state.write().unwrap();
         let t0 = Instant::now();
@@ -498,7 +522,8 @@ impl ShardedPageStore {
         block: usize,
         data: &[u8],
     ) -> Result<(u32, BlockWrite)> {
-        let shard = self.shard(page_id);
+        let shards = self.shards.read().unwrap();
+        let shard = &shards[Self::route(page_id, shards.len())];
         let t0 = Instant::now();
         let r = match &shard.cache {
             None => self.write_block_frame(shard, page_id, block, data),
@@ -646,7 +671,10 @@ impl ShardedPageStore {
         max_pages: usize,
     ) -> Result<usize> {
         let target = codec.version();
-        let shard = &self.shards[idx];
+        let shards = self.shards.read().unwrap();
+        // a racing resize may have shrunk the topology since the caller
+        // snapshotted shard_count(); those pages now live elsewhere
+        let Some(shard) = shards.get(idx) else { return Ok(0) };
         let mut lagging: Vec<u64> = {
             let state = shard.state.read().unwrap();
             state
@@ -703,13 +731,16 @@ impl ShardedPageStore {
     /// Run `f` on a stored page under the shard's read lock (metadata
     /// inspection without copying the page out).
     pub fn with_page<R>(&self, page_id: u64, f: impl FnOnce(&StoredPage) -> R) -> Option<R> {
-        let state = self.shard(page_id).state.read().unwrap();
+        let shards = self.shards.read().unwrap();
+        let state = shards[Self::route(page_id, shards.len())].state.read().unwrap();
         state.pages.get(&page_id).map(f)
     }
 
     /// Whether a page is stored.
     pub fn contains(&self, page_id: u64) -> bool {
-        self.shard(page_id).state.read().unwrap().pages.contains_key(&page_id)
+        let shards = self.shards.read().unwrap();
+        let state = shards[Self::route(page_id, shards.len())].state.read().unwrap();
+        state.pages.contains_key(&page_id)
     }
 
     /// Decompress a whole page (each frame carries its own codec, so any
@@ -726,7 +757,8 @@ impl ShardedPageStore {
     /// (`tests/alloc_counting.rs` pins it). Deferred cached writes are
     /// overlaid, same as [`Self::read`].
     pub fn read_into(&self, page_id: u64, out: &mut Vec<u8>) -> Result<()> {
-        let shard = self.shard(page_id);
+        let shards = self.shards.read().unwrap();
+        let shard = &shards[Self::route(page_id, shards.len())];
         let cache = shard.cache.as_ref().map(|c| c.lock().unwrap());
         let state = shard.state.read().unwrap();
         let p = match state.pages.get(&page_id) {
@@ -752,7 +784,8 @@ impl ShardedPageStore {
     /// on, a resident block is copied straight out of uncompressed
     /// cache memory — zero decode, zero allocation.
     pub fn read_block(&self, page_id: u64, block: usize, out: &mut [u8]) -> Result<usize> {
-        let shard = self.shard(page_id);
+        let shards = self.shards.read().unwrap();
+        let shard = &shards[Self::route(page_id, shards.len())];
         let t0 = Instant::now();
         let r = match &shard.cache {
             None => {
@@ -825,7 +858,8 @@ impl ShardedPageStore {
     /// the *compressed tier's* truth: a deferred cached write does not
     /// change it until the block is flushed.
     pub fn block_bits(&self, page_id: u64, block: usize) -> Result<u32> {
-        let state = self.shard(page_id).state.read().unwrap();
+        let shards = self.shards.read().unwrap();
+        let state = shards[Self::route(page_id, shards.len())].state.read().unwrap();
         match state.pages.get(&page_id) {
             Some(p) if block < p.frame.n_blocks() => Ok(p.frame.block_bits(block)),
             Some(p) => Err(Error::Config(format!(
@@ -841,12 +875,12 @@ impl ShardedPageStore {
     /// Number of stored pages (sums the shards; not an atomic snapshot
     /// under concurrent writers, like any aggregate here).
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.state.read().unwrap().pages.len()).sum()
+        self.shards.read().unwrap().iter().map(|s| s.state.read().unwrap().pages.len()).sum()
     }
 
     /// Whether the store is empty.
     pub fn is_empty(&self) -> bool {
-        self.shards.iter().all(|s| s.state.read().unwrap().pages.is_empty())
+        self.shards.read().unwrap().iter().all(|s| s.state.read().unwrap().pages.is_empty())
     }
 
     /// Total physical bytes stored: compressed frames plus any
@@ -855,6 +889,8 @@ impl ShardedPageStore {
     /// by ignoring the cache tier.
     pub fn stored_bytes(&self) -> usize {
         self.shards
+            .read()
+            .unwrap()
             .iter()
             .map(|s| {
                 let cache = s.cache.as_ref().map(|c| c.lock().unwrap());
@@ -874,6 +910,8 @@ impl ShardedPageStore {
     /// Total logical bytes stored.
     pub fn logical_bytes(&self) -> usize {
         self.shards
+            .read()
+            .unwrap()
             .iter()
             .map(|s| {
                 s.state.read().unwrap().pages.values().map(|p| p.original_len()).sum::<usize>()
@@ -890,7 +928,8 @@ impl ShardedPageStore {
     pub fn usage(&self) -> (usize, usize) {
         let mut logical = 0usize;
         let mut stored = 0usize;
-        for shard in &self.shards {
+        let shards = self.shards.read().unwrap();
+        for shard in shards.iter() {
             let cache = shard.cache.as_ref().map(|c| c.lock().unwrap());
             let state = shard.state.read().unwrap();
             for p in state.pages.values() {
@@ -906,6 +945,8 @@ impl ShardedPageStore {
     /// shards (0 with the cache off).
     pub fn cache_resident_bytes(&self) -> usize {
         self.shards
+            .read()
+            .unwrap()
             .iter()
             .map(|s| s.cache.as_ref().map_or(0, |c| c.lock().unwrap().resident_bytes()))
             .sum()
@@ -922,7 +963,8 @@ impl ShardedPageStore {
     /// to date without evicting the hot set. Returns blocks flushed.
     pub fn flush_cache(&self) -> usize {
         let mut flushed = 0usize;
-        for shard in &self.shards {
+        let shards = self.shards.read().unwrap();
+        for shard in shards.iter() {
             let Some(cache) = &shard.cache else { continue };
             let mut cache = cache.lock().unwrap();
             let dirty_pages = cache.dirty_pages();
@@ -960,7 +1002,8 @@ impl ShardedPageStore {
     /// all shards, sorted.
     pub fn lagging_pages(&self, version: u64) -> Vec<u64> {
         let mut ids = Vec::new();
-        for shard in &self.shards {
+        let shards = self.shards.read().unwrap();
+        for shard in shards.iter() {
             let state = shard.state.read().unwrap();
             ids.extend(
                 state
@@ -981,6 +1024,8 @@ impl ShardedPageStore {
     /// [`Self::usage`].
     pub fn shard_metrics(&self) -> Vec<ShardMetricsSnapshot> {
         self.shards
+            .read()
+            .unwrap()
             .iter()
             .enumerate()
             .map(|(i, shard)| {
@@ -1000,6 +1045,111 @@ impl ShardedPageStore {
                 shard.metrics.snapshot(i, pages, logical, stored, gauges)
             })
             .collect()
+    }
+
+    // ---- elasticity + persistence export ---------------------------------
+
+    /// Resize the store to `new_n` shards **online**: takes the outer
+    /// write lock (so it runs exactly when no operation is in flight —
+    /// concurrent GETs/PUTs simply queue for the duration), folds every
+    /// deferred cached write into its frame, reroutes all pages under
+    /// the new topology, and re-splits the cache budget. Per-shard
+    /// metrics counters move with surviving shard indices; counters of
+    /// retired shards are folded into shard 0, so sums over shards still
+    /// equal the service-wide totals. Returns how many pages changed
+    /// shard.
+    pub fn resize_shards(&self, new_n: usize) -> usize {
+        let new_n = new_n.max(1);
+        let mut shards = self.shards.write().unwrap();
+        let old_n = shards.len();
+        if old_n == new_n {
+            return 0;
+        }
+        // exclusive access: get_mut everywhere, no inner locking
+        let mut all: Vec<(u64, StoredPage)> = Vec::new();
+        for shard in shards.iter_mut() {
+            let Shard { state, metrics, cache } = shard;
+            let state = state.get_mut().unwrap();
+            if let Some(cache) = cache {
+                let cache = cache.get_mut().unwrap();
+                let PageShard { pages, scratch } = state;
+                for id in cache.dirty_pages() {
+                    let Some(page) = pages.get_mut(&id) else { continue };
+                    let dirty = cache.dirty_blocks_of_page(id);
+                    for b in &dirty {
+                        if let Some(data) = cache.data_of((id, *b)) {
+                            // cached blocks index valid blocks of a live
+                            // frame; a corrupt frame surfaces on read
+                            let _ = page.frame.write_block(*b as usize, data, scratch);
+                        }
+                    }
+                    if self.auto_compact
+                        && page.frame.patch_len() * 2 > page.frame.compressed_len()
+                    {
+                        page.frame.compact();
+                    }
+                    metrics.deferred_flushed(dirty.len() as u64);
+                }
+            }
+            all.extend(state.pages.drain());
+        }
+        let moved = all
+            .iter()
+            .filter(|(id, _)| Self::route(*id, old_n) != Self::route(*id, new_n))
+            .count();
+        let mut old_metrics: Vec<ShardMetrics> =
+            std::mem::take(&mut *shards).into_iter().map(|s| s.metrics).collect();
+        let mut rebuilt: Vec<Shard> = (0..new_n)
+            .map(|i| Shard {
+                state: RwLock::new(PageShard::default()),
+                metrics: if i < old_metrics.len() {
+                    std::mem::replace(&mut old_metrics[i], ShardMetrics::new())
+                } else {
+                    ShardMetrics::new()
+                },
+                cache: if self.cache_bytes > 0 {
+                    Some(Mutex::new(BlockCache::new((self.cache_bytes / new_n).max(256))))
+                } else {
+                    None
+                },
+            })
+            .collect();
+        for retired in old_metrics.into_iter().skip(new_n) {
+            rebuilt[0].metrics.absorb(&retired);
+        }
+        for (id, page) in all {
+            let idx = Self::route(id, new_n);
+            rebuilt[idx].state.get_mut().unwrap().pages.insert(id, page);
+        }
+        *shards = rebuilt;
+        moved
+    }
+
+    /// Every published codec version, sorted by version — the checkpoint
+    /// writer snapshots these into the manifest.
+    pub fn codecs(&self) -> Vec<Arc<dyn BlockCodec>> {
+        let mut v: Vec<Arc<dyn BlockCodec>> =
+            self.codecs.read().unwrap().values().cloned().collect();
+        v.sort_by_key(|c| c.version());
+        v
+    }
+
+    /// Serialize one shard's pages as `(page_id, GBC1 container bytes)`,
+    /// sorted by page id for deterministic segment files. The caller
+    /// (the checkpoint writer) flushes the block cache first so frames
+    /// hold the complete logical state. An out-of-range index (racing
+    /// resize) yields an empty export.
+    pub fn export_shard(&self, idx: usize) -> Vec<(u64, Vec<u8>)> {
+        let shards = self.shards.read().unwrap();
+        let Some(shard) = shards.get(idx) else { return Vec::new() };
+        let state = shard.state.read().unwrap();
+        let mut out: Vec<(u64, Vec<u8>)> = state
+            .pages
+            .iter()
+            .map(|(&id, p)| (id, p.frame.to_container().to_bytes()))
+            .collect();
+        out.sort_unstable_by_key(|(id, _)| *id);
+        out
     }
 }
 

@@ -168,6 +168,7 @@ pub mod elf;
 pub mod frame;
 pub mod gbdi;
 pub mod memsim;
+pub mod persist;
 pub mod report;
 pub mod runtime;
 pub mod server;

@@ -14,6 +14,7 @@ use gbdi::coordinator::{CompressionService, ServiceConfig};
 use gbdi::frame::Frame;
 use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig, GlobalBaseTable};
 use gbdi::memsim::{self, trace, CompressedMemory, DramModel};
+use gbdi::persist::{self, Durability, PersistConfig, RealFs};
 use gbdi::report::{bar_chart, fmt_bytes, fmt_ratio, Table};
 use gbdi::runtime::ArtifactRuntime;
 use gbdi::server::{self, protocol::stats_field, Client, LoadGenConfig, Server, ServerConfig};
@@ -128,7 +129,33 @@ fn app() -> App {
                     "10",
                     "network mode: seconds between stats lines (0 = quiet)",
                 ))
+                .arg(Arg::opt(
+                    "data-dir",
+                    "",
+                    "durable data directory (WAL + checkpoints); recovers on start",
+                ))
+                .arg(Arg::opt(
+                    "fsync-batch",
+                    "",
+                    "WAL group commit: fsync every N appends (default from config: 1)",
+                ))
+                .arg(Arg::opt(
+                    "wal-limit",
+                    "",
+                    "checkpoint once the WAL outgrows this (k/m/g; default from config: 8m)",
+                ))
                 .arg(isa_arg()),
+        )
+        .subcommand(
+            App::new("recover", "rebuild a store from a serve data directory and report")
+                .arg(Arg::req("data-dir", "data directory written by `gbdi serve --data-dir`"))
+                .arg(Arg::opt("shards", "", "resize the recovered store to this many shards"))
+                .arg(Arg::opt("cache-bytes", "0", "hot-block cache budget for the rebuilt store"))
+                .arg(Arg::flag("verify", "decode every recovered page, fail on any corruption"))
+                .arg(Arg::flag(
+                    "checkpoint",
+                    "fold the WAL into a fresh checkpoint (compacts the directory)",
+                )),
         )
         .subcommand(
             App::new("client", "GBN1 network client: one-shot ops and the load generator")
@@ -581,6 +608,48 @@ fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
     if !m.get("cache-bytes").is_empty() {
         cfg.cache_bytes = m.get_usize("cache-bytes");
     }
+    // durability: [persist] from --config, overridden by --data-dir/--fsync-batch/--wal-limit.
+    // No data dir anywhere means persistence stays off and serving is untouched.
+    let mut persist_cfg = match &file {
+        None => None,
+        Some(f) => f.persist_config().map_err(gbdi::Error::Config)?,
+    };
+    if !m.get("data-dir").is_empty() {
+        let pc = persist_cfg.take().map(|(_, c)| c).unwrap_or_default();
+        persist_cfg = Some((m.get("data-dir").to_string(), pc));
+    }
+    if let Some((_, pc)) = persist_cfg.as_mut() {
+        if !m.get("fsync-batch").is_empty() {
+            let batch = m.get_usize("fsync-batch");
+            if batch == 0 {
+                return Err(gbdi::Error::Config("--fsync-batch must be >= 1".into()));
+            }
+            pc.fsync_batch = batch;
+        }
+        if !m.get("wal-limit").is_empty() {
+            let limit = m.get_u64("wal-limit");
+            if limit < 4 << 10 {
+                return Err(gbdi::Error::Config("--wal-limit must be >= 4k".into()));
+            }
+            pc.wal_limit_bytes = limit;
+        }
+    }
+    if let Some((dir, pc)) = &persist_cfg {
+        let (d, report) = Durability::open(
+            Arc::new(RealFs),
+            dir,
+            pc.clone(),
+            cfg.shards,
+            cfg.cache_bytes,
+        )?;
+        println!(
+            "persistence: '{dir}' (fsync batch {}, wal limit {})",
+            pc.fsync_batch,
+            fmt_bytes(pc.wal_limit_bytes)
+        );
+        println!("{report}");
+        cfg.persist = Some(d);
+    }
     let (shards, ingest_batch, cache_bytes) = (cfg.shards, cfg.ingest_batch, cfg.cache_bytes);
     let svc = if kind == CodecKind::Gbdi {
         // the --selector flag overrides [analyzer] selector from --config
@@ -830,6 +899,52 @@ fn hex_prefix(data: &[u8], max: usize) -> String {
         hex.push('…');
     }
     hex
+}
+
+fn cmd_recover(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
+    let dir = m.get("data-dir");
+    let shards = if m.get("shards").is_empty() {
+        None
+    } else {
+        Some(m.get_usize("shards").max(1))
+    };
+    let cache_bytes = m.get_usize("cache-bytes");
+    let t0 = Instant::now();
+    let (store, report) = persist::recover::recover(&RealFs, dir, shards, cache_bytes)?;
+    println!("{report}");
+    println!(
+        "recovered {} page(s) in {:.1} ms",
+        store.len(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    if m.get_flag("verify") {
+        let mut buf = Vec::new();
+        let mut bad = 0usize;
+        for id in store.lagging_pages(u64::MAX) {
+            if store.read_into(id, &mut buf).is_err() {
+                bad += 1;
+            }
+        }
+        if bad > 0 {
+            return Err(gbdi::Error::Corrupt(format!(
+                "verify: {bad} page(s) failed to decode"
+            )));
+        }
+        println!("verify: all {} page(s) decode cleanly", store.len());
+    }
+    if m.get_flag("checkpoint") {
+        // reopening through Durability re-runs recovery and always folds the
+        // WAL into a fresh checkpoint under the atomic manifest-rename protocol
+        let (d, _) = Durability::open(
+            Arc::new(RealFs),
+            dir,
+            PersistConfig::default(),
+            shards.unwrap_or_else(|| report.shards.max(1)),
+            cache_bytes,
+        )?;
+        println!("checkpoint: WAL folded into epoch {}", d.epoch());
+    }
+    Ok(())
 }
 
 fn cmd_client(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
@@ -1148,6 +1263,7 @@ fn main() {
         "sweep" => cmd_sweep(m),
         "figure1" => cmd_figure1(m),
         "serve" => cmd_serve(m),
+        "recover" => cmd_recover(m),
         "client" => cmd_client(m),
         "selectors" => cmd_selectors(m),
         "memsim" => cmd_memsim(m),

@@ -1,0 +1,71 @@
+//! Checkpoint protocol: fold the store into fresh segments, publish
+//! them atomically, then let the caller reset the WAL.
+//!
+//! Write order is the whole crash-consistency argument (DESIGN.md §12):
+//!
+//! 1. per-shard segments for the new epoch are written and fsynced —
+//!    under names the *current* manifest does not reference, so a crash
+//!    mid-write leaves garbage recovery never reads;
+//! 2. the new manifest is written to a temp name, fsynced, renamed over
+//!    `MANIFEST.gbm`, and the directory is synced — the rename is the
+//!    atomic commit point;
+//! 3. only then may the caller truncate the WAL and delete old-epoch
+//!    segments. A crash between 2 and 3 replays stale WAL records onto
+//!    the new checkpoint, which is safe because every record type is
+//!    idempotent.
+
+use super::segment::{encode_manifest, encode_segment, segment_file_name, Manifest};
+use super::vfs::Vfs;
+use super::{MANIFEST_FILE, MANIFEST_TMP};
+use crate::container;
+use crate::coordinator::store::ShardedPageStore;
+use crate::Result;
+
+/// Write a full checkpoint of `store` at `epoch` into `dir` and commit
+/// it as the current manifest. The caller must have quiesced mutations
+/// (the durability gate) and flushed the block cache first, so the
+/// frames exported here are the complete logical state.
+pub fn write_checkpoint(
+    vfs: &dyn Vfs,
+    dir: &str,
+    epoch: u64,
+    store: &ShardedPageStore,
+) -> Result<()> {
+    let shard_count = store.shard_count();
+    for idx in 0..shard_count {
+        let entries = store.export_shard(idx);
+        let path = format!("{dir}/{}", segment_file_name(epoch, idx));
+        let mut f = vfs.create(&path)?;
+        f.write_all(&encode_segment(&entries))?;
+        f.sync()?;
+    }
+    let codecs = store
+        .codecs()
+        .iter()
+        .map(|c| container::compress(c.as_ref(), &[]).to_bytes())
+        .collect();
+    let manifest = Manifest { epoch, shard_count: shard_count as u32, codecs };
+    let tmp = format!("{dir}/{MANIFEST_TMP}");
+    let mut f = vfs.create(&tmp)?;
+    f.write_all(&encode_manifest(&manifest))?;
+    f.sync()?;
+    vfs.rename(&tmp, &format!("{dir}/{MANIFEST_FILE}"))?;
+    vfs.sync_dir(dir)?;
+    Ok(())
+}
+
+/// Best-effort removal of segment files from any epoch other than
+/// `keep_epoch` (and any orphaned manifest temp). Failures are ignored:
+/// stale segments are unreferenced garbage, never a correctness hazard.
+pub fn clean_stale_segments(vfs: &dyn Vfs, dir: &str, keep_epoch: u64) {
+    let Ok(names) = vfs.list(dir) else { return };
+    for name in names {
+        let stale = match super::segment::parse_segment_file_name(&name) {
+            Some((epoch, _)) => epoch != keep_epoch,
+            None => name == MANIFEST_TMP,
+        };
+        if stale {
+            let _ = vfs.remove(&format!("{dir}/{name}"));
+        }
+    }
+}

@@ -1,0 +1,377 @@
+//! Durability and elasticity: WAL, checkpoint segments, crash recovery,
+//! and online shard resizing for the
+//! [`ShardedPageStore`](crate::coordinator::store::ShardedPageStore).
+//!
+//! Layering (DESIGN.md §12):
+//!
+//! * [`vfs`] — the filesystem seam: [`vfs::RealFs`] for production,
+//!   [`vfs::FaultFs`] for deterministic crash injection at every write,
+//!   fsync, and rename boundary.
+//! * [`wal`] — CRC-framed logical records (`GBW1`) with group commit.
+//!   Every mutation is logged *before* it is applied; the cached write
+//!   path logs at absorb time, so deferred dirty blocks are never lost.
+//! * [`segment`] — per-shard checkpoint segments (`GBS1`) holding pages
+//!   as frozen GBC1 containers, rooted by a manifest (`GBM1`) that also
+//!   snapshots every published codec table (GBT2, wrapped in zero-image
+//!   GBC1 containers).
+//! * [`checkpoint`] — the atomic fold: segments, fsync, manifest
+//!   rename, directory sync, *then* WAL reset.
+//! * [`recover`] — manifest → segments → WAL replay; damage is counted
+//!   in a [`RecoveryReport`], never silent and never a panic.
+//!
+//! [`Durability`] ties these together for the
+//! [`CompressionService`](crate::coordinator::service::CompressionService)
+//! (`gbdi serve --data-dir`), and [`DurableStore`] is the thin
+//! store-plus-log facade the crash tests and `gbdi recover` drive.
+//! With no `--data-dir` (the default) none of this is constructed and
+//! every serving path is byte-identical to a persistence-free build.
+
+pub mod checkpoint;
+pub mod recover;
+pub mod segment;
+pub mod vfs;
+pub mod wal;
+
+pub use recover::RecoveryReport;
+pub use vfs::{FaultFs, RealFs, Vfs, VfsFile};
+pub use wal::{WalRecord, WalWriter};
+
+use crate::codec::BlockCodec;
+use crate::container;
+use crate::coordinator::store::{ShardedPageStore, StoredPage};
+use crate::frame::BlockWrite;
+use crate::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock, RwLockReadGuard};
+
+/// WAL file name inside the data directory.
+pub const WAL_FILE: &str = "wal.gbw";
+/// Manifest file name inside the data directory.
+pub const MANIFEST_FILE: &str = "MANIFEST.gbm";
+/// Temp name the manifest is staged under before its atomic rename.
+pub const MANIFEST_TMP: &str = "MANIFEST.tmp";
+
+/// CRC-32 (IEEE 802.3, reflected, polynomial `0xEDB88320`) — the same
+/// checksum `zlib.crc32` computes, so the Python fixture generator
+/// cross-checks every framed byte.
+pub fn crc32(data: &[u8]) -> u32 {
+    const TABLE: [u32; 256] = {
+        let mut table = [0u32; 256];
+        let mut i = 0;
+        while i < 256 {
+            let mut c = i as u32;
+            let mut k = 0;
+            while k < 8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+                k += 1;
+            }
+            table[i] = c;
+            i += 1;
+        }
+        table
+    };
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Tunables for the durability layer (`[persist]` config section).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PersistConfig {
+    /// Group-commit batch: fsync the WAL every this many appends.
+    /// 1 (the default) is a strict WAL — every acknowledged mutation is
+    /// durable; larger batches trade a crash window of up to
+    /// `fsync_batch - 1` records for ingest throughput.
+    pub fsync_batch: usize,
+    /// Checkpoint once the WAL grows past this many bytes.
+    pub wal_limit_bytes: u64,
+}
+
+impl Default for PersistConfig {
+    fn default() -> Self {
+        PersistConfig { fsync_batch: 1, wal_limit_bytes: 8 << 20 }
+    }
+}
+
+/// The [`WalRecord`] that persists a whole page.
+pub fn wal_put_page(page_id: u64, page: &StoredPage) -> WalRecord {
+    WalRecord::PutPage { page_id, container: page.frame.to_container().to_bytes() }
+}
+
+/// The [`WalRecord`] that persists a codec-table publish: the codec
+/// serialized as a zero-length-image GBC1 container (config + GBT2
+/// table, no payload).
+pub fn wal_publish_codec(codec: &Arc<dyn BlockCodec>) -> WalRecord {
+    WalRecord::PublishCodec { container: container::compress(codec.as_ref(), &[]).to_bytes() }
+}
+
+/// The durability engine: owns the data directory, the WAL writer, the
+/// checkpoint epoch, and the *apply gate* that makes `log → apply`
+/// pairs atomic with respect to checkpoints.
+///
+/// Locking discipline: mutators hold the gate's **read** side across
+/// their WAL append and store apply; [`Self::checkpoint`] takes the
+/// **write** side, so it only runs when no logged-but-unapplied
+/// mutation is in flight and no mutation can slip between the fold and
+/// the WAL reset. The gate is never held while waiting on a shard lock
+/// held by a gate holder (mutators acquire gate → wal → shard in that
+/// order and checkpointing acquires gate → shard), so there is no
+/// cycle.
+pub struct Durability {
+    vfs: Arc<dyn Vfs>,
+    dir: String,
+    cfg: PersistConfig,
+    wal: Mutex<WalWriter>,
+    gate: RwLock<()>,
+    epoch: AtomicU64,
+    checkpoints: AtomicU64,
+    pending: Mutex<Option<ShardedPageStore>>,
+}
+
+impl std::fmt::Debug for Durability {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Durability")
+            .field("dir", &self.dir)
+            .field("cfg", &self.cfg)
+            .field("epoch", &self.epoch.load(Ordering::Relaxed))
+            .finish_non_exhaustive()
+    }
+}
+
+impl Durability {
+    /// Open (or create) a data directory: recover the store from the
+    /// last good checkpoint + WAL, fold the result into a *fresh*
+    /// checkpoint (so every open starts from clean segments and an
+    /// empty WAL), and arm the WAL for appends. `shards` and
+    /// `cache_bytes` shape the rebuilt store; a shard count differing
+    /// from the manifest's triggers an online resize before the fold.
+    ///
+    /// The recovered store is parked inside and claimed once via
+    /// [`Self::take_store`] (the service does this at start).
+    pub fn open(
+        vfs: Arc<dyn Vfs>,
+        dir: &str,
+        cfg: PersistConfig,
+        shards: usize,
+        cache_bytes: usize,
+    ) -> Result<(Arc<Durability>, RecoveryReport)> {
+        vfs.create_dir_all(dir)?;
+        let (store, report) = recover::recover(vfs.as_ref(), dir, Some(shards), cache_bytes)?;
+        // a placeholder writer: never appended to before the fold below
+        // replaces it, and deliberately non-destructive so a crash
+        // before the fold commits loses nothing
+        let wal = if vfs.exists(&format!("{dir}/{WAL_FILE}")) {
+            WalWriter::open_append(vfs.as_ref(), dir, report.wal_valid_bytes, cfg.fsync_batch)?
+        } else {
+            WalWriter::create(vfs.as_ref(), dir, cfg.fsync_batch)?
+        };
+        let d = Durability {
+            vfs,
+            dir: dir.to_string(),
+            cfg,
+            wal: Mutex::new(wal),
+            gate: RwLock::new(()),
+            epoch: AtomicU64::new(report.epoch),
+            checkpoints: AtomicU64::new(0),
+            pending: Mutex::new(None),
+        };
+        d.checkpoint(&store)?;
+        *d.pending.lock().unwrap() = Some(store);
+        Ok((Arc::new(d), report))
+    }
+
+    /// Claim the store recovered by [`Self::open`] (once).
+    pub fn take_store(&self) -> Option<ShardedPageStore> {
+        self.pending.lock().unwrap().take()
+    }
+
+    /// Enter the apply gate: hold the returned guard across a
+    /// `log → apply` pair so a concurrent checkpoint cannot fold the
+    /// store between the append and the store mutation.
+    pub fn gate(&self) -> RwLockReadGuard<'_, ()> {
+        self.gate.read().unwrap()
+    }
+
+    /// Append one record to the WAL (group commit applies).
+    pub fn log(&self, rec: &WalRecord) -> Result<()> {
+        self.wal.lock().unwrap().append(rec)
+    }
+
+    /// Append a batch of records under one WAL lock acquisition.
+    pub fn log_all(&self, recs: &[WalRecord]) -> Result<()> {
+        let mut wal = self.wal.lock().unwrap();
+        for rec in recs {
+            wal.append(rec)?;
+        }
+        Ok(())
+    }
+
+    /// Current WAL size in bytes.
+    pub fn wal_bytes(&self) -> u64 {
+        self.wal.lock().unwrap().bytes()
+    }
+
+    /// Whether the WAL has outgrown the configured checkpoint trigger.
+    pub fn over_limit(&self) -> bool {
+        self.wal_bytes() > self.cfg.wal_limit_bytes
+    }
+
+    /// Current checkpoint epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Checkpoints taken through this handle.
+    pub fn checkpoints(&self) -> u64 {
+        self.checkpoints.load(Ordering::Relaxed)
+    }
+
+    /// The configuration this engine runs under.
+    pub fn config(&self) -> &PersistConfig {
+        &self.cfg
+    }
+
+    /// Quiesce mutations (gate write side), flush the block cache, fold
+    /// the store into fresh segments + manifest at the next epoch, then
+    /// reset the WAL and drop old-epoch segments. Returns the new
+    /// epoch.
+    pub fn checkpoint(&self, store: &ShardedPageStore) -> Result<u64> {
+        let _quiesce = self.gate.write().unwrap();
+        store.flush_cache();
+        let epoch = self.epoch.load(Ordering::Acquire) + 1;
+        checkpoint::write_checkpoint(self.vfs.as_ref(), &self.dir, epoch, store)?;
+        {
+            let mut wal = self.wal.lock().unwrap();
+            *wal = WalWriter::create(self.vfs.as_ref(), &self.dir, self.cfg.fsync_batch)?;
+        }
+        checkpoint::clean_stale_segments(self.vfs.as_ref(), &self.dir, epoch);
+        self.epoch.store(epoch, Ordering::Release);
+        self.checkpoints.fetch_add(1, Ordering::Relaxed);
+        Ok(epoch)
+    }
+
+    /// [`Self::checkpoint`] only if the WAL is over its size limit.
+    /// Returns whether a checkpoint ran. Racing callers are benign: the
+    /// loser re-checks under the gate's serialization and folds a
+    /// near-empty WAL.
+    pub fn maybe_checkpoint(&self, store: &ShardedPageStore) -> Result<bool> {
+        if !self.over_limit() {
+            return Ok(false);
+        }
+        self.checkpoint(store)?;
+        Ok(true)
+    }
+}
+
+/// A [`ShardedPageStore`] whose every mutation is WAL-logged before it
+/// applies: the facade `tests/durability.rs` crash-sweeps and
+/// `gbdi recover --checkpoint` maintains. Reads go straight to the
+/// store ([`Self::store`]).
+pub struct DurableStore {
+    store: ShardedPageStore,
+    d: Arc<Durability>,
+}
+
+impl DurableStore {
+    /// Open a data directory (see [`Durability::open`]) and wrap the
+    /// recovered store.
+    pub fn open(
+        vfs: Arc<dyn Vfs>,
+        dir: &str,
+        cfg: PersistConfig,
+        shards: usize,
+        cache_bytes: usize,
+    ) -> Result<(DurableStore, RecoveryReport)> {
+        let (d, report) = Durability::open(vfs, dir, cfg, shards, cache_bytes)?;
+        let store = d.take_store().expect("a fresh Durability holds the recovered store");
+        Ok((DurableStore { store, d }, report))
+    }
+
+    /// The underlying store (reads and accounting).
+    pub fn store(&self) -> &ShardedPageStore {
+        &self.store
+    }
+
+    /// The durability engine (epoch, WAL size, metrics).
+    pub fn durability(&self) -> &Arc<Durability> {
+        &self.d
+    }
+
+    /// Log + publish a codec version.
+    pub fn publish_codec(&self, codec: Arc<dyn BlockCodec>) -> Result<()> {
+        let _g = self.d.gate();
+        self.d.log(&wal_publish_codec(&codec))?;
+        self.store.publish_codec(codec);
+        Ok(())
+    }
+
+    /// Log + insert/overwrite a page.
+    pub fn put(&self, page_id: u64, page: StoredPage) -> Result<()> {
+        let _g = self.d.gate();
+        self.d.log(&wal_put_page(page_id, &page))?;
+        self.store.put(page_id, page);
+        Ok(())
+    }
+
+    /// Log + recompress one block in place. Logged before it applies —
+    /// on the cached path that is absorb time, so a deferred dirty
+    /// block is durable long before eviction flushes it.
+    pub fn write_block(&self, page_id: u64, block: usize, data: &[u8]) -> Result<BlockWrite> {
+        let _g = self.d.gate();
+        self.d.log(&WalRecord::WriteBlock {
+            page_id,
+            block: block as u32,
+            data: data.to_vec(),
+        })?;
+        self.store.write_block(page_id, block, data)
+    }
+
+    /// Log + remove a page.
+    pub fn remove(&self, page_id: u64) -> Result<Option<StoredPage>> {
+        let _g = self.d.gate();
+        self.d.log(&WalRecord::RemovePage { page_id })?;
+        Ok(self.store.remove(page_id))
+    }
+
+    /// Log + resize the store to `shards` shards online. Returns pages
+    /// rerouted.
+    pub fn resize_shards(&self, shards: usize) -> Result<usize> {
+        let moved = {
+            let _g = self.d.gate();
+            self.d.log(&WalRecord::Resize { shards: shards.max(1) as u32 })?;
+            self.store.resize_shards(shards)
+        };
+        // rewrite segment ownership under the new topology right away,
+        // so recovery cost stays proportional to the WAL, not to the
+        // resize
+        self.d.checkpoint(&self.store)?;
+        Ok(moved)
+    }
+
+    /// Fold the WAL into a fresh checkpoint now. Returns the new epoch.
+    pub fn checkpoint(&self) -> Result<u64> {
+        self.d.checkpoint(&self.store)
+    }
+
+    /// Checkpoint only if the WAL outgrew its limit; returns whether it
+    /// ran.
+    pub fn maybe_checkpoint(&self) -> Result<bool> {
+        self.d.maybe_checkpoint(&self.store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_the_ieee_reference_vectors() {
+        // the canonical zlib.crc32 test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"GBDI"), crc32(b"GBDI"));
+        assert_ne!(crc32(b"GBDI"), crc32(b"GBDJ"));
+    }
+}

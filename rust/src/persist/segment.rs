@@ -1,0 +1,226 @@
+//! Checkpoint segment files and the manifest that roots them.
+//!
+//! A checkpoint at epoch E writes one segment per shard
+//! (`seg-<E>-<shard>.gbs`) holding that shard's pages as frozen GBC1
+//! containers, then atomically publishes `MANIFEST.gbm` naming the
+//! epoch, the shard count, and the codec-table snapshots (zero-image
+//! GBC1 containers wrapping the GBT2 tables). All little-endian:
+//!
+//! ```text
+//! segment:  "GBS1"  repeat: page_id u64 | len u32 | crc u32 | container[len]
+//! manifest: "GBM1" | version u8 | epoch u64 | shard_count u32
+//!           | n_codecs u32 | repeat: len u32 | container[len]
+//!           | crc u32 over every preceding byte
+//! ```
+//!
+//! Per-entry CRCs let a bitflipped segment surface as counted damage
+//! while the rest of the prefix stays readable; the manifest carries
+//! one whole-file CRC because it is small and only valid as a unit.
+
+use super::crc32;
+
+/// Segment file magic.
+pub const SEGMENT_MAGIC: &[u8; 4] = b"GBS1";
+/// Manifest file magic.
+pub const MANIFEST_MAGIC: &[u8; 4] = b"GBM1";
+/// Frozen manifest format version byte.
+pub const MANIFEST_VERSION: u8 = 1;
+
+/// `seg-<epoch>-<shard>.gbs`.
+pub fn segment_file_name(epoch: u64, shard: usize) -> String {
+    format!("seg-{epoch}-{shard}.gbs")
+}
+
+/// Parse a segment file name back into `(epoch, shard)`.
+pub fn parse_segment_file_name(name: &str) -> Option<(u64, usize)> {
+    let rest = name.strip_prefix("seg-")?.strip_suffix(".gbs")?;
+    let (epoch, shard) = rest.split_once('-')?;
+    Some((epoch.parse().ok()?, shard.parse().ok()?))
+}
+
+/// Serialize one shard's pages (`(page_id, GBC1 container bytes)`,
+/// caller-sorted for determinism) into a segment file image.
+pub fn encode_segment(entries: &[(u64, Vec<u8>)]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(
+        SEGMENT_MAGIC.len() + entries.iter().map(|(_, c)| 16 + c.len()).sum::<usize>(),
+    );
+    out.extend_from_slice(SEGMENT_MAGIC);
+    for (page_id, container) in entries {
+        out.extend_from_slice(&page_id.to_le_bytes());
+        out.extend_from_slice(&(container.len() as u32).to_le_bytes());
+        out.extend_from_slice(&crc32(container).to_le_bytes());
+        out.extend_from_slice(container);
+    }
+    out
+}
+
+/// What a segment scan salvaged plus damage counters.
+#[derive(Debug, Default)]
+pub struct SegmentScan {
+    /// Intact `(page_id, container bytes)` entries, in file order.
+    pub entries: Vec<(u64, Vec<u8>)>,
+    /// Entries abandoned to a CRC mismatch (at most 1 per scan: framing
+    /// after the damage is untrustworthy).
+    pub crc_failures: u64,
+    /// Trailing bytes abandoned after damage or truncation.
+    pub truncated_bytes: u64,
+    /// The file was missing its magic entirely.
+    pub missing_magic: bool,
+}
+
+/// Scan raw segment bytes into the longest trustworthy entry prefix.
+/// Never fails: damage is reported, not propagated.
+pub fn scan_segment(bytes: &[u8]) -> SegmentScan {
+    let mut scan = SegmentScan::default();
+    if bytes.len() < SEGMENT_MAGIC.len() || &bytes[..SEGMENT_MAGIC.len()] != SEGMENT_MAGIC {
+        scan.missing_magic = true;
+        scan.truncated_bytes = bytes.len() as u64;
+        return scan;
+    }
+    let mut at = SEGMENT_MAGIC.len();
+    loop {
+        let rest = &bytes[at..];
+        if rest.is_empty() {
+            break;
+        }
+        if rest.len() < 16 {
+            scan.truncated_bytes = rest.len() as u64;
+            break;
+        }
+        let page_id = u64::from_le_bytes(rest[..8].try_into().unwrap());
+        let len = u32::from_le_bytes(rest[8..12].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(rest[12..16].try_into().unwrap());
+        if rest.len() < 16 + len {
+            scan.truncated_bytes = rest.len() as u64;
+            break;
+        }
+        let container = &rest[16..16 + len];
+        if crc32(container) != crc {
+            scan.crc_failures = 1;
+            scan.truncated_bytes = rest.len() as u64;
+            break;
+        }
+        scan.entries.push((page_id, container.to_vec()));
+        at += 16 + len;
+    }
+    scan
+}
+
+/// The checkpoint root: epoch, shard topology, codec snapshots.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    /// Checkpoint epoch the current segment files belong to.
+    pub epoch: u64,
+    /// Shard count the segments were partitioned under.
+    pub shard_count: u32,
+    /// Codec-table snapshots, one zero-image GBC1 container per
+    /// published codec version, sorted by version.
+    pub codecs: Vec<Vec<u8>>,
+}
+
+/// Serialize a manifest (trailing whole-file CRC included).
+pub fn encode_manifest(m: &Manifest) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MANIFEST_MAGIC);
+    out.push(MANIFEST_VERSION);
+    out.extend_from_slice(&m.epoch.to_le_bytes());
+    out.extend_from_slice(&m.shard_count.to_le_bytes());
+    out.extend_from_slice(&(m.codecs.len() as u32).to_le_bytes());
+    for snapshot in &m.codecs {
+        out.extend_from_slice(&(snapshot.len() as u32).to_le_bytes());
+        out.extend_from_slice(snapshot);
+    }
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Parse and validate a manifest. `None` on any damage — a manifest is
+/// only trustworthy as a whole, so recovery treats a bad one as absent.
+pub fn decode_manifest(bytes: &[u8]) -> Option<Manifest> {
+    if bytes.len() < 4 + 1 + 8 + 4 + 4 + 4 {
+        return None;
+    }
+    let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+    if crc32(body) != u32::from_le_bytes(crc_bytes.try_into().ok()?) {
+        return None;
+    }
+    if &body[..4] != MANIFEST_MAGIC || body[4] != MANIFEST_VERSION {
+        return None;
+    }
+    let epoch = u64::from_le_bytes(body[5..13].try_into().ok()?);
+    let shard_count = u32::from_le_bytes(body[13..17].try_into().ok()?);
+    let n_codecs = u32::from_le_bytes(body[17..21].try_into().ok()?) as usize;
+    let mut at = 21;
+    let mut codecs = Vec::with_capacity(n_codecs);
+    for _ in 0..n_codecs {
+        if body.len() < at + 4 {
+            return None;
+        }
+        let len = u32::from_le_bytes(body[at..at + 4].try_into().ok()?) as usize;
+        at += 4;
+        if body.len() < at + len {
+            return None;
+        }
+        codecs.push(body[at..at + len].to_vec());
+        at += len;
+    }
+    if at != body.len() {
+        return None;
+    }
+    Some(Manifest { epoch, shard_count, codecs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segment_roundtrip_and_file_names() {
+        let entries =
+            vec![(3u64, vec![1, 2, 3]), (9, Vec::new()), (u64::MAX, vec![0xAB; 100])];
+        let bytes = encode_segment(&entries);
+        let scan = scan_segment(&bytes);
+        assert_eq!(scan.entries, entries);
+        assert_eq!(scan.crc_failures, 0);
+        assert_eq!(parse_segment_file_name(&segment_file_name(17, 3)), Some((17, 3)));
+        assert_eq!(parse_segment_file_name("seg-x-1.gbs"), None);
+        assert_eq!(parse_segment_file_name("MANIFEST.gbm"), None);
+    }
+
+    #[test]
+    fn segment_scan_salvages_the_prefix_before_damage() {
+        let entries = vec![(1u64, vec![7; 32]), (2, vec![8; 32]), (3, vec![9; 32])];
+        let mut bytes = encode_segment(&entries);
+        // flip a byte inside the second entry's container
+        let off = 4 + (16 + 32) + 16 + 5;
+        bytes[off] ^= 1;
+        let scan = scan_segment(&bytes);
+        assert_eq!(scan.entries, entries[..1]);
+        assert_eq!(scan.crc_failures, 1);
+        assert!(scan.truncated_bytes > 0);
+        // truncation mid-entry salvages the same prefix
+        let cut = scan_segment(&encode_segment(&entries)[..4 + (16 + 32) + 10]);
+        assert_eq!(cut.entries, entries[..1]);
+        assert_eq!(cut.crc_failures, 0);
+        assert!(cut.truncated_bytes > 0);
+    }
+
+    #[test]
+    fn manifest_roundtrip_rejects_any_damage() {
+        let m = Manifest {
+            epoch: 42,
+            shard_count: 8,
+            codecs: vec![vec![1, 2, 3], Vec::new(), vec![9; 50]],
+        };
+        let bytes = encode_manifest(&m);
+        assert_eq!(decode_manifest(&bytes), Some(m));
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x10;
+            assert_eq!(decode_manifest(&bad), None, "bitflip at {i} must invalidate");
+        }
+        assert_eq!(decode_manifest(&bytes[..bytes.len() - 1]), None);
+        assert_eq!(decode_manifest(b""), None);
+    }
+}

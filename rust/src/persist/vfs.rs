@@ -1,0 +1,457 @@
+//! The filesystem seam the durability layer writes through.
+//!
+//! Two implementations:
+//!
+//! * [`RealFs`] — thin `std::fs` passthrough with real `fsync` /
+//!   directory-sync semantics, used by `gbdi serve --data-dir` and
+//!   `gbdi recover`.
+//! * [`FaultFs`] — a deterministic in-memory filesystem with a crash
+//!   *fuse*: the k-th mutating operation (write, fsync, create, rename,
+//!   remove, dir-sync) fails mid-flight and every later operation fails
+//!   too, modelling a power loss at that exact boundary. Files keep only
+//!   their last-fsynced content across the crash (the crashing write
+//!   itself may leave a deterministic torn prefix), which is the
+//!   adversarial model `tests/durability.rs` sweeps every boundary of.
+//!
+//! The crash model is the standard journalled-filesystem contract the
+//! checkpoint protocol relies on: file *data* is durable only after
+//! `sync`, while metadata operations (`create`, `rename`, `remove`)
+//! apply atomically — a crashed rename either fully happened or did not.
+
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+
+/// An open writable file handle.
+pub trait VfsFile: Send {
+    /// Append `buf` at the current end of the file.
+    fn write_all(&mut self, buf: &[u8]) -> Result<()>;
+    /// Make everything written so far durable (`fsync`).
+    fn sync(&mut self) -> Result<()>;
+}
+
+/// A minimal filesystem surface: everything the WAL, segment, and
+/// checkpoint layers need, and nothing more — small enough that
+/// [`FaultFs`] can model it faithfully.
+pub trait Vfs: Send + Sync {
+    /// Create (or truncate) a file for writing.
+    fn create(&self, path: &str) -> Result<Box<dyn VfsFile>>;
+    /// Open an existing file for appending.
+    fn open_append(&self, path: &str) -> Result<Box<dyn VfsFile>>;
+    /// Read a whole file.
+    fn read(&self, path: &str) -> Result<Vec<u8>>;
+    /// Whether a file exists.
+    fn exists(&self, path: &str) -> bool;
+    /// Atomically rename `from` to `to` (replacing `to` if present).
+    fn rename(&self, from: &str, to: &str) -> Result<()>;
+    /// Delete a file.
+    fn remove(&self, path: &str) -> Result<()>;
+    /// File names (not paths) directly inside `dir`.
+    fn list(&self, dir: &str) -> Result<Vec<String>>;
+    /// Make directory metadata (renames, creates) durable.
+    fn sync_dir(&self, dir: &str) -> Result<()>;
+    /// Create `dir` and any missing parents.
+    fn create_dir_all(&self, dir: &str) -> Result<()>;
+}
+
+// ---- real filesystem ----------------------------------------------------
+
+/// The production [`Vfs`]: `std::fs` with real fsync semantics.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RealFs;
+
+struct RealFile(std::fs::File);
+
+impl VfsFile for RealFile {
+    fn write_all(&mut self, buf: &[u8]) -> Result<()> {
+        self.0.write_all(buf)?;
+        Ok(())
+    }
+
+    fn sync(&mut self) -> Result<()> {
+        self.0.sync_all()?;
+        Ok(())
+    }
+}
+
+impl Vfs for RealFs {
+    fn create(&self, path: &str) -> Result<Box<dyn VfsFile>> {
+        Ok(Box::new(RealFile(std::fs::File::create(path)?)))
+    }
+
+    fn open_append(&self, path: &str) -> Result<Box<dyn VfsFile>> {
+        let f = std::fs::OpenOptions::new().append(true).open(path)?;
+        Ok(Box::new(RealFile(f)))
+    }
+
+    fn read(&self, path: &str) -> Result<Vec<u8>> {
+        Ok(std::fs::read(path)?)
+    }
+
+    fn exists(&self, path: &str) -> bool {
+        std::path::Path::new(path).exists()
+    }
+
+    fn rename(&self, from: &str, to: &str) -> Result<()> {
+        std::fs::rename(from, to)?;
+        Ok(())
+    }
+
+    fn remove(&self, path: &str) -> Result<()> {
+        std::fs::remove_file(path)?;
+        Ok(())
+    }
+
+    fn list(&self, dir: &str) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            if let Some(name) = entry.file_name().to_str() {
+                out.push(name.to_string());
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    fn sync_dir(&self, dir: &str) -> Result<()> {
+        // fsync on a directory handle is how POSIX makes renames
+        // durable; on platforms where opening a directory fails this
+        // degrades to a no-op (renames are then only crash-atomic).
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+        Ok(())
+    }
+
+    fn create_dir_all(&self, dir: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        Ok(())
+    }
+}
+
+// ---- deterministic fault-injection filesystem ---------------------------
+
+#[derive(Clone, Default)]
+struct FileState {
+    /// Content guaranteed to survive a crash (everything up to the last
+    /// `sync`).
+    durable: Vec<u8>,
+    /// Content as the process sees it (durable + unsynced tail).
+    volatile: Vec<u8>,
+}
+
+#[derive(Clone, Default)]
+struct FaultState {
+    files: BTreeMap<String, FileState>,
+    /// `Some(k)`: k more mutating operations succeed, then the next one
+    /// crashes the filesystem. `None`: unlimited.
+    fuse: Option<u64>,
+    crashed: bool,
+    /// Mutating operations attempted so far (crash-boundary counter).
+    ops: u64,
+}
+
+/// Deterministic in-memory filesystem with crash injection. Cloning is
+/// shallow: clones share the same underlying state, so a [`FaultFs`]
+/// can be handed to a [`Durability`](super::Durability) as
+/// `Arc<dyn Vfs>` while the test keeps a handle for fuse control.
+#[derive(Clone, Default)]
+pub struct FaultFs {
+    state: Arc<Mutex<FaultState>>,
+}
+
+impl FaultFs {
+    /// Fresh empty filesystem with no fuse armed.
+    pub fn new() -> FaultFs {
+        FaultFs::default()
+    }
+
+    /// Arm the crash fuse: `k` more mutating operations succeed, then
+    /// the next one crashes (a torn write for `write_all`, a clean
+    /// no-op failure for everything else), and every operation after
+    /// that fails until [`Self::revive`].
+    pub fn set_fuse(&self, k: u64) {
+        self.state.lock().unwrap().fuse = Some(k);
+    }
+
+    /// Total mutating operations attempted so far — the number of
+    /// distinct crash boundaries a schedule exposes.
+    pub fn op_count(&self) -> u64 {
+        self.state.lock().unwrap().ops
+    }
+
+    /// Whether the injected crash has fired.
+    pub fn crashed(&self) -> bool {
+        self.state.lock().unwrap().crashed
+    }
+
+    /// Remount after a crash: every file retains only its durable
+    /// content, the fuse is disarmed, and operations work again.
+    pub fn revive(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.crashed = false;
+        st.fuse = None;
+        for f in st.files.values_mut() {
+            f.volatile = f.durable.clone();
+        }
+    }
+
+    /// Deep-copy the filesystem (durable and volatile content, counters)
+    /// into an independent instance — fuzz tests corrupt copies of a
+    /// pristine image.
+    pub fn snapshot(&self) -> FaultFs {
+        let st = self.state.lock().unwrap();
+        FaultFs { state: Arc::new(Mutex::new(st.clone())) }
+    }
+
+    /// Mutate a file's bytes in place (durable and volatile views both),
+    /// bypassing the crash model — torn-write / bitflip fuzzing.
+    pub fn corrupt(&self, path: &str, f: impl FnOnce(&mut Vec<u8>)) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(file) = st.files.get_mut(path) {
+            f(&mut file.durable);
+            file.volatile = file.durable.clone();
+        }
+    }
+
+    /// All file paths currently present, sorted.
+    pub fn paths(&self) -> Vec<String> {
+        self.state.lock().unwrap().files.keys().cloned().collect()
+    }
+
+    /// A file's current length in bytes, if it exists.
+    pub fn len_of(&self, path: &str) -> Option<usize> {
+        self.state.lock().unwrap().files.get(path).map(|f| f.volatile.len())
+    }
+
+    /// Record one mutating op; returns an error if the filesystem is
+    /// crashed or the fuse fires on this op. `torn` is the in-flight
+    /// write payload, a deterministic prefix of which survives.
+    fn mutating(st: &mut FaultState, path: Option<&str>, torn: Option<&[u8]>) -> Result<()> {
+        if st.crashed {
+            return Err(Error::Runtime("faultfs: filesystem is crashed".into()));
+        }
+        st.ops += 1;
+        if let Some(k) = st.fuse {
+            if k == 0 {
+                // crash NOW: the crashing write leaves everything the
+                // process wrote to this file plus a deterministic torn
+                // prefix of the new data; every other file keeps only
+                // its fsynced content.
+                st.crashed = true;
+                let torn_survivor = match (path, torn) {
+                    (Some(p), Some(data)) => {
+                        let keep = (st.ops.wrapping_mul(0x9E37_79B9) as usize) % (data.len() + 1);
+                        let mut kept = st.files.get(p).cloned().unwrap_or_default().volatile;
+                        kept.extend_from_slice(&data[..keep]);
+                        Some((p.to_string(), kept))
+                    }
+                    _ => None,
+                };
+                for f in st.files.values_mut() {
+                    f.volatile = f.durable.clone();
+                }
+                if let Some((p, kept)) = torn_survivor {
+                    let entry = st.files.entry(p).or_default();
+                    entry.durable = kept.clone();
+                    entry.volatile = kept;
+                }
+                return Err(Error::Runtime("faultfs: injected crash".into()));
+            }
+            st.fuse = Some(k - 1);
+        }
+        Ok(())
+    }
+}
+
+struct FaultFile {
+    state: Arc<Mutex<FaultState>>,
+    path: String,
+}
+
+impl VfsFile for FaultFile {
+    fn write_all(&mut self, buf: &[u8]) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        FaultFs::mutating(&mut st, Some(&self.path), Some(buf))?;
+        let file = st
+            .files
+            .get_mut(&self.path)
+            .ok_or_else(|| Error::Runtime(format!("faultfs: {} removed underfoot", self.path)))?;
+        file.volatile.extend_from_slice(buf);
+        Ok(())
+    }
+
+    fn sync(&mut self) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        FaultFs::mutating(&mut st, None, None)?;
+        let file = st
+            .files
+            .get_mut(&self.path)
+            .ok_or_else(|| Error::Runtime(format!("faultfs: {} removed underfoot", self.path)))?;
+        file.durable = file.volatile.clone();
+        Ok(())
+    }
+}
+
+impl Vfs for FaultFs {
+    fn create(&self, path: &str) -> Result<Box<dyn VfsFile>> {
+        {
+            let mut st = self.state.lock().unwrap();
+            FaultFs::mutating(&mut st, None, None)?;
+            // creation/truncation is a journalled metadata op: durable
+            // immediately, like rename
+            st.files.insert(path.to_string(), FileState::default());
+        }
+        Ok(Box::new(FaultFile { state: Arc::clone(&self.state), path: path.to_string() }))
+    }
+
+    fn open_append(&self, path: &str) -> Result<Box<dyn VfsFile>> {
+        let st = self.state.lock().unwrap();
+        if st.crashed {
+            return Err(Error::Runtime("faultfs: filesystem is crashed".into()));
+        }
+        if !st.files.contains_key(path) {
+            return Err(Error::Runtime(format!("faultfs: {path} not found")));
+        }
+        Ok(Box::new(FaultFile { state: Arc::clone(&self.state), path: path.to_string() }))
+    }
+
+    fn read(&self, path: &str) -> Result<Vec<u8>> {
+        let st = self.state.lock().unwrap();
+        if st.crashed {
+            return Err(Error::Runtime("faultfs: filesystem is crashed".into()));
+        }
+        st.files
+            .get(path)
+            .map(|f| f.volatile.clone())
+            .ok_or_else(|| Error::Runtime(format!("faultfs: {path} not found")))
+    }
+
+    fn exists(&self, path: &str) -> bool {
+        let st = self.state.lock().unwrap();
+        !st.crashed && st.files.contains_key(path)
+    }
+
+    fn rename(&self, from: &str, to: &str) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        FaultFs::mutating(&mut st, None, None)?;
+        let file = st
+            .files
+            .remove(from)
+            .ok_or_else(|| Error::Runtime(format!("faultfs: {from} not found")))?;
+        st.files.insert(to.to_string(), file);
+        Ok(())
+    }
+
+    fn remove(&self, path: &str) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        FaultFs::mutating(&mut st, None, None)?;
+        st.files
+            .remove(path)
+            .map(|_| ())
+            .ok_or_else(|| Error::Runtime(format!("faultfs: {path} not found")))
+    }
+
+    fn list(&self, dir: &str) -> Result<Vec<String>> {
+        let st = self.state.lock().unwrap();
+        if st.crashed {
+            return Err(Error::Runtime("faultfs: filesystem is crashed".into()));
+        }
+        let prefix = format!("{}/", dir.trim_end_matches('/'));
+        Ok(st
+            .files
+            .keys()
+            .filter_map(|p| p.strip_prefix(&prefix))
+            .filter(|rest| !rest.contains('/'))
+            .map(str::to_string)
+            .collect())
+    }
+
+    fn sync_dir(&self, _dir: &str) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        FaultFs::mutating(&mut st, None, None)
+    }
+
+    fn create_dir_all(&self, _dir: &str) -> Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_makes_writes_survive_a_crash() {
+        let fs = FaultFs::new();
+        let mut f = fs.create("d/a").unwrap();
+        f.write_all(b"durable").unwrap();
+        f.sync().unwrap();
+        f.write_all(b" lost").unwrap();
+        fs.set_fuse(0);
+        assert!(fs.create("d/b").is_err());
+        assert!(fs.crashed());
+        assert!(fs.read("d/a").is_err(), "reads must fail while crashed");
+        fs.revive();
+        assert_eq!(fs.read("d/a").unwrap(), b"durable");
+    }
+
+    #[test]
+    fn crashing_write_leaves_a_deterministic_torn_prefix() {
+        let fs = FaultFs::new();
+        let mut f = fs.create("d/a").unwrap();
+        f.write_all(b"head.").unwrap();
+        fs.set_fuse(0);
+        assert!(f.write_all(b"tail-tail-tail").is_err());
+        fs.revive();
+        let got = fs.read("d/a").unwrap();
+        assert!(got.starts_with(b"head."), "pre-crash writes to the torn file survive");
+        assert!(got.len() <= b"head.tail-tail-tail".len());
+        // deterministic: same schedule, same torn prefix
+        let fs2 = FaultFs::new();
+        let mut f2 = fs2.create("d/a").unwrap();
+        f2.write_all(b"head.").unwrap();
+        fs2.set_fuse(0);
+        assert!(f2.write_all(b"tail-tail-tail").is_err());
+        fs2.revive();
+        assert_eq!(fs2.read("d/a").unwrap(), got);
+    }
+
+    #[test]
+    fn rename_is_atomic_and_durable() {
+        let fs = FaultFs::new();
+        let mut f = fs.create("d/tmp").unwrap();
+        f.write_all(b"manifest").unwrap();
+        f.sync().unwrap();
+        fs.rename("d/tmp", "d/final").unwrap();
+        fs.set_fuse(0);
+        assert!(fs.sync_dir("d").is_err());
+        fs.revive();
+        assert!(!fs.exists("d/tmp"));
+        assert_eq!(fs.read("d/final").unwrap(), b"manifest");
+    }
+
+    #[test]
+    fn fuse_counts_every_mutating_op() {
+        let fs = FaultFs::new();
+        let mut f = fs.create("d/a").unwrap(); // op 1
+        f.write_all(b"x").unwrap(); // op 2
+        f.sync().unwrap(); // op 3
+        assert_eq!(fs.op_count(), 3);
+        fs.set_fuse(1);
+        f.write_all(b"y").unwrap(); // 1 left -> ok
+        assert!(f.sync().is_err(), "fuse exhausted: this op crashes");
+        assert!(f.write_all(b"z").is_err());
+    }
+
+    #[test]
+    fn list_returns_direct_children_only() {
+        let fs = FaultFs::new();
+        fs.create("d/a").unwrap();
+        fs.create("d/sub/b").unwrap();
+        fs.create("e/c").unwrap();
+        assert_eq!(fs.list("d").unwrap(), vec!["a".to_string()]);
+    }
+}

@@ -1,0 +1,365 @@
+//! The write-ahead log: CRC-framed logical records, group commit.
+//!
+//! File layout (`wal.gbw`, magic `GBW1`, little-endian throughout):
+//!
+//! ```text
+//! "GBW1"
+//! repeat: len u32 | crc u32 | payload[len]
+//! payload: tag u8 | body
+//!   1 PutPage     page_id u64 | GBC1 container bytes
+//!   2 WriteBlock  page_id u64 | block u32 | block data
+//!   3 RemovePage  page_id u64
+//!   4 PublishCodec  GBC1 container bytes (zero-length image: the
+//!                   codec config + GBT2 table snapshot, no payload)
+//!   5 Resize      shards u32
+//! ```
+//!
+//! `crc` covers the payload only. The log is append-only, so torn
+//! writes and power loss can only damage the tail: [`scan_wal`] stops
+//! at the first short or CRC-failing record and reports how many bytes
+//! it abandoned, which recovery surfaces as metrics instead of
+//! guessing at content past the damage.
+//!
+//! Durability contract: a record is durable once the writer has synced
+//! past it. With `fsync_batch` = 1 every append syncs (strict WAL);
+//! larger batches amortize fsync over the ingest stream and accept that
+//! a crash may lose up to `fsync_batch - 1` acknowledged records — the
+//! trade `benches/durability.rs` measures.
+
+use super::vfs::{Vfs, VfsFile};
+use super::{crc32, WAL_FILE};
+use crate::Result;
+
+/// WAL file magic (version byte baked into the name: a format change
+/// means a new magic, never a silent re-interpretation).
+pub const WAL_MAGIC: &[u8; 4] = b"GBW1";
+
+/// One logical mutation, as logged. Containers are opaque GBC1 bytes —
+/// the WAL reuses the frozen wire format instead of inventing a second
+/// page serialization.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WalRecord {
+    /// Insert/overwrite a whole page (its full compressed container).
+    PutPage {
+        /// The page id.
+        page_id: u64,
+        /// The page as GBC1 container bytes.
+        container: Vec<u8>,
+    },
+    /// Recompress one block of a page in place. Logged at *absorb* time
+    /// on the cached write path, so deferred dirty blocks are never
+    /// lost.
+    WriteBlock {
+        /// The page id.
+        page_id: u64,
+        /// Block index within the page.
+        block: u32,
+        /// The block's new uncompressed content.
+        data: Vec<u8>,
+    },
+    /// Remove a page.
+    RemovePage {
+        /// The page id.
+        page_id: u64,
+    },
+    /// Publish a codec version: a zero-length-image GBC1 container
+    /// carrying the codec config and GBT2 table.
+    PublishCodec {
+        /// The codec snapshot as GBC1 container bytes.
+        container: Vec<u8>,
+    },
+    /// Online shard-count change.
+    Resize {
+        /// The new shard count.
+        shards: u32,
+    },
+}
+
+impl WalRecord {
+    /// Append this record's payload (tag + body, no framing) to `out`.
+    fn payload_into(&self, out: &mut Vec<u8>) {
+        match self {
+            WalRecord::PutPage { page_id, container } => {
+                out.push(1);
+                out.extend_from_slice(&page_id.to_le_bytes());
+                out.extend_from_slice(container);
+            }
+            WalRecord::WriteBlock { page_id, block, data } => {
+                out.push(2);
+                out.extend_from_slice(&page_id.to_le_bytes());
+                out.extend_from_slice(&block.to_le_bytes());
+                out.extend_from_slice(data);
+            }
+            WalRecord::RemovePage { page_id } => {
+                out.push(3);
+                out.extend_from_slice(&page_id.to_le_bytes());
+            }
+            WalRecord::PublishCodec { container } => {
+                out.push(4);
+                out.extend_from_slice(container);
+            }
+            WalRecord::Resize { shards } => {
+                out.push(5);
+                out.extend_from_slice(&shards.to_le_bytes());
+            }
+        }
+    }
+
+    /// Append the framed form (`len | crc | payload`) to `out`.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut payload = Vec::new();
+        self.payload_into(&mut payload);
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&crc32(&payload).to_le_bytes());
+        out.extend_from_slice(&payload);
+    }
+
+    /// Decode a payload (tag + body). `None` on unknown tag or short
+    /// body — the caller treats it like a CRC failure.
+    pub fn decode_payload(p: &[u8]) -> Option<WalRecord> {
+        let (&tag, body) = p.split_first()?;
+        match tag {
+            1 if body.len() >= 8 => Some(WalRecord::PutPage {
+                page_id: u64::from_le_bytes(body[..8].try_into().ok()?),
+                container: body[8..].to_vec(),
+            }),
+            2 if body.len() >= 12 => Some(WalRecord::WriteBlock {
+                page_id: u64::from_le_bytes(body[..8].try_into().ok()?),
+                block: u32::from_le_bytes(body[8..12].try_into().ok()?),
+                data: body[12..].to_vec(),
+            }),
+            3 if body.len() == 8 => Some(WalRecord::RemovePage {
+                page_id: u64::from_le_bytes(body[..8].try_into().ok()?),
+            }),
+            4 => Some(WalRecord::PublishCodec { container: body.to_vec() }),
+            5 if body.len() == 4 => Some(WalRecord::Resize {
+                shards: u32::from_le_bytes(body[..4].try_into().ok()?),
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// Appending side of the WAL with group commit: every `fsync_batch`-th
+/// append syncs the file (batch 1 = sync every record).
+pub struct WalWriter {
+    file: Box<dyn VfsFile>,
+    fsync_batch: usize,
+    pending: usize,
+    bytes: u64,
+    appends: u64,
+    buf: Vec<u8>,
+}
+
+impl WalWriter {
+    /// Create (truncate) the WAL at `dir/wal.gbw` and make the header
+    /// durable.
+    pub fn create(vfs: &dyn Vfs, dir: &str, fsync_batch: usize) -> Result<WalWriter> {
+        let path = format!("{dir}/{WAL_FILE}");
+        let mut file = vfs.create(&path)?;
+        file.write_all(WAL_MAGIC)?;
+        file.sync()?;
+        Ok(WalWriter {
+            file,
+            fsync_batch: fsync_batch.max(1),
+            pending: 0,
+            bytes: WAL_MAGIC.len() as u64,
+            appends: 0,
+            buf: Vec::new(),
+        })
+    }
+
+    /// Open the existing WAL at `dir/wal.gbw` for appending after
+    /// `existing_bytes` of validated content.
+    pub fn open_append(
+        vfs: &dyn Vfs,
+        dir: &str,
+        existing_bytes: u64,
+        fsync_batch: usize,
+    ) -> Result<WalWriter> {
+        let path = format!("{dir}/{WAL_FILE}");
+        let file = vfs.open_append(&path)?;
+        Ok(WalWriter {
+            file,
+            fsync_batch: fsync_batch.max(1),
+            pending: 0,
+            bytes: existing_bytes,
+            appends: 0,
+            buf: Vec::new(),
+        })
+    }
+
+    /// Append one record; syncs when the group-commit batch fills.
+    pub fn append(&mut self, rec: &WalRecord) -> Result<()> {
+        self.buf.clear();
+        rec.encode_into(&mut self.buf);
+        self.file.write_all(&self.buf)?;
+        self.bytes += self.buf.len() as u64;
+        self.appends += 1;
+        self.pending += 1;
+        if self.pending >= self.fsync_batch {
+            self.sync()?;
+        }
+        Ok(())
+    }
+
+    /// Force any pending group commit to disk.
+    pub fn sync(&mut self) -> Result<()> {
+        if self.pending > 0 {
+            self.file.sync()?;
+            self.pending = 0;
+        }
+        Ok(())
+    }
+
+    /// Bytes written to the WAL so far (header included).
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Records appended through this writer.
+    pub fn appends(&self) -> u64 {
+        self.appends
+    }
+}
+
+/// What a WAL scan found: the valid record prefix plus damage counters.
+#[derive(Debug, Default)]
+pub struct WalScan {
+    /// Decoded records, in append order.
+    pub records: Vec<WalRecord>,
+    /// Bytes of the valid prefix (header + intact records).
+    pub valid_bytes: u64,
+    /// Records abandoned to a CRC mismatch or undecodable payload
+    /// (everything after the first is untrustworthy, so at most 1 is
+    /// counted per scan).
+    pub corrupt_records: u64,
+    /// Trailing bytes abandoned (torn tail or post-corruption residue).
+    pub truncated_bytes: u64,
+    /// The file was missing its magic entirely (empty or foreign).
+    pub missing_magic: bool,
+}
+
+/// Scan raw WAL bytes into the longest trustworthy record prefix.
+/// Never fails: damage is reported, not propagated.
+pub fn scan_wal(bytes: &[u8]) -> WalScan {
+    let mut scan = WalScan::default();
+    if bytes.len() < WAL_MAGIC.len() || &bytes[..WAL_MAGIC.len()] != WAL_MAGIC {
+        scan.missing_magic = true;
+        scan.truncated_bytes = bytes.len() as u64;
+        return scan;
+    }
+    let mut at = WAL_MAGIC.len();
+    loop {
+        let rest = &bytes[at..];
+        if rest.is_empty() {
+            break;
+        }
+        if rest.len() < 8 {
+            scan.truncated_bytes = rest.len() as u64;
+            break;
+        }
+        let len = u32::from_le_bytes(rest[..4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(rest[4..8].try_into().unwrap());
+        if rest.len() < 8 + len {
+            scan.truncated_bytes = rest.len() as u64;
+            break;
+        }
+        let payload = &rest[8..8 + len];
+        if crc32(payload) != crc {
+            scan.corrupt_records = 1;
+            scan.truncated_bytes = rest.len() as u64;
+            break;
+        }
+        match WalRecord::decode_payload(payload) {
+            Some(rec) => scan.records.push(rec),
+            None => {
+                scan.corrupt_records = 1;
+                scan.truncated_bytes = rest.len() as u64;
+                break;
+            }
+        }
+        at += 8 + len;
+    }
+    scan.valid_bytes = at as u64;
+    scan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::vfs::FaultFs;
+    use super::*;
+
+    fn sample_records() -> Vec<WalRecord> {
+        vec![
+            WalRecord::PutPage { page_id: 7, container: vec![1, 2, 3, 4] },
+            WalRecord::WriteBlock { page_id: 7, block: 3, data: vec![9; 64] },
+            WalRecord::RemovePage { page_id: 8 },
+            WalRecord::PublishCodec { container: vec![5, 6] },
+            WalRecord::Resize { shards: 12 },
+        ]
+    }
+
+    #[test]
+    fn records_roundtrip_through_the_file_form() {
+        let fs = FaultFs::new();
+        let mut w = WalWriter::create(&fs, "d", 1).unwrap();
+        for rec in sample_records() {
+            w.append(&rec).unwrap();
+        }
+        let bytes = fs.read(&format!("d/{WAL_FILE}")).unwrap();
+        assert_eq!(bytes.len() as u64, w.bytes());
+        let scan = scan_wal(&bytes);
+        assert_eq!(scan.records, sample_records());
+        assert_eq!(scan.corrupt_records, 0);
+        assert_eq!(scan.truncated_bytes, 0);
+        assert_eq!(scan.valid_bytes, bytes.len() as u64);
+    }
+
+    #[test]
+    fn group_commit_defers_fsync_to_the_batch_boundary() {
+        let fs = FaultFs::new();
+        let mut w = WalWriter::create(&fs, "d", 3).unwrap();
+        let recs = sample_records();
+        w.append(&recs[0]).unwrap();
+        w.append(&recs[1]).unwrap();
+        // crash mid-append of the 3rd record: at most a torn prefix of
+        // it survives, so the batch can never appear fully durable
+        fs.set_fuse(0);
+        assert!(w.append(&recs[2]).is_err());
+        fs.revive();
+        let scan = scan_wal(&fs.read(&format!("d/{WAL_FILE}")).unwrap());
+        assert!(scan.records.len() < 3, "unsynced batch must not be fully durable");
+        assert!(!scan.missing_magic);
+    }
+
+    #[test]
+    fn scan_stops_cleanly_at_a_corrupt_record() {
+        let fs = FaultFs::new();
+        let mut w = WalWriter::create(&fs, "d", 1).unwrap();
+        for rec in sample_records() {
+            w.append(&rec).unwrap();
+        }
+        let path = format!("d/{WAL_FILE}");
+        let mut bytes = fs.read(&path).unwrap();
+        // flip a payload byte in the middle record
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        let scan = scan_wal(&bytes);
+        assert_eq!(scan.corrupt_records, 1);
+        assert!(scan.records.len() < 5);
+        assert!(scan.truncated_bytes > 0);
+        // torn tail: truncation mid-record is damage, not an error
+        let cut = scan_wal(&bytes[..bytes.len() - 3]);
+        assert!(cut.records.len() <= 5);
+    }
+
+    #[test]
+    fn scan_rejects_foreign_bytes_without_panicking() {
+        for junk in [&b""[..], b"GB", b"NOPE", b"GBN1xxxx"] {
+            let scan = scan_wal(junk);
+            assert!(scan.missing_magic);
+            assert!(scan.records.is_empty());
+        }
+    }
+}

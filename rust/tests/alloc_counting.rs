@@ -1,8 +1,9 @@
 //! Allocation-budget regression: the steady-state random-access paths —
 //! `Frame::read_block`, `Frame::read_range`, in-place `write_block`,
 //! `BlockCodec::estimate_block_bits_with`, the stores' `read_into` page
-//! sweeps, and the hot-block cache tier's hit/absorb paths — must not
-//! touch the heap once scratch buffers are warm. This binary registers
+//! sweeps, the hot-block cache tier's hit/absorb paths, and reads from
+//! a crash-recovered store — must not touch the heap once scratch
+//! buffers are warm. This binary registers
 //! the crate's counting allocator globally and diffs its counter around
 //! the hot loops, for all three block codecs.
 //!
@@ -11,6 +12,8 @@
 //! measured window.
 
 use gbdi::coordinator::{PageStore, ShardedPageStore, StoredPage};
+use gbdi::persist::recover::recover;
+use gbdi::persist::{DurableStore, FaultFs, PersistConfig};
 use gbdi::util::alloc::CountingAlloc;
 use gbdi::util::prng::Rng;
 use gbdi::{BlockCodec, CodecKind, Frame, GbdiConfig, Scratch};
@@ -232,4 +235,49 @@ fn store_read_into_and_cache_hot_paths_do_not_allocate() {
     let t2 = store.cache_totals();
     assert_eq!(allocs, 0, "absorbed write hot loop allocated");
     assert_eq!(t2.hits - t1.hits, 2000, "every measured write must be absorbed");
+}
+
+#[test]
+fn recovered_store_read_paths_do_not_allocate() {
+    let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let image = clustered_image(1024, 66); // 4 KiB: one 64-block page
+    let cfg = GbdiConfig::default();
+    let codec: Arc<dyn BlockCodec> = Arc::from(CodecKind::Gbdi.build_for_image(&image, &cfg));
+
+    // build a data directory in the in-memory fault filesystem: one page
+    // folded into a checkpoint segment, one WAL-only, one with a WAL
+    // block patch on top — so recovery rebuilds frames from every source
+    let fs = FaultFs::default();
+    let (ds, _) =
+        DurableStore::open(Arc::new(fs.clone()), "data", PersistConfig::default(), 1, 0).unwrap();
+    ds.publish_codec(Arc::clone(&codec)).unwrap();
+    ds.put(1, StoredPage { frame: Frame::compress(Arc::clone(&codec), &image) }).unwrap();
+    ds.checkpoint().unwrap(); // page 1 now lives in a segment
+    ds.put(2, StoredPage { frame: Frame::compress(Arc::clone(&codec), &image) }).unwrap();
+    ds.write_block(2, 3, &[7u8; 64]).unwrap(); // replayed onto the frame
+    drop(ds);
+    let (store, report) = recover(&fs, "data", None, 0).unwrap();
+    assert!(!report.saw_damage(), "clean directory must recover without damage");
+    assert_eq!(store.len(), 2);
+
+    // recovered frames must be as hot as freshly compressed ones: block
+    // reads and warmed page sweeps stay off the heap
+    let mut line = [0u8; 64];
+    let mut page = Vec::new();
+    for id in [1u64, 2] {
+        store.read_block(id, 0, &mut line).unwrap(); // symmetry with the warm passes
+        let allocs = allocs_during(|| {
+            for k in 0..2000usize {
+                store.read_block(id, k % 64, &mut line).unwrap();
+            }
+        });
+        assert_eq!(allocs, 0, "recovered page {id}: read_block hot loop allocated");
+        store.read_into(id, &mut page).unwrap(); // warm: grows the buffer once
+        let allocs = allocs_during(|| {
+            for _ in 0..200 {
+                store.read_into(id, &mut page).unwrap();
+            }
+        });
+        assert_eq!(allocs, 0, "recovered page {id}: read_into hot loop allocated");
+    }
 }

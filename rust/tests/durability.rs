@@ -1,0 +1,416 @@
+//! Crash-safety proof for the durability layer: a deterministic
+//! crash-injection sweep over every filesystem boundary of a randomized
+//! schedule, a clean-restart exactness check, and a torn-write /
+//! bitflip / truncation corruption fuzz.
+//!
+//! The oracle is a pure in-memory model (page id → plaintext content)
+//! advanced op-by-op next to a reference [`PageStore`]: after a crash
+//! at *any* write / fsync / create / rename / remove boundary
+//! ([`FaultFs`] counts them all), the recovered store's contents must
+//! equal the model's state after some prefix of the schedule — the
+//! formal statement of "no acknowledged state is half-applied and
+//! nothing recovers to a state that never existed". The schedule mixes
+//! puts, in-place block writes (including ones absorbed by the
+//! hot-block cache tier, which the WAL captures at absorb time),
+//! removes, codec publishes, online shard resizes, and checkpoints.
+
+use gbdi::container::{self, Container};
+use gbdi::coordinator::{PageStore, ShardedPageStore, StoredPage};
+use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig};
+use gbdi::persist::recover::recover;
+use gbdi::persist::{DurableStore, FaultFs, PersistConfig, Vfs, MANIFEST_FILE, WAL_FILE};
+use gbdi::util::prng::Rng;
+use gbdi::workloads;
+use gbdi::{BlockCodec, Frame};
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::Arc;
+
+const DIR: &str = "data";
+const ID_SPACE: u64 = 16;
+const PAGE_BYTES: usize = 1024;
+const BLOCKS: usize = PAGE_BYTES / 64;
+
+/// One logical schedule step. Every mutation the durable facade logs,
+/// plus the two purely-operational ops (resize reroutes pages and
+/// rewrites the checkpoint, checkpoint folds the WAL) that add the
+/// juiciest crash boundaries without changing observable content.
+enum Op {
+    Put { id: u64, img: usize, codec: usize },
+    Write { id: u64, block: usize, data: Vec<u8> },
+    Remove { id: u64 },
+    Publish { codec: usize },
+    Resize { shards: usize },
+    Checkpoint,
+}
+
+/// Page images, versioned codecs, and pre-serialized GBC1 containers
+/// (`containers[img][codec]`) so schedule replay parses instead of
+/// recompressing.
+struct Fixtures {
+    imgs: Vec<Vec<u8>>,
+    codecs: Vec<Arc<dyn BlockCodec>>,
+    containers: Vec<Vec<Vec<u8>>>,
+}
+
+fn fixtures() -> Fixtures {
+    let cfg = GbdiConfig::default();
+    let imgs: Vec<Vec<u8>> = ["mcf", "fluidanimate", "perlbench"]
+        .iter()
+        .enumerate()
+        .map(|(i, n)| workloads::by_name(n).unwrap().generate(PAGE_BYTES, i as u64 + 9))
+        .collect();
+    let codecs: Vec<Arc<dyn BlockCodec>> = ["svm", "mcf"]
+        .iter()
+        .enumerate()
+        .map(|(i, n)| {
+            let img = workloads::by_name(n).unwrap().generate(4096, i as u64 + 1);
+            let mut t = analyze::analyze_image(&img, &cfg);
+            t.version = i as u64 + 1;
+            Arc::new(GbdiCodec::new(t, cfg.clone())) as Arc<dyn BlockCodec>
+        })
+        .collect();
+    let containers = imgs
+        .iter()
+        .map(|img| {
+            codecs.iter().map(|c| container::compress(c.as_ref(), img).to_bytes()).collect()
+        })
+        .collect();
+    Fixtures { imgs, codecs, containers }
+}
+
+fn build_schedule(seed: u64, fx: &Fixtures) -> Vec<Op> {
+    let n_imgs = fx.imgs.len() as u64;
+    let n_codecs = fx.codecs.len() as u64;
+    let mut rng = Rng::new(seed);
+    let mut ops = Vec::new();
+    for _ in 0..60 {
+        let id = rng.below(ID_SPACE);
+        ops.push(match rng.below(12) {
+            0..=4 => Op::Put {
+                id,
+                img: rng.below(n_imgs) as usize,
+                codec: rng.below(n_codecs) as usize,
+            },
+            5..=8 => {
+                let mut data = vec![0u8; 64];
+                if rng.below(4) != 0 {
+                    rng.fill_bytes(&mut data);
+                }
+                Op::Write { id, block: rng.below(BLOCKS as u64) as usize, data }
+            }
+            9 => Op::Remove { id },
+            10 => Op::Publish { codec: rng.below(n_codecs) as usize },
+            _ => Op::Resize { shards: 1 + rng.below(5) as usize },
+        });
+    }
+    // pin the interesting boundaries regardless of the dice: an early
+    // checkpoint, a split, a late checkpoint, and a merge
+    ops[10] = Op::Checkpoint;
+    ops[25] = Op::Resize { shards: 5 };
+    ops[40] = Op::Checkpoint;
+    ops[50] = Op::Resize { shards: 2 };
+    ops
+}
+
+/// Advance the pure model: what page contents *should* be after the op.
+fn apply_model(model: &mut BTreeMap<u64, Vec<u8>>, fx: &Fixtures, op: &Op) {
+    match op {
+        Op::Put { id, img, .. } => {
+            model.insert(*id, fx.imgs[*img].clone());
+        }
+        Op::Write { id, block, data } => {
+            if let Some(content) = model.get_mut(id) {
+                content[block * 64..block * 64 + 64].copy_from_slice(data);
+            }
+        }
+        Op::Remove { id } => {
+            model.remove(id);
+        }
+        Op::Publish { .. } | Op::Resize { .. } | Op::Checkpoint => {}
+    }
+}
+
+/// Advance the reference in-memory store (the satellite oracle for the
+/// clean-restart arm, which also pins codec versions).
+fn apply_reference(store: &mut PageStore, fx: &Fixtures, op: &Op) {
+    match op {
+        Op::Put { id, img, codec } => store.put(
+            *id,
+            StoredPage { frame: Frame::compress(Arc::clone(&fx.codecs[*codec]), &fx.imgs[*img]) },
+        ),
+        Op::Write { id, block, data } => {
+            let _ = store.write_block(*id, *block, data);
+        }
+        Op::Remove { id } => {
+            store.remove(*id);
+        }
+        Op::Publish { codec } => store.publish_codec(Arc::clone(&fx.codecs[*codec])),
+        Op::Resize { .. } | Op::Checkpoint => {}
+    }
+}
+
+fn apply_durable(ds: &DurableStore, fx: &Fixtures, op: &Op) -> gbdi::Result<()> {
+    match op {
+        Op::Put { id, img, codec } => {
+            let frame =
+                Frame::from_container(Container::from_bytes(&fx.containers[*img][*codec])?)?;
+            ds.put(*id, StoredPage { frame })
+        }
+        Op::Write { id, block, data } => ds.write_block(*id, *block, data).map(|_| ()),
+        Op::Remove { id } => ds.remove(*id).map(|_| ()),
+        Op::Publish { codec } => ds.publish_codec(Arc::clone(&fx.codecs[*codec])),
+        Op::Resize { shards } => ds.resize_shards(*shards).map(|_| ()),
+        Op::Checkpoint => ds.checkpoint().map(|_| ()),
+    }
+}
+
+/// Open the durable store over `fs` and replay the schedule. Returns
+/// `None` if the injected crash fired (mid-open or mid-op); logical
+/// rejections (e.g. a block write to a missing page) are part of the
+/// schedule and do not stop the run.
+fn run_schedule(
+    fs: &FaultFs,
+    ops: &[Op],
+    fx: &Fixtures,
+    cfg: &PersistConfig,
+    shards: usize,
+    cache_bytes: usize,
+) -> Option<DurableStore> {
+    let opened = DurableStore::open(Arc::new(fs.clone()), DIR, cfg.clone(), shards, cache_bytes);
+    let Ok((ds, _)) = opened else {
+        assert!(fs.crashed(), "open may only fail by injected crash");
+        return None;
+    };
+    for op in ops {
+        if apply_durable(&ds, fx, op).is_err() && fs.crashed() {
+            return None;
+        }
+    }
+    Some(ds)
+}
+
+/// Every page's plaintext content, via the production read path.
+fn store_contents(store: &ShardedPageStore) -> BTreeMap<u64, Vec<u8>> {
+    store
+        .lagging_pages(u64::MAX)
+        .into_iter()
+        .map(|id| (id, store.read(id).expect("recovered page must decode")))
+        .collect()
+}
+
+/// All model states along the schedule, `states[i]` = after `i` ops.
+fn prefix_states(ops: &[Op], fx: &Fixtures) -> Vec<BTreeMap<u64, Vec<u8>>> {
+    let mut model = BTreeMap::new();
+    let mut states = vec![model.clone()];
+    for op in ops {
+        apply_model(&mut model, fx, op);
+        states.push(model.clone());
+    }
+    states
+}
+
+/// The tentpole proof: arm the crash fuse at every single mutating-op
+/// boundary the full schedule crosses, crash there, remount, recover,
+/// and require the recovered contents to be *some* prefix state of the
+/// model. Runs twice: strict WAL without the cache tier, then group
+/// commit with a deliberately tiny cache so absorbed (deferred dirty)
+/// writes sit in volatile cache memory at crash time and only their WAL
+/// records survive.
+#[test]
+fn crash_at_every_boundary_recovers_a_prefix_state() {
+    let fx = fixtures();
+    for (batch, cache_bytes) in [(1usize, 0usize), (3, 2048)] {
+        let cfg = PersistConfig { fsync_batch: batch, ..PersistConfig::default() };
+        let ops = build_schedule(0xB007 ^ batch as u64, &fx);
+        let states = prefix_states(&ops, &fx);
+        let state_set: HashSet<_> = states.iter().cloned().collect();
+
+        // dry run: count the boundaries and pin the happy path
+        let fs = FaultFs::new();
+        let ds = run_schedule(&fs, &ops, &fx, &cfg, 3, cache_bytes)
+            .expect("no fuse armed, nothing may crash");
+        assert_eq!(
+            store_contents(ds.store()),
+            *states.last().unwrap(),
+            "durable replay diverged from the model (batch {batch}, cache {cache_bytes})"
+        );
+        assert!(ds.durability().checkpoints() >= 4, "schedule must actually checkpoint");
+        let boundaries = fs.op_count();
+        drop(ds);
+        assert!(boundaries > 100, "schedule too small: only {boundaries} crash boundaries");
+
+        for k in 0..boundaries {
+            let fs = FaultFs::new();
+            fs.set_fuse(k);
+            let ds = run_schedule(&fs, &ops, &fx, &cfg, 3, cache_bytes);
+            assert!(fs.crashed(), "boundary {k}/{boundaries}: fuse must fire");
+            // ds may be Some if the crash landed in best-effort stale-
+            // segment cleanup on the very last op — still a crash
+            drop(ds);
+            fs.revive();
+            let (store, report) =
+                recover(&fs, DIR, None, 0).expect("recovery after a crash must not error");
+            let got = store_contents(&store);
+            assert!(
+                state_set.contains(&got),
+                "boundary {k}/{boundaries} (batch {batch}, cache {cache_bytes}): recovered \
+                 {} page(s) into a state that never existed; {report}",
+                got.len(),
+            );
+        }
+    }
+}
+
+/// Clean shutdown + reopen is *exact*: contents, page count, per-page
+/// codec versions, and shard topology all survive, and the recovery
+/// report counts zero damage.
+#[test]
+fn clean_restart_restores_the_exact_state() {
+    let fx = fixtures();
+    for (batch, cache_bytes) in [(1usize, 0usize), (4, 4096)] {
+        let cfg = PersistConfig { fsync_batch: batch, ..PersistConfig::default() };
+        let ops = build_schedule(0x5EED ^ batch as u64, &fx);
+        let mut reference = PageStore::new();
+        for op in &ops {
+            apply_reference(&mut reference, &fx, op);
+        }
+        let finals = prefix_states(&ops, &fx).pop().unwrap();
+
+        let fs = FaultFs::new();
+        let ds = run_schedule(&fs, &ops, &fx, &cfg, 3, cache_bytes).expect("clean run");
+        let shards_now = ds.store().shard_count();
+        drop(ds);
+
+        let (ds, report) =
+            DurableStore::open(Arc::new(fs.clone()), DIR, cfg.clone(), shards_now, cache_bytes)
+                .expect("clean reopen");
+        assert!(!report.saw_damage(), "clean restart counted damage: {report}");
+        let store = ds.store();
+        assert_eq!(store.shard_count(), shards_now);
+        assert_eq!(store.len(), reference.len(), "page count (batch {batch})");
+        assert_eq!(store_contents(store), finals, "contents (batch {batch})");
+        for (id, want) in &finals {
+            assert_eq!(&reference.read(*id).unwrap(), want, "reference arm diverged on {id}");
+            let ref_version = reference.get(*id).unwrap().codec_version();
+            assert_eq!(
+                store.with_page(*id, |p| p.codec_version()),
+                Some(ref_version),
+                "page {id} codec version (batch {batch})"
+            );
+        }
+    }
+}
+
+/// What a corruption is allowed to do: lose suffixes/pages (counted, or
+/// an exact record-boundary truncation) — but never fabricate content.
+/// Every recovered page must hold bytes that id actually had at some
+/// point of the schedule, and recovery must never panic or error.
+#[test]
+fn corrupted_files_recover_without_panics_or_fabricated_data() {
+    let fx = fixtures();
+    let cfg = PersistConfig::default(); // strict WAL
+    let ops = build_schedule(0xF022, &fx);
+    let states = prefix_states(&ops, &fx);
+    let state_set: HashSet<_> = states.iter().cloned().collect();
+    let mut history: HashMap<u64, HashSet<Vec<u8>>> = HashMap::new();
+    for st in &states {
+        for (id, content) in st {
+            history.entry(*id).or_default().insert(content.clone());
+        }
+    }
+    let final_state = states.last().unwrap();
+
+    let fs = FaultFs::new();
+    let ds = run_schedule(&fs, &ops, &fx, &cfg, 3, 0).expect("clean run");
+    drop(ds);
+    let pristine = fs.snapshot();
+    // sanity: the uncorrupted image recovers exactly
+    let (store, report) = recover(&pristine.snapshot(), DIR, None, 0).unwrap();
+    assert!(!report.saw_damage());
+    assert_eq!(store_contents(&store), *final_state);
+
+    enum Hurt {
+        Truncate(usize),
+        Flip(usize),
+        Append(usize),
+    }
+    let mut rng = Rng::new(0xBAD_C0DE);
+    let mut damage_seen = 0u32;
+    for path in pristine.paths() {
+        let len = pristine.len_of(&path).unwrap();
+        let mut hurts = vec![Hurt::Append(13), Hurt::Truncate(0)];
+        for _ in 0..4 {
+            hurts.push(Hurt::Flip(rng.below(len as u64) as usize));
+            hurts.push(Hurt::Truncate(rng.below(len as u64) as usize));
+        }
+        for (case, hurt) in hurts.into_iter().enumerate() {
+            let fsx = pristine.snapshot();
+            fsx.corrupt(&path, |v| match hurt {
+                Hurt::Truncate(n) => v.truncate(n),
+                Hurt::Flip(i) => v[i] ^= 0x20,
+                Hurt::Append(n) => v.extend(std::iter::repeat(0xA5).take(n)),
+            });
+            let (store, report) = recover(&fsx, DIR, None, 0)
+                .unwrap_or_else(|e| panic!("{path} case {case}: recovery must not error: {e:?}"));
+            let got = store_contents(&store);
+            for (id, content) in &got {
+                assert!(
+                    history.get(id).is_some_and(|h| h.contains(content)),
+                    "{path} case {case}: page {id} recovered with fabricated content"
+                );
+            }
+            if got != *final_state {
+                damage_seen += 1;
+                // losing state is only acceptable as *counted* damage or
+                // as a clean record-boundary cut back to a prefix state
+                assert!(
+                    report.saw_damage() || state_set.contains(&got),
+                    "{path} case {case}: silent uncounted state loss; {report}"
+                );
+            }
+            if report.saw_damage() {
+                damage_seen += 1;
+            }
+        }
+    }
+    assert!(damage_seen > 10, "fuzz corpus too weak: only {damage_seen} damaging cases");
+
+    // targeted: a mid-WAL bitflip is *counted* in the recovery metrics
+    let fsx = pristine.snapshot();
+    let wal_path = format!("{DIR}/{WAL_FILE}");
+    let wal_len = pristine.len_of(&wal_path).unwrap();
+    assert!(wal_len > 8, "schedule must leave WAL records behind its last checkpoint");
+    fsx.corrupt(&wal_path, |v| {
+        let mid = v.len() / 2;
+        v[mid] ^= 0x01;
+    });
+    let (_, report) = recover(&fsx, DIR, None, 0).unwrap();
+    assert!(
+        report.wal_corrupt_records + report.wal_truncated_bytes > 0,
+        "mid-WAL bitflip must show up in the WAL damage counters: {report}"
+    );
+
+    // targeted: a deleted manifest falls back to WAL-only recovery
+    let fsx = pristine.snapshot();
+    fsx.remove(&format!("{DIR}/{MANIFEST_FILE}")).unwrap();
+    let (store, report) = recover(&fsx, DIR, None, 0).unwrap();
+    assert!(!report.manifest_found);
+    for (id, content) in &store_contents(&store) {
+        assert!(
+            history.get(id).is_some_and(|h| h.contains(content)),
+            "WAL-only recovery fabricated content for page {id}"
+        );
+    }
+
+    // targeted: a deleted segment is counted as missing
+    let seg = pristine
+        .paths()
+        .into_iter()
+        .find(|p| p.contains("/seg-"))
+        .expect("a checkpoint segment must exist");
+    let fsx = pristine.snapshot();
+    fsx.remove(&seg).unwrap();
+    let (_, report) = recover(&fsx, DIR, None, 0).unwrap();
+    assert!(report.segments_missing > 0, "deleted {seg} must be counted: {report}");
+    assert!(report.saw_damage());
+}

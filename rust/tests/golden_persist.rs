@@ -1,0 +1,175 @@
+//! Golden fixtures for the durability layer's on-disk formats: WAL
+//! records (`GBW1`), checkpoint segments (`GBS1`), and the manifest
+//! (`GBM1`).
+//!
+//! The checked-in bytes under `tests/golden/persist_*` are produced by
+//! an independent Python implementation (`scripts/gen_golden_fixtures.py`,
+//! `build_persist_fixtures`) and each case here asserts both directions
+//! against them:
+//!
+//! 1. **exact decode** — scanning the checked-in bytes yields the
+//!    expected records/entries with zero damage counted;
+//! 2. **byte-identical re-encode** — building the same logical content
+//!    through the Rust encoders reproduces the fixture exactly.
+//!
+//! The embedded page container is the `gbdi_mixed.gbc` image compressed
+//! with the same explicit-table codec `golden_wire.rs` pins, so the WAL
+//! and segment fixtures also transitively freeze the GBC1 reuse.
+//!
+//! Regenerate after an *intentional* format change with
+//! `GOLDEN_BLESS=1 cargo test --test golden_persist` (or the Python
+//! script) — and bump the magic, never reinterpret bytes in place.
+
+use gbdi::container;
+use gbdi::gbdi::{GbdiCodec, GbdiConfig, GlobalBaseTable};
+use gbdi::persist::segment::{
+    decode_manifest, encode_manifest, encode_segment, scan_segment, Manifest, MANIFEST_VERSION,
+};
+use gbdi::persist::wal::{scan_wal, WalRecord, WAL_MAGIC};
+use std::path::PathBuf;
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden").join(name)
+}
+
+/// Same codec + image as `golden_wire.rs`'s mixed case (table version 7).
+fn fixture_codec() -> GbdiCodec {
+    let cfg = GbdiConfig::default();
+    let table = GlobalBaseTable::new(vec![(1000, 8), (1 << 20, 16)], cfg.word_size, 7);
+    GbdiCodec::new(table, cfg)
+}
+
+fn gbdi_mixed_image() -> Vec<u8> {
+    let mut words: Vec<u32> = Vec::new();
+    words.extend((0..16u32).map(|i| 900 + 7 * i));
+    words.extend([0u32; 16]);
+    words.extend([0xDEAD_BEEFu32; 16]);
+    words.extend((0..16u32).map(|i| 0x1000_0000u32.wrapping_add(i.wrapping_mul(0x0123_4567))));
+    words.extend((0..16u32).map(|i| (1u32 << 20) - 15000 + 1234 * i));
+    words.extend((0..12u32).map(|i| 1000 + i));
+    words.extend((12..16u32).map(|i| 0xA000_0000 + i));
+    words.extend((0..16usize).map(|i| [0u32, 1000, 1 << 20][i % 3]));
+    words.extend((0..16u32).map(|i| 1000 - i));
+    words.iter().flat_map(|w| w.to_le_bytes()).collect()
+}
+
+/// The embedded containers: a real compressed page and the zero-image
+/// codec snapshot form the WAL/manifest use for table publication.
+fn page_and_snapshot() -> (Vec<u8>, Vec<u8>) {
+    let codec = fixture_codec();
+    let page = container::compress(&codec, &gbdi_mixed_image()).to_bytes();
+    let snapshot = container::compress(&codec, &[]).to_bytes();
+    (page, snapshot)
+}
+
+const PAGE_ID: u64 = 0x0102_0304_0506_0708;
+
+/// The frozen record sequence, one of each tag, mirrored verbatim in
+/// `build_persist_fixtures` on the Python side.
+fn wal_records() -> Vec<WalRecord> {
+    let (page, snapshot) = page_and_snapshot();
+    vec![
+        WalRecord::PutPage { page_id: PAGE_ID, container: page },
+        WalRecord::WriteBlock {
+            page_id: PAGE_ID,
+            block: 5,
+            data: (0..64u32).map(|i| ((3 * i + 1) & 0xFF) as u8).collect(),
+        },
+        WalRecord::RemovePage { page_id: 42 },
+        WalRecord::PublishCodec { container: snapshot },
+        WalRecord::Resize { shards: 6 },
+    ]
+}
+
+/// Shared assertion: bless or compare, with a first-diff report.
+fn check_golden(name: &str, built: &[u8]) {
+    let path = fixture_path(name);
+    if std::env::var("GOLDEN_BLESS").is_ok_and(|v| v == "1") {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, built).unwrap();
+        eprintln!("blessed {name}: {} bytes", built.len());
+        return;
+    }
+    let golden = std::fs::read(&path).unwrap_or_else(|e| {
+        panic!("missing fixture {path:?} ({e}); regenerate with GOLDEN_BLESS=1")
+    });
+    if built != golden {
+        let first_diff = built
+            .iter()
+            .zip(golden.iter())
+            .position(|(a, b)| a != b)
+            .unwrap_or_else(|| built.len().min(golden.len()));
+        panic!(
+            "{name}: persist format moved: {} bytes now vs {} in fixture, first diff at byte \
+             {} (got {:#04x?}, fixture {:#04x?})",
+            built.len(),
+            golden.len(),
+            first_diff,
+            built.get(first_diff),
+            golden.get(first_diff),
+        );
+    }
+}
+
+#[test]
+fn golden_wal_records() {
+    let records = wal_records();
+    let mut built = WAL_MAGIC.to_vec();
+    for rec in &records {
+        rec.encode_into(&mut built);
+    }
+    check_golden("persist_wal.gbw", &built);
+
+    // exact decode of the checked-in bytes, with zero damage counted
+    let golden = std::fs::read(fixture_path("persist_wal.gbw")).unwrap();
+    let scan = scan_wal(&golden);
+    assert_eq!(scan.records, records, "WAL fixture no longer decodes to the frozen records");
+    assert_eq!(scan.corrupt_records, 0);
+    assert_eq!(scan.truncated_bytes, 0);
+    assert!(!scan.missing_magic);
+    assert_eq!(scan.valid_bytes, golden.len() as u64);
+}
+
+#[test]
+fn golden_segment() {
+    let (page, snapshot) = page_and_snapshot();
+    let entries = vec![(PAGE_ID, page), (7, snapshot), (u64::MAX, Vec::new())];
+    let built = encode_segment(&entries);
+    check_golden("persist_segment.gbs", &built);
+
+    let golden = std::fs::read(fixture_path("persist_segment.gbs")).unwrap();
+    let scan = scan_segment(&golden);
+    assert_eq!(scan.entries, entries, "segment fixture no longer decodes to the frozen pages");
+    assert_eq!(scan.crc_failures, 0);
+    assert_eq!(scan.truncated_bytes, 0);
+    assert!(!scan.missing_magic);
+}
+
+#[test]
+fn golden_manifest() {
+    // the version byte is frozen at 1: changing the layout means a new
+    // version (or magic), never a silent re-interpretation
+    assert_eq!(MANIFEST_VERSION, 1, "bump requires a migration story, not just this test");
+
+    let (_, snapshot) = page_and_snapshot();
+    let manifest = Manifest { epoch: 9, shard_count: 4, codecs: vec![snapshot] };
+    let built = encode_manifest(&manifest);
+    check_golden("persist_manifest.gbm", &built);
+    assert_eq!(built[4], 1, "version byte must sit right after the magic");
+
+    let golden = std::fs::read(fixture_path("persist_manifest.gbm")).unwrap();
+    assert_eq!(decode_manifest(&golden), Some(manifest));
+}
+
+#[test]
+fn golden_wal_embedded_container_still_parses() {
+    // the PutPage container in the fixture is a real GBC1 page: decode
+    // it through the production parser and check the image round-trips
+    let golden = std::fs::read(fixture_path("persist_wal.gbw")).unwrap();
+    let scan = scan_wal(&golden);
+    let Some(WalRecord::PutPage { container: bytes, .. }) = scan.records.first() else {
+        panic!("first WAL record must be the PutPage");
+    };
+    let parsed = gbdi::container::Container::from_bytes(bytes).unwrap();
+    assert_eq!(parsed.decompress().unwrap(), gbdi_mixed_image());
+}

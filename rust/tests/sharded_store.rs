@@ -17,6 +17,12 @@
 //!   the sharded store (each thread owns a disjoint page set for
 //!   writes), then a full content verification plus the metrics-sum
 //!   invariant.
+//! * `online_resize_under_concurrent_traffic_loses_no_writes` — writer
+//!   threads stream block writes (disjoint ownership) and reads while a
+//!   resizer thread walks the shard count through splits and merges;
+//!   afterwards every block holds its final pattern, per-shard metrics
+//!   still sum to the issued totals, and the topology is the last one
+//!   requested.
 //! * `service_under_concurrent_clients_stays_consistent` — the same
 //!   shape through the full `CompressionService`.
 
@@ -27,7 +33,9 @@ use gbdi::gbdi::{analyze, GbdiCodec, GbdiConfig};
 use gbdi::util::prng::Rng;
 use gbdi::workloads;
 use gbdi::{BlockCodec, Frame};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Three GBDI codec versions derived from three different value
 /// populations — enough to exercise the codec ring and lagging-page
@@ -416,6 +424,114 @@ fn concurrent_mixed_ops_lose_no_writes() {
             assert!(s.lock_holds > 0, "shard {} never took its write lock", s.shard);
         }
     }
+}
+
+#[test]
+fn online_resize_under_concurrent_traffic_loses_no_writes() {
+    let cfg = GbdiConfig::default();
+    let img = workloads::by_name("fluidanimate").unwrap().generate(4096, 11);
+    let codec: Arc<dyn BlockCodec> =
+        Arc::new(GbdiCodec::new(analyze::analyze_image(&img, &cfg), cfg));
+    let store = ShardedPageStore::new(2);
+    store.publish_codec(Arc::clone(&codec));
+    let n_pages = 48u64;
+    let threads = 4u64;
+    for id in 0..n_pages {
+        store.put(id, StoredPage { frame: Frame::compress(Arc::clone(&codec), &img) });
+    }
+    let pattern = |id: u64, blk: usize| [(id as u8).wrapping_mul(29) ^ (blk as u8); 64];
+    let done = AtomicBool::new(false);
+    let (total_reads, rounds, moved) = std::thread::scope(|s| {
+        let writers: Vec<_> = (0..threads)
+            .map(|t| {
+                let store = &store;
+                let img = &img;
+                s.spawn(move || {
+                    let mut rng = Rng::new(0x2E51 + t);
+                    let mut line = [0u8; 64];
+                    let mut reads = 0u64;
+                    for id in (t..n_pages).step_by(threads as usize) {
+                        for blk in 0..64usize {
+                            store.write_block(id, blk, &pattern(id, blk)).unwrap();
+                            // a resize between the write and this read
+                            // must carry the block to its new shard
+                            store.read_block(id, blk, &mut line).unwrap();
+                            assert_eq!(line, pattern(id, blk), "read-own-write {id}/{blk}");
+                            reads += 1;
+                            let other = rng.below(n_pages);
+                            let oblk = rng.below(64) as usize;
+                            store.read_block(other, oblk, &mut line).unwrap();
+                            assert!(
+                                line == pattern(other, oblk)
+                                    || line[..] == img[oblk * 64..(oblk + 1) * 64],
+                                "torn read on {other}/{oblk} during resize"
+                            );
+                            reads += 1;
+                        }
+                    }
+                    reads
+                })
+            })
+            .collect();
+        // the resizer walks splits and merges until every writer is
+        // done, then lands on the final topology — the coprime counts
+        // guarantee reroutes in both directions
+        let resizer = {
+            let store = &store;
+            let done = &done;
+            s.spawn(move || {
+                let plan = [5usize, 1, 7, 3];
+                let mut rounds = 0u64;
+                let mut moved = 0usize;
+                loop {
+                    let n = plan[(rounds % plan.len() as u64) as usize];
+                    moved += store.resize_shards(n);
+                    assert_eq!(store.shard_count(), n, "round {rounds}");
+                    rounds += 1;
+                    if done.load(Ordering::Acquire) {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                moved += store.resize_shards(3);
+                (rounds, moved)
+            })
+        };
+        let reads: u64 = writers.into_iter().map(|h| h.join().expect("writer thread")).sum();
+        done.store(true, Ordering::Release);
+        let (rounds, moved) = resizer.join().expect("resizer thread");
+        (reads, rounds, moved)
+    });
+    assert!(rounds >= 1, "the resizer must complete at least one resize");
+    assert!(moved > 0, "resizing between coprime shard counts must reroute pages");
+    assert_eq!(store.shard_count(), 3, "the last requested topology must stick");
+    // no lost writes across any number of splits and merges
+    for id in 0..n_pages {
+        let page = store.read(id).unwrap();
+        for blk in 0..64usize {
+            assert_eq!(
+                page[blk * 64..(blk + 1) * 64],
+                pattern(id, blk),
+                "lost write on {id}/{blk}"
+            );
+        }
+    }
+    // counters moved with their shard indices (retired ones folded into
+    // shard 0), so per-shard metrics still sum to the issued traffic and
+    // the live gauges to the store totals
+    let snaps = store.shard_metrics();
+    assert_eq!(snaps.len(), 3);
+    assert_eq!(snaps.iter().map(|s| s.block_writes).sum::<u64>(), n_pages * 64);
+    assert_eq!(snaps.iter().map(|s| s.block_reads).sum::<u64>(), total_reads);
+    assert_eq!(snaps.iter().map(|s| s.pages).sum::<u64>(), store.len() as u64);
+    assert_eq!(
+        snaps.iter().map(|s| s.logical_bytes).sum::<u64>(),
+        store.logical_bytes() as u64
+    );
+    assert_eq!(
+        snaps.iter().map(|s| s.stored_bytes).sum::<u64>(),
+        store.stored_bytes() as u64
+    );
 }
 
 #[test]

@@ -90,7 +90,7 @@ def main():
         return 2
 
     if not args.ignore_tags:
-        for tag in ("isa", "cache"):
+        for tag in ("isa", "cache", "persist"):
             cur_tag = (cur_doc.get("tags") or {}).get(tag)
             base_tag = (base_doc.get("tags") or {}).get(tag)
             if cur_tag and base_tag and cur_tag != base_tag:

@@ -24,6 +24,7 @@ toolchain.
 
 import os
 import sys
+import zlib
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "golden")
 
@@ -731,6 +732,182 @@ def build_gbn1_fixtures():
     ]
 
 
+# ---- persistence formats (rust/src/persist/{wal,segment}.rs) ------------
+#
+# The durability layer's three on-disk formats, mirrored independently:
+# WAL records (GBW1), checkpoint segments (GBS1), and the manifest
+# (GBM1). Their CRC-32 is the zlib polynomial (0xEDB88320, reflected,
+# init/xorout 0xFFFFFFFF), so zlib.crc32 is the reference here — if the
+# Rust table drifts, every persist fixture mismatches at once.
+
+WAL_MAGIC = b"GBW1"
+SEGMENT_MAGIC = b"GBS1"
+MANIFEST_MAGIC = b"GBM1"
+MANIFEST_VERSION = 1
+
+WAL_TAGS = {"put_page": 1, "write_block": 2, "remove_page": 3,
+            "publish_codec": 4, "resize": 5}
+WAL_TAG_NAMES = {v: k for k, v in WAL_TAGS.items()}
+
+
+def crc32(data):
+    return zlib.crc32(bytes(data)) & MASK32
+
+
+def wal_record(kind, body):
+    """Encode one WAL payload (tag + body, no framing)."""
+    out = bytearray([WAL_TAGS[kind]])
+    if kind == "put_page":
+        page_id, container = body
+        out += u64le(page_id) + bytes(container)
+    elif kind == "write_block":
+        page_id, block, data = body
+        out += u64le(page_id) + u32le(block) + bytes(data)
+    elif kind == "remove_page":
+        out += u64le(body)
+    elif kind == "publish_codec":
+        out += bytes(body)
+    else:
+        assert kind == "resize"
+        out += u32le(body)
+    return bytes(out)
+
+
+def wal_decode_record(payload):
+    kind = WAL_TAG_NAMES[payload[0]]
+    body = payload[1:]
+    if kind == "put_page":
+        assert len(body) >= 8
+        return kind, (int.from_bytes(body[:8], "little"), body[8:])
+    if kind == "write_block":
+        assert len(body) >= 12
+        return kind, (int.from_bytes(body[:8], "little"),
+                      int.from_bytes(body[8:12], "little"), body[12:])
+    if kind == "remove_page":
+        assert len(body) == 8
+        return kind, int.from_bytes(body, "little")
+    if kind == "publish_codec":
+        return kind, body
+    assert len(body) == 4
+    return kind, int.from_bytes(body, "little")
+
+
+def wal_file(records):
+    """Frame records (`len u32 | crc u32 | payload`) behind the magic."""
+    out = bytearray(WAL_MAGIC)
+    for kind, body in records:
+        payload = wal_record(kind, body)
+        assert wal_record(*wal_decode_record(payload)) == payload, \
+            f"WAL {kind} decode/re-encode drift"
+        out += u32le(len(payload)) + u32le(crc32(payload)) + payload
+    return bytes(out)
+
+
+def wal_split(stream):
+    assert stream[:4] == WAL_MAGIC, "WAL magic missing"
+    out, pos = [], 4
+    while pos < len(stream):
+        n = int.from_bytes(stream[pos:pos + 4], "little")
+        crc = int.from_bytes(stream[pos + 4:pos + 8], "little")
+        payload = stream[pos + 8:pos + 8 + n]
+        assert len(payload) == n, "torn WAL record"
+        assert crc32(payload) == crc, "WAL record CRC mismatch"
+        out.append(wal_decode_record(payload))
+        pos += 8 + n
+    return out
+
+
+def segment_file(entries):
+    out = bytearray(SEGMENT_MAGIC)
+    for page_id, container in entries:
+        out += u64le(page_id) + u32le(len(container)) + u32le(crc32(container))
+        out += bytes(container)
+    return bytes(out)
+
+
+def segment_split(stream):
+    assert stream[:4] == SEGMENT_MAGIC, "segment magic missing"
+    out, pos = [], 4
+    while pos < len(stream):
+        page_id = int.from_bytes(stream[pos:pos + 8], "little")
+        n = int.from_bytes(stream[pos + 8:pos + 12], "little")
+        crc = int.from_bytes(stream[pos + 12:pos + 16], "little")
+        container = stream[pos + 16:pos + 16 + n]
+        assert len(container) == n, "torn segment entry"
+        assert crc32(container) == crc, "segment entry CRC mismatch"
+        out.append((page_id, container))
+        pos += 16 + n
+    return out
+
+
+def manifest_file(epoch, shard_count, codecs):
+    out = bytearray(MANIFEST_MAGIC)
+    out.append(MANIFEST_VERSION)
+    out += u64le(epoch) + u32le(shard_count) + u32le(len(codecs))
+    for snapshot in codecs:
+        out += u32le(len(snapshot)) + bytes(snapshot)
+    out += u32le(crc32(out))
+    return bytes(out)
+
+
+def manifest_decode(data):
+    body, crc = data[:-4], int.from_bytes(data[-4:], "little")
+    assert crc32(body) == crc, "manifest CRC mismatch"
+    assert body[:4] == MANIFEST_MAGIC and body[4] == MANIFEST_VERSION
+    epoch = int.from_bytes(body[5:13], "little")
+    shard_count = int.from_bytes(body[13:17], "little")
+    n = int.from_bytes(body[17:21], "little")
+    codecs, at = [], 21
+    for _ in range(n):
+        ln = int.from_bytes(body[at:at + 4], "little")
+        at += 4
+        codecs.append(body[at:at + ln])
+        at += ln
+    assert at == len(body), "trailing bytes in manifest"
+    return epoch, shard_count, codecs
+
+
+def build_persist_fixtures():
+    # a real page container + the zero-image codec snapshot form, built
+    # by the same independent GBDI encoder the .gbc fixtures use
+    entries = table_entries([(1000, 8), (1 << 20, 16)])
+    image = gbdi_mixed_image()
+    payload, block_bits = compress_image(
+        lambda b, w: gbdi_encode_block(entries, b, w), image)
+    verify(lambda r, n: gbdi_decode_block(entries, r, n), payload, block_bits, image)
+    page = container_bytes(1, gbdi_config_bytes(), table_bytes(entries, 7),
+                           len(image), block_bits, payload)
+    snapshot = container_bytes(1, gbdi_config_bytes(), table_bytes(entries, 7),
+                               0, [], b"")
+
+    # frozen record sequence: one of each tag, in tag order. Touch ONLY
+    # with a new WAL magic — rust/tests/golden_persist.rs builds the
+    # identical list in Rust and the checked-in bytes must match both.
+    records = [
+        ("put_page", (0x0102030405060708, page)),
+        ("write_block", (0x0102030405060708, 5,
+                         bytes((3 * i + 1) & 0xFF for i in range(64)))),
+        ("remove_page", 42),
+        ("publish_codec", snapshot),
+        ("resize", 6),
+    ]
+    wal = wal_file(records)
+    assert len(wal_split(wal)) == len(records)
+
+    seg_entries = [(0x0102030405060708, page), (7, snapshot), (MASK64, b"")]
+    seg = segment_file(seg_entries)
+    assert segment_split(seg) == [(i, bytes(c)) for i, c in seg_entries]
+
+    man = manifest_file(9, 4, [snapshot])
+    assert manifest_decode(man) == (9, 4, [snapshot])
+
+    return [
+        ("persist_wal.gbw", wal),
+        ("persist_segment.gbs", seg),
+        ("persist_manifest.gbm", man),
+    ]
+
+
 # ---- assembly + self-verification ---------------------------------------
 
 def verify(decode_block, payload, block_bits, image, block_bytes=64):
@@ -800,6 +977,7 @@ def main():
         3, (64).to_bytes(4, "little"), None, len(image), block_bits, payload)))
 
     fixtures.extend(build_gbn1_fixtures())
+    fixtures.extend(build_persist_fixtures())
 
     if args.check:
         bad = 0
