@@ -15,6 +15,11 @@
 //! uncompressed memory — the hit-rate/latency curve the cache tier
 //! exists for.
 //!
+//! The third experiment prices the integrity plane: the same mixed
+//! traffic at 8 shards with integrity off, digest-maintenance only,
+//! verified reads, and verified reads plus an aggressive scrubber —
+//! the overhead curve `IntegrityConfig::verify_reads` documents.
+//!
 //! Acceptance bars this bench guards (asserted on full runs with ≥ 4
 //! hardware threads; the fast CI smoke only emits the numbers):
 //!
@@ -22,11 +27,14 @@
 //!   block-op throughput of 1 shard on the same workload;
 //! * at cache = 10% of the logical footprint, the hot-probe p99 must be
 //!   ≤ 2x an identically timed raw-memcpy probe, with ≥ 5x footprint
-//!   savings over uncompressed memory.
+//!   savings over uncompressed memory;
+//! * full integrity (verify + 256 MiB/s scrub) must retain ≥ 20% of
+//!   unchecked throughput — a catastrophic-regression guard, not a
+//!   performance promise.
 //!
 //! `cargo bench --bench concurrent_serving`
 
-use gbdi::coordinator::{CompressionService, ServiceConfig};
+use gbdi::coordinator::{CompressionService, IntegrityConfig, ServiceConfig};
 use gbdi::util::bench::Bencher;
 use gbdi::util::prng::Rng;
 use gbdi::{workloads, BlockCodec, CodecKind, GbdiConfig};
@@ -35,7 +43,9 @@ use std::time::Instant;
 
 /// One arm: start a static-codec service with `shards` shards, ingest
 /// `pages` pages in batches, then hammer it with `threads` clients doing
-/// `ops_per_thread` mixed block ops (50% GET / 50% PUT). Returns
+/// `ops_per_thread` mixed block ops (50% GET / 50% PUT). The integrity
+/// plane runs as configured, so the same harness measures both the
+/// shard sweep (integrity off) and the integrity-overhead arms. Returns
 /// (ops_per_s, p50_ns, p99_ns).
 fn run_arm(
     shards: usize,
@@ -43,11 +53,12 @@ fn run_arm(
     pages: u64,
     ops_per_thread: usize,
     image: &[u8],
+    integrity: IntegrityConfig,
 ) -> (f64, u64, u64) {
     let cfg = GbdiConfig::default();
     let codec: Arc<dyn BlockCodec> = Arc::from(CodecKind::Gbdi.build_for_image(image, &cfg));
     let svc = CompressionService::start_static(
-        ServiceConfig { workers: 2, shards, ..Default::default() },
+        ServiceConfig { workers: 2, shards, integrity, ..Default::default() },
         codec,
     )
     .expect("service start");
@@ -269,7 +280,8 @@ fn main() {
     let mut ops_at_1 = 0.0f64;
     let mut ops_at_8 = 0.0f64;
     for &shards in shard_counts {
-        let (ops_per_s, p50, p99) = run_arm(shards, threads, pages, ops_per_thread, &image);
+        let (ops_per_s, p50, p99) =
+            run_arm(shards, threads, pages, ops_per_thread, &image, IntegrityConfig::default());
         b.metric(&format!("ops_per_s/shards={shards}"), ops_per_s);
         b.metric(&format!("p50_ns/shards={shards}"), p50 as f64);
         b.metric(&format!("p99_ns/shards={shards}"), p99 as f64);
@@ -333,6 +345,53 @@ fn main() {
         );
     } else {
         println!("(cache assertions skipped: fast={fast}, {cores} hardware threads)");
+    }
+
+    // ---- integrity plane overhead: 8 shards, same mixed traffic ----
+    // Four arms isolate where the cycles go: `off` is the baseline the
+    // shard sweep also measures; `digest` pays only the incremental
+    // per-page CRC maintenance on writes; `verify` adds the O(page)
+    // hash on every frame decode (the strong never-serve-wrong mode);
+    // `verify+scrub` piles an aggressive background scrubber on top.
+    println!("\n== integrity plane overhead: 8 shards, {threads} clients ==\n");
+    let modes: [(&str, IntegrityConfig); 4] = [
+        ("off", IntegrityConfig::default()),
+        ("digest", IntegrityConfig { enabled: true, verify_reads: false, scrub_mib_s: 0 }),
+        ("verify", IntegrityConfig { enabled: true, verify_reads: true, scrub_mib_s: 0 }),
+        ("verify+scrub", IntegrityConfig { enabled: true, verify_reads: true, scrub_mib_s: 256 }),
+    ];
+    let mut ops_int_off = 0.0f64;
+    let mut ops_int_full = 0.0f64;
+    for (mode, icfg) in modes {
+        println!("mode {mode}:");
+        let (ops_per_s, p50, p99) = run_arm(8, threads, pages, ops_per_thread, &image, icfg);
+        b.metric(&format!("integrity_ops_per_s/mode={mode}"), ops_per_s);
+        b.metric(&format!("integrity_p50_ns/mode={mode}"), p50 as f64);
+        b.metric(&format!("integrity_p99_ns/mode={mode}"), p99 as f64);
+        match mode {
+            "off" => ops_int_off = ops_per_s,
+            "verify+scrub" => ops_int_full = ops_per_s,
+            _ => {}
+        }
+    }
+    let retained = ops_int_full / ops_int_off.max(1e-9);
+    b.metric("integrity_throughput_retained/full_vs_off", retained);
+    println!(
+        "\nfull integrity (verify + 256 MiB/s scrub) retains {:.0}% of unchecked throughput",
+        retained * 100.0
+    );
+    // the mode set is part of the measurement environment, like the
+    // cache sweep's: never diff against a baseline with different arms
+    b.tag("integrity", "off-digest-verify-scrub256");
+    // catastrophic-regression guard only: the plane is allowed to cost,
+    // but an order-of-magnitude collapse means a hot-path accident
+    if !fast && cores >= 4 {
+        assert!(
+            retained >= 0.2,
+            "full integrity must retain >= 20% of unchecked throughput (got {retained:.2})"
+        );
+    } else {
+        println!("(integrity assertion skipped: fast={fast}, {cores} hardware threads)");
     }
 
     std::fs::create_dir_all("target").ok();

@@ -35,6 +35,11 @@
 //! fsync_batch = 1            # WAL group commit: fsync every N appends
 //! wal_limit = 8m             # checkpoint once the WAL outgrows this
 //!
+//! [integrity]
+//! enabled = true             # per-page CRC digests + scrubber; default off
+//! verify_reads = true        # re-verify the digest on every frame decode
+//! scrub_mib_s = 8            # background scrub budget, MiB/s of stored bytes
+//!
 //! [server]
 //! listen = "127.0.0.1:7070"  # gbdi serve --listen overrides
 //! max_conns = 64
@@ -42,11 +47,13 @@
 //! write_queue_bytes = 4m
 //! max_inflight_pages = 0     # admission cap; 0 = shards * ingest_batch * 4
 //! retry_after_ms = 50
+//! handshake_timeout_ms = 5000   # drop connections silent before their magic
+//! write_timeout_ms = 10000      # drop peers that stop reading responses
 //! ```
 
 use crate::cli::parse_u64;
 use crate::cluster::SelectorKind;
-use crate::coordinator::ServiceConfig;
+use crate::coordinator::{IntegrityConfig, ServiceConfig};
 use crate::gbdi::GbdiConfig;
 use crate::persist::PersistConfig;
 use crate::server::ServerConfig;
@@ -161,6 +168,14 @@ impl ConfigFile {
         }
     }
 
+    fn get_bool(&self, section: &str, key: &str, default: bool) -> Result<bool, String> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(Value::Bool(v)) => Ok(*v),
+            Some(v) => Err(format!("{section}.{key}: expected bool, got {v:?}")),
+        }
+    }
+
     fn get_f64(&self, section: &str, key: &str, default: f64) -> Result<f64, String> {
         match self.get(section, key) {
             None => Ok(default),
@@ -241,7 +256,28 @@ impl ConfigFile {
             shards,
             ingest_batch,
             cache_bytes: self.get_u64("cache", "bytes", d.cache_bytes as u64)? as usize,
+            // the durability engine is a runtime object: the caller
+            // (gbdi serve) builds it from persist_config() and injects
+            persist: None,
+            integrity: self.integrity_config()?,
         })
+    }
+
+    /// Build an [`IntegrityConfig`] from the `[integrity]` section
+    /// (missing section or keys keep the defaults — integrity off,
+    /// verify-on-read on when enabled, 8 MiB/s scrub budget); validates
+    /// the result.
+    pub fn integrity_config(&self) -> Result<IntegrityConfig, String> {
+        let d = IntegrityConfig::default();
+        let cfg = IntegrityConfig {
+            enabled: self.get_bool("integrity", "enabled", d.enabled)?,
+            verify_reads: self.get_bool("integrity", "verify_reads", d.verify_reads)?,
+            scrub_mib_s: self.get_u64("integrity", "scrub_mib_s", d.scrub_mib_s)?,
+        };
+        if cfg.scrub_mib_s == 0 {
+            return Err("integrity.scrub_mib_s: must be >= 1".into());
+        }
+        Ok(cfg)
     }
 
     /// Build a [`ServerConfig`] from the `[server]` section (missing
@@ -271,6 +307,9 @@ impl ConfigFile {
             retry_after_ms: self.get_u64("server", "retry_after_ms", d.retry_after_ms as u64)?
                 as u32,
             poll_interval_ms: self.get_u64("server", "poll_interval_ms", d.poll_interval_ms)?,
+            handshake_timeout_ms: self
+                .get_u64("server", "handshake_timeout_ms", d.handshake_timeout_ms)?,
+            write_timeout_ms: self.get_u64("server", "write_timeout_ms", d.write_timeout_ms)?,
         };
         if cfg.max_conns == 0 {
             return Err("server.max_conns: must be >= 1".into());
@@ -286,6 +325,12 @@ impl ConfigFile {
         }
         if cfg.poll_interval_ms == 0 {
             return Err("server.poll_interval_ms: must be >= 1".into());
+        }
+        if cfg.handshake_timeout_ms == 0 {
+            return Err("server.handshake_timeout_ms: must be >= 1".into());
+        }
+        if cfg.write_timeout_ms == 0 {
+            return Err("server.write_timeout_ms: must be >= 1".into());
         }
         Ok(cfg)
     }
@@ -467,13 +512,16 @@ bytes = 4m
     #[test]
     fn builds_server_config() {
         let text = "[server]\nlisten = \"0.0.0.0:9999\"\nmax_conns = 8\n\
-                    write_queue_bytes = 1m\nmax_inflight_pages = 512\nretry_after_ms = 10";
+                    write_queue_bytes = 1m\nmax_inflight_pages = 512\nretry_after_ms = 10\n\
+                    handshake_timeout_ms = 250\nwrite_timeout_ms = 2000";
         let cfg = ConfigFile::parse(text).unwrap().server_config().unwrap();
         assert_eq!(cfg.listen, "0.0.0.0:9999");
         assert_eq!(cfg.max_conns, 8);
         assert_eq!(cfg.write_queue_bytes, 1 << 20);
         assert_eq!(cfg.max_inflight_pages, 512);
         assert_eq!(cfg.retry_after_ms, 10);
+        assert_eq!(cfg.handshake_timeout_ms, 250);
+        assert_eq!(cfg.write_timeout_ms, 2000);
         // unspecified keys keep defaults
         let d = ServerConfig::default();
         assert_eq!(cfg.max_frame_bytes, d.max_frame_bytes);
@@ -492,9 +540,41 @@ bytes = 4m
             "[server]\nwrite_queue_bytes = 1k",
             "[server]\npoll_interval_ms = 0",
             "[server]\nlisten = 7070",
+            "[server]\nhandshake_timeout_ms = 0",
+            "[server]\nwrite_timeout_ms = 0",
         ] {
             let c = ConfigFile::parse(bad).unwrap();
             assert!(c.server_config().is_err(), "{bad:?} should fail validation");
+        }
+    }
+
+    #[test]
+    fn integrity_section_builds_and_validates() {
+        // absent section: integrity off, defaults intact
+        let c = ConfigFile::parse("").unwrap();
+        assert_eq!(c.integrity_config().unwrap(), IntegrityConfig::default());
+        assert!(!c.integrity_config().unwrap().enabled);
+        // full section, wired through service_config too
+        let text = "[integrity]\nenabled = true\nverify_reads = false\nscrub_mib_s = 32";
+        let c = ConfigFile::parse(text).unwrap();
+        let i = c.integrity_config().unwrap();
+        assert!(i.enabled);
+        assert!(!i.verify_reads);
+        assert_eq!(i.scrub_mib_s, 32);
+        assert_eq!(c.service_config().unwrap().integrity, i);
+        // enabling alone keeps verify_reads on and the default budget
+        let c = ConfigFile::parse("[integrity]\nenabled = true").unwrap();
+        let i = c.integrity_config().unwrap();
+        assert!(i.enabled && i.verify_reads);
+        assert_eq!(i.scrub_mib_s, IntegrityConfig::default().scrub_mib_s);
+        // validation
+        for bad in [
+            "[integrity]\nenabled = 1",
+            "[integrity]\nverify_reads = \"yes\"",
+            "[integrity]\nscrub_mib_s = 0",
+        ] {
+            let c = ConfigFile::parse(bad).unwrap();
+            assert!(c.integrity_config().is_err(), "{bad:?} should fail validation");
         }
     }
 

@@ -8,14 +8,16 @@
 //! * [`ShardMetrics`] / [`ShardMetricsSnapshot`] — per-shard counters
 //!   owned by each shard of the
 //!   [`ShardedPageStore`](super::store::ShardedPageStore): occupancy,
-//!   exclusive lock-hold time, block read/write latency, and the
+//!   exclusive lock-hold time, block read/write latency, the
 //!   hot-block cache tier (hits, misses, admissions, evictions,
-//!   deferred flushes, plus residency gauges). The invariant the stress
-//!   tests pin down: per-shard block-op counters sum exactly to the
-//!   service-wide totals, because both sides count the same successful
-//!   operations once. Service-wide cache totals are the sum of the
-//!   shard snapshots ([`CacheTotals::from_shards`]) — there is no
-//!   second counter to drift.
+//!   deferred flushes, plus residency gauges), and the integrity plane
+//!   (pages scrubbed, corruptions detected, pages healed/quarantined).
+//!   The invariant the stress tests pin down: per-shard block-op
+//!   counters sum exactly to the service-wide totals, because both
+//!   sides count the same successful operations once. Service-wide
+//!   cache and integrity totals are the sum of the shard snapshots
+//!   ([`CacheTotals::from_shards`], [`IntegrityTotals::from_shards`]) —
+//!   there is no second counter to drift.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -216,6 +218,10 @@ pub struct ShardMetrics {
     cache_admissions: AtomicU64,
     cache_evictions: AtomicU64,
     deferred_flushes: AtomicU64,
+    scrubbed: AtomicU64,
+    corrupt_detected: AtomicU64,
+    healed: AtomicU64,
+    quarantined: AtomicU64,
 }
 
 impl ShardMetrics {
@@ -271,6 +277,28 @@ impl ShardMetrics {
         self.deferred_flushes.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Record one page whose image digest was re-verified (by the
+    /// background scrubber or an explicit scrub call).
+    pub fn scrubbed(&self) {
+        self.scrubbed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one confirmed digest mismatch (scrub or verified read).
+    pub fn corrupt_detected(&self) {
+        self.corrupt_detected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one quarantined page replaced with a verified copy
+    /// recovered from durable state.
+    pub fn healed(&self) {
+        self.healed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one page entering quarantine (fenced from serving).
+    pub fn quarantined(&self) {
+        self.quarantined.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Fold another registry's counters into this one — an online shard
     /// resize retires shard indices and must not lose their history, or
     /// per-shard sums would stop matching the service-wide totals.
@@ -291,7 +319,11 @@ impl ShardMetrics {
             cache_misses,
             cache_admissions,
             cache_evictions,
-            deferred_flushes
+            deferred_flushes,
+            scrubbed,
+            corrupt_detected,
+            healed,
+            quarantined
         );
     }
 
@@ -333,6 +365,10 @@ impl ShardMetrics {
             cache_admissions: self.cache_admissions.load(Ordering::Relaxed),
             cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
             deferred_flushes: self.deferred_flushes.load(Ordering::Relaxed),
+            scrubbed: self.scrubbed.load(Ordering::Relaxed),
+            corrupt_detected: self.corrupt_detected.load(Ordering::Relaxed),
+            healed: self.healed.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
             cached_blocks: cache.blocks,
             cached_bytes: cache.bytes,
             cached_dirty_blocks: cache.dirty_blocks,
@@ -388,6 +424,14 @@ pub struct ShardMetricsSnapshot {
     pub cache_evictions: u64,
     /// Deferred block writes flushed back through frames.
     pub deferred_flushes: u64,
+    /// Pages whose image digest was re-verified.
+    pub scrubbed: u64,
+    /// Confirmed digest mismatches (scrub or verified read).
+    pub corrupt_detected: u64,
+    /// Quarantined pages replaced with a verified durable copy.
+    pub healed: u64,
+    /// Pages that entered quarantine.
+    pub quarantined: u64,
     /// Blocks resident in the cache at snapshot time.
     pub cached_blocks: u64,
     /// Uncompressed bytes resident in the cache at snapshot time.
@@ -494,6 +538,36 @@ impl CacheTotals {
     }
 }
 
+/// Service-wide integrity-plane totals: the sum of the per-shard
+/// snapshots, same no-second-counter rule as [`CacheTotals`]. All four
+/// are monotonic event counters (quarantine *entries*, not residency),
+/// so the network STATS vector can export them append-only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct IntegrityTotals {
+    /// Pages whose image digest was re-verified.
+    pub scrubbed: u64,
+    /// Confirmed digest mismatches (scrub or verified read).
+    pub corrupt_detected: u64,
+    /// Quarantined pages replaced with a verified durable copy.
+    pub healed: u64,
+    /// Pages that entered quarantine.
+    pub quarantined: u64,
+}
+
+impl IntegrityTotals {
+    /// Sum the per-shard snapshots into service totals.
+    pub fn from_shards(shards: &[ShardMetricsSnapshot]) -> Self {
+        let mut t = IntegrityTotals::default();
+        for s in shards {
+            t.scrubbed += s.scrubbed;
+            t.corrupt_detected += s.corrupt_detected;
+            t.healed += s.healed;
+            t.quarantined += s.quarantined;
+        }
+        t
+    }
+}
+
 #[cfg(test)]
 mod shard_tests {
     use super::*;
@@ -563,6 +637,30 @@ mod shard_tests {
         assert_eq!(t.dirty_bytes, 64);
         assert!((t.hit_rate() - 0.6).abs() < 1e-12);
         assert_eq!(CacheTotals::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn integrity_counters_accumulate_sum_and_survive_absorb() {
+        let a = ShardMetrics::new();
+        a.scrubbed();
+        a.scrubbed();
+        a.corrupt_detected();
+        a.quarantined();
+        let b = ShardMetrics::new();
+        b.scrubbed();
+        b.healed();
+        let snaps =
+            vec![a.snapshot(0, 0, 0, 0, CacheGauges::default()), b.snapshot(1, 0, 0, 0, CacheGauges::default())];
+        assert_eq!(snaps[0].scrubbed, 2);
+        assert_eq!(snaps[0].corrupt_detected, 1);
+        assert_eq!(snaps[0].quarantined, 1);
+        assert_eq!(snaps[1].healed, 1);
+        let t = IntegrityTotals::from_shards(&snaps);
+        assert_eq!(t, IntegrityTotals { scrubbed: 3, corrupt_detected: 1, healed: 1, quarantined: 1 });
+        // a shard resize folds retired shards' history in
+        a.absorb(&b);
+        let s = a.snapshot(0, 0, 0, 0, CacheGauges::default());
+        assert_eq!((s.scrubbed, s.healed), (3, 1));
     }
 }
 

@@ -50,6 +50,14 @@
 //!   none of that code runs (DESIGN.md §12). Shard count is elastic
 //!   either way: [`store::ShardedPageStore::resize_shards`] retopologizes
 //!   online while concurrent GETs/PUTs queue behind one lock.
+//! * **Corruption is detected, fenced, and healed.** An optional
+//!   integrity plane ([`store::ShardedPageStore::with_integrity`],
+//!   DESIGN.md §13) keeps an incrementally maintained CRC-32 digest per
+//!   page; a budgeted background scrubber re-verifies them, failed
+//!   pages are quarantined (every read answers
+//!   [`crate::Error::DataLoss`], never possibly-wrong bytes) and healed
+//!   from durable state when persistence is on. Off by default — the
+//!   side maps stay empty and no path changes.
 
 pub mod analyzer;
 pub mod cache;
@@ -60,7 +68,8 @@ pub mod store;
 pub use analyzer::Analyzer;
 pub use cache::{BlockCache, EvictedBlock};
 pub use metrics::{
-    CacheGauges, CacheTotals, Metrics, MetricsSnapshot, ShardMetrics, ShardMetricsSnapshot,
+    CacheGauges, CacheTotals, IntegrityTotals, Metrics, MetricsSnapshot, ShardMetrics,
+    ShardMetricsSnapshot,
 };
 pub use service::{CompressionService, ServiceConfig};
-pub use store::{PageStore, ShardedPageStore, StoredPage};
+pub use store::{IntegrityConfig, PageStore, ScrubOutcome, ShardedPageStore, StoredPage};

@@ -36,8 +36,8 @@
 
 use super::analyzer::Analyzer;
 use crate::cluster::{BaseSelector, SelectorKind};
-use super::metrics::{CacheTotals, Metrics, MetricsSnapshot, ShardMetricsSnapshot};
-use super::store::{ShardedPageStore, StoredPage};
+use super::metrics::{CacheTotals, IntegrityTotals, Metrics, MetricsSnapshot, ShardMetricsSnapshot};
+use super::store::{IntegrityConfig, ScrubOutcome, ShardedPageStore, StoredPage};
 use crate::codec::{BlockCodec, Scratch};
 use crate::frame::Frame;
 use crate::gbdi::table::GlobalBaseTable;
@@ -97,6 +97,16 @@ pub struct ServiceConfig {
     /// shutdown. `None` (the default) keeps every serving path
     /// bit-identical to a persistence-free build.
     pub persist: Option<Arc<Durability>>,
+    /// In-memory integrity plane (`[integrity]` config section,
+    /// DESIGN.md §13): per-page CRC digests maintained incrementally by
+    /// the store ([`ShardedPageStore::with_integrity`]), optional
+    /// verification on every read, and a background scrubber paced to
+    /// [`IntegrityConfig::scrub_mib_s`]. Pages that fail verification
+    /// are quarantined — reads answer [`crate::Error::DataLoss`], never
+    /// possibly-wrong bytes — and healed from durable state when
+    /// [`ServiceConfig::persist`] is attached. Disabled by default:
+    /// every path stays bit-identical to a digest-free build.
+    pub integrity: IntegrityConfig,
 }
 
 impl Default for ServiceConfig {
@@ -114,6 +124,7 @@ impl Default for ServiceConfig {
             ingest_batch: 32,
             cache_bytes: 0,
             persist: None,
+            integrity: IntegrityConfig::default(),
         }
     }
 }
@@ -169,6 +180,7 @@ pub struct CompressionService {
     tx: Option<Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
     analyzer: Option<JoinHandle<()>>,
+    scrubber: Option<JoinHandle<()>>,
 }
 
 impl CompressionService {
@@ -241,6 +253,10 @@ impl CompressionService {
                 store
             }
         };
+        // attach the integrity plane to whichever store we ended up with
+        // (no-op builder when disabled): a recovered store gets its
+        // digests backfilled here, so scrubbing covers recovered pages
+        let store = store.with_integrity(config.integrity.clone());
         let first_version = store
             .codecs()
             .iter()
@@ -285,11 +301,24 @@ impl CompressionService {
                 .expect("spawn analyzer")
         });
 
+        let scrubber_handle = if config.integrity.enabled {
+            let scrub_shared = Arc::clone(&shared);
+            Some(
+                std::thread::Builder::new()
+                    .name("gbdi-scrub".into())
+                    .spawn(move || scrub_loop(scrub_shared))
+                    .expect("spawn scrubber"),
+            )
+        } else {
+            None
+        };
+
         Ok(CompressionService {
             shared,
             tx: Some(tx),
             workers,
             analyzer: analyzer_handle,
+            scrubber: scrubber_handle,
         })
     }
 
@@ -327,8 +356,14 @@ impl CompressionService {
     }
 
     /// Read back a page (bit-exact), whatever codec version encoded it.
+    /// A page quarantined by the integrity plane is healed from durable
+    /// state first when persistence is attached; only when no durable
+    /// copy exists does the caller see [`crate::Error::DataLoss`].
     pub fn read_page(&self, page_id: u64) -> Result<Vec<u8>> {
-        let r = self.shared.store.read(page_id);
+        let mut r = self.shared.store.read(page_id);
+        if matches!(r, Err(crate::Error::DataLoss(_))) && try_heal(&self.shared, page_id) {
+            r = self.shared.store.read(page_id);
+        }
         if r.is_err() {
             self.shared.metrics.read_error();
         }
@@ -339,7 +374,10 @@ impl CompressionService {
     /// and refilled, so a loop reusing one `Vec` decompresses page after
     /// page without allocating once the buffer has grown to page size.
     pub fn read_page_into(&self, page_id: u64, out: &mut Vec<u8>) -> Result<()> {
-        let r = self.shared.store.read_into(page_id, out);
+        let mut r = self.shared.store.read_into(page_id, out);
+        if matches!(r, Err(crate::Error::DataLoss(_))) && try_heal(&self.shared, page_id) {
+            r = self.shared.store.read_into(page_id, out);
+        }
         if r.is_err() {
             self.shared.metrics.read_error();
         }
@@ -354,7 +392,10 @@ impl CompressionService {
     /// [`ShardMetricsSnapshot`].
     pub fn read_block(&self, page_id: u64, block: usize, out: &mut [u8]) -> Result<usize> {
         let t0 = Instant::now();
-        let r = self.shared.store.read_block(page_id, block, out);
+        let mut r = self.shared.store.read_block(page_id, block, out);
+        if matches!(r, Err(crate::Error::DataLoss(_))) && try_heal(&self.shared, page_id) {
+            r = self.shared.store.read_block(page_id, block, out);
+        }
         if r.is_err() {
             self.shared.metrics.read_error();
         } else {
@@ -371,7 +412,33 @@ impl CompressionService {
     /// [`ShardMetricsSnapshot`].
     pub fn write_block(&self, page_id: u64, block: usize, data: &[u8]) -> Result<()> {
         let t0 = Instant::now();
-        let r = match &self.shared.config.persist {
+        let mut r = self.write_block_logged(page_id, block, data);
+        // a quarantined page rejects block writes (the rest of its image
+        // is untrustworthy); heal it from durable state and retry. The
+        // retried write re-logs its WAL record — replay applies absolute
+        // block writes idempotently, so the duplicate is harmless.
+        if matches!(r, Err(crate::Error::DataLoss(_))) && try_heal(&self.shared, page_id) {
+            r = self.write_block_logged(page_id, block, data);
+        }
+        match r {
+            Ok(_) => {
+                self.shared.metrics.block_write(t0.elapsed().as_nanos() as u64);
+                Ok(())
+            }
+            Err(e) => {
+                self.shared.metrics.write_error();
+                Err(e)
+            }
+        }
+    }
+
+    fn write_block_logged(
+        &self,
+        page_id: u64,
+        block: usize,
+        data: &[u8],
+    ) -> Result<crate::frame::BlockWrite> {
+        match &self.shared.config.persist {
             None => self.shared.store.write_block(page_id, block, data),
             Some(d) => {
                 // log-before-apply under the gate; a log failure fails
@@ -391,16 +458,6 @@ impl CompressionService {
                     let _ = d.maybe_checkpoint(&self.shared.store);
                 }
                 logged
-            }
-        };
-        match r {
-            Ok(_) => {
-                self.shared.metrics.block_write(t0.elapsed().as_nanos() as u64);
-                Ok(())
-            }
-            Err(e) => {
-                self.shared.metrics.write_error();
-                Err(e)
             }
         }
     }
@@ -463,6 +520,44 @@ impl CompressionService {
     /// the number of blocks recompressed. No-op without a cache.
     pub fn flush_cache(&self) -> usize {
         self.shared.store.flush_cache()
+    }
+
+    /// Service-wide integrity counters — pages scrubbed, corruptions
+    /// detected, pages healed, pages quarantined — the exact sum of the
+    /// per-shard numbers in [`Self::shard_metrics`]. All zeros with the
+    /// integrity plane off.
+    pub fn integrity_totals(&self) -> IntegrityTotals {
+        self.shared.store.integrity_totals()
+    }
+
+    /// Page ids currently fenced by the integrity plane (sorted). A page
+    /// leaves this set when it is healed from durable state or fully
+    /// overwritten by a PUT.
+    pub fn quarantined_pages(&self) -> Vec<u64> {
+        self.shared.store.quarantined_pages()
+    }
+
+    /// Re-verify one page's digest right now, off the scrubber's
+    /// schedule. On a corrupt outcome the durable heal is attempted
+    /// immediately (when persistence is attached). Returns
+    /// [`ScrubOutcome::Skipped`] when the integrity plane is off, the
+    /// page is absent, or it is already quarantined.
+    pub fn scrub_page(&self, page_id: u64) -> ScrubOutcome {
+        let out = self.shared.store.scrub_page(page_id);
+        if matches!(out, ScrubOutcome::Corrupt { .. }) {
+            try_heal(&self.shared, page_id);
+        }
+        out
+    }
+
+    /// Test-only chaos hook: flip one stored bit of `page_id`'s
+    /// compressed image (`gbdi serve --chaos-corrupt`, the CI chaos
+    /// smoke, and `tests/integrity.rs`). Returns whether a bit was
+    /// flipped. Hidden because it exists to *create* the corruption the
+    /// integrity plane detects.
+    #[doc(hidden)]
+    pub fn corrupt_page_block(&self, page_id: u64, block: usize, bit: u64) -> bool {
+        self.shared.store.corrupt_page_block(page_id, block, bit)
     }
 
     /// Stored/logical byte accounting: (logical, stored, ratio). One
@@ -534,6 +629,9 @@ impl CompressionService {
         }
         if let Some(a) = self.analyzer.take() {
             let _ = a.join();
+        }
+        if let Some(s) = self.scrubber.take() {
+            let _ = s.join();
         }
         if let Some(d) = &self.shared.config.persist {
             let _ = d.checkpoint(&self.shared.store);
@@ -678,6 +776,73 @@ fn analyzer_loop(shared: Arc<Shared>, analyzer: &mut Analyzer) {
             // store-wide stall
             shared.store.publish_codec(Arc::clone(&new_codec));
             *shared.codec.write().unwrap() = new_codec;
+        }
+    }
+}
+
+/// Try to restore a quarantined page from durable state: read its image
+/// back through the targeted recovery path
+/// ([`Durability::read_page`](crate::persist::Durability::read_page))
+/// and hand it to [`ShardedPageStore::heal_page`], which re-verifies
+/// and installs it only if the page is still fenced. Returns whether
+/// the page was healed. `false` without persistence — there is nothing
+/// to heal from, and the quarantine stands.
+fn try_heal(shared: &Shared, page_id: u64) -> bool {
+    let Some(d) = &shared.config.persist else {
+        return false;
+    };
+    match d.read_page(page_id) {
+        // heal_page re-verifies the candidate, counts the heal in that
+        // shard's metrics, and installs only if the page is still fenced
+        Ok(Some(page)) => shared.store.heal_page(page_id, page),
+        _ => false,
+    }
+}
+
+/// The background scrubber (integrity plane on): walk the shards
+/// round-robin re-verifying every resident page's digest, paced so the
+/// verification work stays under `scrub_mib_s` of compressed bytes per
+/// second — after each page the thread sleeps off that page's share of
+/// the budget, so scrubbing never bursts ahead of foreground traffic.
+/// A page that fails is quarantined by the store; with persistence
+/// attached the heal is attempted immediately. Shutdown is polled
+/// between pages so the thread joins promptly.
+fn scrub_loop(shared: Arc<Shared>) {
+    let rate = shared.config.integrity.scrub_mib_s.max(1).saturating_mul(1 << 20);
+    let mut shard_idx = 0usize;
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        let n = shared.store.shard_count();
+        if shard_idx >= n {
+            shard_idx = 0;
+        }
+        let ids = shared.store.shard_page_ids(shard_idx);
+        shard_idx += 1;
+        if ids.is_empty() {
+            // nothing resident in this shard: idle briefly instead of
+            // spinning over an empty store
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            continue;
+        }
+        for id in ids {
+            if shared.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            let bytes = match shared.store.scrub_page(id) {
+                ScrubOutcome::Clean { bytes } => bytes,
+                ScrubOutcome::Corrupt { bytes } => {
+                    try_heal(&shared, id);
+                    bytes
+                }
+                ScrubOutcome::Skipped => 0,
+            };
+            // charge every scrub at least a token cost so a store full
+            // of quarantined (Skipped) pages still paces instead of
+            // spinning hot
+            let ns = (bytes.max(256) as u64).saturating_mul(1_000_000_000) / rate;
+            std::thread::sleep(std::time::Duration::from_nanos(ns));
         }
     }
 }
@@ -1001,6 +1166,59 @@ mod tests {
         assert_eq!(t.deferred_flushes, 1);
         assert_eq!(t.dirty_blocks, 0, "flush leaves the cache clean");
         assert!(t.cached_bytes > 0, "flushed blocks stay resident");
+    }
+
+    #[test]
+    fn integrity_service_detects_quarantines_and_recovers_via_put() {
+        let svc = CompressionService::start_static(
+            ServiceConfig {
+                workers: 1,
+                shards: 2,
+                integrity: IntegrityConfig { enabled: true, verify_reads: true, scrub_mib_s: 64 },
+                ..Default::default()
+            },
+            Arc::new(crate::baselines::bdi::Bdi::default()),
+        )
+        .unwrap();
+        let w = workloads::by_name("mcf").unwrap();
+        for i in 0..8u64 {
+            svc.submit(i, w.generate(4096, i));
+        }
+        svc.flush();
+        // clean store: verified reads serve, the scrubber makes progress
+        for i in 0..8u64 {
+            assert_eq!(svc.read_page(i).unwrap(), w.generate(4096, i), "page {i}");
+        }
+        for _ in 0..400 {
+            if svc.integrity_totals().scrubbed >= 8 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(svc.integrity_totals().scrubbed >= 8, "scrubber never covered the store");
+        assert_eq!(svc.integrity_totals().corrupt_detected, 0);
+        // flip one stored bit: whichever detector gets there first (the
+        // scrubber or the next verified read) fences the page exactly once
+        assert!(
+            (0..64).any(|b| svc.corrupt_page_block(3, b, 1)),
+            "no stored bits to corrupt"
+        );
+        let r = svc.read_page(3);
+        assert!(matches!(r, Err(crate::Error::DataLoss(_))), "got {r:?}");
+        let t = svc.integrity_totals();
+        assert_eq!(t.corrupt_detected, 1);
+        assert_eq!(t.quarantined, 1);
+        assert_eq!(t.healed, 0, "no durable copy exists to heal from");
+        assert_eq!(svc.quarantined_pages(), vec![3]);
+        // unrelated pages keep serving
+        assert_eq!(svc.read_page(2).unwrap(), w.generate(4096, 2));
+        // a full-page overwrite supersedes the lost content and lifts
+        // the fence
+        svc.submit(3, w.generate(4096, 99));
+        svc.flush();
+        assert_eq!(svc.read_page(3).unwrap(), w.generate(4096, 99));
+        assert!(svc.quarantined_pages().is_empty());
+        svc.shutdown();
     }
 
     #[test]

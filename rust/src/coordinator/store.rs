@@ -36,13 +36,26 @@
 //! cache mutex is always acquired *before* its state lock, so eviction
 //! flushes can take the state lock without deadlocking. With the cache
 //! off (the default), every code path is byte-identical to before.
+//!
+//! An optional **integrity plane**
+//! ([`ShardedPageStore::with_integrity`], DESIGN.md §13) keeps one
+//! CRC-32 digest per page beside the frames — maintained
+//! *incrementally* on block writes (`crc ^= old_term ^ new_term`,
+//! O(block)) so the hot path never re-hashes a page — and fences pages
+//! whose digest stops matching: quarantined pages answer every read
+//! and write with [`Error::DataLoss`] until
+//! [`ShardedPageStore::heal_page`] installs a verified copy recovered
+//! from durable state. With integrity off (the default), the side maps
+//! stay empty and every code path is byte-identical to before.
 
 use super::cache::{BlockCache, EvictedBlock};
-use super::metrics::{CacheGauges, CacheTotals, ShardMetrics, ShardMetricsSnapshot};
+use super::metrics::{
+    CacheGauges, CacheTotals, IntegrityTotals, ShardMetrics, ShardMetricsSnapshot,
+};
 use crate::codec::{BlockCodec, Scratch};
 use crate::frame::{BlockWrite, Frame};
 use crate::{Error, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
@@ -214,15 +227,104 @@ impl PageStore {
 }
 
 /// One shard's mutable state: its slice of the page map plus the
-/// scratch buffers the block-write path reuses under the shard lock.
+/// scratch buffers the block-write path reuses under the shard lock,
+/// plus the integrity side state (both maps stay empty with the
+/// integrity plane off, so the presence of a `crcs` entry is itself
+/// the per-page "digest is maintained" gate).
 struct PageShard {
     pages: HashMap<u64, StoredPage>,
     scratch: Scratch,
+    /// page id -> CRC-32 digest of the page's compressed image
+    /// ([`Frame::image_crc`]), kept current by every frame mutation.
+    crcs: HashMap<u64, u32>,
+    /// Pages whose digest failed verification: fenced from every read
+    /// and write until healed, overwritten, or removed.
+    quarantined: HashSet<u64>,
 }
 
 impl Default for PageShard {
     fn default() -> Self {
-        PageShard { pages: HashMap::new(), scratch: Scratch::new() }
+        PageShard {
+            pages: HashMap::new(),
+            scratch: Scratch::new(),
+            crcs: HashMap::new(),
+            quarantined: HashSet::new(),
+        }
+    }
+}
+
+/// Integrity-plane configuration (DESIGN.md §13). Off by default — the
+/// store then keeps no digests and every path behaves exactly as
+/// before.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IntegrityConfig {
+    /// Maintain per-page digests and fence pages that fail them.
+    pub enabled: bool,
+    /// Verify a page's digest on the read paths before serving from its
+    /// compressed frame (whole-page reads *and* block-read decode
+    /// misses). Strong "never serve silently-wrong data" mode; costs an
+    /// O(page) hash per frame decode, quantified by the
+    /// `concurrent_serving` bench's integrity arm. With this off,
+    /// detection falls to the background scrubber.
+    pub verify_reads: bool,
+    /// Background scrub budget in MiB/s of compressed image re-hashed
+    /// (0 disables the scrubber thread).
+    pub scrub_mib_s: u64,
+}
+
+impl Default for IntegrityConfig {
+    fn default() -> Self {
+        IntegrityConfig { enabled: false, verify_reads: true, scrub_mib_s: 8 }
+    }
+}
+
+/// What [`ShardedPageStore::scrub_page`] found. `bytes` is the
+/// compressed image size hashed, which the scrubber counts against its
+/// bytes/sec budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScrubOutcome {
+    /// Digest verified clean.
+    Clean {
+        /// Compressed bytes hashed.
+        bytes: usize,
+    },
+    /// Digest mismatch confirmed under the exclusive lock: the page is
+    /// now quarantined.
+    Corrupt {
+        /// Compressed bytes hashed.
+        bytes: usize,
+    },
+    /// Nothing to verify: integrity off, page missing, already
+    /// quarantined, or a racing write refreshed the digest.
+    Skipped,
+}
+
+/// The standard fence error a quarantined page answers with.
+fn data_loss(page_id: u64) -> Error {
+    Error::DataLoss(format!("page {page_id} failed integrity verification and is quarantined"))
+}
+
+/// The CRC term `block` contributes to its page's image digest right
+/// now, or 0 when the page carries no digest / the block is out of
+/// range. Captured *before* a frame mutation and XORed back out by
+/// [`fold_crc`].
+fn crc_term(crcs: &HashMap<u64, u32>, id: u64, frame: &Frame, block: usize) -> u32 {
+    if crcs.contains_key(&id) && block < frame.n_blocks() {
+        frame.block_crc(block)
+    } else {
+        0
+    }
+}
+
+/// Fold one block's digest delta into its page's image CRC — the
+/// O(block) incremental update (DESIGN.md §13): `crc ^= old_term ^
+/// new_term`. A no-op when the page carries no digest, and also when
+/// the mutation failed without touching the frame (old and new terms
+/// cancel).
+fn fold_crc(crcs: &mut HashMap<u64, u32>, id: u64, old_term: u32, frame: &Frame, block: usize) {
+    if let Some(crc) = crcs.get_mut(&id) {
+        let new_term = if block < frame.n_blocks() { frame.block_crc(block) } else { 0 };
+        *crc ^= old_term ^ new_term;
     }
 }
 
@@ -286,6 +388,9 @@ pub struct ShardedPageStore {
     /// Total cache budget [`Self::with_cache`] was given — remembered so
     /// a resize can re-split it across the new shard count.
     cache_bytes: usize,
+    /// Integrity-plane configuration; `None` = off (the default), and
+    /// the per-shard digest maps then stay empty.
+    integrity: Option<IntegrityConfig>,
 }
 
 impl ShardedPageStore {
@@ -305,6 +410,7 @@ impl ShardedPageStore {
             codecs: RwLock::new(HashMap::new()),
             auto_compact: true,
             cache_bytes: 0,
+            integrity: None,
         }
     }
 
@@ -342,6 +448,44 @@ impl ShardedPageStore {
     /// Whether the hot-block cache tier is on.
     pub fn cache_enabled(&self) -> bool {
         self.cache_bytes > 0
+    }
+
+    /// Turn on the integrity plane (consuming builder; call at
+    /// construction, before the store is shared). Computes a digest for
+    /// every page already resident — a store recovered from durable
+    /// state starts fully covered, not just pages written afterwards.
+    /// A config with `enabled: false` leaves the plane off.
+    pub fn with_integrity(mut self, cfg: IntegrityConfig) -> Self {
+        if !cfg.enabled {
+            self.integrity = None;
+            return self;
+        }
+        for shard in self.shards.get_mut().unwrap().iter_mut() {
+            let state = shard.state.get_mut().unwrap();
+            let PageShard { pages, crcs, .. } = state;
+            crcs.clear();
+            for (&id, p) in pages.iter() {
+                crcs.insert(id, p.frame.image_crc());
+            }
+        }
+        self.integrity = Some(cfg);
+        self
+    }
+
+    /// Whether the integrity plane is on.
+    pub fn integrity_enabled(&self) -> bool {
+        self.integrity.is_some()
+    }
+
+    /// The active integrity configuration (`None` = off) — the
+    /// service's scrubber reads its budget from here.
+    pub fn integrity_config(&self) -> Option<&IntegrityConfig> {
+        self.integrity.as_ref()
+    }
+
+    /// Whether read paths verify digests before serving from frames.
+    fn verify_reads(&self) -> bool {
+        self.integrity.as_ref().is_some_and(|i| i.verify_reads)
     }
 
     /// Number of shards.
@@ -419,6 +563,9 @@ impl ShardedPageStore {
             "page references unpublished codec v{}",
             page.codec_version()
         );
+        // hash the fresh image before taking any lock: O(page) work the
+        // shard must not serialize behind
+        let crc = self.integrity.as_ref().map(|_| page.frame.image_crc());
         let shards = self.shards.read().unwrap();
         let shard = &shards[Self::route(page_id, shards.len())];
         let mut cache = shard.cache.as_ref().map(|c| c.lock().unwrap());
@@ -426,6 +573,11 @@ impl ShardedPageStore {
         let t0 = Instant::now();
         if let Some(cache) = cache.as_deref_mut() {
             cache.invalidate_page(page_id);
+        }
+        if let Some(crc) = crc {
+            state.crcs.insert(page_id, crc);
+            // a full-page overwrite supersedes lost content entirely
+            state.quarantined.remove(&page_id);
         }
         state.pages.insert(page_id, page);
         shard.metrics.lock_hold(t0.elapsed().as_nanos() as u64);
@@ -448,9 +600,12 @@ impl ShardedPageStore {
         }
         let shards = self.shards.read().unwrap();
         let n = shards.len();
-        let mut by_shard: Vec<Vec<(u64, StoredPage)>> = (0..n).map(|_| Vec::new()).collect();
+        // digests are hashed here, outside every shard lock
+        let mut by_shard: Vec<Vec<(u64, Option<u32>, StoredPage)>> =
+            (0..n).map(|_| Vec::new()).collect();
         for (id, page) in pages {
-            by_shard[Self::route(id, n)].push((id, page));
+            let crc = self.integrity.as_ref().map(|_| page.frame.image_crc());
+            by_shard[Self::route(id, n)].push((id, crc, page));
         }
         for (idx, group) in by_shard.into_iter().enumerate() {
             if group.is_empty() {
@@ -460,9 +615,13 @@ impl ShardedPageStore {
             let mut cache = shard.cache.as_ref().map(|c| c.lock().unwrap());
             let mut state = shard.state.write().unwrap();
             let t0 = Instant::now();
-            for (id, page) in group {
+            for (id, crc, page) in group {
                 if let Some(cache) = cache.as_deref_mut() {
                     cache.invalidate_page(id);
+                }
+                if let Some(crc) = crc {
+                    state.crcs.insert(id, crc);
+                    state.quarantined.remove(&id);
                 }
                 state.pages.insert(id, page);
             }
@@ -482,7 +641,7 @@ impl ShardedPageStore {
         if let Some(cache) = cache.as_deref_mut() {
             let dirty = cache.dirty_blocks_of_page(page_id);
             if !dirty.is_empty() {
-                let PageShard { pages, scratch } = &mut *state;
+                let PageShard { pages, scratch, .. } = &mut *state;
                 if let Some(page) = pages.get_mut(&page_id) {
                     for b in &dirty {
                         if let Some(data) = cache.data_of((page_id, *b)) {
@@ -497,6 +656,8 @@ impl ShardedPageStore {
             }
             cache.invalidate_page(page_id);
         }
+        state.crcs.remove(&page_id);
+        state.quarantined.remove(&page_id);
         let removed = state.pages.remove(&page_id);
         shard.metrics.lock_hold(t0.elapsed().as_nanos() as u64);
         removed
@@ -548,26 +709,40 @@ impl ShardedPageStore {
         let mut state = shard.state.write().unwrap();
         let held = Instant::now();
         let r = {
-            let PageShard { pages, scratch } = &mut *state;
-            match pages.get_mut(&page_id) {
-                Some(page) => {
-                    // out-of-range blocks fall through to the
-                    // frame's own range error below
-                    let old = if block < page.frame.n_blocks() {
-                        page.frame.block_bits(block)
-                    } else {
-                        0
-                    };
-                    let wr = page.frame.write_block(block, data, scratch);
-                    if wr.is_ok()
-                        && self.auto_compact
-                        && page.frame.patch_len() * 2 > page.frame.compressed_len()
-                    {
-                        page.frame.compact();
+            let PageShard { pages, scratch, crcs, quarantined } = &mut *state;
+            if quarantined.contains(&page_id) {
+                // building a partial write on corrupt content would
+                // launder the corruption; the page must be healed or
+                // fully overwritten first
+                Err(data_loss(page_id))
+            } else {
+                match pages.get_mut(&page_id) {
+                    Some(page) => {
+                        // out-of-range blocks fall through to the
+                        // frame's own range error below
+                        let old = if block < page.frame.n_blocks() {
+                            page.frame.block_bits(block)
+                        } else {
+                            0
+                        };
+                        let old_term = crc_term(crcs, page_id, &page.frame, block);
+                        let wr = page.frame.write_block(block, data, scratch);
+                        if wr.is_ok() {
+                            fold_crc(crcs, page_id, old_term, &page.frame, block);
+                            if self.auto_compact
+                                && page.frame.patch_len() * 2 > page.frame.compressed_len()
+                            {
+                                // compaction relocates slots without
+                                // changing any block's logical bits, so
+                                // the digest is invariant (frame.rs
+                                // pins this)
+                                page.frame.compact();
+                            }
+                        }
+                        wr.map(|wr| (old, wr))
                     }
-                    wr.map(|wr| (old, wr))
+                    None => Err(Error::Corrupt(format!("page {page_id} not found"))),
                 }
-                None => Err(Error::Corrupt(format!("page {page_id} not found"))),
             }
         };
         shard.metrics.lock_hold(held.elapsed().as_nanos() as u64);
@@ -598,9 +773,15 @@ impl ShardedPageStore {
                     data.len()
                 )));
             }
+            let state = shard.state.read().unwrap();
+            // quarantine invalidates a page's cached blocks under this
+            // cache mutex, so a resident entry implies not-quarantined;
+            // the check is belt-and-suspenders for the fence invariant
+            if self.integrity.is_some() && state.quarantined.contains(&page_id) {
+                return Err(data_loss(page_id));
+            }
             cache.absorb_write(key, data);
             shard.metrics.cache_hit();
-            let state = shard.state.read().unwrap();
             let bits = match state.pages.get(&page_id) {
                 Some(p) if block < p.frame.n_blocks() => p.frame.block_bits(block),
                 _ => 0,
@@ -630,19 +811,22 @@ impl ShardedPageStore {
         let mut state = shard.state.write().unwrap();
         let t0 = Instant::now();
         let r = {
-            let PageShard { pages, scratch } = &mut *state;
+            let PageShard { pages, scratch, crcs, .. } = &mut *state;
             let mut out = Ok(());
             for ev in &dirty {
                 // invariant: a cached entry's page is live (remove/put
-                // invalidate under the cache mutex we are holding)
+                // invalidate under the cache mutex we are holding), and
+                // never quarantined (quarantine invalidates too)
                 let Some(page) = pages.get_mut(&ev.page_id) else {
                     out = Err(Error::Corrupt(format!("page {} not found", ev.page_id)));
                     break;
                 };
+                let old_term = crc_term(crcs, ev.page_id, &page.frame, ev.block as usize);
                 if let Err(e) = page.frame.write_block(ev.block as usize, &ev.data, scratch) {
                     out = Err(e);
                     break;
                 }
+                fold_crc(crcs, ev.page_id, old_term, &page.frame, ev.block as usize);
                 if self.auto_compact && page.frame.patch_len() * 2 > page.frame.compressed_len() {
                     page.frame.compact();
                 }
@@ -692,11 +876,14 @@ impl ShardedPageStore {
             let mut state = shard.state.write().unwrap();
             let t0 = Instant::now();
             {
-                let PageShard { pages, scratch } = &mut *state;
+                let PageShard { pages, scratch, crcs, quarantined } = &mut *state;
                 // re-check under the exclusive guard: the page may have
-                // been removed or already migrated since the snapshot
+                // been removed or already migrated since the snapshot.
+                // Quarantined pages are skipped — re-encoding a corrupt
+                // frame would launder the corruption under a fresh
+                // digest; they migrate after healing.
                 if let Some(page) = pages.get_mut(&id) {
-                    if page.codec_version() < target {
+                    if page.codec_version() < target && !quarantined.contains(&id) {
                         // fold deferred cached writes into the frame
                         // first, or the re-encode would resurrect stale
                         // content; clean cached copies stay valid since
@@ -717,6 +904,11 @@ impl ShardedPageStore {
                         }
                         let data = page.frame.decompress()?;
                         page.frame = Frame::compress_with(Arc::clone(codec), &data, scratch);
+                        // the image changed wholesale: recompute rather
+                        // than fold
+                        if crcs.contains_key(&id) {
+                            crcs.insert(id, page.frame.image_crc());
+                        }
                         moved += 1;
                     }
                 }
@@ -759,23 +951,40 @@ impl ShardedPageStore {
     pub fn read_into(&self, page_id: u64, out: &mut Vec<u8>) -> Result<()> {
         let shards = self.shards.read().unwrap();
         let shard = &shards[Self::route(page_id, shards.len())];
-        let cache = shard.cache.as_ref().map(|c| c.lock().unwrap());
-        let state = shard.state.read().unwrap();
-        let p = match state.pages.get(&page_id) {
-            Some(p) => p,
-            None => return Err(Error::Corrupt(format!("page {page_id} not found"))),
-        };
-        p.frame.decompress_into(out)?;
-        if let Some(cache) = &cache {
-            let bb = p.frame.block_bytes();
-            for b in cache.dirty_blocks_of_page(page_id) {
-                if let Some(data) = cache.data_of((page_id, b)) {
-                    let off = b as usize * bb;
-                    out[off..off + data.len()].copy_from_slice(data);
+        loop {
+            {
+                let cache = shard.cache.as_ref().map(|c| c.lock().unwrap());
+                let state = shard.state.read().unwrap();
+                if self.integrity.is_some() && state.quarantined.contains(&page_id) {
+                    return Err(data_loss(page_id));
+                }
+                let p = match state.pages.get(&page_id) {
+                    Some(p) => p,
+                    None => return Err(Error::Corrupt(format!("page {page_id} not found"))),
+                };
+                let clean = match state.crcs.get(&page_id) {
+                    Some(&want) if self.verify_reads() => p.frame.image_crc() == want,
+                    _ => true,
+                };
+                if clean {
+                    p.frame.decompress_into(out)?;
+                    if let Some(cache) = &cache {
+                        let bb = p.frame.block_bytes();
+                        for b in cache.dirty_blocks_of_page(page_id) {
+                            if let Some(data) = cache.data_of((page_id, b)) {
+                                let off = b as usize * bb;
+                                out[off..off + data.len()].copy_from_slice(data);
+                            }
+                        }
+                    }
+                    return Ok(());
                 }
             }
+            // the shared-lock digest check failed: fence the page — or
+            // discover a racing legitimate write refreshed the digest,
+            // and retry the read
+            self.quarantine_if_bad(shard, page_id)?;
         }
-        Ok(())
     }
 
     /// Decode one block of a page into `out[..len]`; returns the bytes
@@ -788,18 +997,94 @@ impl ShardedPageStore {
         let shard = &shards[Self::route(page_id, shards.len())];
         let t0 = Instant::now();
         let r = match &shard.cache {
-            None => {
-                let state = shard.state.read().unwrap();
-                match state.pages.get(&page_id) {
-                    Some(p) => p.frame.read_block(block, out),
-                    None => Err(Error::Corrupt(format!("page {page_id} not found"))),
-                }
-            }
+            None => self.read_block_frame(shard, page_id, block, out),
             Some(cache) => self.read_block_via_cache(shard, cache, page_id, block, out),
         };
         if r.is_ok() {
             shard.metrics.block_read(t0.elapsed().as_nanos() as u64);
         }
+        r
+    }
+
+    /// The cacheless block-read path: decode straight from the frame
+    /// under the shard's read lock. With `verify_reads` on, the page's
+    /// digest is re-verified before the decode — an O(page) hash, the
+    /// price of never serving a silently-wrong block (DESIGN.md §13).
+    fn read_block_frame(
+        &self,
+        shard: &Shard,
+        page_id: u64,
+        block: usize,
+        out: &mut [u8],
+    ) -> Result<usize> {
+        loop {
+            {
+                let state = shard.state.read().unwrap();
+                if self.integrity.is_some() && state.quarantined.contains(&page_id) {
+                    return Err(data_loss(page_id));
+                }
+                match state.pages.get(&page_id) {
+                    Some(p) => {
+                        let clean = match state.crcs.get(&page_id) {
+                            Some(&want) if self.verify_reads() => p.frame.image_crc() == want,
+                            _ => true,
+                        };
+                        if clean {
+                            return p.frame.read_block(block, out);
+                        }
+                    }
+                    None => return Err(Error::Corrupt(format!("page {page_id} not found"))),
+                }
+            }
+            self.quarantine_if_bad(shard, page_id)?;
+        }
+    }
+
+    /// A shared-lock digest check failed: re-verify under the exclusive
+    /// lock and fence the page if the mismatch holds. `Err(DataLoss)`
+    /// when the page is now (or already was) quarantined; `Ok(())` when
+    /// the exclusive re-check came back clean — a legitimate writer
+    /// raced the shared-lock check, and the caller retries. Takes the
+    /// shard's cache mutex itself, so callers must have dropped theirs.
+    fn quarantine_if_bad(&self, shard: &Shard, page_id: u64) -> Result<()> {
+        let mut cache = shard.cache.as_ref().map(|c| c.lock().unwrap());
+        self.quarantine_if_bad_locked(shard, cache.as_deref_mut(), page_id)
+    }
+
+    /// [`Self::quarantine_if_bad`] for callers already holding the
+    /// shard's cache mutex (lock order: cache, then state). Dropping
+    /// the page's cached blocks here is what upholds the fence
+    /// invariant — a resident cache entry always belongs to a
+    /// non-quarantined page.
+    fn quarantine_if_bad_locked(
+        &self,
+        shard: &Shard,
+        cache: Option<&mut BlockCache>,
+        page_id: u64,
+    ) -> Result<()> {
+        let mut state = shard.state.write().unwrap();
+        let t0 = Instant::now();
+        let PageShard { pages, crcs, quarantined, .. } = &mut *state;
+        let r = if quarantined.contains(&page_id) {
+            Err(data_loss(page_id))
+        } else {
+            let bad = match (pages.get(&page_id), crcs.get(&page_id)) {
+                (Some(p), Some(&want)) => p.frame.image_crc() != want,
+                _ => false,
+            };
+            if bad {
+                quarantined.insert(page_id);
+                if let Some(cache) = cache {
+                    cache.invalidate_page(page_id);
+                }
+                shard.metrics.corrupt_detected();
+                shard.metrics.quarantined();
+                Err(data_loss(page_id))
+            } else {
+                Ok(())
+            }
+        };
+        shard.metrics.lock_hold(t0.elapsed().as_nanos() as u64);
         r
     }
 
@@ -832,25 +1117,47 @@ impl ShardedPageStore {
             shard.metrics.cache_hit();
             return Ok(n);
         }
-        // miss: decode under the state read lock. The cache mutex stays
-        // held, so a racing remove/put cannot invalidate the page
-        // between this decode and the admission below.
-        let d0 = Instant::now();
-        let n = {
-            let state = shard.state.read().unwrap();
-            match state.pages.get(&page_id) {
-                Some(p) => p.frame.read_block(block, out)?,
-                None => return Err(Error::Corrupt(format!("page {page_id} not found"))),
-            }
-        };
-        let decode_ns = d0.elapsed().as_nanos() as u64;
-        shard.metrics.cache_miss();
-        let mean = shard.metrics.block_read_mean_ns();
-        let hot = mean > 0.0 && decode_ns as f64 >= mean;
-        let evicted = cache.insert(key, out[..n].to_vec(), false, hot);
-        shard.metrics.cache_admission();
-        self.flush_evicted(shard, evicted)?;
-        Ok(n)
+        loop {
+            // miss: decode under the state read lock. The cache mutex
+            // stays held, so a racing remove/put cannot invalidate the
+            // page between this decode and the admission below. With
+            // `verify_reads` on, the digest is checked before the
+            // decode, so only verified content is ever admitted — a
+            // resident cache entry needs no re-verification.
+            let d0 = Instant::now();
+            let decoded = {
+                let state = shard.state.read().unwrap();
+                if self.integrity.is_some() && state.quarantined.contains(&page_id) {
+                    return Err(data_loss(page_id));
+                }
+                match state.pages.get(&page_id) {
+                    Some(p) => {
+                        let clean = match state.crcs.get(&page_id) {
+                            Some(&want) if self.verify_reads() => p.frame.image_crc() == want,
+                            _ => true,
+                        };
+                        if clean {
+                            Some(p.frame.read_block(block, out)?)
+                        } else {
+                            None
+                        }
+                    }
+                    None => return Err(Error::Corrupt(format!("page {page_id} not found"))),
+                }
+            };
+            let Some(n) = decoded else {
+                self.quarantine_if_bad_locked(shard, Some(&mut cache), page_id)?;
+                continue; // exclusive re-check came back clean: retry
+            };
+            let decode_ns = d0.elapsed().as_nanos() as u64;
+            shard.metrics.cache_miss();
+            let mean = shard.metrics.block_read_mean_ns();
+            let hot = mean > 0.0 && decode_ns as f64 >= mean;
+            let evicted = cache.insert(key, out[..n].to_vec(), false, hot);
+            shard.metrics.cache_admission();
+            self.flush_evicted(shard, evicted)?;
+            return Ok(n);
+        }
     }
 
     /// Current exact encoding length of one block of a page, in bits
@@ -860,6 +1167,9 @@ impl ShardedPageStore {
     pub fn block_bits(&self, page_id: u64, block: usize) -> Result<u32> {
         let shards = self.shards.read().unwrap();
         let state = shards[Self::route(page_id, shards.len())].state.read().unwrap();
+        if self.integrity.is_some() && state.quarantined.contains(&page_id) {
+            return Err(data_loss(page_id));
+        }
         match state.pages.get(&page_id) {
             Some(p) if block < p.frame.n_blocks() => Ok(p.frame.block_bits(block)),
             Some(p) => Err(Error::Config(format!(
@@ -867,6 +1177,123 @@ impl ShardedPageStore {
                 p.frame.n_blocks()
             ))),
             None => Err(Error::Corrupt(format!("page {page_id} not found"))),
+        }
+    }
+
+    // ---- integrity: scrub, quarantine, heal ------------------------------
+
+    /// Re-verify one page's digest — the scrubber's unit of work. The
+    /// verification itself runs under the shard's *read* lock (fully
+    /// concurrent with foreground reads); only a confirmed mismatch
+    /// escalates to the exclusive lock to fence the page.
+    pub fn scrub_page(&self, page_id: u64) -> ScrubOutcome {
+        if self.integrity.is_none() {
+            return ScrubOutcome::Skipped;
+        }
+        let shards = self.shards.read().unwrap();
+        let shard = &shards[Self::route(page_id, shards.len())];
+        let bytes = {
+            let state = shard.state.read().unwrap();
+            if state.quarantined.contains(&page_id) {
+                return ScrubOutcome::Skipped;
+            }
+            match (state.pages.get(&page_id), state.crcs.get(&page_id)) {
+                (Some(p), Some(&want)) => {
+                    let bytes = p.frame.compressed_len();
+                    if p.frame.image_crc() == want {
+                        shard.metrics.scrubbed();
+                        return ScrubOutcome::Clean { bytes };
+                    }
+                    bytes
+                }
+                _ => return ScrubOutcome::Skipped,
+            }
+        };
+        shard.metrics.scrubbed();
+        match self.quarantine_if_bad(shard, page_id) {
+            Err(_) => ScrubOutcome::Corrupt { bytes },
+            // a racing write refreshed the digest between the checks
+            Ok(()) => ScrubOutcome::Skipped,
+        }
+    }
+
+    /// Replace a quarantined page with `page` (recovered from durable
+    /// state), lifting the fence. The replacement's digest is computed
+    /// fresh before any lock — the store trusts nothing it did not hash
+    /// itself. Returns `false` without installing when the page is not
+    /// quarantined (already healed, overwritten by a racing `put`, or
+    /// removed) — the caller drops its candidate.
+    pub fn heal_page(&self, page_id: u64, page: StoredPage) -> bool {
+        if self.integrity.is_none() {
+            return false;
+        }
+        let crc = page.frame.image_crc();
+        let shards = self.shards.read().unwrap();
+        let shard = &shards[Self::route(page_id, shards.len())];
+        let mut cache = shard.cache.as_ref().map(|c| c.lock().unwrap());
+        let mut state = shard.state.write().unwrap();
+        let t0 = Instant::now();
+        if !state.quarantined.remove(&page_id) {
+            return false;
+        }
+        if let Some(cache) = cache.as_deref_mut() {
+            cache.invalidate_page(page_id);
+        }
+        state.crcs.insert(page_id, crc);
+        state.pages.insert(page_id, page);
+        shard.metrics.healed();
+        shard.metrics.lock_hold(t0.elapsed().as_nanos() as u64);
+        true
+    }
+
+    /// Page ids resident in shard `idx`, sorted — the scrubber's walk
+    /// snapshot. An out-of-range index (racing resize) yields an empty
+    /// list.
+    pub fn shard_page_ids(&self, idx: usize) -> Vec<u64> {
+        let shards = self.shards.read().unwrap();
+        let Some(shard) = shards.get(idx) else { return Vec::new() };
+        let mut ids: Vec<u64> = shard.state.read().unwrap().pages.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Ids currently fenced in quarantine, across all shards, sorted.
+    pub fn quarantined_pages(&self) -> Vec<u64> {
+        let mut ids = Vec::new();
+        let shards = self.shards.read().unwrap();
+        for shard in shards.iter() {
+            ids.extend(shard.state.read().unwrap().quarantined.iter().copied());
+        }
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Service-wide integrity totals: the sum of the per-shard
+    /// snapshots.
+    pub fn integrity_totals(&self) -> IntegrityTotals {
+        IntegrityTotals::from_shards(&self.shard_metrics())
+    }
+
+    /// Test/chaos hook: flip one stored bit of `block` of `page_id`
+    /// inside the compressed image, bypassing all digest bookkeeping —
+    /// exactly what a memory fault does. Deferred cached writes are
+    /// flushed first (they were acknowledged; only durable state may
+    /// resurrect them) and the page's cached blocks dropped, so the
+    /// flipped frame is what the next read actually decodes. Returns
+    /// `false` if the page or block does not exist.
+    #[doc(hidden)]
+    pub fn corrupt_page_block(&self, page_id: u64, block: usize, bit: u64) -> bool {
+        self.flush_cache();
+        let shards = self.shards.read().unwrap();
+        let shard = &shards[Self::route(page_id, shards.len())];
+        let mut cache = shard.cache.as_ref().map(|c| c.lock().unwrap());
+        if let Some(cache) = cache.as_deref_mut() {
+            cache.invalidate_page(page_id);
+        }
+        let mut state = shard.state.write().unwrap();
+        match state.pages.get_mut(&page_id) {
+            Some(p) => p.frame.corrupt_block_bit(block, bit),
+            None => false,
         }
     }
 
@@ -973,15 +1400,17 @@ impl ShardedPageStore {
             }
             let mut state = shard.state.write().unwrap();
             let t0 = Instant::now();
-            let PageShard { pages, scratch } = &mut *state;
+            let PageShard { pages, scratch, crcs, .. } = &mut *state;
             for id in dirty_pages {
                 let Some(page) = pages.get_mut(&id) else { continue };
                 let dirty = cache.dirty_blocks_of_page(id);
                 for b in &dirty {
                     if let Some(data) = cache.data_of((id, *b)) {
+                        let old_term = crc_term(crcs, id, &page.frame, *b as usize);
                         // cannot fail for a live cached block; a corrupt
                         // frame surfaces on the next read
                         let _ = page.frame.write_block(*b as usize, data, scratch);
+                        fold_crc(crcs, id, old_term, &page.frame, *b as usize);
                     }
                 }
                 if self.auto_compact && page.frame.patch_len() * 2 > page.frame.compressed_len() {
@@ -1067,20 +1496,24 @@ impl ShardedPageStore {
         }
         // exclusive access: get_mut everywhere, no inner locking
         let mut all: Vec<(u64, StoredPage)> = Vec::new();
+        let mut all_crcs: HashMap<u64, u32> = HashMap::new();
+        let mut all_quarantined: HashSet<u64> = HashSet::new();
         for shard in shards.iter_mut() {
             let Shard { state, metrics, cache } = shard;
             let state = state.get_mut().unwrap();
             if let Some(cache) = cache {
                 let cache = cache.get_mut().unwrap();
-                let PageShard { pages, scratch } = state;
+                let PageShard { pages, scratch, crcs, .. } = state;
                 for id in cache.dirty_pages() {
                     let Some(page) = pages.get_mut(&id) else { continue };
                     let dirty = cache.dirty_blocks_of_page(id);
                     for b in &dirty {
                         if let Some(data) = cache.data_of((id, *b)) {
+                            let old_term = crc_term(crcs, id, &page.frame, *b as usize);
                             // cached blocks index valid blocks of a live
                             // frame; a corrupt frame surfaces on read
                             let _ = page.frame.write_block(*b as usize, data, scratch);
+                            fold_crc(crcs, id, old_term, &page.frame, *b as usize);
                         }
                     }
                     if self.auto_compact
@@ -1091,6 +1524,8 @@ impl ShardedPageStore {
                     metrics.deferred_flushed(dirty.len() as u64);
                 }
             }
+            all_crcs.extend(state.crcs.drain());
+            all_quarantined.extend(state.quarantined.drain());
             all.extend(state.pages.drain());
         }
         let moved = all
@@ -1119,7 +1554,14 @@ impl ShardedPageStore {
         }
         for (id, page) in all {
             let idx = Self::route(id, new_n);
-            rebuilt[idx].state.get_mut().unwrap().pages.insert(id, page);
+            let st = rebuilt[idx].state.get_mut().unwrap();
+            if let Some(crc) = all_crcs.remove(&id) {
+                st.crcs.insert(id, crc);
+            }
+            if all_quarantined.remove(&id) {
+                st.quarantined.insert(id);
+            }
+            st.pages.insert(id, page);
         }
         *shards = rebuilt;
         moved
@@ -1643,5 +2085,181 @@ mod tests {
         assert_eq!(store.read(1).unwrap(), expect, "content survives full flush");
         let stored = store.with_page(1, |p| p.stored_len()).unwrap();
         assert!(stored < 2 * (4096 + 4096 / 64 * 3 + 16), "stored {stored} B unbounded");
+    }
+
+    fn integrity_store(shards: usize, verify: bool, cache: usize) -> ShardedPageStore {
+        let mut s = ShardedPageStore::new(shards);
+        if cache > 0 {
+            s = s.with_cache(cache);
+        }
+        s.with_integrity(IntegrityConfig { enabled: true, verify_reads: verify, scrub_mib_s: 8 })
+    }
+
+    #[test]
+    fn integrity_digests_survive_every_mutation_path() {
+        let cfg = GbdiConfig::default();
+        let img = workloads::by_name("mcf").unwrap().generate(4096, 3);
+        let mut t1 = analyze::analyze_image(&img, &cfg);
+        t1.version = 1;
+        let mut t2 = analyze::analyze_image(&img, &cfg);
+        t2.version = 2;
+        let c1: Arc<dyn BlockCodec> = Arc::new(GbdiCodec::new(t1, cfg.clone()));
+        let c2: Arc<dyn BlockCodec> = Arc::new(GbdiCodec::new(t2, cfg));
+        let store = integrity_store(3, false, 2048);
+        assert!(store.integrity_enabled());
+        store.publish_codec(Arc::clone(&c1));
+        store.publish_codec(Arc::clone(&c2));
+        for id in 0..10u64 {
+            store.put(id, compress_page(&img, &c1));
+        }
+        let mut ids: Vec<u64> =
+            (0..store.shard_count()).flat_map(|s| store.shard_page_ids(s)).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..10u64).collect::<Vec<_>>());
+        let scrub_all = |store: &ShardedPageStore, what: &str| {
+            for id in 0..10u64 {
+                match store.scrub_page(id) {
+                    ScrubOutcome::Clean { .. } => {}
+                    o => panic!("page {id} after {what}: {o:?}"),
+                }
+            }
+        };
+        scrub_all(&store, "put");
+        // block writes across absorb / spill / evict-flush / compact —
+        // the incremental digest must track all of them
+        let mut rng = crate::util::prng::Rng::new(11);
+        let mut noisy = [0u8; 64];
+        for round in 0..120usize {
+            let id = round as u64 % 10;
+            let blk = (round * 13) % 64;
+            rng.fill_bytes(&mut noisy);
+            store.write_block(id, blk, &noisy).unwrap();
+        }
+        store.flush_cache();
+        scrub_all(&store, "writes+flush");
+        store.resize_shards(5);
+        scrub_all(&store, "resize");
+        for shard in 0..store.shard_count() {
+            while store.migrate_shard(shard, &c2, 4).unwrap() > 0 {}
+        }
+        scrub_all(&store, "migration");
+        assert_eq!(store.integrity_totals().corrupt_detected, 0);
+    }
+
+    #[test]
+    fn corruption_quarantines_heals_and_counts() {
+        let cfg = GbdiConfig::default();
+        let img = workloads::by_name("svm").unwrap().generate(4096, 7);
+        let codec: Arc<dyn BlockCodec> =
+            Arc::new(GbdiCodec::new(analyze::analyze_image(&img, &cfg), cfg));
+        let store = integrity_store(2, false, 0);
+        store.publish_codec(Arc::clone(&codec));
+        for id in 0..4u64 {
+            store.put(id, compress_page(&img, &codec));
+        }
+        let blk = (0..64usize).find(|&b| store.block_bits(2, b).unwrap() > 0).unwrap();
+        assert!(store.corrupt_page_block(2, blk, 17));
+        // verify_reads is off: detection falls to the scrubber
+        match store.scrub_page(2) {
+            ScrubOutcome::Corrupt { bytes } => assert!(bytes > 0),
+            o => panic!("expected Corrupt, got {o:?}"),
+        }
+        assert_eq!(store.quarantined_pages(), vec![2]);
+        // every surface answers DataLoss, never possibly-wrong data
+        let mut buf = [0u8; 64];
+        assert!(matches!(store.read(2), Err(Error::DataLoss(_))));
+        assert!(matches!(store.read_block(2, 0, &mut buf), Err(Error::DataLoss(_))));
+        assert!(matches!(store.write_block(2, 0, &[0u8; 64]), Err(Error::DataLoss(_))));
+        assert!(matches!(store.block_bits(2, 0), Err(Error::DataLoss(_))));
+        // re-scrubbing a quarantined page is a no-op
+        assert_eq!(store.scrub_page(2), ScrubOutcome::Skipped);
+        // other pages are unaffected
+        assert_eq!(store.read(1).unwrap(), img);
+        let t = store.integrity_totals();
+        assert_eq!((t.corrupt_detected, t.quarantined, t.healed), (1, 1, 0));
+        // heal from a pristine copy: the fence lifts, the content is back
+        assert!(store.heal_page(2, compress_page(&img, &codec)));
+        assert!(!store.heal_page(2, compress_page(&img, &codec)), "double heal is a no-op");
+        assert_eq!(store.read(2).unwrap(), img);
+        let stored = store.with_page(2, |p| p.stored_len()).unwrap();
+        assert_eq!(store.scrub_page(2), ScrubOutcome::Clean { bytes: stored });
+        assert_eq!(store.integrity_totals().healed, 1);
+        assert!(store.quarantined_pages().is_empty());
+        // a full-page overwrite also lifts the fence: fresh content
+        // supersedes whatever was lost
+        assert!(store.corrupt_page_block(3, blk, 2));
+        assert!(matches!(store.scrub_page(3), ScrubOutcome::Corrupt { .. }));
+        store.put(3, compress_page(&img, &codec));
+        assert_eq!(store.read(3).unwrap(), img);
+    }
+
+    #[test]
+    fn verified_reads_fence_corruption_immediately() {
+        let cfg = GbdiConfig::default();
+        let img = workloads::by_name("mcf").unwrap().generate(4096, 5);
+        let codec: Arc<dyn BlockCodec> =
+            Arc::new(GbdiCodec::new(analyze::analyze_image(&img, &cfg), cfg));
+        for cache in [0usize, 1 << 20] {
+            let store = integrity_store(2, true, cache);
+            store.publish_codec(Arc::clone(&codec));
+            store.put(1, compress_page(&img, &codec));
+            assert_eq!(store.read(1).unwrap(), img, "verified read passes clean");
+            let blk = (0..64usize).find(|&b| store.block_bits(1, b).unwrap() > 0).unwrap();
+            let mut buf = [0u8; 64];
+            store.read_block(1, blk, &mut buf).unwrap();
+            assert!(store.corrupt_page_block(1, blk, 3));
+            // the very next decode sees the flip: DataLoss, never garbage
+            assert!(
+                matches!(store.read_block(1, blk, &mut buf), Err(Error::DataLoss(_))),
+                "cache {cache}"
+            );
+            assert!(matches!(store.read(1), Err(Error::DataLoss(_))));
+            let t = store.integrity_totals();
+            assert_eq!((t.corrupt_detected, t.quarantined), (1, 1), "cache {cache}");
+        }
+    }
+
+    #[test]
+    fn integrity_off_stores_no_digests_and_never_fences() {
+        let cfg = GbdiConfig::default();
+        let img = vec![9u8; 4096];
+        let codec: Arc<dyn BlockCodec> =
+            Arc::new(GbdiCodec::new(analyze::analyze_image(&img, &cfg), cfg));
+        let store = ShardedPageStore::new(2)
+            .with_integrity(IntegrityConfig { enabled: false, ..IntegrityConfig::default() });
+        assert!(!store.integrity_enabled());
+        store.publish_codec(Arc::clone(&codec));
+        store.put(1, compress_page(&img, &codec));
+        assert_eq!(store.scrub_page(1), ScrubOutcome::Skipped);
+        assert!(store.corrupt_page_block(1, 0, 1));
+        // off = trust the bits, exactly the pre-integrity behavior: the
+        // read is served (or fails as Corrupt), never fenced
+        assert!(!matches!(store.read(1), Err(Error::DataLoss(_))));
+        assert!(store.quarantined_pages().is_empty());
+        assert!(!store.heal_page(1, compress_page(&img, &codec)));
+    }
+
+    #[test]
+    fn with_integrity_backfills_resident_pages() {
+        // a store populated *before* the plane turns on — the recovery
+        // path: recovered pages must start covered, not trusted blindly
+        let cfg = GbdiConfig::default();
+        let img = workloads::by_name("fluidanimate").unwrap().generate(4096, 1);
+        let codec: Arc<dyn BlockCodec> =
+            Arc::new(GbdiCodec::new(analyze::analyze_image(&img, &cfg), cfg));
+        let store = ShardedPageStore::new(3);
+        store.publish_codec(Arc::clone(&codec));
+        for id in 0..6u64 {
+            store.put(id, compress_page(&img, &codec));
+        }
+        let store = store.with_integrity(IntegrityConfig {
+            enabled: true,
+            verify_reads: true,
+            scrub_mib_s: 0,
+        });
+        for id in 0..6u64 {
+            assert!(matches!(store.scrub_page(id), ScrubOutcome::Clean { .. }));
+            assert_eq!(store.read(id).unwrap(), img);
+        }
     }
 }

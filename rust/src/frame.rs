@@ -564,6 +564,91 @@ impl Frame {
         self.patches.clear();
     }
 
+    // ---- integrity -------------------------------------------------------
+
+    /// CRC-32 term for block `i`'s stored encoding: a digest of the
+    /// block index, its recorded bit length, and the exact bit content
+    /// of its current slot (base span or patch slot), canonicalized by
+    /// re-packing the bits LSB-first from offset 0 — so the term is a
+    /// pure function of the block's *logical* stored bits, independent
+    /// of where the slot sits or how it is byte-aligned. Slack bits
+    /// beyond `block_bits(i)` are excluded: they are never read, so a
+    /// flip there is harmless by construction.
+    ///
+    /// Deliberately total: a truncated or nonsensical span (possible
+    /// under corruption of the framing metadata) hashes missing bits as
+    /// zero instead of failing, so verification always produces a
+    /// digest to mismatch against.
+    pub fn block_crc(&self, i: usize) -> u32 {
+        let (src, sub) = self.locate(i);
+        let mut r = BitReader::new(src);
+        if sub != 0 {
+            let _ = r.get(sub);
+        }
+        let mut h = crate::util::crc::Crc32::new();
+        h.update(&(i as u32).to_le_bytes());
+        h.update(&self.bits[i].to_le_bytes());
+        let mut left = u64::from(self.bits[i]);
+        while left >= 64 {
+            h.update_u64(r.get(64).unwrap_or(0));
+            left -= 64;
+        }
+        if left > 0 {
+            let w = r.get(left as u32).unwrap_or(0);
+            h.update(&w.to_le_bytes()[..(left as usize).div_ceil(8)]);
+        }
+        h.finish()
+    }
+
+    /// Whole-image integrity digest: the XOR of every block's
+    /// [`Self::block_crc`] term with a geometry term covering the block
+    /// count and logical length. XOR composition is what makes the
+    /// page store's incremental maintenance O(block): a `write_block`
+    /// replaces exactly one term (`crc ^= old_term ^ new_term`), while
+    /// a full recompute — what the scrubber does — folds every term
+    /// (DESIGN.md §13).
+    pub fn image_crc(&self) -> u32 {
+        let mut crc = self.geometry_crc();
+        for i in 0..self.bits.len() {
+            crc ^= self.block_crc(i);
+        }
+        crc
+    }
+
+    /// The geometry term of [`Self::image_crc`]: block count + logical
+    /// length, salted so an empty frame's digest is not zero.
+    fn geometry_crc(&self) -> u32 {
+        let mut h = crate::util::crc::Crc32::new();
+        h.update(b"GBIC");
+        h.update(&(self.bits.len() as u32).to_le_bytes());
+        h.update(&(self.original_len as u64).to_le_bytes());
+        h.finish()
+    }
+
+    /// Chaos-test hook: flip one bit inside block `i`'s stored encoding
+    /// (bit `bit % block_bits(i)` of its slot), leaving all framing
+    /// metadata intact — the in-memory analogue of FaultFs's media
+    /// bitflips. Returns `false` without touching anything when the
+    /// block has a zero-length encoding (nothing to flip). Not intended
+    /// for production callers; the integrity plane exists to catch
+    /// exactly this mutation.
+    #[doc(hidden)]
+    pub fn corrupt_block_bit(&mut self, i: usize, bit: u64) -> bool {
+        if i >= self.bits.len() || self.bits[i] == 0 {
+            return false;
+        }
+        let bit = bit % u64::from(self.bits[i]);
+        if let Some(&(pos, _)) = self.patches.get(i) {
+            if pos != u32::MAX {
+                self.patch[pos as usize + (bit / 8) as usize] ^= 1 << (bit % 8);
+                return true;
+            }
+        }
+        let abs = self.offsets[i] + bit;
+        self.payload[(abs / 8) as usize] ^= 1 << (abs % 8);
+        true
+    }
+
     // ---- serialization ---------------------------------------------------
 
     /// Compact the frame back into a canonical serial [`Container`]:
@@ -1038,5 +1123,72 @@ mod tests {
         assert_eq!(buf, [0u8; 64], "left neighbour untouched");
         frame.read_block(6, &mut buf).unwrap();
         assert_eq!(buf, [0u8; 64], "right neighbour untouched");
+    }
+
+    #[test]
+    fn image_crc_tracks_incremental_block_terms() {
+        // the page store's O(block) maintenance rule — xor out the old
+        // term, xor in the new — must agree with a full recompute after
+        // any sequence of in-place writes, spills, and compactions
+        for &kind in CodecKind::all() {
+            let image = clustered_image(4096, 43);
+            let mut frame = frame_for(kind, &image);
+            let mut scratch = Scratch::new();
+            let mut rng = Rng::new(47);
+            let mut crc = frame.image_crc();
+            for round in 0..60 {
+                let i = rng.below(frame.n_blocks() as u64) as usize;
+                let mut data = [0u8; 64];
+                match rng.below(3) {
+                    0 => {}
+                    1 => data.chunks_mut(4).for_each(|c| c.copy_from_slice(&9u32.to_le_bytes())),
+                    _ => rng.fill_bytes(&mut data),
+                }
+                let old = frame.block_crc(i);
+                frame.write_block(i, &data, &mut scratch).unwrap();
+                crc ^= old ^ frame.block_crc(i);
+                assert_eq!(crc, frame.image_crc(), "{} round {round}", kind.name());
+                if round % 20 == 19 {
+                    frame.compact();
+                    // compaction relocates slots but never changes the
+                    // logical bit content, so the digest is invariant
+                    assert_eq!(crc, frame.image_crc(), "{} compact {round}", kind.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_block_bit_always_breaks_the_digest() {
+        let image = clustered_image(4096, 53);
+        let mut frame = frame_for(CodecKind::Gbdi, &image);
+        let mut scratch = Scratch::new();
+        let mut rng = Rng::new(59);
+        // include a spilled block so both slot kinds are exercised
+        let mut noisy = [0u8; 64];
+        rng.fill_bytes(&mut noisy);
+        frame.write_block(2, &noisy, &mut scratch).unwrap();
+        for trial in 0..200 {
+            let before = frame.image_crc();
+            let i = rng.below(frame.n_blocks() as u64) as usize;
+            if !frame.corrupt_block_bit(i, rng.next_u64()) {
+                continue;
+            }
+            assert_ne!(before, frame.image_crc(), "flip in block {i} (trial {trial}) undetected");
+            // flip it back: the digest must return exactly
+            // (corrupt_block_bit reduces the bit index modulo the block
+            // length, so replaying the same argument hits the same bit)
+        }
+    }
+
+    #[test]
+    fn corrupting_one_bit_then_restoring_roundtrips_the_digest() {
+        let image = clustered_image(1024, 61);
+        let mut frame = frame_for(CodecKind::Bdi, &image);
+        let before = frame.image_crc();
+        assert!(frame.corrupt_block_bit(3, 5));
+        assert_ne!(before, frame.image_crc());
+        assert!(frame.corrupt_block_bit(3, 5));
+        assert_eq!(before, frame.image_crc());
     }
 }

@@ -197,6 +197,13 @@ pub enum Error {
     /// Configuration errors (bad K, bad width classes, ...).
     #[error("config: {0}")]
     Config(String),
+    /// A stored page failed its integrity check and no durable copy
+    /// could heal it: the data is gone, not merely unreadable. Surfaced
+    /// to network clients as the GBN1 `DATA_LOSS` status (DESIGN.md
+    /// §13) so operators can distinguish "retry later" from "restore
+    /// from backup".
+    #[error("data loss: {0}")]
+    DataLoss(String),
     /// I/O.
     #[error(transparent)]
     Io(#[from] std::io::Error),

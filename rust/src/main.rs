@@ -144,6 +144,32 @@ fn app() -> App {
                     "",
                     "checkpoint once the WAL outgrows this (k/m/g; default from config: 8m)",
                 ))
+                .arg(Arg::flag(
+                    "integrity",
+                    "enable page CRCs: verify on read, background scrub, quarantine + self-heal",
+                ))
+                .arg(Arg::opt(
+                    "scrub-mib-s",
+                    "",
+                    "integrity: background scrub budget, MiB/s (default from config: 8)",
+                ))
+                .arg(Arg::opt(
+                    "handshake-timeout",
+                    "",
+                    "ms a new connection gets to complete the hello (default from config: 5000)",
+                ))
+                .arg(Arg::opt(
+                    "write-timeout",
+                    "",
+                    "ms a blocked response write gets before the connection is dropped \
+                     (default from config: 10000)",
+                ))
+                .arg(Arg::opt(
+                    "chaos-corrupt",
+                    "",
+                    "TEST HOOK: flip bits once pages exist; comma list of page:block:bit \
+                     (requires --integrity; used by the CI chaos smoke)",
+                ))
                 .arg(isa_arg()),
         )
         .subcommand(
@@ -176,8 +202,35 @@ fn app() -> App {
                 .arg(Arg::flag(
                     "check-stats",
                     "load: assert server STATS deltas match client tallies \
-                     (requires an otherwise idle server)",
-                )),
+                     (requires an otherwise idle server; incompatible with chaos — \
+                     replays repeat server-side work)",
+                ))
+                .arg(Arg::flag(
+                    "check-content",
+                    "load: verify every GET against the only two legal values per block; \
+                     any mismatch (a silently-wrong read) fails the run",
+                ))
+                .arg(Arg::opt(
+                    "max-reconnects",
+                    "",
+                    "load: transport failures each connection rides out (default 8)",
+                ))
+                .arg(Arg::opt(
+                    "chaos-cut",
+                    "0",
+                    "load: proxy traffic and cut connections every ~N bytes (0 = no proxy)",
+                ))
+                .arg(Arg::opt(
+                    "chaos-corrupt-wire",
+                    "0",
+                    "load: proxy traffic and flip a bit every ~N bytes (0 = off)",
+                ))
+                .arg(Arg::opt(
+                    "chaos-stall",
+                    "0",
+                    "load: proxy traffic and stall 5 ms every ~N bytes (0 = off)",
+                ))
+                .arg(Arg::opt("chaos-seed", "1", "load: fault-schedule seed")),
         )
         .subcommand(
             App::new("selectors", "base-selector ablation: ratio + analysis time per workload")
@@ -608,6 +661,20 @@ fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
     if !m.get("cache-bytes").is_empty() {
         cfg.cache_bytes = m.get_usize("cache-bytes");
     }
+    // integrity plane: [integrity] from --config, --integrity forces it on
+    if m.get_flag("integrity") {
+        cfg.integrity.enabled = true;
+    }
+    if !m.get("scrub-mib-s").is_empty() {
+        let mib = m.get_u64("scrub-mib-s");
+        if mib == 0 {
+            return Err(gbdi::Error::Config("--scrub-mib-s must be >= 1".into()));
+        }
+        cfg.integrity.scrub_mib_s = mib;
+    }
+    if !m.get("chaos-corrupt").is_empty() && !cfg.integrity.enabled {
+        return Err(gbdi::Error::Config("--chaos-corrupt requires --integrity".into()));
+    }
     // durability: [persist] from --config, overridden by --data-dir/--fsync-batch/--wal-limit.
     // No data dir anywhere means persistence stays off and serving is untouched.
     let mut persist_cfg = match &file {
@@ -691,6 +758,23 @@ fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
             fmt_bytes(cache_bytes as u64)
         );
     }
+    let integrity_on = {
+        let i = &svc.config().integrity;
+        if i.enabled {
+            println!(
+                "integrity: page CRCs on ({} on reads), scrub {} MiB/s, quarantine + {}",
+                if i.verify_reads { "verified" } else { "not verified" },
+                i.scrub_mib_s,
+                if persist_cfg.is_some() {
+                    "self-heal from durable state"
+                } else {
+                    "DATA_LOSS (no durable copy)"
+                }
+            );
+        }
+        i.enabled
+    };
+    let chaos_specs = parse_chaos_specs(m.get("chaos-corrupt"))?;
     let listen = m.get("listen");
     if !listen.is_empty() {
         let mut scfg = match &file {
@@ -698,7 +782,24 @@ fn cmd_serve(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
             Some(f) => f.server_config().map_err(gbdi::Error::Config)?,
         };
         scfg.listen = listen.to_string();
-        return serve_network(m.get_u64("stats-every"), svc, scfg);
+        if !m.get("handshake-timeout").is_empty() {
+            let ms = m.get_u64("handshake-timeout");
+            if ms == 0 {
+                return Err(gbdi::Error::Config("--handshake-timeout must be >= 1 ms".into()));
+            }
+            scfg.handshake_timeout_ms = ms;
+        }
+        if !m.get("write-timeout").is_empty() {
+            let ms = m.get_u64("write-timeout");
+            if ms == 0 {
+                return Err(gbdi::Error::Config("--write-timeout must be >= 1 ms".into()));
+            }
+            scfg.write_timeout_ms = ms;
+        }
+        return serve_network(m.get_u64("stats-every"), svc, scfg, integrity_on, chaos_specs);
+    }
+    if !chaos_specs.is_empty() {
+        return Err(gbdi::Error::Config("--chaos-corrupt requires --listen".into()));
     }
     let names: Vec<&str> = match m.get("workload") {
         "mix" => vec!["mcf", "perlbench", "fluidanimate", "triangle_count", "svm"],
@@ -826,6 +927,28 @@ fn install_shutdown_handler() {
 #[cfg(not(unix))]
 fn install_shutdown_handler() {}
 
+/// Parse the `--chaos-corrupt` test-hook spec: a comma list of
+/// `page:block:bit` triples.
+fn parse_chaos_specs(spec: &str) -> gbdi::Result<Vec<(u64, usize, u64)>> {
+    if spec.is_empty() {
+        return Ok(Vec::new());
+    }
+    let bad = |item: &str| {
+        gbdi::Error::Config(format!("--chaos-corrupt: '{item}' is not page:block:bit"))
+    };
+    spec.split(',')
+        .map(|item| {
+            let parts: Vec<&str> = item.trim().split(':').collect();
+            let [page, block, bit] = parts.as_slice() else { return Err(bad(item)) };
+            Ok((
+                page.parse::<u64>().map_err(|_| bad(item))?,
+                block.parse::<usize>().map_err(|_| bad(item))?,
+                bit.parse::<u64>().map_err(|_| bad(item))?,
+            ))
+        })
+        .collect()
+}
+
 /// Network mode of `gbdi serve`: run the GBN1 front end until a signal
 /// or a client SHUTDOWN op arrives, then drain connections, flush the
 /// ingest queue and deferred dirty cache blocks, and report.
@@ -833,6 +956,8 @@ fn serve_network(
     stats_every: u64,
     svc: CompressionService,
     scfg: ServerConfig,
+    integrity_on: bool,
+    chaos_specs: Vec<(u64, usize, u64)>,
 ) -> gbdi::Result<()> {
     install_shutdown_handler();
     let server = Server::bind(svc, scfg)?;
@@ -840,6 +965,29 @@ fn serve_network(
         "listening on {} (GBN1 v1) — SIGINT/SIGTERM or a SHUTDOWN op drains and exits",
         server.local_addr()
     );
+    // --chaos-corrupt sidecar: poll until each targeted page exists,
+    // then flip the requested bit in its stored image. Joined before
+    // Server::stop so the service Arc unwraps cleanly.
+    let chaos_stop = Arc::new(AtomicBool::new(false));
+    let chaos_thread = if chaos_specs.is_empty() {
+        None
+    } else {
+        let svc = server.service_shared();
+        let stop = Arc::clone(&chaos_stop);
+        Some(std::thread::spawn(move || {
+            let mut remaining = chaos_specs;
+            while !stop.load(Ordering::Acquire) && !remaining.is_empty() {
+                remaining.retain(|&(page, block, bit)| {
+                    let done = svc.corrupt_page_block(page, block, bit);
+                    if done {
+                        println!("chaos: flipped bit {bit} of page {page} block {block}");
+                    }
+                    !done
+                });
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }))
+    };
     let mut last_stats = Instant::now();
     while !SHUTDOWN_SIGNAL.load(Ordering::SeqCst) && !server.shutdown_requested() {
         std::thread::sleep(Duration::from_millis(100));
@@ -848,9 +996,18 @@ fn serve_network(
             let s = server.stats();
             let sm = server.service().metrics();
             let (_, _, ratio) = server.service().storage_ratio();
+            let integrity = if integrity_on {
+                let t = server.service().integrity_totals();
+                format!(
+                    ", scrubbed {} / corrupt {} / healed {} / quarantined {}",
+                    t.scrubbed, t.corrupt_detected, t.healed, t.quarantined
+                )
+            } else {
+                String::new()
+            };
             println!(
                 "stats: conns {}/{} open, ops {} ok / {} err / {} shed, {} in / {} out, \
-                 pages {}, ratio {}, table v{}",
+                 pages {}, ratio {}, table v{}{integrity}",
                 s.active_conns,
                 s.accepted_conns,
                 s.ops_ok,
@@ -864,8 +1021,19 @@ fn serve_network(
             );
         }
     }
+    chaos_stop.store(true, Ordering::Release);
+    if let Some(t) = chaos_thread {
+        let _ = t.join();
+    }
     println!("shutdown: draining connections and flushing deferred writes...");
     let (svc, s, flushed) = server.stop();
+    if integrity_on {
+        let t = svc.integrity_totals();
+        println!(
+            "integrity: {} pages scrubbed, {} corruptions detected, {} healed, {} quarantined",
+            t.scrubbed, t.corrupt_detected, t.healed, t.quarantined
+        );
+    }
     let snap = svc.shutdown();
     println!(
         "served {} conns ({} rejected, {} protocol errors): {} ops ok / {} err / {} shed, \
@@ -1025,7 +1193,7 @@ fn cmd_client(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
 /// `--check-stats`) assert the server's STATS deltas agree with the
 /// client-side tallies — the CI serving smoke runs exactly this.
 fn cmd_client_load(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
-    let cfg = LoadGenConfig {
+    let mut cfg = LoadGenConfig {
         addr: m.get("addr").to_string(),
         conns: m.get_usize("conns").max(1),
         ops_per_conn: m.get_usize("ops").max(1),
@@ -1036,11 +1204,49 @@ fn cmd_client_load(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
         zipf_s: m.get_f64("zipf"),
         seed: m.get_u64("seed"),
         workload: m.get("workload").to_string(),
+        check_content: m.get_flag("check-content"),
         ..Default::default()
     };
+    if !m.get("max-reconnects").is_empty() {
+        cfg.max_reconnects = m.get_u64("max-reconnects");
+    }
     let check = m.get_flag("check-stats");
+    // Chaos: interpose the in-process fault proxy between the load
+    // generator and the server. Control connections (stats/flush) keep
+    // talking to the real server directly.
+    let upstream = cfg.addr.clone();
+    let plan = server::FaultPlan {
+        seed: m.get_u64("chaos-seed"),
+        cut_every_bytes: m.get_u64("chaos-cut"),
+        corrupt_every_bytes: m.get_u64("chaos-corrupt-wire"),
+        stall_every_bytes: m.get_u64("chaos-stall"),
+        ..Default::default()
+    };
+    let chaos =
+        plan.cut_every_bytes > 0 || plan.corrupt_every_bytes > 0 || plan.stall_every_bytes > 0;
+    let mut proxy = None;
+    if chaos {
+        if check {
+            return Err(gbdi::Error::Config(
+                "--check-stats is incompatible with chaos flags: replayed ops repeat \
+                 server-side work, so deltas cannot match client tallies"
+                    .into(),
+            ));
+        }
+        let p = server::ChaosProxy::start(&upstream, plan.clone())?;
+        println!(
+            "chaos: proxying {} -> {upstream} (cut ~{} B, corrupt ~{} B, stall ~{} B, seed {})",
+            p.addr(),
+            plan.cut_every_bytes,
+            plan.corrupt_every_bytes,
+            plan.stall_every_bytes,
+            plan.seed
+        );
+        cfg.addr = p.addr();
+        proxy = Some(p);
+    }
     let before = if check {
-        let mut c = Client::connect(&cfg.addr)?;
+        let mut c = Client::connect(&upstream)?;
         Some(c.stats()?)
     } else {
         None
@@ -1049,7 +1255,7 @@ fn cmd_client_load(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
     let preload_batches = cfg.pages.div_ceil(32);
     println!("preloaded {preloaded} pages x {} B from '{}'", cfg.page_bytes, cfg.workload);
     let rep = server::run_loadgen(&cfg)?;
-    let mut c = Client::connect(&cfg.addr)?;
+    let mut c = Client::connect(&upstream)?;
     c.flush()?;
     let after = c.stats()?;
 
@@ -1082,6 +1288,22 @@ fn cmd_client_load(m: &gbdi::cli::Matches) -> gbdi::Result<()> {
         server::percentile(&lat, 0.99),
         server::percentile(&lat, 0.999)
     );
+    if chaos || rep.reconnects > 0 || rep.data_loss > 0 || cfg.check_content {
+        println!(
+            "resilience: {} reconnects, {} DATA_LOSS replies, {} content-check failures",
+            rep.reconnects, rep.data_loss, rep.check_failures
+        );
+    }
+    if let Some(mut p) = proxy {
+        p.stop();
+        println!("chaos: {} connections proxied, {} cuts injected", p.conns(), p.cuts());
+    }
+    if cfg.check_content && rep.check_failures > 0 {
+        return Err(gbdi::Error::Corrupt(format!(
+            "{} silently-wrong reads: GET payloads matched neither legal value",
+            rep.check_failures
+        )));
+    }
     if let Some(before) = before {
         // Every OK op this process sent after the `before` snapshot:
         // the preload batches + the preload flush + the trace ops + the

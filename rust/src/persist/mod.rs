@@ -53,28 +53,11 @@ pub const MANIFEST_TMP: &str = "MANIFEST.tmp";
 
 /// CRC-32 (IEEE 802.3, reflected, polynomial `0xEDB88320`) — the same
 /// checksum `zlib.crc32` computes, so the Python fixture generator
-/// cross-checks every framed byte.
+/// cross-checks every framed byte. One shared implementation
+/// ([`crate::util::crc`]) backs both the durable framing here and the
+/// in-memory integrity plane's page digests.
 pub fn crc32(data: &[u8]) -> u32 {
-    const TABLE: [u32; 256] = {
-        let mut table = [0u32; 256];
-        let mut i = 0;
-        while i < 256 {
-            let mut c = i as u32;
-            let mut k = 0;
-            while k < 8 {
-                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
-                k += 1;
-            }
-            table[i] = c;
-            i += 1;
-        }
-        table
-    };
-    let mut c = 0xFFFF_FFFFu32;
-    for &b in data {
-        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
-    }
-    c ^ 0xFFFF_FFFF
+    crate::util::crc::crc32(data)
 }
 
 /// Tunables for the durability layer (`[persist]` config section).
@@ -263,6 +246,20 @@ impl Durability {
         self.checkpoint(store)?;
         Ok(true)
     }
+
+    /// Read one page's durable image — the integrity plane's self-heal
+    /// source ([`recover::read_page`]): its checkpointed copy with every
+    /// later WAL record for that page replayed on top. Runs under the
+    /// apply gate's read side so a checkpoint cannot swap the manifest
+    /// and reset the WAL mid-read; mutations logged after this call are
+    /// simply not reflected, which is safe because
+    /// [`ShardedPageStore::heal_page`](crate::coordinator::store::ShardedPageStore::heal_page)
+    /// re-verifies the candidate before installing it.
+    pub fn read_page(&self, page_id: u64) -> Result<Option<StoredPage>> {
+        let _g = self.gate();
+        self.wal.lock().unwrap().sync()?;
+        recover::read_page(self.vfs.as_ref(), &self.dir, page_id)
+    }
 }
 
 /// A [`ShardedPageStore`] whose every mutation is WAL-logged before it
@@ -365,6 +362,35 @@ impl DurableStore {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn read_page_rebuilds_checkpoint_plus_wal_state_for_one_page() {
+        let vfs: Arc<dyn Vfs> = Arc::new(FaultFs::new());
+        let (ds, _) =
+            DurableStore::open(Arc::clone(&vfs), "d", PersistConfig::default(), 2, 0).unwrap();
+        let codec: Arc<dyn BlockCodec> = Arc::new(crate::baselines::bdi::Bdi::default());
+        let data: Vec<u8> = (0..4096u32).map(|i| (i % 251) as u8).collect();
+        let mut scratch = crate::codec::Scratch::new();
+        ds.put(
+            1,
+            StoredPage {
+                frame: crate::frame::Frame::compress_with(Arc::clone(&codec), &data, &mut scratch),
+            },
+        )
+        .unwrap();
+        ds.checkpoint().unwrap();
+        // post-checkpoint WAL mutations replay on top of the segment copy
+        let line = [0xA5u8; 64];
+        ds.write_block(1, 3, &line).unwrap();
+        let got = ds.durability().read_page(1).unwrap().expect("durable copy exists");
+        let mut expect = data.clone();
+        expect[3 * 64..4 * 64].copy_from_slice(&line);
+        assert_eq!(got.frame.decompress().unwrap(), expect);
+        // absent pages and removed pages both come back as None
+        assert!(ds.durability().read_page(99).unwrap().is_none());
+        ds.remove(1).unwrap();
+        assert!(ds.durability().read_page(1).unwrap().is_none());
+    }
 
     #[test]
     fn crc32_matches_the_ieee_reference_vectors() {

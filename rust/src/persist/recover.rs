@@ -224,3 +224,60 @@ pub fn recover(
     report.pages = store.len();
     Ok((store, report))
 }
+
+/// Rebuild **one** page from durable state alone — the integrity
+/// plane's self-heal source (DESIGN.md §13). Walks the same manifest →
+/// segments → WAL chain as [`recover`] but materializes only
+/// `page_id`: the checkpointed copy (if any) with every later WAL
+/// mutation for that page replayed on top, in log order. Returns
+/// `Ok(None)` when durable state holds no trace of the page or a WAL
+/// remove was the last word. Damage is tolerated exactly like full
+/// recovery — a torn or CRC-failed record simply cannot contribute —
+/// so the caller must re-verify the candidate before trusting it
+/// ([`ShardedPageStore::heal_page`](crate::coordinator::store::ShardedPageStore::heal_page)
+/// does).
+pub fn read_page(vfs: &dyn Vfs, dir: &str, page_id: u64) -> Result<Option<StoredPage>> {
+    let mut frame: Option<Frame> = None;
+    let manifest_path = format!("{dir}/{MANIFEST_FILE}");
+    if vfs.exists(&manifest_path) {
+        if let Some(m) = decode_manifest(&vfs.read(&manifest_path)?) {
+            // segments are routed by a shard hash we deliberately do not
+            // reproduce here (the topology may have been resized since
+            // the checkpoint): scan every segment of the epoch for the id
+            for idx in 0..m.shard_count as usize {
+                let path = format!("{dir}/{}", segment_file_name(m.epoch, idx));
+                if !vfs.exists(&path) {
+                    continue;
+                }
+                for (id, container) in scan_segment(&vfs.read(&path)?).entries {
+                    if id == page_id {
+                        if let Ok(f) = frame_of(&container) {
+                            frame = Some(f);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let wal_path = format!("{dir}/{WAL_FILE}");
+    if vfs.exists(&wal_path) {
+        let mut scratch = crate::codec::Scratch::new();
+        for rec in scan_wal(&vfs.read(&wal_path)?).records {
+            match rec {
+                WalRecord::PutPage { page_id: id, container } if id == page_id => {
+                    if let Ok(f) = frame_of(&container) {
+                        frame = Some(f);
+                    }
+                }
+                WalRecord::WriteBlock { page_id: id, block, data } if id == page_id => {
+                    if let Some(f) = frame.as_mut() {
+                        let _ = f.write_block(block as usize, &data, &mut scratch);
+                    }
+                }
+                WalRecord::RemovePage { page_id: id } if id == page_id => frame = None,
+                _ => {}
+            }
+        }
+    }
+    Ok(frame.map(|frame| StoredPage { frame }))
+}

@@ -8,8 +8,21 @@
 //! measures client-observed latency as *send-to-receive* time per op —
 //! queueing delay under a deep pipeline is charged to the op, which is
 //! what a tail-latency claim must include.
+//!
+//! Resilience model: every failure the transport can produce — a
+//! mid-frame disconnect, a stalled socket (bounded by the per-op
+//! deadline in [`ClientConfig`]), or a desynchronized stream after
+//! corruption — is retried with capped exponential back-off plus
+//! jitter ([`Backoff`]) and a fresh connection, then the in-doubt
+//! request is replayed. Replay is safe for every `GBN1` op the client
+//! issues: reads and STATS are naturally idempotent, and both PUT
+//! shapes (`PutBlock`, `PutPages`) carry *absolute* content — a
+//! replayed PUT that was already applied overwrites the page with the
+//! identical bytes, so double-apply cannot corrupt state (the only
+//! observable effect is a possibly repeated accept count, which the
+//! load generator tallies as a retry, not as new work).
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::TcpStream;
 use std::thread;
@@ -21,41 +34,179 @@ use crate::workloads;
 use crate::{Error, Result};
 
 /// How many `RetryAfter` rounds [`Client::put_pages`] tolerates before
-/// giving up — generous because each round sleeps the server-suggested
-/// back-off.
+/// giving up — generous because admission sheds are load, not failure,
+/// and each round sleeps at least the server-suggested back-off.
 const MAX_PUT_RETRIES: usize = 1000;
+
+/// Capped exponential back-off schedule shared by every retry loop in
+/// the client (transport reconnects, admission sheds, the load
+/// generator's reconnect path).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryPolicy {
+    /// Transport-failure attempts before giving up. Admission sheds do
+    /// **not** consume attempts — they follow the delay schedule only.
+    pub max_attempts: u32,
+    /// First delay, milliseconds.
+    pub base_ms: u64,
+    /// Delay ceiling, milliseconds; the exponential curve saturates
+    /// here instead of growing without bound.
+    pub cap_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 8, base_ms: 10, cap_ms: 2_000 }
+    }
+}
+
+/// Stateful back-off iterator: delay doubles from `base_ms` up to
+/// `cap_ms`, and each sleep is jittered uniformly into the upper half
+/// of the window (`[d/2, d]`) so a fleet of clients kicked loose by
+/// the same fault does not reconnect in lockstep. Deterministic in its
+/// seed, which is what lets the chaos tests replay a schedule exactly.
+#[derive(Debug)]
+pub struct Backoff {
+    policy: RetryPolicy,
+    attempt: u32,
+    rng: Rng,
+}
+
+impl Backoff {
+    pub fn new(policy: RetryPolicy, seed: u64) -> Backoff {
+        Backoff { policy, attempt: 0, rng: Rng::new(seed) }
+    }
+
+    /// Attempts consumed since the last [`Self::reset`].
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Whether the transport-failure budget is spent. The delay
+    /// schedule keeps working past this point (saturated at the cap)
+    /// for callers like shed loops that bound rounds differently.
+    pub fn exhausted(&self) -> bool {
+        self.attempt >= self.policy.max_attempts
+    }
+
+    /// A successful operation ends the incident: restart the curve.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+
+    /// Next jittered delay; advances the attempt counter.
+    pub fn next_delay(&mut self) -> Duration {
+        let exp = self
+            .policy
+            .base_ms
+            .max(1)
+            .saturating_mul(1u64.checked_shl(self.attempt).unwrap_or(u64::MAX))
+            .min(self.policy.cap_ms.max(1));
+        self.attempt = self.attempt.saturating_add(1);
+        let half = exp / 2;
+        Duration::from_millis(half + self.rng.below(exp - half + 1))
+    }
+
+    /// Next delay, floored at a server-suggested hint (RETRY_AFTER):
+    /// never retry sooner than the server asked, but still grow and
+    /// jitter so persistent sheds spread out instead of metronoming.
+    pub fn next_delay_at_least(&mut self, floor_ms: u64) -> Duration {
+        self.next_delay().max(Duration::from_millis(floor_ms))
+    }
+}
+
+/// Connection-level knobs for [`Client`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientConfig {
+    /// Per-op deadline, milliseconds, enforced as the socket read and
+    /// write timeout: a recv that exceeds it fails with a timeout
+    /// `Error::Io` instead of hanging forever on a stalled server or a
+    /// chaos-injected half-open connection. 0 disables (PR 9 behavior).
+    pub op_timeout_ms: u64,
+    /// Back-off schedule for transport retries and admission sheds.
+    pub retry: RetryPolicy,
+    /// Jitter seed; distinct clients should use distinct seeds.
+    pub backoff_seed: u64,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig { op_timeout_ms: 30_000, retry: RetryPolicy::default(), backoff_seed: 0x0BAC_0FF5 }
+    }
+}
 
 /// A blocking, pipelineable `GBN1` connection.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
+    addr: String,
+    config: ClientConfig,
+    backoff: Backoff,
     next_req_id: u64,
     inflight: VecDeque<u64>,
     max_frame_bytes: usize,
     block_bytes: usize,
 }
 
+/// Dial + handshake, honoring the per-op deadline on both socket
+/// directions. Returns the buffered halves and the server's block size.
+fn dial(addr: &str, cfg: &ClientConfig) -> Result<(BufReader<TcpStream>, BufWriter<TcpStream>, usize)> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let timeout = (cfg.op_timeout_ms > 0).then(|| Duration::from_millis(cfg.op_timeout_ms));
+    stream.set_read_timeout(timeout)?;
+    stream.set_write_timeout(timeout)?;
+    let rstream = stream.try_clone()?;
+    let mut writer = BufWriter::new(stream);
+    writer.write_all(&protocol::MAGIC)?;
+    writer.flush()?;
+    let mut reader = BufReader::new(rstream);
+    let mut hello = [0u8; 8];
+    reader.read_exact(&mut hello)?;
+    let (_version, block_bytes) = protocol::parse_server_hello(&hello).map_err(Error::Corrupt)?;
+    Ok((reader, writer, block_bytes as usize))
+}
+
+/// Whether an error means "the connection is dead or desynchronized" —
+/// the class a reconnect can fix. I/O errors (including per-op deadline
+/// timeouts) and stream corruption qualify; server-reported statuses,
+/// config errors, and data loss do not.
+fn is_transport(e: &Error) -> bool {
+    matches!(e, Error::Io(_) | Error::Corrupt(_))
+}
+
 impl Client {
-    /// Connect, send the magic, and parse the server hello.
+    /// Connect with default [`ClientConfig`].
     pub fn connect(addr: &str) -> Result<Client> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true)?;
-        let rstream = stream.try_clone()?;
-        let mut writer = BufWriter::new(stream);
-        writer.write_all(&protocol::MAGIC)?;
-        writer.flush()?;
-        let mut reader = BufReader::new(rstream);
-        let mut hello = [0u8; 8];
-        reader.read_exact(&mut hello)?;
-        let (_version, block_bytes) = protocol::parse_server_hello(&hello).map_err(Error::Corrupt)?;
+        Client::connect_with(addr, ClientConfig::default())
+    }
+
+    /// Connect, send the magic, and parse the server hello.
+    pub fn connect_with(addr: &str, config: ClientConfig) -> Result<Client> {
+        let (reader, writer, block_bytes) = dial(addr, &config)?;
+        let backoff = Backoff::new(config.retry.clone(), config.backoff_seed);
         Ok(Client {
             reader,
             writer,
+            addr: addr.to_string(),
+            config,
+            backoff,
             next_req_id: 1,
             inflight: VecDeque::new(),
             max_frame_bytes: protocol::DEFAULT_MAX_FRAME_BYTES,
-            block_bytes: block_bytes as usize,
+            block_bytes,
         })
+    }
+
+    /// Re-dial the same address and drop all in-flight state: any
+    /// response the old connection owed us is gone. Callers replay what
+    /// they still need (safe for every op — see the module doc).
+    pub fn reconnect(&mut self) -> Result<()> {
+        let (reader, writer, block_bytes) = dial(&self.addr, &self.config)?;
+        self.reader = reader;
+        self.writer = writer;
+        self.block_bytes = block_bytes;
+        self.inflight.clear();
+        Ok(())
     }
 
     /// The server's block size from the hello.
@@ -108,15 +259,49 @@ impl Client {
         self.recv()
     }
 
-    /// Batch-PUT pages, sleeping out `RetryAfter` shed responses with
-    /// the server-suggested back-off. Returns pages accepted.
+    /// Synchronous round trip with reconnect-and-replay: transport
+    /// failures (disconnect, deadline timeout, desynchronized stream)
+    /// sleep the shared back-off, re-dial, and re-issue the request,
+    /// up to the policy's attempt budget. Only called for ops where
+    /// replay is safe (see the module doc: reads are idempotent, PUTs
+    /// carry absolute content so double-apply is a no-op).
+    fn request_replayed(&mut self, req: &Request) -> Result<Response> {
+        loop {
+            match self.request(req) {
+                Ok(resp) => {
+                    self.backoff.reset();
+                    return Ok(resp);
+                }
+                Err(e) if is_transport(&e) && !self.backoff.exhausted() => {
+                    thread::sleep(self.backoff.next_delay());
+                    // A failed re-dial consumes attempts too; the loop
+                    // retries the dial until the budget runs out.
+                    if let Err(redial) = self.reconnect() {
+                        if !is_transport(&redial) || self.backoff.exhausted() {
+                            return Err(redial);
+                        }
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Batch-PUT pages, riding out `RetryAfter` shed responses with
+    /// capped exponential back-off + jitter floored at the
+    /// server-suggested delay. Transport failures reconnect and replay
+    /// (a page PUT is an absolute overwrite, so a replay that lands
+    /// twice writes the same bytes twice — no double-apply hazard).
+    /// Returns pages accepted.
     pub fn put_pages(&mut self, pages: &[(u64, Vec<u8>)]) -> Result<u32> {
         let req = Request::PutPages(pages.to_vec());
+        let mut shed =
+            Backoff::new(self.config.retry.clone(), self.config.backoff_seed ^ 0x5EED_0F_5EED);
         for _ in 0..MAX_PUT_RETRIES {
-            match self.request(&req)?.body {
+            match self.request_replayed(&req)?.body {
                 Reply::PutPages { accepted } => return Ok(accepted),
                 Reply::Error { status: Status::RetryAfter, retry_ms, .. } => {
-                    thread::sleep(Duration::from_millis(u64::from(retry_ms.max(1))));
+                    thread::sleep(shed.next_delay_at_least(u64::from(retry_ms.max(1))));
                 }
                 other => return Err(unexpected("PutPages", &other)),
             }
@@ -126,15 +311,17 @@ impl Client {
 
     /// Read one block.
     pub fn get_block(&mut self, page_id: u64, block: u32) -> Result<Vec<u8>> {
-        match self.request(&Request::GetBlock { page_id, block })?.body {
+        match self.request_replayed(&Request::GetBlock { page_id, block })?.body {
             Reply::Block { data } => Ok(data),
             other => Err(unexpected("GetBlock", &other)),
         }
     }
 
-    /// Write one block.
+    /// Write one block. Replayed on transport failure: block writes are
+    /// absolute (no read-modify-write on the wire), so a duplicate
+    /// apply is content-idempotent.
     pub fn put_block(&mut self, page_id: u64, block: u32, data: Vec<u8>) -> Result<()> {
-        match self.request(&Request::PutBlock { page_id, block, data })?.body {
+        match self.request_replayed(&Request::PutBlock { page_id, block, data })?.body {
             Reply::PutBlock => Ok(()),
             other => Err(unexpected("PutBlock", &other)),
         }
@@ -142,7 +329,7 @@ impl Client {
 
     /// Read `count` consecutive blocks starting at `first`.
     pub fn read_range(&mut self, page_id: u64, first: u32, count: u32) -> Result<Vec<u8>> {
-        match self.request(&Request::ReadRange { page_id, first, count })?.body {
+        match self.request_replayed(&Request::ReadRange { page_id, first, count })?.body {
             Reply::Range { data } => Ok(data),
             other => Err(unexpected("ReadRange", &other)),
         }
@@ -151,7 +338,7 @@ impl Client {
     /// Drain the server's ingest queue and flush deferred dirty cache
     /// blocks; returns how many dirty blocks were written back.
     pub fn flush(&mut self) -> Result<u64> {
-        match self.request(&Request::Flush)?.body {
+        match self.request_replayed(&Request::Flush)?.body {
             Reply::Flushed { blocks } => Ok(blocks),
             other => Err(unexpected("Flush", &other)),
         }
@@ -159,7 +346,7 @@ impl Client {
 
     /// Snapshot the server's STATS field vector.
     pub fn stats(&mut self) -> Result<StatsReply> {
-        match self.request(&Request::Stats)?.body {
+        match self.request_replayed(&Request::Stats)?.body {
             Reply::Stats(stats) => Ok(stats),
             other => Err(unexpected("Stats", &other)),
         }
@@ -185,6 +372,11 @@ impl Client {
 
 fn unexpected(what: &str, reply: &Reply) -> Error {
     match reply {
+        // DATA_LOSS keeps its type across the wire: retrying will not
+        // help and the caller must be able to tell it from a transient.
+        Reply::Error { status: Status::DataLoss, message, .. } => {
+            Error::DataLoss(format!("{what}: {message}"))
+        }
         Reply::Error { status, message, .. } => {
             Error::Corrupt(format!("{what}: server answered {status:?}: {message}"))
         }
@@ -224,6 +416,18 @@ pub struct LoadGenConfig {
     pub seed: u64,
     /// Workload generating page/block payloads (`workloads::by_name`).
     pub workload: String,
+    /// Verify every GET against the only two values a block can
+    /// legally hold (its preloaded content, or the deterministic PUT
+    /// payload for that slot — see [`put_payload`]); mismatches count
+    /// in [`LoadGenReport::check_failures`]. The chaos CI smoke runs
+    /// with this on: a corruption the server fails to fence shows up
+    /// here as a silently-wrong read.
+    pub check_content: bool,
+    /// Transport failures each connection rides out by reconnecting
+    /// and replaying its in-flight window (0 = fail fast, PR 9
+    /// behavior). Outage time stays charged to the pending ops'
+    /// latencies.
+    pub max_reconnects: u64,
 }
 
 impl Default for LoadGenConfig {
@@ -241,6 +445,8 @@ impl Default for LoadGenConfig {
             zipf_s: 0.0,
             seed: 7,
             workload: "mcf".to_string(),
+            check_content: false,
+            max_reconnects: 8,
         }
     }
 }
@@ -267,9 +473,20 @@ pub struct LoadGenReport {
     pub pages_put: u64,
     /// OK ingest-batch responses.
     pub put_batches: u64,
+    /// `DATA_LOSS` responses (also counted in `ops_err`).
+    pub data_loss: u64,
+    /// GET payloads matching neither legal value for their slot —
+    /// silently-wrong reads (`check_content` mode only). The chaos
+    /// smoke asserts this is exactly zero.
+    pub check_failures: u64,
+    /// Transport failures survived by reconnect-and-replay.
+    pub reconnects: u64,
     /// Wall time of the slowest connection, seconds.
     pub wall_s: f64,
     /// Per-op send-to-receive latency, nanoseconds (unsorted).
+    /// Back-off sleeps and reconnect time are **included**: an op's
+    /// clock starts at first send and stops when its response (possibly
+    /// of a replay) arrives, so retry cost shows up in the tail.
     pub lat_ns: Vec<u64>,
 }
 
@@ -299,6 +516,9 @@ impl LoadGenReport {
         self.writes += other.writes;
         self.pages_put += other.pages_put;
         self.put_batches += other.put_batches;
+        self.data_loss += other.data_loss;
+        self.check_failures += other.check_failures;
+        self.reconnects += other.reconnects;
         self.wall_s = self.wall_s.max(other.wall_s);
         self.lat_ns.extend(other.lat_ns);
     }
@@ -357,6 +577,75 @@ enum TraceOp {
     PutPages(Vec<(u64, Vec<u8>)>),
 }
 
+fn request_of(op: &TraceOp) -> Request {
+    match op {
+        TraceOp::Get { page, block } => Request::GetBlock { page_id: *page, block: *block },
+        TraceOp::BatchGet(items) => Request::GetBlocks(items.clone()),
+        TraceOp::Put { page, block, data } => {
+            Request::PutBlock { page_id: *page, block: *block, data: data.clone() }
+        }
+        TraceOp::PutPages(batch) => Request::PutPages(batch.clone()),
+    }
+}
+
+/// The deterministic payload every `check_content` PUT writes to
+/// `(page, block)` — a pure function of the slot, identical across
+/// connections, so a block in the preloaded range only ever holds one
+/// of **two** values: its preload bytes or this. That is what makes
+/// client-side content checking sound under concurrent writers.
+pub fn put_payload(seed: u64, page: u64, block: u32, block_bytes: usize) -> Vec<u8> {
+    let mut rng = Rng::new(
+        seed ^ page.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ (u64::from(block) << 40) ^ 0x10AD_6E4,
+    );
+    let mut out = vec![0u8; block_bytes];
+    rng.fill_bytes(&mut out);
+    out
+}
+
+/// Client-side oracle for `check_content` mode: holds the preloaded
+/// page images (regenerated lazily from the workload — the preload is
+/// deterministic in `seed`) and validates GET payloads against the two
+/// legal values per slot.
+struct ContentChecker {
+    workload: Box<dyn workloads::Workload>,
+    preload: HashMap<u64, Vec<u8>>,
+    pages: u64,
+    page_bytes: usize,
+    seed: u64,
+}
+
+impl ContentChecker {
+    fn new(cfg: &LoadGenConfig) -> Result<ContentChecker> {
+        Ok(ContentChecker {
+            workload: workload_for(cfg)?,
+            preload: HashMap::new(),
+            pages: cfg.pages,
+            page_bytes: cfg.page_bytes,
+            seed: cfg.seed,
+        })
+    }
+
+    /// Whether `data` is a value `(page, block)` may legally hold.
+    /// Pages outside the preloaded range (fresh ingest ids) are not
+    /// tracked and always pass.
+    fn plausible(&mut self, page: u64, block: u32, data: &[u8]) -> bool {
+        if page >= self.pages {
+            return true;
+        }
+        if !self.preload.contains_key(&page) {
+            let image =
+                self.workload.generate(self.page_bytes, self.seed ^ page.wrapping_mul(0x9E37_79B9));
+            self.preload.insert(page, image);
+        }
+        let image = &self.preload[&page];
+        let off = block as usize * data.len();
+        if off + data.len() <= image.len() && &image[off..off + data.len()] == data {
+            return true;
+        }
+        data == put_payload(self.seed, page, block, data.len()).as_slice()
+    }
+}
+
 fn pick_page(rng: &mut Rng, cfg: &LoadGenConfig) -> u64 {
     if cfg.zipf_s > 0.0 {
         rng.zipf(cfg.pages.max(1), cfg.zipf_s) % cfg.pages.max(1)
@@ -394,6 +683,13 @@ fn build_trace(
                 page: pick_page(&mut rng, cfg),
                 block: rng.below(blocks_per_page) as u32,
             });
+        } else if cfg.check_content {
+            // Checked mode writes the slot's deterministic payload so
+            // the oracle keeps exactly two legal values per block.
+            let page = pick_page(&mut rng, cfg);
+            let block = rng.below(blocks_per_page) as u32;
+            let data = put_payload(cfg.seed, page, block, block_bytes);
+            trace.push(TraceOp::Put { page, block, data });
         } else {
             let at = rng.below((pool.len() - block_bytes + 1) as u64) as usize;
             trace.push(TraceOp::Put {
@@ -408,20 +704,36 @@ fn build_trace(
 
 fn drain_one(
     client: &mut Client,
-    pending: &mut VecDeque<Instant>,
+    pending: &mut VecDeque<(Instant, usize)>,
+    trace: &[TraceOp],
+    checker: &mut Option<ContentChecker>,
     report: &mut LoadGenReport,
 ) -> Result<()> {
     let resp = client.recv()?;
-    let sent = pending.pop_front().ok_or_else(|| {
+    let (sent, idx) = pending.pop_front().ok_or_else(|| {
         Error::Corrupt("load generator received a response with nothing pending".into())
     })?;
     report.lat_ns.push(sent.elapsed().as_nanos() as u64);
     match resp.body {
-        Reply::Block { .. } => {
+        Reply::Block { data } => {
+            if let (Some(ck), TraceOp::Get { page, block }) = (checker.as_mut(), &trace[idx]) {
+                if !ck.plausible(*page, *block, &data) {
+                    report.check_failures += 1;
+                }
+            }
             report.reads += 1;
             report.ops_ok += 1;
         }
         Reply::Blocks { items } => {
+            if let (Some(ck), TraceOp::BatchGet(reqs)) = (checker.as_mut(), &trace[idx]) {
+                for ((page, block), item) in reqs.iter().zip(&items) {
+                    if let Some(data) = item {
+                        if !ck.plausible(*page, *block, data) {
+                            report.check_failures += 1;
+                        }
+                    }
+                }
+            }
             report.batch_read_blocks += items.iter().flatten().count() as u64;
             report.batch_reads += 1;
             report.ops_ok += 1;
@@ -436,40 +748,77 @@ fn drain_one(
             report.ops_ok += 1;
         }
         Reply::Error { status: Status::RetryAfter, .. } => report.sheds += 1,
+        Reply::Error { status: Status::DataLoss, .. } => {
+            report.data_loss += 1;
+            report.ops_err += 1;
+        }
         Reply::Error { .. } => report.ops_err += 1,
         _ => report.ops_ok += 1,
     }
     Ok(())
 }
 
+/// Reconnect after a transport failure and re-send every op still in
+/// the window, oldest first. Safe for every trace op (absolute-content
+/// PUTs; see the module doc). The pending entries keep their original
+/// `Instant`s, so the outage and back-off time land in those ops'
+/// measured latencies.
+fn reconnect_and_replay(
+    cfg: &LoadGenConfig,
+    ccfg: &ClientConfig,
+    pending: &VecDeque<(Instant, usize)>,
+    trace: &[TraceOp],
+) -> Result<Client> {
+    let mut client = Client::connect_with(&cfg.addr, ccfg.clone())?;
+    for &(_, idx) in pending {
+        client.send(&request_of(&trace[idx]))?;
+    }
+    Ok(client)
+}
+
 fn run_conn(cfg: &LoadGenConfig, conn: usize) -> Result<LoadGenReport> {
     let workload = workload_for(cfg)?;
-    let mut client = Client::connect(&cfg.addr)?;
+    let ccfg = ClientConfig {
+        backoff_seed: cfg.seed ^ (conn as u64).wrapping_mul(0xBACC_0FF5),
+        ..ClientConfig::default()
+    };
+    let mut client = Client::connect_with(&cfg.addr, ccfg.clone())?;
     let block_bytes = client.block_bytes().max(1);
     let blocks_per_page = (cfg.page_bytes / block_bytes).max(1) as u64;
     let pool = workload.generate(cfg.page_bytes.max(block_bytes) * 4, cfg.seed ^ 0xB10C);
     let trace = build_trace(cfg, workload.as_ref(), conn, blocks_per_page, &pool, block_bytes);
+    let mut checker = if cfg.check_content { Some(ContentChecker::new(cfg)?) } else { None };
 
     let mut report = LoadGenReport::default();
-    let mut pending: VecDeque<Instant> = VecDeque::with_capacity(cfg.pipeline.max(1));
+    let mut pending: VecDeque<(Instant, usize)> = VecDeque::with_capacity(cfg.pipeline.max(1));
+    let mut backoff = Backoff::new(ccfg.retry.clone(), ccfg.backoff_seed ^ 0x10AD);
+    let mut next = 0usize;
     let t0 = Instant::now();
-    for op in &trace {
-        while pending.len() >= cfg.pipeline.max(1) {
-            drain_one(&mut client, &mut pending, &mut report)?;
-        }
-        let req = match op {
-            TraceOp::Get { page, block } => Request::GetBlock { page_id: *page, block: *block },
-            TraceOp::BatchGet(items) => Request::GetBlocks(items.clone()),
-            TraceOp::Put { page, block, data } => {
-                Request::PutBlock { page_id: *page, block: *block, data: data.clone() }
-            }
-            TraceOp::PutPages(batch) => Request::PutPages(batch.clone()),
+    while next < trace.len() || !pending.is_empty() {
+        let step: Result<()> = if next < trace.len() && pending.len() < cfg.pipeline.max(1) {
+            client.send(&request_of(&trace[next])).map(|_| {
+                pending.push_back((Instant::now(), next));
+                next += 1;
+            })
+        } else {
+            drain_one(&mut client, &mut pending, &trace, &mut checker, &mut report)
         };
-        client.send(&req)?;
-        pending.push_back(Instant::now());
-    }
-    while !pending.is_empty() {
-        drain_one(&mut client, &mut pending, &mut report)?;
+        match step {
+            Ok(()) => {}
+            Err(e) if is_transport(&e) && report.reconnects < cfg.max_reconnects => {
+                // Ride out the fault: back off, re-dial, replay the
+                // window. Dial/replay failures burn reconnect budget
+                // too, so a dead server still fails promptly.
+                report.reconnects += 1;
+                thread::sleep(backoff.next_delay());
+                match reconnect_and_replay(cfg, &ccfg, &pending, &trace) {
+                    Ok(c) => client = c,
+                    Err(e2) if is_transport(&e2) => {}
+                    Err(e2) => return Err(e2),
+                }
+            }
+            Err(e) => return Err(e),
+        }
     }
     report.wall_s = t0.elapsed().as_secs_f64();
     Ok(report)
@@ -494,6 +843,63 @@ pub fn run_loadgen(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn backoff_grows_caps_jitters_and_resets() {
+        let policy = RetryPolicy { max_attempts: 5, base_ms: 10, cap_ms: 100 };
+        let mut b = Backoff::new(policy.clone(), 42);
+        let mut prev_window = 0u64;
+        for attempt in 0..8u32 {
+            let exp = (10u64 << attempt.min(30)).min(100);
+            let d = b.next_delay().as_millis() as u64;
+            assert!(d >= exp / 2 && d <= exp, "attempt {attempt}: {d} outside [{}, {exp}]", exp / 2);
+            assert!(exp >= prev_window, "window must be monotone");
+            prev_window = exp;
+        }
+        // saturated at the cap, attempts exhausted, schedule still works
+        assert!(b.exhausted());
+        let d = b.next_delay().as_millis() as u64;
+        assert!((50..=100).contains(&d));
+        b.reset();
+        assert!(!b.exhausted());
+        assert_eq!(b.attempts(), 0);
+        // deterministic in the seed
+        let s1: Vec<_> = (0..6).map(|_| Backoff::new(policy.clone(), 7).next_delay()).collect();
+        let mut b2 = Backoff::new(policy.clone(), 7);
+        assert_eq!(s1[0], b2.next_delay(), "same seed, same first delay");
+        // server hint floors the delay
+        let mut b3 = Backoff::new(policy, 9);
+        assert!(b3.next_delay_at_least(500) >= Duration::from_millis(500));
+    }
+
+    #[test]
+    fn put_payload_is_deterministic_per_slot() {
+        let a = put_payload(7, 3, 9, 64);
+        assert_eq!(a, put_payload(7, 3, 9, 64));
+        assert_eq!(a.len(), 64);
+        assert_ne!(a, put_payload(7, 4, 9, 64), "distinct pages, distinct payloads");
+        assert_ne!(a, put_payload(7, 3, 10, 64), "distinct blocks, distinct payloads");
+        assert_ne!(a, put_payload(8, 3, 9, 64), "distinct seeds, distinct payloads");
+    }
+
+    #[test]
+    fn content_checker_accepts_both_legal_values_only() {
+        let cfg = LoadGenConfig { check_content: true, ..Default::default() };
+        let mut ck = ContentChecker::new(&cfg).unwrap();
+        let workload = workload_for(&cfg).unwrap();
+        let image = workload.generate(cfg.page_bytes, cfg.seed ^ 5u64.wrapping_mul(0x9E37_79B9));
+        let bb = 64usize;
+        // legal value 1: the preloaded bytes
+        assert!(ck.plausible(5, 2, &image[2 * bb..3 * bb]));
+        // legal value 2: the slot's deterministic PUT payload
+        assert!(ck.plausible(5, 2, &put_payload(cfg.seed, 5, 2, bb)));
+        // anything else is a silently-wrong read
+        let mut bad = image[2 * bb..3 * bb].to_vec();
+        bad[17] ^= 0x40;
+        assert!(!ck.plausible(5, 2, &bad));
+        // fresh-ingest ids above the preloaded range are not tracked
+        assert!(ck.plausible(cfg.pages + 1, 0, &bad));
+    }
 
     #[test]
     fn percentile_nearest_rank() {

@@ -1,0 +1,533 @@
+//! Deterministic network-fault injection: the socket analogue of
+//! [`crate::persist::vfs::FaultFs`] (DESIGN.md §13).
+//!
+//! Three layers, all seeded and replayable:
+//!
+//! * [`FaultPlan`] — *where* faults land, expressed as mean byte
+//!   intervals (cut the connection every ~N bytes, flip a bit every
+//!   ~M bytes, stall every ~K bytes). Intervals are jittered ±50%
+//!   from a seeded PRNG, so schedules are irregular but exactly
+//!   reproducible.
+//! * [`FaultStream`] — wraps any `Read + Write` transport and applies
+//!   the plan to bytes crossing it in either direction. A *cut*
+//!   delivers the scheduled prefix and then fails every later call
+//!   with `ConnectionReset` — precisely a mid-frame disconnect.
+//! * [`ChaosProxy`] — an in-process TCP relay that fronts a real
+//!   `GBN1` server and applies an independent fault schedule to each
+//!   proxied connection and direction. The chaos tests and the CI
+//!   smoke point the load generator at the proxy instead of the
+//!   server; the client's reconnect-and-replay path then has to earn
+//!   its keep against real sockets.
+//!
+//! Fault *positions* are deterministic in `(seed, connection, byte
+//! offset)`. What the faults hit still depends on thread interleaving
+//! — that is the point of a chaos harness: schedules vary, invariants
+//! must not.
+
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::util::prng::Rng;
+use crate::Result;
+
+/// Seeded fault schedule. All intervals are mean bytes between events;
+/// 0 disables that fault class. `FaultPlan::default()` injects nothing
+/// — a proxy running the default plan is a transparent relay.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seed for every schedule derived from this plan.
+    pub seed: u64,
+    /// Mean bytes relayed before the connection is cut mid-stream.
+    pub cut_every_bytes: u64,
+    /// Mean bytes between single-bit corruptions.
+    pub corrupt_every_bytes: u64,
+    /// Mean bytes between injected stalls.
+    pub stall_every_bytes: u64,
+    /// Duration of each injected stall, milliseconds.
+    pub stall_ms: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 1,
+            cut_every_bytes: 0,
+            corrupt_every_bytes: 0,
+            stall_every_bytes: 0,
+            stall_ms: 5,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Derive the plan for one proxied connection: same fault mix,
+    /// per-connection seed, so every connection sees its own schedule.
+    fn for_conn(&self, conn_id: u64) -> FaultPlan {
+        FaultPlan { seed: self.seed ^ conn_id.wrapping_mul(0x9E37_79B9_7F4A_7C15), ..self.clone() }
+    }
+}
+
+/// Draw the next event position: `at + interval/2 + jitter(interval)`,
+/// i.e. uniformly in `[at + i/2, at + 3i/2)`. `u64::MAX` when disabled.
+fn next_event(rng: &mut Rng, at: u64, interval: u64) -> u64 {
+    if interval == 0 {
+        return u64::MAX;
+    }
+    at.saturating_add(interval / 2).saturating_add(rng.below(interval.max(1)))
+}
+
+/// One direction's fault state: byte position plus the pre-drawn
+/// positions of the next cut/corruption/stall.
+struct Injector {
+    plan: FaultPlan,
+    rng: Rng,
+    pos: u64,
+    next_cut: u64,
+    next_corrupt: u64,
+    next_stall: u64,
+    /// Set once the cut fires: every later byte is refused.
+    dead: bool,
+}
+
+impl Injector {
+    fn new(plan: &FaultPlan, seed: u64) -> Injector {
+        let mut rng = Rng::new(seed);
+        let next_cut = next_event(&mut rng, 0, plan.cut_every_bytes);
+        let next_corrupt = next_event(&mut rng, 0, plan.corrupt_every_bytes);
+        let next_stall = next_event(&mut rng, 0, plan.stall_every_bytes);
+        Injector { plan: plan.clone(), rng, pos: 0, next_cut, next_corrupt, next_stall, dead: false }
+    }
+
+    /// Apply the schedule to `buf` (bytes `pos..pos+len` of this
+    /// direction). Corruptions mutate `buf` in place; stalls sleep
+    /// here. Returns `(deliverable_prefix_len, cut_now)` — on a cut
+    /// the prefix up to the cut position is still delivered, which is
+    /// what makes the disconnect land *mid-frame*.
+    fn process(&mut self, buf: &mut [u8]) -> (usize, bool) {
+        if self.dead {
+            return (0, true);
+        }
+        let len = buf.len() as u64;
+        let mut keep = len;
+        let mut cut = false;
+        if self.next_cut < self.pos.saturating_add(len) {
+            keep = self.next_cut.saturating_sub(self.pos).min(len);
+            cut = true;
+            self.dead = true;
+        }
+        while self.next_corrupt < self.pos.saturating_add(keep) {
+            let off = (self.next_corrupt - self.pos) as usize;
+            buf[off] ^= 1u8 << self.rng.below(8);
+            self.next_corrupt = next_event(&mut self.rng, self.next_corrupt, self.plan.corrupt_every_bytes);
+        }
+        if self.next_stall < self.pos.saturating_add(keep) {
+            thread::sleep(Duration::from_millis(self.plan.stall_ms));
+            self.next_stall = next_event(&mut self.rng, self.next_stall, self.plan.stall_every_bytes);
+        }
+        self.pos = self.pos.saturating_add(keep);
+        (keep as usize, cut)
+    }
+}
+
+fn reset_err() -> io::Error {
+    io::Error::new(io::ErrorKind::ConnectionReset, "injected fault: connection cut")
+}
+
+/// A `Read + Write` transport with the fault plan applied to both
+/// directions (independent schedules, seeds derived from the plan's).
+/// Wrap a [`TcpStream`] — or anything duplex — to make it misbehave on
+/// demand.
+pub struct FaultStream<S> {
+    inner: S,
+    read_inject: Injector,
+    write_inject: Injector,
+}
+
+impl<S> FaultStream<S> {
+    pub fn new(inner: S, plan: &FaultPlan) -> FaultStream<S> {
+        FaultStream {
+            inner,
+            read_inject: Injector::new(plan, plan.seed ^ 0x5EAD),
+            write_inject: Injector::new(plan, plan.seed ^ 0x3717E),
+        }
+    }
+
+    /// The wrapped transport (faults forgotten).
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+}
+
+impl<S: Read> Read for FaultStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if self.read_inject.dead {
+            return Err(reset_err());
+        }
+        let n = self.inner.read(buf)?;
+        if n == 0 {
+            return Ok(0);
+        }
+        let (keep, cut) = self.read_inject.process(&mut buf[..n]);
+        if cut && keep == 0 {
+            return Err(reset_err());
+        }
+        Ok(keep)
+    }
+}
+
+impl<S: Write> Write for FaultStream<S> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if self.write_inject.dead {
+            return Err(reset_err());
+        }
+        if buf.is_empty() {
+            return self.inner.write(buf);
+        }
+        let mut scratch = buf.to_vec();
+        let (keep, cut) = self.write_inject.process(&mut scratch);
+        if keep > 0 {
+            self.inner.write_all(&scratch[..keep])?;
+        }
+        if cut && keep == 0 {
+            return Err(reset_err());
+        }
+        // A short count on a cut makes the caller's write_all retry
+        // and hit the dead check — the reset surfaces mid-frame.
+        Ok(keep)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// In-process chaos TCP relay: accepts on an ephemeral local port and
+/// pumps bytes to/from `upstream` through per-direction [`Injector`]s.
+/// Cutting either direction tears down the whole proxied connection
+/// (both sockets shut down), like a real mid-flight disconnect.
+pub struct ChaosProxy {
+    local: SocketAddr,
+    stop: Arc<AtomicBool>,
+    conns: Arc<AtomicU64>,
+    cuts: Arc<AtomicU64>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl ChaosProxy {
+    /// Start relaying to `upstream` under `plan`.
+    pub fn start(upstream: &str, plan: FaultPlan) -> Result<ChaosProxy> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(AtomicU64::new(0));
+        let cuts = Arc::new(AtomicU64::new(0));
+        let upstream = upstream.to_string();
+        let (stop2, conns2, cuts2) = (Arc::clone(&stop), Arc::clone(&conns), Arc::clone(&cuts));
+        let accept_thread = thread::Builder::new()
+            .name("gbdi-chaos".to_string())
+            .spawn(move || {
+                let mut conn_id = 0u64;
+                loop {
+                    if stop2.load(Ordering::Acquire) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((client, _)) => {
+                            conn_id += 1;
+                            conns2.fetch_add(1, Ordering::Relaxed);
+                            let conn_plan = plan.for_conn(conn_id);
+                            let upstream = upstream.clone();
+                            let (stop3, cuts3) = (Arc::clone(&stop2), Arc::clone(&cuts2));
+                            // relay threads are detached: they exit when
+                            // either side closes, a cut fires, or stop is
+                            // raised (polled via 50 ms read timeouts)
+                            let _ = thread::Builder::new()
+                                .name("gbdi-chaos-conn".to_string())
+                                .spawn(move || relay_conn(client, &upstream, &conn_plan, stop3, cuts3));
+                        }
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                            thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn chaos accept thread");
+        Ok(ChaosProxy { local, stop, conns, cuts, accept_thread: Some(accept_thread) })
+    }
+
+    /// Address clients should dial instead of the real server.
+    pub fn addr(&self) -> String {
+        self.local.to_string()
+    }
+
+    /// Connections accepted so far.
+    pub fn conns(&self) -> u64 {
+        self.conns.load(Ordering::Relaxed)
+    }
+
+    /// Injected disconnects fired so far — chaos tests assert this is
+    /// nonzero to prove the run actually exercised the fault path.
+    pub fn cuts(&self) -> u64 {
+        self.cuts.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting and wake the relay threads. Idempotent.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Pump one direction until EOF, error, cut, or stop.
+fn pump(
+    mut src: TcpStream,
+    mut dst: TcpStream,
+    mut inject: Injector,
+    stop: Arc<AtomicBool>,
+    cuts: Arc<AtomicU64>,
+) {
+    let mut buf = [0u8; 4096];
+    loop {
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+        match src.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                let (keep, cut) = inject.process(&mut buf[..n]);
+                if keep > 0 && dst.write_all(&buf[..keep]).and_then(|()| dst.flush()).is_err() {
+                    break;
+                }
+                if cut {
+                    cuts.fetch_add(1, Ordering::Relaxed);
+                    break;
+                }
+            }
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => break,
+        }
+    }
+    // Tear down both halves: a cut (or stop) kills the connection, not
+    // just one direction — mirrors how a real peer vanishes.
+    let _ = src.shutdown(Shutdown::Both);
+    let _ = dst.shutdown(Shutdown::Both);
+}
+
+fn relay_conn(
+    client: TcpStream,
+    upstream: &str,
+    plan: &FaultPlan,
+    stop: Arc<AtomicBool>,
+    cuts: Arc<AtomicU64>,
+) {
+    let Ok(server) = TcpStream::connect(upstream) else {
+        let _ = client.shutdown(Shutdown::Both);
+        return;
+    };
+    let timeout = Some(Duration::from_millis(50));
+    for s in [&client, &server] {
+        let _ = s.set_nodelay(true);
+        let _ = s.set_read_timeout(timeout);
+    }
+    let (Ok(client2), Ok(server2)) = (client.try_clone(), server.try_clone()) else {
+        let _ = client.shutdown(Shutdown::Both);
+        let _ = server.shutdown(Shutdown::Both);
+        return;
+    };
+    let up = Injector::new(plan, plan.seed ^ 0xC25);
+    let down = Injector::new(plan, plan.seed ^ 0x52C);
+    let (stop2, cuts2) = (Arc::clone(&stop), Arc::clone(&cuts));
+    let t = thread::Builder::new()
+        .name("gbdi-chaos-up".to_string())
+        .spawn(move || pump(client, server2, up, stop2, cuts2))
+        .expect("spawn chaos pump");
+    pump(server, client2, down, stop, cuts);
+    let _ = t.join();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_are_deterministic_and_jittered() {
+        let plan = FaultPlan { seed: 9, corrupt_every_bytes: 64, ..Default::default() };
+        let run = |p: &FaultPlan| {
+            let mut inj = Injector::new(p, p.seed);
+            let mut buf = vec![0u8; 4096];
+            let (keep, cut) = inj.process(&mut buf);
+            assert_eq!((keep, cut), (4096, false), "no cut scheduled");
+            buf
+        };
+        let a = run(&plan);
+        let b = run(&plan);
+        assert_eq!(a, b, "same seed, same corruption positions");
+        let flips = a.iter().filter(|&&x| x != 0).count();
+        // mean interval 64 over 4 KiB: dozens of flips, not 0, not all
+        assert!(flips >= 16 && flips <= 256, "{flips} flips");
+        for x in a.iter().filter(|&&x| x != 0) {
+            assert_eq!(x.count_ones(), 1, "exactly one bit per corruption");
+        }
+        let c = run(&FaultPlan { seed: 10, ..plan });
+        assert_ne!(a, c, "different seed, different schedule");
+    }
+
+    #[test]
+    fn cut_delivers_prefix_then_refuses() {
+        let plan = FaultPlan { seed: 3, cut_every_bytes: 100, ..Default::default() };
+        let mut inj = Injector::new(&plan, plan.seed);
+        let mut buf = vec![0u8; 1024];
+        let (keep, cut) = inj.process(&mut buf);
+        assert!(cut, "cut must fire inside the first KiB");
+        assert!(keep >= 50 && keep < 150, "prefix near the scheduled position, got {keep}");
+        let (keep2, cut2) = inj.process(&mut buf);
+        assert_eq!((keep2, cut2), (0, true), "dead after the cut");
+    }
+
+    #[test]
+    fn disabled_plan_is_transparent() {
+        let mut inj = Injector::new(&FaultPlan::default(), 1);
+        let mut buf: Vec<u8> = (0..=255u8).collect();
+        let orig = buf.clone();
+        for _ in 0..64 {
+            let (keep, cut) = inj.process(&mut buf);
+            assert_eq!((keep, cut), (256, false));
+            assert_eq!(buf, orig, "no corruption without a schedule");
+        }
+    }
+
+    /// In-memory duplex for exercising the stream wrapper.
+    struct Duplex {
+        rx: std::io::Cursor<Vec<u8>>,
+        tx: Vec<u8>,
+    }
+
+    impl Read for Duplex {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            self.rx.read(buf)
+        }
+    }
+
+    impl Write for Duplex {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.tx.write(buf)
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn fault_stream_cuts_reads_mid_stream() {
+        let inner = Duplex { rx: std::io::Cursor::new(vec![7u8; 4096]), tx: Vec::new() };
+        let plan = FaultPlan { seed: 11, cut_every_bytes: 200, ..Default::default() };
+        let mut fs = FaultStream::new(inner, &plan);
+        let mut got = 0usize;
+        let mut buf = [0u8; 256];
+        let err = loop {
+            match fs.read(&mut buf) {
+                Ok(0) => panic!("EOF before the injected cut"),
+                Ok(n) => got += n,
+                Err(e) => break e,
+            }
+        };
+        assert_eq!(err.kind(), io::ErrorKind::ConnectionReset);
+        assert!(got < 4096, "cut must land before the stream drains, got {got}");
+    }
+
+    #[test]
+    fn fault_stream_passthrough_when_disabled() {
+        let inner = Duplex { rx: std::io::Cursor::new((0..100u8).collect()), tx: Vec::new() };
+        let mut fs = FaultStream::new(inner, &FaultPlan::default());
+        let mut out = Vec::new();
+        fs.read_to_end(&mut out).unwrap();
+        assert_eq!(out, (0..100u8).collect::<Vec<_>>());
+        fs.write_all(&out).unwrap();
+        assert_eq!(fs.into_inner().tx, (0..100u8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn proxy_relays_transparently_without_faults() {
+        // echo upstream
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let upstream = listener.local_addr().unwrap().to_string();
+        let echo = thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut buf = [0u8; 512];
+            loop {
+                match s.read(&mut buf) {
+                    Ok(0) | Err(_) => break,
+                    Ok(n) => {
+                        if s.write_all(&buf[..n]).is_err() {
+                            break;
+                        }
+                    }
+                }
+            }
+        });
+        let mut proxy = ChaosProxy::start(&upstream, FaultPlan::default()).unwrap();
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        let msg: Vec<u8> = (0..200u8).collect();
+        c.write_all(&msg).unwrap();
+        let mut back = vec![0u8; msg.len()];
+        c.read_exact(&mut back).unwrap();
+        assert_eq!(back, msg, "default plan must be a transparent relay");
+        assert_eq!(proxy.conns(), 1);
+        assert_eq!(proxy.cuts(), 0);
+        drop(c);
+        proxy.stop();
+        let _ = echo.join();
+    }
+
+    #[test]
+    fn proxy_cut_tears_down_the_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let upstream = listener.local_addr().unwrap().to_string();
+        let sink = thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut buf = [0u8; 4096];
+            while matches!(s.read(&mut buf), Ok(n) if n > 0) {}
+        });
+        let plan = FaultPlan { seed: 5, cut_every_bytes: 512, ..Default::default() };
+        let mut proxy = ChaosProxy::start(&upstream, plan).unwrap();
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        // Keep writing until the injected cut surfaces as an error or
+        // EOF on our side (reads return Ok(0) after the shutdown).
+        let chunk = [0xABu8; 256];
+        let mut saw_teardown = false;
+        for _ in 0..1000 {
+            if c.write_all(&chunk).is_err() {
+                saw_teardown = true;
+                break;
+            }
+            thread::sleep(Duration::from_millis(1));
+        }
+        if !saw_teardown {
+            let mut b = [0u8; 1];
+            saw_teardown = !matches!(c.read(&mut b), Ok(n) if n > 0);
+        }
+        assert!(saw_teardown, "injected cut never surfaced to the client");
+        assert!(proxy.cuts() >= 1, "cut counter must record the injected disconnect");
+        proxy.stop();
+        let _ = sink.join();
+    }
+}

@@ -23,13 +23,22 @@
 //!   then the ingest queue, then flushes deferred dirty cache blocks —
 //!   the graceful-shutdown path `gbdi serve` runs on SIGINT/SIGTERM.
 //! * [`Client`] — blocking pipelined client (window of in-flight
-//!   requests, FIFO response matching) plus the trace-driven
-//!   multi-connection load generator behind `gbdi client --op load`
-//!   and `cargo bench --bench serving`.
+//!   requests, FIFO response matching) with per-op deadlines and
+//!   reconnect-and-replay under capped jittered back-off, plus the
+//!   trace-driven multi-connection load generator behind
+//!   `gbdi client --op load` and `cargo bench --bench serving`.
+//! * [`fault`] — the deterministic network-fault seam: a seeded
+//!   [`FaultStream`] wrapper (mid-frame cuts, stalls, bit corruption)
+//!   and the in-process [`ChaosProxy`] TCP relay the chaos tests and
+//!   CI smoke route traffic through. The socket analogue of
+//!   `persist::vfs::FaultFs`.
 
 pub mod client;
+pub mod fault;
 pub mod net;
 pub mod protocol;
 
-pub use client::{percentile, Client, LoadGenConfig, LoadGenReport};
+pub use client::{percentile, preload, put_payload, run_loadgen, Backoff, Client, ClientConfig,
+                 LoadGenConfig, LoadGenReport, RetryPolicy};
+pub use fault::{ChaosProxy, FaultPlan, FaultStream};
 pub use net::{Server, ServerConfig, ServerStats, ServerStatsSnapshot};

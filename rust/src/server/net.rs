@@ -25,13 +25,6 @@ use super::protocol::{
 use crate::coordinator::CompressionService;
 use crate::{Error, Result};
 
-/// How long a fresh connection may take to present its 4 magic bytes.
-const HANDSHAKE_TIMEOUT_MS: u64 = 5_000;
-
-/// Socket write timeout: a peer that stops reading for this long is
-/// dropped rather than allowed to wedge its writer thread forever.
-const WRITE_TIMEOUT_MS: u64 = 10_000;
-
 /// Tuning knobs for [`Server::bind`]; `[server]` in the config file.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ServerConfig {
@@ -54,6 +47,13 @@ pub struct ServerConfig {
     pub retry_after_ms: u32,
     /// Stop-flag poll granularity for idle readers and the accept loop.
     pub poll_interval_ms: u64,
+    /// How long a fresh connection may take to present its 4 magic
+    /// bytes before it is dropped (`gbdi serve --handshake-timeout`).
+    pub handshake_timeout_ms: u64,
+    /// Socket write timeout: a peer that stops reading for this long is
+    /// dropped rather than allowed to wedge its writer thread forever
+    /// (`gbdi serve --write-timeout`).
+    pub write_timeout_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -67,6 +67,8 @@ impl Default for ServerConfig {
             max_inflight_pages: 0,
             retry_after_ms: 50,
             poll_interval_ms: 50,
+            handshake_timeout_ms: 5_000,
+            write_timeout_ms: 10_000,
         }
     }
 }
@@ -355,6 +357,14 @@ impl Server {
         &self.svc
     }
 
+    /// Shared handle for sidecar threads (the serve CLI's
+    /// `--chaos-corrupt` test hook). Drop every clone before
+    /// [`Server::stop`], which needs sole ownership to hand the
+    /// service back.
+    pub fn service_shared(&self) -> Arc<CompressionService> {
+        Arc::clone(&self.svc)
+    }
+
     /// True once a client sent the SHUTDOWN op: the caller owning the
     /// server should invoke [`Server::stop`].
     pub fn shutdown_requested(&self) -> bool {
@@ -460,12 +470,12 @@ fn read_exact_polled(
 fn conn_loop(ctx: &ConnCtx, mut stream: TcpStream) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(Duration::from_millis(ctx.cfg.poll_interval_ms.max(1))));
-    let _ = stream.set_write_timeout(Some(Duration::from_millis(WRITE_TIMEOUT_MS)));
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(ctx.cfg.write_timeout_ms.max(1))));
 
     // Handshake: the client's 4 magic bytes, under a deadline so a
     // silent connection cannot hold a thread forever.
     let mut magic = [0u8; 4];
-    let deadline = Instant::now() + Duration::from_millis(HANDSHAKE_TIMEOUT_MS);
+    let deadline = Instant::now() + Duration::from_millis(ctx.cfg.handshake_timeout_ms.max(1));
     match read_exact_polled(&mut stream, &mut magic, &ctx.stop, Some(deadline)) {
         ReadOutcome::Done => {}
         ReadOutcome::CleanEof | ReadOutcome::Aborted => return,
@@ -604,11 +614,13 @@ fn err(req_id: u64, status: Status, op: u8, retry_ms: u32, message: &str) -> Res
 }
 
 /// Map a service error onto the wire: bad indices are the client's
-/// fault, a missing/corrupt page is NotFound, anything else is ours.
+/// fault, a missing/corrupt page is NotFound, an unhealable quarantined
+/// page is DataLoss, anything else is ours.
 fn err_for(req_id: u64, op: u8, e: &Error) -> Response {
     let status = match e {
         Error::Config(_) => Status::BadRequest,
         Error::Corrupt(_) => Status::NotFound,
+        Error::DataLoss(_) => Status::DataLoss,
         _ => Status::ServerError,
     };
     err(req_id, status, op, 0, &e.to_string())
@@ -696,6 +708,7 @@ pub(crate) fn stats_reply(svc: &CompressionService, server: &ServerStats) -> Sta
     let m = svc.metrics();
     let (logical, stored, _ratio) = svc.storage_ratio();
     let cache = svc.cache_totals();
+    let integrity = svc.integrity_totals();
     let mut fields = vec![0u64; stats_field::COUNT];
     fields[stats_field::ACCEPTED_CONNS] = s.accepted_conns;
     fields[stats_field::ACTIVE_CONNS] = s.active_conns;
@@ -726,6 +739,10 @@ pub(crate) fn stats_reply(svc: &CompressionService, server: &ServerStats) -> Sta
     fields[stats_field::DEFERRED_FLUSHES] = cache.deferred_flushes;
     fields[stats_field::CACHED_BLOCKS] = cache.cached_blocks;
     fields[stats_field::DIRTY_BLOCKS] = cache.dirty_blocks;
+    fields[stats_field::SCRUBBED_PAGES] = integrity.scrubbed;
+    fields[stats_field::CORRUPT_DETECTED] = integrity.corrupt_detected;
+    fields[stats_field::HEALED] = integrity.healed;
+    fields[stats_field::QUARANTINED] = integrity.quarantined;
     StatsReply { fields }
 }
 

@@ -103,6 +103,11 @@ pub enum Status {
     ServerError = 4,
     /// The server is draining; no new work is accepted.
     ShuttingDown = 5,
+    /// The addressed page failed its integrity check and no durable
+    /// copy could heal it: the data is gone, not merely unreadable
+    /// (DESIGN.md §13). Retrying will not help; restore from backup or
+    /// overwrite the page.
+    DataLoss = 6,
 }
 
 impl Status {
@@ -115,6 +120,7 @@ impl Status {
             3 => Status::RetryAfter,
             4 => Status::ServerError,
             5 => Status::ShuttingDown,
+            6 => Status::DataLoss,
             _ => return None,
         })
     }
@@ -251,8 +257,17 @@ pub mod stats_field {
     pub const CACHED_BLOCKS: usize = 27;
     /// Resident blocks carrying an unflushed write.
     pub const DIRTY_BLOCKS: usize = 28;
+    /// Pages re-verified by the integrity scrubber (or explicit scrubs).
+    pub const SCRUBBED_PAGES: usize = 29;
+    /// Digest mismatches detected (scrub or verified read).
+    pub const CORRUPT_DETECTED: usize = 30;
+    /// Quarantined pages restored from durable state.
+    pub const HEALED: usize = 31;
+    /// Quarantine transitions (monotonic; a healed page does not
+    /// decrement it).
+    pub const QUARANTINED: usize = 32;
     /// Number of fields this build emits.
-    pub const COUNT: usize = 29;
+    pub const COUNT: usize = 33;
 
     /// Human-readable field names in frozen index order (`gbdi client
     /// --op stats` and the protocol docs render from this table).
@@ -286,6 +301,10 @@ pub mod stats_field {
         "deferred_flushes",
         "cached_blocks",
         "dirty_blocks",
+        "scrubbed_pages",
+        "corrupt_detected",
+        "healed",
+        "quarantined",
     ];
 }
 
@@ -772,6 +791,65 @@ pub fn arbitrary_request(rng: &mut Rng) -> Request {
     }
 }
 
+/// Generate a pseudo-random valid response — the client-side twin of
+/// [`arbitrary_request`], feeding the reply-decoder fuzz in
+/// `tests/server_proto.rs` (mutated server output must never panic or
+/// hang [`decode_response`]).
+pub fn arbitrary_response(rng: &mut Rng) -> Response {
+    let req_id = rng.next_u64();
+    let body = match rng.below(10) {
+        0 => Reply::PutPages { accepted: rng.below(1 << 16) as u32 },
+        1 => {
+            let mut data = vec![0u8; rng.below(256) as usize];
+            rng.fill_bytes(&mut data);
+            Reply::Block { data }
+        }
+        2 => {
+            let n = rng.below(8) as usize;
+            Reply::Blocks {
+                items: (0..n)
+                    .map(|_| {
+                        if rng.chance(0.3) {
+                            None
+                        } else {
+                            let mut data = vec![0u8; rng.below(128) as usize];
+                            rng.fill_bytes(&mut data);
+                            Some(data)
+                        }
+                    })
+                    .collect(),
+            }
+        }
+        3 => Reply::PutBlock,
+        4 => {
+            let mut data = vec![0u8; rng.below(512) as usize];
+            rng.fill_bytes(&mut data);
+            Reply::Range { data }
+        }
+        5 => Reply::Flushed { blocks: rng.next_u64() },
+        6 => Reply::Stats(StatsReply {
+            fields: (0..rng.below(2 * stats_field::COUNT as u64 + 1)).map(|_| rng.next_u64()).collect(),
+        }),
+        7 => Reply::Version { version: rng.next_u64() },
+        8 => Reply::ShutdownAck,
+        _ => {
+            let status = match rng.below(6) {
+                0 => Status::NotFound,
+                1 => Status::BadRequest,
+                2 => Status::RetryAfter,
+                3 => Status::ShuttingDown,
+                4 => Status::DataLoss,
+                _ => Status::ServerError,
+            };
+            let n = rng.below(48) as usize;
+            let message: String =
+                (0..n).map(|_| char::from(b'a' + (rng.below(26) as u8))).collect();
+            Reply::Error { status, op: rng.below(256) as u8, retry_ms: rng.next_u32(), message }
+        }
+    };
+    Response { req_id, body }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -832,6 +910,7 @@ mod tests {
             Status::RetryAfter,
             Status::ServerError,
             Status::ShuttingDown,
+            Status::DataLoss,
         ] {
             roundtrip_response(Response {
                 req_id: 10,

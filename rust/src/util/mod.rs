@@ -6,6 +6,7 @@
 pub mod alloc;
 pub mod bench;
 pub mod bits;
+pub mod crc;
 pub mod pool;
 pub mod prng;
 pub mod stats;

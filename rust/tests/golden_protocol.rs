@@ -150,8 +150,16 @@ fn golden_response_frames() {
 
 #[test]
 fn stats_layout_is_frozen() {
-    // The golden stats reply carries exactly one word per frozen field;
-    // growing the field set is append-only and must rev this fixture.
-    assert_eq!(stats_field::COUNT, 29, "stats_field grew: rev STATS fixtures + docs");
+    // Growing the field set is append-only and must rev this assert:
+    // 29 fields through the durability release, +4 integrity counters
+    // (scrubbed_pages/corrupt_detected/healed/quarantined) at indices
+    // 29..33. The golden stats reply deliberately still carries 29
+    // words — StatsReply is length-prefixed, so an old-length vector
+    // must keep decoding (that IS the append-only guarantee).
+    assert_eq!(stats_field::COUNT, 33, "stats_field grew: rev STATS fixtures + docs");
     assert_eq!(stats_field::NAMES.len(), stats_field::COUNT);
+    assert_eq!(stats_field::SCRUBBED_PAGES, 29);
+    assert_eq!(stats_field::CORRUPT_DETECTED, 30);
+    assert_eq!(stats_field::HEALED, 31);
+    assert_eq!(stats_field::QUARANTINED, 32);
 }

@@ -1,0 +1,301 @@
+//! End-to-end integrity plane: chaos property tests.
+//!
+//! Four arms, one property: **no client-visible read is ever silently
+//! wrong**. Under injected faults every read must come back as the
+//! correct bytes, a clean typed error ([`gbdi::Error::DataLoss`]), or
+//! healed-correct content — and never a panic.
+//!
+//! * storage bitflips with no durable copy → exact quarantine
+//!   accounting, `DATA_LOSS` on every touched path, re-ingest lifts
+//!   the fence;
+//! * storage bitflips **with** a durable copy → reads self-heal to the
+//!   original bytes and quarantine drains;
+//! * wire chaos (mid-frame cuts + stalls through [`ChaosProxy`]) →
+//!   the resilient client reconnects and replays, content-checked
+//!   GETs stay correct, and wire faults never masquerade as storage
+//!   corruption;
+//! * integrity off (the default) → bit-identical reads to an
+//!   integrity-enabled build on a clean store and zero plane activity,
+//!   pinning the "off ⇒ unchanged" contract.
+
+use gbdi::coordinator::{CompressionService, IntegrityConfig, ServiceConfig};
+use gbdi::persist::{Durability, FaultFs, PersistConfig, Vfs};
+use gbdi::server::protocol::stats_field;
+use gbdi::server::{self, ChaosProxy, Client, FaultPlan, LoadGenConfig, Server, ServerConfig};
+use gbdi::util::prng::Rng;
+use gbdi::workloads::{self, Workload};
+use gbdi::{BlockCodec, CodecKind, Error, GbdiConfig};
+use std::sync::Arc;
+
+const PAGE_BYTES: usize = 4096;
+const BLOCK_BYTES: usize = 64;
+const BLOCKS: usize = PAGE_BYTES / BLOCK_BYTES;
+
+/// Deterministic analysis-free codec so reads depend on nothing but
+/// the stored frames (same recipe as `tests/server_proto.rs`).
+fn static_codec() -> Arc<dyn BlockCodec> {
+    let image = workloads::by_name("mcf").unwrap().generate(1 << 16, 7);
+    Arc::from(CodecKind::Gbdi.build_for_image(&image, &GbdiConfig::default()))
+}
+
+fn mcf() -> Box<dyn Workload> {
+    workloads::by_name("mcf").unwrap()
+}
+
+/// Flip exactly one stored bit of `page`, starting the block probe at
+/// a seeded offset so different victims corrupt different blocks.
+fn flip_one_bit(svc: &CompressionService, page: u64, rng: &mut Rng) -> bool {
+    let start = rng.below(BLOCKS as u64) as usize;
+    let bit = rng.below(8);
+    (0..BLOCKS).any(|off| svc.corrupt_page_block(page, (start + off) % BLOCKS, bit))
+}
+
+#[test]
+fn bitflip_storm_reads_are_correct_or_clean_data_loss() {
+    const PAGES: u64 = 24;
+    let svc = CompressionService::start_static(
+        ServiceConfig {
+            workers: 2,
+            shards: 3,
+            integrity: IntegrityConfig { enabled: true, verify_reads: true, scrub_mib_s: 64 },
+            ..Default::default()
+        },
+        static_codec(),
+    )
+    .unwrap();
+    let w = mcf();
+    let oracle: Vec<Vec<u8>> = (0..PAGES).map(|i| w.generate(PAGE_BYTES, i)).collect();
+    for (i, img) in oracle.iter().enumerate() {
+        svc.submit(i as u64, img.clone());
+    }
+    svc.flush();
+
+    // randomized corruption schedule: distinct victims, one bit each
+    let mut rng = Rng::new(0xB17_F11A);
+    let mut victims: Vec<u64> = Vec::new();
+    while victims.len() < 6 {
+        let p = rng.below(PAGES);
+        if victims.contains(&p) {
+            continue;
+        }
+        assert!(flip_one_bit(&svc, p, &mut rng), "page {p}: no stored bit to flip");
+        victims.push(p);
+    }
+
+    // every read: correct bytes or a clean typed error — whichever
+    // detector fences first (scrubber or verified read), never garbage
+    for p in 0..PAGES {
+        let r = svc.read_page(p);
+        if victims.contains(&p) {
+            match r {
+                Err(Error::DataLoss(msg)) => {
+                    assert!(!msg.is_empty(), "DATA_LOSS must say which page")
+                }
+                other => panic!("corrupted page {p} served without a fence: {other:?}"),
+            }
+        } else {
+            assert_eq!(r.unwrap(), oracle[p as usize], "untouched page {p} drifted");
+        }
+    }
+    // the block paths honor the same fence
+    let v = victims[0];
+    let mut buf = vec![0u8; BLOCK_BYTES];
+    assert!(matches!(svc.read_block(v, 0, &mut buf), Err(Error::DataLoss(_))));
+    assert!(matches!(svc.write_block(v, 0, &buf), Err(Error::DataLoss(_))));
+
+    // accounting is exact: one detection + one quarantine per injected
+    // corruption, zero heals without a durable copy
+    let t = svc.integrity_totals();
+    assert_eq!(t.corrupt_detected, victims.len() as u64, "detections != injected corruptions");
+    assert_eq!(t.quarantined, victims.len() as u64);
+    assert_eq!(t.healed, 0, "nothing durable to heal from");
+    let mut fenced = svc.quarantined_pages();
+    fenced.sort_unstable();
+    let mut want = victims.clone();
+    want.sort_unstable();
+    assert_eq!(fenced, want);
+
+    // a full-page overwrite supersedes the lost content: fence lifts,
+    // and the overwrite is NOT counted as a heal
+    for &p in &victims {
+        svc.submit(p, w.generate(PAGE_BYTES, p ^ 0xFEED));
+    }
+    svc.flush();
+    for &p in &victims {
+        assert_eq!(svc.read_page(p).unwrap(), w.generate(PAGE_BYTES, p ^ 0xFEED));
+    }
+    assert!(svc.quarantined_pages().is_empty());
+    let t = svc.integrity_totals();
+    assert_eq!(t.corrupt_detected, victims.len() as u64);
+    assert_eq!(t.healed, 0);
+    svc.shutdown();
+}
+
+#[test]
+fn quarantine_self_heals_from_durable_state() {
+    const PAGES: u64 = 12;
+    let vfs: Arc<dyn Vfs> = Arc::new(FaultFs::new());
+    let (d, _) = Durability::open(Arc::clone(&vfs), "data", PersistConfig::default(), 2, 0).unwrap();
+    let svc = CompressionService::start_static(
+        ServiceConfig {
+            workers: 2,
+            shards: 2,
+            persist: Some(d),
+            integrity: IntegrityConfig { enabled: true, verify_reads: true, scrub_mib_s: 64 },
+            ..Default::default()
+        },
+        static_codec(),
+    )
+    .unwrap();
+    let w = mcf();
+    for i in 0..PAGES {
+        svc.submit(i, w.generate(PAGE_BYTES, i));
+    }
+    svc.flush();
+
+    let mut rng = Rng::new(0x5E1F_4EA1);
+    let victims = [1u64, 5, 9];
+    for &p in &victims {
+        assert!(flip_one_bit(&svc, p, &mut rng), "page {p}: no stored bit to flip");
+    }
+    // with persistence attached the fence is invisible to callers:
+    // every read serves the WAL-backed original, not an error
+    for p in 0..PAGES {
+        assert_eq!(svc.read_page(p).unwrap(), w.generate(PAGE_BYTES, p), "page {p}");
+    }
+    let t = svc.integrity_totals();
+    assert_eq!(t.corrupt_detected, victims.len() as u64);
+    assert_eq!(t.quarantined, victims.len() as u64);
+    assert_eq!(t.healed, victims.len() as u64, "every quarantined page must heal");
+    assert!(svc.quarantined_pages().is_empty(), "healed pages must leave quarantine");
+
+    // healed pages take writes again and stay coherent
+    let block = vec![0xA5u8; BLOCK_BYTES];
+    svc.write_block(victims[0], 0, &block).unwrap();
+    let mut out = vec![0u8; BLOCK_BYTES];
+    svc.read_block(victims[0], 0, &mut out).unwrap();
+    assert_eq!(out, block);
+    svc.shutdown();
+}
+
+#[test]
+fn wire_chaos_survives_cuts_without_silent_wrong_reads() {
+    let svc = CompressionService::start_static(
+        ServiceConfig {
+            workers: 2,
+            shards: 2,
+            integrity: IntegrityConfig { enabled: true, verify_reads: true, scrub_mib_s: 32 },
+            ..Default::default()
+        },
+        static_codec(),
+    )
+    .unwrap();
+    let server = Server::bind(
+        svc,
+        ServerConfig { listen: "127.0.0.1:0".to_string(), ..Default::default() },
+    )
+    .unwrap();
+    let upstream = server.local_addr().to_string();
+
+    let mut cfg = LoadGenConfig {
+        addr: upstream.clone(),
+        conns: 2,
+        ops_per_conn: 600,
+        pipeline: 4,
+        pages: 16,
+        page_bytes: PAGE_BYTES,
+        read_fraction: 0.7,
+        batch_read_every: 16,
+        put_pages_every: 64,
+        check_content: true,
+        max_reconnects: 100,
+        seed: 0xC4A0_5,
+        ..Default::default()
+    };
+    // preload over the clean path; only the measured run goes through
+    // the proxy (mirrors `gbdi client --op load --chaos-cut`)
+    server::preload(&cfg).unwrap();
+
+    // ~8 cuts per connection per direction at this traffic volume, so
+    // mid-stream disconnects are certain; stalls fire a few times
+    let plan = FaultPlan {
+        seed: 0xFA_017,
+        cut_every_bytes: 8 * 1024,
+        stall_every_bytes: 32 * 1024,
+        stall_ms: 1,
+        ..Default::default()
+    };
+    let mut proxy = ChaosProxy::start(&upstream, plan).unwrap();
+    cfg.addr = proxy.addr();
+    let rep = server::run_loadgen(&cfg).expect("loadgen must survive wire chaos");
+    proxy.stop();
+
+    assert!(proxy.cuts() >= 1, "chaos never fired: raise the fault rate");
+    assert!(proxy.conns() >= 2, "each loadgen connection dials through the proxy");
+    assert!(rep.reconnects >= 1, "no reconnects despite {} injected cuts", proxy.cuts());
+    assert_eq!(
+        rep.check_failures, 0,
+        "{} silently-wrong GET payloads under chaos",
+        rep.check_failures
+    );
+    assert!(rep.ops_ok > 0, "no op completed: {rep:?}");
+
+    // the appended STATS fields decode end to end over the clean path
+    let mut c = Client::connect(&upstream).unwrap();
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.fields.len(), stats_field::COUNT);
+    drop(c);
+
+    let (svc, _stats, _conns) = server.stop();
+    let t = svc.integrity_totals();
+    assert_eq!(t.corrupt_detected, 0, "wire chaos must never look like storage corruption");
+    assert_eq!(t.quarantined, 0);
+    svc.shutdown();
+}
+
+#[test]
+fn integrity_off_matches_the_unchecked_build_bit_for_bit() {
+    assert!(!IntegrityConfig::default().enabled, "integrity must be opt-in");
+    let start = |integrity| {
+        CompressionService::start_static(
+            ServiceConfig { workers: 2, shards: 2, integrity, ..Default::default() },
+            static_codec(),
+        )
+        .unwrap()
+    };
+    let on = start(IntegrityConfig { enabled: true, verify_reads: true, scrub_mib_s: 64 });
+    let off = start(IntegrityConfig::default());
+
+    let w = mcf();
+    for i in 0..10u64 {
+        let img = w.generate(PAGE_BYTES, i);
+        on.submit(i, img.clone());
+        off.submit(i, img);
+    }
+    on.flush();
+    off.flush();
+    // a clean store reads identically with the plane on or off — the
+    // CRCs only ever *reject*, never transform
+    let mut a = vec![0u8; BLOCK_BYTES];
+    let mut b = vec![0u8; BLOCK_BYTES];
+    for i in 0..10u64 {
+        let want = w.generate(PAGE_BYTES, i);
+        assert_eq!(on.read_page(i).unwrap(), want);
+        assert_eq!(off.read_page(i).unwrap(), want);
+        on.read_block(i, 3, &mut a).unwrap();
+        off.read_block(i, 3, &mut b).unwrap();
+        assert_eq!(a, b);
+    }
+    // off = zero plane activity: no scrubber, no detections, even
+    // after giving a would-be scrubber time to run
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let t = off.integrity_totals();
+    assert_eq!(
+        (t.scrubbed, t.corrupt_detected, t.healed, t.quarantined),
+        (0, 0, 0, 0),
+        "disabled plane did work: {t:?}"
+    );
+    assert!(off.quarantined_pages().is_empty());
+    off.shutdown();
+    on.shutdown();
+}

@@ -248,6 +248,51 @@ fn fuzzed_frames_never_kill_the_server() {
 }
 
 #[test]
+fn fuzzed_replies_never_kill_the_client_decoder() {
+    // The client-side twin of `fuzzed_frames_never_kill_the_server`:
+    // a chaos proxy can hand the client truncated, bit-flipped, or
+    // garbage-extended reply payloads, and `decode_response` must
+    // return a clean error (or happen to decode) — never panic, never
+    // allocate absurdly, never loop. Pure in-memory, no server needed.
+    let mut rng = Rng::new(0xC11E_27);
+    let mut decoded_ok = 0u32;
+    let mut rejected = 0u32;
+    for _ in 0..2000u32 {
+        let resp = protocol::arbitrary_response(&mut rng);
+        let mut payload = protocol::encode_response(&resp);
+        match rng.below(4) {
+            0 => payload.truncate(rng.below(payload.len() as u64 + 1) as usize),
+            1 => {
+                let i = rng.below(payload.len() as u64) as usize;
+                payload[i] ^= 1 << rng.below(8);
+            }
+            2 => {
+                for _ in 0..=rng.below(16) {
+                    payload.push(rng.next_u64() as u8);
+                }
+            }
+            _ => {}
+        }
+        match protocol::decode_response(&payload) {
+            Ok(_) => decoded_ok += 1,
+            Err(msg) => {
+                assert!(!msg.is_empty(), "decode errors must say what broke");
+                rejected += 1;
+            }
+        }
+    }
+    // both outcomes must actually occur or the sweep proves nothing
+    assert!(decoded_ok > 0, "no mutation left a decodable payload");
+    assert!(rejected > 0, "no mutation was ever rejected");
+    // and untouched encodings always round-trip
+    for _ in 0..200u32 {
+        let resp = protocol::arbitrary_response(&mut rng);
+        let payload = protocol::encode_response(&resp);
+        assert_eq!(protocol::decode_response(&payload).unwrap(), resp);
+    }
+}
+
+#[test]
 fn admission_control_sheds_with_retry_after() {
     // inflight cap of 4 pages: an 8-page batch must shed, deterministically
     let server = server_with(1, 0, 4);

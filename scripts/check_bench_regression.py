@@ -24,9 +24,11 @@ The gate is ARMED by default — these are hard failures, not warnings:
     that run's artifact on the next main push;
   * exit 2 if the two files disagree on an environment tag the gate
     knows about — `tags.isa` (comparing an AVX2 run against a scalar
-    baseline measures the dispatch table, not the change under test) or
+    baseline measures the dispatch table, not the change under test),
     `tags.cache` (comparing a cache-on run against a cache-off baseline
-    measures the hot-block cache tier, not the change under test) —
+    measures the hot-block cache tier, not the change under test), or
+    `tags.integrity` (comparing runs with different integrity-mode arm
+    sets measures checksum overhead, not the change under test) —
     unless --ignore-tags.
 
 See docs/OPERATIONS.md ("Throughput regression gate").
@@ -65,7 +67,8 @@ def main():
                     help="bootstrap only: tolerate a provisional baseline "
                          "(informational comparison, exit 0)")
     ap.add_argument("--ignore-tags", action="store_true",
-                    help="skip the tags.isa/tags.cache environment-match check")
+                    help="skip the tags.* environment-match check "
+                         "(isa/cache/persist/integrity)")
     args = ap.parse_args()
 
     tolerance = args.tolerance
@@ -90,7 +93,7 @@ def main():
         return 2
 
     if not args.ignore_tags:
-        for tag in ("isa", "cache", "persist"):
+        for tag in ("isa", "cache", "persist", "integrity"):
             cur_tag = (cur_doc.get("tags") or {}).get(tag)
             base_tag = (base_doc.get("tags") or {}).get(tag)
             if cur_tag and base_tag and cur_tag != base_tag:
